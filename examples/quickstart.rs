@@ -1,0 +1,94 @@
+//! Quickstart: bring up an Erda world, run a handful of scripted operations
+//! through the simulated RDMA fabric, and watch the consistency machinery
+//! work — including a torn write detected by checksum and repaired.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::collections::VecDeque;
+
+use erda::erda::{ClientConfig, ErdaClient, ErdaWorld, OpSource, ScriptOp};
+use erda::log::LogConfig;
+use erda::nvm::NvmConfig;
+use erda::sim::{Engine, Timing, MS};
+use erda::ycsb::key_of;
+
+fn main() {
+    // 1. A server with 4 log heads and a hopscotch metadata table, all in
+    //    simulated NVM behind a simulated RDMA fabric.
+    let mut world = ErdaWorld::new(
+        Timing::default(),
+        NvmConfig { capacity: 32 << 20 },
+        LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 4 },
+        1 << 12,
+    );
+    world.preload(100, 128);
+    world.counters.active_clients = 3;
+    println!("server up: 100 preloaded objects, 4 heads, hopscotch table");
+
+    let mut engine = Engine::new(world);
+
+    // 2. A well-behaved client: update, read back, delete.
+    let ops = vec![
+        ScriptOp::Update { key: key_of(1), value: vec![0x11; 128] },
+        ScriptOp::Read { key: key_of(1) },
+        ScriptOp::Update { key: key_of(2), value: vec![0x22; 128] },
+        ScriptOp::Read { key: key_of(2) },
+        ScriptOp::Delete { key: key_of(3) },
+        ScriptOp::Read { key: key_of(3) }, // miss: deleted
+    ];
+    let n_ops = ops.len() as u64;
+    engine.spawn(
+        Box::new(ErdaClient::new(
+            OpSource::Script(VecDeque::from(ops)),
+            n_ops,
+            ClientConfig { max_value: 128, ..ClientConfig::default() },
+        )),
+        0,
+    );
+
+    // 3. A crashing client: its one-sided write tears mid-transfer.
+    engine.spawn(
+        Box::new(ErdaClient::new(
+            OpSource::Script(VecDeque::from(vec![ScriptOp::CrashDuringWrite {
+                key: key_of(5),
+                value: vec![0xEE; 128],
+                chunks: 1,
+            }])),
+            1,
+            ClientConfig::default(),
+        )),
+        0,
+    );
+
+    // 4. A late reader that trips over the torn object, falls back to the
+    //    previous version, and has the server repair the entry.
+    engine.spawn(
+        Box::new(ErdaClient::new(
+            OpSource::Script(VecDeque::from(vec![ScriptOp::Read { key: key_of(5) }])),
+            1,
+            ClientConfig { max_value: 128, ..ClientConfig::default() },
+        )),
+        2 * MS,
+    );
+
+    let end = engine.run();
+    let events = engine.events();
+    let w = &mut engine.state;
+    w.settle();
+
+    println!("\nvirtual makespan: {:.1} µs over {} DES events", end as f64 / 1e3, events);
+    println!("ops completed:    {}", w.counters.ops_measured);
+    println!("mean latency:     {:.2} µs", w.counters.latency.mean_us());
+    println!("read misses:      {} (the deleted key)", w.counters.read_misses);
+    println!("inconsistencies:  {} (torn write caught by CRC)", w.counters.inconsistencies);
+    println!("fallback reads:   {}", w.counters.fallbacks);
+    println!("entry repairs:    {}", w.counters.repairs);
+    println!("server CPU busy:  {:.1} µs (writes only — reads are one-sided)",
+        w.cpu.busy_ns() as f64 / 1e3);
+
+    assert_eq!(w.get(&key_of(1)).as_deref(), Some(&vec![0x11u8; 128][..]));
+    assert_eq!(w.get(&key_of(2)).as_deref(), Some(&vec![0x22u8; 128][..]));
+    assert!(w.get(&key_of(3)).is_none(), "deleted");
+    assert_eq!(w.get(&key_of(5)).as_deref(), Some(&vec![0xA5u8; 128][..]), "rolled back");
+    println!("\nfinal state checks passed ✓");
+}

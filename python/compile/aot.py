@@ -1,0 +1,105 @@
+"""AOT: lower the L2 pipeline to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects (`proto.id() <=
+INT_MAX`). The text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run: `cd python && python -m compile.aot --out ../artifacts`
+
+Outputs one `<name>.hlo.txt` per (function, shape) variant plus
+`manifest.txt` with lines:
+
+    <name> <kind> <batch> <width> <n_outputs> <file>
+
+The Rust runtime (rust/src/runtime) parses the manifest and compiles each
+artifact once on the PJRT CPU client.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (batch, padded-width) variants. Widths cover the object sizes exercised by
+# the paper's value sweep (16 B .. 4096 B values + header/key) and the
+# recovery scan's segment batches. One executable per static shape.
+VERIFY_VARIANTS = [
+    (64, 128),
+    (64, 512),
+    (64, 1024),
+    (64, 4352),
+    (256, 128),
+]
+BUCKET_VARIANTS = [
+    (64, 64),
+    (256, 64),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_verify(batch: int, width: int) -> str:
+    import jax.numpy as jnp
+
+    data = jax.ShapeDtypeStruct((batch, width), jnp.uint8)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    stored = jax.ShapeDtypeStruct((batch,), jnp.uint32)
+    # The CRC table is the 4th runtime parameter (cannot be an HLO constant;
+    # see kernels/crc32.py).
+    table = jax.ShapeDtypeStruct((256,), jnp.uint32)
+    return to_hlo_text(jax.jit(model.verify_batch).lower(data, lens, stored, table))
+
+
+def lower_bucket(batch: int, width: int) -> str:
+    import jax.numpy as jnp
+
+    keys = jax.ShapeDtypeStruct((batch, width), jnp.uint8)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return to_hlo_text(jax.jit(model.bucket_batch).lower(keys, lens))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", required=True, help="artifacts output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+    for batch, width in VERIFY_VARIANTS:
+        name = f"verify_b{batch}_w{width}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = lower_verify(batch, width)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} verify {batch} {width} 2 {name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+    for batch, width in BUCKET_VARIANTS:
+        name = f"bucket_b{batch}_w{width}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = lower_bucket(batch, width)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} bucket {batch} {width} 1 {name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest} ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: batched CRC32 (IEEE 802.3, reflected, zlib-compatible).
+
+This is the compute hot-spot of the Erda reproduction: verifying the
+integrity checksum of every object in a batch (used by the server's crash
+recovery scan and the log cleaner's integrity pass; see DESIGN.md §2).
+
+Hardware adaptation (paper targets no accelerator; see DESIGN.md
+§Hardware-Adaptation): instead of a per-object sequential byte loop, the
+kernel keeps a *vector* of CRC states — one lane per object — and advances
+all lanes together over byte *columns* of a (B, L) tile. The inner step is a
+vectorized table-gather + xor + shift, which maps onto the TPU VPU; the
+256-entry table (1 KiB) and the (B, L) tile live in VMEM via BlockSpec.
+
+The kernel MUST be lowered with interpret=True on this image: real TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+CRC32_POLY = 0xEDB88320  # reflected IEEE 802.3 polynomial
+CRC32_INIT = 0xFFFFFFFF
+
+
+@functools.lru_cache(maxsize=None)
+def crc32_table_np() -> np.ndarray:
+    """256-entry byte-at-a-time lookup table for the reflected polynomial."""
+    table = np.zeros(256, dtype=np.uint64)
+    for i in range(256):
+        c = np.uint64(i)
+        for _ in range(8):
+            c = (c >> np.uint64(1)) ^ (
+                np.uint64(CRC32_POLY) if (c & np.uint64(1)) else np.uint64(0)
+            )
+        table[i] = c
+    return table.astype(np.uint32)
+
+
+def crc32_table() -> jnp.ndarray:
+    return jnp.asarray(crc32_table_np())
+
+
+def _crc32_kernel(data_ref, len_ref, table_ref, out_ref):
+    """Pallas kernel body.
+
+    data_ref:  u8[B, L]  padded object bytes (one object per lane)
+    len_ref:   i32[B]    valid byte count per lane (<= L)
+    table_ref: u32[256]  CRC lookup table
+    out_ref:   u32[B]    finalized CRC per lane
+    """
+    # Perf note (§Perf iteration log): a transpose-once (L, B) layout was
+    # tried to make the per-step column extraction contiguous — it REGRESSED
+    # the AOT batch verify ~1.8× on the CPU PJRT backend (XLA already fuses
+    # the strided column slice; the materialized u32 transpose dominated).
+    # Keeping the (B, L) layout: lanes = batch, one dynamic column slice per
+    # byte step — also the natural VPU mapping on a real TPU.
+    data = data_ref[...]  # (B, L) u8; convert per column — materializing the
+    # whole tile as u32 quadruples the working set for no gain (iteration #2)
+    lens = len_ref[...]
+    table = table_ref[...]
+    n = data.shape[0]
+    crc0 = jnp.full((n,), CRC32_INIT, dtype=jnp.uint32)
+
+    def body(i, crc):
+        byte = jax.lax.dynamic_slice_in_dim(data, i, 1, axis=1)[:, 0].astype(jnp.uint32)
+        idx = (crc ^ byte) & jnp.uint32(0xFF)
+        nxt = jnp.take(table, idx, axis=0) ^ (crc >> jnp.uint32(8))
+        # Lanes whose object is shorter than i keep their state (masked step).
+        return jnp.where(i < lens, nxt, crc)
+
+    crc = jax.lax.fori_loop(0, data.shape[1], body, crc0)
+    out_ref[...] = crc ^ jnp.uint32(CRC32_INIT)
+
+
+def crc32_batch(data: jax.Array, lengths: jax.Array, table: jax.Array | None = None) -> jax.Array:
+    """Batched CRC32 over padded byte rows.
+
+    Args:
+      data:    u8[B, L] object bytes, rows padded with anything past `lengths`.
+      lengths: i32[B] number of valid bytes per row.
+      table:   optional u32[256] lookup table. The AOT path MUST pass the
+               table as a runtime parameter: embedding it as an HLO constant
+               does not survive the HLO-text round trip to xla_extension
+               0.5.1 (the parsed gather returns the *indices*, i.e. the
+               constant degenerates to iota — found the hard way; see
+               DESIGN.md §Perf notes). Eager/test callers may omit it.
+
+    Returns:
+      u32[B] zlib-compatible CRC32 of each row's first `lengths[i]` bytes.
+    """
+    if data.ndim != 2:
+        raise ValueError(f"data must be rank-2 (B, L), got shape {data.shape}")
+    if lengths.shape != (data.shape[0],):
+        raise ValueError(
+            f"lengths shape {lengths.shape} does not match batch {data.shape[0]}"
+        )
+    if table is None:
+        table = crc32_table()
+    b = data.shape[0]
+    return pl.pallas_call(
+        _crc32_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(data.astype(jnp.uint8), lengths.astype(jnp.int32), table)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: batched FNV-1a (32-bit) key hashing.
+
+Erda's metadata hash table (hopscotch) maps object keys to buckets. The Rust
+side (rust/src/hashtable) uses FNV-1a-32 for the bucket hash; this kernel is
+the batch version used for bulk-load preprocessing and must agree with Rust
+bit-for-bit (asserted by integration tests through the AOT artifact).
+
+interpret=True for the same reason as crc32.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FNV_OFFSET = 0x811C9DC5
+FNV_PRIME = 0x01000193
+
+
+def _fnv1a_kernel(keys_ref, len_ref, out_ref):
+    """keys_ref: u8[B, K]; len_ref: i32[B]; out_ref: u32[B]."""
+    keys = keys_ref[...].astype(jnp.uint32)
+    lens = len_ref[...]
+    n = keys.shape[0]
+    h0 = jnp.full((n,), FNV_OFFSET, dtype=jnp.uint32)
+
+    def body(i, h):
+        byte = jax.lax.dynamic_slice_in_dim(keys, i, 1, axis=1)[:, 0]
+        nxt = (h ^ byte) * jnp.uint32(FNV_PRIME)  # wrapping u32 multiply
+        return jnp.where(i < lens, nxt, h)
+
+    out_ref[...] = jax.lax.fori_loop(0, keys.shape[1], body, h0)
+
+
+def fnv1a_batch(keys: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Batched FNV-1a-32 over padded key rows.
+
+    Args:
+      keys:    u8[B, K] key bytes, rows padded past `lengths`.
+      lengths: i32[B] valid byte count per row.
+
+    Returns:
+      u32[B] FNV-1a-32 hash of each row (bucket = hash % num_buckets, done by
+      the caller so the artifact stays independent of table size).
+    """
+    if keys.ndim != 2:
+        raise ValueError(f"keys must be rank-2 (B, K), got shape {keys.shape}")
+    if lengths.shape != (keys.shape[0],):
+        raise ValueError(
+            f"lengths shape {lengths.shape} does not match batch {keys.shape[0]}"
+        )
+    b = keys.shape[0]
+    return pl.pallas_call(
+        _fnv1a_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint32),
+        interpret=True,
+    )(keys.astype(jnp.uint8), lengths.astype(jnp.int32))

@@ -1,0 +1,77 @@
+"""Pure-jnp (and pure-python) oracles for the L1 kernels.
+
+These are the correctness references: pytest checks kernel == ref == zlib
+on swept shapes/lengths/dtypes. Keep them boring and obviously correct.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .crc32 import CRC32_INIT, crc32_table
+from .keyhash import FNV_OFFSET, FNV_PRIME
+
+
+def crc32_ref_jnp(data: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Pure-jnp batched CRC32 (no pallas): same algorithm, scan over columns."""
+    data = data.astype(jnp.uint32)
+    lens = lengths.astype(jnp.int32)
+    table = crc32_table()
+    crc0 = jnp.full((data.shape[0],), CRC32_INIT, dtype=jnp.uint32)
+
+    def step(crc, col_i):
+        col, i = col_i
+        idx = (crc ^ col) & jnp.uint32(0xFF)
+        nxt = jnp.take(table, idx, axis=0) ^ (crc >> jnp.uint32(8))
+        return jnp.where(i < lens, nxt, crc), None
+
+    cols = jnp.swapaxes(data, 0, 1)  # (L, B)
+    idxs = jnp.arange(data.shape[1], dtype=jnp.int32)
+    crc, _ = jax.lax.scan(step, crc0, (cols, idxs))
+    return crc ^ jnp.uint32(CRC32_INIT)
+
+
+def crc32_ref_py(row: bytes) -> int:
+    """Ground truth: zlib's CRC32 (same polynomial / reflection / init)."""
+    return zlib.crc32(row) & 0xFFFFFFFF
+
+
+def fnv1a_ref_jnp(keys: jax.Array, lengths: jax.Array) -> jax.Array:
+    keys = keys.astype(jnp.uint32)
+    lens = lengths.astype(jnp.int32)
+    h0 = jnp.full((keys.shape[0],), FNV_OFFSET, dtype=jnp.uint32)
+
+    def step(h, col_i):
+        col, i = col_i
+        nxt = (h ^ col) * jnp.uint32(FNV_PRIME)
+        return jnp.where(i < lens, nxt, h), None
+
+    cols = jnp.swapaxes(keys, 0, 1)
+    idxs = jnp.arange(keys.shape[1], dtype=jnp.int32)
+    h, _ = jax.lax.scan(step, h0, (cols, idxs))
+    return h
+
+
+def fnv1a_ref_py(row: bytes) -> int:
+    h = FNV_OFFSET
+    for b in row:
+        h = ((h ^ b) * FNV_PRIME) & 0xFFFFFFFF
+    return h
+
+
+def pad_rows(rows: list[bytes], width: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Pack variable-length byte rows into (u8[B, W], i32[B]) for the kernels."""
+    if width is None:
+        width = max((len(r) for r in rows), default=1) or 1
+    out = np.zeros((len(rows), width), dtype=np.uint8)
+    lens = np.zeros((len(rows),), dtype=np.int32)
+    for i, r in enumerate(rows):
+        if len(r) > width:
+            raise ValueError(f"row {i} length {len(r)} exceeds width {width}")
+        out[i, : len(r)] = np.frombuffer(r, dtype=np.uint8)
+        lens[i] = len(r)
+    return out, lens

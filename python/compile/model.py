@@ -1,0 +1,47 @@
+"""L2: the batched object-integrity pipeline (JAX, build time only).
+
+Erda objects are `[delete-tag | crc32 | key-value]`; the checksum covers the
+whole object with the CRC field itself zeroed during computation (the Rust
+codec in rust/src/log/object.rs uses the same convention). This module is
+what gets AOT-lowered to HLO for the Rust runtime:
+
+  verify_batch : (objects u8[B,L], lengths i32[B], stored u32[B])
+                 -> (crc u32[B], valid u32[B])
+  bucket_batch : (keys u8[B,K], lengths i32[B]) -> u32[B]
+
+`valid[i]` is 1 iff the object bytes hash to `stored[i]` AND the row is
+non-empty (length > 0). The Rust recovery scan feeds each candidate object's
+bytes with the CRC field zeroed, its stored checksum, and rolls back hash
+entries whose newest version fails verification.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.crc32 import crc32_batch
+from .kernels.keyhash import fnv1a_batch
+
+
+def verify_batch(
+    objects: jax.Array,
+    lengths: jax.Array,
+    stored: jax.Array,
+    table: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Compute batch CRC32 and compare against stored checksums.
+
+    Returns (crc u32[B], valid u32[B]); valid is 0/1 as u32 so every output
+    is a plain u32 array (keeps the PJRT-side decoding uniform). `table` is
+    threaded to the kernel; the AOT entry point takes it as a parameter (see
+    kernels/crc32.py for why it cannot be an embedded constant).
+    """
+    crc = crc32_batch(objects, lengths, table)
+    ok = (crc == stored.astype(jnp.uint32)) & (lengths.astype(jnp.int32) > 0)
+    return crc, ok.astype(jnp.uint32)
+
+
+def bucket_batch(keys: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Batched FNV-1a-32 key hash (bucket = hash % table_size, caller-side)."""
+    return fnv1a_batch(keys, lengths)

@@ -1,0 +1,80 @@
+//! End-to-end figure benchmarks: one benchmark per paper table/figure
+//! family, timing a representative scaled-down run of each experiment and
+//! printing its headline numbers so `cargo bench` doubles as a regression
+//! gate on both speed and *shape*.
+//!
+//! Run: `cargo bench --bench figures`
+
+use erda::bench_util::Bench;
+use erda::sim::MS;
+use erda::workload::{run, DriverConfig, SchemeSel};
+use erda::ycsb::{Workload, WorkloadConfig};
+
+fn cfg(scheme: SchemeSel, wl: Workload, value: usize, clients: usize) -> DriverConfig {
+    DriverConfig {
+        scheme,
+        workload: WorkloadConfig {
+            workload: wl,
+            record_count: 200,
+            value_size: value,
+            theta: 0.99,
+            seed: 0xBE7C,
+        },
+        clients,
+        ops_per_client: 300,
+        warmup: 2 * MS,
+        nvm_capacity: 64 << 20,
+        ..DriverConfig::default()
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("figures");
+
+    // Figs 14–17 (latency): one run per scheme at the 1 KiB sweep point.
+    for scheme in SchemeSel::ALL {
+        b.bench(&format!("fig14_latency_point/{}", scheme.id()), || {
+            run(&cfg(scheme, Workload::ReadOnly, 1024, 2))
+        });
+    }
+    let lat = |s: SchemeSel| run(&cfg(s, Workload::ReadOnly, 1024, 2)).latency.mean_us();
+    println!(
+        "  -> YCSB-C @1KiB latency: erda {:.1} µs, redo {:.1} µs, raw {:.1} µs (paper: 62.8/92.7/92.5)",
+        lat(SchemeSel::Erda),
+        lat(SchemeSel::RedoLogging),
+        lat(SchemeSel::ReadAfterWrite)
+    );
+
+    // Figs 18–21 (throughput): the 8-thread point per scheme.
+    for scheme in SchemeSel::ALL {
+        b.bench(&format!("fig18_throughput_point/{}", scheme.id()), || {
+            run(&cfg(scheme, Workload::ReadOnly, 256, 8))
+        });
+    }
+    let kops = |s: SchemeSel| run(&cfg(s, Workload::ReadOnly, 256, 8)).kops();
+    println!(
+        "  -> YCSB-C @8 threads: erda {:.1} KOp/s, redo {:.1}, raw {:.1} (Erda must lead)",
+        kops(SchemeSel::Erda),
+        kops(SchemeSel::RedoLogging),
+        kops(SchemeSel::ReadAfterWrite)
+    );
+
+    // Figs 22–25 (CPU cost): YCSB-B point.
+    b.bench("fig22_cpu_point/erda+redo", || {
+        let e = run(&cfg(SchemeSel::Erda, Workload::ReadMostly, 256, 4));
+        let r = run(&cfg(SchemeSel::RedoLogging, Workload::ReadMostly, 256, 4));
+        (e.cpu_per_op_ns(), r.cpu_per_op_ns())
+    });
+
+    // Fig 26 (cleaning): an Erda run with aggressive compaction.
+    b.bench("fig26_cleaning_run", || {
+        let mut c = cfg(SchemeSel::Erda, Workload::UpdateHeavy, 1024, 4);
+        c.cleaning_threshold = Some(96 << 10);
+        run(&c)
+    });
+
+    // Table 1: the full measured table.
+    b.bench("table1_nvm_writes", erda::figures::table1);
+
+    b.finish();
+}

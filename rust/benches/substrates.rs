@@ -1,0 +1,135 @@
+//! Substrate micro-benchmarks: the building blocks under every figure.
+//! (`harness = false` — criterion is not in the offline vendor set; the
+//! statistics harness lives in `erda::bench_util`.)
+//!
+//! Run: `cargo bench --bench substrates`
+
+use erda::bench_util::Bench;
+use erda::crc::{crc32, crc32_bytewise, fnv1a};
+use erda::hashtable::{AtomicRegion, HashTable};
+use erda::log::{object, Chain, LogConfig, LogStore};
+use erda::nvm::{Nvm, NvmConfig};
+use erda::rdma::Fabric;
+use erda::sim::{Engine, Rng, Step, Timing};
+use erda::ycsb::{Generator, WorkloadConfig, Zipfian};
+
+fn main() {
+    let mut b = Bench::new("substrates");
+    let mut rng = Rng::new(42);
+
+    // CRC32: the per-op hot path (slice-by-8) vs the oracle (bytewise).
+    for len in [64usize, 512, 4096] {
+        let mut buf = vec![0u8; len];
+        rng.fill_bytes(&mut buf);
+        b.bench(&format!("crc32_slice8/{len}B"), || crc32(&buf));
+        b.bench(&format!("crc32_bytewise/{len}B"), || crc32_bytewise(&buf));
+    }
+    if let (Some(fast), Some(slow)) =
+        (b.result_ns("crc32_slice8/4096B"), b.result_ns("crc32_bytewise/4096B"))
+    {
+        println!(
+            "  -> slice-by-8 at 4 KiB: {:.2} GB/s ({:.1}x over bytewise)",
+            4096.0 / fast,
+            slow / fast
+        );
+    }
+    b.bench("fnv1a/20B_key", || fnv1a(b"user0000000000000042"));
+
+    // Object codec.
+    let obj = object::encode_object(b"user0000000000000042", &vec![7u8; 1024]);
+    b.bench("object_encode/1KiB", || object::encode_object(b"user0000000000000042", &vec![7u8; 1024]));
+    b.bench("object_decode/1KiB", || object::decode(&obj).unwrap());
+
+    // NVM write (DCW accounting included).
+    let mut nvm = Nvm::new(NvmConfig { capacity: 64 << 20 });
+    let dst = nvm.alloc(8192);
+    let payload = {
+        let mut p = vec![0u8; 4096];
+        rng.fill_bytes(&mut p);
+        p
+    };
+    b.bench("nvm_write/4KiB", || nvm.write(dst, &payload));
+    b.bench("nvm_atomic8", || nvm.write_atomic8(dst, 0xDEADBEEF));
+
+    // Hash table ops at ~70 % load.
+    let mut table_nvm = Nvm::new(NvmConfig { capacity: 64 << 20 });
+    let mut table = HashTable::new(&mut table_nvm, 1 << 14);
+    for i in 0..11_000u32 {
+        let key = format!("user{i:016}");
+        table.insert(&mut table_nvm, key.as_bytes(), 0, AtomicRegion::initial(i)).unwrap();
+    }
+    let mut i = 0u32;
+    b.bench("hopscotch_lookup/hit", || {
+        i = (i + 1) % 11_000;
+        table.lookup(&table_nvm, format!("user{i:016}").as_bytes())
+    });
+    let slot = table.lookup(&table_nvm, b"user0000000000000001").unwrap();
+    let mut off = 0u32;
+    b.bench("hopscotch_update_region", || {
+        off += 1;
+        let r = table.read_entry(&table_nvm, slot).unwrap().atomic;
+        table.update_region(&mut table_nvm, slot, r.updated(off & 0x7FFF_FFF0));
+    });
+
+    // Log append path.
+    let mut log_nvm = Nvm::new(NvmConfig { capacity: 128 << 20 });
+    let mut log = LogStore::new(
+        LogConfig { region_size: 1 << 22, segment_size: 1 << 16, num_heads: 4 },
+        &mut log_nvm,
+    );
+    let small = object::encode_object(b"k", &vec![1u8; 256]);
+    b.bench("log_append/256B", || log.append_local(&mut log_nvm, 0, &small));
+
+    // Chain rebuild (recovery forward scan) over 1000 objects.
+    let mut rec_nvm = Nvm::new(NvmConfig { capacity: 64 << 20 });
+    let mut chain = Chain::new(1 << 22, 1 << 16, &mut rec_nvm);
+    for i in 0..1000u32 {
+        chain.append_local(&mut rec_nvm, &object::encode_object(format!("user{i}").as_bytes(), &vec![3u8; 200]));
+    }
+    b.bench("chain_rebuild_index/1000_objs", || chain.rebuild_index(&rec_nvm));
+
+    // Fabric: post + flush a one-sided write.
+    let timing = Timing::default();
+    let mut fab_nvm = Nvm::new(NvmConfig { capacity: 64 << 20 });
+    let mut fabric = Fabric::new(timing.clone());
+    let fdst = fab_nvm.alloc(4096);
+    let mut t = 0u64;
+    b.bench("fabric_write_flush/4KiB", || {
+        t += 1_000_000;
+        fabric.post_write(t, &mut fab_nvm, fdst, &payload);
+        fabric.flush(t + 1_000_000, &mut fab_nvm);
+    });
+
+    // Workload generation.
+    let mut zrng = Rng::new(3);
+    let zipf = Zipfian::new(100_000, 0.99, &mut zrng);
+    b.bench("zipfian_sample", || zipf.sample(&mut zrng));
+    let mut gen = Generator::new(
+        WorkloadConfig { record_count: 100_000, value_size: 256, ..Default::default() },
+        0,
+    );
+    b.bench("ycsb_next_op", || gen.next_op());
+
+    // DES engine: raw event throughput.
+    struct Ticker(u64);
+    impl erda::sim::Actor<u64> for Ticker {
+        fn step(&mut self, s: &mut u64, now: u64) -> Step {
+            *s += 1;
+            self.0 -= 1;
+            if self.0 == 0 { Step::Done } else { Step::At(now + 10) }
+        }
+    }
+    b.bench("des_engine/100k_events", || {
+        let mut e = Engine::new(0u64);
+        for _ in 0..8 {
+            e.spawn(Box::new(Ticker(12_500)), 0);
+        }
+        e.run();
+        assert_eq!(e.state, 100_000);
+    });
+    if let Some(ns) = b.result_ns("des_engine/100k_events") {
+        println!("  -> DES engine: {:.2} M events/s", 100_000.0 / ns * 1e3);
+    }
+
+    b.finish();
+}

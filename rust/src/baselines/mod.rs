@@ -1,0 +1,27 @@
+//! The paper's two comparison schemes (§5.1), implemented as complete
+//! protocols over the same NVM/fabric substrates:
+//!
+//! * **Redo Logging** — a CPU-involvement scheme: clients push writes via
+//!   RDMA send into a redo-log region; the server CPU verifies integrity,
+//!   persists the redo record, ACKs, and *asynchronously applies* the write
+//!   to the destination storage (second NVM write). Reads also go through
+//!   the CPU: the redo log is searched first, then the hash table +
+//!   destination storage.
+//! * **Read After Write** — a network-dominant scheme: clients obtain a
+//!   ring-buffer slot, RDMA-write the object one-sided, then issue an RDMA
+//!   *read after the write* to force the data through the NIC into the ADR
+//!   domain. The server CPU polls the ring buffers and applies entries to
+//!   destination storage (second NVM write). Reads are identical to Redo
+//!   Logging.
+//!
+//! Both schemes double the NVM write traffic (staging + destination) —
+//! Table 1's comparison — and put the server CPU on the read path, which is
+//! what caps their throughput in Figs 18–21.
+
+pub mod applier;
+pub mod client;
+pub mod server;
+
+pub use applier::{ApplierActor, ApplierConfig};
+pub use client::{BaselineClient, OpSource as BaselineOpSource};
+pub use server::{BaselineServer, BaselineWorld, Counters as BaselineCounters, PendingWrite, Scheme};

@@ -1,0 +1,368 @@
+//! Baseline server state: metadata hash table, destination storage (in-place
+//! slots), staging area (redo log / ring buffers) and the pending queue the
+//! asynchronous applier drains.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::hashtable::{AtomicRegion, HashTable};
+use crate::log::{object, Chain, LogOffset};
+use crate::metrics::LatencyRecorder;
+use crate::nvm::{Nvm, NvmConfig};
+use crate::rdma::Fabric;
+use crate::sim::{CpuPool, Time, Timing};
+
+/// Which baseline this world runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    RedoLogging,
+    ReadAfterWrite,
+}
+
+impl Scheme {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::RedoLogging => "Redo Logging",
+            Scheme::ReadAfterWrite => "Read After Write",
+        }
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            Scheme::RedoLogging => "redo",
+            Scheme::ReadAfterWrite => "raw",
+        }
+    }
+}
+
+/// A staged write awaiting asynchronous application.
+#[derive(Clone, Debug)]
+pub struct PendingWrite {
+    pub key: Vec<u8>,
+    /// Offset of the staged record in the staging chain.
+    pub staged_off: LogOffset,
+    pub len: u32,
+    /// Delete marker (baselines zero the metadata instead of writing data).
+    pub delete: bool,
+}
+
+/// Run counters (same shape as erda::Counters; kept separate because the
+/// baseline protocol surfaces no inconsistency/fallback events).
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub ops_measured: u64,
+    pub latency: LatencyRecorder,
+    pub read_misses: u64,
+    pub applied: u64,
+    pub measure_from: Time,
+    pub last_completion: Time,
+    /// Clients still running (background actors exit when this hits 0).
+    pub active_clients: u32,
+}
+
+impl Counters {
+    pub fn record_op(&mut self, start: Time, end: Time) {
+        if start < self.measure_from {
+            return;
+        }
+        self.ops_measured += 1;
+        self.latency.record(end - start);
+        self.last_completion = self.last_completion.max(end);
+    }
+}
+
+/// Baseline server state.
+pub struct BaselineServer {
+    pub scheme: Scheme,
+    /// Metadata: key → destination slot offset (stored in off_a; the paper
+    /// uses the same hopscotch index for all three schemes).
+    pub table: HashTable,
+    /// Destination storage: fixed-size in-place slots.
+    pub dest: Chain,
+    /// Staging: redo-log region (Redo) or ring buffers (RAW).
+    pub staging: Chain,
+    /// In-flight writes awaiting application, oldest first.
+    pub pending: VecDeque<PendingWrite>,
+    /// key → staged value for read hits on unapplied writes (the "search
+    /// the redo log first" step, served in O(1) here; the CPU cost of the
+    /// scan is charged via Timing::cpu_log_search).
+    pub pending_latest: HashMap<Vec<u8>, Vec<u8>>,
+    /// Fixed destination slot size (create sizes the slot for the run).
+    pub slot_size: usize,
+    /// Ring-buffer capacity (RAW): clients stall for a slot once this many
+    /// staged writes await application — the backpressure that ties RAW's
+    /// steady-state write throughput to the applier's CPU drain rate.
+    pub ring_cap: usize,
+}
+
+impl BaselineServer {
+    pub fn new(nvm: &mut Nvm, scheme: Scheme, table_cap: usize, region_size: u32, segment_size: u32, slot_size: usize) -> Self {
+        BaselineServer {
+            scheme,
+            table: HashTable::new(nvm, table_cap),
+            dest: Chain::new(region_size, segment_size, nvm),
+            staging: Chain::new(region_size, segment_size, nvm),
+            pending: VecDeque::new(),
+            pending_latest: HashMap::new(),
+            slot_size,
+            ring_cap: 128,
+        }
+    }
+
+    /// Create a destination slot + metadata entry for a fresh key.
+    fn create_slot(&mut self, nvm: &mut Nvm, key: &[u8]) -> LogOffset {
+        let off = self.dest.reserve(nvm, self.slot_size);
+        self.table
+            .insert(nvm, key, 0, AtomicRegion::initial(off))
+            .expect("hash table full");
+        off
+    }
+
+    /// Server-side handling of an arrived write: stage the record and queue
+    /// it for asynchronous application. For RAW the staging bytes were
+    /// already RDMA-written by the client; `staged_off` names them.
+    pub fn stage_write(&mut self, nvm: &mut Nvm, key: &[u8], value: &[u8], staged_off: LogOffset, len: u32) {
+        if self.table.lookup(nvm, key).is_none() {
+            self.create_slot(nvm, key);
+        }
+        self.pending.push_back(PendingWrite {
+            key: key.to_vec(),
+            staged_off,
+            len,
+            delete: false,
+        });
+        self.pending_latest.insert(key.to_vec(), value.to_vec());
+    }
+
+    /// Redo-path write: the server itself appends the record to the redo
+    /// log (the client sent the payload via RDMA send).
+    pub fn redo_write(&mut self, nvm: &mut Nvm, key: &[u8], value: &[u8]) {
+        let obj = object::encode_object(key, value);
+        let off = self.staging.append_local(nvm, &obj);
+        self.stage_write(nvm, key, value, off, obj.len() as u32);
+    }
+
+    /// RAW-path address request: reserve a ring-buffer slot for the client's
+    /// one-sided write. Returns the staging offset.
+    pub fn raw_reserve(&mut self, nvm: &mut Nvm, len: usize) -> LogOffset {
+        self.staging.reserve(nvm, len)
+    }
+
+    /// RAW-path completion: client finished write + flush-read; record the
+    /// staged entry for the applier.
+    pub fn raw_commit(&mut self, nvm: &mut Nvm, key: &[u8], value: &[u8], staged_off: LogOffset, len: u32) {
+        self.stage_write(nvm, key, value, staged_off, len);
+    }
+
+    /// Delete: zero the metadata entry (paper Table 1's delete row).
+    pub fn delete(&mut self, nvm: &mut Nvm, key: &[u8]) {
+        if let Some(slot) = self.table.lookup(nvm, key) {
+            self.table.remove(nvm, slot);
+        }
+        self.pending_latest.remove(key);
+    }
+
+    /// Read path (§5.1): search the staging area first (unapplied writes),
+    /// then the hash table + destination storage.
+    pub fn read(&self, nvm: &Nvm, key: &[u8]) -> Option<Vec<u8>> {
+        if let Some(v) = self.pending_latest.get(key) {
+            return Some(v.clone());
+        }
+        let slot = self.table.lookup(nvm, key)?;
+        let e = self.table.read_entry(nvm, slot)?;
+        let off = e.atomic.newest();
+        let bytes = nvm.read(self.dest.addr_of(off), self.slot_size);
+        match object::decode(bytes) {
+            Ok(v) if !v.deleted && v.key == key => Some(v.value),
+            _ => None,
+        }
+    }
+
+    /// Apply one pending write to destination storage (the applier actor's
+    /// work item). Returns the applied record, or None when idle.
+    pub fn apply_one(&mut self, nvm: &mut Nvm) -> Option<PendingWrite> {
+        let w = self.pending.pop_front()?;
+        if w.delete {
+            return Some(w);
+        }
+        // Verify the staged record (RAW entries may be torn if a client died
+        // mid-write; the CRC gate catches them — the paper's baselines rely
+        // on the server for this integrity check).
+        let staged = nvm.read_vec(self.staging.addr_of(w.staged_off), w.len as usize);
+        match object::decode(&staged) {
+            Ok(v) if v.key == w.key => {
+                let slot = match self.table.lookup(nvm, &w.key) {
+                    Some(s) => s,
+                    None => return Some(w), // deleted while pending
+                };
+                let dest_off = self.table.read_entry(nvm, slot).expect("live").atomic.newest();
+                nvm.write(self.dest.addr_of(dest_off), &staged);
+                // Drop the pending-read shadow only if it still matches this
+                // record (a newer pending write may have superseded it).
+                if self.pending_latest.get(&w.key).map(|x| x[..] == v.value[..]).unwrap_or(false)
+                {
+                    self.pending_latest.remove(&w.key);
+                }
+                Some(w)
+            }
+            _ => Some(w), // torn staging record: skipped (never applied)
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+/// The shared world of a baseline run.
+pub struct BaselineWorld {
+    pub nvm: Nvm,
+    pub fabric: Fabric,
+    pub cpu: CpuPool,
+    pub server: BaselineServer,
+    pub counters: Counters,
+}
+
+impl BaselineWorld {
+    pub fn new(
+        timing: Timing,
+        nvm_cfg: NvmConfig,
+        scheme: Scheme,
+        table_cap: usize,
+        region_size: u32,
+        segment_size: u32,
+        slot_size: usize,
+    ) -> Self {
+        let mut nvm = Nvm::new(nvm_cfg);
+        let server =
+            BaselineServer::new(&mut nvm, scheme, table_cap, region_size, segment_size, slot_size);
+        BaselineWorld {
+            nvm,
+            cpu: CpuPool::new(timing.server_cores),
+            fabric: Fabric::new(timing),
+            server,
+            counters: Counters::default(),
+        }
+    }
+
+    /// Bulk-load `n` records (setup; stats reset by the driver afterwards).
+    pub fn preload(&mut self, n: u64, value_size: usize) {
+        for i in 0..n {
+            let key = crate::ycsb::key_of(i);
+            let value = vec![0xA5u8; value_size];
+            let obj = object::encode_object(&key, &value);
+            let off = self.server.create_slot(&mut self.nvm, &key);
+            self.nvm.write(self.server.dest.addr_of(off), &obj);
+        }
+    }
+
+    /// Direct read for tests.
+    pub fn get(&self, key: &[u8]) -> Option<Vec<u8>> {
+        self.server.read(&self.nvm, key)
+    }
+
+    /// Drain the NIC cache completely (end-of-run settling before direct
+    /// state inspection; virtual time has stopped advancing).
+    pub fn settle(&mut self) {
+        let BaselineWorld { nvm, fabric, .. } = self;
+        fabric.flush(crate::sim::Time::MAX, nvm);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world(scheme: Scheme) -> BaselineWorld {
+        BaselineWorld::new(
+            Timing::default(),
+            NvmConfig { capacity: 16 << 20 },
+            scheme,
+            1 << 10,
+            1 << 18,
+            1 << 13,
+            object::wire_size(20, 256),
+        )
+    }
+
+    #[test]
+    fn preload_then_get() {
+        let mut w = world(Scheme::RedoLogging);
+        w.preload(20, 256);
+        assert_eq!(w.get(&crate::ycsb::key_of(3)).unwrap(), vec![0xA5u8; 256]);
+        assert!(w.get(b"missing").is_none());
+    }
+
+    #[test]
+    fn redo_write_readable_before_apply() {
+        let mut w = world(Scheme::RedoLogging);
+        w.preload(2, 256);
+        let key = crate::ycsb::key_of(0);
+        w.server.redo_write(&mut w.nvm, &key, &vec![1u8; 256]);
+        // Unapplied: served from the staging search.
+        assert_eq!(w.get(&key).unwrap(), vec![1u8; 256]);
+        assert_eq!(w.server.pending_len(), 1);
+        // Apply drains the queue and the value persists at the destination.
+        w.server.apply_one(&mut w.nvm).expect("one pending");
+        assert_eq!(w.server.pending_len(), 0);
+        assert_eq!(w.get(&key).unwrap(), vec![1u8; 256]);
+    }
+
+    #[test]
+    fn double_write_traffic_measured() {
+        // Table 1: baseline update ≈ 2× the object bytes (staging + dest).
+        let mut w = world(Scheme::RedoLogging);
+        w.preload(1, 256);
+        let key = crate::ycsb::key_of(0);
+        w.nvm.reset_stats();
+        w.server.redo_write(&mut w.nvm, &key, &vec![9u8; 256]);
+        while w.server.apply_one(&mut w.nvm).is_some() {}
+        let obj_len = object::wire_size(key.len(), 256) as u64;
+        let programmed = w.nvm.stats().programmed_bytes;
+        assert!(
+            programmed > 2 * obj_len - 64 && programmed <= 2 * obj_len,
+            "programmed {programmed} vs 2×{obj_len}"
+        );
+    }
+
+    #[test]
+    fn torn_staged_record_never_applied() {
+        let mut w = world(Scheme::ReadAfterWrite);
+        w.preload(1, 256);
+        let key = crate::ycsb::key_of(0);
+        let obj = object::encode_object(&key, &vec![4u8; 256]);
+        let off = w.server.raw_reserve(&mut w.nvm, obj.len());
+        // Only half the record reaches the ring buffer (client died).
+        w.nvm.write(w.server.staging.addr_of(off), &obj[..obj.len() / 2]);
+        w.server.pending.push_back(PendingWrite {
+            key: key.clone(),
+            staged_off: off,
+            len: obj.len() as u32,
+            delete: false,
+        });
+        w.server.apply_one(&mut w.nvm).expect("drained");
+        // Destination still holds the preloaded value.
+        assert_eq!(w.get(&key).unwrap(), vec![0xA5u8; 256]);
+    }
+
+    #[test]
+    fn delete_zeroes_metadata() {
+        let mut w = world(Scheme::RedoLogging);
+        w.preload(2, 256);
+        let key = crate::ycsb::key_of(1);
+        w.server.delete(&mut w.nvm, &key);
+        assert!(w.get(&key).is_none());
+    }
+
+    #[test]
+    fn superseded_pending_shadow_survives_apply() {
+        let mut w = world(Scheme::RedoLogging);
+        w.preload(1, 8);
+        let key = crate::ycsb::key_of(0);
+        w.server.redo_write(&mut w.nvm, &key, b"11111111");
+        w.server.redo_write(&mut w.nvm, &key, b"22222222");
+        w.server.apply_one(&mut w.nvm); // applies "1111", shadow holds "2222"
+        assert_eq!(w.get(&key).unwrap(), b"22222222");
+        w.server.apply_one(&mut w.nvm);
+        assert_eq!(w.get(&key).unwrap(), b"22222222");
+    }
+}

@@ -1,0 +1,75 @@
+//! Minimal statistics harness for `cargo bench` targets (`harness = false`;
+//! criterion is not in the offline vendor set — DESIGN.md §3).
+//!
+//! Usage in a bench binary:
+//! ```no_run
+//! let mut b = erda::bench_util::Bench::new("substrates");
+//! b.bench("crc32/4096B", || erda::crc::crc32(&vec![0u8; 4096]));
+//! b.finish();
+//! ```
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark group printing criterion-style lines.
+pub struct Bench {
+    group: String,
+    /// Target wall-clock per measurement (default 300 ms).
+    pub budget: Duration,
+    results: Vec<(String, f64)>,
+    filter: Option<String>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // `cargo bench -- <filter>` support.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bench { group: group.into(), budget: Duration::from_millis(300), results: Vec::new(), filter }
+    }
+
+    /// Measure `f`, printing mean time/iter and iters/sec.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) && !self.group.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // Warmup + calibration: find an iteration count that fills ~budget.
+        let t0 = Instant::now();
+        black_box(f());
+        let one = t0.elapsed().max(Duration::from_nanos(20));
+        let iters = (self.budget.as_nanos() / one.as_nanos()).clamp(1, 1_000_000) as u64;
+        // Measure.
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        let total = t0.elapsed();
+        let per = total.as_nanos() as f64 / iters as f64;
+        let (scaled, unit) = if per < 1_000.0 {
+            (per, "ns")
+        } else if per < 1_000_000.0 {
+            (per / 1_000.0, "µs")
+        } else {
+            (per / 1_000_000.0, "ms")
+        };
+        println!(
+            "{:<44} time: {:>10.3} {}/iter   ({:.0} iter/s, {} iters)",
+            format!("{}/{}", self.group, name),
+            scaled,
+            unit,
+            1e9 / per,
+            iters
+        );
+        self.results.push((name.into(), per));
+    }
+
+    /// Result lookup (for throughput-style derived prints).
+    pub fn result_ns(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn finish(self) {
+        println!("{}: {} benchmarks", self.group, self.results.len());
+    }
+}

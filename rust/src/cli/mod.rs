@@ -1,0 +1,130 @@
+//! Hand-rolled CLI (the offline vendor set has no `clap`; see DESIGN.md §3).
+//!
+//! ```text
+//! repro figures --all [--quick] [--out DIR]     regenerate every experiment
+//! repro figures --fig 18 [--quick] [--out DIR]  one figure (14..26)
+//! repro figures --table 1 [--out DIR]           Table 1
+//! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
+//! repro verify-runtime                          artifact self-check
+//! repro help
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::figures::{self, Fidelity};
+
+/// Parsed command line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Cmd {
+    Figures { ids: Vec<String>, fidelity: Fidelity, out: Option<PathBuf> },
+    Recover,
+    VerifyRuntime,
+    Help,
+}
+
+/// Parse `args` (without argv[0]).
+pub fn parse(args: &[String]) -> Result<Cmd> {
+    let mut it = args.iter().peekable();
+    let sub = match it.next() {
+        None => return Ok(Cmd::Help),
+        Some(s) => s.as_str(),
+    };
+    match sub {
+        "figures" | "fig" => {
+            let mut ids = Vec::new();
+            let mut fidelity = Fidelity::Full;
+            let mut out = None;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--all" => {
+                        ids = figures::ALL_IDS.iter().map(|s| s.to_string()).collect()
+                    }
+                    "--fig" => match it.next() {
+                        Some(v) => ids.push(v.clone()),
+                        None => bail!("--fig needs a number (14..26)"),
+                    },
+                    "--table" => match it.next() {
+                        Some(v) if v == "1" => ids.push("table1".into()),
+                        _ => bail!("--table only supports 1"),
+                    },
+                    "--ablations" => ids.push("ablations".into()),
+                    "--quick" => fidelity = Fidelity::Quick,
+                    "--out" => match it.next() {
+                        Some(v) => out = Some(PathBuf::from(v)),
+                        None => bail!("--out needs a directory"),
+                    },
+                    other => bail!("unknown figures flag {other:?}"),
+                }
+            }
+            if ids.is_empty() {
+                bail!("figures: pass --all, --fig N or --table 1");
+            }
+            Ok(Cmd::Figures { ids, fidelity, out })
+        }
+        "recover" => Ok(Cmd::Recover),
+        "verify-runtime" => Ok(Cmd::VerifyRuntime),
+        "help" | "--help" | "-h" => Ok(Cmd::Help),
+        other => bail!("unknown subcommand {other:?} (try `repro help`)"),
+    }
+}
+
+pub const HELP: &str = "\
+repro — Erda reproduction driver (see README.md)
+
+USAGE:
+  repro figures --all [--quick] [--out DIR]   regenerate every figure + table
+  repro figures --fig N [--quick] [--out DIR] one experiment (N = 14..26)
+  repro figures --table 1 [--out DIR]         Table 1 (NVM writes per op)
+  repro figures --ablations [--out DIR]       design-choice ablations (A1–A4)
+  repro recover                               crash-recovery demo (PJRT batch verify)
+  repro verify-runtime                        check AOT artifacts against local CRC
+  repro help                                  this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Result<Cmd> {
+        parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_figures_all() {
+        match p("figures --all --quick --out results").unwrap() {
+            Cmd::Figures { ids, fidelity, out } => {
+                assert_eq!(ids.len(), figures::ALL_IDS.len());
+                assert_eq!(fidelity, Fidelity::Quick);
+                assert_eq!(out.unwrap(), PathBuf::from("results"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_single_figure_and_table() {
+        match p("figures --fig 18 --table 1").unwrap() {
+            Cmd::Figures { ids, fidelity, .. } => {
+                assert_eq!(ids, vec!["18".to_string(), "table1".to_string()]);
+                assert_eq!(fidelity, Fidelity::Full);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(p("figures").is_err());
+        assert!(p("figures --fig").is_err());
+        assert!(p("nonsense").is_err());
+        assert!(p("figures --table 2").is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(p("").unwrap(), Cmd::Help);
+        assert_eq!(p("help").unwrap(), Cmd::Help);
+    }
+}

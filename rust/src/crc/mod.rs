@@ -1,0 +1,131 @@
+//! CRC32 (IEEE 802.3, reflected — zlib-compatible).
+//!
+//! Bit-identical to the L1 Pallas kernel (python/compile/kernels/crc32.py);
+//! the runtime integration tests assert Rust == AOT artifact == zlib. The
+//! per-op hot path uses [`crc32`] (slice-by-8); the bytewise variant is kept
+//! as the obviously-correct oracle for property tests.
+
+use std::sync::OnceLock;
+
+/// Reflected IEEE 802.3 polynomial (same constant as the Pallas kernel).
+pub const CRC32_POLY: u32 = 0xEDB8_8320;
+
+fn tables() -> &'static [[u32; 256]; 8] {
+    static TABLES: OnceLock<[[u32; 256]; 8]> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut t = [[0u32; 256]; 8];
+        for i in 0..256u32 {
+            let mut c = i;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { (c >> 1) ^ CRC32_POLY } else { c >> 1 };
+            }
+            t[0][i as usize] = c;
+        }
+        for i in 0..256usize {
+            for k in 1..8usize {
+                let prev = t[k - 1][i];
+                t[k][i] = t[0][(prev & 0xFF) as usize] ^ (prev >> 8);
+            }
+        }
+        t
+    })
+}
+
+/// Bytewise CRC32 — the reference implementation (mirrors the kernel's
+/// per-byte step exactly).
+pub fn crc32_bytewise(data: &[u8]) -> u32 {
+    let t = &tables()[0];
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = t[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Slice-by-8 CRC32 — the hot-path implementation.
+pub fn crc32(data: &[u8]) -> u32 {
+    let t = tables();
+    let mut crc = 0xFFFF_FFFFu32;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = u32::from_le_bytes(c[0..4].try_into().unwrap()) ^ crc;
+        let hi = u32::from_le_bytes(c[4..8].try_into().unwrap());
+        crc = t[7][(lo & 0xFF) as usize]
+            ^ t[6][((lo >> 8) & 0xFF) as usize]
+            ^ t[5][((lo >> 16) & 0xFF) as usize]
+            ^ t[4][((lo >> 24) & 0xFF) as usize]
+            ^ t[3][(hi & 0xFF) as usize]
+            ^ t[2][((hi >> 8) & 0xFF) as usize]
+            ^ t[1][((hi >> 16) & 0xFF) as usize]
+            ^ t[0][((hi >> 24) & 0xFF) as usize];
+    }
+    let t0 = &t[0];
+    for &b in chunks.remainder() {
+        crc = t0[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// FNV-1a 32-bit hash — bucket hash of the metadata table; bit-identical to
+/// python/compile/kernels/keyhash.py.
+pub fn fnv1a(data: &[u8]) -> u32 {
+    let mut h = 0x811C_9DC5u32;
+    for &b in data {
+        h = (h ^ b as u32).wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn known_vectors() {
+        // Same checks as the python kernel tests.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32_bytewise(b"123456789"), 0xCBF4_3926);
+        assert_eq!(fnv1a(b""), 0x811C_9DC5);
+        assert_eq!(fnv1a(b"a"), 0xE40C_292C);
+        assert_eq!(fnv1a(b"foobar"), 0xBF9C_F968);
+    }
+
+    #[test]
+    fn slice_by_8_matches_bytewise() {
+        let mut rng = Rng::new(123);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 255, 1024, 4099] {
+            let mut buf = vec![0u8; len];
+            rng.fill_bytes(&mut buf);
+            assert_eq!(crc32(&buf), crc32_bytewise(&buf), "len {len}");
+        }
+    }
+
+    #[test]
+    fn matches_crc32fast_oracle() {
+        let mut rng = Rng::new(321);
+        for len in [0usize, 1, 33, 512, 4096] {
+            let mut buf = vec![0u8; len];
+            rng.fill_bytes(&mut buf);
+            let mut h = crc32fast::Hasher::new();
+            h.update(&buf);
+            assert_eq!(crc32(&buf), h.finalize(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let mut rng = Rng::new(55);
+        let mut buf = vec![0u8; 256];
+        rng.fill_bytes(&mut buf);
+        let base = crc32(&buf);
+        for i in [0usize, 1, 100, 255] {
+            for bit in [0u8, 3, 7] {
+                let mut b = buf.clone();
+                b[i] ^= 1 << bit;
+                assert_ne!(crc32(&b), base, "flip at byte {i} bit {bit}");
+            }
+        }
+    }
+}

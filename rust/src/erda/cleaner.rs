@@ -1,0 +1,236 @@
+//! The cleaner actor: drives [`crate::log::cleaner::CleaningState`] through
+//! notify → merge → replicate → pointer swing + tag flip (§4.4).
+//!
+//! The cleaner runs on the server and *competes for the same CPU pool* as
+//! two-sided request service — exactly why Fig 26 shows elevated latencies
+//! during cleaning. Client ops interleave with cleaner steps in virtual
+//! time; writes during merge land in Region 1 (replicated later), writes
+//! during replication land in Region 2 past the reserved area.
+
+use super::server::ErdaWorld;
+use crate::hashtable::AtomicRegion;
+use crate::log::cleaner::{CleaningState, Phase};
+use crate::log::{object, Chain, HeadId};
+use crate::sim::{Actor, Step, Time};
+
+/// Cleaner tunables.
+#[derive(Clone, Copy, Debug)]
+pub struct CleanerConfig {
+    /// Objects processed per scheduling step (amortizes event overhead).
+    pub batch: usize,
+    /// Idle polling interval when below the occupancy threshold.
+    pub poll: Time,
+    /// Stop after the first completed cleaning (tests / Fig 26 runs).
+    pub one_shot: bool,
+}
+
+impl Default for CleanerConfig {
+    fn default() -> Self {
+        CleanerConfig { batch: 8, poll: 200_000, one_shot: false }
+    }
+}
+
+/// One cleaner per head.
+pub struct CleanerActor {
+    pub head: HeadId,
+    cfg: CleanerConfig,
+    done_once: bool,
+}
+
+impl CleanerActor {
+    pub fn new(head: HeadId, cfg: CleanerConfig) -> Self {
+        CleanerActor { head, cfg, done_once: false }
+    }
+
+    /// Per-object cleaning service time (copy + checksum + NVM append).
+    fn obj_service(w: &ErdaWorld, len: usize) -> Time {
+        let t = &w.fabric.timing;
+        t.cpu_apply + t.cpu_bytes(len) + t.nvm_write(len)
+    }
+
+    fn start_cleaning(&self, w: &mut ErdaWorld, now: Time) -> Step {
+        let h = self.head as usize;
+        let cfg = w.server.log.cfg;
+        let region2 = Chain::new(cfg.region_size, cfg.segment_size, &mut w.nvm);
+        let state = CleaningState::start(&w.server.log.head(self.head).index, region2);
+        w.server.cleaning[h] = Some(state);
+        // §4.4: inform connected clients, wait one maximum RTT before the
+        // merge starts so in-flight one-sided ops drain.
+        Step::At(now + 2 * w.fabric.timing.one_sided_rtt)
+    }
+
+    fn merge_step(&self, w: &mut ErdaWorld, now: Time) -> Step {
+        let h = self.head;
+        let mut busy_until = now;
+        for _ in 0..self.cfg.batch {
+            let item = {
+                let c = w.server.cleaning[h as usize].as_mut().expect("cleaning");
+                c.next_merge_item()
+            };
+            let (off, len) = match item {
+                Some(x) => x,
+                None => {
+                    // Merge done → pre-reserve replication space (boundary
+                    // snapshot of what clients appended during the merge).
+                    let index = w.server.log.head(h).index.clone();
+                    let c = w.server.cleaning[h as usize].as_mut().expect("cleaning");
+                    c.begin_replication(&mut w.nvm, &index);
+                    return Step::At(busy_until.max(now));
+                }
+            };
+            let bytes = w.nvm.read_vec(w.server.log.addr_of(h, off), len as usize);
+            let v = match object::decode(&bytes) {
+                Ok(v) => v,
+                Err(_) => continue, // torn leftover: dropped by compaction
+            };
+            let c = w.server.cleaning[h as usize].as_mut().expect("cleaning");
+            if c.already_seen(&v.key) {
+                continue; // stale version: the reverse scan saw a newer one
+            }
+            if v.deleted {
+                // Deleted objects are removed during cleaning; free the entry.
+                if let Some(slot) = w.server.table.lookup(&w.nvm, &v.key) {
+                    w.server.table.remove(&mut w.nvm, slot);
+                }
+                continue;
+            }
+            // Carry the newest version into Region 2 and point the
+            // old-offset slot at it (no tag flip — Figs 10–11).
+            let resv = w.cpu.reserve(now, Self::obj_service(w, len as usize));
+            busy_until = busy_until.max(resv.end);
+            let c = w.server.cleaning[h as usize].as_mut().expect("cleaning");
+            let r2off = c.region2.append_local(&mut w.nvm, &bytes);
+            c.carried.insert(v.key.clone());
+            if let Some(slot) = w.server.table.lookup(&w.nvm, &v.key) {
+                let r = w.server.table.read_entry(&w.nvm, slot).expect("live").atomic;
+                w.server.table.update_region(&mut w.nvm, slot, r.updated_no_flip(r2off));
+            }
+        }
+        Step::At(busy_until.max(now + 1))
+    }
+
+    fn replicate_step(&self, w: &mut ErdaWorld, now: Time) -> Step {
+        let h = self.head;
+        let mut busy_until = now;
+        for _ in 0..self.cfg.batch {
+            let item = {
+                let c = w.server.cleaning[h as usize].as_mut().expect("cleaning");
+                c.next_repl_item()
+            };
+            let (r1off, len, r2slot) = match item {
+                Some(x) => x,
+                None => return self.complete(w, now),
+            };
+            let bytes = w.nvm.read_vec(w.server.log.addr_of(h, r1off), len as usize);
+            let v = match object::decode(&bytes) {
+                Ok(v) => v,
+                Err(_) => continue, // torn client write from the merge window
+            };
+            if v.deleted {
+                if let Some(slot) = w.server.table.lookup(&w.nvm, &v.key) {
+                    w.server.table.remove(&mut w.nvm, slot);
+                }
+                let c = w.server.cleaning[h as usize].as_mut().expect("cleaning");
+                c.carried.remove(&v.key);
+                continue;
+            }
+            // §4.4: if the key already appeared past the reserved area (a
+            // client wrote it during replication), keep that newer version.
+            let skip = {
+                let c = w.server.cleaning[h as usize].as_ref().expect("cleaning");
+                match w.server.table.lookup(&w.nvm, &v.key) {
+                    Some(slot) => {
+                        let e = w.server.table.read_entry(&w.nvm, slot).expect("live");
+                        c.is_fresh_region2(e.atomic.oldest())
+                    }
+                    None => true, // entry vanished (deleted): nothing to do
+                }
+            };
+            if skip {
+                continue;
+            }
+            let resv = w.cpu.reserve(now, Self::obj_service(w, len as usize));
+            busy_until = busy_until.max(resv.end);
+            let c = w.server.cleaning[h as usize].as_mut().expect("cleaning");
+            let addr = c.region2.addr_of(r2slot);
+            w.nvm.write(addr, &bytes);
+            c.carried.insert(v.key.clone());
+            if let Some(slot) = w.server.table.lookup(&w.nvm, &v.key) {
+                let r = w.server.table.read_entry(&w.nvm, slot).expect("live").atomic;
+                w.server.table.update_region(&mut w.nvm, slot, r.updated_no_flip(r2slot));
+            }
+        }
+        Step::At(busy_until.max(now + 1))
+    }
+
+    /// Pointer swing + tag flips (Figs 12–13): Region 2 becomes Region 1.
+    fn complete(&self, w: &mut ErdaWorld, now: Time) -> Step {
+        let h = self.head;
+        let state = w.server.cleaning[h as usize].take().expect("cleaning");
+        // Flip the tag of every carried entry so the Region-2 offset in the
+        // old slot becomes the newest; drop entries that carried nothing
+        // (fresh keys whose only write tore during cleaning — rollback to
+        // nonexistence).
+        let slots: Vec<usize> = w.server.table.live_slots().collect();
+        let mut flips = 0u32;
+        for slot in slots {
+            let e = match w.server.table.read_entry(&w.nvm, slot) {
+                Some(e) => e,
+                None => continue,
+            };
+            if e.head_id != h {
+                continue;
+            }
+            if state.carried.contains(&e.key) {
+                let r = AtomicRegion { new_tag: !e.atomic.new_tag, ..e.atomic };
+                w.server.table.update_region(&mut w.nvm, slot, r);
+                flips += 1;
+            } else {
+                w.server.table.remove(&mut w.nvm, slot);
+            }
+        }
+        let t = &w.fabric.timing;
+        let svc = flips as Time * t.cpu_hash_op / 4;
+        w.cpu.reserve(now, svc);
+        w.server.log.swing_head(h, state.region2);
+        w.counters.cleanings_completed += 1;
+        Step::At(now + 1)
+    }
+}
+
+impl Actor<ErdaWorld> for CleanerActor {
+    fn step(&mut self, w: &mut ErdaWorld, now: Time) -> Step {
+        if self.done_once && self.cfg.one_shot {
+            return Step::Done;
+        }
+        let phase = w.server.cleaning[self.head as usize].as_ref().map(|c| c.phase);
+        match phase {
+            None => {
+                if w.counters.active_clients == 0 {
+                    return Step::Done; // run over; let the engine quiesce
+                }
+                if w.server.log.occupied(self.head) >= w.server.cleaning_threshold {
+                    self.start_cleaning(w, now)
+                } else {
+                    Step::At(now + self.cfg.poll)
+                }
+            }
+            Some(Phase::Notify) => {
+                let c = w.server.cleaning[self.head as usize].as_mut().expect("cleaning");
+                c.phase = Phase::Merge;
+                Step::At(now)
+            }
+            Some(Phase::Merge) => self.merge_step(w, now),
+            Some(Phase::Replicate) => {
+                let step = self.replicate_step(w, now);
+                if w.server.cleaning[self.head as usize].is_none() {
+                    self.done_once = true;
+                    if self.cfg.one_shot {
+                        return Step::Done;
+                    }
+                }
+                step
+            }
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! The Erda protocol (§3–§4): zero-copy log-structured remote memory with
+//! Remote Data Atomicity for one-sided RDMA writes to NVM.
+//!
+//! * [`server`] — server state (hash table + log store + cleaning) and the
+//!   server-side op handlers: normal-mode metadata update, cleaning-mode
+//!   two-sided reads/writes, entry repair.
+//! * [`client`] — the client actor: one-sided read path (entry read →
+//!   object read → checksum verify → fallback/repair), write path
+//!   (write_with_imm metadata request → one-sided data write), delete,
+//!   cleaning-mode send path, failure injection.
+//! * [`cleaner`] — the cleaner actor driving [`crate::log::cleaner`].
+//! * [`recovery`] — server crash recovery: rebuild volatile state, verify
+//!   newest versions (optionally batched through the PJRT artifact), roll
+//!   back torn entries.
+
+pub mod cleaner;
+pub mod client;
+pub mod recovery;
+pub mod server;
+
+pub use cleaner::{CleanerActor, CleanerConfig};
+pub use client::{ClientConfig, ErdaClient, OpSource, ScriptOp};
+pub use recovery::{recover, BatchCheck, LocalCheck, RecoveryReport};
+pub use server::{Counters, ErdaServer, ErdaWorld};
+
+use crate::log::HeadId;
+
+/// Deterministic, client-computable head placement: the paper sends clients
+/// the head array on connect; making placement a pure function of the key
+/// lets clients decide locally (and know which head is under cleaning).
+pub fn head_of(key: &[u8], num_heads: usize) -> HeadId {
+    ((crate::crc::fnv1a(key) >> 16) as usize % num_heads) as HeadId
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_placement_is_stable_and_in_range() {
+        for n in [1usize, 2, 4, 16] {
+            for i in 0..100u32 {
+                let key = format!("user{i}");
+                let h = head_of(key.as_bytes(), n);
+                assert!((h as usize) < n);
+                assert_eq!(h, head_of(key.as_bytes(), n), "stable");
+            }
+        }
+    }
+
+    #[test]
+    fn head_placement_spreads_keys() {
+        let mut counts = [0u32; 4];
+        for i in 0..1000u32 {
+            counts[head_of(format!("user{i:016}").as_bytes(), 4) as usize] += 1;
+        }
+        for (h, &c) in counts.iter().enumerate() {
+            assert!(c > 100, "head {h} underloaded: {c}");
+        }
+    }
+}

@@ -1,0 +1,449 @@
+//! Erda server state and server-side op handlers.
+//!
+//! In normal mode the server CPU only touches *metadata*: a write_with_imm
+//! request makes it update the hash entry (8-byte atomic flip) and return
+//! the reserved log address; object bytes then flow client → NVM through
+//! the NIC without CPU involvement (§3.3). Reads never touch the CPU at
+//! all. During log cleaning of a head, ops on that head fall back to
+//! two-sided sends served here (§4.4).
+
+use std::collections::HashMap;
+
+use crate::hashtable::{entry, AtomicRegion, HashTable};
+use crate::log::cleaner::{CleaningState, Phase};
+use crate::log::{object, HeadId, LogConfig, LogOffset, LogStore, NO_OFFSET};
+use crate::metrics::LatencyRecorder;
+use crate::nvm::{Nvm, NvmConfig};
+use crate::rdma::Fabric;
+use crate::sim::{CpuPool, Time, Timing};
+
+/// Counters shared by all actors of a run.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub ops_measured: u64,
+    pub latency: LatencyRecorder,
+    /// Latency of ops that ran while their head was under cleaning (Fig 26).
+    pub latency_during_cleaning: LatencyRecorder,
+    pub inconsistencies: u64,
+    pub fallbacks: u64,
+    pub retries: u64,
+    pub repairs: u64,
+    pub read_misses: u64,
+    pub cleanings_completed: u64,
+    /// Virtual time measurement starts (ops completing before are warmup).
+    pub measure_from: Time,
+    pub first_completion: Time,
+    pub last_completion: Time,
+    /// Clients still running (background actors exit when this hits 0).
+    pub active_clients: u32,
+}
+
+impl Counters {
+    pub fn record_op(&mut self, start: Time, end: Time, during_cleaning: bool) {
+        if start < self.measure_from {
+            return;
+        }
+        self.ops_measured += 1;
+        if during_cleaning {
+            self.latency_during_cleaning.record(end - start);
+        } else {
+            self.latency.record(end - start);
+        }
+        if self.first_completion == 0 {
+            self.first_completion = end;
+        }
+        self.last_completion = self.last_completion.max(end);
+    }
+}
+
+/// The Erda server: metadata hash table + log-structured store + per-head
+/// cleaning state.
+pub struct ErdaServer {
+    pub table: HashTable,
+    pub log: LogStore,
+    /// Per-head cleaning state (None = normal mode).
+    pub cleaning: Vec<Option<CleaningState>>,
+    /// Occupancy threshold (bytes under a head) that triggers cleaning.
+    pub cleaning_threshold: u32,
+}
+
+impl ErdaServer {
+    pub fn new(nvm: &mut Nvm, log_cfg: LogConfig, table_cap: usize) -> Self {
+        let table = HashTable::new(nvm, table_cap);
+        let log = LogStore::new(log_cfg, nvm);
+        let cleaning = (0..log_cfg.num_heads).map(|_| None).collect();
+        ErdaServer { table, log, cleaning, cleaning_threshold: u32::MAX }
+    }
+
+    pub fn num_heads(&self) -> usize {
+        self.log.num_heads()
+    }
+
+    /// Is head `h` currently being cleaned (clients must switch to sends)?
+    pub fn is_cleaning(&self, h: HeadId) -> bool {
+        self.cleaning[h as usize].is_some()
+    }
+
+    /// Write-request handling (§3.3): locate/create the entry, reserve log
+    /// space, atomically publish the new offset, and return `(head, offset,
+    /// nvm address)` — the paper's "last written address of the log" — for
+    /// the client's one-sided data write.
+    ///
+    /// Note the paper's ordering: metadata first, data later — the §4.3
+    /// window where an entry points at a not-yet-written object is real and
+    /// handled by checksum fallback on the read side.
+    ///
+    /// During log cleaning of the head the entry discipline changes (§4.4):
+    /// Notify/Merge replace the new-offset slot in place (no flip; the
+    /// object still lands in Region 1 and is replicated later); Replicate
+    /// reserves in Region 2 and updates the old-offset slot.
+    pub fn write_request(
+        &mut self,
+        nvm: &mut Nvm,
+        key: &[u8],
+        obj_len: usize,
+    ) -> (HeadId, LogOffset, crate::nvm::Addr) {
+        let h = super::head_of(key, self.num_heads());
+        let phase = self.cleaning[h as usize].as_ref().map(|c| c.phase);
+        match phase {
+            None => {
+                let off = self.log.reserve(nvm, h, obj_len);
+                match self.table.lookup(nvm, key) {
+                    Some(slot) => {
+                        let r = self.table.read_entry(nvm, slot).expect("live entry").atomic;
+                        self.table.update_region(nvm, slot, r.updated(off));
+                    }
+                    None => {
+                        self.table
+                            .insert(nvm, key, h, AtomicRegion::initial(off))
+                            .expect("hash table full");
+                    }
+                }
+                (h, off, self.log.addr_of(h, off))
+            }
+            Some(Phase::Notify) | Some(Phase::Merge) => {
+                let off = self.log.reserve(nvm, h, obj_len);
+                match self.table.lookup(nvm, key) {
+                    Some(slot) => {
+                        let r = self.table.read_entry(nvm, slot).expect("live entry").atomic;
+                        self.table.update_region(nvm, slot, r.replaced_newest(off));
+                    }
+                    None => {
+                        self.table
+                            .insert(nvm, key, h, AtomicRegion::initial(off))
+                            .expect("hash table full");
+                    }
+                }
+                (h, off, self.log.addr_of(h, off))
+            }
+            Some(Phase::Replicate) => {
+                let c = self.cleaning[h as usize].as_mut().expect("cleaning");
+                let off = c.region2.reserve(nvm, obj_len);
+                let addr = c.region2.addr_of(off);
+                c.carried.insert(key.to_vec());
+                match self.table.lookup(nvm, key) {
+                    Some(slot) => {
+                        let r = self.table.read_entry(nvm, slot).expect("live entry").atomic;
+                        self.table.update_region(nvm, slot, r.updated_no_flip(off));
+                    }
+                    None => {
+                        let r = AtomicRegion { new_tag: true, off_a: NO_OFFSET, off_b: off };
+                        self.table.insert(nvm, key, h, r).expect("hash table full");
+                    }
+                }
+                (h, off, addr)
+            }
+        }
+    }
+
+    /// Client-driven repair after a detected torn object (§4.2): roll the
+    /// entry back to the old offset — but only if the entry still points at
+    /// the reported offset AND the object is still torn when the repair
+    /// request is served. The second check distinguishes a crashed writer
+    /// from the §4.3 read-write race: a racing writer's bytes land moments
+    /// later and must NOT be rolled back.
+    pub fn repair(&mut self, nvm: &mut Nvm, key: &[u8], torn_off: LogOffset) -> bool {
+        if let Some(slot) = self.table.lookup(nvm, key) {
+            let e = self.table.read_entry(nvm, slot).expect("live entry");
+            let r = e.atomic;
+            if r.newest() == torn_off && r.oldest() != NO_OFFSET && !self.is_cleaning(e.head_id) {
+                let still_torn = !self.log.head(e.head_id).contains(torn_off)
+                    || object::decode(
+                        nvm.read(self.log.addr_of(e.head_id, torn_off), self.log.window(torn_off)),
+                    )
+                    .is_err();
+                if still_torn {
+                    self.table.update_region(nvm, slot, r.rolled_back());
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Resolve which (chain, offset) currently holds `key`'s latest version,
+    /// honoring the cleaning-phase read rules (§4.4). Returns the object
+    /// bytes, or None if the key is absent / deleted / unreadable.
+    pub fn local_read(&self, nvm: &Nvm, key: &[u8]) -> Option<Vec<u8>> {
+        let slot = self.table.lookup(nvm, key)?;
+        let e = self.table.read_entry(nvm, slot)?;
+        let h = e.head_id;
+        let bytes = match &self.cleaning[h as usize] {
+            Some(c) if c.phase == Phase::Replicate => {
+                // §4.4: old-offset beyond the reserved area = written during
+                // replication = latest; otherwise serve from Region 1.
+                let old = e.atomic.oldest();
+                if c.is_fresh_region2(old) {
+                    nvm.read_vec(c.region2.addr_of(old), c.region2.window(old))
+                } else if e.atomic.newest() != NO_OFFSET {
+                    let off = e.atomic.newest();
+                    nvm.read_vec(self.log.addr_of(h, off), self.log.window(off))
+                } else if old != NO_OFFSET {
+                    // Fresh key created during replication before reserve_end
+                    // cannot exist (reserve_end fixed first); treat as region2.
+                    nvm.read_vec(c.region2.addr_of(old), c.region2.window(old))
+                } else {
+                    return None;
+                }
+            }
+            _ => {
+                let off = e.atomic.newest();
+                if off == NO_OFFSET {
+                    return None;
+                }
+                nvm.read_vec(self.log.addr_of(h, off), self.log.window(off))
+            }
+        };
+        match object::decode(&bytes) {
+            Ok(v) if !v.deleted => Some(bytes[..v.wire_len()].to_vec()),
+            _ => None,
+        }
+    }
+
+    /// Cleaning-mode write (two-sided, §4.4): append per phase rules and
+    /// update the entry without flipping the tag.
+    pub fn cleaning_write(&mut self, nvm: &mut Nvm, key: &[u8], value: &[u8], deleted: bool) {
+        let h = super::head_of(key, self.num_heads());
+        let obj = if deleted { object::encode_delete(key) } else { object::encode_object(key, value) };
+        let phase = self.cleaning[h as usize].as_ref().map(|c| c.phase);
+        match phase {
+            Some(Phase::Notify) | Some(Phase::Merge) => {
+                // Append to Region 1; replace the new-offset slot in place.
+                let off = self.log.append_local(nvm, h, &obj);
+                match self.table.lookup(nvm, key) {
+                    Some(slot) => {
+                        let r = self.table.read_entry(nvm, slot).expect("live").atomic;
+                        self.table.update_region(nvm, slot, r.replaced_newest(off));
+                    }
+                    None => {
+                        self.table
+                            .insert(nvm, key, h, AtomicRegion::initial(off))
+                            .expect("hash table full");
+                    }
+                }
+            }
+            Some(Phase::Replicate) => {
+                // Append directly to Region 2 (past the reserved area);
+                // update the old-offset slot; mark carried.
+                let c = self.cleaning[h as usize].as_mut().expect("cleaning");
+                let off = c.region2.append_local(nvm, &obj);
+                c.carried.insert(key.to_vec());
+                match self.table.lookup(nvm, key) {
+                    Some(slot) => {
+                        let r = self.table.read_entry(nvm, slot).expect("live").atomic;
+                        self.table.update_region(nvm, slot, r.updated_no_flip(off));
+                    }
+                    None => {
+                        // Fresh key during replication: newest slot empty,
+                        // old slot carries the Region-2 offset.
+                        let r = AtomicRegion { new_tag: true, off_a: NO_OFFSET, off_b: off };
+                        self.table.insert(nvm, key, h, r).expect("hash table full");
+                    }
+                }
+            }
+            None => unreachable!("cleaning_write outside cleaning mode"),
+        }
+    }
+
+    /// Entry slot address for a key's home neighborhood — what the client
+    /// RDMA-reads (one contiguous hopscotch window).
+    pub fn neighborhood_addr(&self, key: &[u8]) -> (crate::nvm::Addr, usize) {
+        let b = self.table.bucket(key);
+        // Neighborhoods never wrap (the table carries HOP_RANGE spillover
+        // slots), so one contiguous window covers every candidate.
+        (self.table.slot_addr(b), crate::hashtable::HOP_RANGE * entry::ENTRY_SIZE)
+    }
+
+    /// Decode the entries of a neighborhood window (client-side parsing of
+    /// RDMA-read bytes).
+    pub fn parse_neighborhood(bytes: &[u8], key: &[u8]) -> Option<entry::EntryView> {
+        bytes
+            .chunks(entry::ENTRY_SIZE)
+            .filter_map(entry::decode)
+            .find(|v| v.key == key)
+    }
+}
+
+/// The shared world of an Erda simulation run.
+pub struct ErdaWorld {
+    pub nvm: Nvm,
+    pub fabric: Fabric,
+    pub cpu: CpuPool,
+    pub server: ErdaServer,
+    pub counters: Counters,
+}
+
+impl ErdaWorld {
+    pub fn new(timing: Timing, nvm_cfg: NvmConfig, log_cfg: LogConfig, table_cap: usize) -> Self {
+        let mut nvm = Nvm::new(nvm_cfg);
+        let server = ErdaServer::new(&mut nvm, log_cfg, table_cap);
+        ErdaWorld {
+            nvm,
+            cpu: CpuPool::new(timing.server_cores),
+            fabric: Fabric::new(timing),
+            server,
+            counters: Counters::default(),
+        }
+    }
+
+    /// Bulk-load `n` records server-side (setup phase; zero virtual time,
+    /// stats reset afterwards by the driver).
+    pub fn preload(&mut self, n: u64, value_size: usize) {
+        for i in 0..n {
+            let key = crate::ycsb::key_of(i);
+            let value = vec![0xA5u8; value_size];
+            let obj = object::encode_object(&key, &value);
+            let (_, _, addr) = self.server.write_request(&mut self.nvm, &key, obj.len());
+            self.nvm.write(addr, &obj);
+        }
+    }
+
+    /// Drain the NIC cache completely (end-of-run settling before direct
+    /// state inspection; virtual time has stopped advancing).
+    pub fn settle(&mut self) {
+        let ErdaWorld { nvm, fabric, .. } = self;
+        fabric.flush(crate::sim::Time::MAX, nvm);
+    }
+
+    /// Convenience for tests: direct (virtual-time-free) read of a key.
+    pub fn get(&self, key: &[u8]) -> Option<Vec<u8>> {
+        self.server
+            .local_read(&self.nvm, key)
+            .and_then(|b| object::decode(&b).ok())
+            .map(|v| v.value)
+    }
+}
+
+/// Convenience: a map of key → value for correctness oracles in tests.
+pub type Oracle = HashMap<Vec<u8>, Vec<u8>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> ErdaWorld {
+        ErdaWorld::new(
+            Timing::default(),
+            NvmConfig { capacity: 8 << 20 },
+            LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 },
+            1 << 10,
+        )
+    }
+
+    #[test]
+    fn preload_then_get() {
+        let mut w = world();
+        w.preload(50, 64);
+        for i in 0..50 {
+            let v = w.get(&crate::ycsb::key_of(i)).expect("present");
+            assert_eq!(v, vec![0xA5u8; 64]);
+        }
+        assert!(w.get(b"user-missing").is_none());
+    }
+
+    #[test]
+    fn write_request_publishes_metadata_before_data() {
+        let mut w = world();
+        let key = crate::ycsb::key_of(0);
+        let obj = object::encode_object(&key, b"vvvv");
+        let (_, off, addr) = w.server.write_request(&mut w.nvm, &key, obj.len());
+        // Entry already points at the reserved (unwritten) offset: §4.3.
+        let slot = w.server.table.lookup(&w.nvm, &key).unwrap();
+        let e = w.server.table.read_entry(&w.nvm, slot).unwrap();
+        assert_eq!(e.atomic.newest(), off);
+        // Reading now yields nothing valid (checksum gate).
+        assert!(w.get(&key).is_none());
+        // After the data lands, the read succeeds.
+        w.nvm.write(addr, &obj);
+        assert_eq!(w.get(&key).unwrap(), b"vvvv");
+    }
+
+    #[test]
+    fn update_keeps_old_version_reachable() {
+        let mut w = world();
+        w.preload(1, 16);
+        let key = crate::ycsb::key_of(0);
+        let obj2 = object::encode_object(&key, b"new-value");
+        let (h, off2, addr2) = w.server.write_request(&mut w.nvm, &key, obj2.len());
+        w.nvm.write(addr2, &obj2);
+        let slot = w.server.table.lookup(&w.nvm, &key).unwrap();
+        let at = w.server.table.read_entry(&w.nvm, slot).unwrap().atomic;
+        assert_eq!(at.newest(), off2);
+        let old_bytes = w.nvm.read_vec(
+            w.server.log.addr_of(h, at.oldest()),
+            w.server.log.window(at.oldest()),
+        );
+        let old = object::decode(&old_bytes).expect("old version intact");
+        assert_eq!(old.value, vec![0xA5u8; 16]);
+    }
+
+    #[test]
+    fn repair_rolls_back_torn_write() {
+        let mut w = world();
+        w.preload(1, 16);
+        let key = crate::ycsb::key_of(0);
+        // Update metadata but never write the object (client died).
+        let (_, torn_off, _) = w.server.write_request(&mut w.nvm, &key, 64);
+        assert!(w.get(&key).is_none(), "torn object must not decode");
+        assert!(w.server.repair(&mut w.nvm, &key, torn_off));
+        assert_eq!(w.get(&key).unwrap(), vec![0xA5u8; 16], "old version restored");
+        // Repair is idempotent / guarded: a second attempt is a no-op.
+        assert!(!w.server.repair(&mut w.nvm, &key, torn_off));
+    }
+
+    #[test]
+    fn repair_skips_if_writer_moved_on() {
+        let mut w = world();
+        w.preload(1, 16);
+        let key = crate::ycsb::key_of(0);
+        let (_, torn_off, _) = w.server.write_request(&mut w.nvm, &key, 64);
+        // Another writer completes a newer update.
+        let obj3 = object::encode_object(&key, b"fresh");
+        let (_, _, addr3) = w.server.write_request(&mut w.nvm, &key, obj3.len());
+        w.nvm.write(addr3, &obj3);
+        assert!(!w.server.repair(&mut w.nvm, &key, torn_off), "stale repair ignored");
+        assert_eq!(w.get(&key).unwrap(), b"fresh");
+    }
+
+    #[test]
+    fn neighborhood_parse_finds_key() {
+        let mut w = world();
+        w.preload(20, 16);
+        let key = crate::ycsb::key_of(7);
+        let (addr, len) = w.server.neighborhood_addr(&key);
+        let bytes = w.nvm.read_vec(addr, len);
+        let e = ErdaServer::parse_neighborhood(&bytes, &key).expect("found");
+        assert_eq!(e.key, key);
+    }
+
+    #[test]
+    fn delete_via_write_request_hides_key() {
+        let mut w = world();
+        w.preload(1, 16);
+        let key = crate::ycsb::key_of(0);
+        let obj = object::encode_delete(&key);
+        let (_, off, addr) = w.server.write_request(&mut w.nvm, &key, obj.len());
+        w.nvm.write(addr, &obj);
+        assert!(w.get(&key).is_none(), "deleted object reads as absent");
+    }
+}

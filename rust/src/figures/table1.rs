@@ -1,0 +1,186 @@
+//! Table 1: the number of NVM writes (bytes) for create / update / delete
+//! under each scheme — *measured* from the NVM simulator's DCW-counted
+//! programmed-byte accounting, next to the paper's formulas.
+//!
+//! Codec note: our object header carries explicit `klen`/`vlen` fields
+//! (3 bytes) that the paper's 5-byte header leaves implicit, and the hash
+//! entry stores a 1-byte key length; measured values therefore sit a small
+//! constant above the formulas while preserving the headline: Erda writes
+//! roughly half the bytes of Redo Logging / Read After Write for create and
+//! update, because it never writes the object twice.
+
+use std::collections::VecDeque;
+
+use super::Rendered;
+use crate::baselines::{
+    ApplierActor, ApplierConfig, BaselineClient, BaselineOpSource, BaselineWorld, Scheme,
+};
+use crate::erda::{ClientConfig, ErdaClient, ErdaWorld, OpSource, ScriptOp};
+use crate::log::LogConfig;
+use crate::nvm::NvmConfig;
+use crate::sim::{Engine, Timing};
+use crate::workload::SchemeSel;
+use crate::ycsb::key_of;
+
+/// Value size used for the measurement (N in the paper = key + value bytes).
+const VALUE: usize = 256;
+
+fn log_cfg() -> LogConfig {
+    LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 }
+}
+
+/// Run one scripted op against a fresh Erda world; return programmed bytes.
+fn erda_op_bytes(op: ScriptOp, preload_key: bool) -> u64 {
+    let mut w = ErdaWorld::new(
+        Timing::default(),
+        NvmConfig { capacity: 16 << 20 },
+        log_cfg(),
+        1 << 10,
+    );
+    if preload_key {
+        w.preload(1, VALUE);
+    }
+    w.nvm.reset_stats();
+    w.counters.active_clients = 1;
+    let mut engine = Engine::new(w);
+    let client = ErdaClient::new(
+        OpSource::Script(VecDeque::from(vec![op])),
+        1,
+        ClientConfig { max_value: VALUE, ..ClientConfig::default() },
+    );
+    engine.spawn(Box::new(client), 0);
+    engine.run();
+    engine.state.settle();
+    engine.state.nvm.stats().programmed_bytes
+}
+
+/// Run one scripted op against a fresh baseline world (applier included);
+/// return programmed bytes after the async apply drains.
+fn baseline_op_bytes(scheme: Scheme, op: ScriptOp, preload_key: bool) -> u64 {
+    let mut w = BaselineWorld::new(
+        Timing::default(),
+        NvmConfig { capacity: 16 << 20 },
+        scheme,
+        1 << 10,
+        1 << 18,
+        1 << 13,
+        crate::log::object::wire_size(24, VALUE),
+    );
+    if preload_key {
+        w.preload(1, VALUE);
+    }
+    w.nvm.reset_stats();
+    w.counters.active_clients = 1;
+    let mut engine = Engine::new(w);
+    let client = BaselineClient::new(BaselineOpSource::Script(VecDeque::from(vec![op])), 1);
+    engine.spawn(Box::new(client), 0);
+    engine.spawn(Box::new(ApplierActor::new(ApplierConfig::default())), 0);
+    engine.run();
+    engine.state.settle();
+    engine.state.nvm.stats().programmed_bytes
+}
+
+fn ops_for(create: bool, delete: bool) -> ScriptOp {
+    // Create uses a key outside the preloaded range; update/delete use it.
+    let key = if create { key_of(500) } else { key_of(0) };
+    if delete {
+        ScriptOp::Delete { key }
+    } else {
+        ScriptOp::Update { key, value: vec![0x3Cu8; VALUE] }
+    }
+}
+
+/// Paper formulas (bytes), N = size of the key-value pair.
+fn paper_formula(scheme: SchemeSel, op: &str, key_len: u64, n: u64) -> (String, u64) {
+    match (scheme, op) {
+        (SchemeSel::Erda, "create") => ("Size(key)+10+N".into(), key_len + 10 + n),
+        (SchemeSel::Erda, "update") => ("9+N".into(), 9 + n),
+        (SchemeSel::Erda, "delete") => ("Size(key)+9".into(), key_len + 9),
+        (_, "create") => ("Size(key)+12+2N".into(), key_len + 12 + 2 * n),
+        (_, "update") => ("4+2N".into(), 4 + 2 * n),
+        (_, "delete") => ("Size(key)+8".into(), key_len + 8),
+        _ => unreachable!(),
+    }
+}
+
+/// Build Table 1.
+pub fn table1() -> Rendered {
+    let key_len = key_of(0).len() as u64; // 20 bytes
+    let n = key_len + VALUE as u64;
+
+    let mut rows = Vec::new();
+    for (op, create, delete) in
+        [("create", true, false), ("update", false, false), ("delete", false, true)]
+    {
+        for scheme in SchemeSel::ALL {
+            let measured = match scheme {
+                SchemeSel::Erda => erda_op_bytes(ops_for(create, delete), !create),
+                SchemeSel::RedoLogging => {
+                    baseline_op_bytes(Scheme::RedoLogging, ops_for(create, delete), !create)
+                }
+                SchemeSel::ReadAfterWrite => {
+                    baseline_op_bytes(Scheme::ReadAfterWrite, ops_for(create, delete), !create)
+                }
+            };
+            let (formula, expect) = paper_formula(scheme, op, key_len, n);
+            rows.push(vec![
+                op.to_string(),
+                scheme.label().to_string(),
+                measured.to_string(),
+                expect.to_string(),
+                formula,
+            ]);
+        }
+    }
+    Rendered {
+        id: "table1_nvm_writes".into(),
+        title: format!(
+            "NVM writes (bytes) per operation; key = {key_len} B, value = {VALUE} B, N = {n} B"
+        ),
+        header: vec![
+            "op".into(),
+            "scheme".into(),
+            "measured_bytes".into(),
+            "paper_formula_bytes".into(),
+            "paper_formula".into(),
+        ],
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shapes_hold() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 9);
+        let get = |op: &str, scheme: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == op && r[1].contains(scheme))
+                .map(|r| r[2].parse().unwrap())
+                .unwrap()
+        };
+        // Headline: baselines ≈ 2× Erda for create and update.
+        for op in ["create", "update"] {
+            let e = get(op, "Erda");
+            let rd = get(op, "Redo");
+            let rw = get(op, "Read After");
+            assert!((1.6..2.4).contains(&(rd / e)), "{op}: redo/erda = {}", rd / e);
+            assert!((1.6..2.4).contains(&(rw / e)), "{op}: raw/erda = {}", rw / e);
+        }
+        // Measured within a small constant of the paper formulas.
+        for r in &t.rows {
+            let measured: f64 = r[2].parse().unwrap();
+            let expect: f64 = r[3].parse().unwrap();
+            assert!(
+                (measured - expect).abs() <= 40.0,
+                "{} {}: measured {measured} vs formula {expect}",
+                r[0],
+                r[1]
+            );
+        }
+    }
+}

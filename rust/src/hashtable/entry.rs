@@ -1,0 +1,266 @@
+//! Entry codec + the 8-byte atomic region bit layout.
+//!
+//! NVM layout of one entry (40 bytes, 8-aligned):
+//! ```text
+//! 0..24   key bytes, zero-padded (DCW: only klen bytes ever programmed)
+//! 24      klen (u8)
+//! 25      head ID (u8)
+//! 26..32  padding (never written)
+//! 32..40  the 8-byte atomic write region
+//! ```
+//! Atomic region bits: `[63] new-tag | [62:32] offset-A | [31:1] offset-B |
+//! [0] reserved`. `new-tag = 1` → offset-A is the latest version and
+//! offset-B the previous one; `new-tag = 0` → the reverse.
+
+use crate::log::{LogOffset, NO_OFFSET};
+use crate::nvm::{Addr, Nvm};
+
+/// Entry footprint in NVM.
+pub const ENTRY_SIZE: usize = 40;
+/// Offset of the atomic region within an entry.
+pub const ATOMIC_OFF: u64 = 32;
+/// Max key bytes an entry can hold (matches log::object::MAX_KEY).
+pub const ENTRY_KEY_CAP: usize = 24;
+
+const OFF_MASK: u64 = 0x7FFF_FFFF;
+
+/// Decoded 8-byte atomic region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AtomicRegion {
+    pub new_tag: bool,
+    pub off_a: LogOffset,
+    pub off_b: LogOffset,
+}
+
+impl AtomicRegion {
+    /// Fresh region: first version lands in offset-A with the tag set.
+    pub fn initial(first: LogOffset) -> Self {
+        AtomicRegion { new_tag: true, off_a: first, off_b: NO_OFFSET }
+    }
+
+    pub fn pack(self) -> u64 {
+        debug_assert!(self.off_a <= OFF_MASK as u32 && self.off_b <= OFF_MASK as u32);
+        ((self.new_tag as u64) << 63)
+            | ((self.off_a as u64 & OFF_MASK) << 32)
+            | ((self.off_b as u64 & OFF_MASK) << 1)
+    }
+
+    pub fn unpack(v: u64) -> Self {
+        AtomicRegion {
+            new_tag: v >> 63 != 0,
+            off_a: ((v >> 32) & OFF_MASK) as LogOffset,
+            off_b: ((v >> 1) & OFF_MASK) as LogOffset,
+        }
+    }
+
+    /// The latest-version offset (selected by the tag).
+    pub fn newest(&self) -> LogOffset {
+        if self.new_tag {
+            self.off_a
+        } else {
+            self.off_b
+        }
+    }
+
+    /// The previous-version offset (the undo pointer).
+    pub fn oldest(&self) -> LogOffset {
+        if self.new_tag {
+            self.off_b
+        } else {
+            self.off_a
+        }
+    }
+
+    /// Normal-mode update (§4.1): flip the tag and write `fresh` into the
+    /// slot the *new* tag selects. The old newest becomes the undo pointer.
+    pub fn updated(self, fresh: LogOffset) -> Self {
+        let tag = !self.new_tag;
+        if tag {
+            AtomicRegion { new_tag: true, off_a: fresh, off_b: self.off_b }
+        } else {
+            AtomicRegion { new_tag: false, off_a: self.off_a, off_b: fresh }
+        }
+    }
+
+    /// Cleaning-mode client write during the *merge* phase: the new object
+    /// is appended to Region 1 and the new-offset slot is replaced in place
+    /// — the tag is NOT flipped (§4.4, Figs 10–11).
+    pub fn replaced_newest(self, fresh: LogOffset) -> Self {
+        if self.new_tag {
+            AtomicRegion { off_a: fresh, ..self }
+        } else {
+            AtomicRegion { off_b: fresh, ..self }
+        }
+    }
+
+    /// Cleaning-mode update (§4.4, Figs 10–11): do NOT flip the tag; the
+    /// old-offset slot carries the Region-2 address during cleaning.
+    pub fn updated_no_flip(self, region2_off: LogOffset) -> Self {
+        if self.new_tag {
+            AtomicRegion { off_b: region2_off, ..self }
+        } else {
+            AtomicRegion { off_a: region2_off, ..self }
+        }
+    }
+
+    /// Repair after a detected torn write (§4.2): replace the newest offset
+    /// with the old one so subsequent accesses read the consistent version.
+    pub fn rolled_back(self) -> Self {
+        let old = self.oldest();
+        if self.new_tag {
+            AtomicRegion { off_a: old, ..self }
+        } else {
+            AtomicRegion { off_b: old, ..self }
+        }
+    }
+}
+
+/// A decoded entry (what a client's first RDMA read returns).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EntryView {
+    pub key: Vec<u8>,
+    pub head_id: u8,
+    pub atomic: AtomicRegion,
+}
+
+/// Write a brand-new entry at `addr` (create path). Key + klen + head first,
+/// the atomic region last — the 8-byte atomic store publishes the entry.
+pub fn write_new(nvm: &mut Nvm, addr: Addr, key: &[u8], head_id: u8, region: AtomicRegion) {
+    assert!(!key.is_empty() && key.len() <= ENTRY_KEY_CAP);
+    nvm.write(addr, key);
+    nvm.write(addr + 24, &[key.len() as u8, head_id]);
+    nvm.write_atomic8(addr + ATOMIC_OFF, region.pack());
+}
+
+/// Atomically replace the 8-byte region of the entry at `addr`.
+pub fn write_atomic(nvm: &mut Nvm, addr: Addr, region: AtomicRegion) {
+    nvm.write_atomic8(addr + ATOMIC_OFF, region.pack());
+}
+
+/// Clear an entry (cleaning reclaims a deleted key's slot).
+pub fn clear(nvm: &mut Nvm, addr: Addr) {
+    nvm.write(addr, &[0u8; ENTRY_SIZE]);
+}
+
+/// Decode an entry from raw bytes (used by clients on RDMA-read data and by
+/// the server locally).
+pub fn decode(bytes: &[u8]) -> Option<EntryView> {
+    if bytes.len() < ENTRY_SIZE {
+        return None;
+    }
+    let klen = bytes[24] as usize;
+    if klen == 0 || klen > ENTRY_KEY_CAP {
+        return None; // empty slot or garbage
+    }
+    let atomic = AtomicRegion::unpack(u64::from_le_bytes(
+        bytes[32..40].try_into().expect("8 bytes"),
+    ));
+    Some(EntryView { key: bytes[..klen].to_vec(), head_id: bytes[25], atomic })
+}
+
+/// Read + decode the entry at `addr` from NVM (server-local path).
+pub fn read(nvm: &Nvm, addr: Addr) -> Option<EntryView> {
+    decode(nvm.read(addr, ENTRY_SIZE))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvm::NvmConfig;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (tag, a, b) in [(true, 0, NO_OFFSET), (false, 123, 456), (true, OFF_MASK as u32, 0)] {
+            let r = AtomicRegion { new_tag: tag, off_a: a, off_b: b };
+            assert_eq!(AtomicRegion::unpack(r.pack()), r);
+        }
+    }
+
+    #[test]
+    fn initial_points_a_with_no_undo() {
+        let r = AtomicRegion::initial(77);
+        assert_eq!(r.newest(), 77);
+        assert_eq!(r.oldest(), NO_OFFSET);
+    }
+
+    #[test]
+    fn update_flips_and_keeps_undo() {
+        let r0 = AtomicRegion::initial(10);
+        let r1 = r0.updated(20);
+        assert!(!r1.new_tag);
+        assert_eq!(r1.newest(), 20);
+        assert_eq!(r1.oldest(), 10);
+        let r2 = r1.updated(30);
+        assert!(r2.new_tag);
+        assert_eq!(r2.newest(), 30);
+        assert_eq!(r2.oldest(), 20);
+    }
+
+    #[test]
+    fn no_flip_update_writes_old_slot() {
+        let r = AtomicRegion::initial(10); // tag=1, newest in A
+        let c = r.updated_no_flip(99);
+        assert!(c.new_tag, "cleaning must not flip");
+        assert_eq!(c.newest(), 10, "new offset region still serves reads");
+        assert_eq!(c.oldest(), 99, "old offset region carries Region 2");
+    }
+
+    #[test]
+    fn rollback_restores_old_version() {
+        let r = AtomicRegion::initial(10).updated(20);
+        let fixed = r.rolled_back();
+        assert_eq!(fixed.newest(), 10);
+    }
+
+    #[test]
+    fn entry_write_read_roundtrip() {
+        let mut nvm = Nvm::new(NvmConfig { capacity: 4096 });
+        let addr = nvm.alloc(ENTRY_SIZE);
+        let r = AtomicRegion::initial(42);
+        write_new(&mut nvm, addr, b"user7", 3, r);
+        let v = read(&nvm, addr).expect("valid entry");
+        assert_eq!(v.key, b"user7");
+        assert_eq!(v.head_id, 3);
+        assert_eq!(v.atomic, r);
+    }
+
+    #[test]
+    fn empty_slot_decodes_none() {
+        let mut nvm = Nvm::new(NvmConfig { capacity: 4096 });
+        let addr = nvm.alloc(ENTRY_SIZE);
+        assert!(read(&nvm, addr).is_none());
+        write_new(&mut nvm, addr, b"x", 0, AtomicRegion::initial(0));
+        assert!(read(&nvm, addr).is_some());
+        clear(&mut nvm, addr);
+        assert!(read(&nvm, addr).is_none());
+    }
+
+    #[test]
+    fn create_programs_key_plus_head_plus_half_region() {
+        // Paper Table 1: create metadata ≈ Size(key) + 1 (head) + 4 (tag+off).
+        let mut nvm = Nvm::new(NvmConfig { capacity: 4096 });
+        let addr = nvm.alloc(ENTRY_SIZE);
+        let before = nvm.stats();
+        write_new(&mut nvm, addr, b"user123", 0, AtomicRegion::initial(64));
+        let d = nvm.stats().since(&before);
+        // key(7) + klen(1) + head(0 -> DCW skips) + atomic(<=5 with NO_OFFSET in B)
+        assert!(
+            (10..=14).contains(&d.programmed_bytes),
+            "programmed {} bytes",
+            d.programmed_bytes
+        );
+    }
+
+    #[test]
+    fn update_programs_about_4_bytes() {
+        // Paper Table 1: update metadata = new tag + one offset ≈ 4 bytes.
+        let mut nvm = Nvm::new(NvmConfig { capacity: 4096 });
+        let addr = nvm.alloc(ENTRY_SIZE);
+        let r0 = AtomicRegion::initial(1000);
+        write_new(&mut nvm, addr, b"user123", 0, r0);
+        let before = nvm.stats();
+        write_atomic(&mut nvm, addr, r0.updated(2000));
+        let d = nvm.stats().since(&before);
+        assert!(d.programmed_bytes <= 5, "programmed {} bytes", d.programmed_bytes);
+    }
+}

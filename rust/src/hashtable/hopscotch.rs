@@ -1,0 +1,358 @@
+//! Hopscotch hashing [10] over the NVM entry array.
+//!
+//! Each bucket owns a neighborhood of `HOP_RANGE` consecutive slots; a key
+//! hashing to bucket `b` is stored within `[b, b + HOP_RANGE)`, so lookups
+//! touch one small contiguous window — the property the paper cites for
+//! RDMA-friendliness (a client fetches all candidates with ONE read).
+//! Inserts displace items backwards to open a slot inside the neighborhood.
+//!
+//! The table is allocated with `HOP_RANGE` spillover slots past the last
+//! bucket so neighborhoods never wrap: a wrapped neighborhood would not be
+//! a contiguous RDMA window, and a client reading `[b, b+H)` would miss
+//! wrapped keys (a bug this reproduction hit at ~50 % load before switching
+//! to the spillover layout).
+//!
+//! NVM holds the entries themselves; hop bitmaps/occupancy are volatile
+//! DRAM bookkeeping, rebuilt from the stored keys on recovery.
+
+use super::entry::{self, AtomicRegion, EntryView, ENTRY_SIZE};
+use crate::crc::fnv1a;
+use crate::nvm::{Addr, Nvm};
+
+/// Neighborhood size (classic hopscotch default).
+pub const HOP_RANGE: usize = 16;
+
+/// The metadata hash table.
+pub struct HashTable {
+    base: Addr,
+    /// Number of home buckets (power of two); the slot array additionally
+    /// has HOP_RANGE spillover slots.
+    cap: usize,
+    /// Total slots = cap + HOP_RANGE.
+    slots: usize,
+    /// Volatile hop-info: bit i of `hop[b]` ⇒ slot (b+i) holds a key whose
+    /// home bucket is b.
+    hop: Vec<u16>,
+    /// Volatile occupancy.
+    used: Vec<bool>,
+    len: usize,
+}
+
+impl HashTable {
+    /// Allocate a table of `cap` home buckets (power of two) in NVM.
+    pub fn new(nvm: &mut Nvm, cap: usize) -> Self {
+        assert!(cap.is_power_of_two(), "capacity must be a power of two");
+        assert!(cap >= HOP_RANGE);
+        let slots = cap + HOP_RANGE;
+        let base = nvm.alloc(slots * ENTRY_SIZE);
+        HashTable { base, cap, slots, hop: vec![0; cap], used: vec![false; slots], len: 0 }
+    }
+
+    /// Home bucket of `key` — FNV-1a-32, bit-identical to the L1 kernel.
+    #[inline]
+    pub fn bucket(&self, key: &[u8]) -> usize {
+        fnv1a(key) as usize & (self.cap - 1)
+    }
+
+    /// NVM address of slot `i` (what clients RDMA-read).
+    #[inline]
+    pub fn slot_addr(&self, i: usize) -> Addr {
+        self.base + (i * ENTRY_SIZE) as Addr
+    }
+
+    /// NVM base (for MR registration in the fabric).
+    pub fn base(&self) -> Addr {
+        self.base
+    }
+
+    /// Home-bucket count.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total slots incl. the non-wrapping spillover.
+    pub fn total_slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Find the slot holding `key`, if present.
+    pub fn lookup(&self, nvm: &Nvm, key: &[u8]) -> Option<usize> {
+        let b = self.bucket(key);
+        let mut bits = self.hop[b];
+        while bits != 0 {
+            let i = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let slot = b + i;
+            if let Some(v) = entry::read(nvm, self.slot_addr(slot)) {
+                if v.key == key {
+                    return Some(slot);
+                }
+            }
+        }
+        None
+    }
+
+    /// Read the decoded entry at `slot`.
+    pub fn read_entry(&self, nvm: &Nvm, slot: usize) -> Option<EntryView> {
+        entry::read(nvm, self.slot_addr(slot))
+    }
+
+    /// Insert a new key (must not exist). Returns the slot, or `None` if the
+    /// table is full / displacement failed (resize is out of scope — sims
+    /// size the table up front, as the paper does).
+    pub fn insert(
+        &mut self,
+        nvm: &mut Nvm,
+        key: &[u8],
+        head_id: u8,
+        region: AtomicRegion,
+    ) -> Option<usize> {
+        debug_assert!(self.lookup(nvm, key).is_none(), "duplicate insert");
+        let b = self.bucket(key);
+        // Linear-probe forward for any free slot (no wrap).
+        let (mut slot, mut dist) = (0..self.slots - b)
+            .map(|d| (b + d, d))
+            .find(|&(s, _)| !self.used[s])?;
+        // Hop the free slot backwards until it lands in the neighborhood.
+        while dist >= HOP_RANGE {
+            match self.displace_into(nvm, slot) {
+                Some(new_slot) => {
+                    dist -= slot - new_slot;
+                    slot = new_slot;
+                }
+                None => return None, // no movable candidate: table too dense
+            }
+        }
+        entry::write_new(nvm, self.slot_addr(slot), key, head_id, region);
+        self.used[slot] = true;
+        self.hop[b] |= 1 << (slot - b);
+        self.len += 1;
+        Some(slot)
+    }
+
+    /// Classic hopscotch displacement: find an item in the HOP_RANGE-1 slots
+    /// before `free` that may legally move into `free`; move it; return the
+    /// slot it vacated.
+    fn displace_into(&mut self, nvm: &mut Nvm, free: usize) -> Option<usize> {
+        for back in (1..HOP_RANGE).rev() {
+            if back > free {
+                continue;
+            }
+            let candidate_home = free - back;
+            if candidate_home >= self.cap {
+                continue; // spillover slots are not home buckets
+            }
+            let mut bits = self.hop[candidate_home];
+            while bits != 0 {
+                let i = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                if i >= back {
+                    continue; // at/after the free slot
+                }
+                let from = candidate_home + i;
+                // Move NVM entry from `from` to `free`.
+                let bytes = nvm.read_vec(self.slot_addr(from), ENTRY_SIZE);
+                nvm.write(self.slot_addr(free), &bytes);
+                entry::clear(nvm, self.slot_addr(from));
+                self.used[free] = true;
+                self.used[from] = false;
+                self.hop[candidate_home] &= !(1 << i);
+                self.hop[candidate_home] |= 1 << back;
+                return Some(from);
+            }
+        }
+        None
+    }
+
+    /// Atomically update the 8-byte region of the entry at `slot`.
+    pub fn update_region(&mut self, nvm: &mut Nvm, slot: usize, region: AtomicRegion) {
+        debug_assert!(self.used[slot]);
+        entry::write_atomic(nvm, self.slot_addr(slot), region);
+    }
+
+    /// Remove the key at `slot` (cleaning reclaims deleted keys).
+    pub fn remove(&mut self, nvm: &mut Nvm, slot: usize) {
+        let v = entry::read(nvm, self.slot_addr(slot)).expect("removing a live entry");
+        let b = self.bucket(&v.key);
+        debug_assert!(slot >= b && slot - b < HOP_RANGE);
+        self.hop[b] &= !(1 << (slot - b));
+        self.used[slot] = false;
+        self.len -= 1;
+        entry::clear(nvm, self.slot_addr(slot));
+    }
+
+    /// Rebuild volatile hop/occupancy bookkeeping by scanning NVM (recovery).
+    pub fn rebuild_volatile(&mut self, nvm: &Nvm) {
+        self.hop = vec![0; self.cap];
+        self.used = vec![false; self.slots];
+        self.len = 0;
+        for s in 0..self.slots {
+            if let Some(v) = entry::read(nvm, self.slot_addr(s)) {
+                let b = self.bucket(&v.key);
+                debug_assert!(s >= b && s - b < HOP_RANGE, "entry outside neighborhood");
+                self.hop[b] |= 1 << (s - b);
+                self.used[s] = true;
+                self.len += 1;
+            }
+        }
+    }
+
+    /// Iterate live slots (cleaner + recovery).
+    pub fn live_slots<'a>(&'a self) -> impl Iterator<Item = usize> + 'a {
+        (0..self.slots).filter(move |&s| self.used[s])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::log::NO_OFFSET;
+    use crate::nvm::NvmConfig;
+    use crate::sim::Rng;
+
+    fn setup(cap: usize) -> (HashTable, Nvm) {
+        let mut nvm = Nvm::new(NvmConfig { capacity: 8 << 20 });
+        let t = HashTable::new(&mut nvm, cap);
+        (t, nvm)
+    }
+
+    #[test]
+    fn insert_lookup_roundtrip() {
+        let (mut t, mut nvm) = setup(64);
+        let slot = t.insert(&mut nvm, b"alpha", 2, AtomicRegion::initial(5)).unwrap();
+        assert_eq!(t.lookup(&nvm, b"alpha"), Some(slot));
+        let v = t.read_entry(&nvm, slot).unwrap();
+        assert_eq!(v.head_id, 2);
+        assert_eq!(v.atomic.newest(), 5);
+        assert_eq!(t.lookup(&nvm, b"beta"), None);
+    }
+
+    #[test]
+    fn update_region_changes_offsets() {
+        let (mut t, mut nvm) = setup(64);
+        let slot = t.insert(&mut nvm, b"k", 0, AtomicRegion::initial(10)).unwrap();
+        let r = t.read_entry(&nvm, slot).unwrap().atomic;
+        t.update_region(&mut nvm, slot, r.updated(20));
+        let r2 = t.read_entry(&nvm, slot).unwrap().atomic;
+        assert_eq!(r2.newest(), 20);
+        assert_eq!(r2.oldest(), 10);
+    }
+
+    #[test]
+    fn many_keys_with_displacement() {
+        let (mut t, mut nvm) = setup(256);
+        let n = 200; // ~78% load factor forces displacements
+        for i in 0..n {
+            let key = format!("user{i:04}");
+            assert!(
+                t.insert(&mut nvm, key.as_bytes(), 0, AtomicRegion::initial(i)).is_some(),
+                "insert {i} failed"
+            );
+        }
+        assert_eq!(t.len(), n as usize);
+        for i in 0..n {
+            let key = format!("user{i:04}");
+            let slot = t.lookup(&nvm, key.as_bytes()).unwrap_or_else(|| panic!("lost {key}"));
+            let v = t.read_entry(&nvm, slot).unwrap();
+            assert_eq!(v.atomic.newest(), i, "key {key} points at wrong offset");
+            // Hopscotch invariant: entry within HOP_RANGE of its home bucket,
+            // with no wraparound (contiguous RDMA window).
+            let b = t.bucket(key.as_bytes());
+            assert!(slot >= b && slot - b < HOP_RANGE, "{key} at slot {slot}, home {b}");
+        }
+    }
+
+    #[test]
+    fn neighborhoods_never_wrap() {
+        // Dense fill: every key's slot must stay inside [home, home + H),
+        // even for home buckets at the very end of the table (spillover).
+        let (mut t, mut nvm) = setup(64);
+        let mut inserted = Vec::new();
+        for i in 0..1000 {
+            let key = format!("wrap{i:05}");
+            if t.len() >= 60 {
+                break;
+            }
+            if t.insert(&mut nvm, key.as_bytes(), 0, AtomicRegion::initial(i)).is_some() {
+                inserted.push(key);
+            }
+        }
+        for key in &inserted {
+            let slot = t.lookup(&nvm, key.as_bytes()).expect("present");
+            let b = t.bucket(key.as_bytes());
+            assert!(slot >= b && slot - b < HOP_RANGE);
+            assert!(slot < t.total_slots());
+        }
+    }
+
+    #[test]
+    fn remove_frees_slot() {
+        let (mut t, mut nvm) = setup(64);
+        let slot = t.insert(&mut nvm, b"gone", 0, AtomicRegion::initial(1)).unwrap();
+        t.remove(&mut nvm, slot);
+        assert_eq!(t.lookup(&nvm, b"gone"), None);
+        assert_eq!(t.len(), 0);
+        // Slot is reusable.
+        assert!(t.insert(&mut nvm, b"gone", 0, AtomicRegion::initial(2)).is_some());
+    }
+
+    #[test]
+    fn rebuild_volatile_matches_original() {
+        let (mut t, mut nvm) = setup(128);
+        let mut rng = Rng::new(77);
+        for i in 0..90 {
+            let mut key = vec![0u8; 8 + (rng.gen_range(8) as usize)];
+            rng.fill_bytes(&mut key);
+            key.iter_mut().for_each(|b| *b = b'a' + (*b % 26)); // printable, non-zero
+            key.extend_from_slice(format!("{i}").as_bytes()); // ensure unique
+            if t.lookup(&nvm, &key).is_none() {
+                t.insert(&mut nvm, &key, 1, AtomicRegion::initial(i)).unwrap();
+            }
+        }
+        let len = t.len();
+        let hop = t.hop.clone();
+        let used = t.used.clone();
+        t.rebuild_volatile(&nvm);
+        assert_eq!(t.len(), len);
+        assert_eq!(t.hop, hop);
+        assert_eq!(t.used, used);
+    }
+
+    #[test]
+    fn initial_region_has_no_old_version() {
+        let (mut t, mut nvm) = setup(64);
+        let slot = t.insert(&mut nvm, b"fresh", 0, AtomicRegion::initial(0)).unwrap();
+        assert_eq!(t.read_entry(&nvm, slot).unwrap().atomic.oldest(), NO_OFFSET);
+    }
+
+    #[test]
+    fn high_load_lookup_after_displacement_storm() {
+        // 87% load on a bigger table: worst-case displacement chains.
+        let (mut t, mut nvm) = setup(1 << 12);
+        let n = ((1 << 12) as f64 * 0.87) as u32;
+        let mut ok = 0;
+        for i in 0..n {
+            let key = format!("user{i:016}");
+            if t.insert(&mut nvm, key.as_bytes(), 0, AtomicRegion::initial(i)).is_some() {
+                ok += 1;
+            }
+        }
+        assert!(ok as f64 > n as f64 * 0.99, "only {ok}/{n} inserted");
+        let mut found = 0;
+        for i in 0..n {
+            let key = format!("user{i:016}");
+            if t.lookup(&nvm, key.as_bytes()).is_some() {
+                found += 1;
+            }
+        }
+        assert_eq!(found, ok, "inserted keys must all be findable");
+    }
+}

@@ -1,0 +1,22 @@
+//! Metadata hash table (§3.2.3, Fig 6) — hopscotch hashing over NVM.
+//!
+//! Every entry stores the object key, the head ID, and the paper's **8-byte
+//! atomic write region**: `[new-tag 1b | offset-A 31b | offset-B 31b |
+//! reserved 1b]`. The new-tag says which 31-bit field holds the *latest*
+//! log offset; the other holds the previous version (the built-in undo
+//! pointer that makes client-side fallback and server recovery possible).
+//! Updates flip the tag and write the fresh offset into the slot selected
+//! by the *new* tag value (§4.1, "flexible flip bit") — under DCW only the
+//! tag bit and one offset change, ≈4 bytes programmed instead of rewriting
+//! both offsets.
+//!
+//! The paper indexes with hopscotch hashing [10] (key-value metadata sits in
+//! a small contiguous neighborhood — one RDMA read fetches the whole
+//! candidate window). Hop-info bitmaps and occupancy are *volatile* DRAM
+//! bookkeeping, reconstructible from the NVM-resident keys on recovery.
+
+pub mod entry;
+pub mod hopscotch;
+
+pub use entry::{AtomicRegion, EntryView, ENTRY_SIZE};
+pub use hopscotch::{HashTable, HOP_RANGE};

@@ -1,0 +1,45 @@
+//! # Erda — Write-Optimized and Consistent RDMA-based NVM Systems
+//!
+//! A full reproduction of the Erda system (Liu, Hua, Li, Liu — 2019) as the
+//! L3 coordinator of a three-layer Rust + JAX + Pallas stack. Python runs
+//! only at build time (`make artifacts`); this crate is self-contained at
+//! runtime and loads the AOT-compiled batch-verification artifacts through
+//! the PJRT CPU client (`runtime` module).
+//!
+//! Layout (see DESIGN.md for the full inventory):
+//!
+//! - [`sim`] — deterministic discrete-event simulation core (virtual clock,
+//!   actors, c-server queueing resources, seeded RNG, timing calibration).
+//! - [`nvm`] — byte-addressable NVM simulator: 8-byte failure atomicity,
+//!   data-comparison-write accounting, crash semantics.
+//! - [`rdma`] — RDMA fabric simulator: one-sided read/write/write_with_imm,
+//!   two-sided send/recv, volatile NIC cache, failure injection.
+//! - [`crc`] — CRC32 (IEEE reflected), bytewise + slice-by-8; bit-identical
+//!   to the L1 Pallas kernel.
+//! - [`hashtable`] — hopscotch metadata hash table over NVM with the paper's
+//!   8-byte atomic entry region (flip bit + new/old offsets).
+//! - [`log`] — log-structured object store: head array, linked regions,
+//!   segments, object codec, lock-free log cleaning.
+//! - [`erda`] — the Erda protocol: client/server state machines, consistency
+//!   detection, client-driven repair, server crash recovery.
+//! - [`baselines`] — Redo Logging and Read After Write comparators (§5.1).
+//! - [`ycsb`] — YCSB-style workload generation (Zipfian 0.99).
+//! - [`metrics`] — latency/throughput/CPU/NVM-write accounting.
+//! - [`runtime`] — PJRT artifact loading + batch CRC/hash execution.
+//! - [`figures`] — regeneration harness for every paper figure and table.
+
+pub mod baselines;
+pub mod bench_util;
+pub mod cli;
+pub mod crc;
+pub mod erda;
+pub mod figures;
+pub mod hashtable;
+pub mod log;
+pub mod metrics;
+pub mod nvm;
+pub mod rdma;
+pub mod runtime;
+pub mod sim;
+pub mod workload;
+pub mod ycsb;

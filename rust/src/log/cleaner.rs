@@ -1,0 +1,196 @@
+//! Lock-free log cleaning state (§4.4, Figs 9–13) — the pure bookkeeping.
+//!
+//! Cleaning of one head proceeds in two phases:
+//!
+//! 1. **Merge** — reverse-scan Region 1 from the last written address at
+//!    cleaning start. The first occurrence of a key is its newest version in
+//!    the merge window and is copied to Region 2; later (= older) versions
+//!    are skipped; deleted objects are dropped (and their entries freed).
+//! 2. **Replication** — objects appended by clients *during* the merge
+//!    (between the snapshot boundary and the merge end) are copied into a
+//!    space reserved in Region 2; writes arriving during replication go to
+//!    Region 2 directly, past the reserved area.
+//!
+//! Throughout, the entry's **new tag is never flipped**: the new-offset slot
+//! keeps serving Region-1 addresses while the old-offset slot accumulates
+//! Region-2 addresses (Figs 10–11). Completion swings the head pointer to
+//! Region 2 and flips the tags of every carried entry in one pass (Figs
+//! 12–13). The driving actor lives in `erda::cleaner`; this module only
+//! holds the state and the pure transition helpers so they can be tested in
+//! isolation.
+
+use std::collections::HashSet;
+
+use super::store::{Chain, LogOffset};
+
+/// Which phase the cleaner is in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Clients have been notified; merge starts after the notification
+    /// window (one maximum RTT, §4.4).
+    Notify,
+    Merge,
+    Replicate,
+}
+
+/// Cleaning state for one head.
+#[derive(Debug)]
+pub struct CleaningState {
+    pub phase: Phase,
+    /// Region 2: the chain being compacted into.
+    pub region2: Chain,
+    /// Snapshot of Region 1's append index at cleaning start; merge scans
+    /// it in reverse.
+    pub merge_snapshot: Vec<(LogOffset, u32)>,
+    /// How many snapshot entries remain to merge (we pop from the back).
+    pub merge_remaining: usize,
+    /// Keys whose newest merge-window version was already carried.
+    pub seen: HashSet<Vec<u8>>,
+    /// Number of Region-1 index entries that existed at cleaning start —
+    /// everything past this was appended during merge and needs replication.
+    pub boundary: usize,
+    /// Replication work list: (region1 offset, len, pre-reserved region2
+    /// offset) for each object appended during the merge phase.
+    pub repl_set: Vec<(LogOffset, u32, LogOffset)>,
+    pub repl_remaining: usize,
+    /// End of the reserved replication area in Region 2: old-offset values
+    /// greater than this were written by clients during replication and are
+    /// the latest version (§4.4's read disambiguation rule).
+    pub reserved_end: LogOffset,
+    /// Keys whose old-offset slot currently holds a Region-2 address —
+    /// exactly the entries whose tag must flip at completion.
+    pub carried: HashSet<Vec<u8>>,
+}
+
+impl CleaningState {
+    /// Start cleaning: snapshot Region 1's index, allocate Region 2.
+    pub fn start(region1_index: &[(LogOffset, u32)], region2: Chain) -> Self {
+        CleaningState {
+            phase: Phase::Notify,
+            region2,
+            merge_snapshot: region1_index.to_vec(),
+            merge_remaining: region1_index.len(),
+            seen: HashSet::new(),
+            boundary: region1_index.len(),
+            repl_set: Vec::new(),
+            repl_remaining: 0,
+            reserved_end: 0,
+            carried: HashSet::new(),
+        }
+    }
+
+    /// Next merge item (newest-first), or None when the scan is done.
+    pub fn next_merge_item(&mut self) -> Option<(LogOffset, u32)> {
+        if self.merge_remaining == 0 {
+            return None;
+        }
+        self.merge_remaining -= 1;
+        Some(self.merge_snapshot[self.merge_remaining])
+    }
+
+    /// Merge-phase dedup: returns true if `key`'s newest version was already
+    /// carried (the current item is stale and must be skipped).
+    pub fn already_seen(&mut self, key: &[u8]) -> bool {
+        !self.seen.insert(key.to_vec())
+    }
+
+    /// Transition Merge → Replicate: `region1_index` is Region 1's live
+    /// index *now*; entries past the boundary were appended during merge.
+    /// Pre-reserves their Region-2 slots and fixes `reserved_end`.
+    pub fn begin_replication(
+        &mut self,
+        nvm: &mut crate::nvm::Nvm,
+        region1_index: &[(LogOffset, u32)],
+    ) {
+        assert_eq!(self.phase, Phase::Merge);
+        self.repl_set = region1_index[self.boundary.min(region1_index.len())..]
+            .iter()
+            .map(|&(off, len)| {
+                let r2 = self.region2.reserve(nvm, len as usize);
+                (off, len, r2)
+            })
+            .collect();
+        self.repl_remaining = self.repl_set.len();
+        self.reserved_end = self.region2.tail;
+        self.phase = Phase::Replicate;
+    }
+
+    /// Next replication item (oldest-first keeps version order), or None.
+    pub fn next_repl_item(&mut self) -> Option<(LogOffset, u32, LogOffset)> {
+        if self.repl_remaining == 0 {
+            return None;
+        }
+        let item = self.repl_set[self.repl_set.len() - self.repl_remaining];
+        self.repl_remaining -= 1;
+        Some(item)
+    }
+
+    /// §4.4 read rule during replication: is the old-offset value `off` a
+    /// client write that superseded the replication copy?
+    pub fn is_fresh_region2(&self, off: LogOffset) -> bool {
+        off != super::store::NO_OFFSET && off >= self.reserved_end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvm::{Nvm, NvmConfig};
+
+    fn chain(nvm: &mut Nvm) -> Chain {
+        Chain::new(4096, 1024, nvm)
+    }
+
+    #[test]
+    fn merge_iterates_newest_first() {
+        let mut nvm = Nvm::new(NvmConfig { capacity: 1 << 20 });
+        let idx = vec![(0u32, 10u32), (16, 10), (32, 10)];
+        let mut c = CleaningState::start(&idx, chain(&mut nvm));
+        c.phase = Phase::Merge;
+        assert_eq!(c.next_merge_item(), Some((32, 10)));
+        assert_eq!(c.next_merge_item(), Some((16, 10)));
+        assert_eq!(c.next_merge_item(), Some((0, 10)));
+        assert_eq!(c.next_merge_item(), None);
+    }
+
+    #[test]
+    fn dedup_skips_stale_versions() {
+        let mut nvm = Nvm::new(NvmConfig { capacity: 1 << 20 });
+        let mut c = CleaningState::start(&[], chain(&mut nvm));
+        assert!(!c.already_seen(b"k1"), "first occurrence is fresh");
+        assert!(c.already_seen(b"k1"), "second occurrence is stale");
+        assert!(!c.already_seen(b"k2"));
+    }
+
+    #[test]
+    fn replication_reserves_space_and_sets_boundary() {
+        let mut nvm = Nvm::new(NvmConfig { capacity: 1 << 20 });
+        let idx = vec![(0u32, 64u32)];
+        let mut c = CleaningState::start(&idx, chain(&mut nvm));
+        c.phase = Phase::Merge;
+        while c.next_merge_item().is_some() {}
+        // Two objects appended during merge.
+        let live = vec![(0u32, 64u32), (64, 100), (168, 50)];
+        c.begin_replication(&mut nvm, &live);
+        assert_eq!(c.phase, Phase::Replicate);
+        assert_eq!(c.repl_set.len(), 2);
+        assert_eq!(c.reserved_end, c.region2.tail);
+        // Oldest-first order.
+        let first = c.next_repl_item().unwrap();
+        assert_eq!((first.0, first.1), (64, 100));
+        // A client write after reservation lands beyond reserved_end.
+        let w = c.region2.reserve(&mut nvm, 40);
+        assert!(c.is_fresh_region2(w));
+        assert!(!c.is_fresh_region2(first.2));
+    }
+
+    #[test]
+    fn no_merge_window_means_empty_replication_of_prior_items() {
+        let mut nvm = Nvm::new(NvmConfig { capacity: 1 << 20 });
+        let mut c = CleaningState::start(&[], chain(&mut nvm));
+        c.phase = Phase::Merge;
+        c.begin_replication(&mut nvm, &[]);
+        assert_eq!(c.next_repl_item(), None);
+        assert_eq!(c.reserved_end, 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Log-structured object store (§3.2.2, Figs 4–5 of the paper).
+//!
+//! Data live in append-only logs: a fixed **head array** links chains of
+//! contiguous memory regions (the paper registers 1 GB regions divided into
+//! 8 MB segments; the simulated geometry is configurable and defaults
+//! smaller so tests stay fast — the structure is identical). An object never
+//! spans two segments; when one would, the writer skips to the next segment
+//! boundary. When a region fills, another is allocated, registered, and
+//! linked under the same head (Fig 5).
+//!
+//! Objects are `[delete-tag | crc32 | key-value]` (Figs 2–3). Our codec
+//! carries explicit `klen`/`vlen` fields (3 bytes) that the paper's 5-byte
+//! header leaves implicit; EXPERIMENTS.md's Table 1 notes the constant.
+
+pub mod cleaner;
+pub mod object;
+pub mod store;
+
+pub use object::{decode, encode_delete, encode_object, DecodeError, ObjectView, OBJ_HDR};
+pub use store::{Chain, HeadId, LogConfig, LogOffset, LogStore, NO_OFFSET};

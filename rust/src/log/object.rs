@@ -1,0 +1,189 @@
+//! Object codec: `[tag u8 | crc u32 | klen u8 | vlen u16 | key | value]`.
+//!
+//! * `tag` — bit 0 is the paper's 1-bit delete tag; remaining bits reserved.
+//! * `crc` — CRC32 over the **entire encoded object with the crc field
+//!   zeroed** (same convention as the L1 Pallas kernel pipeline in
+//!   python/compile/model.py, so the AOT batch verifier and this codec
+//!   interoperate byte-for-byte).
+//! * deleted objects carry the key but no value (Fig 3) — saves space.
+
+use crate::crc::crc32;
+
+/// Fixed header size: tag(1) + crc(4) + klen(1) + vlen(2).
+pub const OBJ_HDR: usize = 8;
+/// Maximum key length the codec (and the hash-table entry) supports.
+pub const MAX_KEY: usize = 24;
+/// Maximum value length (paper sweeps 16 B – 4096 B).
+pub const MAX_VALUE: usize = u16::MAX as usize;
+
+const TAG_DELETED: u8 = 0x01;
+
+/// A decoded object.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObjectView {
+    pub deleted: bool,
+    pub crc: u32,
+    pub key: Vec<u8>,
+    pub value: Vec<u8>,
+}
+
+impl ObjectView {
+    /// Encoded byte length of this object.
+    pub fn wire_len(&self) -> usize {
+        OBJ_HDR + self.key.len() + self.value.len()
+    }
+}
+
+/// Why a decode failed — the distinction drives the consistency protocol:
+/// `BadChecksum`/`Garbage` mean a torn or unwritten object (fall back to the
+/// old version), not a protocol error.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Buffer shorter than the header or the declared lengths.
+    Truncated,
+    /// Declared key length exceeds MAX_KEY (unwritten/garbage bytes).
+    Garbage,
+    /// CRC mismatch: object is torn or partially persisted.
+    BadChecksum,
+}
+
+fn checksum(buf: &mut [u8]) -> u32 {
+    buf[1..5].fill(0);
+    crc32(buf)
+}
+
+fn encode(deleted: bool, key: &[u8], value: &[u8]) -> Vec<u8> {
+    assert!(!key.is_empty(), "key must be non-empty");
+    assert!(key.len() <= MAX_KEY, "key too long: {}", key.len());
+    assert!(value.len() <= MAX_VALUE, "value too long: {}", value.len());
+    let mut buf = Vec::with_capacity(OBJ_HDR + key.len() + value.len());
+    buf.push(if deleted { TAG_DELETED } else { 0 });
+    buf.extend_from_slice(&[0u8; 4]); // crc placeholder
+    buf.push(key.len() as u8);
+    buf.extend_from_slice(&(value.len() as u16).to_le_bytes());
+    buf.extend_from_slice(key);
+    buf.extend_from_slice(value);
+    let crc = crc32(&buf);
+    buf[1..5].copy_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Encode a normal object (Fig 2).
+pub fn encode_object(key: &[u8], value: &[u8]) -> Vec<u8> {
+    encode(false, key, value)
+}
+
+/// Encode a deleted object (Fig 3): key only, no value.
+pub fn encode_delete(key: &[u8]) -> Vec<u8> {
+    encode(true, key, &[])
+}
+
+/// Total encoded size for a (klen, vlen) pair.
+pub fn wire_size(klen: usize, vlen: usize) -> usize {
+    OBJ_HDR + klen + vlen
+}
+
+/// Decode and verify an object from the front of `buf`.
+///
+/// `buf` may be longer than the object (log reads fetch a whole max-size
+/// window); the declared lengths bound what is checksummed.
+pub fn decode(buf: &[u8]) -> Result<ObjectView, DecodeError> {
+    if buf.len() < OBJ_HDR {
+        return Err(DecodeError::Truncated);
+    }
+    let tag = buf[0];
+    let stored_crc = u32::from_le_bytes(buf[1..5].try_into().expect("4 bytes"));
+    let klen = buf[5] as usize;
+    let vlen = u16::from_le_bytes(buf[6..8].try_into().expect("2 bytes")) as usize;
+    if klen > MAX_KEY || klen == 0 {
+        return Err(DecodeError::Garbage);
+    }
+    let total = OBJ_HDR + klen + vlen;
+    if buf.len() < total {
+        return Err(DecodeError::Truncated);
+    }
+    let mut scratch = buf[..total].to_vec();
+    if checksum(&mut scratch) != stored_crc {
+        return Err(DecodeError::BadChecksum);
+    }
+    Ok(ObjectView {
+        deleted: tag & TAG_DELETED != 0,
+        crc: stored_crc,
+        key: buf[OBJ_HDR..OBJ_HDR + klen].to_vec(),
+        value: buf[OBJ_HDR + klen..total].to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn roundtrip_normal() {
+        let buf = encode_object(b"user42", b"the value");
+        let v = decode(&buf).expect("valid");
+        assert!(!v.deleted);
+        assert_eq!(v.key, b"user42");
+        assert_eq!(v.value, b"the value");
+        assert_eq!(v.wire_len(), buf.len());
+    }
+
+    #[test]
+    fn roundtrip_deleted_has_no_value() {
+        let buf = encode_delete(b"user42");
+        assert_eq!(buf.len(), OBJ_HDR + 6);
+        let v = decode(&buf).expect("valid");
+        assert!(v.deleted);
+        assert_eq!(v.key, b"user42");
+        assert!(v.value.is_empty());
+    }
+
+    #[test]
+    fn decode_with_trailing_garbage() {
+        let mut buf = encode_object(b"k", b"v");
+        buf.extend_from_slice(&[0xFF; 100]);
+        let v = decode(&buf).expect("valid despite trailing bytes");
+        assert_eq!(v.value, b"v");
+    }
+
+    #[test]
+    fn torn_object_fails_checksum() {
+        let buf = encode_object(b"key", &vec![7u8; 300]);
+        for cut in [OBJ_HDR + 3 + 1, OBJ_HDR + 3 + 150, buf.len() - 1] {
+            let mut torn = buf.clone();
+            torn[cut..].iter_mut().for_each(|b| *b = 0);
+            assert_eq!(decode(&torn), Err(DecodeError::BadChecksum), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn unwritten_memory_is_garbage_or_truncated() {
+        assert!(matches!(decode(&[0u8; 4]), Err(DecodeError::Truncated)));
+        // All-zero header: klen = 0 -> Garbage.
+        assert_eq!(decode(&[0u8; 64]), Err(DecodeError::Garbage));
+        // Random bytes: overwhelmingly BadChecksum or Garbage.
+        let mut rng = Rng::new(8);
+        let mut buf = vec![0u8; 128];
+        for _ in 0..50 {
+            rng.fill_bytes(&mut buf);
+            assert!(decode(&buf).is_err());
+        }
+    }
+
+    #[test]
+    fn single_bit_flip_detected_everywhere() {
+        let buf = encode_object(b"bitflip", b"payload-payload");
+        for i in 0..buf.len() {
+            let mut b = buf.clone();
+            b[i] ^= 0x40;
+            assert!(decode(&b).is_err(), "flip at byte {i} undetected");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "key too long")]
+    fn oversized_key_panics() {
+        encode_object(&[0u8; 25], b"");
+    }
+}

@@ -1,0 +1,349 @@
+//! Head array + region chains + segment-aware append allocation.
+
+use crate::nvm::{Addr, Nvm};
+
+/// Index into the head array (the paper's 1-byte Head ID).
+pub type HeadId = u8;
+
+/// 31-bit logical offset within a region chain — the unit stored in the
+/// hash entry's 8-byte atomic region.
+pub type LogOffset = u32;
+
+/// Sentinel for "no offset" (all-ones in 31 bits). Offset 0 is valid.
+pub const NO_OFFSET: LogOffset = 0x7FFF_FFFF;
+
+/// Geometry of the log. The paper uses 1 GB regions / 8 MB segments; the
+/// simulated default is 1 MB / 64 KB so figure runs and tests stay fast —
+/// every structural rule (no segment spanning, region chaining, 31-bit
+/// offsets) is unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct LogConfig {
+    pub region_size: u32,
+    pub segment_size: u32,
+    pub num_heads: usize,
+}
+
+impl Default for LogConfig {
+    fn default() -> Self {
+        LogConfig { region_size: 1 << 20, segment_size: 1 << 16, num_heads: 4 }
+    }
+}
+
+/// One append-only chain of equally-sized contiguous regions (Fig 5).
+/// A head owns one chain; the cleaner's "Region 2" and the baselines'
+/// staging/destination areas are chains too.
+#[derive(Clone, Debug)]
+pub struct Chain {
+    pub region_size: u32,
+    pub segment_size: u32,
+    /// NVM base address of each region, in chain order.
+    pub regions: Vec<Addr>,
+    /// Next logical append offset (the "last written address of the log",
+    /// maintained by the server; volatile — rebuilt by recovery).
+    pub tail: LogOffset,
+    /// Volatile append index: (offset, wire length) of every reservation,
+    /// in order. DRAM-side bookkeeping used by the cleaner's reverse scan;
+    /// rebuilt from NVM by the recovery forward scan.
+    pub index: Vec<(LogOffset, u32)>,
+}
+
+impl Chain {
+    /// A chain with one initial region allocated.
+    pub fn new(region_size: u32, segment_size: u32, nvm: &mut Nvm) -> Self {
+        assert!(region_size % segment_size == 0, "regions hold whole segments");
+        Chain {
+            region_size,
+            segment_size,
+            regions: vec![nvm.alloc(region_size as usize)],
+            tail: 0,
+            index: Vec::new(),
+        }
+    }
+
+    /// Is `off` a resolvable offset within the currently-chained regions?
+    /// (Recovery uses this to reject dangling pointers left by a crash
+    /// mid-cleaning: an old-offset slot may reference a Region 2 that was
+    /// discarded.)
+    pub fn contains(&self, off: LogOffset) -> bool {
+        off != NO_OFFSET && (off / self.region_size) < self.regions.len() as u32
+    }
+
+    /// NVM address of logical offset `off`.
+    pub fn addr_of(&self, off: LogOffset) -> Addr {
+        debug_assert_ne!(off, NO_OFFSET);
+        let r = (off / self.region_size) as usize;
+        let within = off % self.region_size;
+        self.regions[r] + within as Addr
+    }
+
+    /// Bytes readable contiguously from `off` without crossing its segment
+    /// boundary (objects never span segments, so this bounds any object).
+    pub fn window(&self, off: LogOffset) -> usize {
+        (self.segment_size - off % self.segment_size) as usize
+    }
+
+    /// Reserve `len` bytes, observing the segment no-span rule and chaining
+    /// a new region when the current one is full. The reservation is 8-byte
+    /// aligned (lets recovery skip-scan torn areas). Returns the logical
+    /// offset; the caller fills the bytes (server locally, or a remote
+    /// client via one-sided write).
+    pub fn reserve(&mut self, nvm: &mut Nvm, len: usize) -> LogOffset {
+        let seg = self.segment_size;
+        assert!(len as u32 <= seg, "object larger than a segment: {len}");
+        assert!(len > 0, "zero-length reservation");
+        let mut off = (self.tail + 7) & !7;
+        // An object exceeding the current segment starts the next one (§3.3).
+        if off % seg + len as u32 > seg {
+            off = (off / seg + 1) * seg;
+        }
+        // Region chaining for scalability (§3.2.2, Fig 5).
+        let needed_end = off as u64 + len as u64;
+        assert!(needed_end <= NO_OFFSET as u64, "31-bit log offset space exhausted");
+        while needed_end > self.regions.len() as u64 * self.region_size as u64 {
+            self.regions.push(nvm.alloc(self.region_size as usize));
+        }
+        self.tail = off + len as u32;
+        self.index.push((off, len as u32));
+        off
+    }
+
+    /// Server-local append: reserve + write through the memory bus.
+    pub fn append_local(&mut self, nvm: &mut Nvm, bytes: &[u8]) -> LogOffset {
+        let off = self.reserve(nvm, bytes.len());
+        nvm.write(self.addr_of(off), bytes);
+        off
+    }
+
+    /// Rebuild `tail` and the volatile index by forward skip-scanning NVM
+    /// (crash recovery: DRAM bookkeeping was lost). Returns the index.
+    pub fn rebuild_index(&mut self, nvm: &Nvm) -> Vec<(LogOffset, u32)> {
+        use super::object;
+        let seg = self.segment_size;
+        let total = self.regions.len() as u32 * self.region_size;
+        let mut index = Vec::new();
+        let mut tail = 0u32;
+        let mut off = 0u32;
+        while off + object::OBJ_HDR as u32 <= total {
+            let window = (seg - off % seg).min(total - off) as usize;
+            match object::decode(nvm.read(self.addr_of(off), window)) {
+                Ok(v) => {
+                    let len = v.wire_len() as u32;
+                    index.push((off, len));
+                    off += len;
+                    tail = off;
+                    off = (off + 7) & !7;
+                }
+                Err(_) => {
+                    // Torn or unwritten: skip-scan at the reservation
+                    // alignment until the next decodable object.
+                    off += 8;
+                }
+            }
+        }
+        self.tail = tail;
+        self.index = index.clone();
+        index
+    }
+}
+
+/// The log-structured store over all heads.
+pub struct LogStore {
+    pub cfg: LogConfig,
+    heads: Vec<Chain>,
+}
+
+impl LogStore {
+    /// Allocate one initial region per head.
+    pub fn new(cfg: LogConfig, nvm: &mut Nvm) -> Self {
+        assert!(cfg.num_heads > 0 && cfg.num_heads <= 256, "head ID is 1 byte");
+        let heads = (0..cfg.num_heads)
+            .map(|_| Chain::new(cfg.region_size, cfg.segment_size, nvm))
+            .collect();
+        LogStore { cfg, heads }
+    }
+
+    pub fn num_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn head(&self, h: HeadId) -> &Chain {
+        &self.heads[h as usize]
+    }
+
+    pub fn head_mut(&mut self, h: HeadId) -> &mut Chain {
+        &mut self.heads[h as usize]
+    }
+
+    /// NVM address of logical offset `off` under head `h`.
+    pub fn addr_of(&self, h: HeadId, off: LogOffset) -> Addr {
+        self.heads[h as usize].addr_of(off)
+    }
+
+    /// Segment-bounded contiguous window at `off` (same for all heads).
+    pub fn window(&self, off: LogOffset) -> usize {
+        (self.cfg.segment_size - off % self.cfg.segment_size) as usize
+    }
+
+    /// Current tail (last written address) of head `h`.
+    pub fn tail(&self, h: HeadId) -> LogOffset {
+        self.heads[h as usize].tail
+    }
+
+    /// Reserve under head `h` (see [`Chain::reserve`]).
+    pub fn reserve(&mut self, nvm: &mut Nvm, h: HeadId, len: usize) -> LogOffset {
+        self.heads[h as usize].reserve(nvm, len)
+    }
+
+    /// Server-local append under head `h`.
+    pub fn append_local(&mut self, nvm: &mut Nvm, h: HeadId, bytes: &[u8]) -> LogOffset {
+        self.heads[h as usize].append_local(nvm, bytes)
+    }
+
+    /// Occupied bytes under head `h` (tail position = log length incl. holes).
+    pub fn occupied(&self, h: HeadId) -> u32 {
+        self.heads[h as usize].tail
+    }
+
+    /// Replace head `h`'s chain — the final pointer swing of log cleaning
+    /// (Fig 12: Region 2 becomes Region 1).
+    pub fn swing_head(&mut self, h: HeadId, chain: Chain) {
+        self.heads[h as usize] = chain;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::log::object;
+    use crate::nvm::NvmConfig;
+
+    fn small() -> (LogStore, Nvm) {
+        let mut nvm = Nvm::new(NvmConfig { capacity: 1 << 22 });
+        let cfg = LogConfig { region_size: 4096, segment_size: 1024, num_heads: 2 };
+        let store = LogStore::new(cfg, &mut nvm);
+        (store, nvm)
+    }
+
+    #[test]
+    fn append_and_read_back() {
+        let (mut s, mut nvm) = small();
+        let obj = object::encode_object(b"k1", b"value-1");
+        let off = s.append_local(&mut nvm, 0, &obj);
+        let got = nvm.read(s.addr_of(0, off), obj.len());
+        assert_eq!(got, &obj[..]);
+        assert_eq!(object::decode(got).unwrap().key, b"k1");
+    }
+
+    #[test]
+    fn reservations_are_8_aligned_and_monotone() {
+        let (mut s, mut nvm) = small();
+        let mut last = 0;
+        for i in 0..20 {
+            let off = s.reserve(&mut nvm, 0, 10 + i);
+            assert_eq!(off % 8, 0);
+            assert!(off >= last);
+            last = off;
+        }
+    }
+
+    #[test]
+    fn objects_do_not_span_segments() {
+        let (mut s, mut nvm) = small();
+        // Fill most of segment 0, then reserve something that won't fit.
+        s.reserve(&mut nvm, 0, 1000);
+        let off = s.reserve(&mut nvm, 0, 100);
+        assert_eq!(off, 1024, "second object must start at next segment");
+        assert!(off / 1024 == (off + 99) / 1024);
+    }
+
+    #[test]
+    fn region_chaining_extends_capacity() {
+        let (mut s, mut nvm) = small();
+        assert_eq!(s.head(0).regions.len(), 1);
+        for _ in 0..5 {
+            s.reserve(&mut nvm, 0, 1000);
+        }
+        assert!(s.head(0).regions.len() >= 2, "second region must be chained");
+        // Offsets past the first region still resolve to valid NVM addrs.
+        let off = s.reserve(&mut nvm, 0, 64);
+        let addr = s.addr_of(0, off);
+        nvm.write(addr, &[9u8; 64]);
+        assert_eq!(nvm.read(addr, 64), &[9u8; 64][..]);
+    }
+
+    #[test]
+    fn heads_are_independent() {
+        let (mut s, mut nvm) = small();
+        let a = s.append_local(&mut nvm, 0, &object::encode_object(b"a", b"1"));
+        let b = s.append_local(&mut nvm, 1, &object::encode_object(b"b", b"2"));
+        assert_eq!(a, b, "same logical offset under different heads");
+        assert_ne!(s.addr_of(0, a), s.addr_of(1, b));
+    }
+
+    #[test]
+    fn window_bounds_by_segment() {
+        let (s, _) = small();
+        assert_eq!(s.window(0), 1024);
+        assert_eq!(s.window(1000), 24);
+        assert_eq!(s.window(1024), 1024);
+    }
+
+    #[test]
+    fn rebuild_index_after_volatile_loss() {
+        let (mut s, mut nvm) = small();
+        let objs: Vec<_> = (0..8)
+            .map(|i| object::encode_object(format!("key{i}").as_bytes(), &vec![i as u8; 50]))
+            .collect();
+        let offs: Vec<_> = objs.iter().map(|o| s.append_local(&mut nvm, 0, o)).collect();
+        let tail_before = s.tail(0);
+        // Simulate crash: wipe volatile bookkeeping.
+        let h = s.head_mut(0);
+        h.tail = 0;
+        h.index.clear();
+        let index = s.head_mut(0).rebuild_index(&nvm);
+        assert_eq!(index.len(), 8);
+        assert_eq!(index.iter().map(|&(o, _)| o).collect::<Vec<_>>(), offs);
+        assert_eq!(s.tail(0), tail_before);
+    }
+
+    #[test]
+    fn rebuild_index_skips_torn_object() {
+        let (mut s, mut nvm) = small();
+        let a = object::encode_object(b"ok-1", b"aaaa");
+        let torn = object::encode_object(b"torn", &vec![3u8; 64]);
+        let c = object::encode_object(b"ok-2", b"cccc");
+        s.append_local(&mut nvm, 0, &a);
+        let toff = s.reserve(&mut nvm, 0, torn.len());
+        // Persist only the first 16 bytes of the torn object.
+        nvm.write(s.addr_of(0, toff), &torn[..16]);
+        s.append_local(&mut nvm, 0, &c);
+        let h = s.head_mut(0);
+        h.tail = 0;
+        h.index.clear();
+        let index = s.head_mut(0).rebuild_index(&nvm);
+        let keys: Vec<_> = index
+            .iter()
+            .map(|&(o, l)| object::decode(nvm.read(s.addr_of(0, o), l as usize)).unwrap().key)
+            .collect();
+        assert_eq!(keys, vec![b"ok-1".to_vec(), b"ok-2".to_vec()]);
+    }
+
+    #[test]
+    fn swing_head_replaces_chain() {
+        let (mut s, mut nvm) = small();
+        s.append_local(&mut nvm, 0, &object::encode_object(b"old", b"1"));
+        let mut fresh = Chain::new(4096, 1024, &mut nvm);
+        let off = fresh.append_local(&mut nvm, &object::encode_object(b"new", b"2"));
+        s.swing_head(0, fresh);
+        let v = object::decode(nvm.read(s.addr_of(0, off), 64)).unwrap();
+        assert_eq!(v.key, b"new");
+        assert_eq!(s.head(0).index.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than a segment")]
+    fn oversized_reservation_panics() {
+        let (mut s, mut nvm) = small();
+        s.reserve(&mut nvm, 0, 2048);
+    }
+}

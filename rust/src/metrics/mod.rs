@@ -1,0 +1,164 @@
+//! Measurement: latency distributions, throughput, server-CPU cost.
+//!
+//! The paper reports average latency per value size (Figs 14–17), throughput
+//! per thread count (Figs 18–21), normalized server-CPU cost (Figs 22–25)
+//! and latency under log cleaning (Fig 26). All of those reduce to the two
+//! recorders here plus the CPU busy accounting in [`crate::sim::CpuPool`]
+//! and the NVM write accounting in [`crate::nvm::WriteStats`].
+
+use crate::sim::Time;
+
+/// Latency recorder: mean/percentiles over recorded operation latencies.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<Time>,
+    sorted: bool,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, lat: Time) {
+        self.samples.push(lat);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Mean latency in nanoseconds (0 if empty).
+    pub fn mean_ns(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|&x| x as f64).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Mean latency in microseconds (the paper's unit).
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns() / 1_000.0
+    }
+
+    /// Percentile (0.0..=1.0) in nanoseconds.
+    pub fn percentile_ns(&mut self, p: f64) -> Time {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        if !self.sorted {
+            self.samples.sort_unstable();
+            self.sorted = true;
+        }
+        let idx = ((self.samples.len() - 1) as f64 * p).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn max_ns(&mut self) -> Time {
+        self.percentile_ns(1.0)
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+}
+
+/// Result of one workload run (one scheme × one config point).
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// Completed operations.
+    pub ops: u64,
+    /// Virtual makespan of the measured phase, ns.
+    pub duration_ns: Time,
+    /// Latency distribution across all client ops (normal mode).
+    pub latency: LatencyRecorder,
+    /// Latency of ops whose head was under log cleaning (Fig 26).
+    pub latency_cleaning: LatencyRecorder,
+    /// Server CPU busy time during the measured phase, ns.
+    pub server_cpu_busy_ns: u128,
+    /// NVM bytes programmed during the measured phase.
+    pub nvm_programmed_bytes: u64,
+    /// Reads that detected an inconsistent object (checksum mismatch).
+    pub inconsistencies_detected: u64,
+    /// Reads that fell back to the previous version.
+    pub fallback_reads: u64,
+    /// Reads that found no live value (should be 0 in healthy runs).
+    pub read_misses: u64,
+    /// Baseline appliers: records applied to destination storage.
+    pub applied: u64,
+    /// Completed log cleanings.
+    pub cleanings: u64,
+    /// DES events executed (engine cost diagnostics).
+    pub events: u64,
+}
+
+impl RunStats {
+    /// Throughput in KOp/s (the paper's unit).
+    pub fn kops(&self) -> f64 {
+        if self.duration_ns == 0 {
+            return 0.0;
+        }
+        self.ops as f64 / (self.duration_ns as f64 * 1e-9) / 1e3
+    }
+
+    /// Server CPU cost per op, ns (the basis of Figs 22–25; Erda reads = 0).
+    pub fn cpu_per_op_ns(&self) -> f64 {
+        if self.ops == 0 {
+            return 0.0;
+        }
+        self.server_cpu_busy_ns as f64 / self.ops as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentiles() {
+        let mut r = LatencyRecorder::new();
+        for v in [10, 20, 30, 40, 50] {
+            r.record(v);
+        }
+        assert_eq!(r.mean_ns(), 30.0);
+        assert_eq!(r.percentile_ns(0.0), 10);
+        assert_eq!(r.percentile_ns(0.5), 30);
+        assert_eq!(r.max_ns(), 50);
+        assert_eq!(r.count(), 5);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let mut r = LatencyRecorder::new();
+        assert_eq!(r.mean_ns(), 0.0);
+        assert_eq!(r.percentile_ns(0.99), 0);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = LatencyRecorder::new();
+        a.record(1);
+        let mut b = LatencyRecorder::new();
+        b.record(3);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.mean_ns(), 2.0);
+    }
+
+    #[test]
+    fn kops_math() {
+        let s = RunStats { ops: 1000, duration_ns: 1_000_000_000, ..Default::default() };
+        assert!((s.kops() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_after_more_records_resorts() {
+        let mut r = LatencyRecorder::new();
+        r.record(50);
+        assert_eq!(r.percentile_ns(1.0), 50);
+        r.record(10);
+        assert_eq!(r.percentile_ns(0.0), 10);
+    }
+}

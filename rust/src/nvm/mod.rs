@@ -1,0 +1,25 @@
+//! Byte-addressable NVM simulator.
+//!
+//! Mirrors the paper's emulation methodology (DRAM + extra write latency;
+//! §5.1) and adds what a reproduction needs to *measure* Table 1 instead of
+//! asserting it:
+//!
+//! * **Programmed-byte accounting with DCW** — data-comparison write
+//!   ([31] in the paper): a byte whose value does not change skips the bit
+//!   programming action and is not counted. This is how Erda's flip-bit
+//!   metadata update costs ~4 bytes out of the 8-byte atomic region.
+//! * **8-byte failure atomicity** — `write_atomic8` is the only primitive
+//!   that survives a crash mid-update; plain `write` may be torn.
+//! * **Crash semantics** — local CPU stores are persisted through ADR
+//!   (paper's assumption); remote one-sided writes live in the *NIC's*
+//!   volatile cache until flushed, which is modeled by the RDMA fabric
+//!   (rust/src/rdma), not here.
+
+pub mod arena;
+pub mod stats;
+
+pub use arena::{Nvm, NvmConfig};
+pub use stats::WriteStats;
+
+/// Address within the simulated NVM space.
+pub type Addr = u64;

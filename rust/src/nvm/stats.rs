@@ -1,0 +1,39 @@
+//! NVM write accounting (the measurement substrate behind Table 1).
+
+/// Counters for NVM write traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WriteStats {
+    /// Bytes actually programmed (after DCW elision of unchanged bytes).
+    pub programmed_bytes: u64,
+    /// Bytes requested to be written (before DCW).
+    pub requested_bytes: u64,
+    /// Number of write calls.
+    pub write_ops: u64,
+    /// Number of 8-byte atomic writes.
+    pub atomic_ops: u64,
+}
+
+impl WriteStats {
+    /// Difference since an earlier snapshot (for per-op measurements).
+    pub fn since(&self, earlier: &WriteStats) -> WriteStats {
+        WriteStats {
+            programmed_bytes: self.programmed_bytes - earlier.programmed_bytes,
+            requested_bytes: self.requested_bytes - earlier.requested_bytes,
+            write_ops: self.write_ops - earlier.write_ops,
+            atomic_ops: self.atomic_ops - earlier.atomic_ops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn since_subtracts_fields() {
+        let a = WriteStats { programmed_bytes: 10, requested_bytes: 12, write_ops: 2, atomic_ops: 1 };
+        let b = WriteStats { programmed_bytes: 25, requested_bytes: 40, write_ops: 5, atomic_ops: 3 };
+        let d = b.since(&a);
+        assert_eq!(d, WriteStats { programmed_bytes: 15, requested_bytes: 28, write_ops: 3, atomic_ops: 2 });
+    }
+}

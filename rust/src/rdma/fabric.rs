@@ -1,0 +1,243 @@
+//! The fabric: verb timing + the volatile NIC cache.
+
+use std::collections::VecDeque;
+
+use crate::nvm::{Addr, Nvm};
+use crate::sim::{Time, Timing};
+
+/// A chunk of a one-sided write waiting in the NIC's volatile cache.
+#[derive(Clone, Debug)]
+struct PendingChunk {
+    persist_at: Time,
+    addr: Addr,
+    bytes: Vec<u8>,
+}
+
+/// Wire/verb statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FabricStats {
+    pub one_sided_reads: u64,
+    pub one_sided_writes: u64,
+    pub two_sided_ops: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Chunks dropped from the NIC cache by an injected failure.
+    pub chunks_dropped: u64,
+}
+
+/// The simulated RDMA fabric between all clients and one server.
+pub struct Fabric {
+    pub timing: Timing,
+    pending: VecDeque<PendingChunk>,
+    stats: FabricStats,
+}
+
+/// NIC drain granularity: RNICs move cache lines; NVM programs 64 B lines.
+const CHUNK: usize = 64;
+
+impl Fabric {
+    pub fn new(timing: Timing) -> Self {
+        Fabric { timing, pending: VecDeque::new(), stats: FabricStats::default() }
+    }
+
+    /// Apply every pending NIC-cache chunk that has reached its persist time.
+    pub fn flush(&mut self, now: Time, nvm: &mut Nvm) {
+        // Chunks are appended in persist-time order per write, but writes
+        // from different clients interleave; scan the whole queue.
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].persist_at <= now {
+                let c = self.pending.remove(i).expect("index checked");
+                nvm.write(c.addr, &c.bytes);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Completion (ACK) time of a one-sided read of `len` bytes issued `now`.
+    pub fn read_done(&self, now: Time, len: usize) -> Time {
+        now + self.timing.one_sided(len)
+    }
+
+    /// Completion (ACK) time of a one-sided write of `len` bytes issued `now`.
+    /// NOTE: the ACK only means "reached the NIC cache" — persistence lags.
+    pub fn write_done(&self, now: Time, len: usize) -> Time {
+        now + self.timing.one_sided(len)
+    }
+
+    /// Round trip of a two-sided exchange, excluding server service time.
+    pub fn two_sided_done(&self, now: Time, req: usize, resp: usize) -> Time {
+        now + self.timing.two_sided(req + resp)
+    }
+
+    /// One-way delivery time for a request of `len` bytes (client → server).
+    pub fn one_way(&self, now: Time, len: usize) -> Time {
+        now + self.timing.two_sided(len) / 2
+    }
+
+    /// Sample remote memory at instant `now` (call inside the completion
+    /// step of a read verb). Persisted state only: data still in the NIC
+    /// cache is not visible to a DMA read from NVM.
+    pub fn sample(&mut self, now: Time, nvm: &mut Nvm, addr: Addr, len: usize) -> Vec<u8> {
+        self.flush(now, nvm);
+        self.stats.one_sided_reads += 1;
+        self.stats.bytes_read += len as u64;
+        nvm.read_vec(addr, len)
+    }
+
+    /// Post a one-sided write at instant `now`. The payload lands in the
+    /// NIC cache and drains to NVM in 64-byte chunks starting after the
+    /// flush window; returns nothing — the ACK time comes from
+    /// [`Fabric::write_done`], computed by the caller at issue time.
+    pub fn post_write(&mut self, now: Time, nvm: &mut Nvm, addr: Addr, data: &[u8]) {
+        self.post_write_partial(now, nvm, addr, data, usize::MAX);
+    }
+
+    /// Post a one-sided write of which only the first `persist_chunks`
+    /// 64-byte chunks will ever reach NVM (failure injection: the client or
+    /// the link dies mid-transfer). `usize::MAX` = the full payload.
+    pub fn post_write_partial(
+        &mut self,
+        now: Time,
+        nvm: &mut Nvm,
+        addr: Addr,
+        data: &[u8],
+        persist_chunks: usize,
+    ) {
+        self.flush(now, nvm);
+        self.stats.one_sided_writes += 1;
+        self.stats.bytes_written += data.len() as u64;
+        let line = self.timing.nvm_write(CHUNK);
+        for (i, chunk) in data.chunks(CHUNK).enumerate() {
+            if i >= persist_chunks {
+                self.stats.chunks_dropped += 1;
+                continue;
+            }
+            self.pending.push_back(PendingChunk {
+                persist_at: now + self.timing.nic_flush_delay + (i as Time + 1) * line,
+                addr: addr + (i * CHUNK) as Addr,
+                bytes: chunk.to_vec(),
+            });
+        }
+    }
+
+    /// Record a two-sided exchange for stats (service time is accounted by
+    /// the caller through the CPU pool).
+    pub fn note_two_sided(&mut self, req: usize, resp: usize) {
+        self.stats.two_sided_ops += 1;
+        self.stats.bytes_written += req as u64;
+        self.stats.bytes_read += resp as u64;
+    }
+
+    /// Power/NIC failure at instant `now`: every chunk not yet persisted is
+    /// lost. Returns the number of dropped chunks.
+    pub fn drop_unpersisted(&mut self, now: Time, nvm: &mut Nvm) -> usize {
+        self.flush(now, nvm);
+        let dropped = self.pending.len();
+        self.stats.chunks_dropped += dropped as u64;
+        self.pending.clear();
+        dropped
+    }
+
+    /// Chunks currently sitting in the volatile NIC cache.
+    pub fn in_flight_chunks(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn stats(&self) -> FabricStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvm::NvmConfig;
+
+    fn setup() -> (Fabric, Nvm) {
+        (Fabric::new(Timing::default()), Nvm::new(NvmConfig { capacity: 1 << 20 }))
+    }
+
+    #[test]
+    fn write_persists_after_flush_window() {
+        let (mut f, mut nvm) = setup();
+        let addr = nvm.alloc(256);
+        let data = vec![0xABu8; 256];
+        f.post_write(0, &mut nvm, addr, &data);
+        // Immediately: nothing persisted yet.
+        assert_eq!(f.sample(0, &mut nvm, addr, 256), vec![0u8; 256]);
+        // Long after the flush window: everything there.
+        let late = f.timing.nic_flush_delay + 100 * f.timing.nvm_write(64);
+        assert_eq!(f.sample(late, &mut nvm, addr, 256), data);
+        assert_eq!(f.in_flight_chunks(), 0);
+    }
+
+    #[test]
+    fn torn_read_inside_flush_window() {
+        let (mut f, mut nvm) = setup();
+        let addr = nvm.alloc(4096);
+        let data = vec![0xCDu8; 4096];
+        f.post_write(0, &mut nvm, addr, &data);
+        // Halfway through the drain: a prefix is persisted, the rest is not.
+        let mid = f.timing.nic_flush_delay + 32 * f.timing.nvm_write(64);
+        let seen = f.sample(mid, &mut nvm, addr, 4096);
+        let persisted = seen.iter().take_while(|&&b| b == 0xCD).count();
+        assert!(persisted >= 64 * 31 && persisted < 4096, "persisted = {persisted}");
+        assert!(seen[4095] == 0, "tail must still be unwritten");
+    }
+
+    #[test]
+    fn crash_drops_unpersisted_chunks() {
+        let (mut f, mut nvm) = setup();
+        let addr = nvm.alloc(1024);
+        f.post_write(0, &mut nvm, addr, &vec![0xEEu8; 1024]);
+        let mid = f.timing.nic_flush_delay + 5 * f.timing.nvm_write(64);
+        let dropped = f.drop_unpersisted(mid, &mut nvm);
+        assert!(dropped > 0 && dropped < 16, "dropped = {dropped}");
+        // Even at t = infinity, the tail never appears.
+        let seen = f.sample(Time::MAX, &mut nvm, addr, 1024);
+        assert_eq!(&seen[1024 - 64..], &[0u8; 64][..]);
+    }
+
+    #[test]
+    fn partial_write_injection_truncates() {
+        let (mut f, mut nvm) = setup();
+        let addr = nvm.alloc(512);
+        f.post_write_partial(0, &mut nvm, addr, &vec![0x11u8; 512], 3);
+        let seen = f.sample(Time::MAX, &mut nvm, addr, 512);
+        assert_eq!(&seen[..192], &vec![0x11u8; 192][..]);
+        assert_eq!(&seen[192..], &vec![0u8; 320][..]);
+        assert_eq!(f.stats().chunks_dropped, 5);
+    }
+
+    #[test]
+    fn ack_precedes_persistence() {
+        // The RDA gap: ACK (reached NIC) is earlier than final persistence.
+        let (mut f, mut nvm) = setup();
+        let addr = nvm.alloc(64);
+        f.post_write(0, &mut nvm, addr, &[1u8; 64]);
+        let ack = f.write_done(0, 64);
+        f.flush(ack, &mut nvm);
+        // With default timing, 1 chunk persists at flush_delay + 1 line
+        // (~3.2 µs) while the ACK returns at ~30 µs: here persistence wins.
+        // Shrink the gap with a large payload: ACK ~31 µs, 64 chunks drain
+        // until ~16 µs... still earlier. The invariant that matters: the ACK
+        // time never waits for persistence (they are independent clocks).
+        let big_addr = nvm.alloc(1 << 16);
+        let t0 = 1_000_000;
+        f.post_write(t0, &mut nvm, big_addr, &vec![2u8; 1 << 16]);
+        let big_ack = f.write_done(t0, 1 << 16);
+        let seen = f.sample(big_ack, &mut nvm, big_addr, 1 << 16);
+        let persisted = seen.iter().filter(|&&b| b == 2).count();
+        assert!(persisted < (1 << 16), "ACK must not imply full persistence");
+    }
+
+    #[test]
+    fn one_sided_verbs_have_rtt_latency() {
+        let (f, _) = setup();
+        assert_eq!(f.read_done(100, 0), 100 + f.timing.one_sided_rtt);
+        assert!(f.read_done(0, 4096) > f.read_done(0, 16));
+        assert!(f.two_sided_done(0, 64, 1024) > f.timing.two_sided_rtt);
+    }
+}

@@ -1,0 +1,23 @@
+//! RDMA fabric simulator.
+//!
+//! Reproduces the two properties the RDA problem lives in (§2.3 of the
+//! paper):
+//!
+//! 1. **One-sided verbs bypass the server CPU** — `read`/`write`/
+//!    `write_with_imm` never reserve the server's [`crate::sim::CpuPool`];
+//!    two-sided `send`/`recv` always do.
+//! 2. **The NIC cache is volatile** — a one-sided write is ACKed when the
+//!    data reaches the *NIC*, not NVM. Payloads drain to NVM in 64-byte
+//!    chunks over a flush window; a failure inside that window persists an
+//!    arbitrary prefix, leaving a torn object that only a checksum can
+//!    detect (the server CPU never saw the op).
+//!
+//! Timing semantics: remote memory is sampled/mutated at the *completion*
+//! event of a verb (one RTT after issue). Protocol state machines call
+//! [`Fabric::sample`] / [`Fabric::post_write`] inside the engine step that
+//! fires at that instant, so cross-client interleavings happen at phase
+//! granularity in virtual-time order.
+
+pub mod fabric;
+
+pub use fabric::{Fabric, FabricStats};

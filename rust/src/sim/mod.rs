@@ -1,0 +1,35 @@
+//! Deterministic discrete-event simulation (DES) core.
+//!
+//! Why a DES: the paper's evaluation (latency vs value size, throughput vs
+//! client threads, CPU cost) was measured on an 8-core IB testbed; this image
+//! has **one** CPU core, so thread-scaling curves cannot be measured with
+//! real threads. Instead, every protocol runs as real code over real bytes —
+//! real hash table, real log, real CRCs, real torn writes — while *time* is
+//! virtual: actors (clients, server workers, cleaners) advance a shared
+//! virtual clock through an event heap, and contended resources (the server
+//! CPU, the NIC) are c-server FIFO queues in virtual time. Queueing at the
+//! server CPU is precisely the mechanism that saturates the baselines in
+//! Figs 18–21, and the DES reproduces it deterministically.
+//!
+//! Everything is seeded: two runs with the same config produce identical
+//! results, which the test suite exploits heavily.
+
+pub mod engine;
+pub mod resource;
+pub mod rng;
+pub mod timing;
+
+pub use engine::{Actor, Engine, Step};
+pub use resource::CpuPool;
+pub use rng::Rng;
+pub use timing::Timing;
+
+/// Virtual time in nanoseconds since simulation start.
+pub type Time = u64;
+
+/// Nanoseconds per microsecond (latency constants are quoted in µs).
+pub const US: Time = 1_000;
+/// Nanoseconds per millisecond.
+pub const MS: Time = 1_000_000;
+/// Nanoseconds per second.
+pub const SEC: Time = 1_000_000_000;

@@ -1,0 +1,328 @@
+//! The run driver: build a world for a scheme, preload records, spawn
+//! client/cleaner/applier actors, run the DES, collect [`RunStats`].
+//!
+//! Every figure of the paper is "run this for some (scheme, workload,
+//! value size, thread count) and read off a metric" — this module is that
+//! machinery; `crate::figures` does the sweeps.
+
+use crate::baselines::{
+    ApplierActor, ApplierConfig, BaselineClient, BaselineOpSource, BaselineWorld, Scheme,
+};
+use crate::erda::{CleanerActor, CleanerConfig, ClientConfig, ErdaClient, ErdaWorld, OpSource};
+use crate::log::{object, LogConfig};
+use crate::metrics::RunStats;
+use crate::nvm::NvmConfig;
+use crate::sim::{Actor, Engine, Step, Time, Timing};
+use crate::ycsb::{Generator, WorkloadConfig};
+
+/// Which of the three schemes to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeSel {
+    Erda,
+    RedoLogging,
+    ReadAfterWrite,
+}
+
+impl SchemeSel {
+    pub const ALL: [SchemeSel; 3] =
+        [SchemeSel::Erda, SchemeSel::RedoLogging, SchemeSel::ReadAfterWrite];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchemeSel::Erda => "Erda",
+            SchemeSel::RedoLogging => "Redo Logging",
+            SchemeSel::ReadAfterWrite => "Read After Write",
+        }
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            SchemeSel::Erda => "erda",
+            SchemeSel::RedoLogging => "redo",
+            SchemeSel::ReadAfterWrite => "raw",
+        }
+    }
+}
+
+/// Full configuration of one simulation run.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    pub scheme: SchemeSel,
+    pub workload: WorkloadConfig,
+    /// Simulated client threads (closed loop).
+    pub clients: usize,
+    /// Ops per client (after this the client exits).
+    pub ops_per_client: u64,
+    /// Virtual warmup: ops *starting* before this are not measured, and CPU/
+    /// NVM accounting resets at this instant.
+    pub warmup: Time,
+    pub log_cfg: LogConfig,
+    pub nvm_capacity: usize,
+    pub timing: Timing,
+    /// Erda only: start log cleaning when a head's occupancy crosses this
+    /// many bytes (None = cleaning disabled).
+    pub cleaning_threshold: Option<u32>,
+    /// Cleaner tuning (batch size controls CPU burstiness felt by clients).
+    pub cleaner: CleanerConfig,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig {
+            scheme: SchemeSel::Erda,
+            workload: WorkloadConfig::default(),
+            clients: 4,
+            ops_per_client: 500,
+            warmup: 5 * crate::sim::MS,
+            log_cfg: LogConfig::default(),
+            nvm_capacity: 256 << 20,
+            timing: Timing::default(),
+            cleaning_threshold: None,
+            cleaner: CleanerConfig::default(),
+        }
+    }
+}
+
+impl DriverConfig {
+    /// Hash-table capacity: next power of two holding the records at ≤ 50 %.
+    pub fn table_cap(&self) -> usize {
+        (2 * self.workload.record_count as usize).next_power_of_two().max(1024)
+    }
+}
+
+/// Resets CPU/NVM/fabric accounting at the measurement boundary.
+struct Marker;
+
+impl Actor<ErdaWorld> for Marker {
+    fn step(&mut self, w: &mut ErdaWorld, _now: Time) -> Step {
+        w.cpu.reset_accounting();
+        w.nvm.reset_stats();
+        Step::Done
+    }
+}
+
+impl Actor<BaselineWorld> for Marker {
+    fn step(&mut self, w: &mut BaselineWorld, _now: Time) -> Step {
+        w.cpu.reset_accounting();
+        w.nvm.reset_stats();
+        Step::Done
+    }
+}
+
+/// Run one simulation; returns the collected metrics.
+pub fn run(cfg: &DriverConfig) -> RunStats {
+    match cfg.scheme {
+        SchemeSel::Erda => run_erda(cfg),
+        SchemeSel::RedoLogging => run_baseline(cfg, Scheme::RedoLogging),
+        SchemeSel::ReadAfterWrite => run_baseline(cfg, Scheme::ReadAfterWrite),
+    }
+}
+
+fn client_cfg(cfg: &DriverConfig) -> ClientConfig {
+    ClientConfig { max_value: cfg.workload.value_size, ..ClientConfig::default() }
+}
+
+fn run_erda(cfg: &DriverConfig) -> RunStats {
+    let mut world = ErdaWorld::new(
+        cfg.timing.clone(),
+        NvmConfig { capacity: cfg.nvm_capacity },
+        cfg.log_cfg,
+        cfg.table_cap(),
+    );
+    world.preload(cfg.workload.record_count, cfg.workload.value_size);
+    world.nvm.reset_stats();
+    world.counters.measure_from = cfg.warmup;
+    world.counters.active_clients = cfg.clients as u32;
+    if let Some(th) = cfg.cleaning_threshold {
+        world.server.cleaning_threshold = th;
+    }
+
+    let mut engine = Engine::new(world);
+    engine.spawn(Box::new(Marker), cfg.warmup);
+    for c in 0..cfg.clients {
+        let gen = Generator::new(cfg.workload.clone(), c as u64);
+        let client =
+            ErdaClient::new(OpSource::Ycsb(gen), cfg.ops_per_client, client_cfg(cfg));
+        engine.spawn(Box::new(client), 0);
+    }
+    if cfg.cleaning_threshold.is_some() {
+        for h in 0..cfg.log_cfg.num_heads {
+            engine.spawn(Box::new(CleanerActor::new(h as u8, cfg.cleaner)), cfg.warmup / 2);
+        }
+    }
+    engine.run();
+
+    let w = &mut engine.state;
+    let c = &mut w.counters;
+    RunStats {
+        ops: c.ops_measured,
+        duration_ns: c.last_completion.saturating_sub(c.measure_from),
+        latency: c.latency.clone(),
+        latency_cleaning: c.latency_during_cleaning.clone(),
+        server_cpu_busy_ns: w.cpu.busy_ns(),
+        nvm_programmed_bytes: w.nvm.stats().programmed_bytes,
+        inconsistencies_detected: c.inconsistencies,
+        fallback_reads: c.fallbacks,
+        read_misses: c.read_misses,
+        applied: 0,
+        cleanings: c.cleanings_completed,
+        events: engine.events(),
+    }
+}
+
+fn run_baseline(cfg: &DriverConfig, scheme: Scheme) -> RunStats {
+    let slot_size = object::wire_size(24, cfg.workload.value_size);
+    let mut world = BaselineWorld::new(
+        cfg.timing.clone(),
+        NvmConfig { capacity: cfg.nvm_capacity },
+        scheme,
+        cfg.table_cap(),
+        cfg.log_cfg.region_size,
+        cfg.log_cfg.segment_size,
+        slot_size,
+    );
+    world.preload(cfg.workload.record_count, cfg.workload.value_size);
+    world.nvm.reset_stats();
+    world.counters.measure_from = cfg.warmup;
+    world.counters.active_clients = cfg.clients as u32;
+
+    let mut engine = Engine::new(world);
+    engine.spawn(Box::new(Marker), cfg.warmup);
+    for c in 0..cfg.clients {
+        let gen = Generator::new(cfg.workload.clone(), c as u64);
+        let client = BaselineClient::new(BaselineOpSource::Ycsb(gen), cfg.ops_per_client);
+        engine.spawn(Box::new(client), 0);
+    }
+    engine.spawn(Box::new(ApplierActor::new(ApplierConfig::default())), 0);
+    engine.run();
+
+    let w = &mut engine.state;
+    let c = &mut w.counters;
+    RunStats {
+        ops: c.ops_measured,
+        duration_ns: c.last_completion.saturating_sub(c.measure_from),
+        latency: c.latency.clone(),
+        latency_cleaning: Default::default(),
+        server_cpu_busy_ns: w.cpu.busy_ns(),
+        nvm_programmed_bytes: w.nvm.stats().programmed_bytes,
+        inconsistencies_detected: 0,
+        fallback_reads: 0,
+        read_misses: c.read_misses,
+        applied: c.applied,
+        cleanings: 0,
+        events: engine.events(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ycsb::Workload;
+
+    fn quick(scheme: SchemeSel, wl: Workload, clients: usize) -> RunStats {
+        let cfg = DriverConfig {
+            scheme,
+            workload: WorkloadConfig {
+                workload: wl,
+                record_count: 200,
+                value_size: 256,
+                theta: 0.99,
+                seed: 7,
+            },
+            clients,
+            ops_per_client: 300,
+            warmup: 2 * crate::sim::MS,
+            ..Default::default()
+        };
+        run(&cfg)
+    }
+
+    #[test]
+    fn erda_read_latency_matches_paper_band() {
+        let s = quick(SchemeSel::Erda, Workload::ReadOnly, 1);
+        // Paper Fig 14 average: 62.84 µs.
+        let lat = s.latency.mean_us();
+        assert!((55.0..75.0).contains(&lat), "Erda YCSB-C latency {lat} µs");
+        assert_eq!(s.read_misses, 0);
+        assert!(s.ops > 100);
+    }
+
+    #[test]
+    fn baseline_read_latency_matches_paper_band() {
+        for scheme in [SchemeSel::RedoLogging, SchemeSel::ReadAfterWrite] {
+            let s = quick(scheme, Workload::ReadOnly, 1);
+            // Paper Fig 14 average: ≈ 92.5 µs.
+            let lat = s.latency.mean_us();
+            assert!((80.0..110.0).contains(&lat), "{scheme:?} YCSB-C latency {lat} µs");
+            assert_eq!(s.read_misses, 0, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn erda_readonly_uses_zero_server_cpu() {
+        let s = quick(SchemeSel::Erda, Workload::ReadOnly, 2);
+        assert_eq!(s.server_cpu_busy_ns, 0, "one-sided reads must not touch the CPU");
+        let b = quick(SchemeSel::RedoLogging, Workload::ReadOnly, 2);
+        assert!(b.server_cpu_busy_ns > 0);
+    }
+
+    #[test]
+    fn erda_scales_where_baselines_saturate() {
+        // Fig 18's shape: Erda grows ~linearly with threads; the baselines
+        // hit the 4-core CPU ceiling (≈ 66 KOp/s) and go flat.
+        let e1 = quick(SchemeSel::Erda, Workload::ReadOnly, 1).kops();
+        let e8 = quick(SchemeSel::Erda, Workload::ReadOnly, 8).kops();
+        let e16 = quick(SchemeSel::Erda, Workload::ReadOnly, 16).kops();
+        assert!(e8 > 6.0 * e1, "Erda: {e1} -> {e8} KOp/s not ~linear");
+        assert!(e16 > 1.7 * e8, "Erda: {e8} -> {e16} KOp/s not ~linear");
+        let r8 = quick(SchemeSel::RedoLogging, Workload::ReadOnly, 8).kops();
+        let r16 = quick(SchemeSel::RedoLogging, Workload::ReadOnly, 16).kops();
+        assert!(r16 < 1.15 * r8, "Redo: {r8} -> {r16} KOp/s should be flat (saturated)");
+        assert!((55.0..80.0).contains(&r16), "Redo ceiling {r16} KOp/s");
+        assert!(e16 > 2.0 * r16, "Erda must out-scale the baseline");
+    }
+
+    #[test]
+    fn update_only_latencies_are_near_parity() {
+        // Fig 17: Erda 102.1 / Redo 103.89 / RAW 105.47 µs.
+        let e = quick(SchemeSel::Erda, Workload::UpdateOnly, 1).latency.mean_us();
+        let r = quick(SchemeSel::RedoLogging, Workload::UpdateOnly, 1).latency.mean_us();
+        let w = quick(SchemeSel::ReadAfterWrite, Workload::UpdateOnly, 1).latency.mean_us();
+        assert!((85.0..120.0).contains(&e), "erda {e}");
+        assert!((85.0..125.0).contains(&r), "redo {r}");
+        assert!((90.0..130.0).contains(&w), "raw {w}");
+        assert!(e < w, "Erda should edge out RAW");
+    }
+
+    #[test]
+    fn erda_halves_nvm_writes_on_updates() {
+        // Table 1's aggregate effect under a pure-update workload.
+        let e = quick(SchemeSel::Erda, Workload::UpdateOnly, 2);
+        let r = quick(SchemeSel::RedoLogging, Workload::UpdateOnly, 2);
+        let ratio = r.nvm_programmed_bytes as f64
+            / (r.ops as f64)
+            / (e.nvm_programmed_bytes as f64 / e.ops as f64);
+        assert!(
+            (1.7..2.3).contains(&ratio),
+            "baseline/erda NVM write ratio {ratio} (expect ≈ 2)"
+        );
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = quick(SchemeSel::Erda, Workload::UpdateHeavy, 3);
+        let b = quick(SchemeSel::Erda, Workload::UpdateHeavy, 3);
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.duration_ns, b.duration_ns);
+        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
+    }
+
+    #[test]
+    fn mixed_workload_healthy() {
+        for scheme in SchemeSel::ALL {
+            let s = quick(scheme, Workload::UpdateHeavy, 4);
+            assert_eq!(s.read_misses, 0, "{scheme:?} missed reads");
+            assert!(s.ops > 500, "{scheme:?} ops {}", s.ops);
+        }
+    }
+}

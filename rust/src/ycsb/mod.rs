@@ -1,0 +1,196 @@
+//! YCSB-style workload generation (§5.1 of the paper).
+//!
+//! Four workloads over a Zipfian(0.99) key popularity distribution:
+//! YCSB-C (100 % read), YCSB-B (95 % read / 5 % write), YCSB-A (50/50) and
+//! update-only (100 % write). Keys are `user<NNNN>`; values are seeded
+//! random bytes of the configured size.
+
+pub mod zipf;
+
+pub use zipf::Zipfian;
+
+use crate::sim::Rng;
+
+/// The paper's four workload mixes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// YCSB-C: 100 % read.
+    ReadOnly,
+    /// YCSB-B: 95 % read, 5 % write.
+    ReadMostly,
+    /// YCSB-A: 50 % read, 50 % write.
+    UpdateHeavy,
+    /// 100 % write.
+    UpdateOnly,
+}
+
+impl Workload {
+    /// All four, in the order the paper's figures appear.
+    pub const ALL: [Workload; 4] =
+        [Workload::ReadOnly, Workload::ReadMostly, Workload::UpdateHeavy, Workload::UpdateOnly];
+
+    /// Fraction of reads in the mix.
+    pub fn read_fraction(&self) -> f64 {
+        match self {
+            Workload::ReadOnly => 1.0,
+            Workload::ReadMostly => 0.95,
+            Workload::UpdateHeavy => 0.5,
+            Workload::UpdateOnly => 0.0,
+        }
+    }
+
+    /// Paper-style label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Workload::ReadOnly => "YCSB-C (100% read)",
+            Workload::ReadMostly => "YCSB-B (95% read, 5% write)",
+            Workload::UpdateHeavy => "YCSB-A (50% read, 50% write)",
+            Workload::UpdateOnly => "update-only (100% write)",
+        }
+    }
+
+    /// Short id for filenames.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Workload::ReadOnly => "ycsb_c",
+            Workload::ReadMostly => "ycsb_b",
+            Workload::UpdateHeavy => "ycsb_a",
+            Workload::UpdateOnly => "update_only",
+        }
+    }
+}
+
+/// One generated operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Op {
+    Read { key: Vec<u8> },
+    Update { key: Vec<u8>, value: Vec<u8> },
+}
+
+/// Workload generator configuration.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub workload: Workload,
+    /// Number of distinct keys (records) in the store.
+    pub record_count: u64,
+    /// Value size in bytes (the paper sweeps 16 B – 4096 B).
+    pub value_size: usize,
+    /// Zipfian skew (paper: 0.99).
+    pub theta: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            workload: Workload::UpdateHeavy,
+            record_count: 1000,
+            value_size: 256,
+            theta: 0.99,
+            seed: 42,
+        }
+    }
+}
+
+/// Key for record index `i`.
+pub fn key_of(i: u64) -> Vec<u8> {
+    format!("user{i:016}").into_bytes()
+}
+
+/// Streaming op generator (one per simulated client thread).
+pub struct Generator {
+    cfg: WorkloadConfig,
+    zipf: Zipfian,
+    rng: Rng,
+}
+
+impl Generator {
+    pub fn new(cfg: WorkloadConfig, stream: u64) -> Self {
+        let mut rng = Rng::new(cfg.seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let zipf = Zipfian::new(cfg.record_count, cfg.theta, &mut rng);
+        Generator { cfg, zipf, rng }
+    }
+
+    /// Generate the next operation.
+    pub fn next_op(&mut self) -> Op {
+        let key = key_of(self.zipf.sample(&mut self.rng));
+        if self.rng.gen_bool(self.cfg.workload.read_fraction()) {
+            Op::Read { key }
+        } else {
+            let mut value = vec![0u8; self.cfg.value_size];
+            self.rng.fill_bytes(&mut value);
+            Op::Update { key, value }
+        }
+    }
+
+    pub fn config(&self) -> &WorkloadConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_fraction_respected() {
+        for wl in Workload::ALL {
+            let cfg = WorkloadConfig { workload: wl, ..Default::default() };
+            let mut g = Generator::new(cfg, 0);
+            let n = 20_000;
+            let reads = (0..n).filter(|_| matches!(g.next_op(), Op::Read { .. })).count();
+            let frac = reads as f64 / n as f64;
+            assert!(
+                (frac - wl.read_fraction()).abs() < 0.02,
+                "{wl:?}: {frac} vs {}",
+                wl.read_fraction()
+            );
+        }
+    }
+
+    #[test]
+    fn keys_within_record_count() {
+        let cfg = WorkloadConfig { record_count: 100, ..Default::default() };
+        let mut g = Generator::new(cfg, 1);
+        for _ in 0..1000 {
+            let key = match g.next_op() {
+                Op::Read { key } | Op::Update { key, .. } => key,
+            };
+            let n: u64 = String::from_utf8(key[4..].to_vec()).unwrap().parse().unwrap();
+            assert!(n < 100);
+        }
+    }
+
+    #[test]
+    fn values_match_configured_size() {
+        let cfg = WorkloadConfig {
+            workload: Workload::UpdateOnly,
+            value_size: 777,
+            ..Default::default()
+        };
+        let mut g = Generator::new(cfg, 2);
+        match g.next_op() {
+            Op::Update { value, .. } => assert_eq!(value.len(), 777),
+            _ => panic!("update-only must produce updates"),
+        }
+    }
+
+    #[test]
+    fn streams_are_deterministic_and_distinct() {
+        let cfg = WorkloadConfig::default();
+        let a: Vec<_> = {
+            let mut g = Generator::new(cfg.clone(), 0);
+            (0..50).map(|_| g.next_op()).collect()
+        };
+        let a2: Vec<_> = {
+            let mut g = Generator::new(cfg.clone(), 0);
+            (0..50).map(|_| g.next_op()).collect()
+        };
+        let b: Vec<_> = {
+            let mut g = Generator::new(cfg, 1);
+            (0..50).map(|_| g.next_op()).collect()
+        };
+        assert_eq!(a, a2, "same stream must replay identically");
+        assert_ne!(a, b, "different streams must differ");
+    }
+}

@@ -1,0 +1,140 @@
+//! Zipfian sampler — the YCSB `ZipfianGenerator` algorithm (Gray et al.,
+//! "Quickly generating billion-record synthetic databases", SIGMOD '94),
+//! the same construction YCSB [3] uses, with the scrambled variant to
+//! spread hot keys across the key space.
+
+use crate::sim::Rng;
+
+/// Zipfian distribution over `[0, n)` with skew `theta` (paper: 0.99).
+#[derive(Clone, Debug)]
+pub struct Zipfian {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+fn zeta(n: u64, theta: f64) -> f64 {
+    // O(n) harmonic sum; record counts in the sims are ≤ a few 100k.
+    (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+}
+
+impl Zipfian {
+    pub fn new(n: u64, theta: f64, _rng: &mut Rng) -> Self {
+        assert!(n > 0);
+        assert!((0.0..1.0).contains(&theta), "theta in [0,1): got {theta}");
+        let zetan = zeta(n, theta);
+        let zeta2 = zeta(2.min(n), theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipfian { n, theta, alpha, zetan, eta, zeta2: zeta2 }
+    }
+
+    /// Draw a rank in `[0, n)`: rank 0 is the hottest item.
+    pub fn sample_rank(&self, rng: &mut Rng) -> u64 {
+        let u = rng.gen_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let r = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        r.min(self.n - 1)
+    }
+
+    /// Draw a *scrambled* item id in `[0, n)` (YCSB's ScrambledZipfian):
+    /// popularity is Zipfian but hot items are spread over the id space.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let rank = self.sample_rank(rng);
+        // FNV-64-style scramble, stable across runs.
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        h ^= rank;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        h ^= h >> 33;
+        h % self.n
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Probability of the hottest rank (for tests): 1/zetan.
+    pub fn p_top(&self) -> f64 {
+        1.0 / self.zetan
+    }
+
+    /// Unused except for debugging/display.
+    pub fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_in_range() {
+        let mut rng = Rng::new(1);
+        let z = Zipfian::new(100, 0.99, &mut rng);
+        for _ in 0..10_000 {
+            assert!(z.sample_rank(&mut rng) < 100);
+            assert!(z.sample(&mut rng) < 100);
+        }
+    }
+
+    #[test]
+    fn top_rank_frequency_matches_theory() {
+        let mut rng = Rng::new(2);
+        let z = Zipfian::new(1000, 0.99, &mut rng);
+        let n = 200_000;
+        let hits = (0..n).filter(|_| z.sample_rank(&mut rng) == 0).count();
+        let expect = z.p_top();
+        let got = hits as f64 / n as f64;
+        assert!(
+            (got - expect).abs() / expect < 0.1,
+            "top-rank frequency {got:.4} vs theoretical {expect:.4}"
+        );
+    }
+
+    #[test]
+    fn skew_makes_head_heavy() {
+        let mut rng = Rng::new(3);
+        let z = Zipfian::new(10_000, 0.99, &mut rng);
+        let n = 100_000;
+        let head = (0..n).filter(|_| z.sample_rank(&mut rng) < 100).count();
+        // With theta=.99, top-1% of ranks should draw way more than 1% of mass.
+        assert!(
+            head as f64 / n as f64 > 0.3,
+            "head mass {} too small",
+            head as f64 / n as f64
+        );
+    }
+
+    #[test]
+    fn scramble_spreads_hot_keys() {
+        let mut rng = Rng::new(4);
+        let z = Zipfian::new(1000, 0.99, &mut rng);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        // The hottest *id* should not be id 0 systematically (scrambled)
+        // and the distribution should still be highly skewed.
+        let max = *counts.iter().max().unwrap() as f64;
+        assert!(max / 50_000.0 > 0.05, "still skewed after scrambling");
+    }
+
+    #[test]
+    fn single_item_degenerate() {
+        let mut rng = Rng::new(5);
+        let z = Zipfian::new(1, 0.5, &mut rng);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+}

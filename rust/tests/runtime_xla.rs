@@ -1,0 +1,115 @@
+//! Integration: the AOT bridge — Pallas/JAX artifacts executed from Rust via
+//! PJRT must agree bit-for-bit with the local Rust implementations.
+//!
+//! Skipped (with a notice) when `artifacts/` is absent; `make artifacts`
+//! builds it.
+
+use erda::crc::{crc32, fnv1a};
+use erda::erda::BatchCheck;
+use erda::log::object;
+use erda::runtime::{artifacts_available, PjrtCheck, Runtime};
+use erda::sim::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load_default().expect("artifacts must load"))
+}
+
+#[test]
+fn verify_batch_matches_local_crc() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(42);
+    let mut items = Vec::new();
+    for len in [1usize, 7, 63, 64, 100, 500, 1000, 4000] {
+        let mut buf = vec![0u8; len];
+        rng.fill_bytes(&mut buf);
+        let crc = crc32(&buf);
+        items.push((buf.clone(), crc)); // valid
+        items.push((buf, crc ^ 0xDEAD)); // corrupted
+    }
+    let verdicts = rt.verify_batch(&items).expect("verify");
+    for (i, v) in verdicts.iter().enumerate() {
+        assert_eq!(*v, i % 2 == 0, "item {i}");
+    }
+}
+
+#[test]
+fn verify_batch_large_population() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(7);
+    let mut items = Vec::new();
+    let mut expect = Vec::new();
+    for i in 0..300 {
+        let len = 1 + (rng.gen_range(400) as usize);
+        let mut buf = vec![0u8; len];
+        rng.fill_bytes(&mut buf);
+        let good = i % 3 != 0;
+        let crc = if good { crc32(&buf) } else { crc32(&buf) ^ 1 };
+        items.push((buf, crc));
+        expect.push(good);
+    }
+    assert_eq!(rt.verify_batch(&items).expect("verify"), expect);
+}
+
+#[test]
+fn bucket_batch_matches_local_fnv() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let keys: Vec<Vec<u8>> = (0..100).map(|i| format!("user{i:016}").into_bytes()).collect();
+    let hashes = rt.bucket_batch(&keys).expect("bucket");
+    for (k, h) in keys.iter().zip(&hashes) {
+        assert_eq!(*h, fnv1a(k), "key {k:?}");
+    }
+}
+
+#[test]
+fn recovery_through_pjrt_verifier() {
+    // End-to-end: crash recovery using the AOT kernel as the checksum gate.
+    let Some(rt) = runtime_or_skip() else { return };
+    use erda::erda::{recover, ErdaWorld};
+    use erda::log::LogConfig;
+    use erda::nvm::NvmConfig;
+    use erda::sim::Timing;
+
+    let mut w = ErdaWorld::new(
+        Timing::default(),
+        NvmConfig { capacity: 16 << 20 },
+        LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 },
+        1 << 10,
+    );
+    w.preload(30, 200);
+    // One torn update.
+    let key = erda::ycsb::key_of(4);
+    let obj = object::encode_object(&key, &vec![1u8; 200]);
+    let (_, _, addr) = w.server.write_request(&mut w.nvm, &key, obj.len());
+    w.nvm.write(addr, &obj[..32]);
+    // Crash + recover with the PJRT verifier.
+    for h in 0..2u8 {
+        let head = w.server.log.head_mut(h);
+        head.tail = 0;
+        head.index.clear();
+    }
+    let report = recover(&mut w.server, &mut w.nvm, &mut PjrtCheck(&rt));
+    assert_eq!(report.entries_rolled_back, 1);
+    assert_eq!(report.entries_dropped, 0);
+    assert_eq!(w.get(&key).expect("restored"), vec![0xA5u8; 200]);
+}
+
+#[test]
+fn pjrt_check_adapter_agrees_with_local() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(3);
+    let mut items = Vec::new();
+    for _ in 0..50 {
+        let len = 1 + rng.gen_range(300) as usize;
+        let mut buf = vec![0u8; len];
+        rng.fill_bytes(&mut buf);
+        let crc = if rng.gen_bool(0.5) { crc32(&buf) } else { rng.next_u64() as u32 };
+        items.push((buf, crc));
+    }
+    let mut pjrt = PjrtCheck(&rt);
+    let mut local = erda::erda::LocalCheck;
+    assert_eq!(pjrt.check(&items), local.check(&items));
+}
