@@ -1,6 +1,7 @@
 //! Failure-injection sweep: crash writers at every truncation point and
 //! prove that *no interleaving* can surface an inconsistent value — the
-//! paper's Remote Data Atomicity claim, exercised exhaustively.
+//! paper's Remote Data Atomicity claim, exercised exhaustively through the
+//! unified `store` facade.
 //!
 //! For chunk counts 0..N of a multi-chunk object: a writer tears at that
 //! point, a reader detects the tear via checksum and falls back, the
@@ -9,14 +10,9 @@
 //!
 //! Run: `cargo run --release --example crash_recovery`
 
-use std::collections::VecDeque;
-
-use erda::erda::{
-    recover, ClientConfig, ErdaClient, ErdaWorld, LocalCheck, OpSource, ScriptOp,
-};
 use erda::log::LogConfig;
-use erda::nvm::NvmConfig;
-use erda::sim::{Engine, Timing, MS};
+use erda::sim::MS;
+use erda::store::{Cluster, RemoteStore, Request, Scheme};
 use erda::ycsb::key_of;
 
 fn main() {
@@ -26,68 +22,55 @@ fn main() {
     let mut rollbacks = 0u64;
 
     for chunks in 0..total_chunks {
-        let mut w = ErdaWorld::new(
-            Timing::default(),
-            NvmConfig { capacity: 16 << 20 },
-            LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 },
-            1 << 10,
-        );
-        w.preload(20, 500);
-        w.counters.active_clients = 2;
-        let key = key_of(7);
+        let outcome = Cluster::builder()
+            .scheme(Scheme::Erda)
+            .log(LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 })
+            .nvm_capacity(16 << 20)
+            .records(20)
+            .value_size(500)
+            .preload(20, 500)
+            .clients(0)
+            .warmup(0)
+            .script(vec![Request::CrashDuringPut {
+                key: key_of(7),
+                value: value.clone(),
+                chunks,
+            }])
+            .script_at(1 * MS, vec![Request::Get { key: key_of(7) }])
+            .run();
 
-        let mut engine = Engine::new(w);
-        engine.spawn(
-            Box::new(ErdaClient::new(
-                OpSource::Script(VecDeque::from(vec![ScriptOp::CrashDuringWrite {
-                    key: key.clone(),
-                    value: value.clone(),
-                    chunks,
-                }])),
-                1,
-                ClientConfig { max_value: 500, ..ClientConfig::default() },
-            )),
-            0,
-        );
-        engine.spawn(
-            Box::new(ErdaClient::new(
-                OpSource::Script(VecDeque::from(vec![ScriptOp::Read { key: key.clone() }])),
-                1,
-                ClientConfig { max_value: 500, ..ClientConfig::default() },
-            )),
-            1 * MS,
-        );
-        engine.run();
-
-        let w = &mut engine.state;
-        w.settle();
-        detected += w.counters.inconsistencies;
+        detected += outcome.stats.inconsistencies_detected;
+        let mut db = outcome.db;
         // The reader must never see garbage: either the old value (fallback +
         // repair) or — if the torn prefix happened to be complete — the new.
-        let v = w.get(&key).expect("key must always be readable");
+        let v = db.get(&key_of(7)).unwrap().expect("key must always be readable");
         assert!(
             v == vec![0xA5u8; 500] || v == value,
             "chunks={chunks}: inconsistent value surfaced!"
         );
 
         // Now a full server crash + recovery on top.
-        for h in 0..w.server.num_heads() {
-            let head = w.server.log.head_mut(h as u8);
-            head.tail = 0;
-            head.index.clear();
-        }
-        let report = recover(&mut w.server, &mut w.nvm, &mut LocalCheck);
+        db.crash().unwrap();
+        let report = db.recover().unwrap();
         rollbacks += report.entries_rolled_back as u64;
-        let v = w.get(&key).expect("key readable after recovery");
+        let v = db.get(&key_of(7)).unwrap().expect("key readable after recovery");
         assert!(v == vec![0xA5u8; 500] || v == value);
         for i in 0..20 {
             if i != 7 {
-                assert_eq!(w.get(&key_of(i)).unwrap(), vec![0xA5u8; 500], "bystander {i}");
+                assert_eq!(
+                    db.get(&key_of(i)).unwrap(),
+                    Some(vec![0xA5u8; 500]),
+                    "bystander {i}"
+                );
             }
         }
         println!(
             "chunks persisted = {chunks}: reader saw {} | recovery: {} checked, {} rolled back ✓",
-            if w.counters.fallbacks > 0 { "old version (fallback)" } else { "a consistent version" },
+            if outcome.stats.fallback_reads > 0 {
+                "old version (fallback)"
+            } else {
+                "a consistent version"
+            },
             report.entries_checked,
             report.entries_rolled_back,
         );

@@ -1,84 +1,59 @@
-//! Log cleaning under live load (§4.4 / Fig 26): watch a head fill up,
-//! get compacted by the two-phase lock-free cleaner while clients keep
-//! reading and writing, and compare latencies in and out of cleaning.
+//! Log cleaning under live load (§4.4 / Fig 26): watch heads fill up, get
+//! compacted by the two-phase lock-free cleaner while clients keep reading
+//! and writing, and compare latencies in and out of cleaning — all through
+//! the unified `store` facade.
 //!
 //! Run: `cargo run --release --example log_cleaning`
 
-use erda::erda::{CleanerActor, CleanerConfig, ClientConfig, ErdaClient, ErdaWorld, OpSource};
 use erda::log::LogConfig;
-use erda::nvm::NvmConfig;
-use erda::sim::{Engine, Timing};
-use erda::ycsb::{key_of, Generator, Workload, WorkloadConfig};
+use erda::store::{Cluster, RemoteStore, Scheme};
+use erda::ycsb::{key_of, Workload};
 
 fn main() {
-    let mut world = ErdaWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 128 << 20 },
-        LogConfig { region_size: 1 << 20, segment_size: 1 << 14, num_heads: 2 },
-        1 << 12,
-    );
-    world.preload(128, 1024);
-    world.server.cleaning_threshold = 256 << 10; // compact at 256 KiB/head
-    world.counters.active_clients = 4;
+    let outcome = Cluster::builder()
+        .scheme(Scheme::Erda)
+        .log(LogConfig { region_size: 1 << 20, segment_size: 1 << 14, num_heads: 2 })
+        .nvm_capacity(128 << 20)
+        .workload(Workload::UpdateHeavy)
+        .records(128)
+        .value_size(1024)
+        .preload(128, 1024)
+        .clients(4)
+        .ops_per_client(1500)
+        .seed(11)
+        .warmup(0)
+        .cleaning_threshold(256 << 10) // compact at 256 KiB/head
+        .run();
 
-    let occupancy_before: Vec<u32> =
-        (0..2).map(|h| world.server.log.occupied(h as u8)).collect();
+    let s = &outcome.stats;
+    let mut db = outcome.db;
 
-    let mut engine = Engine::new(world);
-    for c in 0..4 {
-        let gen = Generator::new(
-            WorkloadConfig {
-                workload: Workload::UpdateHeavy,
-                record_count: 128,
-                value_size: 1024,
-                theta: 0.99,
-                seed: 11,
-            },
-            c,
-        );
-        engine.spawn(
-            Box::new(ErdaClient::new(
-                OpSource::Ycsb(gen),
-                1500,
-                ClientConfig { max_value: 1024, ..ClientConfig::default() },
-            )),
-            0,
-        );
-    }
-    for h in 0..2u8 {
-        engine.spawn(Box::new(CleanerActor::new(h, CleanerConfig::default())), 0);
-    }
-    let end = engine.run();
-    let w = &mut engine.state;
-    w.settle();
-
-    println!("virtual time:        {:.2} ms", end as f64 / 1e6);
-    println!("cleanings completed: {}", w.counters.cleanings_completed);
+    println!("virtual time:        {:.2} ms", s.duration_ns as f64 / 1e6);
+    println!("cleanings completed: {}", s.cleanings);
     for h in 0..2u8 {
         println!(
-            "head {h}: occupancy {:>8} B (preload was {} B)",
-            w.server.log.occupied(h),
-            occupancy_before[h as usize],
+            "head {h}: occupancy {:>8} B after compaction",
+            db.log_occupied(h).expect("erda store"),
         );
     }
     println!(
         "\nops:                   {} ({} during cleaning)",
-        w.counters.ops_measured + w.counters.latency_during_cleaning.count() as u64,
-        w.counters.latency_during_cleaning.count()
+        s.ops,
+        s.latency_cleaning.count()
     );
-    println!("mean latency normal:   {:>8.2} µs", w.counters.latency.mean_us());
-    if w.counters.latency_during_cleaning.count() > 0 {
+    println!("mean latency normal:   {:>8.2} µs", s.latency.mean_us());
+    if s.latency_cleaning.count() > 0 {
         println!(
             "mean latency cleaning: {:>8.2} µs  (two-sided send path, Fig 26)",
-            w.counters.latency_during_cleaning.mean_us()
+            s.latency_cleaning.mean_us()
         );
     }
-    println!("read misses:           {}", w.counters.read_misses);
+    println!("read misses:           {}", s.read_misses);
 
-    assert!(w.counters.cleanings_completed >= 1, "cleaning must have triggered");
-    assert_eq!(w.counters.read_misses, 0, "no key may be lost across cleaning");
+    assert!(s.cleanings >= 1, "cleaning must have triggered");
+    assert_eq!(s.read_misses, 0, "no key may be lost across cleaning");
     for i in 0..128 {
-        assert!(w.get(&key_of(i)).is_some(), "key {i} lost");
+        assert!(db.get(&key_of(i)).unwrap().is_some(), "key {i} lost");
     }
-    println!("\nall 128 keys alive and consistent across {} cleanings ✓", w.counters.cleanings_completed);
+    println!("\nall 128 keys alive and consistent across {} cleanings ✓", s.cleanings);
 }

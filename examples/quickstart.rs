@@ -1,94 +1,75 @@
-//! Quickstart: bring up an Erda world, run a handful of scripted operations
-//! through the simulated RDMA fabric, and watch the consistency machinery
-//! work — including a torn write detected by checksum and repaired.
+//! Quickstart: bring up a cluster through the unified `store` facade, run
+//! scripted operations through the simulated RDMA fabric, and watch the
+//! consistency machinery work — including a torn write detected by checksum
+//! and repaired. The scheme is a runtime parameter: change `Scheme::Erda`
+//! to `Scheme::RedoLogging` or `Scheme::ReadAfterWrite` and the same
+//! program runs the paper's baselines.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use std::collections::VecDeque;
-
-use erda::erda::{ClientConfig, ErdaClient, ErdaWorld, OpSource, ScriptOp};
-use erda::log::LogConfig;
-use erda::nvm::NvmConfig;
-use erda::sim::{Engine, Timing, MS};
+use erda::sim::MS;
+use erda::store::{Cluster, RemoteStore, Request, Scheme};
 use erda::ycsb::key_of;
 
 fn main() {
     // 1. A server with 4 log heads and a hopscotch metadata table, all in
-    //    simulated NVM behind a simulated RDMA fabric.
-    let mut world = ErdaWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 32 << 20 },
-        LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 4 },
-        1 << 12,
-    );
-    world.preload(100, 128);
-    world.counters.active_clients = 3;
+    //    simulated NVM behind a simulated RDMA fabric — plus three scripted
+    //    clients:
+    //    * a well-behaved one: update, read back, delete;
+    //    * a crashing one whose one-sided write tears mid-transfer;
+    //    * a late reader that trips over the torn object, falls back to the
+    //      previous version, and has the server repair the entry.
+    let outcome = Cluster::builder()
+        .scheme(Scheme::Erda)
+        .heads(4)
+        .nvm_capacity(32 << 20)
+        .records(100)
+        .value_size(128)
+        .preload(100, 128)
+        .clients(0)
+        .warmup(0)
+        .script(vec![
+            Request::Put { key: key_of(1), value: vec![0x11; 128] },
+            Request::Get { key: key_of(1) },
+            Request::Put { key: key_of(2), value: vec![0x22; 128] },
+            Request::Get { key: key_of(2) },
+            Request::Delete { key: key_of(3) },
+            Request::Get { key: key_of(3) }, // miss: deleted
+        ])
+        .script(vec![Request::CrashDuringPut {
+            key: key_of(5),
+            value: vec![0xEE; 128],
+            chunks: 1,
+        }])
+        .script_at(2 * MS, vec![Request::Get { key: key_of(5) }])
+        .run();
+
+    // 2. The run's stats tell the §4.2 consistency story.
+    let s = &outcome.stats;
     println!("server up: 100 preloaded objects, 4 heads, hopscotch table");
-
-    let mut engine = Engine::new(world);
-
-    // 2. A well-behaved client: update, read back, delete.
-    let ops = vec![
-        ScriptOp::Update { key: key_of(1), value: vec![0x11; 128] },
-        ScriptOp::Read { key: key_of(1) },
-        ScriptOp::Update { key: key_of(2), value: vec![0x22; 128] },
-        ScriptOp::Read { key: key_of(2) },
-        ScriptOp::Delete { key: key_of(3) },
-        ScriptOp::Read { key: key_of(3) }, // miss: deleted
-    ];
-    let n_ops = ops.len() as u64;
-    engine.spawn(
-        Box::new(ErdaClient::new(
-            OpSource::Script(VecDeque::from(ops)),
-            n_ops,
-            ClientConfig { max_value: 128, ..ClientConfig::default() },
-        )),
-        0,
+    println!("ops completed:    {} over {} DES events", s.ops, s.events);
+    println!("mean latency:     {:.2} µs", s.latency.mean_us());
+    println!("read misses:      {} (the deleted key)", s.read_misses);
+    println!("inconsistencies:  {} (torn write caught by CRC)", s.inconsistencies_detected);
+    println!("fallback reads:   {}", s.fallback_reads);
+    println!("entry repairs:    {}", s.repairs);
+    println!(
+        "server CPU busy:  {:.1} µs (writes only — reads are one-sided)",
+        s.server_cpu_busy_ns as f64 / 1e3
     );
+    assert_eq!(s.inconsistencies_detected, 1, "torn object must be flagged");
+    assert_eq!(s.fallback_reads, 1, "reader must fall back to the old version");
+    assert_eq!(s.repairs, 1, "server entry must be rolled back");
 
-    // 3. A crashing client: its one-sided write tears mid-transfer.
-    engine.spawn(
-        Box::new(ErdaClient::new(
-            OpSource::Script(VecDeque::from(vec![ScriptOp::CrashDuringWrite {
-                key: key_of(5),
-                value: vec![0xEE; 128],
-                chunks: 1,
-            }])),
-            1,
-            ClientConfig::default(),
-        )),
-        0,
+    // 3. The settled store is directly inspectable afterwards.
+    let mut db = outcome.db;
+    assert_eq!(db.get(&key_of(1)).unwrap(), Some(vec![0x11u8; 128]));
+    assert_eq!(db.get(&key_of(2)).unwrap(), Some(vec![0x22u8; 128]));
+    assert!(db.get(&key_of(3)).unwrap().is_none(), "deleted");
+    assert_eq!(
+        db.get(&key_of(5)).unwrap(),
+        Some(vec![0xA5u8; 128]),
+        "torn update rolled back to the preloaded version"
     );
-
-    // 4. A late reader that trips over the torn object, falls back to the
-    //    previous version, and has the server repair the entry.
-    engine.spawn(
-        Box::new(ErdaClient::new(
-            OpSource::Script(VecDeque::from(vec![ScriptOp::Read { key: key_of(5) }])),
-            1,
-            ClientConfig { max_value: 128, ..ClientConfig::default() },
-        )),
-        2 * MS,
-    );
-
-    let end = engine.run();
-    let events = engine.events();
-    let w = &mut engine.state;
-    w.settle();
-
-    println!("\nvirtual makespan: {:.1} µs over {} DES events", end as f64 / 1e3, events);
-    println!("ops completed:    {}", w.counters.ops_measured);
-    println!("mean latency:     {:.2} µs", w.counters.latency.mean_us());
-    println!("read misses:      {} (the deleted key)", w.counters.read_misses);
-    println!("inconsistencies:  {} (torn write caught by CRC)", w.counters.inconsistencies);
-    println!("fallback reads:   {}", w.counters.fallbacks);
-    println!("entry repairs:    {}", w.counters.repairs);
-    println!("server CPU busy:  {:.1} µs (writes only — reads are one-sided)",
-        w.cpu.busy_ns() as f64 / 1e3);
-
-    assert_eq!(w.get(&key_of(1)).as_deref(), Some(&vec![0x11u8; 128][..]));
-    assert_eq!(w.get(&key_of(2)).as_deref(), Some(&vec![0x22u8; 128][..]));
-    assert!(w.get(&key_of(3)).is_none(), "deleted");
-    assert_eq!(w.get(&key_of(5)).as_deref(), Some(&vec![0xA5u8; 128][..]), "rolled back");
     println!("\nfinal state checks passed ✓");
 }

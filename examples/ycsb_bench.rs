@@ -2,7 +2,8 @@
 //! composing (deliverable (b)'s end-to-end validation run).
 //!
 //! Runs all three schemes over the four YCSB mixes on the simulated
-//! testbed, reports the paper's headline metrics (throughput, latency,
+//! testbed through the unified `store` facade — the scheme is just a loop
+//! variable — reports the paper's headline metrics (throughput, latency,
 //! server-CPU cost, NVM write bytes/op), then closes the loop through the
 //! AOT stack: a crash + batch-verified recovery using the PJRT-compiled
 //! Pallas CRC32 kernel. The run is recorded in EXPERIMENTS.md.
@@ -10,8 +11,8 @@
 //! Run: `make artifacts && cargo run --release --example ycsb_bench`
 
 use erda::sim::MS;
-use erda::workload::{run, DriverConfig, SchemeSel};
-use erda::ycsb::{Workload, WorkloadConfig};
+use erda::store::{Cluster, Scheme};
+use erda::ycsb::Workload;
 
 fn main() {
     let clients = 8;
@@ -24,23 +25,20 @@ fn main() {
         "workload", "scheme", "KOp/s", "mean µs", "CPU µs/op", "NVM B/op"
     );
     for wl in Workload::ALL {
-        for scheme in SchemeSel::ALL {
-            let cfg = DriverConfig {
-                scheme,
-                workload: WorkloadConfig {
-                    workload: wl,
-                    record_count: 1000,
-                    value_size: 256,
-                    theta: 0.99,
-                    seed: 0xE2DA,
-                },
-                clients,
-                ops_per_client: ops,
-                warmup: 5 * MS,
-                nvm_capacity: 128 << 20,
-                ..DriverConfig::default()
-            };
-            let s = run(&cfg);
+        for scheme in Scheme::ALL {
+            let s = Cluster::builder()
+                .scheme(scheme)
+                .workload(wl)
+                .records(1000)
+                .value_size(256)
+                .theta(0.99)
+                .seed(0xE2DA)
+                .clients(clients)
+                .ops_per_client(ops)
+                .warmup(5 * MS)
+                .nvm_capacity(128 << 20)
+                .run()
+                .stats;
             assert_eq!(s.read_misses, 0, "{scheme:?}/{wl:?} lost reads");
             println!(
                 "{:<14} {:<18} {:>10.2} {:>12.2} {:>14.2} {:>14.1}",
@@ -55,37 +53,30 @@ fn main() {
         println!();
     }
 
-    // Close the loop through the AOT stack: crash + PJRT-verified recovery.
+    // Close the loop through the AOT stack: crash + batch-verified recovery.
     match erda::runtime::Runtime::load_default() {
         Ok(rt) => {
-            use erda::erda::{recover, ErdaWorld};
-            use erda::log::{object, LogConfig};
-            use erda::nvm::NvmConfig;
             use erda::runtime::PjrtCheck;
-            use erda::sim::Timing;
+            use erda::store::RemoteStore;
+            use erda::ycsb::key_of;
 
-            let mut w = ErdaWorld::new(
-                Timing::default(),
-                NvmConfig { capacity: 32 << 20 },
-                LogConfig::default(),
-                1 << 12,
-            );
-            w.preload(1000, 256);
-            let key = erda::ycsb::key_of(123);
-            let obj = object::encode_object(&key, &vec![9u8; 256]);
-            let (_, _, addr) = w.server.write_request(&mut w.nvm, &key, obj.len());
-            w.nvm.write(addr, &obj[..40]); // torn
-            for h in 0..w.server.num_heads() {
-                let head = w.server.log.head_mut(h as u8);
-                head.tail = 0;
-                head.index.clear();
-            }
-            let report = recover(&mut w.server, &mut w.nvm, &mut PjrtCheck(&rt));
+            let mut db = Cluster::builder()
+                .scheme(Scheme::Erda)
+                .nvm_capacity(32 << 20)
+                .records(1000)
+                .value_size(256)
+                .preload(1000, 256)
+                .build_db();
+            db.crash_during_put(&key_of(123), &vec![9u8; 256], 0).expect("inject");
+            db.crash().expect("erda store");
+            let report = db.recover_with(&mut PjrtCheck(&rt)).expect("recovery");
             println!(
                 "recovery through the AOT Pallas kernel: {} entries checked, {} rolled back ✓",
                 report.entries_checked, report.entries_rolled_back
             );
             assert_eq!(report.entries_rolled_back, 1);
+            let restored = db.get(&key_of(123)).expect("get");
+            assert_eq!(restored, Some(vec![0xA5u8; 256]), "rolled back to old version");
         }
         Err(e) => println!("(skipping PJRT recovery pass: {e}; run `make artifacts`)"),
     }

@@ -6,20 +6,10 @@
 //! RDMA read (the extra round trip the paper eliminates); reads are
 //! identical to Redo Logging.
 
-use std::collections::VecDeque;
-
 use super::server::{BaselineWorld, Scheme};
-use crate::erda::ScriptOp;
 use crate::log::{object, LogOffset};
 use crate::sim::{Actor, Step, Time};
-use crate::ycsb::{Generator, Op};
-
-/// Op stream for a baseline client (shares ScriptOp with the Erda client;
-/// `CrashDuringWrite` tears the staged record instead of a log object).
-pub enum OpSource {
-    Ycsb(Generator),
-    Script(VecDeque<ScriptOp>),
-}
+use crate::store::{OpSource, Request};
 
 enum St {
     NextOp,
@@ -47,16 +37,6 @@ impl BaselineClient {
         BaselineClient { src, ops_left: ops, st: St::NextOp }
     }
 
-    fn next_op(&mut self) -> Option<ScriptOp> {
-        match &mut self.src {
-            OpSource::Ycsb(g) => Some(match g.next_op() {
-                Op::Read { key } => ScriptOp::Read { key },
-                Op::Update { key, value } => ScriptOp::Update { key, value },
-            }),
-            OpSource::Script(q) => q.pop_front(),
-        }
-    }
-
     fn die(&mut self, w: &mut BaselineWorld) -> Step {
         w.counters.active_clients = w.counters.active_clients.saturating_sub(1);
         self.st = St::Dead;
@@ -64,7 +44,7 @@ impl BaselineClient {
     }
 
     fn complete(&mut self, w: &mut BaselineWorld, start: Time, now: Time) -> Step {
-        w.counters.record_op(start, now);
+        w.counters.record_op(start, now, false);
         self.ops_left = self.ops_left.saturating_sub(1);
         if self.ops_left == 0 {
             return self.die(w);
@@ -74,13 +54,13 @@ impl BaselineClient {
     }
 
     fn start_op(&mut self, w: &mut BaselineWorld, now: Time) -> Step {
-        let op = match self.next_op() {
+        let op = match self.src.next() {
             Some(op) => op,
             None => return self.die(w),
         };
         let t = w.fabric.timing.clone();
         match op {
-            ScriptOp::Read { key } => {
+            Request::Get { key } => {
                 // Send; server searches staging, then hash table + dest.
                 let resp = object::wire_size(key.len(), w.server.slot_size);
                 let svc = t.cpu_request_fixed + t.cpu_log_search + t.cpu_hash_op
@@ -92,11 +72,11 @@ impl BaselineClient {
                 self.st = St::Read { key, start: now };
                 Step::At(done)
             }
-            ScriptOp::Update { key, value } => match w.server.scheme {
+            Request::Put { key, value } => match w.server.scheme {
                 Scheme::RedoLogging => self.issue_redo_write(w, key, value, now),
                 Scheme::ReadAfterWrite => self.issue_raw_addr_req(w, key, value, now, None),
             },
-            ScriptOp::Delete { key } => {
+            Request::Delete { key } => {
                 let svc = t.cpu_request_fixed + t.cpu_hash_op;
                 let arrival = w.fabric.one_way(now, key.len() + 16);
                 let resv = w.cpu.reserve(arrival, svc);
@@ -105,7 +85,7 @@ impl BaselineClient {
                 self.st = St::Delete { key, start: now };
                 Step::At(done)
             }
-            ScriptOp::CrashDuringWrite { key, value, chunks } => match w.server.scheme {
+            Request::CrashDuringPut { key, value, chunks } => match w.server.scheme {
                 // Redo: the send either arrives whole or not at all (two-
                 // sided messages are CPU-verified); model "not at all".
                 Scheme::RedoLogging => self.die(w),
@@ -156,7 +136,7 @@ impl Actor<BaselineWorld> for BaselineClient {
             St::NextOp => self.start_op(w, now),
 
             St::RedoWrite { key, value, start } => {
-                w.server.redo_write(&mut w.nvm, &key, &value);
+                w.server.redo_write(&mut w.nvm, &key, &value).expect("hash table full");
                 self.complete(w, start, now)
             }
 
@@ -221,7 +201,8 @@ impl Actor<BaselineWorld> for BaselineClient {
                     let BaselineWorld { nvm, fabric, .. } = w;
                     fabric.flush(now, nvm);
                 }
-                w.server.raw_commit(&mut w.nvm, &key, &value, staged_off, len);
+                w.server.raw_commit(&mut w.nvm, &key, &value, staged_off, len)
+                    .expect("hash table full");
                 self.complete(w, start, now)
             }
 

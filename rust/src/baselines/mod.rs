@@ -23,5 +23,9 @@ pub mod client;
 pub mod server;
 
 pub use applier::{ApplierActor, ApplierConfig};
-pub use client::{BaselineClient, OpSource as BaselineOpSource};
-pub use server::{BaselineServer, BaselineWorld, Counters as BaselineCounters, PendingWrite, Scheme};
+pub use client::BaselineClient;
+pub use server::{BaselineServer, BaselineWorld, PendingWrite, Scheme};
+
+// The op-stream types and run counters are shared across schemes now.
+pub use crate::metrics::Counters;
+pub use crate::store::{OpSource, Request};

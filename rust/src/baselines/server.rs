@@ -6,10 +6,11 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::hashtable::{AtomicRegion, HashTable};
 use crate::log::{object, Chain, LogOffset};
-use crate::metrics::LatencyRecorder;
+use crate::metrics::Counters;
 use crate::nvm::{Nvm, NvmConfig};
 use crate::rdma::Fabric;
-use crate::sim::{CpuPool, Time, Timing};
+use crate::sim::{CpuPool, Timing};
+use crate::store::StoreError;
 
 /// Which baseline this world runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,31 +44,6 @@ pub struct PendingWrite {
     pub len: u32,
     /// Delete marker (baselines zero the metadata instead of writing data).
     pub delete: bool,
-}
-
-/// Run counters (same shape as erda::Counters; kept separate because the
-/// baseline protocol surfaces no inconsistency/fallback events).
-#[derive(Debug, Default)]
-pub struct Counters {
-    pub ops_measured: u64,
-    pub latency: LatencyRecorder,
-    pub read_misses: u64,
-    pub applied: u64,
-    pub measure_from: Time,
-    pub last_completion: Time,
-    /// Clients still running (background actors exit when this hits 0).
-    pub active_clients: u32,
-}
-
-impl Counters {
-    pub fn record_op(&mut self, start: Time, end: Time) {
-        if start < self.measure_from {
-            return;
-        }
-        self.ops_measured += 1;
-        self.latency.record(end - start);
-        self.last_completion = self.last_completion.max(end);
-    }
 }
 
 /// Baseline server state.
@@ -109,20 +85,27 @@ impl BaselineServer {
     }
 
     /// Create a destination slot + metadata entry for a fresh key.
-    fn create_slot(&mut self, nvm: &mut Nvm, key: &[u8]) -> LogOffset {
+    fn create_slot(&mut self, nvm: &mut Nvm, key: &[u8]) -> Result<LogOffset, StoreError> {
         let off = self.dest.reserve(nvm, self.slot_size);
         self.table
             .insert(nvm, key, 0, AtomicRegion::initial(off))
-            .expect("hash table full");
-        off
+            .ok_or(StoreError::TableFull)?;
+        Ok(off)
     }
 
     /// Server-side handling of an arrived write: stage the record and queue
     /// it for asynchronous application. For RAW the staging bytes were
     /// already RDMA-written by the client; `staged_off` names them.
-    pub fn stage_write(&mut self, nvm: &mut Nvm, key: &[u8], value: &[u8], staged_off: LogOffset, len: u32) {
+    pub fn stage_write(
+        &mut self,
+        nvm: &mut Nvm,
+        key: &[u8],
+        value: &[u8],
+        staged_off: LogOffset,
+        len: u32,
+    ) -> Result<(), StoreError> {
         if self.table.lookup(nvm, key).is_none() {
-            self.create_slot(nvm, key);
+            self.create_slot(nvm, key)?;
         }
         self.pending.push_back(PendingWrite {
             key: key.to_vec(),
@@ -131,14 +114,20 @@ impl BaselineServer {
             delete: false,
         });
         self.pending_latest.insert(key.to_vec(), value.to_vec());
+        Ok(())
     }
 
     /// Redo-path write: the server itself appends the record to the redo
     /// log (the client sent the payload via RDMA send).
-    pub fn redo_write(&mut self, nvm: &mut Nvm, key: &[u8], value: &[u8]) {
+    pub fn redo_write(
+        &mut self,
+        nvm: &mut Nvm,
+        key: &[u8],
+        value: &[u8],
+    ) -> Result<(), StoreError> {
         let obj = object::encode_object(key, value);
         let off = self.staging.append_local(nvm, &obj);
-        self.stage_write(nvm, key, value, off, obj.len() as u32);
+        self.stage_write(nvm, key, value, off, obj.len() as u32)
     }
 
     /// RAW-path address request: reserve a ring-buffer slot for the client's
@@ -149,8 +138,15 @@ impl BaselineServer {
 
     /// RAW-path completion: client finished write + flush-read; record the
     /// staged entry for the applier.
-    pub fn raw_commit(&mut self, nvm: &mut Nvm, key: &[u8], value: &[u8], staged_off: LogOffset, len: u32) {
-        self.stage_write(nvm, key, value, staged_off, len);
+    pub fn raw_commit(
+        &mut self,
+        nvm: &mut Nvm,
+        key: &[u8],
+        value: &[u8],
+        staged_off: LogOffset,
+        len: u32,
+    ) -> Result<(), StoreError> {
+        self.stage_write(nvm, key, value, staged_off, len)
     }
 
     /// Delete: zero the metadata entry (paper Table 1's delete row).
@@ -250,7 +246,7 @@ impl BaselineWorld {
             let key = crate::ycsb::key_of(i);
             let value = vec![0xA5u8; value_size];
             let obj = object::encode_object(&key, &value);
-            let off = self.server.create_slot(&mut self.nvm, &key);
+            let off = self.server.create_slot(&mut self.nvm, &key).expect("preload slot");
             self.nvm.write(self.server.dest.addr_of(off), &obj);
         }
     }
@@ -297,7 +293,7 @@ mod tests {
         let mut w = world(Scheme::RedoLogging);
         w.preload(2, 256);
         let key = crate::ycsb::key_of(0);
-        w.server.redo_write(&mut w.nvm, &key, &vec![1u8; 256]);
+        w.server.redo_write(&mut w.nvm, &key, &vec![1u8; 256]).unwrap();
         // Unapplied: served from the staging search.
         assert_eq!(w.get(&key).unwrap(), vec![1u8; 256]);
         assert_eq!(w.server.pending_len(), 1);
@@ -314,7 +310,7 @@ mod tests {
         w.preload(1, 256);
         let key = crate::ycsb::key_of(0);
         w.nvm.reset_stats();
-        w.server.redo_write(&mut w.nvm, &key, &vec![9u8; 256]);
+        w.server.redo_write(&mut w.nvm, &key, &vec![9u8; 256]).unwrap();
         while w.server.apply_one(&mut w.nvm).is_some() {}
         let obj_len = object::wire_size(key.len(), 256) as u64;
         let programmed = w.nvm.stats().programmed_bytes;
@@ -358,8 +354,8 @@ mod tests {
         let mut w = world(Scheme::RedoLogging);
         w.preload(1, 8);
         let key = crate::ycsb::key_of(0);
-        w.server.redo_write(&mut w.nvm, &key, b"11111111");
-        w.server.redo_write(&mut w.nvm, &key, b"22222222");
+        w.server.redo_write(&mut w.nvm, &key, b"11111111").unwrap();
+        w.server.redo_write(&mut w.nvm, &key, b"22222222").unwrap();
         w.server.apply_one(&mut w.nvm); // applies "1111", shadow holds "2222"
         assert_eq!(w.get(&key).unwrap(), b"22222222");
         w.server.apply_one(&mut w.nvm);

@@ -4,6 +4,7 @@
 //! repro figures --all [--quick] [--out DIR]     regenerate every experiment
 //! repro figures --fig 18 [--quick] [--out DIR]  one figure (14..26)
 //! repro figures --table 1 [--out DIR]           Table 1
+//! repro smoke --scheme erda|redo|raw [--seed N] facade end-to-end smoke run
 //! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
 //! repro verify-runtime                          artifact self-check
 //! repro help
@@ -11,14 +12,16 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
-
+use crate::error::{anyhow, bail, Result};
 use crate::figures::{self, Fidelity};
+use crate::store::Scheme;
 
 /// Parsed command line.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Cmd {
     Figures { ids: Vec<String>, fidelity: Fidelity, out: Option<PathBuf> },
+    /// Exercise the `store` facade end-to-end for one scheme.
+    Smoke { scheme: Scheme, seed: u64 },
     Recover,
     VerifyRuntime,
     Help,
@@ -63,6 +66,31 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             }
             Ok(Cmd::Figures { ids, fidelity, out })
         }
+        "smoke" => {
+            let mut scheme = None;
+            let mut seed: u64 = 0xE2DA;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--scheme" => match it.next() {
+                        Some(v) => {
+                            scheme = Some(Scheme::parse(v).ok_or_else(|| {
+                                anyhow!("unknown scheme {v:?} (erda|redo|raw)")
+                            })?)
+                        }
+                        None => bail!("--scheme needs erda|redo|raw"),
+                    },
+                    "--seed" => match it.next() {
+                        Some(v) => seed = v.parse::<u64>()?,
+                        None => bail!("--seed needs a number"),
+                    },
+                    other => bail!("unknown smoke flag {other:?}"),
+                }
+            }
+            match scheme {
+                Some(scheme) => Ok(Cmd::Smoke { scheme, seed }),
+                None => bail!("smoke: pass --scheme erda|redo|raw"),
+            }
+        }
         "recover" => Ok(Cmd::Recover),
         "verify-runtime" => Ok(Cmd::VerifyRuntime),
         "help" | "--help" | "-h" => Ok(Cmd::Help),
@@ -78,6 +106,10 @@ USAGE:
   repro figures --fig N [--quick] [--out DIR] one experiment (N = 14..26)
   repro figures --table 1 [--out DIR]         Table 1 (NVM writes per op)
   repro figures --ablations [--out DIR]       design-choice ablations (A1–A4)
+  repro smoke --scheme erda|redo|raw [--seed N]
+                                              exercise the store facade end to
+                                              end (typed KV ops + a DES run);
+                                              deterministic in --seed
   repro recover                               crash-recovery demo (PJRT batch verify)
   repro verify-runtime                        check AOT artifacts against local CRC
   repro help                                  this text
@@ -126,5 +158,30 @@ mod tests {
     fn empty_is_help() {
         assert_eq!(p("").unwrap(), Cmd::Help);
         assert_eq!(p("help").unwrap(), Cmd::Help);
+    }
+
+    #[test]
+    fn parses_smoke() {
+        assert_eq!(
+            p("smoke --scheme erda").unwrap(),
+            Cmd::Smoke { scheme: Scheme::Erda, seed: 0xE2DA }
+        );
+        assert_eq!(
+            p("smoke --scheme raw --seed 7").unwrap(),
+            Cmd::Smoke { scheme: Scheme::ReadAfterWrite, seed: 7 }
+        );
+        assert_eq!(
+            p("smoke --seed 9 --scheme redo").unwrap(),
+            Cmd::Smoke { scheme: Scheme::RedoLogging, seed: 9 }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_smoke_input() {
+        assert!(p("smoke").is_err(), "scheme is required");
+        assert!(p("smoke --scheme nope").is_err());
+        assert!(p("smoke --scheme erda --seed ten").is_err());
+        assert!(p("smoke --scheme").is_err());
+        assert!(p("smoke --scheme erda --bogus").is_err());
     }
 }

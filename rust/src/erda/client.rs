@@ -14,35 +14,14 @@
 //! While the key's head is under log cleaning, ops go through two-sided
 //! sends served by the server CPU (§4.4) — that is what Fig 26 measures.
 //!
-//! Failure injection: a scripted `CrashDuringWrite` posts only a prefix of
-//! the object's chunks and kills the client, leaving a torn object for
-//! other clients (and recovery) to detect.
-
-use std::collections::VecDeque;
+//! Failure injection: a scripted [`Request::CrashDuringPut`] posts only a
+//! prefix of the object's chunks and kills the client, leaving a torn
+//! object for other clients (and recovery) to detect.
 
 use super::server::ErdaWorld;
 use crate::log::{object, HeadId, LogOffset, NO_OFFSET};
 use crate::sim::{Actor, Step, Time};
-use crate::ycsb::{Generator, Op};
-
-/// Where a client's operations come from.
-pub enum OpSource {
-    /// A YCSB generator (figure runs).
-    Ycsb(Generator),
-    /// A fixed script (tests, Table 1 measurements, failure injection).
-    Script(VecDeque<ScriptOp>),
-}
-
-/// Scripted operations (superset of YCSB ops).
-#[derive(Clone, Debug)]
-pub enum ScriptOp {
-    Read { key: Vec<u8> },
-    Update { key: Vec<u8>, value: Vec<u8> },
-    Delete { key: Vec<u8> },
-    /// Start an update but persist only the first `chunks` 64-byte chunks
-    /// of the object, then die.
-    CrashDuringWrite { key: Vec<u8>, value: Vec<u8>, chunks: usize },
-}
+use crate::store::{OpSource, Request};
 
 /// Client tunables.
 #[derive(Clone, Copy, Debug)]
@@ -102,16 +81,6 @@ impl ErdaClient {
         ErdaClient { src, ops_left: ops, cfg, st: St::NextOp }
     }
 
-    fn next_script_op(&mut self) -> Option<ScriptOp> {
-        match &mut self.src {
-            OpSource::Ycsb(g) => Some(match g.next_op() {
-                Op::Read { key } => ScriptOp::Read { key },
-                Op::Update { key, value } => ScriptOp::Update { key, value },
-            }),
-            OpSource::Script(q) => q.pop_front(),
-        }
-    }
-
     /// Client leaves the run (finished or crashed).
     fn die(&mut self, w: &mut ErdaWorld) -> Step {
         w.counters.active_clients = w.counters.active_clients.saturating_sub(1);
@@ -158,13 +127,13 @@ impl ErdaClient {
     }
 
     fn start_op(&mut self, w: &mut ErdaWorld, now: Time) -> Step {
-        let op = match self.next_script_op() {
+        let op = match self.src.next() {
             Some(op) => op,
             None => return self.die(w),
         };
         let t = &w.fabric.timing;
         match op {
-            ScriptOp::Read { key } => {
+            Request::Get { key } => {
                 let h = super::head_of(&key, w.server.num_heads());
                 if w.server.is_cleaning(h) {
                     // §4.4: two-sided send path during cleaning.
@@ -181,7 +150,7 @@ impl ErdaClient {
                     self.issue_entry_read(w, key, 0, now, now, false)
                 }
             }
-            ScriptOp::Update { key, value } => {
+            Request::Put { key, value } => {
                 let h = super::head_of(&key, w.server.num_heads());
                 if w.server.is_cleaning(h) {
                     let svc = t.cpu_request_fixed + t.cpu_baseline_write + t.cpu_hash_op
@@ -197,7 +166,7 @@ impl ErdaClient {
                     self.issue_write_request(w, key, obj, now, None)
                 }
             }
-            ScriptOp::Delete { key } => {
+            Request::Delete { key } => {
                 let h = super::head_of(&key, w.server.num_heads());
                 if w.server.is_cleaning(h) {
                     let svc = t.cpu_request_fixed + t.cpu_baseline_write + t.cpu_hash_op;
@@ -212,7 +181,7 @@ impl ErdaClient {
                     self.issue_write_request(w, key, obj, now, None)
                 }
             }
-            ScriptOp::CrashDuringWrite { key, value, chunks } => {
+            Request::CrashDuringPut { key, value, chunks } => {
                 let obj = object::encode_object(&key, &value);
                 self.issue_write_request(w, key, obj, now, Some(chunks))
             }

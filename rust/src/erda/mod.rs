@@ -19,9 +19,14 @@ pub mod recovery;
 pub mod server;
 
 pub use cleaner::{CleanerActor, CleanerConfig};
-pub use client::{ClientConfig, ErdaClient, OpSource, ScriptOp};
+pub use client::{ClientConfig, ErdaClient};
 pub use recovery::{recover, BatchCheck, LocalCheck, RecoveryReport};
-pub use server::{Counters, ErdaServer, ErdaWorld};
+pub use server::{ErdaServer, ErdaWorld};
+
+// The op-stream types moved into the scheme-agnostic facade; re-exported
+// here because the Erda client consumes them directly.
+pub use crate::metrics::Counters;
+pub use crate::store::{OpSource, Request};
 
 use crate::log::HeadId;
 

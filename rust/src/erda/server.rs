@@ -12,49 +12,11 @@ use std::collections::HashMap;
 use crate::hashtable::{entry, AtomicRegion, HashTable};
 use crate::log::cleaner::{CleaningState, Phase};
 use crate::log::{object, HeadId, LogConfig, LogOffset, LogStore, NO_OFFSET};
-use crate::metrics::LatencyRecorder;
+use crate::metrics::Counters;
 use crate::nvm::{Nvm, NvmConfig};
 use crate::rdma::Fabric;
-use crate::sim::{CpuPool, Time, Timing};
-
-/// Counters shared by all actors of a run.
-#[derive(Debug, Default)]
-pub struct Counters {
-    pub ops_measured: u64,
-    pub latency: LatencyRecorder,
-    /// Latency of ops that ran while their head was under cleaning (Fig 26).
-    pub latency_during_cleaning: LatencyRecorder,
-    pub inconsistencies: u64,
-    pub fallbacks: u64,
-    pub retries: u64,
-    pub repairs: u64,
-    pub read_misses: u64,
-    pub cleanings_completed: u64,
-    /// Virtual time measurement starts (ops completing before are warmup).
-    pub measure_from: Time,
-    pub first_completion: Time,
-    pub last_completion: Time,
-    /// Clients still running (background actors exit when this hits 0).
-    pub active_clients: u32,
-}
-
-impl Counters {
-    pub fn record_op(&mut self, start: Time, end: Time, during_cleaning: bool) {
-        if start < self.measure_from {
-            return;
-        }
-        self.ops_measured += 1;
-        if during_cleaning {
-            self.latency_during_cleaning.record(end - start);
-        } else {
-            self.latency.record(end - start);
-        }
-        if self.first_completion == 0 {
-            self.first_completion = end;
-        }
-        self.last_completion = self.last_completion.max(end);
-    }
-}
+use crate::sim::{CpuPool, Timing};
+use crate::store::StoreError;
 
 /// The Erda server: metadata hash table + log-structured store + per-head
 /// cleaning state.
@@ -103,6 +65,21 @@ impl ErdaServer {
         key: &[u8],
         obj_len: usize,
     ) -> (HeadId, LogOffset, crate::nvm::Addr) {
+        self.try_write_request(nvm, key, obj_len).expect("write request")
+    }
+
+    /// [`ErdaServer::write_request`] with typed failure instead of panics —
+    /// the [`crate::store`] facade's entry point.
+    pub fn try_write_request(
+        &mut self,
+        nvm: &mut Nvm,
+        key: &[u8],
+        obj_len: usize,
+    ) -> Result<(HeadId, LogOffset, crate::nvm::Addr), StoreError> {
+        let max = self.log.cfg.segment_size as usize;
+        if obj_len > max {
+            return Err(StoreError::ValueTooLarge { size: obj_len, max });
+        }
         let h = super::head_of(key, self.num_heads());
         let phase = self.cleaning[h as usize].as_ref().map(|c| c.phase);
         match phase {
@@ -116,10 +93,10 @@ impl ErdaServer {
                     None => {
                         self.table
                             .insert(nvm, key, h, AtomicRegion::initial(off))
-                            .expect("hash table full");
+                            .ok_or(StoreError::TableFull)?;
                     }
                 }
-                (h, off, self.log.addr_of(h, off))
+                Ok((h, off, self.log.addr_of(h, off)))
             }
             Some(Phase::Notify) | Some(Phase::Merge) => {
                 let off = self.log.reserve(nvm, h, obj_len);
@@ -131,10 +108,10 @@ impl ErdaServer {
                     None => {
                         self.table
                             .insert(nvm, key, h, AtomicRegion::initial(off))
-                            .expect("hash table full");
+                            .ok_or(StoreError::TableFull)?;
                     }
                 }
-                (h, off, self.log.addr_of(h, off))
+                Ok((h, off, self.log.addr_of(h, off)))
             }
             Some(Phase::Replicate) => {
                 let c = self.cleaning[h as usize].as_mut().expect("cleaning");
@@ -148,10 +125,10 @@ impl ErdaServer {
                     }
                     None => {
                         let r = AtomicRegion { new_tag: true, off_a: NO_OFFSET, off_b: off };
-                        self.table.insert(nvm, key, h, r).expect("hash table full");
+                        self.table.insert(nvm, key, h, r).ok_or(StoreError::TableFull)?;
                     }
                 }
-                (h, off, addr)
+                Ok((h, off, addr))
             }
         }
     }

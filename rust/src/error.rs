@@ -1,0 +1,147 @@
+//! Minimal error plumbing (the offline vendor set has no `anyhow`; see
+//! DESIGN.md §3). Mirrors the subset of the `anyhow` API the crate uses:
+//! a string-backed [`Error`], a [`Result`] alias, the [`anyhow!`]/[`bail!`]/
+//! [`ensure!`] macros and a [`Context`] extension trait.
+//!
+//! Typed *store* errors live in [`crate::store::StoreError`]; this module is
+//! for driver/CLI/runtime plumbing where a message is all that is needed.
+
+use std::fmt;
+
+/// A string-backed error with optional context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error`, which is what makes the blanket conversion coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a failure, `anyhow::Context`-style.
+pub trait Context<T> {
+    /// Prefix the error with `c` on failure.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Prefix the error with `f()` on failure (lazy).
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {}", e.into())))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", f(), e.into())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::error::Error::msg(::std::format!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+// Make the macros importable alongside the types:
+// `use crate::error::{bail, ensure, Result};`
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("boom {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 7");
+        assert_eq!(format!("{e:?}"), "boom 7");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(30).unwrap_err().to_string(), "too big: 30");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}

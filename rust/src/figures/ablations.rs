@@ -12,14 +12,12 @@
 //! A4  cleaner batch (impl)      — during-cleaning client latency vs the
 //!     cleaner's per-step batch (CPU burstiness trade-off).
 
-use std::collections::VecDeque;
-
 use super::Rendered;
-use crate::erda::{CleanerConfig, ClientConfig, ErdaClient, ErdaWorld, OpSource, ScriptOp};
+use crate::erda::{CleanerConfig, ClientConfig};
 use crate::hashtable::AtomicRegion;
-use crate::log::LogConfig;
 use crate::nvm::{Nvm, NvmConfig};
-use crate::sim::{Engine, Timing, MS};
+use crate::sim::MS;
+use crate::store::{Cluster, RemoteStore, Request, Scheme};
 use crate::workload::{run, DriverConfig, SchemeSel};
 use crate::ycsb::{key_of, Workload, WorkloadConfig};
 
@@ -63,90 +61,47 @@ fn a1_flip_bit() -> (f64, f64) {
 
 /// A2: DCW elision per update, end-to-end (programmed vs requested bytes).
 fn a2_dcw(value_size: usize) -> (f64, f64) {
-    let cfg = DriverConfig {
-        scheme: SchemeSel::Erda,
-        workload: WorkloadConfig {
-            workload: Workload::UpdateOnly,
-            record_count: 200,
-            value_size,
-            theta: 0.99,
-            seed: 0xD0C,
-        },
-        clients: 2,
-        ops_per_client: 400,
-        warmup: 2 * MS,
-        nvm_capacity: 64 << 20,
-        ..Default::default()
-    };
-    let s = run(&cfg);
-    // requested bytes aren't in RunStats; re-derive from a direct run.
-    let mut w = ErdaWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 64 << 20 },
-        LogConfig::default(),
-        1024,
-    );
-    w.preload(1, value_size);
-    w.nvm.reset_stats();
-    w.counters.active_clients = 1;
-    let mut engine = Engine::new(w);
-    let ops: Vec<ScriptOp> = (0..50)
-        .map(|i| ScriptOp::Update { key: key_of(0), value: vec![i as u8; value_size] })
-        .collect();
-    engine.spawn(
-        Box::new(ErdaClient::new(
-            OpSource::Script(VecDeque::from(ops)),
-            50,
-            ClientConfig { max_value: value_size, ..Default::default() },
-        )),
-        0,
-    );
-    engine.run();
-    engine.state.settle();
-    let st = engine.state.nvm.stats();
-    let _ = s;
+    let mut db = Cluster::builder()
+        .scheme(Scheme::Erda)
+        .records(1)
+        .value_size(value_size)
+        .nvm_capacity(64 << 20)
+        .preload(1, value_size)
+        .build_db();
+    let before = db.nvm_stats();
+    for i in 0..50u32 {
+        db.put(&key_of(0), &vec![i as u8; value_size]).expect("a2 update");
+    }
+    let st = db.nvm_stats().since(&before);
     (st.programmed_bytes as f64 / 50.0, st.requested_bytes as f64 / 50.0)
 }
 
 /// A3: reads the checksum gate saved from returning torn bytes.
 fn a3_checksum_gate() -> (u64, u64) {
-    let mut w = ErdaWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 32 << 20 },
-        LogConfig::default(),
-        1 << 12,
-    );
-    w.preload(50, 1024);
-    w.counters.active_clients = 11;
-    let mut engine = Engine::new(w);
     // 10 writers crash at assorted truncation points; readers poll the keys.
+    let mut b = Cluster::builder()
+        .scheme(Scheme::Erda)
+        .clients(0)
+        .warmup(0)
+        .records(50)
+        .value_size(1024)
+        .nvm_capacity(32 << 20)
+        .preload(50, 1024);
     for i in 0..10u64 {
-        engine.spawn(
-            Box::new(ErdaClient::new(
-                OpSource::Script(VecDeque::from(vec![ScriptOp::CrashDuringWrite {
-                    key: key_of(i),
-                    value: vec![0xEE; 1024],
-                    chunks: (i % 16) as usize,
-                }])),
-                1,
-                ClientConfig::default(),
-            )),
+        b = b.script_client(
             i * 50_000,
+            vec![Request::CrashDuringPut {
+                key: key_of(i),
+                value: vec![0xEE; 1024],
+                chunks: (i % 16) as usize,
+            }],
+            ClientConfig::default(),
         );
     }
-    let reads: Vec<ScriptOp> =
-        (0..100).map(|j| ScriptOp::Read { key: key_of(j % 10) }).collect();
-    engine.spawn(
-        Box::new(ErdaClient::new(
-            OpSource::Script(VecDeque::from(reads)),
-            100,
-            ClientConfig { max_value: 1024, ..Default::default() },
-        )),
-        1 * MS,
-    );
-    engine.run();
-    let c = &engine.state.counters;
-    (c.inconsistencies, c.fallbacks + c.retries)
+    let reads: Vec<Request> = (0..100).map(|j| Request::Get { key: key_of(j % 10) }).collect();
+    b = b.script_client(1 * MS, reads, ClientConfig { max_value: 1024, ..Default::default() });
+    let stats = b.run().stats;
+    (stats.inconsistencies_detected, stats.fallback_reads + stats.retries)
 }
 
 /// A4: during-cleaning latency vs cleaner batch size.

@@ -1,6 +1,8 @@
 //! Table 1: the number of NVM writes (bytes) for create / update / delete
 //! under each scheme — *measured* from the NVM simulator's DCW-counted
-//! programmed-byte accounting, next to the paper's formulas.
+//! programmed-byte accounting, next to the paper's formulas. Each cell is
+//! one [`Request`] executed against a fresh [`Db`] through the scheme-
+//! agnostic facade.
 //!
 //! Codec note: our object header carries explicit `klen`/`vlen` fields
 //! (3 bytes) that the paper's 5-byte header leaves implicit, and the hash
@@ -9,93 +11,52 @@
 //! roughly half the bytes of Redo Logging / Read After Write for create and
 //! update, because it never writes the object twice.
 
-use std::collections::VecDeque;
-
 use super::Rendered;
-use crate::baselines::{
-    ApplierActor, ApplierConfig, BaselineClient, BaselineOpSource, BaselineWorld, Scheme,
-};
-use crate::erda::{ClientConfig, ErdaClient, ErdaWorld, OpSource, ScriptOp};
 use crate::log::LogConfig;
-use crate::nvm::NvmConfig;
-use crate::sim::{Engine, Timing};
-use crate::workload::SchemeSel;
+use crate::store::{Cluster, Db, RemoteStore, Request, Scheme};
 use crate::ycsb::key_of;
 
 /// Value size used for the measurement (N in the paper = key + value bytes).
 const VALUE: usize = 256;
 
-fn log_cfg() -> LogConfig {
-    LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 }
+/// A fresh single-key store for one scheme (empty for the create row).
+fn db(scheme: Scheme, preload_key: bool) -> Db {
+    Cluster::builder()
+        .scheme(scheme)
+        .log(LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 })
+        .nvm_capacity(16 << 20)
+        .records(1)
+        .value_size(VALUE)
+        .preload(if preload_key { 1 } else { 0 }, VALUE)
+        .build_db()
 }
 
-/// Run one scripted op against a fresh Erda world; return programmed bytes.
-fn erda_op_bytes(op: ScriptOp, preload_key: bool) -> u64 {
-    let mut w = ErdaWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 16 << 20 },
-        log_cfg(),
-        1 << 10,
-    );
-    if preload_key {
-        w.preload(1, VALUE);
-    }
-    w.nvm.reset_stats();
-    w.counters.active_clients = 1;
-    let mut engine = Engine::new(w);
-    let client = ErdaClient::new(
-        OpSource::Script(VecDeque::from(vec![op])),
-        1,
-        ClientConfig { max_value: VALUE, ..ClientConfig::default() },
-    );
-    engine.spawn(Box::new(client), 0);
-    engine.run();
-    engine.state.settle();
-    engine.state.nvm.stats().programmed_bytes
+/// Run one protocol op against a fresh store; return programmed bytes
+/// (baseline stores drain their apply queue synchronously, so the second
+/// NVM write is included).
+fn op_bytes(scheme: Scheme, op: Request, preload_key: bool) -> u64 {
+    let mut store = db(scheme, preload_key);
+    let before = store.nvm_stats();
+    store.execute(op).expect("table1 op");
+    store.nvm_stats().since(&before).programmed_bytes
 }
 
-/// Run one scripted op against a fresh baseline world (applier included);
-/// return programmed bytes after the async apply drains.
-fn baseline_op_bytes(scheme: Scheme, op: ScriptOp, preload_key: bool) -> u64 {
-    let mut w = BaselineWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 16 << 20 },
-        scheme,
-        1 << 10,
-        1 << 18,
-        1 << 13,
-        crate::log::object::wire_size(24, VALUE),
-    );
-    if preload_key {
-        w.preload(1, VALUE);
-    }
-    w.nvm.reset_stats();
-    w.counters.active_clients = 1;
-    let mut engine = Engine::new(w);
-    let client = BaselineClient::new(BaselineOpSource::Script(VecDeque::from(vec![op])), 1);
-    engine.spawn(Box::new(client), 0);
-    engine.spawn(Box::new(ApplierActor::new(ApplierConfig::default())), 0);
-    engine.run();
-    engine.state.settle();
-    engine.state.nvm.stats().programmed_bytes
-}
-
-fn ops_for(create: bool, delete: bool) -> ScriptOp {
+fn ops_for(create: bool, delete: bool) -> Request {
     // Create uses a key outside the preloaded range; update/delete use it.
     let key = if create { key_of(500) } else { key_of(0) };
     if delete {
-        ScriptOp::Delete { key }
+        Request::Delete { key }
     } else {
-        ScriptOp::Update { key, value: vec![0x3Cu8; VALUE] }
+        Request::Put { key, value: vec![0x3Cu8; VALUE] }
     }
 }
 
 /// Paper formulas (bytes), N = size of the key-value pair.
-fn paper_formula(scheme: SchemeSel, op: &str, key_len: u64, n: u64) -> (String, u64) {
+fn paper_formula(scheme: Scheme, op: &str, key_len: u64, n: u64) -> (String, u64) {
     match (scheme, op) {
-        (SchemeSel::Erda, "create") => ("Size(key)+10+N".into(), key_len + 10 + n),
-        (SchemeSel::Erda, "update") => ("9+N".into(), 9 + n),
-        (SchemeSel::Erda, "delete") => ("Size(key)+9".into(), key_len + 9),
+        (Scheme::Erda, "create") => ("Size(key)+10+N".into(), key_len + 10 + n),
+        (Scheme::Erda, "update") => ("9+N".into(), 9 + n),
+        (Scheme::Erda, "delete") => ("Size(key)+9".into(), key_len + 9),
         (_, "create") => ("Size(key)+12+2N".into(), key_len + 12 + 2 * n),
         (_, "update") => ("4+2N".into(), 4 + 2 * n),
         (_, "delete") => ("Size(key)+8".into(), key_len + 8),
@@ -112,16 +73,8 @@ pub fn table1() -> Rendered {
     for (op, create, delete) in
         [("create", true, false), ("update", false, false), ("delete", false, true)]
     {
-        for scheme in SchemeSel::ALL {
-            let measured = match scheme {
-                SchemeSel::Erda => erda_op_bytes(ops_for(create, delete), !create),
-                SchemeSel::RedoLogging => {
-                    baseline_op_bytes(Scheme::RedoLogging, ops_for(create, delete), !create)
-                }
-                SchemeSel::ReadAfterWrite => {
-                    baseline_op_bytes(Scheme::ReadAfterWrite, ops_for(create, delete), !create)
-                }
-            };
+        for scheme in Scheme::ALL {
+            let measured = op_bytes(scheme, ops_for(create, delete), !create);
             let (formula, expect) = paper_formula(scheme, op, key_len, n);
             rows.push(vec![
                 op.to_string(),

@@ -3,11 +3,20 @@
 //! A full reproduction of the Erda system (Liu, Hua, Li, Liu — 2019) as the
 //! L3 coordinator of a three-layer Rust + JAX + Pallas stack. Python runs
 //! only at build time (`make artifacts`); this crate is self-contained at
-//! runtime and loads the AOT-compiled batch-verification artifacts through
-//! the PJRT CPU client (`runtime` module).
+//! runtime and (under `--features pjrt`) loads the AOT-compiled batch-
+//! verification artifacts through the PJRT CPU client (`runtime` module).
+//!
+//! The crate is used through the [`store`] facade: pick a [`store::Scheme`]
+//! (Erda, Redo Logging, Read After Write), build a [`store::Cluster`] for a
+//! timing-accurate DES run or a [`store::Db`] for one-shot typed KV ops —
+//! every example, figure and integration test goes through that one API.
 //!
 //! Layout (see DESIGN.md for the full inventory):
 //!
+//! - [`store`] — **the unified facade**: [`store::Scheme`] selection,
+//!   [`store::Request`]/[`store::Response`] protocol, the
+//!   [`store::RemoteStore`] trait with typed [`store::StoreError`], the
+//!   [`store::Cluster`] builder/driver and the synchronous [`store::Db`].
 //! - [`sim`] — deterministic discrete-event simulation core (virtual clock,
 //!   actors, c-server queueing resources, seeded RNG, timing calibration).
 //! - [`nvm`] — byte-addressable NVM simulator: 8-byte failure atomicity,
@@ -24,15 +33,21 @@
 //!   detection, client-driven repair, server crash recovery.
 //! - [`baselines`] — Redo Logging and Read After Write comparators (§5.1).
 //! - [`ycsb`] — YCSB-style workload generation (Zipfian 0.99).
-//! - [`metrics`] — latency/throughput/CPU/NVM-write accounting.
-//! - [`runtime`] — PJRT artifact loading + batch CRC/hash execution.
+//! - [`metrics`] — the shared run [`metrics::Counters`] plus
+//!   latency/throughput/CPU/NVM-write accounting ([`metrics::RunStats`]).
+//! - [`workload`] — sweep-friendly [`workload::DriverConfig`] + the one-call
+//!   [`workload::run`] (a thin wrapper over [`store::Cluster`]).
+//! - [`runtime`] — batch CRC/hash execution: PJRT artifact loading under
+//!   `--features pjrt`, a bit-identical local backend otherwise.
 //! - [`figures`] — regeneration harness for every paper figure and table.
+//! - [`error`] — minimal `anyhow`-style error plumbing (offline build).
 
 pub mod baselines;
 pub mod bench_util;
 pub mod cli;
 pub mod crc;
 pub mod erda;
+pub mod error;
 pub mod figures;
 pub mod hashtable;
 pub mod log;
@@ -41,5 +56,6 @@ pub mod nvm;
 pub mod rdma;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod workload;
 pub mod ycsb;

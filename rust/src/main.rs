@@ -1,7 +1,8 @@
 //! `repro` — the leader entrypoint: regenerate the paper's experiments,
-//! run the crash-recovery demo, or self-check the AOT artifacts.
+//! smoke-test the store facade, run the crash-recovery demo, or self-check
+//! the AOT artifacts.
 
-use anyhow::Result;
+use erda::error::Result;
 
 use erda::cli::{self, Cmd};
 use erda::figures;
@@ -22,9 +23,66 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
+        Cmd::Smoke { scheme, seed } => smoke(scheme, seed),
         Cmd::VerifyRuntime => verify_runtime(),
         Cmd::Recover => recover_demo(),
     }
+}
+
+/// Facade smoke test: typed one-shot ops through `Db`, then a full DES run
+/// through `Cluster` — the same two doors every example and test uses.
+/// Deterministic in `seed`.
+fn smoke(scheme: erda::store::Scheme, seed: u64) -> Result<()> {
+    use erda::store::{Cluster, RemoteStore, Request};
+    use erda::ycsb::{key_of, Workload};
+
+    println!("smoke: scheme = {}, seed = {seed:#x}", scheme.label());
+
+    // 1. Typed KV ops against a synchronous store handle.
+    let mut db = Cluster::builder()
+        .scheme(scheme)
+        .records(16)
+        .value_size(64)
+        .preload(16, 64)
+        .build_db();
+    erda::ensure!(db.get(&key_of(0))?.is_some(), "preloaded key missing");
+    db.put(&key_of(0), &vec![0x5Au8; 64])?;
+    erda::ensure!(db.get(&key_of(0))? == Some(vec![0x5Au8; 64]), "read-your-write failed");
+    db.delete(&key_of(1))?;
+    erda::ensure!(db.get(&key_of(1))?.is_none(), "delete did not hide the key");
+    db.execute(Request::CrashDuringPut { key: key_of(2), value: vec![0xEEu8; 64], chunks: 0 })?;
+    erda::ensure!(
+        db.get(&key_of(2))? == Some(vec![0xA5u8; 64]),
+        "torn write surfaced an inconsistent value"
+    );
+    println!("  db ops OK: put / get / delete / torn-write ({:?})", db.op_stats());
+
+    // 2. End-to-end DES run (clients, fabric, virtual time).
+    let outcome = Cluster::builder()
+        .scheme(scheme)
+        .clients(4)
+        .ops_per_client(250)
+        .workload(Workload::UpdateHeavy)
+        .records(200)
+        .value_size(256)
+        .seed(seed)
+        .run();
+    let s = &outcome.stats;
+    erda::ensure!(
+        s.ops > 0 && s.read_misses == 0,
+        "engine run unhealthy: {} ops, {} read misses",
+        s.ops,
+        s.read_misses
+    );
+    println!(
+        "  engine run OK: {} ops, {:.2} KOp/s, mean {:.2} µs, {} DES events",
+        s.ops,
+        s.kops(),
+        s.latency.mean_us(),
+        s.events
+    );
+    println!("smoke OK ({})", scheme.id());
+    Ok(())
 }
 
 /// Self-check: the AOT artifacts must agree with the local implementations.
@@ -42,60 +100,58 @@ fn verify_runtime() -> Result<()> {
         items.push((buf, crc));
     }
     let verdicts = rt.verify_batch(&items)?;
-    anyhow::ensure!(verdicts.iter().all(|&v| v), "verify_batch disagreed with local CRC");
+    erda::ensure!(verdicts.iter().all(|&v| v), "verify_batch disagreed with local CRC");
     let keys: Vec<Vec<u8>> = (0..64).map(|i| format!("user{i:08}").into_bytes()).collect();
     let hashes = rt.bucket_batch(&keys)?;
     for (k, h) in keys.iter().zip(&hashes) {
-        anyhow::ensure!(*h == fnv1a(k), "bucket_batch disagreed with local FNV-1a");
+        erda::ensure!(*h == fnv1a(k), "bucket_batch disagreed with local FNV-1a");
     }
-    println!("runtime OK: {} verify items, {} bucket keys match local implementations",
-        items.len(), keys.len());
+    println!(
+        "runtime OK: {} verify items, {} bucket keys match local implementations",
+        items.len(),
+        keys.len()
+    );
     Ok(())
 }
 
-/// Demo: torn write at the server, crash, batch-verified recovery via PJRT.
+/// Demo: torn writes at the server, crash, batch-verified recovery —
+/// entirely through the store facade.
 fn recover_demo() -> Result<()> {
-    use erda::erda::{recover, ErdaWorld};
-    use erda::log::{object, LogConfig};
-    use erda::nvm::NvmConfig;
+    use erda::log::LogConfig;
     use erda::runtime::PjrtCheck;
-    use erda::sim::Timing;
+    use erda::store::{Cluster, RemoteStore, Scheme};
     use erda::ycsb::key_of;
 
     let rt = erda::runtime::Runtime::load_default()?;
-    let mut w = ErdaWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 32 << 20 },
-        LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 4 },
-        1 << 12,
-    );
     println!("preloading 500 objects…");
-    w.preload(500, 256);
+    let mut db = Cluster::builder()
+        .scheme(Scheme::Erda)
+        .log(LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 4 })
+        .nvm_capacity(32 << 20)
+        .records(500)
+        .value_size(256)
+        .preload(500, 256)
+        .build_db();
 
-    // Tear three updates: metadata published, data only partially persisted.
-    for (i, persist) in [(7u64, 0usize), (42, 16), (99, 64)] {
-        let key = key_of(i);
-        let obj = object::encode_object(&key, &vec![0xEEu8; 256]);
-        let (_, _, addr) = w.server.write_request(&mut w.nvm, &key, obj.len());
-        w.nvm.write(addr, &obj[..persist.min(obj.len())]);
-        println!("tore update of {:?} ({} of {} bytes persisted)",
-            String::from_utf8_lossy(&key), persist.min(obj.len()), obj.len());
+    // Tear three updates: metadata published, data missing or truncated.
+    for (i, chunks) in [(7u64, 0usize), (42, 0), (99, 1)] {
+        db.crash_during_put(&key_of(i), &vec![0xEEu8; 256], chunks)?;
+        println!(
+            "tore update of {:?} ({} of 284 bytes persisted)",
+            String::from_utf8_lossy(&key_of(i)),
+            chunks * 64,
+        );
     }
 
-    // Crash: volatile bookkeeping gone.
-    for h in 0..w.server.num_heads() {
-        let head = w.server.log.head_mut(h as u8);
-        head.tail = 0;
-        head.index.clear();
-    }
-
-    println!("recovering with the PJRT batch verifier (AOT Pallas CRC32 kernel)…");
-    let report = recover(&mut w.server, &mut w.nvm, &mut PjrtCheck(&rt));
+    // Crash: volatile bookkeeping gone; recover through the batch verifier.
+    db.crash()?;
+    println!("recovering with the batch verifier (AOT Pallas CRC32 kernel under --features pjrt)…");
+    let report = db.recover_with(&mut PjrtCheck(&rt))?;
     println!("{report:#?}");
-    anyhow::ensure!(report.entries_rolled_back == 3, "expected 3 rollbacks");
+    erda::ensure!(report.entries_rolled_back == 3, "expected 3 rollbacks");
     for i in [7u64, 42, 99] {
-        let v = w.get(&key_of(i)).expect("rolled back to old version");
-        anyhow::ensure!(v == vec![0xA5u8; 256], "key {i} value wrong");
+        let v = db.get(&key_of(i))?;
+        erda::ensure!(v == Some(vec![0xA5u8; 256]), "key {i} value wrong");
     }
     println!("recovery OK: 3 torn entries rolled back, 500 objects consistent");
     Ok(())

@@ -1,10 +1,17 @@
-//! Measurement: latency distributions, throughput, server-CPU cost.
+//! Measurement: latency distributions, throughput, server-CPU cost, and the
+//! run counters shared by every scheme.
 //!
 //! The paper reports average latency per value size (Figs 14–17), throughput
 //! per thread count (Figs 18–21), normalized server-CPU cost (Figs 22–25)
 //! and latency under log cleaning (Fig 26). All of those reduce to the two
 //! recorders here plus the CPU busy accounting in [`crate::sim::CpuPool`]
 //! and the NVM write accounting in [`crate::nvm::WriteStats`].
+//!
+//! [`Counters`] is the single run-counter struct for *all three schemes*
+//! (Erda, Redo Logging, Read After Write): the worlds share it, and the
+//! [`crate::store`] facade reads it uniformly. Fields a scheme never touches
+//! (e.g. `inconsistencies` for the baselines, `applied` for Erda) simply
+//! stay zero.
 
 use crate::sim::Time;
 
@@ -65,6 +72,54 @@ impl LatencyRecorder {
     }
 }
 
+/// Counters shared by all actors of a run — one struct for every scheme
+/// (the deduplicated union of the former `erda::server::Counters` and
+/// `baselines::server::Counters`).
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub ops_measured: u64,
+    pub latency: LatencyRecorder,
+    /// Latency of ops that ran while their head was under cleaning (Fig 26).
+    pub latency_during_cleaning: LatencyRecorder,
+    /// Reads that detected an inconsistent (torn) object via checksum.
+    pub inconsistencies: u64,
+    /// Reads that fell back to the previous version.
+    pub fallbacks: u64,
+    /// Read retries while waiting out a §4.3 write window.
+    pub retries: u64,
+    /// Server entries rolled back by client-driven repair.
+    pub repairs: u64,
+    pub read_misses: u64,
+    /// Completed log cleanings (Erda).
+    pub cleanings_completed: u64,
+    /// Staged records applied to destination storage (baseline applier).
+    pub applied: u64,
+    /// Virtual time measurement starts (ops completing before are warmup).
+    pub measure_from: Time,
+    pub first_completion: Time,
+    pub last_completion: Time,
+    /// Clients still running (background actors exit when this hits 0).
+    pub active_clients: u32,
+}
+
+impl Counters {
+    pub fn record_op(&mut self, start: Time, end: Time, during_cleaning: bool) {
+        if start < self.measure_from {
+            return;
+        }
+        self.ops_measured += 1;
+        if during_cleaning {
+            self.latency_during_cleaning.record(end - start);
+        } else {
+            self.latency.record(end - start);
+        }
+        if self.first_completion == 0 {
+            self.first_completion = end;
+        }
+        self.last_completion = self.last_completion.max(end);
+    }
+}
+
 /// Result of one workload run (one scheme × one config point).
 #[derive(Clone, Debug, Default)]
 pub struct RunStats {
@@ -78,12 +133,18 @@ pub struct RunStats {
     pub latency_cleaning: LatencyRecorder,
     /// Server CPU busy time during the measured phase, ns.
     pub server_cpu_busy_ns: u128,
-    /// NVM bytes programmed during the measured phase.
+    /// NVM bytes programmed during the measured phase (after DCW elision).
     pub nvm_programmed_bytes: u64,
+    /// NVM bytes requested during the measured phase (before DCW).
+    pub nvm_requested_bytes: u64,
     /// Reads that detected an inconsistent object (checksum mismatch).
     pub inconsistencies_detected: u64,
     /// Reads that fell back to the previous version.
     pub fallback_reads: u64,
+    /// Read retries while waiting out a §4.3 write window.
+    pub retries: u64,
+    /// Server entries rolled back by client-driven repair.
+    pub repairs: u64,
     /// Reads that found no live value (should be 0 in healthy runs).
     pub read_misses: u64,
     /// Baseline appliers: records applied to destination storage.
@@ -109,6 +170,32 @@ impl RunStats {
             return 0.0;
         }
         self.server_cpu_busy_ns as f64 / self.ops as f64
+    }
+
+    /// Collect run stats from the shared counters + substrate accounting.
+    pub fn collect(
+        c: &Counters,
+        server_cpu_busy_ns: u128,
+        nvm: crate::nvm::WriteStats,
+        events: u64,
+    ) -> RunStats {
+        RunStats {
+            ops: c.ops_measured,
+            duration_ns: c.last_completion.saturating_sub(c.measure_from),
+            latency: c.latency.clone(),
+            latency_cleaning: c.latency_during_cleaning.clone(),
+            server_cpu_busy_ns,
+            nvm_programmed_bytes: nvm.programmed_bytes,
+            nvm_requested_bytes: nvm.requested_bytes,
+            inconsistencies_detected: c.inconsistencies,
+            fallback_reads: c.fallbacks,
+            retries: c.retries,
+            repairs: c.repairs,
+            read_misses: c.read_misses,
+            applied: c.applied,
+            cleanings: c.cleanings_completed,
+            events,
+        }
     }
 }
 
@@ -160,5 +247,45 @@ mod tests {
         assert_eq!(r.percentile_ns(1.0), 50);
         r.record(10);
         assert_eq!(r.percentile_ns(0.0), 10);
+    }
+
+    #[test]
+    fn counters_respect_warmup_and_cleaning_split() {
+        let mut c = Counters { measure_from: 100, ..Default::default() };
+        c.record_op(50, 120, false); // started before warmup: dropped
+        c.record_op(150, 200, false);
+        c.record_op(160, 260, true);
+        assert_eq!(c.ops_measured, 2);
+        assert_eq!(c.latency.count(), 1);
+        assert_eq!(c.latency_during_cleaning.count(), 1);
+        assert_eq!(c.last_completion, 260);
+    }
+
+    #[test]
+    fn collect_maps_counters_to_stats() {
+        let mut c = Counters::default();
+        c.record_op(0, 10, false);
+        c.inconsistencies = 2;
+        c.fallbacks = 1;
+        c.retries = 3;
+        c.repairs = 1;
+        c.applied = 7;
+        let nvm = crate::nvm::WriteStats {
+            programmed_bytes: 11,
+            requested_bytes: 22,
+            write_ops: 1,
+            atomic_ops: 0,
+        };
+        let s = RunStats::collect(&c, 5, nvm, 9);
+        assert_eq!(s.ops, 1);
+        assert_eq!(s.inconsistencies_detected, 2);
+        assert_eq!(s.fallback_reads, 1);
+        assert_eq!(s.retries, 3);
+        assert_eq!(s.repairs, 1);
+        assert_eq!(s.applied, 7);
+        assert_eq!(s.nvm_programmed_bytes, 11);
+        assert_eq!(s.nvm_requested_bytes, 22);
+        assert_eq!(s.server_cpu_busy_ns, 5);
+        assert_eq!(s.events, 9);
     }
 }

@@ -1,0 +1,78 @@
+//! Local backend (default build): the same [`Runtime`] surface as the PJRT
+//! backend, computed with the in-crate slice-by-8 CRC32 and FNV-1a — which
+//! are bit-identical to the Pallas kernels by construction (the AOT tests
+//! assert exactly that equivalence when the artifacts are present).
+//!
+//! Load-time behavior mirrors PJRT: `load` still requires `manifest.txt`
+//! (so callers gate on [`super::artifacts_available`] the same way in both
+//! builds) and batch/width shapes still bound what `bucket_batch` accepts.
+
+use std::path::Path;
+
+use crate::error::{anyhow, bail, Context, Result};
+
+use super::{parse_manifest, ManifestEntry};
+
+/// The loaded artifact set (shapes only; execution is local).
+pub struct Runtime {
+    /// Verify variants sorted by (width, batch).
+    verify: Vec<ManifestEntry>,
+    /// Bucket-hash variants sorted by (width, batch).
+    bucket: Vec<ManifestEntry>,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt")).with_context(|| {
+            format!("reading {}/manifest.txt (run `make artifacts`)", dir.display())
+        })?;
+        let mut verify = Vec::new();
+        let mut bucket = Vec::new();
+        for entry in parse_manifest(&manifest)? {
+            match entry.kind.as_str() {
+                "verify" => verify.push(entry),
+                "bucket" => bucket.push(entry),
+                other => bail!("unknown artifact kind {other:?}"),
+            }
+        }
+        if verify.is_empty() {
+            bail!("manifest contains no verify artifacts");
+        }
+        verify.sort_by_key(|e| (e.width, e.batch));
+        bucket.sort_by_key(|e| (e.width, e.batch));
+        Ok(Runtime { verify, bucket })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&super::default_dir())
+    }
+
+    /// Batched checksum verification: for each `(payload, stored)` — payload
+    /// with the CRC field zeroed — return whether CRC32(payload) == stored.
+    pub fn verify_batch(&self, items: &[(Vec<u8>, u32)]) -> Result<Vec<bool>> {
+        Ok(items.iter().map(|(buf, crc)| crate::crc::crc32(buf) == *crc).collect())
+    }
+
+    /// Raw batched CRC32 (diagnostics + tests): CRC of each row. Width
+    /// bounds mirror the PJRT backend's artifact shapes.
+    pub fn crc_batch(&self, rows: &[Vec<u8>]) -> Result<Vec<u32>> {
+        let max_w = self.verify.iter().map(|e| e.width).max().unwrap_or(0);
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() > max_w {
+                return Err(anyhow!("row {i} longer than any artifact width"));
+            }
+        }
+        Ok(rows.iter().map(|r| crate::crc::crc32(r)).collect())
+    }
+
+    /// Batched FNV-1a key hashing.
+    pub fn bucket_batch(&self, keys: &[Vec<u8>]) -> Result<Vec<u32>> {
+        let max_key = keys.iter().map(|k| k.len()).max().unwrap_or(0);
+        if !self.bucket.iter().any(|e| e.width >= max_key) {
+            return Err(anyhow!("key longer than any bucket artifact width"));
+        }
+        Ok(keys.iter().map(|k| crate::crc::fnv1a(k)).collect())
+    }
+}

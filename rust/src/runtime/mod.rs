@@ -1,41 +1,35 @@
-//! PJRT runtime: load the AOT-compiled L2/L1 artifacts and run them from
-//! the Rust hot path.
+//! Batch-verification runtime: load the AOT-compiled L2/L1 artifacts and
+//! run batched CRC32 verification / FNV-1a key hashing from the Rust hot
+//! path (the recovery scan and bulk-load hot-spots).
 //!
-//! `make artifacts` lowers the JAX pipeline (with the Pallas CRC32 /
-//! FNV-1a kernels inside) to HLO **text** once at build time; this module
-//! compiles each artifact on the PJRT CPU client at startup and exposes:
+//! Two interchangeable backends expose the same [`Runtime`] API:
 //!
-//! * [`Runtime::verify_batch`] — batched object-checksum verification (the
-//!   recovery scan / cleaning integrity hot-spot),
-//! * [`Runtime::bucket_batch`] — batched key hashing for bulk loads.
+//! * **`pjrt`** (`--features pjrt`) — compiles each HLO-text artifact on the
+//!   PJRT CPU client at startup and executes the Pallas CRC32 / FNV-1a
+//!   kernels. Requires the external `xla` crate, which the offline build
+//!   image does not ship — see README.md §Runtime.
+//! * **local** (default) — a dependency-free stand-in that parses the same
+//!   `manifest.txt`, honors the same batch/width shapes, and computes the
+//!   checks with the bit-identical local slice-by-8 CRC32 and FNV-1a.
 //!
-//! Python never runs at request time: the artifacts are self-contained HLO.
-//! Interchange is HLO text (not serialized protos) because the image's
-//! xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids — see
-//! /opt/xla-example/README.md and python/compile/aot.py.
+//! Either way, Python never runs at request time: `make artifacts` lowers
+//! the JAX pipeline (with the Pallas kernels inside) to HLO text once at
+//! build time; interchange is HLO text (not serialized protos) because the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids.
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
 
 use crate::erda::BatchCheck;
 
-/// One compiled executable + its static shape.
-struct Exe {
-    batch: usize,
-    width: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
 
-/// The loaded artifact set.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    /// Verify variants sorted by (width, batch).
-    verify: Vec<Exe>,
-    /// Bucket-hash variants sorted by (width, batch).
-    bucket: Vec<Exe>,
-}
+#[cfg(not(feature = "pjrt"))]
+mod local;
+#[cfg(not(feature = "pjrt"))]
+pub use local::Runtime;
 
 /// Default artifacts directory (relative to the crate root / cwd).
 pub fn default_dir() -> PathBuf {
@@ -44,207 +38,73 @@ pub fn default_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-/// True if the artifact manifest exists (tests skip PJRT paths otherwise).
+/// True if the artifact manifest exists (tests skip runtime paths otherwise).
 pub fn artifacts_available() -> bool {
     default_dir().join("manifest.txt").exists()
 }
 
-impl Runtime {
-    /// Load every artifact listed in `<dir>/manifest.txt`.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        let mut verify = Vec::new();
-        let mut bucket = Vec::new();
-        for line in manifest.lines() {
-            let f: Vec<&str> = line.split_whitespace().collect();
-            if f.len() != 6 {
-                bail!("malformed manifest line: {line:?}");
-            }
-            let (kind, batch, width, file) =
-                (f[1], f[2].parse::<usize>()?, f[3].parse::<usize>()?, f[5]);
-            let proto = xla::HloModuleProto::from_text_file(
-                dir.join(file).to_str().expect("utf-8 path"),
-            )
-            .map_err(|e| anyhow!("parsing {file}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
-            let entry = Exe { batch, width, exe };
-            match kind {
-                "verify" => verify.push(entry),
-                "bucket" => bucket.push(entry),
-                other => bail!("unknown artifact kind {other:?}"),
-            }
-        }
-        if verify.is_empty() {
-            bail!("manifest contains no verify artifacts");
-        }
-        verify.sort_by_key(|e| (e.width, e.batch));
-        bucket.sort_by_key(|e| (e.width, e.batch));
-        Ok(Runtime { client, verify, bucket })
-    }
-
-    /// Load from the default directory.
-    pub fn load_default() -> Result<Self> {
-        Self::load(&default_dir())
-    }
-
-    /// Pick the smallest variant whose width fits `max_len`.
-    fn pick(pool: &[Exe], max_len: usize) -> Option<&Exe> {
-        pool.iter().find(|e| e.width >= max_len)
-    }
-
-    /// The CRC lookup table as a literal — a runtime parameter because the
-    /// HLO-text round trip corrupts large dense constants on xla_extension
-    /// 0.5.1 (the parsed gather degenerates to iota).
-    fn table_literal() -> xla::Literal {
-        let table: Vec<u32> = (0..256u32)
-            .map(|i| {
-                let mut c = i;
-                for _ in 0..8 {
-                    c = if c & 1 != 0 { (c >> 1) ^ crate::crc::CRC32_POLY } else { c >> 1 };
-                }
-                c
-            })
-            .collect();
-        xla::Literal::vec1(&table)
-    }
-
-    fn run_crc(
-        exe: &Exe,
-        rows: &[&[u8]],
-        stored: &[u32],
-    ) -> Result<(Vec<u32>, Vec<u32>)> {
-        let (b, w) = (exe.batch, exe.width);
-        debug_assert!(rows.len() <= b);
-        let mut data = vec![0u8; b * w];
-        let mut lens = vec![0i32; b];
-        let mut crcs = vec![0u32; b];
-        for (i, row) in rows.iter().enumerate() {
-            data[i * w..i * w + row.len()].copy_from_slice(row);
-            lens[i] = row.len() as i32;
-            crcs[i] = stored[i];
-        }
-        let data_lit = xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::U8,
-            &[b, w],
-            &data,
-        )
-        .map_err(|e| anyhow!("data literal: {e:?}"))?;
-        let lens_lit = xla::Literal::vec1(&lens);
-        let crcs_lit = xla::Literal::vec1(&crcs);
-        let result = exe
-            .exe
-            .execute::<xla::Literal>(&[data_lit, lens_lit, crcs_lit, Self::table_literal()])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e:?}"))?;
-        let (crc_out, valid_out) =
-            result.to_tuple2().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        Ok((
-            crc_out.to_vec::<u32>().map_err(|e| anyhow!("crc vec: {e:?}"))?,
-            valid_out.to_vec::<u32>().map_err(|e| anyhow!("valid vec: {e:?}"))?,
-        ))
-    }
-
-    /// Batched checksum verification through the AOT Pallas kernel: for each
-    /// `(payload, stored)` — payload with the CRC field zeroed — return
-    /// whether CRC32(payload) == stored. Items longer than the largest
-    /// artifact width fall back to the local slice-by-8 CRC.
-    pub fn verify_batch(&self, items: &[(Vec<u8>, u32)]) -> Result<Vec<bool>> {
-        let mut out = vec![false; items.len()];
-        let mut by_exe: Vec<(usize, Vec<usize>)> = Vec::new(); // (exe idx, item idxs)
-        for (i, (payload, stored)) in items.iter().enumerate() {
-            match self.verify.iter().position(|e| e.width >= payload.len()) {
-                Some(ei) => {
-                    match by_exe.iter_mut().find(|(e, _)| *e == ei) {
-                        Some((_, v)) => v.push(i),
-                        None => by_exe.push((ei, vec![i])),
-                    }
-                }
-                None => out[i] = crate::crc::crc32(payload) == *stored,
-            }
-        }
-        for (ei, idxs) in by_exe {
-            let exe = &self.verify[ei];
-            for chunk in idxs.chunks(exe.batch) {
-                let rows: Vec<&[u8]> = chunk.iter().map(|&i| items[i].0.as_slice()).collect();
-                let stored: Vec<u32> = chunk.iter().map(|&i| items[i].1).collect();
-                let (_, valid) = Self::run_crc(exe, &rows, &stored)?;
-                for (j, &i) in chunk.iter().enumerate() {
-                    out[i] = valid[j] != 0;
-                }
-            }
-        }
-        Ok(out)
-    }
-
-    /// Raw batched CRC32 (diagnostics + tests): CRC of each row.
-    pub fn crc_batch(&self, rows: &[Vec<u8>]) -> Result<Vec<u32>> {
-        let items: Vec<(Vec<u8>, u32)> = rows.iter().map(|r| (r.clone(), 0)).collect();
-        let mut out = vec![0u32; rows.len()];
-        // Reuse verify executables; the crc output is the first tuple element.
-        for (i, (payload, _)) in items.iter().enumerate() {
-            let exe = Self::pick(&self.verify, payload.len())
-                .ok_or_else(|| anyhow!("row {i} longer than any artifact width"))?;
-            let (crcs, _) = Self::run_crc(exe, &[payload.as_slice()], &[0])?;
-            out[i] = crcs[0];
-        }
-        Ok(out)
-    }
-
-    /// Batched FNV-1a key hashing through the AOT kernel.
-    pub fn bucket_batch(&self, keys: &[Vec<u8>]) -> Result<Vec<u32>> {
-        let mut out = vec![0u32; keys.len()];
-        let exe = self
-            .bucket
-            .iter()
-            .find(|e| e.width >= keys.iter().map(|k| k.len()).max().unwrap_or(0))
-            .ok_or_else(|| anyhow!("key longer than any bucket artifact width"))?;
-        let (b, w) = (exe.batch, exe.width);
-        let idxs: Vec<usize> = (0..keys.len()).collect();
-        for chunk in idxs.chunks(b) {
-            let mut data = vec![0u8; b * w];
-            let mut lens = vec![0i32; b];
-            for (j, &i) in chunk.iter().enumerate() {
-                data[j * w..j * w + keys[i].len()].copy_from_slice(&keys[i]);
-                lens[j] = keys[i].len() as i32;
-            }
-            let data_lit = xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::U8,
-                &[b, w],
-                &data,
-            )
-            .map_err(|e| anyhow!("keys literal: {e:?}"))?;
-            let lens_lit = xla::Literal::vec1(&lens);
-            let result = exe
-                .exe
-                .execute::<xla::Literal>(&[data_lit, lens_lit])
-                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("fetch: {e:?}"))?;
-            let hashes = result
-                .to_tuple1()
-                .map_err(|e| anyhow!("tuple: {e:?}"))?
-                .to_vec::<u32>()
-                .map_err(|e| anyhow!("hash vec: {e:?}"))?;
-            for (j, &i) in chunk.iter().enumerate() {
-                out[i] = hashes[j];
-            }
-        }
-        Ok(out)
-    }
+/// One artifact entry parsed from `manifest.txt`: `<name> <kind> <batch>
+/// <width> -> <file>`.
+#[derive(Clone, Debug)]
+pub(crate) struct ManifestEntry {
+    pub kind: String,
+    pub batch: usize,
+    pub width: usize,
+    pub file: String,
 }
 
-/// Adapter: use the PJRT runtime as the recovery scan's batch verifier.
+/// Parse `manifest.txt` (shared by both backends so their load-time
+/// validation is identical).
+pub(crate) fn parse_manifest(text: &str) -> crate::error::Result<Vec<ManifestEntry>> {
+    use crate::error::bail;
+    let mut entries = Vec::new();
+    for line in text.lines() {
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 6 {
+            bail!("malformed manifest line: {line:?}");
+        }
+        entries.push(ManifestEntry {
+            kind: f[1].to_string(),
+            batch: f[2].parse::<usize>()?,
+            width: f[3].parse::<usize>()?,
+            file: f[5].to_string(),
+        });
+    }
+    Ok(entries)
+}
+
+/// Adapter: use the runtime as the recovery scan's batch verifier.
 pub struct PjrtCheck<'a>(pub &'a Runtime);
 
 impl BatchCheck for PjrtCheck<'_> {
     fn check(&mut self, items: &[(Vec<u8>, u32)]) -> Vec<bool> {
-        // On any PJRT error fall back to the local CRC (never fail recovery).
+        // On any backend error fall back to the local CRC (never fail
+        // recovery).
         self.0.verify_batch(items).unwrap_or_else(|_| {
             items.iter().map(|(buf, crc)| crate::crc::crc32(buf) == *crc).collect()
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_well_formed_lines() {
+        let text = "crc32 verify 64 512 -> verify_b64_w512.hlo\n\
+                    keyhash bucket 128 32 -> bucket_b128_w32.hlo\n";
+        let e = parse_manifest(text).expect("parses");
+        assert_eq!(e.len(), 2);
+        assert_eq!(e[0].kind, "verify");
+        assert_eq!(e[0].batch, 64);
+        assert_eq!(e[0].width, 512);
+        assert_eq!(e[1].file, "bucket_b128_w32.hlo");
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_lines() {
+        assert!(parse_manifest("too short line\n").is_err());
+        assert!(parse_manifest("a verify NaN 512 -> f.hlo\n").is_err());
     }
 }

@@ -1,0 +1,198 @@
+//! PJRT backend: compile the HLO-text artifacts on the PJRT CPU client and
+//! execute the AOT Pallas kernels. Only compiled under `--features pjrt`
+//! (requires the external `xla` crate; see README.md §Runtime).
+
+use std::path::Path;
+
+use crate::error::{anyhow, bail, Context, Result};
+
+use super::parse_manifest;
+
+/// One compiled executable + its static shape.
+struct Exe {
+    batch: usize,
+    width: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The loaded artifact set.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    /// Verify variants sorted by (width, batch).
+    verify: Vec<Exe>,
+    /// Bucket-hash variants sorted by (width, batch).
+    bucket: Vec<Exe>,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt")).with_context(|| {
+            format!("reading {}/manifest.txt (run `make artifacts`)", dir.display())
+        })?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut verify = Vec::new();
+        let mut bucket = Vec::new();
+        for entry in parse_manifest(&manifest)? {
+            let file = &entry.file;
+            let proto =
+                xla::HloModuleProto::from_text_file(dir.join(file).to_str().expect("utf-8 path"))
+                    .map_err(|e| anyhow!("parsing {file}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
+            let item = Exe { batch: entry.batch, width: entry.width, exe };
+            match entry.kind.as_str() {
+                "verify" => verify.push(item),
+                "bucket" => bucket.push(item),
+                other => bail!("unknown artifact kind {other:?}"),
+            }
+        }
+        if verify.is_empty() {
+            bail!("manifest contains no verify artifacts");
+        }
+        verify.sort_by_key(|e| (e.width, e.batch));
+        bucket.sort_by_key(|e| (e.width, e.batch));
+        Ok(Runtime { client, verify, bucket })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&super::default_dir())
+    }
+
+    /// Pick the smallest variant whose width fits `max_len`.
+    fn pick(pool: &[Exe], max_len: usize) -> Option<&Exe> {
+        pool.iter().find(|e| e.width >= max_len)
+    }
+
+    /// The CRC lookup table as a literal — a runtime parameter because the
+    /// HLO-text round trip corrupts large dense constants on xla_extension
+    /// 0.5.1 (the parsed gather degenerates to iota).
+    fn table_literal() -> xla::Literal {
+        let table: Vec<u32> = (0..256u32)
+            .map(|i| {
+                let mut c = i;
+                for _ in 0..8 {
+                    c = if c & 1 != 0 { (c >> 1) ^ crate::crc::CRC32_POLY } else { c >> 1 };
+                }
+                c
+            })
+            .collect();
+        xla::Literal::vec1(&table)
+    }
+
+    fn run_crc(exe: &Exe, rows: &[&[u8]], stored: &[u32]) -> Result<(Vec<u32>, Vec<u32>)> {
+        let (b, w) = (exe.batch, exe.width);
+        debug_assert!(rows.len() <= b);
+        let mut data = vec![0u8; b * w];
+        let mut lens = vec![0i32; b];
+        let mut crcs = vec![0u32; b];
+        for (i, row) in rows.iter().enumerate() {
+            data[i * w..i * w + row.len()].copy_from_slice(row);
+            lens[i] = row.len() as i32;
+            crcs[i] = stored[i];
+        }
+        let data_lit =
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, &[b, w], &data)
+                .map_err(|e| anyhow!("data literal: {e:?}"))?;
+        let lens_lit = xla::Literal::vec1(&lens);
+        let crcs_lit = xla::Literal::vec1(&crcs);
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&[data_lit, lens_lit, crcs_lit, Self::table_literal()])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let (crc_out, valid_out) = result.to_tuple2().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        Ok((
+            crc_out.to_vec::<u32>().map_err(|e| anyhow!("crc vec: {e:?}"))?,
+            valid_out.to_vec::<u32>().map_err(|e| anyhow!("valid vec: {e:?}"))?,
+        ))
+    }
+
+    /// Batched checksum verification through the AOT Pallas kernel: for each
+    /// `(payload, stored)` — payload with the CRC field zeroed — return
+    /// whether CRC32(payload) == stored. Items longer than the largest
+    /// artifact width fall back to the local slice-by-8 CRC.
+    pub fn verify_batch(&self, items: &[(Vec<u8>, u32)]) -> Result<Vec<bool>> {
+        let mut out = vec![false; items.len()];
+        let mut by_exe: Vec<(usize, Vec<usize>)> = Vec::new(); // (exe idx, item idxs)
+        for (i, (payload, stored)) in items.iter().enumerate() {
+            match self.verify.iter().position(|e| e.width >= payload.len()) {
+                Some(ei) => match by_exe.iter_mut().find(|(e, _)| *e == ei) {
+                    Some((_, v)) => v.push(i),
+                    None => by_exe.push((ei, vec![i])),
+                },
+                None => out[i] = crate::crc::crc32(payload) == *stored,
+            }
+        }
+        for (ei, idxs) in by_exe {
+            let exe = &self.verify[ei];
+            for chunk in idxs.chunks(exe.batch) {
+                let rows: Vec<&[u8]> = chunk.iter().map(|&i| items[i].0.as_slice()).collect();
+                let stored: Vec<u32> = chunk.iter().map(|&i| items[i].1).collect();
+                let (_, valid) = Self::run_crc(exe, &rows, &stored)?;
+                for (j, &i) in chunk.iter().enumerate() {
+                    out[i] = valid[j] != 0;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Raw batched CRC32 (diagnostics + tests): CRC of each row.
+    pub fn crc_batch(&self, rows: &[Vec<u8>]) -> Result<Vec<u32>> {
+        let mut out = vec![0u32; rows.len()];
+        // Reuse verify executables; the crc output is the first tuple element.
+        for (i, payload) in rows.iter().enumerate() {
+            let exe = Self::pick(&self.verify, payload.len())
+                .ok_or_else(|| anyhow!("row {i} longer than any artifact width"))?;
+            let (crcs, _) = Self::run_crc(exe, &[payload.as_slice()], &[0])?;
+            out[i] = crcs[0];
+        }
+        Ok(out)
+    }
+
+    /// Batched FNV-1a key hashing through the AOT kernel.
+    pub fn bucket_batch(&self, keys: &[Vec<u8>]) -> Result<Vec<u32>> {
+        let mut out = vec![0u32; keys.len()];
+        let exe = self
+            .bucket
+            .iter()
+            .find(|e| e.width >= keys.iter().map(|k| k.len()).max().unwrap_or(0))
+            .ok_or_else(|| anyhow!("key longer than any bucket artifact width"))?;
+        let (b, w) = (exe.batch, exe.width);
+        let idxs: Vec<usize> = (0..keys.len()).collect();
+        for chunk in idxs.chunks(b) {
+            let mut data = vec![0u8; b * w];
+            let mut lens = vec![0i32; b];
+            for (j, &i) in chunk.iter().enumerate() {
+                data[j * w..j * w + keys[i].len()].copy_from_slice(&keys[i]);
+                lens[j] = keys[i].len() as i32;
+            }
+            let data_lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                &[b, w],
+                &data,
+            )
+            .map_err(|e| anyhow!("keys literal: {e:?}"))?;
+            let lens_lit = xla::Literal::vec1(&lens);
+            let result = exe
+                .exe
+                .execute::<xla::Literal>(&[data_lit, lens_lit])
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch: {e:?}"))?;
+            let hashes = result
+                .to_tuple1()
+                .map_err(|e| anyhow!("tuple: {e:?}"))?
+                .to_vec::<u32>()
+                .map_err(|e| anyhow!("hash vec: {e:?}"))?;
+            for (j, &i) in chunk.iter().enumerate() {
+                out[i] = hashes[j];
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,453 @@
+//! The cluster driver: build a world for *any* scheme, preload records,
+//! spawn client/cleaner/applier actors, run the DES engine, and hand back
+//! [`RunStats`] plus a settled [`Db`] for direct inspection.
+//!
+//! Every figure of the paper is "run this for some (scheme, workload, value
+//! size, thread count) and read off a metric" — this module is that
+//! machinery behind a single builder:
+//!
+//! ```no_run
+//! use erda::store::{Cluster, Scheme};
+//! use erda::ycsb::Workload;
+//!
+//! let outcome = Cluster::builder()
+//!     .scheme(Scheme::Erda)
+//!     .heads(4)
+//!     .clients(8)
+//!     .workload(Workload::UpdateHeavy)
+//!     .preload(1000, 256)
+//!     .run();
+//! println!("{:.1} KOp/s", outcome.stats.kops());
+//! ```
+//!
+//! Scripted clients (`script_at`) drive failure-injection and Table-1-style
+//! measurements through the same engine; [`Cluster::from_config`] adapts a
+//! raw [`DriverConfig`] (what `crate::workload::run` and the figure sweeps
+//! use).
+
+use super::{Db, OpSource, Request, Scheme};
+use crate::baselines::{ApplierActor, ApplierConfig, BaselineClient, BaselineWorld};
+use crate::erda::{CleanerActor, CleanerConfig, ClientConfig, ErdaClient, ErdaWorld};
+use crate::log::{object, LogConfig};
+use crate::metrics::RunStats;
+use crate::nvm::NvmConfig;
+use crate::sim::{Actor, Engine, Step, Time, Timing};
+use crate::workload::DriverConfig;
+use crate::ycsb::{Generator, Workload};
+
+/// One scripted client: spawn time, its op list, and (for Erda) client
+/// tunables.
+#[derive(Clone)]
+struct ScriptSpec {
+    start: Time,
+    ops: Vec<Request>,
+    cfg: Option<ClientConfig>,
+}
+
+/// Builder for a [`Cluster`] (see the module docs for an example).
+pub struct ClusterBuilder {
+    cfg: DriverConfig,
+    preload: Option<(u64, usize)>,
+    scripts: Vec<ScriptSpec>,
+}
+
+impl Default for ClusterBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClusterBuilder {
+    pub fn new() -> Self {
+        ClusterBuilder { cfg: DriverConfig::default(), preload: None, scripts: Vec::new() }
+    }
+
+    /// Which scheme the cluster runs (the whole point of the facade).
+    pub fn scheme(mut self, s: Scheme) -> Self {
+        self.cfg.scheme = s;
+        self
+    }
+
+    /// Closed-loop YCSB client threads (0 = scripted clients only).
+    pub fn clients(mut self, n: usize) -> Self {
+        self.cfg.clients = n;
+        self
+    }
+
+    /// Ops per YCSB client (after this the client exits).
+    pub fn ops_per_client(mut self, n: u64) -> Self {
+        self.cfg.ops_per_client = n;
+        self
+    }
+
+    /// YCSB mix for the closed-loop clients.
+    pub fn workload(mut self, wl: Workload) -> Self {
+        self.cfg.workload.workload = wl;
+        self
+    }
+
+    /// Distinct records the YCSB key space covers.
+    pub fn records(mut self, n: u64) -> Self {
+        self.cfg.workload.record_count = n;
+        self
+    }
+
+    /// Value size in bytes (YCSB updates, read windows, baseline slots).
+    pub fn value_size(mut self, n: usize) -> Self {
+        self.cfg.workload.value_size = n;
+        self
+    }
+
+    /// Zipfian skew (paper: 0.99).
+    pub fn theta(mut self, t: f64) -> Self {
+        self.cfg.workload.theta = t;
+        self
+    }
+
+    /// Workload seed — the whole run is deterministic in it.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.workload.seed = s;
+        self
+    }
+
+    /// Virtual warmup: ops starting before this are not measured.
+    pub fn warmup(mut self, t: Time) -> Self {
+        self.cfg.warmup = t;
+        self
+    }
+
+    /// Log heads at the server.
+    pub fn heads(mut self, n: usize) -> Self {
+        self.cfg.log_cfg.num_heads = n;
+        self
+    }
+
+    /// Full log geometry (region size, segment size, heads).
+    pub fn log(mut self, cfg: LogConfig) -> Self {
+        self.cfg.log_cfg = cfg;
+        self
+    }
+
+    /// Simulated NVM capacity in bytes.
+    pub fn nvm_capacity(mut self, bytes: usize) -> Self {
+        self.cfg.nvm_capacity = bytes;
+        self
+    }
+
+    /// Calibrated timing model override.
+    pub fn timing(mut self, t: Timing) -> Self {
+        self.cfg.timing = t;
+        self
+    }
+
+    /// Erda: start log cleaning when a head's occupancy crosses this.
+    pub fn cleaning_threshold(mut self, bytes: u32) -> Self {
+        self.cfg.cleaning_threshold = Some(bytes);
+        self
+    }
+
+    /// Cleaner tuning (batch size controls CPU burstiness felt by clients).
+    pub fn cleaner(mut self, c: CleanerConfig) -> Self {
+        self.cfg.cleaner = c;
+        self
+    }
+
+    /// Bulk-load `n` records of `value_size` bytes before the run (defaults
+    /// to the workload's record count and value size).
+    pub fn preload(mut self, n: u64, value_size: usize) -> Self {
+        self.preload = Some((n, value_size));
+        self
+    }
+
+    /// Add a scripted client starting at virtual time 0.
+    pub fn script(self, ops: Vec<Request>) -> Self {
+        self.script_at(0, ops)
+    }
+
+    /// Add a scripted client starting at `start`.
+    pub fn script_at(mut self, start: Time, ops: Vec<Request>) -> Self {
+        self.scripts.push(ScriptSpec { start, ops, cfg: None });
+        self
+    }
+
+    /// Add a scripted client with explicit (Erda) client tunables.
+    pub fn script_client(mut self, start: Time, ops: Vec<Request>, cfg: ClientConfig) -> Self {
+        self.scripts.push(ScriptSpec { start, ops, cfg: Some(cfg) });
+        self
+    }
+
+    /// Replace the whole driver config (sweeps that already carry one).
+    pub fn config(mut self, cfg: DriverConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Finalize into a [`Cluster`].
+    pub fn build(self) -> Cluster {
+        let preload = self
+            .preload
+            .unwrap_or((self.cfg.workload.record_count, self.cfg.workload.value_size));
+        Cluster { cfg: self.cfg, preload, scripts: self.scripts }
+    }
+
+    /// Construct the world and preload it, but skip the engine: a
+    /// synchronous [`Db`] handle for one-shot ops (scripts are ignored).
+    pub fn build_db(self) -> Db {
+        self.build().into_db()
+    }
+
+    /// Build + run in one step.
+    pub fn run(self) -> RunOutcome {
+        self.build().run()
+    }
+}
+
+/// A fully-specified simulation cluster for one scheme.
+pub struct Cluster {
+    cfg: DriverConfig,
+    preload: (u64, usize),
+    scripts: Vec<ScriptSpec>,
+}
+
+/// What a finished run hands back: the measured stats and a settled,
+/// directly-inspectable store handle over the final world state.
+pub struct RunOutcome {
+    pub stats: RunStats,
+    pub db: Db,
+}
+
+/// Resets CPU/NVM accounting at the measurement boundary.
+struct Marker;
+
+impl Actor<ErdaWorld> for Marker {
+    fn step(&mut self, w: &mut ErdaWorld, _now: Time) -> Step {
+        w.cpu.reset_accounting();
+        w.nvm.reset_stats();
+        Step::Done
+    }
+}
+
+impl Actor<BaselineWorld> for Marker {
+    fn step(&mut self, w: &mut BaselineWorld, _now: Time) -> Step {
+        w.cpu.reset_accounting();
+        w.nvm.reset_stats();
+        Step::Done
+    }
+}
+
+impl Cluster {
+    /// Start a builder.
+    pub fn builder() -> ClusterBuilder {
+        ClusterBuilder::new()
+    }
+
+    /// Adapt a raw [`DriverConfig`] (figure sweeps, benches).
+    pub fn from_config(cfg: &DriverConfig) -> Cluster {
+        Cluster {
+            cfg: cfg.clone(),
+            preload: (cfg.workload.record_count, cfg.workload.value_size),
+            scripts: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &DriverConfig {
+        &self.cfg
+    }
+
+    /// The largest value a scripted put carries (baseline slots must fit it).
+    fn script_max_value(&self) -> usize {
+        self.scripts
+            .iter()
+            .flat_map(|s| s.ops.iter())
+            .map(|r| match r {
+                Request::Put { value, .. } | Request::CrashDuringPut { value, .. } => value.len(),
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Default Erda client tunables for this run.
+    fn client_cfg(cfg: &DriverConfig) -> ClientConfig {
+        ClientConfig { max_value: cfg.workload.value_size, ..ClientConfig::default() }
+    }
+
+    fn make_erda_world(cfg: &DriverConfig, preload: (u64, usize)) -> ErdaWorld {
+        let mut world = ErdaWorld::new(
+            cfg.timing.clone(),
+            NvmConfig { capacity: cfg.nvm_capacity },
+            cfg.log_cfg,
+            cfg.table_cap(),
+        );
+        world.preload(preload.0, preload.1);
+        world.nvm.reset_stats();
+        if let Some(th) = cfg.cleaning_threshold {
+            world.server.cleaning_threshold = th;
+        }
+        world
+    }
+
+    fn make_baseline_world(
+        cfg: &DriverConfig,
+        preload: (u64, usize),
+        script_max_value: usize,
+    ) -> BaselineWorld {
+        let scheme = cfg.scheme.baseline().expect("baseline scheme");
+        let slot_value = cfg.workload.value_size.max(preload.1).max(script_max_value);
+        let slot_size = object::wire_size(24, slot_value);
+        let mut world = BaselineWorld::new(
+            cfg.timing.clone(),
+            NvmConfig { capacity: cfg.nvm_capacity },
+            scheme,
+            cfg.table_cap(),
+            cfg.log_cfg.region_size,
+            cfg.log_cfg.segment_size,
+            slot_size,
+        );
+        world.preload(preload.0, preload.1);
+        world.nvm.reset_stats();
+        world
+    }
+
+    /// Construct + preload the world without running the engine.
+    pub fn into_db(self) -> Db {
+        match self.cfg.scheme {
+            Scheme::Erda => Db::from_erda(Self::make_erda_world(&self.cfg, self.preload)),
+            _ => {
+                let max = self.script_max_value();
+                Db::from_baseline(Self::make_baseline_world(&self.cfg, self.preload, max))
+            }
+        }
+    }
+
+    /// Run the simulation to quiescence; returns stats plus a settled store.
+    pub fn run(self) -> RunOutcome {
+        match self.cfg.scheme {
+            Scheme::Erda => self.run_erda(),
+            _ => self.run_baseline(),
+        }
+    }
+
+    fn run_erda(self) -> RunOutcome {
+        let script_max = self.script_max_value();
+        let Cluster { cfg, preload, scripts } = self;
+        let mut world = Self::make_erda_world(&cfg, preload);
+        world.counters.measure_from = cfg.warmup;
+        world.counters.active_clients = (cfg.clients + scripts.len()) as u32;
+        let default_cfg = Self::client_cfg(&cfg);
+        // Scripted clients may read values bigger than the YCSB value size
+        // (preloaded or script-written); size their read window for the
+        // largest value the run can hold so a healthy oversized object is
+        // not misread as torn.
+        let script_cfg = ClientConfig {
+            max_value: cfg.workload.value_size.max(preload.1).max(script_max),
+            ..ClientConfig::default()
+        };
+
+        let mut engine = Engine::new(world);
+        engine.spawn(Box::new(Marker), cfg.warmup);
+        for s in scripts {
+            let n = s.ops.len() as u64;
+            let ccfg = s.cfg.unwrap_or(script_cfg);
+            engine.spawn(Box::new(ErdaClient::new(OpSource::script(s.ops), n, ccfg)), s.start);
+        }
+        for c in 0..cfg.clients {
+            let gen = Generator::new(cfg.workload.clone(), c as u64);
+            let client = ErdaClient::new(OpSource::Ycsb(gen), cfg.ops_per_client, default_cfg);
+            engine.spawn(Box::new(client), 0);
+        }
+        if cfg.cleaning_threshold.is_some() {
+            for h in 0..cfg.log_cfg.num_heads {
+                engine.spawn(Box::new(CleanerActor::new(h as u8, cfg.cleaner)), cfg.warmup / 2);
+            }
+        }
+        engine.run();
+
+        let events = engine.events();
+        let mut world = engine.state;
+        let stats =
+            RunStats::collect(&world.counters, world.cpu.busy_ns(), world.nvm.stats(), events);
+        world.settle();
+        RunOutcome { stats, db: Db::from_erda(world) }
+    }
+
+    fn run_baseline(self) -> RunOutcome {
+        let max = self.script_max_value();
+        let Cluster { cfg, preload, scripts } = self;
+        let mut world = Self::make_baseline_world(&cfg, preload, max);
+        world.counters.measure_from = cfg.warmup;
+        world.counters.active_clients = (cfg.clients + scripts.len()) as u32;
+
+        let mut engine = Engine::new(world);
+        engine.spawn(Box::new(Marker), cfg.warmup);
+        for s in scripts {
+            let n = s.ops.len() as u64;
+            engine.spawn(Box::new(BaselineClient::new(OpSource::script(s.ops), n)), s.start);
+        }
+        for c in 0..cfg.clients {
+            let gen = Generator::new(cfg.workload.clone(), c as u64);
+            let client = BaselineClient::new(OpSource::Ycsb(gen), cfg.ops_per_client);
+            engine.spawn(Box::new(client), 0);
+        }
+        engine.spawn(Box::new(ApplierActor::new(ApplierConfig::default())), 0);
+        engine.run();
+
+        let events = engine.events();
+        let mut world = engine.state;
+        let stats =
+            RunStats::collect(&world.counters, world.cpu.busy_ns(), world.nvm.stats(), events);
+        world.settle();
+        RunOutcome { stats, db: Db::from_baseline(world) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::RemoteStore;
+    use crate::ycsb::key_of;
+
+    #[test]
+    fn builder_constructs_every_scheme() {
+        for scheme in Scheme::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .clients(2)
+                .ops_per_client(50)
+                .records(50)
+                .value_size(64)
+                .warmup(0)
+                .run();
+            assert!(outcome.stats.ops > 0, "{scheme:?} completed no ops");
+            assert_eq!(outcome.stats.read_misses, 0, "{scheme:?} lost reads");
+            assert_eq!(outcome.db.scheme(), scheme);
+        }
+    }
+
+    #[test]
+    fn scripted_run_reaches_the_store() {
+        let outcome = Cluster::builder()
+            .scheme(Scheme::Erda)
+            .clients(0)
+            .preload(4, 32)
+            .value_size(32)
+            .warmup(0)
+            .script(vec![
+                Request::Put { key: key_of(0), value: vec![9u8; 32] },
+                Request::Get { key: key_of(0) },
+            ])
+            .run();
+        assert_eq!(outcome.stats.ops, 2);
+        let mut db = outcome.db;
+        assert_eq!(db.get(&key_of(0)).unwrap().unwrap(), vec![9u8; 32]);
+    }
+
+    #[test]
+    fn from_config_matches_builder_defaults() {
+        let cfg = DriverConfig { ops_per_client: 40, clients: 2, ..Default::default() };
+        let a = Cluster::from_config(&cfg).run().stats;
+        let b = Cluster::from_config(&cfg).run().stats;
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.duration_ns, b.duration_ns);
+    }
+}

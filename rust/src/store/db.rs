@@ -1,0 +1,453 @@
+//! `Db` — the synchronous embeddable store handle: one-shot get/put/delete
+//! against any scheme, with zero virtual time.
+//!
+//! A `Db` wraps a fully-constructed world (Erda or baseline) and performs
+//! operations immediately through the server-side state machines: writes
+//! land via the paper's metadata-then-data discipline (Erda) or the
+//! stage-then-apply pipeline (baselines, drained synchronously per op), and
+//! reads run the full consistency path — checksum gate, repair, fallback.
+//! That makes it both the quickest way to use the store as a plain KV map
+//! and the vehicle for the backend-agnostic conformance suite, including
+//! failure injection ([`Request::CrashDuringPut`]) and crash recovery
+//! ([`Db::crash`]/[`Db::recover`]).
+//!
+//! For timing-accurate runs (latency/throughput/CPU figures) use
+//! [`super::Cluster`], which returns a settled `Db` for inspection after
+//! the engine quiesces.
+
+use super::{OpStats, RemoteStore, Request, Response, Scheme, StoreError};
+use crate::baselines::{BaselineWorld, PendingWrite, Scheme as BaselineScheme};
+use crate::erda::{recover, BatchCheck, ErdaWorld, LocalCheck, RecoveryReport};
+use crate::log::{object, NO_OFFSET};
+use crate::metrics::Counters;
+use crate::nvm::WriteStats;
+
+enum Inner {
+    Erda(Box<ErdaWorld>),
+    Baseline(Box<BaselineWorld>),
+}
+
+/// A synchronous store handle over one world (see the module docs).
+pub struct Db {
+    inner: Inner,
+    stats: OpStats,
+}
+
+impl Db {
+    /// An empty store with default geometry for `scheme` — the one-line way
+    /// in. Use [`super::Cluster::builder`]`.build_db()` for full control.
+    pub fn open(scheme: Scheme) -> Db {
+        super::Cluster::builder().scheme(scheme).preload(0, 0).build_db()
+    }
+
+    pub(crate) fn from_erda(world: ErdaWorld) -> Db {
+        Db { inner: Inner::Erda(Box::new(world)), stats: OpStats::default() }
+    }
+
+    pub(crate) fn from_baseline(world: BaselineWorld) -> Db {
+        Db { inner: Inner::Baseline(Box::new(world)), stats: OpStats::default() }
+    }
+
+    /// NVM write accounting of the underlying world.
+    pub fn nvm_stats(&self) -> WriteStats {
+        match &self.inner {
+            Inner::Erda(w) => w.nvm.stats(),
+            Inner::Baseline(w) => w.nvm.stats(),
+        }
+    }
+
+    /// Erda only: occupied bytes under log head `h`.
+    pub fn log_occupied(&self, h: u8) -> Option<u32> {
+        match &self.inner {
+            Inner::Erda(w) => Some(w.server.log.occupied(h)),
+            Inner::Baseline(_) => None,
+        }
+    }
+
+    /// Escape hatch: the Erda world, if this handle wraps one.
+    pub fn as_erda(&self) -> Option<&ErdaWorld> {
+        match &self.inner {
+            Inner::Erda(w) => Some(w),
+            Inner::Baseline(_) => None,
+        }
+    }
+
+    /// Escape hatch: the baseline world, if this handle wraps one.
+    pub fn as_baseline(&self) -> Option<&BaselineWorld> {
+        match &self.inner {
+            Inner::Erda(_) => None,
+            Inner::Baseline(w) => Some(w),
+        }
+    }
+
+    /// Simulate a server power failure: volatile bookkeeping (log tails,
+    /// append indices) is lost. Follow with [`Db::recover`]. Erda only —
+    /// the baselines' recovery story is not part of the paper's claims.
+    pub fn crash(&mut self) -> Result<(), StoreError> {
+        match &mut self.inner {
+            Inner::Erda(w) => {
+                for h in 0..w.server.num_heads() {
+                    let head = w.server.log.head_mut(h as u8);
+                    head.tail = 0;
+                    head.index.clear();
+                }
+                Ok(())
+            }
+            Inner::Baseline(_) => Err(StoreError::Unsupported("crash recovery (baseline scheme)")),
+        }
+    }
+
+    /// Run crash recovery with the local checksum verifier.
+    pub fn recover(&mut self) -> Result<RecoveryReport, StoreError> {
+        self.recover_with(&mut LocalCheck)
+    }
+
+    /// Run crash recovery with an explicit batch verifier (e.g. the PJRT
+    /// artifact via [`crate::runtime::PjrtCheck`]).
+    pub fn recover_with(
+        &mut self,
+        checker: &mut dyn BatchCheck,
+    ) -> Result<RecoveryReport, StoreError> {
+        match &mut self.inner {
+            Inner::Erda(w) => {
+                let ErdaWorld { nvm, server, .. } = &mut **w;
+                Ok(recover(server, nvm, checker))
+            }
+            Inner::Baseline(_) => Err(StoreError::Unsupported("crash recovery (baseline scheme)")),
+        }
+    }
+
+    /// Key must be non-empty and fit the codec/entry bound.
+    fn check_key(key: &[u8]) -> Result<(), StoreError> {
+        if key.is_empty() || key.len() > object::MAX_KEY {
+            return Err(StoreError::InvalidKey { len: key.len() });
+        }
+        Ok(())
+    }
+
+    /// The encoded object must fit the codec and the given byte budget.
+    fn check_obj_size(key: &[u8], value: &[u8], max: usize) -> Result<(), StoreError> {
+        let size = object::wire_size(key.len(), value.len());
+        if value.len() > object::MAX_VALUE || size > max {
+            return Err(StoreError::ValueTooLarge { size, max });
+        }
+        Ok(())
+    }
+
+    /// Largest encoded object this handle accepts.
+    fn max_obj(&self) -> usize {
+        match &self.inner {
+            Inner::Erda(w) => w.server.log.cfg.segment_size as usize,
+            Inner::Baseline(w) => {
+                w.server.slot_size.min(w.server.staging.segment_size as usize)
+            }
+        }
+    }
+
+    /// Inject a torn write: start a put but persist only the first `chunks`
+    /// 64-byte chunks, as a crashing client would (the [`Request`] form is
+    /// [`Request::CrashDuringPut`]).
+    pub fn crash_during_put(
+        &mut self,
+        key: &[u8],
+        value: &[u8],
+        chunks: usize,
+    ) -> Result<(), StoreError> {
+        Self::check_key(key)?;
+        Self::check_obj_size(key, value, self.max_obj())?;
+        let obj = object::encode_object(key, value);
+        let cut = (chunks * 64).min(obj.len());
+        match &mut self.inner {
+            Inner::Erda(w) => {
+                // Metadata publishes first (§3.3); only a prefix of the
+                // object bytes ever lands — the §4.3 window, frozen.
+                let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
+                if cut > 0 {
+                    w.nvm.write(addr, &obj[..cut]);
+                }
+                Ok(())
+            }
+            Inner::Baseline(w) => match w.server.scheme {
+                // Redo: the two-sided send arrives whole or not at all.
+                BaselineScheme::RedoLogging => Ok(()),
+                BaselineScheme::ReadAfterWrite => {
+                    // A torn record reaches the ring buffer; the applier's
+                    // CRC gate must skip it.
+                    let off = w.server.raw_reserve(&mut w.nvm, obj.len());
+                    if cut > 0 {
+                        let addr = w.server.staging.addr_of(off);
+                        w.nvm.write(addr, &obj[..cut]);
+                    }
+                    w.server.pending.push_back(PendingWrite {
+                        key: key.to_vec(),
+                        staged_off: off,
+                        len: obj.len() as u32,
+                        delete: false,
+                    });
+                    // The applier's CRC gate is the detector here; it fires
+                    // only when the record is actually torn (a `chunks`
+                    // budget covering the whole object applies cleanly).
+                    if cut < obj.len() {
+                        self.stats.torn_detected += 1;
+                    }
+                    Self::drain_baseline(w, &mut self.stats);
+                    Ok(())
+                }
+            },
+        }
+    }
+
+    /// Drain the baseline apply queue (one-shot semantics: every put is
+    /// fully applied before the call returns).
+    fn drain_baseline(w: &mut BaselineWorld, stats: &mut OpStats) {
+        while w.server.apply_one(&mut w.nvm).is_some() {
+            stats.applied += 1;
+            w.counters.applied += 1;
+        }
+    }
+
+    fn erda_get(
+        w: &mut ErdaWorld,
+        stats: &mut OpStats,
+        key: &[u8],
+    ) -> Result<Option<Vec<u8>>, StoreError> {
+        let slot = match w.server.table.lookup(&w.nvm, key) {
+            Some(s) => s,
+            None => {
+                stats.read_misses += 1;
+                return Ok(None);
+            }
+        };
+        let e = match w.server.table.read_entry(&w.nvm, slot) {
+            Some(e) => e,
+            None => {
+                stats.read_misses += 1;
+                return Ok(None);
+            }
+        };
+        let newest = e.atomic.newest();
+        if newest == NO_OFFSET {
+            stats.read_misses += 1;
+            return Ok(None);
+        }
+        let h = e.head_id;
+        let bytes = w.nvm.read_vec(w.server.log.addr_of(h, newest), w.server.log.window(newest));
+        match object::decode(&bytes) {
+            Ok(v) if v.deleted => {
+                stats.read_misses += 1;
+                Ok(None)
+            }
+            Ok(v) => Ok(Some(v.value)),
+            Err(_) => {
+                // Torn newest version: the §4.2 consistency path, run
+                // synchronously — detect, repair, fall back.
+                stats.torn_detected += 1;
+                if w.server.repair(&mut w.nvm, key, newest) {
+                    stats.repairs += 1;
+                    let e2 = w.server.table.read_entry(&w.nvm, slot).expect("repaired entry");
+                    let off = e2.atomic.newest();
+                    if off == NO_OFFSET {
+                        stats.read_misses += 1;
+                        return Ok(None);
+                    }
+                    let bytes =
+                        w.nvm.read_vec(w.server.log.addr_of(h, off), w.server.log.window(off));
+                    match object::decode(&bytes) {
+                        Ok(v) if v.deleted => {
+                            stats.read_misses += 1;
+                            Ok(None)
+                        }
+                        Ok(v) => Ok(Some(v.value)),
+                        Err(_) => Err(StoreError::Corrupt { key: key.to_vec() }),
+                    }
+                } else {
+                    // No previous version to fall back to: the key's only
+                    // write tore — it never existed consistently.
+                    stats.read_misses += 1;
+                    Ok(None)
+                }
+            }
+        }
+    }
+
+    fn baseline_put(
+        w: &mut BaselineWorld,
+        stats: &mut OpStats,
+        key: &[u8],
+        value: &[u8],
+    ) -> Result<(), StoreError> {
+        match w.server.scheme {
+            BaselineScheme::RedoLogging => {
+                w.server.redo_write(&mut w.nvm, key, value)?;
+            }
+            BaselineScheme::ReadAfterWrite => {
+                let obj = object::encode_object(key, value);
+                let off = w.server.raw_reserve(&mut w.nvm, obj.len());
+                let addr = w.server.staging.addr_of(off);
+                w.nvm.write(addr, &obj);
+                w.server.raw_commit(&mut w.nvm, key, value, off, obj.len() as u32)?;
+            }
+        }
+        Self::drain_baseline(w, stats);
+        Ok(())
+    }
+}
+
+impl RemoteStore for Db {
+    fn scheme(&self) -> Scheme {
+        match &self.inner {
+            Inner::Erda(_) => Scheme::Erda,
+            Inner::Baseline(w) => match w.server.scheme {
+                BaselineScheme::RedoLogging => Scheme::RedoLogging,
+                BaselineScheme::ReadAfterWrite => Scheme::ReadAfterWrite,
+            },
+        }
+    }
+
+    fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>, StoreError> {
+        self.stats.gets += 1;
+        match &mut self.inner {
+            Inner::Erda(w) => Self::erda_get(w, &mut self.stats, key),
+            Inner::Baseline(w) => {
+                let v = w.server.read(&w.nvm, key);
+                if v.is_none() {
+                    self.stats.read_misses += 1;
+                }
+                Ok(v)
+            }
+        }
+    }
+
+    fn put(&mut self, key: &[u8], value: &[u8]) -> Result<(), StoreError> {
+        Self::check_key(key)?;
+        Self::check_obj_size(key, value, self.max_obj())?;
+        match &mut self.inner {
+            Inner::Erda(w) => {
+                let obj = object::encode_object(key, value);
+                let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
+                w.nvm.write(addr, &obj);
+            }
+            Inner::Baseline(w) => Self::baseline_put(w, &mut self.stats, key, value)?,
+        }
+        self.stats.puts += 1;
+        Ok(())
+    }
+
+    fn delete(&mut self, key: &[u8]) -> Result<(), StoreError> {
+        Self::check_key(key)?;
+        match &mut self.inner {
+            Inner::Erda(w) => {
+                let obj = object::encode_delete(key);
+                let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
+                w.nvm.write(addr, &obj);
+            }
+            Inner::Baseline(w) => {
+                w.server.delete(&mut w.nvm, key);
+            }
+        }
+        self.stats.deletes += 1;
+        Ok(())
+    }
+
+    fn op_stats(&self) -> OpStats {
+        self.stats
+    }
+
+    fn counters(&self) -> &Counters {
+        match &self.inner {
+            Inner::Erda(w) => &w.counters,
+            Inner::Baseline(w) => &w.counters,
+        }
+    }
+
+    fn execute(&mut self, req: Request) -> Result<Response, StoreError> {
+        match req {
+            Request::Get { key } => Ok(Response::Value(self.get(&key)?)),
+            Request::Put { key, value } => {
+                self.put(&key, &value)?;
+                Ok(Response::Ok)
+            }
+            Request::Delete { key } => {
+                self.delete(&key)?;
+                Ok(Response::Ok)
+            }
+            Request::CrashDuringPut { key, value, chunks } => {
+                self.crash_during_put(&key, &value, chunks)?;
+                Ok(Response::Crashed)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::Cluster;
+    use crate::ycsb::key_of;
+
+    fn open(scheme: Scheme) -> Db {
+        Cluster::builder().scheme(scheme).preload(4, 16).value_size(16).build_db()
+    }
+
+    #[test]
+    fn one_shot_ops_all_schemes() {
+        for scheme in Scheme::ALL {
+            let mut db = open(scheme);
+            assert_eq!(db.get(&key_of(0)).unwrap().unwrap(), vec![0xA5u8; 16], "{scheme:?}");
+            db.put(&key_of(0), b"fresh-val-16byte").unwrap();
+            assert_eq!(db.get(&key_of(0)).unwrap().unwrap(), b"fresh-val-16byte", "{scheme:?}");
+            db.delete(&key_of(1)).unwrap();
+            assert_eq!(db.get(&key_of(1)).unwrap(), None, "{scheme:?}");
+            assert_eq!(db.get(b"user-never-written").unwrap(), None, "{scheme:?}");
+            let s = db.op_stats();
+            assert_eq!(s.puts, 1, "{scheme:?}");
+            assert_eq!(s.deletes, 1, "{scheme:?}");
+            assert_eq!(s.gets, 4, "{scheme:?}");
+            assert_eq!(s.read_misses, 2, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn torn_put_preserves_old_value_all_schemes() {
+        for scheme in Scheme::ALL {
+            let mut db = open(scheme);
+            db.execute(Request::CrashDuringPut {
+                key: key_of(2),
+                value: vec![0xEEu8; 16],
+                chunks: 0,
+            })
+            .unwrap();
+            let v = db.get(&key_of(2)).unwrap();
+            assert_eq!(v, Some(vec![0xA5u8; 16]), "{scheme:?} must keep the old version");
+        }
+    }
+
+    #[test]
+    fn oversized_value_is_typed_error() {
+        for scheme in Scheme::ALL {
+            let mut db = open(scheme);
+            let huge = vec![0u8; 1 << 20]; // larger than any segment/slot
+            match db.put(&key_of(0), &huge) {
+                Err(StoreError::ValueTooLarge { .. }) => {}
+                other => panic!("{scheme:?}: expected ValueTooLarge, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn erda_crash_then_recover_rolls_back_torn_entry() {
+        let mut db = open(Scheme::Erda);
+        db.crash_during_put(&key_of(3), &vec![0xEEu8; 16], 0).unwrap();
+        db.crash().unwrap();
+        let report = db.recover().unwrap();
+        assert_eq!(report.entries_rolled_back, 1, "{report:?}");
+        assert_eq!(db.get(&key_of(3)).unwrap(), Some(vec![0xA5u8; 16]));
+    }
+
+    #[test]
+    fn baseline_crash_is_unsupported() {
+        let mut db = open(Scheme::RedoLogging);
+        assert!(matches!(db.crash(), Err(StoreError::Unsupported(_))));
+        assert!(matches!(db.recover(), Err(StoreError::Unsupported(_))));
+    }
+}

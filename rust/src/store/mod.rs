@@ -1,0 +1,299 @@
+//! The unified store facade: one typed key-value API over Erda and both
+//! baseline schemes.
+//!
+//! The paper's whole argument is a three-way comparison (Erda vs. Redo
+//! Logging vs. Read After Write, §5.1); this layer makes the scheme a
+//! *runtime parameter* instead of three disjoint object graphs:
+//!
+//! * [`Scheme`] — which protocol a store runs; selectable by id
+//!   (`erda`/`redo`/`raw`) everywhere a store is built.
+//! * [`Request`]/[`Response`] — the operation protocol shared by all three
+//!   schemes, including failure injection ([`Request::CrashDuringPut`]).
+//! * [`OpSource`] — where a client's operations come from: a YCSB generator
+//!   or a fixed script of [`Request`]s (shared by every client actor).
+//! * [`RemoteStore`] — the typed get/put/delete surface with [`StoreError`]
+//!   and [`OpStats`]; implemented by [`Db`].
+//! * [`Cluster`] — the builder that constructs a world for any scheme,
+//!   spawns clients/cleaners/appliers, runs the DES engine and returns
+//!   [`crate::metrics::RunStats`] plus a settled [`Db`] for inspection.
+//! * [`Db`] — a synchronous embeddable handle for one-shot operations
+//!   (zero virtual time): the quickest way to use any scheme as a plain
+//!   key-value store, and the vehicle for the backend-agnostic conformance
+//!   suite.
+
+pub mod cluster;
+pub mod db;
+
+pub use cluster::{Cluster, ClusterBuilder, RunOutcome};
+pub use db::Db;
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use crate::ycsb::{Generator, Op};
+
+/// Which of the three schemes a store runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Erda,
+    RedoLogging,
+    ReadAfterWrite,
+}
+
+impl Scheme {
+    /// All three, in the paper's presentation order.
+    pub const ALL: [Scheme; 3] = [Scheme::Erda, Scheme::RedoLogging, Scheme::ReadAfterWrite];
+
+    /// Human-readable label (figure legends).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::Erda => "Erda",
+            Scheme::RedoLogging => "Redo Logging",
+            Scheme::ReadAfterWrite => "Read After Write",
+        }
+    }
+
+    /// Short id for filenames and CLI flags.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Scheme::Erda => "erda",
+            Scheme::RedoLogging => "redo",
+            Scheme::ReadAfterWrite => "raw",
+        }
+    }
+
+    /// Parse a CLI id (`erda` / `redo` / `raw`).
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "erda" => Some(Scheme::Erda),
+            "redo" => Some(Scheme::RedoLogging),
+            "raw" => Some(Scheme::ReadAfterWrite),
+            _ => None,
+        }
+    }
+
+    /// The baseline-protocol variant, if this is not Erda.
+    pub fn baseline(&self) -> Option<crate::baselines::Scheme> {
+        match self {
+            Scheme::Erda => None,
+            Scheme::RedoLogging => Some(crate::baselines::Scheme::RedoLogging),
+            Scheme::ReadAfterWrite => Some(crate::baselines::Scheme::ReadAfterWrite),
+        }
+    }
+}
+
+/// Typed store failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreError {
+    /// The metadata hash table has no free slot in the key's neighborhood.
+    TableFull,
+    /// The key is empty or exceeds the codec/entry maximum.
+    InvalidKey { len: usize },
+    /// The encoded object would exceed a log segment / destination slot.
+    ValueTooLarge { size: usize, max: usize },
+    /// An entry exists but no consistent version of the value survives.
+    Corrupt { key: Vec<u8> },
+    /// The operation is not meaningful for this scheme / handle.
+    Unsupported(&'static str),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::TableFull => write!(f, "metadata hash table full"),
+            StoreError::InvalidKey { len } => {
+                write!(f, "key length {len} outside 1..={}", crate::log::object::MAX_KEY)
+            }
+            StoreError::ValueTooLarge { size, max } => {
+                write!(f, "encoded object of {size} B exceeds the {max} B limit")
+            }
+            StoreError::Corrupt { key } => {
+                write!(f, "no consistent version of key {:?}", String::from_utf8_lossy(key))
+            }
+            StoreError::Unsupported(what) => write!(f, "unsupported operation: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// Per-handle operation statistics (the [`RemoteStore`] view; engine-level
+/// runs report the richer [`crate::metrics::RunStats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpStats {
+    pub gets: u64,
+    pub puts: u64,
+    pub deletes: u64,
+    /// Gets that found no live value.
+    pub read_misses: u64,
+    /// Torn objects detected by the checksum gate.
+    pub torn_detected: u64,
+    /// Metadata entries rolled back by repair.
+    pub repairs: u64,
+    /// Staged baseline records applied to destination storage.
+    pub applied: u64,
+}
+
+/// One operation of the shared client–server protocol. All three schemes
+/// consume the same requests; `CrashDuringPut` is the failure-injection
+/// variant (persist only the first `chunks` 64-byte chunks, then die).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    Get { key: Vec<u8> },
+    Put { key: Vec<u8>, value: Vec<u8> },
+    Delete { key: Vec<u8> },
+    CrashDuringPut { key: Vec<u8>, value: Vec<u8>, chunks: usize },
+}
+
+impl Request {
+    /// The key the request addresses.
+    pub fn key(&self) -> &[u8] {
+        match self {
+            Request::Get { key }
+            | Request::Put { key, .. }
+            | Request::Delete { key }
+            | Request::CrashDuringPut { key, .. } => key,
+        }
+    }
+}
+
+/// The typed reply to a [`Request`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    /// Reply to `Get`: the live value, or None for absent/deleted keys.
+    Value(Option<Vec<u8>>),
+    /// Reply to `Put`/`Delete`.
+    Ok,
+    /// A `CrashDuringPut` was injected; the writer died mid-transfer.
+    Crashed,
+}
+
+/// Where a client's operations come from (shared by the Erda and baseline
+/// client actors and by [`Db::execute`]-driven scripts).
+pub enum OpSource {
+    /// A YCSB generator (figure runs).
+    Ycsb(Generator),
+    /// A fixed script (tests, Table 1 measurements, failure injection).
+    Script(VecDeque<Request>),
+}
+
+impl OpSource {
+    /// A scripted source from a plain op list.
+    pub fn script(ops: Vec<Request>) -> Self {
+        OpSource::Script(VecDeque::from(ops))
+    }
+
+    /// Produce the next operation, or None when a script is exhausted.
+    pub fn next(&mut self) -> Option<Request> {
+        match self {
+            OpSource::Ycsb(g) => Some(match g.next_op() {
+                Op::Read { key } => Request::Get { key },
+                Op::Update { key, value } => Request::Put { key, value },
+            }),
+            OpSource::Script(q) => q.pop_front(),
+        }
+    }
+}
+
+/// The typed key-value surface every scheme implements (via [`Db`]).
+pub trait RemoteStore {
+    /// Which protocol this store runs.
+    fn scheme(&self) -> Scheme;
+
+    /// Read the live value of `key` (None = absent or deleted).
+    fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>, StoreError>;
+
+    /// Write `key = value`.
+    fn put(&mut self, key: &[u8], value: &[u8]) -> Result<(), StoreError>;
+
+    /// Remove `key`.
+    fn delete(&mut self, key: &[u8]) -> Result<(), StoreError>;
+
+    /// Per-handle operation statistics.
+    fn op_stats(&self) -> OpStats;
+
+    /// The shared run counters (scan-counters surface).
+    fn counters(&self) -> &crate::metrics::Counters;
+
+    /// Drive the store through the wire protocol. The default covers the
+    /// plain data path; handles that support failure injection override it.
+    fn execute(&mut self, req: Request) -> Result<Response, StoreError> {
+        match req {
+            Request::Get { key } => Ok(Response::Value(self.get(&key)?)),
+            Request::Put { key, value } => {
+                self.put(&key, &value)?;
+                Ok(Response::Ok)
+            }
+            Request::Delete { key } => {
+                self.delete(&key)?;
+                Ok(Response::Ok)
+            }
+            Request::CrashDuringPut { .. } => {
+                Err(StoreError::Unsupported("failure injection needs a concrete store handle"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_ids_round_trip() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::parse(s.id()), Some(s));
+        }
+        assert_eq!(Scheme::parse("nope"), None);
+        assert_eq!(Scheme::Erda.baseline(), None);
+        assert_eq!(
+            Scheme::RedoLogging.baseline(),
+            Some(crate::baselines::Scheme::RedoLogging)
+        );
+        assert_eq!(
+            Scheme::ReadAfterWrite.baseline(),
+            Some(crate::baselines::Scheme::ReadAfterWrite)
+        );
+    }
+
+    #[test]
+    fn request_key_accessor() {
+        let k = b"user1".to_vec();
+        for r in [
+            Request::Get { key: k.clone() },
+            Request::Put { key: k.clone(), value: vec![1] },
+            Request::Delete { key: k.clone() },
+            Request::CrashDuringPut { key: k.clone(), value: vec![2], chunks: 1 },
+        ] {
+            assert_eq!(r.key(), &k[..]);
+        }
+    }
+
+    #[test]
+    fn script_source_drains_in_order() {
+        let mut src = OpSource::script(vec![
+            Request::Get { key: b"a".to_vec() },
+            Request::Delete { key: b"b".to_vec() },
+        ]);
+        assert!(matches!(src.next(), Some(Request::Get { .. })));
+        assert!(matches!(src.next(), Some(Request::Delete { .. })));
+        assert!(src.next().is_none());
+    }
+
+    #[test]
+    fn ycsb_source_never_ends() {
+        let gen = Generator::new(crate::ycsb::WorkloadConfig::default(), 0);
+        let mut src = OpSource::Ycsb(gen);
+        for _ in 0..10 {
+            assert!(src.next().is_some());
+        }
+    }
+
+    #[test]
+    fn store_error_displays() {
+        assert_eq!(StoreError::TableFull.to_string(), "metadata hash table full");
+        let e = StoreError::ValueTooLarge { size: 9000, max: 8192 };
+        assert!(e.to_string().contains("9000"));
+        assert!(StoreError::Corrupt { key: b"k".to_vec() }.to_string().contains('k'));
+    }
+}

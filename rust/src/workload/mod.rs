@@ -1,48 +1,19 @@
-//! The run driver: build a world for a scheme, preload records, spawn
-//! client/cleaner/applier actors, run the DES, collect [`RunStats`].
+//! Run configuration + the one-call driver entry point.
 //!
-//! Every figure of the paper is "run this for some (scheme, workload,
-//! value size, thread count) and read off a metric" — this module is that
-//! machinery; `crate::figures` does the sweeps.
+//! The actual machinery (world construction, actor spawning, engine run,
+//! stats collection) lives in [`crate::store::Cluster`]; this module keeps
+//! the sweep-friendly [`DriverConfig`] plus [`run`] — "run this config,
+//! give me the stats" — which every figure and bench calls in a loop.
 
-use crate::baselines::{
-    ApplierActor, ApplierConfig, BaselineClient, BaselineOpSource, BaselineWorld, Scheme,
-};
-use crate::erda::{CleanerActor, CleanerConfig, ClientConfig, ErdaClient, ErdaWorld, OpSource};
-use crate::log::{object, LogConfig};
+use crate::erda::CleanerConfig;
+use crate::log::LogConfig;
 use crate::metrics::RunStats;
-use crate::nvm::NvmConfig;
-use crate::sim::{Actor, Engine, Step, Time, Timing};
-use crate::ycsb::{Generator, WorkloadConfig};
+use crate::sim::{Time, Timing};
+use crate::store::Cluster;
+use crate::ycsb::WorkloadConfig;
 
-/// Which of the three schemes to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SchemeSel {
-    Erda,
-    RedoLogging,
-    ReadAfterWrite,
-}
-
-impl SchemeSel {
-    pub const ALL: [SchemeSel; 3] =
-        [SchemeSel::Erda, SchemeSel::RedoLogging, SchemeSel::ReadAfterWrite];
-
-    pub fn label(&self) -> &'static str {
-        match self {
-            SchemeSel::Erda => "Erda",
-            SchemeSel::RedoLogging => "Redo Logging",
-            SchemeSel::ReadAfterWrite => "Read After Write",
-        }
-    }
-
-    pub fn id(&self) -> &'static str {
-        match self {
-            SchemeSel::Erda => "erda",
-            SchemeSel::RedoLogging => "redo",
-            SchemeSel::ReadAfterWrite => "raw",
-        }
-    }
-}
+/// Which of the three schemes to run — the facade's scheme enum.
+pub use crate::store::Scheme as SchemeSel;
 
 /// Full configuration of one simulation run.
 #[derive(Clone, Debug)]
@@ -90,128 +61,9 @@ impl DriverConfig {
     }
 }
 
-/// Resets CPU/NVM/fabric accounting at the measurement boundary.
-struct Marker;
-
-impl Actor<ErdaWorld> for Marker {
-    fn step(&mut self, w: &mut ErdaWorld, _now: Time) -> Step {
-        w.cpu.reset_accounting();
-        w.nvm.reset_stats();
-        Step::Done
-    }
-}
-
-impl Actor<BaselineWorld> for Marker {
-    fn step(&mut self, w: &mut BaselineWorld, _now: Time) -> Step {
-        w.cpu.reset_accounting();
-        w.nvm.reset_stats();
-        Step::Done
-    }
-}
-
 /// Run one simulation; returns the collected metrics.
 pub fn run(cfg: &DriverConfig) -> RunStats {
-    match cfg.scheme {
-        SchemeSel::Erda => run_erda(cfg),
-        SchemeSel::RedoLogging => run_baseline(cfg, Scheme::RedoLogging),
-        SchemeSel::ReadAfterWrite => run_baseline(cfg, Scheme::ReadAfterWrite),
-    }
-}
-
-fn client_cfg(cfg: &DriverConfig) -> ClientConfig {
-    ClientConfig { max_value: cfg.workload.value_size, ..ClientConfig::default() }
-}
-
-fn run_erda(cfg: &DriverConfig) -> RunStats {
-    let mut world = ErdaWorld::new(
-        cfg.timing.clone(),
-        NvmConfig { capacity: cfg.nvm_capacity },
-        cfg.log_cfg,
-        cfg.table_cap(),
-    );
-    world.preload(cfg.workload.record_count, cfg.workload.value_size);
-    world.nvm.reset_stats();
-    world.counters.measure_from = cfg.warmup;
-    world.counters.active_clients = cfg.clients as u32;
-    if let Some(th) = cfg.cleaning_threshold {
-        world.server.cleaning_threshold = th;
-    }
-
-    let mut engine = Engine::new(world);
-    engine.spawn(Box::new(Marker), cfg.warmup);
-    for c in 0..cfg.clients {
-        let gen = Generator::new(cfg.workload.clone(), c as u64);
-        let client =
-            ErdaClient::new(OpSource::Ycsb(gen), cfg.ops_per_client, client_cfg(cfg));
-        engine.spawn(Box::new(client), 0);
-    }
-    if cfg.cleaning_threshold.is_some() {
-        for h in 0..cfg.log_cfg.num_heads {
-            engine.spawn(Box::new(CleanerActor::new(h as u8, cfg.cleaner)), cfg.warmup / 2);
-        }
-    }
-    engine.run();
-
-    let w = &mut engine.state;
-    let c = &mut w.counters;
-    RunStats {
-        ops: c.ops_measured,
-        duration_ns: c.last_completion.saturating_sub(c.measure_from),
-        latency: c.latency.clone(),
-        latency_cleaning: c.latency_during_cleaning.clone(),
-        server_cpu_busy_ns: w.cpu.busy_ns(),
-        nvm_programmed_bytes: w.nvm.stats().programmed_bytes,
-        inconsistencies_detected: c.inconsistencies,
-        fallback_reads: c.fallbacks,
-        read_misses: c.read_misses,
-        applied: 0,
-        cleanings: c.cleanings_completed,
-        events: engine.events(),
-    }
-}
-
-fn run_baseline(cfg: &DriverConfig, scheme: Scheme) -> RunStats {
-    let slot_size = object::wire_size(24, cfg.workload.value_size);
-    let mut world = BaselineWorld::new(
-        cfg.timing.clone(),
-        NvmConfig { capacity: cfg.nvm_capacity },
-        scheme,
-        cfg.table_cap(),
-        cfg.log_cfg.region_size,
-        cfg.log_cfg.segment_size,
-        slot_size,
-    );
-    world.preload(cfg.workload.record_count, cfg.workload.value_size);
-    world.nvm.reset_stats();
-    world.counters.measure_from = cfg.warmup;
-    world.counters.active_clients = cfg.clients as u32;
-
-    let mut engine = Engine::new(world);
-    engine.spawn(Box::new(Marker), cfg.warmup);
-    for c in 0..cfg.clients {
-        let gen = Generator::new(cfg.workload.clone(), c as u64);
-        let client = BaselineClient::new(BaselineOpSource::Ycsb(gen), cfg.ops_per_client);
-        engine.spawn(Box::new(client), 0);
-    }
-    engine.spawn(Box::new(ApplierActor::new(ApplierConfig::default())), 0);
-    engine.run();
-
-    let w = &mut engine.state;
-    let c = &mut w.counters;
-    RunStats {
-        ops: c.ops_measured,
-        duration_ns: c.last_completion.saturating_sub(c.measure_from),
-        latency: c.latency.clone(),
-        latency_cleaning: Default::default(),
-        server_cpu_busy_ns: w.cpu.busy_ns(),
-        nvm_programmed_bytes: w.nvm.stats().programmed_bytes,
-        inconsistencies_detected: 0,
-        fallback_reads: 0,
-        read_misses: c.read_misses,
-        applied: c.applied,
-        cleanings: 0,
-        events: engine.events(),
-    }
+    Cluster::from_config(cfg).run().stats
 }
 
 #[cfg(test)]

@@ -2,247 +2,190 @@
 //!
 //! These tests exercise the paper's §4.2/§4.3 scenarios with real torn
 //! writes (NIC-cache truncation), concurrent readers, client-driven repair,
-//! and server crash recovery — all through the public API.
+//! and server crash recovery — all through the `store` facade: scripted
+//! clients ride a [`Cluster`], the settled [`Db`] answers the final-state
+//! questions.
 
-use std::collections::VecDeque;
-
-use erda::erda::{
-    recover, ClientConfig, ErdaClient, ErdaWorld, LocalCheck, OpSource, ScriptOp,
-};
+use erda::erda::ClientConfig;
 use erda::log::LogConfig;
-use erda::nvm::NvmConfig;
-use erda::sim::{Engine, Timing, MS};
-use erda::ycsb::key_of;
+use erda::sim::MS;
+use erda::store::{Cluster, ClusterBuilder, RemoteStore, Request, Scheme};
+use erda::ycsb::{key_of, Workload};
 
-fn world() -> ErdaWorld {
-    ErdaWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 32 << 20 },
-        LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 },
-        1 << 12,
-    )
-}
-
-fn script(ops: Vec<ScriptOp>) -> OpSource {
-    OpSource::Script(VecDeque::from(ops))
+fn base() -> ClusterBuilder {
+    Cluster::builder()
+        .scheme(Scheme::Erda)
+        .log(LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 })
+        .nvm_capacity(32 << 20)
+        .clients(0)
+        .warmup(0)
 }
 
 #[test]
 fn torn_write_detected_and_repaired_by_reader() {
-    let mut w = world();
-    w.preload(10, 64);
-    w.counters.active_clients = 2;
     let key = key_of(3);
+    // Writer crashes after persisting 1 chunk of a 2-chunk object; the
+    // reader arrives long after the crash, sees the torn object, falls back.
+    let outcome = base()
+        .preload(10, 64)
+        .value_size(64)
+        .script_client(
+            0,
+            vec![Request::CrashDuringPut { key: key.clone(), value: vec![9u8; 100], chunks: 1 }],
+            ClientConfig::default(),
+        )
+        .script_client(1 * MS, vec![Request::Get { key: key.clone() }], ClientConfig::default())
+        .run();
 
-    let mut engine = Engine::new(w);
-    // Writer crashes after persisting 1 chunk of a 2-chunk object.
-    let writer = ErdaClient::new(
-        script(vec![ScriptOp::CrashDuringWrite {
-            key: key.clone(),
-            value: vec![9u8; 100],
-            chunks: 1,
-        }]),
-        1,
-        ClientConfig::default(),
-    );
-    // Reader arrives long after the crash; sees the torn object, falls back.
-    let reader = ErdaClient::new(
-        script(vec![ScriptOp::Read { key: key.clone() }]),
-        1,
-        ClientConfig::default(),
-    );
-    engine.spawn(Box::new(writer), 0);
-    engine.spawn(Box::new(reader), 1 * MS);
-    engine.run();
-
-    let w = &mut engine.state;
-    w.settle();
-    assert_eq!(w.counters.inconsistencies, 1, "checksum must flag the torn object");
-    assert_eq!(w.counters.fallbacks, 1, "reader must fall back to the old version");
-    assert_eq!(w.counters.repairs, 1, "server entry must be rolled back");
-    assert_eq!(w.counters.read_misses, 0);
+    let s = &outcome.stats;
+    assert_eq!(s.inconsistencies_detected, 1, "checksum must flag the torn object");
+    assert_eq!(s.fallback_reads, 1, "reader must fall back to the old version");
+    assert_eq!(s.repairs, 1, "server entry must be rolled back");
+    assert_eq!(s.read_misses, 0);
     // After repair, the store serves the old consistent version.
-    assert_eq!(w.get(&key).expect("key must survive"), vec![0xA5u8; 64]);
+    let mut db = outcome.db;
+    assert_eq!(db.get(&key).unwrap(), Some(vec![0xA5u8; 64]), "key must survive");
 }
 
 #[test]
 fn fully_lost_write_on_fresh_key_retries_then_misses() {
-    let mut w = world();
-    w.preload(2, 64);
-    w.counters.active_clients = 2;
     let key = key_of(777); // fresh key: no old version to fall back to
+    let outcome = base()
+        .preload(2, 64)
+        .value_size(64)
+        .script_client(
+            0,
+            vec![Request::CrashDuringPut { key: key.clone(), value: vec![1u8; 64], chunks: 0 }],
+            ClientConfig::default(),
+        )
+        .script_client(
+            1 * MS,
+            vec![Request::Get { key: key.clone() }],
+            ClientConfig { max_retries: 3, ..ClientConfig::default() },
+        )
+        .run();
 
-    let mut engine = Engine::new(w);
-    let writer = ErdaClient::new(
-        script(vec![ScriptOp::CrashDuringWrite { key: key.clone(), value: vec![1u8; 64], chunks: 0 }]),
-        1,
-        ClientConfig::default(),
-    );
-    let reader = ErdaClient::new(
-        script(vec![ScriptOp::Read { key: key.clone() }]),
-        1,
-        ClientConfig { max_retries: 3, ..ClientConfig::default() },
-    );
-    engine.spawn(Box::new(writer), 0);
-    engine.spawn(Box::new(reader), 1 * MS);
-    engine.run();
-
-    let w = &engine.state;
-    assert!(w.counters.inconsistencies >= 1);
-    assert_eq!(w.counters.fallbacks, 0, "no old version exists");
-    assert_eq!(w.counters.retries, 3, "reader retries then gives up");
-    assert_eq!(w.counters.read_misses, 1);
+    let s = &outcome.stats;
+    assert!(s.inconsistencies_detected >= 1);
+    assert_eq!(s.fallback_reads, 0, "no old version exists");
+    assert_eq!(s.retries, 3, "reader retries then gives up");
+    assert_eq!(s.read_misses, 1);
 }
 
 #[test]
 fn concurrent_reader_during_write_window_falls_back_or_waits() {
     // §4.3 scenario 1: entry updated, object not yet written; a synchronous
     // reader must get the previous version (or retry), never garbage.
-    let mut w = world();
-    w.preload(10, 2048);
-    w.counters.active_clients = 2;
     let key = key_of(5);
-
-    let mut engine = Engine::new(w);
-    let writer = ErdaClient::new(
-        script(vec![ScriptOp::Update { key: key.clone(), value: vec![7u8; 2048] }]),
-        1,
-        ClientConfig::default(),
-    );
     // The reader's object fetch lands inside the writer's NIC-drain window:
     // writer metadata applies at ~51 µs; its data drains over ~10 µs after;
     // reader starting at 15 µs reads the entry at ~46 µs and samples the
     // object at ~77+ µs — overlapping the window across seeds/sizes.
-    let reader = ErdaClient::new(
-        script(vec![ScriptOp::Read { key: key.clone() }; 4]),
-        4,
-        ClientConfig::default(),
-    );
-    engine.spawn(Box::new(writer), 0);
-    engine.spawn(Box::new(reader), 15_000);
-    engine.run();
+    let outcome = base()
+        .preload(10, 2048)
+        .value_size(2048)
+        .script_client(
+            0,
+            vec![Request::Put { key: key.clone(), value: vec![7u8; 2048] }],
+            ClientConfig::default(),
+        )
+        .script_client(
+            15_000,
+            vec![Request::Get { key: key.clone() }; 4],
+            ClientConfig::default(),
+        )
+        .run();
 
-    let w = &mut engine.state;
-    w.settle();
     // Whatever interleaving resulted, no read may return garbage or miss.
-    assert_eq!(w.counters.read_misses, 0);
+    assert_eq!(outcome.stats.read_misses, 0);
     // And the final state is the new value, fully persisted.
-    assert_eq!(w.get(&key).expect("present"), vec![7u8; 2048]);
+    let mut db = outcome.db;
+    assert_eq!(db.get(&key).unwrap(), Some(vec![7u8; 2048]), "present");
 }
 
 #[test]
 fn server_crash_recovery_with_torn_tail() {
-    let mut w = world();
-    w.preload(20, 128);
-    w.counters.active_clients = 3;
-
-    // Three writers; the last one tears.
-    let mut engine = Engine::new(w);
+    // Three writers; the last one tears (its trailing chunks never reach
+    // the NIC). After the run settles — completed writes persisted, the
+    // torn tail not — the server crashes: volatile bookkeeping (log tails,
+    // indices, hop bitmaps) is lost. Recovery must roll back exactly the
+    // torn update. (Mid-drain NIC-cache loss is covered at the fabric
+    // level by properties::prop_fabric_crash_persists_chunk_prefix.)
+    let mut b = base().preload(20, 128).value_size(128);
     for i in 0..2u64 {
-        let c = ErdaClient::new(
-            script(vec![ScriptOp::Update { key: key_of(i), value: vec![i as u8 + 1; 128] }]),
-            1,
+        b = b.script_client(
+            0,
+            vec![Request::Put { key: key_of(i), value: vec![i as u8 + 1; 128] }],
             ClientConfig::default(),
         );
-        engine.spawn(Box::new(c), 0);
     }
-    let crasher = ErdaClient::new(
-        script(vec![ScriptOp::CrashDuringWrite { key: key_of(2), value: vec![0xEE; 128], chunks: 1 }]),
-        1,
+    b = b.script_client(
+        0,
+        vec![Request::CrashDuringPut { key: key_of(2), value: vec![0xEE; 128], chunks: 1 }],
         ClientConfig::default(),
     );
-    engine.spawn(Box::new(crasher), 0);
-    engine.run();
+    let mut db = b.run().db;
 
-    // Power failure: NIC cache dropped, volatile bookkeeping lost.
-    let w = &mut engine.state;
-    let t = 10 * MS;
-    {
-        let ErdaWorld { nvm, fabric, .. } = w;
-        fabric.drop_unpersisted(t, nvm);
-    }
-    for h in 0..w.server.num_heads() {
-        let head = w.server.log.head_mut(h as u8);
-        head.tail = 0;
-        head.index.clear();
-    }
-    let report = recover(&mut w.server, &mut w.nvm, &mut LocalCheck);
+    db.crash().expect("erda store");
+    let report = db.recover().expect("recovery runs");
 
     // The torn update rolled back; completed updates survive.
     assert_eq!(report.entries_rolled_back, 1, "{report:?}");
-    assert_eq!(w.get(&key_of(2)).expect("rolled back"), vec![0xA5u8; 128]);
-    assert_eq!(w.get(&key_of(0)).expect("committed"), vec![1u8; 128]);
-    assert_eq!(w.get(&key_of(1)).expect("committed"), vec![2u8; 128]);
+    assert_eq!(db.get(&key_of(2)).unwrap(), Some(vec![0xA5u8; 128]), "rolled back");
+    assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![1u8; 128]), "committed");
+    assert_eq!(db.get(&key_of(1)).unwrap(), Some(vec![2u8; 128]), "committed");
     for i in 3..20 {
-        assert!(w.get(&key_of(i)).is_some(), "untouched key {i} lost");
+        assert!(db.get(&key_of(i)).unwrap().is_some(), "untouched key {i} lost");
     }
 }
 
 #[test]
 fn read_your_own_writes_sequential() {
-    let mut w = world();
-    w.preload(5, 32);
-    w.counters.active_clients = 1;
     let key = key_of(1);
+    let outcome = base()
+        .preload(5, 32)
+        .value_size(32)
+        .script_client(
+            0,
+            vec![
+                Request::Put { key: key.clone(), value: b"generation-1....................".to_vec() },
+                Request::Get { key: key.clone() },
+                Request::Put { key: key.clone(), value: b"generation-2....................".to_vec() },
+                Request::Get { key: key.clone() },
+                Request::Delete { key: key.clone() },
+                Request::Get { key: key.clone() },
+            ],
+            ClientConfig::default(),
+        )
+        .run();
 
-    let mut engine = Engine::new(w);
-    let client = ErdaClient::new(
-        script(vec![
-            ScriptOp::Update { key: key.clone(), value: b"generation-1....................".to_vec() },
-            ScriptOp::Read { key: key.clone() },
-            ScriptOp::Update { key: key.clone(), value: b"generation-2....................".to_vec() },
-            ScriptOp::Read { key: key.clone() },
-            ScriptOp::Delete { key: key.clone() },
-            ScriptOp::Read { key: key.clone() },
-        ]),
-        6,
-        ClientConfig::default(),
-    );
-    engine.spawn(Box::new(client), 0);
-    engine.run();
-
-    let w = &mut engine.state;
-    w.settle();
     // The two post-update reads hit; the post-delete read misses.
-    assert_eq!(w.counters.read_misses, 1);
-    assert_eq!(w.counters.inconsistencies, 0, "sequential ops never see tears");
-    assert!(w.get(&key).is_none(), "deleted at the end");
+    let s = &outcome.stats;
+    assert_eq!(s.read_misses, 1);
+    assert_eq!(s.inconsistencies_detected, 0, "sequential ops never see tears");
+    let mut db = outcome.db;
+    assert!(db.get(&key).unwrap().is_none(), "deleted at the end");
 }
 
 #[test]
 fn many_clients_zipfian_no_anomalies() {
-    let mut w = world();
-    w.preload(100, 512);
-    w.counters.active_clients = 8;
+    let outcome = base()
+        .preload(100, 512)
+        .workload(Workload::UpdateHeavy)
+        .records(100)
+        .value_size(512)
+        .seed(99)
+        .clients(8)
+        .ops_per_client(400)
+        .run();
 
-    let mut engine = Engine::new(w);
-    for c in 0..8 {
-        let gen = erda::ycsb::Generator::new(
-            erda::ycsb::WorkloadConfig {
-                workload: erda::ycsb::Workload::UpdateHeavy,
-                record_count: 100,
-                value_size: 512,
-                theta: 0.99,
-                seed: 99,
-            },
-            c,
-        );
-        let client = ErdaClient::new(
-            OpSource::Ycsb(gen),
-            400,
-            ClientConfig { max_value: 512, ..ClientConfig::default() },
-        );
-        engine.spawn(Box::new(client), 0);
-    }
-    engine.run();
-
-    let w = &mut engine.state;
-    w.settle();
-    assert_eq!(w.counters.read_misses, 0, "no lost keys under contention");
-    assert_eq!(w.counters.ops_measured, 8 * 400);
+    let s = &outcome.stats;
+    assert_eq!(s.read_misses, 0, "no lost keys under contention");
+    assert_eq!(s.ops, 8 * 400);
     // Hot keys under Zipfian contention: concurrent read-write windows can
     // legitimately trigger fallbacks, but every one must have resolved.
+    let mut db = outcome.db;
     for i in 0..100 {
-        assert!(w.get(&key_of(i)).is_some(), "key {i} must survive");
+        assert!(db.get(&key_of(i)).unwrap().is_some(), "key {i} must survive");
     }
 }

@@ -1,73 +1,50 @@
 //! Integration: lock-free log cleaning (§4.4, Figs 9–13) under concurrent
-//! client load, through the public API.
+//! client load, through the `store` facade.
 
-use erda::erda::{CleanerActor, CleanerConfig, ClientConfig, ErdaClient, ErdaWorld, OpSource};
+use erda::erda::CleanerConfig;
 use erda::log::LogConfig;
-use erda::nvm::NvmConfig;
-use erda::sim::{Engine, Timing};
+use erda::metrics::RunStats;
+use erda::store::{Cluster, Db, RemoteStore, Scheme};
 use erda::ycsb::{key_of, Generator, Workload, WorkloadConfig};
 
-fn cleaning_run(threshold: u32, clients: usize, ops: u64) -> ErdaWorld {
-    let mut w = ErdaWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 64 << 20 },
-        LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 },
-        1 << 12,
-    );
-    w.preload(64, 256);
-    w.server.cleaning_threshold = threshold;
-    w.counters.active_clients = clients as u32;
-
-    let mut engine = Engine::new(w);
-    for c in 0..clients {
-        let gen = Generator::new(
-            WorkloadConfig {
-                workload: Workload::UpdateHeavy,
-                record_count: 64,
-                value_size: 256,
-                theta: 0.99,
-                seed: 5,
-            },
-            c as u64,
-        );
-        let client = ErdaClient::new(
-            OpSource::Ycsb(gen),
-            ops,
-            ClientConfig { max_value: 256, ..ClientConfig::default() },
-        );
-        engine.spawn(Box::new(client), 0);
-    }
-    for h in 0..2u8 {
-        engine.spawn(
-            Box::new(CleanerActor::new(h, CleanerConfig { batch: 8, poll: 100_000, one_shot: false })),
-            0,
-        );
-    }
-    engine.run();
-    let mut w = engine.state;
-    w.settle();
-    w
+fn cleaning_run(threshold: u32, clients: usize, ops: u64) -> (RunStats, Db) {
+    let outcome = Cluster::builder()
+        .scheme(Scheme::Erda)
+        .log(LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 2 })
+        .nvm_capacity(64 << 20)
+        .workload(Workload::UpdateHeavy)
+        .records(64)
+        .value_size(256)
+        .seed(5)
+        .preload(64, 256)
+        .clients(clients)
+        .ops_per_client(ops)
+        .warmup(0)
+        .cleaning_threshold(threshold)
+        .cleaner(CleanerConfig { batch: 8, poll: 100_000, one_shot: false })
+        .run();
+    (outcome.stats, outcome.db)
 }
 
 #[test]
 fn cleaning_triggers_and_completes_under_load() {
-    let w = cleaning_run(64 << 10, 4, 800);
-    assert!(w.counters.cleanings_completed >= 1, "threshold must trigger cleaning");
-    assert_eq!(w.counters.read_misses, 0, "no key lost across cleaning");
+    let (s, mut db) = cleaning_run(64 << 10, 4, 800);
+    assert!(s.cleanings >= 1, "threshold must trigger cleaning");
+    assert_eq!(s.read_misses, 0, "no key lost across cleaning");
     // Every preloaded key still readable with a consistent value.
     for i in 0..64 {
-        assert!(w.get(&key_of(i)).is_some(), "key {i} lost after cleaning");
+        assert!(db.get(&key_of(i)).unwrap().is_some(), "key {i} lost after cleaning");
     }
 }
 
 #[test]
 fn cleaning_reclaims_space() {
-    let w = cleaning_run(48 << 10, 2, 1200);
-    assert!(w.counters.cleanings_completed >= 1);
+    let (s, db) = cleaning_run(48 << 10, 2, 1200);
+    assert!(s.cleanings >= 1);
     // After compaction the live chain holds ≤ one version per key (plus the
     // post-cleaning appends): far below the pre-cleaning occupancy.
     for h in 0..2u8 {
-        let occ = w.server.log.occupied(h);
+        let occ = db.log_occupied(h).expect("erda store");
         // 32 keys/head × ~280 B ≈ 9 KB live; allow generous slack for
         // appends since the last cleaning finished.
         assert!(occ < 96 << 10, "head {h} occupancy {occ} not reclaimed");
@@ -76,17 +53,17 @@ fn cleaning_reclaims_space() {
 
 #[test]
 fn ops_during_cleaning_complete_and_are_tracked() {
-    let w = cleaning_run(32 << 10, 4, 800);
-    assert!(w.counters.cleanings_completed >= 1);
+    let (s, _db) = cleaning_run(32 << 10, 4, 800);
+    assert!(s.cleanings >= 1);
     assert!(
-        w.counters.latency_during_cleaning.count() > 0,
+        s.latency_cleaning.count() > 0,
         "some ops must have run during cleaning (Fig 26's population)"
     );
     // Fig 26 (read side): send-path ops during cleaning are slower than the
     // one-sided normal path for read-heavy mixes. With a 50/50 mix the
     // averages are closer; just require both populations to be sane.
-    let normal = w.counters.latency.mean_us();
-    let during = w.counters.latency_during_cleaning.mean_us();
+    let normal = s.latency.mean_us();
+    let during = s.latency_cleaning.mean_us();
     assert!(normal > 40.0 && normal < 140.0, "normal {normal}");
     assert!(during > 40.0 && during < 180.0, "during {during}");
 }
@@ -95,17 +72,6 @@ fn ops_during_cleaning_complete_and_are_tracked() {
 fn values_stay_consistent_across_cleaning() {
     // Deterministic single client: final value of each key must equal the
     // last update the generator produced for it.
-    let mut w = ErdaWorld::new(
-        Timing::default(),
-        NvmConfig { capacity: 64 << 20 },
-        LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 1 },
-        1 << 12,
-    );
-    w.preload(16, 64);
-    w.server.cleaning_threshold = 16 << 10;
-    w.counters.active_clients = 1;
-
-    // Replay the generator to learn the expected final values.
     let cfg = WorkloadConfig {
         workload: Workload::UpdateOnly,
         record_count: 16,
@@ -113,6 +79,7 @@ fn values_stay_consistent_across_cleaning() {
         theta: 0.99,
         seed: 21,
     };
+    // Replay the generator to learn the expected final values.
     let mut oracle: std::collections::HashMap<Vec<u8>, Vec<u8>> = Default::default();
     {
         let mut g = Generator::new(cfg.clone(), 0);
@@ -123,21 +90,26 @@ fn values_stay_consistent_across_cleaning() {
         }
     }
 
-    let mut engine = Engine::new(w);
-    let client = ErdaClient::new(
-        OpSource::Ycsb(Generator::new(cfg, 0)),
-        600,
-        ClientConfig { max_value: 64, ..ClientConfig::default() },
-    );
-    engine.spawn(Box::new(client), 0);
-    engine.spawn(Box::new(CleanerActor::new(0, CleanerConfig::default())), 0);
-    engine.run();
+    let outcome = Cluster::builder()
+        .scheme(Scheme::Erda)
+        .log(LogConfig { region_size: 1 << 18, segment_size: 1 << 13, num_heads: 1 })
+        .nvm_capacity(64 << 20)
+        .workload(cfg.workload)
+        .records(cfg.record_count)
+        .value_size(cfg.value_size)
+        .theta(cfg.theta)
+        .seed(cfg.seed)
+        .preload(16, 64)
+        .clients(1)
+        .ops_per_client(600)
+        .warmup(0)
+        .cleaning_threshold(16 << 10)
+        .run();
 
-    let w = &mut engine.state;
-    w.settle();
-    assert!(w.counters.cleanings_completed >= 1, "cleaning must have run");
+    assert!(outcome.stats.cleanings >= 1, "cleaning must have run");
+    let mut db = outcome.db;
     for (key, expect) in &oracle {
-        let got = w.get(key).unwrap_or_else(|| panic!("key {key:?} lost"));
+        let got = db.get(key).unwrap().unwrap_or_else(|| panic!("key {key:?} lost"));
         assert_eq!(&got, expect, "key {key:?} has wrong final value");
     }
 }

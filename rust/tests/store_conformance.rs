@@ -1,0 +1,177 @@
+//! Backend-agnostic conformance suite: the same read / update / delete /
+//! torn-write scenario runs against all three schemes (Erda, Redo Logging,
+//! Read After Write) through the [`RemoteStore`] trait — the store facade's
+//! contract, checked uniformly.
+//!
+//! Two layers are covered per scheme:
+//! * the synchronous [`Db`] handle (typed one-shot ops), driven through a
+//!   `&mut dyn RemoteStore` so no scheme-specific API can leak in, and
+//! * a scripted [`Cluster`] run (same ops through the DES engine, real
+//!   fabric timing, NIC-cache truncation for the torn write).
+
+use erda::sim::MS;
+use erda::store::{Cluster, Db, RemoteStore, Request, Response, Scheme, StoreError};
+use erda::ycsb::{key_of, Workload};
+
+const VALUE: usize = 128;
+
+fn open(scheme: Scheme) -> Db {
+    Cluster::builder()
+        .scheme(scheme)
+        .records(16)
+        .value_size(VALUE)
+        .preload(16, VALUE)
+        .build_db()
+}
+
+/// The shared scenario, expressed purely against the trait.
+fn scenario(store: &mut dyn RemoteStore) {
+    let scheme = store.scheme();
+    let preloaded = vec![0xA5u8; VALUE];
+
+    // Read a preloaded key.
+    assert_eq!(store.get(&key_of(0)).unwrap(), Some(preloaded.clone()), "{scheme:?} preload");
+
+    // Update + read-your-write.
+    let v1 = vec![0x11u8; VALUE];
+    store.put(&key_of(0), &v1).unwrap();
+    assert_eq!(store.get(&key_of(0)).unwrap(), Some(v1.clone()), "{scheme:?} update");
+
+    // Second update supersedes the first.
+    let v2 = vec![0x22u8; VALUE];
+    store.put(&key_of(0), &v2).unwrap();
+    assert_eq!(store.get(&key_of(0)).unwrap(), Some(v2), "{scheme:?} re-update");
+
+    // Create a fresh key.
+    let v3 = vec![0x33u8; VALUE];
+    store.put(&key_of(100), &v3).unwrap();
+    assert_eq!(store.get(&key_of(100)).unwrap(), Some(v3), "{scheme:?} create");
+
+    // Delete hides the key; deleting again stays clean.
+    store.delete(&key_of(1)).unwrap();
+    assert_eq!(store.get(&key_of(1)).unwrap(), None, "{scheme:?} delete");
+    store.delete(&key_of(1)).unwrap();
+    assert_eq!(store.get(&key_of(1)).unwrap(), None, "{scheme:?} double delete");
+
+    // A key never written reads as absent.
+    assert_eq!(store.get(&key_of(999)).unwrap(), None, "{scheme:?} miss");
+
+    // Torn write: a writer dies after one 64-byte chunk of an update to a
+    // preloaded key. Remote Data Atomicity: the OLD value must survive —
+    // never garbage, never a half-written object.
+    let resp = store
+        .execute(Request::CrashDuringPut { key: key_of(2), value: vec![0xEEu8; VALUE], chunks: 1 })
+        .unwrap();
+    assert_eq!(resp, Response::Crashed, "{scheme:?} injection ack");
+    assert_eq!(
+        store.get(&key_of(2)).unwrap(),
+        Some(preloaded),
+        "{scheme:?} torn write must leave the old version readable"
+    );
+
+    // The protocol surface agrees with the typed one.
+    match store.execute(Request::Get { key: key_of(0) }).unwrap() {
+        Response::Value(Some(_)) => {}
+        other => panic!("{scheme:?}: unexpected response {other:?}"),
+    }
+}
+
+#[test]
+fn db_conformance_all_schemes() {
+    for scheme in Scheme::ALL {
+        let mut db = open(scheme);
+        scenario(&mut db);
+        let s = db.op_stats();
+        assert!(s.gets >= 7, "{scheme:?} gets {s:?}");
+        assert_eq!(s.puts, 3, "{scheme:?} puts {s:?}");
+        assert_eq!(s.deletes, 2, "{scheme:?} deletes {s:?}");
+    }
+}
+
+#[test]
+fn typed_errors_are_uniform() {
+    for scheme in Scheme::ALL {
+        let mut db = open(scheme);
+        // Key bounds.
+        assert!(
+            matches!(db.put(b"", b"v"), Err(StoreError::InvalidKey { len: 0 })),
+            "{scheme:?} empty key"
+        );
+        assert!(
+            matches!(db.put(&[7u8; 40], b"v"), Err(StoreError::InvalidKey { len: 40 })),
+            "{scheme:?} long key"
+        );
+        // Value bounds.
+        assert!(
+            matches!(db.put(&key_of(0), &vec![0u8; 1 << 20]), Err(StoreError::ValueTooLarge { .. })),
+            "{scheme:?} oversized value"
+        );
+        // Typed errors are values: the store stays usable afterwards.
+        assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![0xA5u8; VALUE]), "{scheme:?}");
+    }
+}
+
+#[test]
+fn engine_conformance_all_schemes() {
+    // The same script through the DES engine: scripted writer + late reader,
+    // including a real NIC-cache-truncated torn write.
+    for scheme in Scheme::ALL {
+        let outcome = Cluster::builder()
+            .scheme(scheme)
+            .records(16)
+            .value_size(VALUE)
+            .preload(16, VALUE)
+            .clients(0)
+            .warmup(0)
+            .script(vec![
+                Request::Put { key: key_of(0), value: vec![0x44u8; VALUE] },
+                Request::Get { key: key_of(0) },
+                Request::Delete { key: key_of(1) },
+                Request::Get { key: key_of(1) }, // the only expected miss
+            ])
+            .script(vec![Request::CrashDuringPut {
+                key: key_of(2),
+                value: vec![0xEEu8; VALUE],
+                chunks: 1,
+            }])
+            .script_at(2 * MS, vec![Request::Get { key: key_of(2) }])
+            .run();
+
+        let s = &outcome.stats;
+        assert_eq!(s.read_misses, 1, "{scheme:?}: exactly the deleted key misses");
+        let mut db = outcome.db;
+        assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![0x44u8; VALUE]), "{scheme:?}");
+        assert_eq!(db.get(&key_of(1)).unwrap(), None, "{scheme:?}");
+        assert_eq!(
+            db.get(&key_of(2)).unwrap(),
+            Some(vec![0xA5u8; VALUE]),
+            "{scheme:?}: torn write must roll back / never apply"
+        );
+    }
+}
+
+#[test]
+fn engine_runs_are_deterministic_per_scheme() {
+    for scheme in Scheme::ALL {
+        let run = || {
+            Cluster::builder()
+                .scheme(scheme)
+                .workload(Workload::UpdateHeavy)
+                .records(64)
+                .value_size(64)
+                .seed(0xC0FFEE)
+                .clients(3)
+                .ops_per_client(150)
+                .warmup(0)
+                .run()
+                .stats
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.ops, b.ops, "{scheme:?}");
+        assert_eq!(a.duration_ns, b.duration_ns, "{scheme:?}");
+        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes, "{scheme:?}");
+        assert_eq!(a.server_cpu_busy_ns, b.server_cpu_busy_ns, "{scheme:?}");
+        assert!(a.ops == 3 * 150, "{scheme:?}: all ops measured with warmup 0");
+    }
+}
