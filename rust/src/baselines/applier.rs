@@ -54,8 +54,12 @@ impl Actor<BaselineWorld> for ApplierActor {
             }
             let resv = w.cpu.reserve(now, svc);
             busy_until = busy_until.max(resv.end);
-            if w.server.apply_one(&mut w.nvm).is_some() {
-                w.counters.applied += 1;
+            match w.server.apply_one(&mut w.nvm) {
+                Some((_, super::server::ApplyVerdict::Applied)) => w.counters.applied += 1,
+                // CRC-gate rejection: the baselines' torn-write detector —
+                // count it where it fires, like Erda's read-side checksum.
+                Some((_, super::server::ApplyVerdict::Torn)) => w.counters.inconsistencies += 1,
+                Some((_, super::server::ApplyVerdict::Skipped)) | None => {}
             }
         }
         if w.server.pending_len() == 0 && w.counters.active_clients == 0 {

@@ -24,7 +24,7 @@ pub mod server;
 
 pub use applier::{ApplierActor, ApplierConfig};
 pub use client::BaselineClient;
-pub use server::{BaselineServer, BaselineWorld, PendingWrite, Scheme};
+pub use server::{ApplyVerdict, BaselineServer, BaselineWorld, PendingWrite, Scheme};
 
 // The op-stream types and run counters are shared across schemes now.
 pub use crate::metrics::Counters;

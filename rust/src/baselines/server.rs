@@ -35,6 +35,21 @@ impl Scheme {
     }
 }
 
+/// What [`BaselineServer::apply_one`] did with the record it popped — the
+/// caller accounts torn detections and applications at the CRC gate itself,
+/// not at injection time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApplyVerdict {
+    /// Record verified and written to destination storage.
+    Applied,
+    /// The staged record failed the CRC gate (a client died mid-write) and
+    /// was skipped — the paper's baseline integrity check firing.
+    Torn,
+    /// Nothing to write: a delete marker, or the key was deleted while the
+    /// record waited in the queue.
+    Skipped,
+}
+
 /// A staged write awaiting asynchronous application.
 #[derive(Clone, Debug)]
 pub struct PendingWrite {
@@ -174,21 +189,24 @@ impl BaselineServer {
     }
 
     /// Apply one pending write to destination storage (the applier actor's
-    /// work item). Returns the applied record, or None when idle.
-    pub fn apply_one(&mut self, nvm: &mut Nvm) -> Option<PendingWrite> {
+    /// work item). Returns the popped record plus what happened to it, or
+    /// None when idle.
+    pub fn apply_one(&mut self, nvm: &mut Nvm) -> Option<(PendingWrite, ApplyVerdict)> {
         let w = self.pending.pop_front()?;
         if w.delete {
-            return Some(w);
+            return Some((w, ApplyVerdict::Skipped));
         }
         // Verify the staged record (RAW entries may be torn if a client died
         // mid-write; the CRC gate catches them — the paper's baselines rely
-        // on the server for this integrity check).
+        // on the server for this integrity check). This gate is where torn
+        // detections are *counted*: the verdict carries the outcome so the
+        // caller never has to guess at injection time.
         let staged = nvm.read_vec(self.staging.addr_of(w.staged_off), w.len as usize);
         match object::decode(&staged) {
             Ok(v) if v.key == w.key => {
                 let slot = match self.table.lookup(nvm, &w.key) {
                     Some(s) => s,
-                    None => return Some(w), // deleted while pending
+                    None => return Some((w, ApplyVerdict::Skipped)), // deleted while pending
                 };
                 let dest_off = self.table.read_entry(nvm, slot).expect("live").atomic.newest();
                 nvm.write(self.dest.addr_of(dest_off), &staged);
@@ -198,9 +216,9 @@ impl BaselineServer {
                 {
                     self.pending_latest.remove(&w.key);
                 }
-                Some(w)
+                Some((w, ApplyVerdict::Applied))
             }
-            _ => Some(w), // torn staging record: skipped (never applied)
+            _ => Some((w, ApplyVerdict::Torn)), // CRC gate rejection: never applied
         }
     }
 
@@ -242,8 +260,18 @@ impl BaselineWorld {
 
     /// Bulk-load `n` records (setup; stats reset by the driver afterwards).
     pub fn preload(&mut self, n: u64, value_size: usize) {
+        self.preload_shard(n, value_size, 0, 1);
+    }
+
+    /// Bulk-load the subset of records `0..n` that [`crate::store::shard_of`]
+    /// routes to `shard` of `shards` — each shard world of a scale-out
+    /// cluster holds only its own partition of the key space.
+    pub fn preload_shard(&mut self, n: u64, value_size: usize, shard: usize, shards: usize) {
         for i in 0..n {
             let key = crate::ycsb::key_of(i);
+            if crate::store::shard_of(&key, shards) != shard {
+                continue;
+            }
             let value = vec![0xA5u8; value_size];
             let obj = object::encode_object(&key, &value);
             let off = self.server.create_slot(&mut self.nvm, &key).expect("preload slot");
@@ -298,7 +326,8 @@ mod tests {
         assert_eq!(w.get(&key).unwrap(), vec![1u8; 256]);
         assert_eq!(w.server.pending_len(), 1);
         // Apply drains the queue and the value persists at the destination.
-        w.server.apply_one(&mut w.nvm).expect("one pending");
+        let (_, verdict) = w.server.apply_one(&mut w.nvm).expect("one pending");
+        assert_eq!(verdict, ApplyVerdict::Applied);
         assert_eq!(w.server.pending_len(), 0);
         assert_eq!(w.get(&key).unwrap(), vec![1u8; 256]);
     }
@@ -335,7 +364,8 @@ mod tests {
             len: obj.len() as u32,
             delete: false,
         });
-        w.server.apply_one(&mut w.nvm).expect("drained");
+        let (_, verdict) = w.server.apply_one(&mut w.nvm).expect("drained");
+        assert_eq!(verdict, ApplyVerdict::Torn, "CRC gate must report the tear");
         // Destination still holds the preloaded value.
         assert_eq!(w.get(&key).unwrap(), vec![0xA5u8; 256]);
     }
@@ -356,9 +386,9 @@ mod tests {
         let key = crate::ycsb::key_of(0);
         w.server.redo_write(&mut w.nvm, &key, b"11111111").unwrap();
         w.server.redo_write(&mut w.nvm, &key, b"22222222").unwrap();
-        w.server.apply_one(&mut w.nvm); // applies "1111", shadow holds "2222"
+        let _ = w.server.apply_one(&mut w.nvm); // applies "1111", shadow holds "2222"
         assert_eq!(w.get(&key).unwrap(), b"22222222");
-        w.server.apply_one(&mut w.nvm);
+        let _ = w.server.apply_one(&mut w.nvm);
         assert_eq!(w.get(&key).unwrap(), b"22222222");
     }
 }

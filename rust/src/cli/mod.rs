@@ -4,7 +4,10 @@
 //! repro figures --all [--quick] [--out DIR]     regenerate every experiment
 //! repro figures --fig 18 [--quick] [--out DIR]  one figure (14..26)
 //! repro figures --table 1 [--out DIR]           Table 1
-//! repro smoke --scheme erda|redo|raw [--seed N] facade end-to-end smoke run
+//! repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
+//!                                               facade end-to-end smoke run
+//! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR]
+//!                                               shard-count throughput sweep
 //! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
 //! repro verify-runtime                          artifact self-check
 //! repro help
@@ -20,8 +23,11 @@ use crate::store::Scheme;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Cmd {
     Figures { ids: Vec<String>, fidelity: Fidelity, out: Option<PathBuf> },
-    /// Exercise the `store` facade end-to-end for one scheme.
-    Smoke { scheme: Scheme, seed: u64 },
+    /// Exercise the `store` facade end-to-end for one scheme, over one or
+    /// more shards.
+    Smoke { scheme: Scheme, seed: u64, shards: usize },
+    /// Scale-out sweep: throughput vs shard count for all three schemes.
+    Scaling { shards: Vec<usize>, fidelity: Fidelity, out: Option<PathBuf> },
     Recover,
     VerifyRuntime,
     Help,
@@ -69,6 +75,7 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
         "smoke" => {
             let mut scheme = None;
             let mut seed: u64 = 0xE2DA;
+            let mut shards: usize = 1;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--scheme" => match it.next() {
@@ -83,13 +90,50 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         Some(v) => seed = v.parse::<u64>()?,
                         None => bail!("--seed needs a number"),
                     },
+                    "--shards" => match it.next() {
+                        Some(v) => {
+                            shards = v.parse::<usize>()?;
+                            if shards == 0 {
+                                bail!("--shards must be at least 1");
+                            }
+                        }
+                        None => bail!("--shards needs a number"),
+                    },
                     other => bail!("unknown smoke flag {other:?}"),
                 }
             }
             match scheme {
-                Some(scheme) => Ok(Cmd::Smoke { scheme, seed }),
+                Some(scheme) => Ok(Cmd::Smoke { scheme, seed, shards }),
                 None => bail!("smoke: pass --scheme erda|redo|raw"),
             }
+        }
+        "scaling" => {
+            let mut shards: Vec<usize> = figures::SHARD_SWEEP.to_vec();
+            let mut fidelity = Fidelity::Full;
+            let mut out = None;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--shards" => match it.next() {
+                        Some(v) => {
+                            shards = v
+                                .split(',')
+                                .map(|s| s.trim().parse::<usize>())
+                                .collect::<Result<Vec<_>, _>>()?;
+                            if shards.is_empty() || shards.contains(&0) {
+                                bail!("--shards needs a comma list of counts ≥ 1");
+                            }
+                        }
+                        None => bail!("--shards needs a comma list, e.g. 1,2,4,8"),
+                    },
+                    "--quick" => fidelity = Fidelity::Quick,
+                    "--out" => match it.next() {
+                        Some(v) => out = Some(PathBuf::from(v)),
+                        None => bail!("--out needs a directory"),
+                    },
+                    other => bail!("unknown scaling flag {other:?}"),
+                }
+            }
+            Ok(Cmd::Scaling { shards, fidelity, out })
         }
         "recover" => Ok(Cmd::Recover),
         "verify-runtime" => Ok(Cmd::VerifyRuntime),
@@ -106,10 +150,14 @@ USAGE:
   repro figures --fig N [--quick] [--out DIR] one experiment (N = 14..26)
   repro figures --table 1 [--out DIR]         Table 1 (NVM writes per op)
   repro figures --ablations [--out DIR]       design-choice ablations (A1–A4)
-  repro smoke --scheme erda|redo|raw [--seed N]
+  repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
                                               exercise the store facade end to
-                                              end (typed KV ops + a DES run);
-                                              deterministic in --seed
+                                              end (typed KV ops + a DES run,
+                                              optionally over N key-space
+                                              shards); deterministic in --seed
+  repro scaling [--shards 1,2,4,8] [--quick] [--out DIR]
+                                              scale-out sweep: throughput vs
+                                              shard count, all three schemes
   repro recover                               crash-recovery demo (PJRT batch verify)
   repro verify-runtime                        check AOT artifacts against local CRC
   repro help                                  this text
@@ -164,15 +212,15 @@ mod tests {
     fn parses_smoke() {
         assert_eq!(
             p("smoke --scheme erda").unwrap(),
-            Cmd::Smoke { scheme: Scheme::Erda, seed: 0xE2DA }
+            Cmd::Smoke { scheme: Scheme::Erda, seed: 0xE2DA, shards: 1 }
         );
         assert_eq!(
             p("smoke --scheme raw --seed 7").unwrap(),
-            Cmd::Smoke { scheme: Scheme::ReadAfterWrite, seed: 7 }
+            Cmd::Smoke { scheme: Scheme::ReadAfterWrite, seed: 7, shards: 1 }
         );
         assert_eq!(
-            p("smoke --seed 9 --scheme redo").unwrap(),
-            Cmd::Smoke { scheme: Scheme::RedoLogging, seed: 9 }
+            p("smoke --seed 9 --scheme redo --shards 4").unwrap(),
+            Cmd::Smoke { scheme: Scheme::RedoLogging, seed: 9, shards: 4 }
         );
     }
 
@@ -183,5 +231,35 @@ mod tests {
         assert!(p("smoke --scheme erda --seed ten").is_err());
         assert!(p("smoke --scheme").is_err());
         assert!(p("smoke --scheme erda --bogus").is_err());
+        assert!(p("smoke --scheme erda --shards 0").is_err());
+        assert!(p("smoke --scheme erda --shards two").is_err());
+    }
+
+    #[test]
+    fn parses_scaling() {
+        assert_eq!(
+            p("scaling").unwrap(),
+            Cmd::Scaling {
+                shards: figures::SHARD_SWEEP.to_vec(),
+                fidelity: Fidelity::Full,
+                out: None
+            }
+        );
+        assert_eq!(
+            p("scaling --shards 1,2,4 --quick --out results").unwrap(),
+            Cmd::Scaling {
+                shards: vec![1, 2, 4],
+                fidelity: Fidelity::Quick,
+                out: Some(PathBuf::from("results")),
+            }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_scaling_input() {
+        assert!(p("scaling --shards").is_err());
+        assert!(p("scaling --shards 1,zero").is_err());
+        assert!(p("scaling --shards 0,2").is_err());
+        assert!(p("scaling --bogus").is_err());
     }
 }

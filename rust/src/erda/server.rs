@@ -286,8 +286,18 @@ impl ErdaWorld {
     /// Bulk-load `n` records server-side (setup phase; zero virtual time,
     /// stats reset afterwards by the driver).
     pub fn preload(&mut self, n: u64, value_size: usize) {
+        self.preload_shard(n, value_size, 0, 1);
+    }
+
+    /// Bulk-load the subset of records `0..n` that [`crate::store::shard_of`]
+    /// routes to `shard` of `shards` — each shard world of a scale-out
+    /// cluster holds only its own partition of the key space.
+    pub fn preload_shard(&mut self, n: u64, value_size: usize, shard: usize, shards: usize) {
         for i in 0..n {
             let key = crate::ycsb::key_of(i);
+            if crate::store::shard_of(&key, shards) != shard {
+                continue;
+            }
             let value = vec![0xA5u8; value_size];
             let obj = object::encode_object(&key, &value);
             let (_, _, addr) = self.server.write_request(&mut self.nvm, &key, obj.len());

@@ -25,6 +25,8 @@ pub use table1::table1;
 pub const VALUE_SIZES: [usize; 9] = [16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
 /// The thread sweep of Figs 18–21.
 pub const THREADS: [usize; 8] = [1, 2, 4, 6, 8, 10, 12, 16];
+/// The default shard sweep of the scale-out experiment (`repro scaling`).
+pub const SHARD_SWEEP: [usize; 4] = [1, 2, 4, 8];
 
 /// One rendered experiment: a CSV-able grid plus a markdown view.
 #[derive(Clone, Debug)]
@@ -252,6 +254,40 @@ pub fn fig26(fid: Fidelity) -> Rendered {
     }
 }
 
+/// Scale-out sweep (not a figure of the paper — the paper's protocol is
+/// single-server): throughput vs shard count for all three schemes under a
+/// write-heavy mix. Sharding multiplies the per-server CPU pools, so the
+/// CPU-bound baselines gain roughly linearly, while Erda — whose reads
+/// never touch a server CPU — scales with the fabric alone; the sweep
+/// quantifies both.
+pub fn scaling(shard_counts: &[usize], fid: Fidelity) -> Rendered {
+    let clients = 16;
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        let mut row = vec![shards.to_string()];
+        for scheme in SchemeSel::ALL {
+            let mut cfg = base_cfg(scheme, Workload::UpdateHeavy, 256, clients, fid);
+            cfg.shards = shards;
+            let stats = run(&cfg);
+            row.push(format!("{:.2}", stats.kops()));
+        }
+        rows.push(row);
+    }
+    Rendered {
+        id: "scaling".into(),
+        title: format!(
+            "Scale-out: throughput (KOp/s) vs shard count ({clients} clients, YCSB-A, 256 B)"
+        ),
+        header: vec![
+            "shards".into(),
+            "erda_kops".into(),
+            "redo_kops".into(),
+            "raw_kops".into(),
+        ],
+        rows,
+    }
+}
+
 /// Run one experiment by paper number ("14".."26", "table1").
 pub fn by_id(id: &str, fid: Fidelity) -> Option<Rendered> {
     let wl = Workload::ALL;
@@ -271,14 +307,15 @@ pub fn by_id(id: &str, fid: Fidelity) -> Option<Rendered> {
         "26" => fig26(fid),
         "table1" | "t1" | "1" => table1(),
         "ablations" | "abl" => ablations(),
+        "scaling" => scaling(&SHARD_SWEEP, fid),
         _ => return None,
     })
 }
 
-/// All experiment ids, in paper order.
-pub const ALL_IDS: [&str; 15] = [
+/// All experiment ids, in paper order (plus the repo's own extensions).
+pub const ALL_IDS: [&str; 16] = [
     "14", "15", "16", "17", "18", "19", "20", "21", "22", "23", "24", "25", "26", "table1",
-    "ablations",
+    "ablations", "scaling",
 ];
 
 #[cfg(test)]
@@ -306,6 +343,16 @@ mod tests {
         // Update-only: near parity (paper: 1.17 / 1.11).
         let redo: f64 = r.rows[3][1].parse().unwrap();
         assert!((0.8..2.5).contains(&redo), "update-only norm {redo}");
+    }
+
+    #[test]
+    fn quick_scaling_sweep_relieves_the_baseline_ceiling() {
+        let r = scaling(&[1, 2], Fidelity::Quick);
+        assert_eq!(r.rows.len(), 2);
+        // Redo Logging is CPU-capped at 1 shard; 2 shards ≈ 2× the cores.
+        let redo1: f64 = r.rows[0][2].parse().unwrap();
+        let redo2: f64 = r.rows[1][2].parse().unwrap();
+        assert!(redo2 > 1.3 * redo1, "redo: {redo1} -> {redo2} KOp/s with 2 shards");
     }
 
     #[test]

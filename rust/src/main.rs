@@ -23,28 +23,34 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        Cmd::Smoke { scheme, seed } => smoke(scheme, seed),
+        Cmd::Smoke { scheme, seed, shards } => smoke(scheme, seed, shards),
+        Cmd::Scaling { shards, fidelity, out } => {
+            figures::scaling(&shards, fidelity).emit(out.as_deref());
+            Ok(())
+        }
         Cmd::VerifyRuntime => verify_runtime(),
         Cmd::Recover => recover_demo(),
     }
 }
 
 /// Facade smoke test: typed one-shot ops through `Db`, then a full DES run
-/// through `Cluster` — the same two doors every example and test uses.
-/// Deterministic in `seed`.
-fn smoke(scheme: erda::store::Scheme, seed: u64) -> Result<()> {
+/// through `Cluster` — the same two doors every example and test uses —
+/// over `shards` key-space partitions. Deterministic in `seed`.
+fn smoke(scheme: erda::store::Scheme, seed: u64, shards: usize) -> Result<()> {
     use erda::store::{Cluster, RemoteStore, Request};
     use erda::ycsb::{key_of, Workload};
 
-    println!("smoke: scheme = {}, seed = {seed:#x}", scheme.label());
+    println!("smoke: scheme = {}, seed = {seed:#x}, shards = {shards}", scheme.label());
 
-    // 1. Typed KV ops against a synchronous store handle.
+    // 1. Typed KV ops against a synchronous store handle (routing by key).
     let mut db = Cluster::builder()
         .scheme(scheme)
+        .shards(shards)
         .records(16)
         .value_size(64)
         .preload(16, 64)
         .build_db();
+    erda::ensure!(db.num_shards() == shards, "shard count mismatch");
     erda::ensure!(db.get(&key_of(0))?.is_some(), "preloaded key missing");
     db.put(&key_of(0), &vec![0x5Au8; 64])?;
     erda::ensure!(db.get(&key_of(0))? == Some(vec![0x5Au8; 64]), "read-your-write failed");
@@ -57,15 +63,20 @@ fn smoke(scheme: erda::store::Scheme, seed: u64) -> Result<()> {
     );
     println!("  db ops OK: put / get / delete / torn-write ({:?})", db.op_stats());
 
-    // 2. End-to-end DES run (clients, fabric, virtual time).
+    // 2. End-to-end DES run (clients fanned out over the shard worlds).
     let outcome = Cluster::builder()
         .scheme(scheme)
+        .shards(shards)
         .clients(4)
         .ops_per_client(250)
         .workload(Workload::UpdateHeavy)
         .records(200)
         .value_size(256)
         .seed(seed)
+        // Measure everything: the full-quota check below needs every op of
+        // every spawned client counted (the default 5 ms warmup would drop
+        // the early ones).
+        .warmup(0)
         .run();
     let s = &outcome.stats;
     erda::ensure!(
@@ -74,9 +85,20 @@ fn smoke(scheme: erda::store::Scheme, seed: u64) -> Result<()> {
         s.ops,
         s.read_misses
     );
+    // Independently derived expectation (NOT computed from per_shard, which
+    // `stats` is already the merge of): clients fan out over the owning
+    // shards, so every one of the 4 clients must finish its full 250-op
+    // quota no matter the geometry.
+    let expected_ops = 4 * 250;
+    erda::ensure!(
+        s.ops == expected_ops,
+        "sharded run under-counted: {} ops vs expected {expected_ops}",
+        s.ops
+    );
     println!(
-        "  engine run OK: {} ops, {:.2} KOp/s, mean {:.2} µs, {} DES events",
+        "  engine run OK: {} ops over {} shard(s), {:.2} KOp/s, mean {:.2} µs, {} DES events",
         s.ops,
+        outcome.per_shard.len(),
         s.kops(),
         s.latency.mean_us(),
         s.events

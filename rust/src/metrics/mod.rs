@@ -75,7 +75,7 @@ impl LatencyRecorder {
 /// Counters shared by all actors of a run — one struct for every scheme
 /// (the deduplicated union of the former `erda::server::Counters` and
 /// `baselines::server::Counters`).
-#[derive(Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct Counters {
     pub ops_measured: u64,
     pub latency: LatencyRecorder,
@@ -103,6 +103,37 @@ pub struct Counters {
 }
 
 impl Counters {
+    /// Fold another world's counters into this one (cluster-level view over
+    /// per-shard worlds): event counts sum, latency samples merge, the
+    /// completion window spans both.
+    pub fn merge(&mut self, other: &Counters) {
+        self.ops_measured += other.ops_measured;
+        self.latency.merge(&other.latency);
+        self.latency_during_cleaning.merge(&other.latency_during_cleaning);
+        self.inconsistencies += other.inconsistencies;
+        self.fallbacks += other.fallbacks;
+        self.retries += other.retries;
+        self.repairs += other.repairs;
+        self.read_misses += other.read_misses;
+        self.cleanings_completed += other.cleanings_completed;
+        self.applied += other.applied;
+        // Like first_completion below, 0 means "unset" (a default-initialized
+        // accumulator): adopt the other side's boundary instead of clamping
+        // a real warmup down to 0.
+        if self.measure_from == 0 {
+            self.measure_from = other.measure_from;
+        } else if other.measure_from != 0 {
+            self.measure_from = self.measure_from.min(other.measure_from);
+        }
+        if self.first_completion == 0 {
+            self.first_completion = other.first_completion;
+        } else if other.first_completion != 0 {
+            self.first_completion = self.first_completion.min(other.first_completion);
+        }
+        self.last_completion = self.last_completion.max(other.last_completion);
+        self.active_clients += other.active_clients;
+    }
+
     pub fn record_op(&mut self, start: Time, end: Time, during_cleaning: bool) {
         if start < self.measure_from {
             return;
@@ -170,6 +201,33 @@ impl RunStats {
             return 0.0;
         }
         self.server_cpu_busy_ns as f64 / self.ops as f64
+    }
+
+    /// Aggregate per-shard run stats into the cluster-level view: every
+    /// counter (ops, misses, NVM bytes, CPU busy time, events, …) is the
+    /// *sum* of the shards, latency distributions merge sample-for-sample,
+    /// and the measured duration is the slowest shard's makespan (shards
+    /// run concurrently, so the cluster finishes when the last one does).
+    pub fn merged(parts: &[RunStats]) -> RunStats {
+        let mut out = RunStats::default();
+        for p in parts {
+            out.ops += p.ops;
+            out.duration_ns = out.duration_ns.max(p.duration_ns);
+            out.latency.merge(&p.latency);
+            out.latency_cleaning.merge(&p.latency_cleaning);
+            out.server_cpu_busy_ns += p.server_cpu_busy_ns;
+            out.nvm_programmed_bytes += p.nvm_programmed_bytes;
+            out.nvm_requested_bytes += p.nvm_requested_bytes;
+            out.inconsistencies_detected += p.inconsistencies_detected;
+            out.fallback_reads += p.fallback_reads;
+            out.retries += p.retries;
+            out.repairs += p.repairs;
+            out.read_misses += p.read_misses;
+            out.applied += p.applied;
+            out.cleanings += p.cleanings;
+            out.events += p.events;
+        }
+        out
     }
 
     /// Collect run stats from the shared counters + substrate accounting.
@@ -259,6 +317,67 @@ mod tests {
         assert_eq!(c.latency.count(), 1);
         assert_eq!(c.latency_during_cleaning.count(), 1);
         assert_eq!(c.last_completion, 260);
+    }
+
+    #[test]
+    fn merged_sums_counters_and_maxes_duration() {
+        let a = RunStats {
+            ops: 10,
+            duration_ns: 500,
+            server_cpu_busy_ns: 7,
+            nvm_programmed_bytes: 100,
+            nvm_requested_bytes: 150,
+            read_misses: 1,
+            applied: 4,
+            events: 20,
+            ..Default::default()
+        };
+        let mut b = RunStats {
+            ops: 5,
+            duration_ns: 900,
+            server_cpu_busy_ns: 3,
+            nvm_programmed_bytes: 50,
+            nvm_requested_bytes: 60,
+            inconsistencies_detected: 2,
+            events: 11,
+            ..Default::default()
+        };
+        b.latency.record(42);
+        let m = RunStats::merged(&[a, b]);
+        assert_eq!(m.ops, 15);
+        assert_eq!(m.duration_ns, 900, "makespan = slowest shard");
+        assert_eq!(m.server_cpu_busy_ns, 10);
+        assert_eq!(m.nvm_programmed_bytes, 150);
+        assert_eq!(m.nvm_requested_bytes, 210);
+        assert_eq!(m.inconsistencies_detected, 2);
+        assert_eq!(m.read_misses, 1);
+        assert_eq!(m.applied, 4);
+        assert_eq!(m.events, 31);
+        assert_eq!(m.latency.count(), 1);
+        assert_eq!(RunStats::merged(&[]).ops, 0);
+    }
+
+    #[test]
+    fn counters_merge_folds_worlds() {
+        let mut a = Counters { inconsistencies: 1, read_misses: 2, ..Default::default() };
+        a.record_op(0, 10, false);
+        let mut b = Counters { applied: 3, measure_from: 500, ..Default::default() };
+        b.record_op(600, 625, true);
+        a.merge(&b);
+        assert_eq!(a.ops_measured, 2);
+        assert_eq!(a.inconsistencies, 1);
+        assert_eq!(a.read_misses, 2);
+        assert_eq!(a.applied, 3);
+        assert_eq!(a.last_completion, 625);
+        assert_eq!(a.latency.count(), 1);
+        assert_eq!(a.latency_during_cleaning.count(), 1);
+
+        // Folding into a default accumulator adopts the real boundary
+        // instead of clamping it to the default 0.
+        let mut acc = Counters::default();
+        acc.merge(&b);
+        assert_eq!(acc.measure_from, 500);
+        assert_eq!(acc.first_completion, 625);
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! The cluster driver: build a world for *any* scheme, preload records,
-//! spawn client/cleaner/applier actors, run the DES engine, and hand back
-//! [`RunStats`] plus a settled [`Db`] for direct inspection.
+//! The cluster driver: build a world for *any* scheme — one per shard —
+//! preload records, spawn client/cleaner/applier actors, run the DES
+//! engine(s), and hand back [`RunStats`] plus a settled [`Db`] for direct
+//! inspection.
 //!
 //! Every figure of the paper is "run this for some (scheme, workload, value
 //! size, thread count) and read off a metric" — this module is that
@@ -19,6 +20,16 @@
 //!     .run();
 //! println!("{:.1} KOp/s", outcome.stats.kops());
 //! ```
+//!
+//! **Scale-out:** `.shards(n)` partitions the key space over `n` fully
+//! independent server worlds (own NVM arena, log heads, hopscotch table,
+//! cleaner/applier, CPU pool, fabric). Operations route by the
+//! deterministic [`super::shard_of`] function, client actors fan out
+//! round-robin across the shards (each drawing only the ops its shard
+//! owns), scripted ops are split per shard with order preserved, and the
+//! cluster-level [`RunStats`] is [`RunStats::merged`] over the per-shard
+//! stats (also returned in [`RunOutcome::per_shard`]). Because shards run
+//! concurrently, the merged makespan is the slowest shard's.
 //!
 //! Scripted clients (`script_at`) drive failure-injection and Table-1-style
 //! measurements through the same engine; [`Cluster::from_config`] adapts a
@@ -65,6 +76,14 @@ impl ClusterBuilder {
     /// Which scheme the cluster runs (the whole point of the facade).
     pub fn scheme(mut self, s: Scheme) -> Self {
         self.cfg.scheme = s;
+        self
+    }
+
+    /// Partition the key space across `n` independent server worlds
+    /// (scale-out; 1 = the paper's single-server protocol).
+    pub fn shards(mut self, n: usize) -> Self {
+        assert!(n >= 1, "a cluster has at least one shard");
+        self.cfg.shards = n;
         self
     }
 
@@ -116,7 +135,7 @@ impl ClusterBuilder {
         self
     }
 
-    /// Log heads at the server.
+    /// Log heads at each shard server.
     pub fn heads(mut self, n: usize) -> Self {
         self.cfg.log_cfg.num_heads = n;
         self
@@ -128,7 +147,7 @@ impl ClusterBuilder {
         self
     }
 
-    /// Simulated NVM capacity in bytes.
+    /// Simulated NVM capacity in bytes (per shard world).
     pub fn nvm_capacity(mut self, bytes: usize) -> Self {
         self.cfg.nvm_capacity = bytes;
         self
@@ -153,7 +172,8 @@ impl ClusterBuilder {
     }
 
     /// Bulk-load `n` records of `value_size` bytes before the run (defaults
-    /// to the workload's record count and value size).
+    /// to the workload's record count and value size). With shards, each
+    /// shard world loads only the records it owns.
     pub fn preload(mut self, n: u64, value_size: usize) -> Self {
         self.preload = Some((n, value_size));
         self
@@ -190,7 +210,7 @@ impl ClusterBuilder {
         Cluster { cfg: self.cfg, preload, scripts: self.scripts }
     }
 
-    /// Construct the world and preload it, but skip the engine: a
+    /// Construct the world(s) and preload them, but skip the engine: a
     /// synchronous [`Db`] handle for one-shot ops (scripts are ignored).
     pub fn build_db(self) -> Db {
         self.build().into_db()
@@ -209,10 +229,14 @@ pub struct Cluster {
     scripts: Vec<ScriptSpec>,
 }
 
-/// What a finished run hands back: the measured stats and a settled,
-/// directly-inspectable store handle over the final world state.
+/// What a finished run hands back: the cluster-level stats (the merge of
+/// every shard), the per-shard breakdown, and a settled, directly
+/// inspectable store handle over the final world state of every shard.
 pub struct RunOutcome {
     pub stats: RunStats,
+    /// One entry per shard, in shard order (length 1 for single-server
+    /// runs). `stats` is exactly [`RunStats::merged`] over these.
+    pub per_shard: Vec<RunStats>,
     pub db: Db,
 }
 
@@ -272,14 +296,19 @@ impl Cluster {
         ClientConfig { max_value: cfg.workload.value_size, ..ClientConfig::default() }
     }
 
-    fn make_erda_world(cfg: &DriverConfig, preload: (u64, usize)) -> ErdaWorld {
+    fn make_erda_world(
+        cfg: &DriverConfig,
+        preload: (u64, usize),
+        shard: usize,
+        shards: usize,
+    ) -> ErdaWorld {
         let mut world = ErdaWorld::new(
             cfg.timing.clone(),
             NvmConfig { capacity: cfg.nvm_capacity },
             cfg.log_cfg,
             cfg.table_cap(),
         );
-        world.preload(preload.0, preload.1);
+        world.preload_shard(preload.0, preload.1, shard, shards);
         world.nvm.reset_stats();
         if let Some(th) = cfg.cleaning_threshold {
             world.server.cleaning_threshold = th;
@@ -291,6 +320,8 @@ impl Cluster {
         cfg: &DriverConfig,
         preload: (u64, usize),
         script_max_value: usize,
+        shard: usize,
+        shards: usize,
     ) -> BaselineWorld {
         let scheme = cfg.scheme.baseline().expect("baseline scheme");
         let slot_value = cfg.workload.value_size.max(preload.1).max(script_max_value);
@@ -304,37 +335,143 @@ impl Cluster {
             cfg.log_cfg.segment_size,
             slot_size,
         );
-        world.preload(preload.0, preload.1);
+        world.preload_shard(preload.0, preload.1, shard, shards);
         world.nvm.reset_stats();
         world
     }
 
-    /// Construct + preload the world without running the engine.
-    pub fn into_db(self) -> Db {
-        match self.cfg.scheme {
-            Scheme::Erda => Db::from_erda(Self::make_erda_world(&self.cfg, self.preload)),
-            _ => {
-                let max = self.script_max_value();
-                Db::from_baseline(Self::make_baseline_world(&self.cfg, self.preload, max))
+    /// Split every script into per-shard subsequences: each op goes to the
+    /// shard that owns its key, order preserved within a (script, shard)
+    /// pair. For one shard the scripts pass through untouched.
+    fn split_scripts(scripts: Vec<ScriptSpec>, shards: usize) -> Vec<Vec<ScriptSpec>> {
+        if shards == 1 {
+            return vec![scripts];
+        }
+        let mut out: Vec<Vec<ScriptSpec>> = (0..shards).map(|_| Vec::new()).collect();
+        for spec in scripts {
+            let mut per: Vec<Vec<Request>> = (0..shards).map(|_| Vec::new()).collect();
+            for op in spec.ops {
+                per[super::shard_of(op.key(), shards)].push(op);
+            }
+            for (sh, ops) in per.into_iter().enumerate() {
+                if !ops.is_empty() {
+                    out[sh].push(ScriptSpec { start: spec.start, ops, cfg: spec.cfg });
+                }
             }
         }
+        out
     }
 
-    /// Run the simulation to quiescence; returns stats plus a settled store.
-    pub fn run(self) -> RunOutcome {
-        match self.cfg.scheme {
-            Scheme::Erda => self.run_erda(),
-            _ => self.run_baseline(),
+    /// The YCSB client ids that run against `shard`: round-robin fan-out
+    /// over the shards that own reachable keys (`owning`, ascending), so
+    /// the offered load is the full client count for every geometry — a
+    /// shard owning nothing runs scripts and background actors only, and
+    /// its would-be clients land on the next owning shard instead of
+    /// silently vanishing. When every shard owns keys (any non-degenerate
+    /// geometry) this is exactly `client c → shard c % shards`.
+    fn client_ids_for(clients: usize, shard: usize, owning: &[usize]) -> Vec<u64> {
+        match owning.iter().position(|&s| s == shard) {
+            Some(p) => {
+                (0..clients as u64).filter(|c| (*c as usize) % owning.len() == p).collect()
+            }
+            None => Vec::new(),
         }
     }
 
-    fn run_erda(self) -> RunOutcome {
+    /// Which shards own at least one key the YCSB generator can actually
+    /// produce. Generated keys come from the scrambled-Zipfian image
+    /// (`zipf::scrambled_id` over ranks `0..records` — NOT every raw key
+    /// index; the scramble is not surjective), so ownership is computed
+    /// over exactly that reachable set. A shard owning nothing reachable
+    /// gets no YCSB clients — one spawned there would have no valid op to
+    /// draw and would retire empty via the rejection-sampling cap.
+    fn shards_with_keys(record_count: u64, shards: usize) -> Vec<bool> {
+        let mut owned = vec![shards == 1; shards];
+        if shards > 1 {
+            for rank in 0..record_count {
+                let id = crate::ycsb::zipf::scrambled_id(rank, record_count);
+                owned[super::shard_of(&crate::ycsb::key_of(id), shards)] = true;
+            }
+        }
+        owned
+    }
+
+    /// Construct + preload the world(s) without running the engine.
+    pub fn into_db(self) -> Db {
+        let shards = self.cfg.shards.max(1);
+        let script_max = self.script_max_value();
+        let mut parts = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            parts.push(match self.cfg.scheme {
+                Scheme::Erda => {
+                    Db::from_erda(Self::make_erda_world(&self.cfg, self.preload, shard, shards))
+                }
+                _ => Db::from_baseline(Self::make_baseline_world(
+                    &self.cfg,
+                    self.preload,
+                    script_max,
+                    shard,
+                    shards,
+                )),
+            });
+        }
+        Db::merge_shards(parts)
+    }
+
+    /// Run the simulation to quiescence; returns cluster stats, per-shard
+    /// stats, and a settled store over every shard world.
+    pub fn run(self) -> RunOutcome {
+        let shards = self.cfg.shards.max(1);
         let script_max = self.script_max_value();
         let Cluster { cfg, preload, scripts } = self;
-        let mut world = Self::make_erda_world(&cfg, preload);
+        let shard_scripts = Self::split_scripts(scripts, shards);
+
+        let owned = Self::shards_with_keys(cfg.workload.record_count, shards);
+        let owning: Vec<usize> = (0..shards).filter(|&s| owned[s]).collect();
+        let mut per_shard = Vec::with_capacity(shards);
+        let mut dbs = Vec::with_capacity(shards);
+        for (shard, scripts) in shard_scripts.into_iter().enumerate() {
+            let clients = Self::client_ids_for(cfg.clients, shard, &owning);
+            let (stats, db) = match cfg.scheme {
+                Scheme::Erda => Self::run_erda_shard(
+                    &cfg, preload, scripts, &clients, shard, shards, script_max,
+                ),
+                _ => Self::run_baseline_shard(
+                    &cfg, preload, scripts, &clients, shard, shards, script_max,
+                ),
+            };
+            per_shard.push(stats);
+            dbs.push(db);
+        }
+        let stats = RunStats::merged(&per_shard);
+        RunOutcome { stats, per_shard, db: Db::merge_shards(dbs) }
+    }
+
+    /// A YCSB op source for client `c`: the full stream for single-server
+    /// runs, the shard-owned subsequence otherwise.
+    fn client_source(cfg: &DriverConfig, c: u64, shard: usize, shards: usize) -> OpSource {
+        let gen = Generator::new(cfg.workload.clone(), c);
+        if shards == 1 {
+            OpSource::Ycsb(gen)
+        } else {
+            OpSource::ShardedYcsb { gen, shard, shards }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_erda_shard(
+        cfg: &DriverConfig,
+        preload: (u64, usize),
+        scripts: Vec<ScriptSpec>,
+        clients: &[u64],
+        shard: usize,
+        shards: usize,
+        script_max: usize,
+    ) -> (RunStats, Db) {
+        let mut world = Self::make_erda_world(cfg, preload, shard, shards);
         world.counters.measure_from = cfg.warmup;
-        world.counters.active_clients = (cfg.clients + scripts.len()) as u32;
-        let default_cfg = Self::client_cfg(&cfg);
+        world.counters.active_clients = (clients.len() + scripts.len()) as u32;
+        let default_cfg = Self::client_cfg(cfg);
         // Scripted clients may read values bigger than the YCSB value size
         // (preloaded or script-written); size their read window for the
         // largest value the run can hold so a healthy oversized object is
@@ -351,9 +488,9 @@ impl Cluster {
             let ccfg = s.cfg.unwrap_or(script_cfg);
             engine.spawn(Box::new(ErdaClient::new(OpSource::script(s.ops), n, ccfg)), s.start);
         }
-        for c in 0..cfg.clients {
-            let gen = Generator::new(cfg.workload.clone(), c as u64);
-            let client = ErdaClient::new(OpSource::Ycsb(gen), cfg.ops_per_client, default_cfg);
+        for &c in clients {
+            let src = Self::client_source(cfg, c, shard, shards);
+            let client = ErdaClient::new(src, cfg.ops_per_client, default_cfg);
             engine.spawn(Box::new(client), 0);
         }
         if cfg.cleaning_threshold.is_some() {
@@ -368,15 +505,22 @@ impl Cluster {
         let stats =
             RunStats::collect(&world.counters, world.cpu.busy_ns(), world.nvm.stats(), events);
         world.settle();
-        RunOutcome { stats, db: Db::from_erda(world) }
+        (stats, Db::from_erda(world))
     }
 
-    fn run_baseline(self) -> RunOutcome {
-        let max = self.script_max_value();
-        let Cluster { cfg, preload, scripts } = self;
-        let mut world = Self::make_baseline_world(&cfg, preload, max);
+    #[allow(clippy::too_many_arguments)]
+    fn run_baseline_shard(
+        cfg: &DriverConfig,
+        preload: (u64, usize),
+        scripts: Vec<ScriptSpec>,
+        clients: &[u64],
+        shard: usize,
+        shards: usize,
+        script_max: usize,
+    ) -> (RunStats, Db) {
+        let mut world = Self::make_baseline_world(cfg, preload, script_max, shard, shards);
         world.counters.measure_from = cfg.warmup;
-        world.counters.active_clients = (cfg.clients + scripts.len()) as u32;
+        world.counters.active_clients = (clients.len() + scripts.len()) as u32;
 
         let mut engine = Engine::new(world);
         engine.spawn(Box::new(Marker), cfg.warmup);
@@ -384,9 +528,9 @@ impl Cluster {
             let n = s.ops.len() as u64;
             engine.spawn(Box::new(BaselineClient::new(OpSource::script(s.ops), n)), s.start);
         }
-        for c in 0..cfg.clients {
-            let gen = Generator::new(cfg.workload.clone(), c as u64);
-            let client = BaselineClient::new(OpSource::Ycsb(gen), cfg.ops_per_client);
+        for &c in clients {
+            let src = Self::client_source(cfg, c, shard, shards);
+            let client = BaselineClient::new(src, cfg.ops_per_client);
             engine.spawn(Box::new(client), 0);
         }
         engine.spawn(Box::new(ApplierActor::new(ApplierConfig::default())), 0);
@@ -397,7 +541,7 @@ impl Cluster {
         let stats =
             RunStats::collect(&world.counters, world.cpu.busy_ns(), world.nvm.stats(), events);
         world.settle();
-        RunOutcome { stats, db: Db::from_baseline(world) }
+        (stats, Db::from_baseline(world))
     }
 }
 
@@ -421,6 +565,7 @@ mod tests {
             assert!(outcome.stats.ops > 0, "{scheme:?} completed no ops");
             assert_eq!(outcome.stats.read_misses, 0, "{scheme:?} lost reads");
             assert_eq!(outcome.db.scheme(), scheme);
+            assert_eq!(outcome.per_shard.len(), 1);
         }
     }
 
@@ -449,5 +594,128 @@ mod tests {
         let b = Cluster::from_config(&cfg).run().stats;
         assert_eq!(a.ops, b.ops);
         assert_eq!(a.duration_ns, b.duration_ns);
+    }
+
+    #[test]
+    fn sharded_run_completes_every_op_and_sums_stats() {
+        for scheme in Scheme::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .shards(4)
+                .clients(8)
+                .ops_per_client(100)
+                .records(64)
+                .value_size(64)
+                .warmup(0)
+                .run();
+            assert_eq!(outcome.per_shard.len(), 4, "{scheme:?}");
+            assert_eq!(outcome.stats.ops, 8 * 100, "{scheme:?}: every client finishes its quota");
+            assert_eq!(outcome.stats.read_misses, 0, "{scheme:?} lost reads");
+            assert_eq!(
+                outcome.stats.ops,
+                outcome.per_shard.iter().map(|s| s.ops).sum::<u64>(),
+                "{scheme:?}: cluster ops = Σ shard ops"
+            );
+            assert_eq!(
+                outcome.stats.nvm_programmed_bytes,
+                outcome.per_shard.iter().map(|s| s.nvm_programmed_bytes).sum::<u64>(),
+                "{scheme:?}: cluster NVM bytes = Σ shard NVM bytes"
+            );
+            assert_eq!(
+                outcome.stats.server_cpu_busy_ns,
+                outcome.per_shard.iter().map(|s| s.server_cpu_busy_ns).sum::<u128>(),
+                "{scheme:?}: cluster CPU = Σ shard CPU"
+            );
+            assert_eq!(
+                outcome.stats.duration_ns,
+                outcome.per_shard.iter().map(|s| s.duration_ns).max().unwrap(),
+                "{scheme:?}: cluster makespan = slowest shard"
+            );
+            assert_eq!(outcome.db.num_shards(), 4, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_runs_are_deterministic() {
+        let run = || {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(3)
+                .clients(6)
+                .ops_per_client(80)
+                .records(48)
+                .value_size(64)
+                .warmup(0)
+                .run()
+                .stats
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.duration_ns, b.duration_ns);
+        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
+    }
+
+    #[test]
+    fn more_shards_than_keys_terminates_cleanly() {
+        // Degenerate geometry: 8 shards over 4 records leaves most shards
+        // owning no *reachable* (scrambled) key. Clients reassign onto the
+        // owning shards, so the run completes (no rejection-sampling hang)
+        // with every client's full quota measured — offered load does not
+        // shrink with the shard count.
+        let records = 4u64;
+        let shards = 8usize;
+        let clients = 8usize;
+        let quota = 25u64;
+        let outcome = Cluster::builder()
+            .scheme(Scheme::Erda)
+            .shards(shards)
+            .clients(clients)
+            .ops_per_client(quota)
+            .records(records)
+            .value_size(32)
+            .warmup(0)
+            .run();
+        assert_eq!(outcome.stats.ops, clients as u64 * quota);
+        assert_eq!(outcome.stats.read_misses, 0);
+        assert_eq!(outcome.per_shard.len(), shards);
+        // Shards owning nothing reachable saw no client ops at all.
+        let reachable_shards: std::collections::HashSet<usize> = (0..records)
+            .map(|r| {
+                let id = crate::ycsb::zipf::scrambled_id(r, records);
+                crate::store::shard_of(&key_of(id), shards)
+            })
+            .collect();
+        for (s, stats) in outcome.per_shard.iter().enumerate() {
+            assert_eq!(
+                stats.ops > 0,
+                reachable_shards.contains(&s),
+                "shard {s}: ops {} vs reachable {reachable_shards:?}",
+                stats.ops
+            );
+        }
+    }
+
+    #[test]
+    fn baselines_scale_out_with_shards() {
+        // The scale-out argument: baseline throughput is capped by one
+        // server's CPU; sharding multiplies the CPU pools, so 4 shards must
+        // clearly outrun 1 on the same (CPU-bound) workload.
+        let kops = |shards: usize| {
+            Cluster::builder()
+                .scheme(Scheme::RedoLogging)
+                .shards(shards)
+                .clients(16)
+                .ops_per_client(120)
+                .records(256)
+                .value_size(256)
+                .warmup(0)
+                .run()
+                .stats
+                .kops()
+        };
+        let one = kops(1);
+        let four = kops(4);
+        assert!(four > 2.0 * one, "sharding must relieve the CPU ceiling: {one} -> {four}");
     }
 }

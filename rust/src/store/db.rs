@@ -1,22 +1,25 @@
 //! `Db` — the synchronous embeddable store handle: one-shot get/put/delete
-//! against any scheme, with zero virtual time.
+//! against any scheme, with zero virtual time, over one *or many* shards.
 //!
-//! A `Db` wraps a fully-constructed world (Erda or baseline) and performs
-//! operations immediately through the server-side state machines: writes
-//! land via the paper's metadata-then-data discipline (Erda) or the
+//! A `Db` wraps one fully-constructed world per shard (Erda or baseline) and
+//! performs operations immediately through the server-side state machines:
+//! every operation routes to its owning shard via [`super::shard_of`], then
+//! writes land via the paper's metadata-then-data discipline (Erda) or the
 //! stage-then-apply pipeline (baselines, drained synchronously per op), and
 //! reads run the full consistency path — checksum gate, repair, fallback.
 //! That makes it both the quickest way to use the store as a plain KV map
 //! and the vehicle for the backend-agnostic conformance suite, including
-//! failure injection ([`Request::CrashDuringPut`]) and crash recovery
-//! ([`Db::crash`]/[`Db::recover`]).
+//! failure injection ([`Request::CrashDuringPut`]) and crash recovery —
+//! cluster-wide ([`Db::crash`]/[`Db::recover`]) or confined to a single
+//! shard ([`Db::crash_shard`]/[`Db::recover_shard`]), which leaves the
+//! other shards untouched.
 //!
 //! For timing-accurate runs (latency/throughput/CPU figures) use
 //! [`super::Cluster`], which returns a settled `Db` for inspection after
 //! the engine quiesces.
 
 use super::{OpStats, RemoteStore, Request, Response, Scheme, StoreError};
-use crate::baselines::{BaselineWorld, PendingWrite, Scheme as BaselineScheme};
+use crate::baselines::{ApplyVerdict, BaselineWorld, PendingWrite, Scheme as BaselineScheme};
 use crate::erda::{recover, BatchCheck, ErdaWorld, LocalCheck, RecoveryReport};
 use crate::log::{object, NO_OFFSET};
 use crate::metrics::Counters;
@@ -27,65 +30,125 @@ enum Inner {
     Baseline(Box<BaselineWorld>),
 }
 
-/// A synchronous store handle over one world (see the module docs).
+/// A synchronous store handle over one world per shard (see module docs).
 pub struct Db {
-    inner: Inner,
+    shards: Vec<Inner>,
     stats: OpStats,
 }
 
 impl Db {
-    /// An empty store with default geometry for `scheme` — the one-line way
-    /// in. Use [`super::Cluster::builder`]`.build_db()` for full control.
+    /// An empty single-shard store with default geometry for `scheme` — the
+    /// one-line way in. Use [`super::Cluster::builder`]`.build_db()` for
+    /// full control (including `.shards(n)`).
     pub fn open(scheme: Scheme) -> Db {
         super::Cluster::builder().scheme(scheme).preload(0, 0).build_db()
     }
 
     pub(crate) fn from_erda(world: ErdaWorld) -> Db {
-        Db { inner: Inner::Erda(Box::new(world)), stats: OpStats::default() }
+        Db { shards: vec![Inner::Erda(Box::new(world))], stats: OpStats::default() }
     }
 
     pub(crate) fn from_baseline(world: BaselineWorld) -> Db {
-        Db { inner: Inner::Baseline(Box::new(world)), stats: OpStats::default() }
+        Db { shards: vec![Inner::Baseline(Box::new(world))], stats: OpStats::default() }
     }
 
-    /// NVM write accounting of the underlying world.
-    pub fn nvm_stats(&self) -> WriteStats {
-        match &self.inner {
-            Inner::Erda(w) => w.nvm.stats(),
-            Inner::Baseline(w) => w.nvm.stats(),
+    /// Assemble a sharded handle from single-shard parts (the cluster
+    /// driver builds one world per shard and hands them over in shard
+    /// order).
+    pub(crate) fn merge_shards(mut parts: Vec<Db>) -> Db {
+        assert!(!parts.is_empty(), "a cluster has at least one shard");
+        if parts.len() == 1 {
+            return parts.pop().expect("one part");
         }
+        let mut shards = Vec::with_capacity(parts.len());
+        let mut stats = OpStats::default();
+        for p in parts {
+            debug_assert_eq!(p.shards.len(), 1, "parts are single-shard");
+            stats.gets += p.stats.gets;
+            stats.puts += p.stats.puts;
+            stats.deletes += p.stats.deletes;
+            stats.read_misses += p.stats.read_misses;
+            stats.torn_detected += p.stats.torn_detected;
+            stats.repairs += p.stats.repairs;
+            stats.applied += p.stats.applied;
+            shards.extend(p.shards);
+        }
+        Db { shards, stats }
     }
 
-    /// Erda only: occupied bytes under log head `h`.
+    /// Number of shard worlds behind this handle.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns `key` under this handle's geometry.
+    pub fn shard_of_key(&self, key: &[u8]) -> usize {
+        super::shard_of(key, self.shards.len())
+    }
+
+    /// NVM write accounting, summed over every shard world.
+    pub fn nvm_stats(&self) -> WriteStats {
+        let mut out = WriteStats::default();
+        for inner in &self.shards {
+            let s = match inner {
+                Inner::Erda(w) => w.nvm.stats(),
+                Inner::Baseline(w) => w.nvm.stats(),
+            };
+            out.programmed_bytes += s.programmed_bytes;
+            out.requested_bytes += s.requested_bytes;
+            out.write_ops += s.write_ops;
+            out.atomic_ops += s.atomic_ops;
+        }
+        out
+    }
+
+    /// Erda only: occupied bytes under log head `h` of shard 0 (the
+    /// single-shard inspection surface; use [`Db::as_erda_shard`] for other
+    /// shards).
     pub fn log_occupied(&self, h: u8) -> Option<u32> {
-        match &self.inner {
+        match &self.shards[0] {
             Inner::Erda(w) => Some(w.server.log.occupied(h)),
             Inner::Baseline(_) => None,
         }
     }
 
-    /// Escape hatch: the Erda world, if this handle wraps one.
+    /// Escape hatch: shard 0's Erda world, if this handle wraps one.
     pub fn as_erda(&self) -> Option<&ErdaWorld> {
-        match &self.inner {
-            Inner::Erda(w) => Some(w),
-            Inner::Baseline(_) => None,
+        self.as_erda_shard(0)
+    }
+
+    /// Escape hatch: shard `shard`'s Erda world, if present.
+    pub fn as_erda_shard(&self, shard: usize) -> Option<&ErdaWorld> {
+        match self.shards.get(shard) {
+            Some(Inner::Erda(w)) => Some(w),
+            _ => None,
         }
     }
 
-    /// Escape hatch: the baseline world, if this handle wraps one.
+    /// Escape hatch: shard 0's baseline world, if this handle wraps one.
     pub fn as_baseline(&self) -> Option<&BaselineWorld> {
-        match &self.inner {
+        match &self.shards[0] {
             Inner::Erda(_) => None,
             Inner::Baseline(w) => Some(w),
         }
     }
 
-    /// Simulate a server power failure: volatile bookkeeping (log tails,
-    /// append indices) is lost. Follow with [`Db::recover`]. Erda only —
-    /// the baselines' recovery story is not part of the paper's claims.
+    /// Simulate a power failure on *every* shard server: volatile
+    /// bookkeeping (log tails, append indices) is lost. Follow with
+    /// [`Db::recover`]. Erda only — the baselines' recovery story is not
+    /// part of the paper's claims.
     pub fn crash(&mut self) -> Result<(), StoreError> {
-        match &mut self.inner {
-            Inner::Erda(w) => {
+        for shard in 0..self.shards.len() {
+            self.crash_shard(shard)?;
+        }
+        Ok(())
+    }
+
+    /// Crash one shard server, leaving the other shards untouched —
+    /// independent failure domains are the point of the partition.
+    pub fn crash_shard(&mut self, shard: usize) -> Result<(), StoreError> {
+        match self.shards.get_mut(shard) {
+            Some(Inner::Erda(w)) => {
                 for h in 0..w.server.num_heads() {
                     let head = w.server.log.head_mut(h as u8);
                     head.tail = 0;
@@ -93,27 +156,58 @@ impl Db {
                 }
                 Ok(())
             }
-            Inner::Baseline(_) => Err(StoreError::Unsupported("crash recovery (baseline scheme)")),
+            Some(Inner::Baseline(_)) => {
+                Err(StoreError::Unsupported("crash recovery (baseline scheme)"))
+            }
+            None => Err(StoreError::Unsupported("shard index out of range")),
         }
     }
 
-    /// Run crash recovery with the local checksum verifier.
+    /// Run crash recovery on every shard with the local checksum verifier;
+    /// the report aggregates all shards.
     pub fn recover(&mut self) -> Result<RecoveryReport, StoreError> {
         self.recover_with(&mut LocalCheck)
     }
 
-    /// Run crash recovery with an explicit batch verifier (e.g. the PJRT
-    /// artifact via [`crate::runtime::PjrtCheck`]).
+    /// Run crash recovery on every shard with an explicit batch verifier
+    /// (e.g. the PJRT artifact via [`crate::runtime::PjrtCheck`]).
     pub fn recover_with(
         &mut self,
         checker: &mut dyn BatchCheck,
     ) -> Result<RecoveryReport, StoreError> {
-        match &mut self.inner {
-            Inner::Erda(w) => {
+        let mut total = RecoveryReport::default();
+        for shard in 0..self.shards.len() {
+            let r = self.recover_shard_with(shard, checker)?;
+            total.heads_scanned += r.heads_scanned;
+            total.objects_indexed += r.objects_indexed;
+            total.entries_checked += r.entries_checked;
+            total.entries_rolled_back += r.entries_rolled_back;
+            total.entries_dropped += r.entries_dropped;
+        }
+        Ok(total)
+    }
+
+    /// Recover one crashed shard with the local verifier; the other shards
+    /// are not touched.
+    pub fn recover_shard(&mut self, shard: usize) -> Result<RecoveryReport, StoreError> {
+        self.recover_shard_with(shard, &mut LocalCheck)
+    }
+
+    /// Recover one crashed shard with an explicit batch verifier.
+    pub fn recover_shard_with(
+        &mut self,
+        shard: usize,
+        checker: &mut dyn BatchCheck,
+    ) -> Result<RecoveryReport, StoreError> {
+        match self.shards.get_mut(shard) {
+            Some(Inner::Erda(w)) => {
                 let ErdaWorld { nvm, server, .. } = &mut **w;
                 Ok(recover(server, nvm, checker))
             }
-            Inner::Baseline(_) => Err(StoreError::Unsupported("crash recovery (baseline scheme)")),
+            Some(Inner::Baseline(_)) => {
+                Err(StoreError::Unsupported("crash recovery (baseline scheme)"))
+            }
+            None => Err(StoreError::Unsupported("shard index out of range")),
         }
     }
 
@@ -134,9 +228,10 @@ impl Db {
         Ok(())
     }
 
-    /// Largest encoded object this handle accepts.
+    /// Largest encoded object this handle accepts (every shard shares one
+    /// geometry, so shard 0 speaks for all).
     fn max_obj(&self) -> usize {
-        match &self.inner {
+        match &self.shards[0] {
             Inner::Erda(w) => w.server.log.cfg.segment_size as usize,
             Inner::Baseline(w) => {
                 w.server.slot_size.min(w.server.staging.segment_size as usize)
@@ -146,7 +241,8 @@ impl Db {
 
     /// Inject a torn write: start a put but persist only the first `chunks`
     /// 64-byte chunks, as a crashing client would (the [`Request`] form is
-    /// [`Request::CrashDuringPut`]).
+    /// [`Request::CrashDuringPut`]). Routed to the key's shard like any
+    /// other write.
     pub fn crash_during_put(
         &mut self,
         key: &[u8],
@@ -157,10 +253,13 @@ impl Db {
         Self::check_obj_size(key, value, self.max_obj())?;
         let obj = object::encode_object(key, value);
         let cut = (chunks * 64).min(obj.len());
-        match &mut self.inner {
+        let shard = self.shard_of_key(key);
+        match &mut self.shards[shard] {
             Inner::Erda(w) => {
                 // Metadata publishes first (§3.3); only a prefix of the
-                // object bytes ever lands — the §4.3 window, frozen.
+                // object bytes ever lands — the §4.3 window, frozen. The
+                // tear is *detected* (and counted) later, by the read-side
+                // checksum gate or recovery.
                 let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
                 if cut > 0 {
                     w.nvm.write(addr, &obj[..cut]);
@@ -172,7 +271,10 @@ impl Db {
                 BaselineScheme::RedoLogging => Ok(()),
                 BaselineScheme::ReadAfterWrite => {
                     // A torn record reaches the ring buffer; the applier's
-                    // CRC gate must skip it.
+                    // CRC gate is the detector — `torn_detected` counts
+                    // there (in the drain below), never at injection, so a
+                    // `chunks` budget covering the whole object applies
+                    // cleanly and counts nothing.
                     let off = w.server.raw_reserve(&mut w.nvm, obj.len());
                     if cut > 0 {
                         let addr = w.server.staging.addr_of(off);
@@ -184,12 +286,6 @@ impl Db {
                         len: obj.len() as u32,
                         delete: false,
                     });
-                    // The applier's CRC gate is the detector here; it fires
-                    // only when the record is actually torn (a `chunks`
-                    // budget covering the whole object applies cleanly).
-                    if cut < obj.len() {
-                        self.stats.torn_detected += 1;
-                    }
                     Self::drain_baseline(w, &mut self.stats);
                     Ok(())
                 }
@@ -198,11 +294,22 @@ impl Db {
     }
 
     /// Drain the baseline apply queue (one-shot semantics: every put is
-    /// fully applied before the call returns).
+    /// fully applied before the call returns). Torn records are counted at
+    /// the CRC gate that rejects them — the same detector-side semantics as
+    /// Erda's read path.
     fn drain_baseline(w: &mut BaselineWorld, stats: &mut OpStats) {
-        while w.server.apply_one(&mut w.nvm).is_some() {
-            stats.applied += 1;
-            w.counters.applied += 1;
+        while let Some((_, verdict)) = w.server.apply_one(&mut w.nvm) {
+            match verdict {
+                ApplyVerdict::Applied => {
+                    stats.applied += 1;
+                    w.counters.applied += 1;
+                }
+                ApplyVerdict::Torn => {
+                    stats.torn_detected += 1;
+                    w.counters.inconsistencies += 1;
+                }
+                ApplyVerdict::Skipped => {}
+            }
         }
     }
 
@@ -295,7 +402,7 @@ impl Db {
 
 impl RemoteStore for Db {
     fn scheme(&self) -> Scheme {
-        match &self.inner {
+        match &self.shards[0] {
             Inner::Erda(_) => Scheme::Erda,
             Inner::Baseline(w) => match w.server.scheme {
                 BaselineScheme::RedoLogging => Scheme::RedoLogging,
@@ -306,7 +413,8 @@ impl RemoteStore for Db {
 
     fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>, StoreError> {
         self.stats.gets += 1;
-        match &mut self.inner {
+        let shard = self.shard_of_key(key);
+        match &mut self.shards[shard] {
             Inner::Erda(w) => Self::erda_get(w, &mut self.stats, key),
             Inner::Baseline(w) => {
                 let v = w.server.read(&w.nvm, key);
@@ -321,7 +429,8 @@ impl RemoteStore for Db {
     fn put(&mut self, key: &[u8], value: &[u8]) -> Result<(), StoreError> {
         Self::check_key(key)?;
         Self::check_obj_size(key, value, self.max_obj())?;
-        match &mut self.inner {
+        let shard = self.shard_of_key(key);
+        match &mut self.shards[shard] {
             Inner::Erda(w) => {
                 let obj = object::encode_object(key, value);
                 let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
@@ -335,7 +444,8 @@ impl RemoteStore for Db {
 
     fn delete(&mut self, key: &[u8]) -> Result<(), StoreError> {
         Self::check_key(key)?;
-        match &mut self.inner {
+        let shard = self.shard_of_key(key);
+        match &mut self.shards[shard] {
             Inner::Erda(w) => {
                 let obj = object::encode_delete(key);
                 let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
@@ -353,11 +463,15 @@ impl RemoteStore for Db {
         self.stats
     }
 
-    fn counters(&self) -> &Counters {
-        match &self.inner {
-            Inner::Erda(w) => &w.counters,
-            Inner::Baseline(w) => &w.counters,
+    fn counters(&self) -> Counters {
+        let mut out = Counters::default();
+        for inner in &self.shards {
+            match inner {
+                Inner::Erda(w) => out.merge(&w.counters),
+                Inner::Baseline(w) => out.merge(&w.counters),
+            }
         }
+        out
     }
 
     fn execute(&mut self, req: Request) -> Result<Response, StoreError> {
@@ -449,5 +563,51 @@ mod tests {
         let mut db = open(Scheme::RedoLogging);
         assert!(matches!(db.crash(), Err(StoreError::Unsupported(_))));
         assert!(matches!(db.recover(), Err(StoreError::Unsupported(_))));
+    }
+
+    #[test]
+    fn sharded_db_routes_and_serves_all_keys() {
+        for scheme in Scheme::ALL {
+            let mut db = Cluster::builder()
+                .scheme(scheme)
+                .shards(4)
+                .records(32)
+                .value_size(16)
+                .preload(32, 16)
+                .build_db();
+            assert_eq!(db.num_shards(), 4, "{scheme:?}");
+            let mut shard_seen = [false; 4];
+            for i in 0..32u64 {
+                let key = key_of(i);
+                shard_seen[db.shard_of_key(&key)] = true;
+                assert_eq!(db.get(&key).unwrap(), Some(vec![0xA5u8; 16]), "{scheme:?} key {i}");
+            }
+            assert!(shard_seen.iter().all(|&s| s), "{scheme:?}: preload must span shards");
+            db.put(&key_of(5), b"sharded-write-16").unwrap();
+            assert_eq!(db.get(&key_of(5)).unwrap().unwrap(), b"sharded-write-16", "{scheme:?}");
+            db.delete(&key_of(6)).unwrap();
+            assert_eq!(db.get(&key_of(6)).unwrap(), None, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn shard_crash_recovery_leaves_other_shards_alone() {
+        let mut db = Cluster::builder()
+            .scheme(Scheme::Erda)
+            .shards(4)
+            .records(32)
+            .value_size(16)
+            .preload(32, 16)
+            .build_db();
+        let key = key_of(3);
+        let crashed = db.shard_of_key(&key);
+        db.crash_during_put(&key, &vec![0xEEu8; 16], 0).unwrap();
+        db.crash_shard(crashed).unwrap();
+        let report = db.recover_shard(crashed).unwrap();
+        assert_eq!(report.entries_rolled_back, 1, "{report:?}");
+        assert_eq!(db.get(&key).unwrap(), Some(vec![0xA5u8; 16]), "rolled back");
+        for i in 0..32u64 {
+            assert_eq!(db.get(&key_of(i)).unwrap(), Some(vec![0xA5u8; 16]), "bystander {i}");
+        }
     }
 }

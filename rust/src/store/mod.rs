@@ -20,6 +20,11 @@
 //!   (zero virtual time): the quickest way to use any scheme as a plain
 //!   key-value store, and the vehicle for the backend-agnostic conformance
 //!   suite.
+//! * [`shard_of`] — deterministic key → shard routing for multi-server
+//!   clusters: `ClusterBuilder::shards(n)` partitions the key space across
+//!   `n` independent server worlds (each with its own NVM arena, log heads,
+//!   hash table and background actors); [`Db`] routes every operation by
+//!   this function and supports per-shard crash/recovery.
 
 pub mod cluster;
 pub mod db;
@@ -80,6 +85,39 @@ impl Scheme {
             Scheme::ReadAfterWrite => Some(crate::baselines::Scheme::ReadAfterWrite),
         }
     }
+}
+
+/// Deterministic shard routing: which of `shards` independent server worlds
+/// owns `key`.
+///
+/// A pure function of the key bytes (FNV-1a-32, the same hash family the
+/// metadata table and [`crate::erda::head_of`] use), so every client — and
+/// any later session over the same geometry — routes identically with no
+/// coordination, the property that makes one-sided scale-out cheap: no
+/// server CPU sits on the data path, so adding shards adds capacity without
+/// adding coordination.
+///
+/// The hash is finalized (murmur3 fmix32 avalanche) and reduced by
+/// multiply-high, NOT taken `% shards` directly: the hopscotch home bucket
+/// is the raw hash's *low* bits (`fnv1a & (cap-1)`), so a low-bit `%` with
+/// a power-of-two shard count would confine each shard's keys to the
+/// 1/shards of its table whose buckets are congruent to the shard index —
+/// a silent load-factor multiplier the moment per-shard tables are sized
+/// by per-shard records. The avalanche also fixes FNV-1a's weakly-mixed
+/// top bits on near-sequential keys, which the multiply-high reduction
+/// reads.
+pub fn shard_of(key: &[u8], shards: usize) -> usize {
+    debug_assert!(shards > 0, "a cluster has at least one shard");
+    if shards <= 1 {
+        return 0;
+    }
+    let mut h = crate::crc::fnv1a(key);
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 16;
+    ((h as u64 * shards as u64) >> 32) as usize
 }
 
 /// Typed store failure.
@@ -173,6 +211,12 @@ pub enum Response {
 pub enum OpSource {
     /// A YCSB generator (figure runs).
     Ycsb(Generator),
+    /// A YCSB generator restricted to the keys one shard owns: the client
+    /// draws from the full popularity distribution but executes only the
+    /// ops that [`shard_of`] routes to its shard. Under Zipfian skew the
+    /// shard holding the hottest keys legitimately sees more traffic — the
+    /// skewed-shard-load scenario scale-out runs exist to measure.
+    ShardedYcsb { gen: Generator, shard: usize, shards: usize },
     /// A fixed script (tests, Table 1 measurements, failure injection).
     Script(VecDeque<Request>),
 }
@@ -183,13 +227,29 @@ impl OpSource {
         OpSource::Script(VecDeque::from(ops))
     }
 
-    /// Produce the next operation, or None when a script is exhausted.
+    fn to_request(op: Op) -> Request {
+        match op {
+            Op::Read { key } => Request::Get { key },
+            Op::Update { key, value } => Request::Put { key, value },
+        }
+    }
+
+    /// Produce the next operation, or None when a script is exhausted (or
+    /// a sharded stream's shard owns no keys at all).
     pub fn next(&mut self) -> Option<Request> {
+        // Rejection sampling over the key popularity distribution: with k
+        // shards an owned key arrives in ~k draws (keys only — values are
+        // not materialized for rejected draws). The cap is a backstop for
+        // degenerate geometries (more shards than reachable keys can leave
+        // a shard owning nothing — without it the loop would spin forever);
+        // hitting it ends the stream like an exhausted script, so the
+        // client retires cleanly.
+        const MAX_DRAWS: u32 = 100_000;
         match self {
-            OpSource::Ycsb(g) => Some(match g.next_op() {
-                Op::Read { key } => Request::Get { key },
-                Op::Update { key, value } => Request::Put { key, value },
-            }),
+            OpSource::Ycsb(g) => Some(Self::to_request(g.next_op())),
+            OpSource::ShardedYcsb { gen, shard, shards } => {
+                gen.next_op_owned(*shard, *shards, MAX_DRAWS).map(Self::to_request)
+            }
             OpSource::Script(q) => q.pop_front(),
         }
     }
@@ -212,8 +272,9 @@ pub trait RemoteStore {
     /// Per-handle operation statistics.
     fn op_stats(&self) -> OpStats;
 
-    /// The shared run counters (scan-counters surface).
-    fn counters(&self) -> &crate::metrics::Counters;
+    /// The run counters (scan-counters surface). Sharded stores return the
+    /// aggregate over every shard world, so the value is owned.
+    fn counters(&self) -> crate::metrics::Counters;
 
     /// Drive the store through the wire protocol. The default covers the
     /// plain data path; handles that support failure injection override it.
@@ -286,6 +347,37 @@ mod tests {
         let mut src = OpSource::Ycsb(gen);
         for _ in 0..10 {
             assert!(src.next().is_some());
+        }
+    }
+
+    #[test]
+    fn shard_routing_is_total_deterministic_and_spread() {
+        for shards in [1usize, 2, 3, 4, 8] {
+            let mut hits = vec![0u32; shards];
+            for i in 0..2000u64 {
+                let key = crate::ycsb::key_of(i);
+                let s = shard_of(&key, shards);
+                assert!(s < shards, "routing must be total");
+                assert_eq!(s, shard_of(&key, shards), "routing must be deterministic");
+                hits[s] += 1;
+            }
+            assert!(
+                hits.iter().all(|&c| c > 2000 / (shards as u32 * 4)),
+                "{shards} shards underloaded: {hits:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_ycsb_source_only_yields_owned_keys() {
+        let shards = 4;
+        for shard in 0..shards {
+            let gen = Generator::new(crate::ycsb::WorkloadConfig::default(), 7);
+            let mut src = OpSource::ShardedYcsb { gen, shard, shards };
+            for _ in 0..200 {
+                let req = src.next().expect("ycsb never ends");
+                assert_eq!(shard_of(req.key(), shards), shard);
+            }
         }
     }
 

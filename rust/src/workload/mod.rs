@@ -20,6 +20,11 @@ pub use crate::store::Scheme as SchemeSel;
 pub struct DriverConfig {
     pub scheme: SchemeSel,
     pub workload: WorkloadConfig,
+    /// Independent server worlds the key space is partitioned across
+    /// (scale-out; 1 = the paper's single-server setup). Routing is the
+    /// deterministic [`crate::store::shard_of`]; client threads fan out
+    /// round-robin over the shards.
+    pub shards: usize,
     /// Simulated client threads (closed loop).
     pub clients: usize,
     /// Ops per client (after this the client exits).
@@ -42,6 +47,7 @@ impl Default for DriverConfig {
         DriverConfig {
             scheme: SchemeSel::Erda,
             workload: WorkloadConfig::default(),
+            shards: 1,
             clients: 4,
             ops_per_client: 500,
             warmup: 5 * crate::sim::MS,
@@ -158,6 +164,23 @@ mod tests {
             (1.7..2.3).contains(&ratio),
             "baseline/erda NVM write ratio {ratio} (expect ≈ 2)"
         );
+    }
+
+    #[test]
+    fn sharded_config_completes_and_aggregates() {
+        for scheme in SchemeSel::ALL {
+            let cfg = DriverConfig {
+                scheme,
+                shards: 2,
+                clients: 4,
+                ops_per_client: 100,
+                warmup: 0,
+                ..Default::default()
+            };
+            let s = run(&cfg);
+            assert_eq!(s.ops, 400, "{scheme:?}: every client finishes across shards");
+            assert_eq!(s.read_misses, 0, "{scheme:?}");
+        }
     }
 
     #[test]

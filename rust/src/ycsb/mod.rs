@@ -111,9 +111,8 @@ impl Generator {
         Generator { cfg, zipf, rng }
     }
 
-    /// Generate the next operation.
-    pub fn next_op(&mut self) -> Op {
-        let key = key_of(self.zipf.sample(&mut self.rng));
+    /// Build the op for an already-drawn key (read/write coin + value).
+    fn op_for(&mut self, key: Vec<u8>) -> Op {
         if self.rng.gen_bool(self.cfg.workload.read_fraction()) {
             Op::Read { key }
         } else {
@@ -121,6 +120,28 @@ impl Generator {
             self.rng.fill_bytes(&mut value);
             Op::Update { key, value }
         }
+    }
+
+    /// Generate the next operation.
+    pub fn next_op(&mut self) -> Op {
+        let key = key_of(self.zipf.sample(&mut self.rng));
+        self.op_for(key)
+    }
+
+    /// Next operation whose key `(shard, shards)` owns under
+    /// [`crate::store::shard_of`]: rejection-samples *keys* (cheap — no
+    /// value materialization or read/write coin for rejected draws), then
+    /// builds the op. Returns None after `max_draws` consecutive rejected
+    /// draws — the backstop for degenerate geometries where this shard owns
+    /// no reachable key.
+    pub fn next_op_owned(&mut self, shard: usize, shards: usize, max_draws: u32) -> Option<Op> {
+        for _ in 0..max_draws {
+            let key = key_of(self.zipf.sample(&mut self.rng));
+            if crate::store::shard_of(&key, shards) == shard {
+                return Some(self.op_for(key));
+            }
+        }
+        None
     }
 
     pub fn config(&self) -> &WorkloadConfig {
@@ -173,6 +194,21 @@ mod tests {
             Op::Update { value, .. } => assert_eq!(value.len(), 777),
             _ => panic!("update-only must produce updates"),
         }
+    }
+
+    #[test]
+    fn sharded_generation_owns_and_caps() {
+        let cfg = WorkloadConfig { record_count: 256, ..Default::default() };
+        let mut g = Generator::new(cfg, 3);
+        for _ in 0..200 {
+            let op = g.next_op_owned(1, 4, 100_000).expect("shard 1 owns reachable keys");
+            let key = match op {
+                Op::Read { key } | Op::Update { key, .. } => key,
+            };
+            assert_eq!(crate::store::shard_of(&key, 4), 1);
+        }
+        // A shard no key routes to exhausts the draw cap and ends cleanly.
+        assert!(g.next_op_owned(9, 4, 1_000).is_none());
     }
 
     #[test]

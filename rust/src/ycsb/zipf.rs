@@ -5,6 +5,31 @@
 
 use crate::sim::Rng;
 
+/// Stable rank scramble: per-byte FNV-1a-64 over the rank's little-endian
+/// bytes, then a splitmix64-style avalanche so every output bit depends on
+/// every input bit. Deterministic across runs (no RNG involved).
+fn scramble_rank(rank: u64) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in rank.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    h ^ (h >> 33)
+}
+
+/// The deterministic rank → item-id map [`Zipfian::sample`] applies after
+/// drawing a rank: scramble + 128-bit multiply-high reduction into `[0, n)`.
+/// Exposed so schedulers can enumerate the *reachable* id set (the map is
+/// not surjective — like balls into bins, ~1/e of the ids have no preimage
+/// among ranks `0..n`) without an RNG.
+pub fn scrambled_id(rank: u64, n: u64) -> u64 {
+    // Multiply-high reduction: uses the hash's full 64 bits uniformly.
+    ((scramble_rank(rank) as u128 * n as u128) >> 64) as u64
+}
+
 /// Zipfian distribution over `[0, n)` with skew `theta` (paper: 0.99).
 #[derive(Clone, Debug)]
 pub struct Zipfian {
@@ -29,7 +54,7 @@ impl Zipfian {
         let zeta2 = zeta(2.min(n), theta);
         let alpha = 1.0 / (1.0 - theta);
         let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
-        Zipfian { n, theta, alpha, zetan, eta, zeta2: zeta2 }
+        Zipfian { n, theta, alpha, zetan, eta, zeta2 }
     }
 
     /// Draw a rank in `[0, n)`: rank 0 is the hottest item.
@@ -48,14 +73,17 @@ impl Zipfian {
 
     /// Draw a *scrambled* item id in `[0, n)` (YCSB's ScrambledZipfian):
     /// popularity is Zipfian but hot items are spread over the id space.
+    ///
+    /// The scramble is full per-byte FNV-1a over the rank's 8 LE bytes with
+    /// a finalizing avalanche, reduced by 128-bit multiply-high — the same
+    /// reduction [`Rng::gen_range`] uses. The previous single-fold variant
+    /// (`(OFFSET ^ rank) * PRIME % n`) reduced with `%`, which for a
+    /// power-of-two `n` keeps only the product's low bits: multiplication
+    /// by an odd constant is a bijection mod 2^k, so the "scrambled" id was
+    /// just a permutation of the rank's own low bits — low-bit-biased and
+    /// structurally correlated with the rank.
     pub fn sample(&self, rng: &mut Rng) -> u64 {
-        let rank = self.sample_rank(rng);
-        // FNV-64-style scramble, stable across runs.
-        let mut h = 0xCBF2_9CE4_8422_2325u64;
-        h ^= rank;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
-        h ^= h >> 33;
-        h % self.n
+        scrambled_id(self.sample_rank(rng), self.n)
     }
 
     pub fn n(&self) -> u64 {
@@ -127,6 +155,52 @@ mod tests {
         // and the distribution should still be highly skewed.
         let max = *counts.iter().max().unwrap() as f64;
         assert!(max / 50_000.0 > 0.05, "still skewed after scrambling");
+    }
+
+    #[test]
+    fn scramble_is_deterministic_and_avalanches() {
+        for r in [0u64, 1, 2, 1000, u64::MAX] {
+            assert_eq!(scramble_rank(r), scramble_rank(r), "stable across calls");
+        }
+        // Adjacent ranks must differ in many output bits (the whole point
+        // of the finalizing avalanche).
+        for r in 0..256u64 {
+            let d = (scramble_rank(r) ^ scramble_rank(r + 1)).count_ones();
+            assert!(d >= 12, "rank {r}: only {d} bits differ from rank {}", r + 1);
+        }
+    }
+
+    #[test]
+    fn power_of_two_space_has_no_low_bit_bias() {
+        // Push every rank of a power-of-two space through the scramble +
+        // multiply-high reduction. The retired single-fold `% n` scramble
+        // permuted only the rank's low bits for power-of-two n; the fixed
+        // pipeline must behave like 1024 balls into 1024 bins.
+        let n = 1024u64;
+        let ids: Vec<u64> = (0..n).map(|r| scrambled_id(r, n)).collect();
+        assert!(ids.iter().all(|&id| id < n));
+        let distinct = ids.iter().collect::<std::collections::HashSet<_>>().len();
+        // Uniform balls-in-bins expectation ≈ n(1 - 1/e) ≈ 647; a low-bit
+        // permutation would give exactly 1024, a broken hash far fewer.
+        assert!((500..=900).contains(&distinct), "distinct ids {distinct}");
+        let odd = ids.iter().filter(|&&id| id & 1 == 1).count();
+        assert!((400..=624).contains(&odd), "odd-id count {odd} biased");
+        let high_half = ids.iter().filter(|&&id| id >= n / 2).count();
+        assert!((400..=624).contains(&high_half), "high-half count {high_half} biased");
+    }
+
+    #[test]
+    fn power_of_two_sampling_stays_skewed_and_in_range() {
+        let mut rng = Rng::new(12);
+        let z = Zipfian::new(1024, 0.99, &mut rng);
+        let mut counts = vec![0u32; 1024];
+        for _ in 0..50_000 {
+            let id = z.sample(&mut rng);
+            assert!(id < 1024);
+            counts[id as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        assert!(max / 50_000.0 > 0.05, "hot id mass {max} lost by the scramble");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Backend-agnostic conformance suite: the same read / update / delete /
 //! torn-write scenario runs against all three schemes (Erda, Redo Logging,
 //! Read After Write) through the [`RemoteStore`] trait — the store facade's
-//! contract, checked uniformly.
+//! contract, checked uniformly — and at both 1 and 4 shards, so the
+//! scale-out router obeys exactly the contract the single-server store
+//! does.
 //!
 //! Two layers are covered per scheme:
 //! * the synchronous [`Db`] handle (typed one-shot ops), driven through a
@@ -10,14 +12,16 @@
 //!   fabric timing, NIC-cache truncation for the torn write).
 
 use erda::sim::MS;
-use erda::store::{Cluster, Db, RemoteStore, Request, Response, Scheme, StoreError};
+use erda::store::{shard_of, Cluster, Db, RemoteStore, Request, Response, Scheme, StoreError};
 use erda::ycsb::{key_of, Workload};
 
 const VALUE: usize = 128;
+const SHARD_COUNTS: [usize; 2] = [1, 4];
 
-fn open(scheme: Scheme) -> Db {
+fn open(scheme: Scheme, shards: usize) -> Db {
     Cluster::builder()
         .scheme(scheme)
+        .shards(shards)
         .records(16)
         .value_size(VALUE)
         .preload(16, VALUE)
@@ -69,6 +73,15 @@ fn scenario(store: &mut dyn RemoteStore) {
         "{scheme:?} torn write must leave the old version readable"
     );
 
+    // Torn-write accounting lives at the *detector*, uniformly: RAW counts
+    // at the applier's CRC gate, Erda at the read-side checksum — both have
+    // fired by now. Redo's two-sided send never arrives, so nothing tears.
+    let torn = store.op_stats().torn_detected;
+    match scheme {
+        Scheme::RedoLogging => assert_eq!(torn, 0, "{scheme:?}: nothing staged, nothing torn"),
+        _ => assert_eq!(torn, 1, "{scheme:?}: exactly the injected tear detected"),
+    }
+
     // The protocol surface agrees with the typed one.
     match store.execute(Request::Get { key: key_of(0) }).unwrap() {
         Response::Value(Some(_)) => {}
@@ -77,101 +90,231 @@ fn scenario(store: &mut dyn RemoteStore) {
 }
 
 #[test]
-fn db_conformance_all_schemes() {
-    for scheme in Scheme::ALL {
-        let mut db = open(scheme);
-        scenario(&mut db);
-        let s = db.op_stats();
-        assert!(s.gets >= 7, "{scheme:?} gets {s:?}");
-        assert_eq!(s.puts, 3, "{scheme:?} puts {s:?}");
-        assert_eq!(s.deletes, 2, "{scheme:?} deletes {s:?}");
+fn db_conformance_all_schemes_at_1_and_4_shards() {
+    for shards in SHARD_COUNTS {
+        for scheme in Scheme::ALL {
+            let mut db = open(scheme, shards);
+            scenario(&mut db);
+            let s = db.op_stats();
+            assert!(s.gets >= 7, "{scheme:?}/{shards} gets {s:?}");
+            assert_eq!(s.puts, 3, "{scheme:?}/{shards} puts {s:?}");
+            assert_eq!(s.deletes, 2, "{scheme:?}/{shards} deletes {s:?}");
+        }
     }
 }
 
 #[test]
 fn typed_errors_are_uniform() {
+    for shards in SHARD_COUNTS {
+        for scheme in Scheme::ALL {
+            let mut db = open(scheme, shards);
+            // Key bounds.
+            assert!(
+                matches!(db.put(b"", b"v"), Err(StoreError::InvalidKey { len: 0 })),
+                "{scheme:?} empty key"
+            );
+            assert!(
+                matches!(db.put(&[7u8; 40], b"v"), Err(StoreError::InvalidKey { len: 40 })),
+                "{scheme:?} long key"
+            );
+            // Value bounds.
+            assert!(
+                matches!(
+                    db.put(&key_of(0), &vec![0u8; 1 << 20]),
+                    Err(StoreError::ValueTooLarge { .. })
+                ),
+                "{scheme:?} oversized value"
+            );
+            // Typed errors are values: the store stays usable afterwards.
+            assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![0xA5u8; VALUE]), "{scheme:?}");
+        }
+    }
+}
+
+/// The new accounting semantics, pinned down precisely: `torn_detected`
+/// increments where the checksum gate actually rejects bytes — the RAW
+/// applier's CRC check (at apply time) and Erda's read path (at read time)
+/// — never at injection time.
+#[test]
+fn torn_accounting_counts_at_the_detector() {
+    // RAW: the gate runs inside the synchronous drain, so the count is
+    // visible right after the injection, before any read.
+    let mut db = open(Scheme::ReadAfterWrite, 1);
+    db.execute(Request::CrashDuringPut { key: key_of(2), value: vec![0xEEu8; VALUE], chunks: 1 })
+        .unwrap();
+    assert_eq!(db.op_stats().torn_detected, 1, "RAW counts at the applier CRC gate");
+
+    // RAW with a chunk budget covering the whole object: the record is
+    // whole, the gate passes, nothing is counted — and the write applies.
+    let mut db = open(Scheme::ReadAfterWrite, 1);
+    let whole = erda::log::object::wire_size(key_of(2).len(), VALUE).div_ceil(64);
+    db.execute(Request::CrashDuringPut {
+        key: key_of(2),
+        value: vec![0xEEu8; VALUE],
+        chunks: whole,
+    })
+    .unwrap();
+    assert_eq!(db.op_stats().torn_detected, 0, "a whole record is not torn");
+    assert_eq!(db.op_stats().applied, 1, "…and applies cleanly");
+    assert_eq!(db.get(&key_of(2)).unwrap(), Some(vec![0xEEu8; VALUE]));
+
+    // Erda: nothing is counted at injection; the read-side checksum is the
+    // detector.
+    let mut db = open(Scheme::Erda, 1);
+    db.execute(Request::CrashDuringPut { key: key_of(2), value: vec![0xEEu8; VALUE], chunks: 1 })
+        .unwrap();
+    assert_eq!(db.op_stats().torn_detected, 0, "Erda: injection alone detects nothing");
+    assert_eq!(db.get(&key_of(2)).unwrap(), Some(vec![0xA5u8; VALUE]));
+    assert_eq!(db.op_stats().torn_detected, 1, "Erda: the read's checksum gate counts it");
+    assert_eq!(db.op_stats().repairs, 1, "…and repairs the entry");
+}
+
+/// Shard routing is deterministic and total: every key maps to exactly one
+/// in-range shard, identically across calls and across independently built
+/// handles of the same geometry.
+#[test]
+fn shard_routing_is_deterministic_and_total() {
+    for shards in [1usize, 2, 4, 8] {
+        let mut hits = vec![0u64; shards];
+        for i in 0..4000u64 {
+            let key = key_of(i);
+            let s = shard_of(&key, shards);
+            assert!(s < shards, "total: key {i} must land in range");
+            assert_eq!(s, shard_of(&key, shards), "deterministic across calls");
+            hits[s] += 1;
+        }
+        assert!(hits.iter().all(|&c| c > 0), "every shard owns keys: {hits:?}");
+    }
+
+    // Re-opening with the same geometry routes identically: two handles
+    // built independently agree on the owner of every key, and data written
+    // through one geometry is served back under the same routing.
     for scheme in Scheme::ALL {
-        let mut db = open(scheme);
-        // Key bounds.
-        assert!(
-            matches!(db.put(b"", b"v"), Err(StoreError::InvalidKey { len: 0 })),
-            "{scheme:?} empty key"
-        );
-        assert!(
-            matches!(db.put(&[7u8; 40], b"v"), Err(StoreError::InvalidKey { len: 40 })),
-            "{scheme:?} long key"
-        );
-        // Value bounds.
-        assert!(
-            matches!(db.put(&key_of(0), &vec![0u8; 1 << 20]), Err(StoreError::ValueTooLarge { .. })),
-            "{scheme:?} oversized value"
-        );
-        // Typed errors are values: the store stays usable afterwards.
-        assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![0xA5u8; VALUE]), "{scheme:?}");
+        let mut a = open(scheme, 4);
+        let b = open(scheme, 4);
+        for i in 0..64u64 {
+            let key = key_of(i);
+            assert_eq!(a.shard_of_key(&key), b.shard_of_key(&key), "{scheme:?} key {i}");
+            assert_eq!(a.shard_of_key(&key), shard_of(&key, 4), "{scheme:?} key {i}");
+        }
+        a.put(&key_of(3), &vec![0x77u8; VALUE]).unwrap();
+        assert_eq!(a.get(&key_of(3)).unwrap(), Some(vec![0x77u8; VALUE]), "{scheme:?}");
     }
 }
 
 #[test]
-fn engine_conformance_all_schemes() {
+fn engine_conformance_all_schemes_at_1_and_4_shards() {
     // The same script through the DES engine: scripted writer + late reader,
-    // including a real NIC-cache-truncated torn write.
-    for scheme in Scheme::ALL {
-        let outcome = Cluster::builder()
-            .scheme(scheme)
-            .records(16)
-            .value_size(VALUE)
-            .preload(16, VALUE)
-            .clients(0)
-            .warmup(0)
-            .script(vec![
-                Request::Put { key: key_of(0), value: vec![0x44u8; VALUE] },
-                Request::Get { key: key_of(0) },
-                Request::Delete { key: key_of(1) },
-                Request::Get { key: key_of(1) }, // the only expected miss
-            ])
-            .script(vec![Request::CrashDuringPut {
-                key: key_of(2),
-                value: vec![0xEEu8; VALUE],
-                chunks: 1,
-            }])
-            .script_at(2 * MS, vec![Request::Get { key: key_of(2) }])
-            .run();
+    // including a real NIC-cache-truncated torn write. With shards, the
+    // script is split per owning shard with order preserved.
+    for shards in SHARD_COUNTS {
+        for scheme in Scheme::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .shards(shards)
+                .records(16)
+                .value_size(VALUE)
+                .preload(16, VALUE)
+                .clients(0)
+                .warmup(0)
+                .script(vec![
+                    Request::Put { key: key_of(0), value: vec![0x44u8; VALUE] },
+                    Request::Get { key: key_of(0) },
+                    Request::Delete { key: key_of(1) },
+                    Request::Get { key: key_of(1) }, // the only expected miss
+                ])
+                .script(vec![Request::CrashDuringPut {
+                    key: key_of(2),
+                    value: vec![0xEEu8; VALUE],
+                    chunks: 1,
+                }])
+                .script_at(2 * MS, vec![Request::Get { key: key_of(2) }])
+                .run();
 
-        let s = &outcome.stats;
-        assert_eq!(s.read_misses, 1, "{scheme:?}: exactly the deleted key misses");
-        let mut db = outcome.db;
-        assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![0x44u8; VALUE]), "{scheme:?}");
-        assert_eq!(db.get(&key_of(1)).unwrap(), None, "{scheme:?}");
-        assert_eq!(
-            db.get(&key_of(2)).unwrap(),
-            Some(vec![0xA5u8; VALUE]),
-            "{scheme:?}: torn write must roll back / never apply"
-        );
+            let s = &outcome.stats;
+            assert_eq!(
+                s.read_misses, 1,
+                "{scheme:?}/{shards}: exactly the deleted key misses"
+            );
+            assert_eq!(outcome.per_shard.len(), shards, "{scheme:?}");
+            let mut db = outcome.db;
+            assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![0x44u8; VALUE]), "{scheme:?}");
+            assert_eq!(db.get(&key_of(1)).unwrap(), None, "{scheme:?}");
+            assert_eq!(
+                db.get(&key_of(2)).unwrap(),
+                Some(vec![0xA5u8; VALUE]),
+                "{scheme:?}/{shards}: torn write must roll back / never apply"
+            );
+        }
     }
 }
 
 #[test]
 fn engine_runs_are_deterministic_per_scheme() {
-    for scheme in Scheme::ALL {
-        let run = || {
-            Cluster::builder()
-                .scheme(scheme)
-                .workload(Workload::UpdateHeavy)
-                .records(64)
-                .value_size(64)
-                .seed(0xC0FFEE)
-                .clients(3)
-                .ops_per_client(150)
-                .warmup(0)
-                .run()
-                .stats
-        };
-        let a = run();
-        let b = run();
-        assert_eq!(a.ops, b.ops, "{scheme:?}");
-        assert_eq!(a.duration_ns, b.duration_ns, "{scheme:?}");
-        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes, "{scheme:?}");
-        assert_eq!(a.server_cpu_busy_ns, b.server_cpu_busy_ns, "{scheme:?}");
-        assert!(a.ops == 3 * 150, "{scheme:?}: all ops measured with warmup 0");
+    for shards in SHARD_COUNTS {
+        for scheme in Scheme::ALL {
+            let run = || {
+                Cluster::builder()
+                    .scheme(scheme)
+                    .shards(shards)
+                    .workload(Workload::UpdateHeavy)
+                    .records(64)
+                    .value_size(64)
+                    .seed(0xC0FFEE)
+                    .clients(3)
+                    .ops_per_client(150)
+                    .warmup(0)
+                    .run()
+                    .stats
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a.ops, b.ops, "{scheme:?}/{shards}");
+            assert_eq!(a.duration_ns, b.duration_ns, "{scheme:?}/{shards}");
+            assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes, "{scheme:?}/{shards}");
+            assert_eq!(a.server_cpu_busy_ns, b.server_cpu_busy_ns, "{scheme:?}/{shards}");
+            assert!(a.ops == 3 * 150, "{scheme:?}/{shards}: all ops measured with warmup 0");
+        }
+    }
+}
+
+/// Per-shard crash/recovery restores a consistent version on the crashed
+/// shard and does not touch the others (the acceptance scenario).
+#[test]
+fn per_shard_crash_recovery_is_isolated() {
+    let mut db = Cluster::builder()
+        .scheme(Scheme::Erda)
+        .shards(4)
+        .records(32)
+        .value_size(VALUE)
+        .preload(32, VALUE)
+        .build_db();
+
+    let torn_key = key_of(5);
+    let crashed = db.shard_of_key(&torn_key);
+    db.crash_during_put(&torn_key, &vec![0xEEu8; VALUE], 1).unwrap();
+
+    // Write a fresh value on some *other* shard; the crash must not eat it.
+    let other_key = (0..32u64)
+        .map(key_of)
+        .find(|k| db.shard_of_key(k) != crashed)
+        .expect("32 keys span 4 shards");
+    db.put(&other_key, &vec![0x99u8; VALUE]).unwrap();
+
+    db.crash_shard(crashed).unwrap();
+    let report = db.recover_shard(crashed).unwrap();
+    assert_eq!(report.entries_rolled_back, 1, "{report:?}");
+
+    assert_eq!(db.get(&torn_key).unwrap(), Some(vec![0xA5u8; VALUE]), "rolled back");
+    assert_eq!(
+        db.get(&other_key).unwrap(),
+        Some(vec![0x99u8; VALUE]),
+        "surviving shards keep uncommitted-elsewhere state"
+    );
+    for i in 0..32u64 {
+        let k = key_of(i);
+        if k != torn_key && k != other_key {
+            assert_eq!(db.get(&k).unwrap(), Some(vec![0xA5u8; VALUE]), "bystander {i}");
+        }
     }
 }
