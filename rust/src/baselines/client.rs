@@ -1,17 +1,25 @@
-//! Baseline client actors (§5.1).
+//! Baseline clients (§5.1).
 //!
 //! Redo Logging: writes and reads both ride RDMA send and are served by the
 //! server CPU. Read After Write: writes obtain a ring-buffer address, push
 //! the object with a one-sided write, then issue the persistence-forcing
 //! RDMA read (the extra round trip the paper eliminates); reads are
 //! identical to Redo Logging.
+//!
+//! Like the Erda client, the per-op state machine is factored into
+//! [`begin_op`]/[`advance_op`] (crate-internal) so the closed-loop
+//! [`BaselineClient`] here and the windowed
+//! [`crate::store::pipeline::PipelinedClient`] drive the same protocol.
 
 use super::server::{BaselineWorld, Scheme};
 use crate::log::{object, LogOffset};
 use crate::sim::{Actor, Step, Time};
+use crate::store::pipeline::OpOutcome;
 use crate::store::{OpSource, Request};
 
-enum St {
+/// Per-op protocol state. `start` is the op's latency clock origin: issue
+/// time for closed-loop ops, arrival time for open-loop ops.
+pub(crate) enum St {
     NextOp,
     /// Redo write / delete / read: single two-sided exchange; mutation (or
     /// read resolution) happens at the completion step.
@@ -25,7 +33,168 @@ enum St {
     Dead,
 }
 
-/// One simulated baseline client thread (closed loop).
+fn issue_redo_write(
+    w: &mut BaselineWorld,
+    key: Vec<u8>,
+    value: Vec<u8>,
+    start: Time,
+    now: Time,
+) -> OpOutcome<St> {
+    let t = w.fabric.timing.clone();
+    let obj_len = object::wire_size(key.len(), value.len());
+    // Server: verify integrity (per byte), persist the redo record
+    // (NVM latency), bookkeeping.
+    let svc = t.cpu_request_fixed
+        + t.cpu_baseline_write
+        + t.cpu_hash_op
+        + t.cpu_bytes(obj_len)
+        + t.nvm_write(obj_len);
+    let arrival = w.fabric.one_way(now, obj_len);
+    let resv = w.cpu.reserve(arrival, svc);
+    let done = resv.end + t.two_sided_rtt / 2;
+    w.fabric.note_two_sided(obj_len, 16);
+    OpOutcome::Continue(St::RedoWrite { key, value, start }, done)
+}
+
+fn issue_raw_addr_req(
+    w: &mut BaselineWorld,
+    key: Vec<u8>,
+    value: Vec<u8>,
+    start: Time,
+    now: Time,
+    crash_chunks: Option<usize>,
+) -> OpOutcome<St> {
+    let t = w.fabric.timing.clone();
+    let svc = t.cpu_request_fixed + t.cpu_hash_op;
+    let arrival = w.fabric.one_way(now, key.len() + 16);
+    let resv = w.cpu.reserve(arrival, svc);
+    let done = resv.end + t.two_sided_rtt / 2;
+    w.fabric.note_two_sided(key.len() + 16, 16);
+    OpOutcome::Continue(St::RawAddrReply { key, value, start, crash_chunks }, done)
+}
+
+/// Start one operation at `now`; the op's latency clock runs from `start`.
+pub(crate) fn begin_op(
+    w: &mut BaselineWorld,
+    op: Request,
+    start: Time,
+    now: Time,
+) -> OpOutcome<St> {
+    let t = w.fabric.timing.clone();
+    match op {
+        Request::Get { key } => {
+            // Send; server searches staging, then hash table + dest.
+            let resp = object::wire_size(key.len(), w.server.slot_size);
+            let svc = t.cpu_request_fixed
+                + t.cpu_log_search
+                + t.cpu_hash_op
+                + t.cpu_bytes(w.server.slot_size);
+            let arrival = w.fabric.one_way(now, key.len() + 16);
+            let resv = w.cpu.reserve(arrival, svc);
+            let done = resv.end + t.two_sided_rtt / 2 + t.wire(resp);
+            w.fabric.note_two_sided(key.len() + 16, resp);
+            OpOutcome::Continue(St::Read { key, start }, done)
+        }
+        Request::Put { key, value } => match w.server.scheme {
+            Scheme::RedoLogging => issue_redo_write(w, key, value, start, now),
+            Scheme::ReadAfterWrite => issue_raw_addr_req(w, key, value, start, now, None),
+        },
+        Request::Delete { key } => {
+            let svc = t.cpu_request_fixed + t.cpu_hash_op;
+            let arrival = w.fabric.one_way(now, key.len() + 16);
+            let resv = w.cpu.reserve(arrival, svc);
+            let done = resv.end + t.two_sided_rtt / 2;
+            w.fabric.note_two_sided(key.len() + 16, 16);
+            OpOutcome::Continue(St::Delete { key, start }, done)
+        }
+        Request::CrashDuringPut { key, value, chunks } => match w.server.scheme {
+            // Redo: the send either arrives whole or not at all (two-
+            // sided messages are CPU-verified); model "not at all".
+            Scheme::RedoLogging => OpOutcome::Crashed,
+            Scheme::ReadAfterWrite => {
+                issue_raw_addr_req(w, key, value, start, now, Some(chunks))
+            }
+        },
+    }
+}
+
+/// Advance an in-flight op whose pending verb completed at `now`.
+pub(crate) fn advance_op(w: &mut BaselineWorld, st: St, now: Time) -> OpOutcome<St> {
+    match st {
+        St::NextOp | St::Dead => unreachable!("not an in-flight op state"),
+
+        St::RedoWrite { key, value, start } => {
+            w.server.redo_write(&mut w.nvm, &key, &value).expect("hash table full");
+            OpOutcome::Finished { start, cleaning: false }
+        }
+
+        St::Read { key, start } => {
+            if w.server.read(&w.nvm, &key).is_none() {
+                w.counters.read_misses += 1;
+            }
+            OpOutcome::Finished { start, cleaning: false }
+        }
+
+        St::Delete { key, start } => {
+            w.server.delete(&mut w.nvm, &key);
+            OpOutcome::Finished { start, cleaning: false }
+        }
+
+        St::RawAddrReply { key, value, start, crash_chunks } => {
+            // Ring-buffer backpressure: no free slot until the applier
+            // drains — poll again shortly (client-visible stall).
+            if w.server.pending_len() >= w.server.ring_cap {
+                return OpOutcome::Continue(
+                    St::RawAddrReply { key, value, start, crash_chunks },
+                    now + 20_000,
+                );
+            }
+            let obj = object::encode_object(&key, &value);
+            let staged_off = w.server.raw_reserve(&mut w.nvm, obj.len());
+            let addr = w.server.staging.addr_of(staged_off);
+            match crash_chunks {
+                Some(chunks) => {
+                    let BaselineWorld { nvm, fabric, .. } = w;
+                    fabric.post_write_partial(now, nvm, addr, &obj, chunks);
+                    OpOutcome::Crashed
+                }
+                None => {
+                    let ack = w.fabric.write_done(now, obj.len());
+                    {
+                        let BaselineWorld { nvm, fabric, .. } = w;
+                        fabric.post_write(now, nvm, addr, &obj);
+                    }
+                    OpOutcome::Continue(
+                        St::RawWriteAck { key, value, staged_off, len: obj.len() as u32, start },
+                        ack,
+                    )
+                }
+            }
+        }
+
+        St::RawWriteAck { key, value, staged_off, len, start } => {
+            // The read-after-write: forces the NIC cache into the ADR
+            // domain (the extra round trip Erda eliminates).
+            let done = w.fabric.read_done(now, 8);
+            OpOutcome::Continue(St::RawFlushDone { key, value, staged_off, len, start }, done)
+        }
+
+        St::RawFlushDone { key, value, staged_off, len, start } => {
+            // Persistence-forcing read completed: flush staged bytes and
+            // hand the record to the polling applier.
+            {
+                let BaselineWorld { nvm, fabric, .. } = w;
+                fabric.flush(now, nvm);
+            }
+            w.server
+                .raw_commit(&mut w.nvm, &key, &value, staged_off, len)
+                .expect("hash table full");
+            OpOutcome::Finished { start, cleaning: false }
+        }
+    }
+}
+
+/// One simulated baseline client thread (closed loop: one op in flight).
 pub struct BaselineClient {
     src: OpSource,
     ops_left: u64,
@@ -42,171 +211,43 @@ impl BaselineClient {
         self.st = St::Dead;
         Step::Done
     }
-
-    fn complete(&mut self, w: &mut BaselineWorld, start: Time, now: Time) -> Step {
-        w.counters.record_op(start, now, false);
-        self.ops_left = self.ops_left.saturating_sub(1);
-        if self.ops_left == 0 {
-            return self.die(w);
-        }
-        self.st = St::NextOp;
-        Step::At(now)
-    }
-
-    fn start_op(&mut self, w: &mut BaselineWorld, now: Time) -> Step {
-        let op = match self.src.next() {
-            Some(op) => op,
-            None => return self.die(w),
-        };
-        let t = w.fabric.timing.clone();
-        match op {
-            Request::Get { key } => {
-                // Send; server searches staging, then hash table + dest.
-                let resp = object::wire_size(key.len(), w.server.slot_size);
-                let svc = t.cpu_request_fixed + t.cpu_log_search + t.cpu_hash_op
-                    + t.cpu_bytes(w.server.slot_size);
-                let arrival = w.fabric.one_way(now, key.len() + 16);
-                let resv = w.cpu.reserve(arrival, svc);
-                let done = resv.end + t.two_sided_rtt / 2 + t.wire(resp);
-                w.fabric.note_two_sided(key.len() + 16, resp);
-                self.st = St::Read { key, start: now };
-                Step::At(done)
-            }
-            Request::Put { key, value } => match w.server.scheme {
-                Scheme::RedoLogging => self.issue_redo_write(w, key, value, now),
-                Scheme::ReadAfterWrite => self.issue_raw_addr_req(w, key, value, now, None),
-            },
-            Request::Delete { key } => {
-                let svc = t.cpu_request_fixed + t.cpu_hash_op;
-                let arrival = w.fabric.one_way(now, key.len() + 16);
-                let resv = w.cpu.reserve(arrival, svc);
-                let done = resv.end + t.two_sided_rtt / 2;
-                w.fabric.note_two_sided(key.len() + 16, 16);
-                self.st = St::Delete { key, start: now };
-                Step::At(done)
-            }
-            Request::CrashDuringPut { key, value, chunks } => match w.server.scheme {
-                // Redo: the send either arrives whole or not at all (two-
-                // sided messages are CPU-verified); model "not at all".
-                Scheme::RedoLogging => self.die(w),
-                Scheme::ReadAfterWrite => {
-                    self.issue_raw_addr_req(w, key, value, now, Some(chunks))
-                }
-            },
-        }
-    }
-
-    fn issue_redo_write(&mut self, w: &mut BaselineWorld, key: Vec<u8>, value: Vec<u8>, now: Time) -> Step {
-        let t = w.fabric.timing.clone();
-        let obj_len = object::wire_size(key.len(), value.len());
-        // Server: verify integrity (per byte), persist the redo record
-        // (NVM latency), bookkeeping.
-        let svc = t.cpu_request_fixed + t.cpu_baseline_write + t.cpu_hash_op
-            + t.cpu_bytes(obj_len) + t.nvm_write(obj_len);
-        let arrival = w.fabric.one_way(now, obj_len);
-        let resv = w.cpu.reserve(arrival, svc);
-        let done = resv.end + t.two_sided_rtt / 2;
-        w.fabric.note_two_sided(obj_len, 16);
-        self.st = St::RedoWrite { key, value, start: now };
-        Step::At(done)
-    }
-
-    fn issue_raw_addr_req(
-        &mut self,
-        w: &mut BaselineWorld,
-        key: Vec<u8>,
-        value: Vec<u8>,
-        now: Time,
-        crash_chunks: Option<usize>,
-    ) -> Step {
-        let t = w.fabric.timing.clone();
-        let svc = t.cpu_request_fixed + t.cpu_hash_op;
-        let arrival = w.fabric.one_way(now, key.len() + 16);
-        let resv = w.cpu.reserve(arrival, svc);
-        let done = resv.end + t.two_sided_rtt / 2;
-        w.fabric.note_two_sided(key.len() + 16, 16);
-        self.st = St::RawAddrReply { key, value, start: now, crash_chunks };
-        Step::At(done)
-    }
 }
 
 impl Actor<BaselineWorld> for BaselineClient {
     fn step(&mut self, w: &mut BaselineWorld, now: Time) -> Step {
         match std::mem::replace(&mut self.st, St::Dead) {
-            St::NextOp => self.start_op(w, now),
-
-            St::RedoWrite { key, value, start } => {
-                w.server.redo_write(&mut w.nvm, &key, &value).expect("hash table full");
-                self.complete(w, start, now)
-            }
-
-            St::Read { key, start } => {
-                if w.server.read(&w.nvm, &key).is_none() {
-                    w.counters.read_misses += 1;
-                }
-                self.complete(w, start, now)
-            }
-
-            St::Delete { key, start } => {
-                w.server.delete(&mut w.nvm, &key);
-                self.complete(w, start, now)
-            }
-
-            St::RawAddrReply { key, value, start, crash_chunks } => {
-                // Ring-buffer backpressure: no free slot until the applier
-                // drains — poll again shortly (client-visible stall).
-                if w.server.pending_len() >= w.server.ring_cap {
-                    self.st = St::RawAddrReply { key, value, start, crash_chunks };
-                    return Step::At(now + 20_000);
-                }
-                let obj = object::encode_object(&key, &value);
-                let staged_off = w.server.raw_reserve(&mut w.nvm, obj.len());
-                let addr = w.server.staging.addr_of(staged_off);
-                match crash_chunks {
-                    Some(chunks) => {
-                        let BaselineWorld { nvm, fabric, .. } = w;
-                        fabric.post_write_partial(now, nvm, addr, &obj, chunks);
-                        self.die(w)
+            St::NextOp => {
+                let op = match self.src.next() {
+                    Some(op) => op,
+                    None => return self.die(w),
+                };
+                match begin_op(w, op, now, now) {
+                    OpOutcome::Continue(st, at) => {
+                        self.st = st;
+                        Step::At(at)
                     }
-                    None => {
-                        let ack = w.fabric.write_done(now, obj.len());
-                        {
-                            let BaselineWorld { nvm, fabric, .. } = w;
-                            fabric.post_write(now, nvm, addr, &obj);
-                        }
-                        self.st = St::RawWriteAck {
-                            key,
-                            value,
-                            staged_off,
-                            len: obj.len() as u32,
-                            start,
-                        };
-                        Step::At(ack)
-                    }
+                    // Redo's CrashDuringPut never leaves the client.
+                    OpOutcome::Crashed => self.die(w),
+                    OpOutcome::Finished { .. } => unreachable!("ops span at least one verb"),
                 }
             }
-
-            St::RawWriteAck { key, value, staged_off, len, start } => {
-                // The read-after-write: forces the NIC cache into the ADR
-                // domain (the extra round trip Erda eliminates).
-                let done = w.fabric.read_done(now, 8);
-                self.st = St::RawFlushDone { key, value, staged_off, len, start };
-                Step::At(done)
-            }
-
-            St::RawFlushDone { key, value, staged_off, len, start } => {
-                // Persistence-forcing read completed: flush staged bytes and
-                // hand the record to the polling applier.
-                {
-                    let BaselineWorld { nvm, fabric, .. } = w;
-                    fabric.flush(now, nvm);
-                }
-                w.server.raw_commit(&mut w.nvm, &key, &value, staged_off, len)
-                    .expect("hash table full");
-                self.complete(w, start, now)
-            }
-
             St::Dead => Step::Done,
+            st => match advance_op(w, st, now) {
+                OpOutcome::Continue(st, at) => {
+                    self.st = st;
+                    Step::At(at)
+                }
+                OpOutcome::Finished { start, cleaning: _ } => {
+                    w.counters.record_op(start, now, false);
+                    self.ops_left = self.ops_left.saturating_sub(1);
+                    if self.ops_left == 0 {
+                        return self.die(w);
+                    }
+                    self.st = St::NextOp;
+                    Step::At(now)
+                }
+                OpOutcome::Crashed => self.die(w),
+            },
         }
     }
 }

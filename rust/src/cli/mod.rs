@@ -5,9 +5,14 @@
 //! repro figures --fig 18 [--quick] [--out DIR]  one figure (14..26)
 //! repro figures --table 1 [--out DIR]           Table 1
 //! repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
+//!             [--window W] [--arrival-rate R | --fixed-rate R]
 //!                                               facade end-to-end smoke run
-//! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR]
+//! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
 //!                                               shard-count throughput sweep
+//! repro window [--windows 1,2,4,8,16] [--quick] [--out DIR] [--json FILE]
+//!                                               in-flight-window sweep
+//! repro bench-gate --baseline F --current F [--tolerance 0.10]
+//!                                               benchmark regression gate
 //! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
 //! repro verify-runtime                          artifact self-check
 //! repro help
@@ -18,16 +23,31 @@ use std::path::PathBuf;
 use crate::error::{anyhow, bail, Result};
 use crate::figures::{self, Fidelity};
 use crate::store::Scheme;
+use crate::ycsb::Arrival;
 
 /// Parsed command line.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Cmd {
     Figures { ids: Vec<String>, fidelity: Fidelity, out: Option<PathBuf> },
     /// Exercise the `store` facade end-to-end for one scheme, over one or
-    /// more shards.
-    Smoke { scheme: Scheme, seed: u64, shards: usize },
+    /// more shards, optionally with a windowed / open-loop client pipeline.
+    Smoke { scheme: Scheme, seed: u64, shards: usize, window: usize, arrival: Arrival },
     /// Scale-out sweep: throughput vs shard count for all three schemes.
-    Scaling { shards: Vec<usize>, fidelity: Fidelity, out: Option<PathBuf> },
+    Scaling {
+        shards: Vec<usize>,
+        fidelity: Fidelity,
+        out: Option<PathBuf>,
+        json: Option<PathBuf>,
+    },
+    /// In-flight-window sweep: throughput/p99 vs window for all schemes.
+    Window {
+        windows: Vec<usize>,
+        fidelity: Fidelity,
+        out: Option<PathBuf>,
+        json: Option<PathBuf>,
+    },
+    /// Compare a benchmark JSON artifact against a committed baseline.
+    BenchGate { baseline: PathBuf, current: PathBuf, tolerance: f64 },
     Recover,
     VerifyRuntime,
     Help,
@@ -76,6 +96,8 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let mut scheme = None;
             let mut seed: u64 = 0xE2DA;
             let mut shards: usize = 1;
+            let mut window: usize = 1;
+            let mut arrival = Arrival::Closed;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--scheme" => match it.next() {
@@ -99,11 +121,40 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         }
                         None => bail!("--shards needs a number"),
                     },
+                    "--window" => match it.next() {
+                        Some(v) => {
+                            window = v.parse::<usize>()?;
+                            if window == 0 {
+                                bail!("--window must be at least 1");
+                            }
+                        }
+                        None => bail!("--window needs a number"),
+                    },
+                    "--arrival-rate" => match it.next() {
+                        Some(v) => {
+                            let rate = v.parse::<f64>()?;
+                            if !rate.is_finite() || rate <= 0.0 {
+                                bail!("--arrival-rate must be positive");
+                            }
+                            arrival = Arrival::Poisson { rate };
+                        }
+                        None => bail!("--arrival-rate needs ops/s per client"),
+                    },
+                    "--fixed-rate" => match it.next() {
+                        Some(v) => {
+                            let rate = v.parse::<f64>()?;
+                            if !rate.is_finite() || rate <= 0.0 {
+                                bail!("--fixed-rate must be positive");
+                            }
+                            arrival = Arrival::Fixed { rate };
+                        }
+                        None => bail!("--fixed-rate needs ops/s per client"),
+                    },
                     other => bail!("unknown smoke flag {other:?}"),
                 }
             }
             match scheme {
-                Some(scheme) => Ok(Cmd::Smoke { scheme, seed, shards }),
+                Some(scheme) => Ok(Cmd::Smoke { scheme, seed, shards, window, arrival }),
                 None => bail!("smoke: pass --scheme erda|redo|raw"),
             }
         }
@@ -111,6 +162,7 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let mut shards: Vec<usize> = figures::SHARD_SWEEP.to_vec();
             let mut fidelity = Fidelity::Full;
             let mut out = None;
+            let mut json = None;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--shards" => match it.next() {
@@ -130,10 +182,80 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         Some(v) => out = Some(PathBuf::from(v)),
                         None => bail!("--out needs a directory"),
                     },
+                    "--json" => match it.next() {
+                        Some(v) => json = Some(PathBuf::from(v)),
+                        None => bail!("--json needs a file path"),
+                    },
                     other => bail!("unknown scaling flag {other:?}"),
                 }
             }
-            Ok(Cmd::Scaling { shards, fidelity, out })
+            Ok(Cmd::Scaling { shards, fidelity, out, json })
+        }
+        "window" => {
+            let mut windows: Vec<usize> = figures::WINDOW_SWEEP.to_vec();
+            let mut fidelity = Fidelity::Full;
+            let mut out = None;
+            let mut json = None;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--windows" => match it.next() {
+                        Some(v) => {
+                            windows = v
+                                .split(',')
+                                .map(|s| s.trim().parse::<usize>())
+                                .collect::<Result<Vec<_>, _>>()?;
+                            if windows.is_empty() || windows.contains(&0) {
+                                bail!("--windows needs a comma list of sizes ≥ 1");
+                            }
+                        }
+                        None => bail!("--windows needs a comma list, e.g. 1,2,4,8,16"),
+                    },
+                    "--quick" => fidelity = Fidelity::Quick,
+                    "--out" => match it.next() {
+                        Some(v) => out = Some(PathBuf::from(v)),
+                        None => bail!("--out needs a directory"),
+                    },
+                    "--json" => match it.next() {
+                        Some(v) => json = Some(PathBuf::from(v)),
+                        None => bail!("--json needs a file path"),
+                    },
+                    other => bail!("unknown window flag {other:?}"),
+                }
+            }
+            Ok(Cmd::Window { windows, fidelity, out, json })
+        }
+        "bench-gate" => {
+            let mut baseline = None;
+            let mut current = None;
+            let mut tolerance = 0.10;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--baseline" => match it.next() {
+                        Some(v) => baseline = Some(PathBuf::from(v)),
+                        None => bail!("--baseline needs a file path"),
+                    },
+                    "--current" => match it.next() {
+                        Some(v) => current = Some(PathBuf::from(v)),
+                        None => bail!("--current needs a file path"),
+                    },
+                    "--tolerance" => match it.next() {
+                        Some(v) => {
+                            tolerance = v.parse::<f64>()?;
+                            if !(0.0..1.0).contains(&tolerance) {
+                                bail!("--tolerance must be in [0, 1)");
+                            }
+                        }
+                        None => bail!("--tolerance needs a fraction, e.g. 0.10"),
+                    },
+                    other => bail!("unknown bench-gate flag {other:?}"),
+                }
+            }
+            match (baseline, current) {
+                (Some(baseline), Some(current)) => {
+                    Ok(Cmd::BenchGate { baseline, current, tolerance })
+                }
+                _ => bail!("bench-gate: pass --baseline FILE and --current FILE"),
+            }
         }
         "recover" => Ok(Cmd::Recover),
         "verify-runtime" => Ok(Cmd::VerifyRuntime),
@@ -151,13 +273,29 @@ USAGE:
   repro figures --table 1 [--out DIR]         Table 1 (NVM writes per op)
   repro figures --ablations [--out DIR]       design-choice ablations (A1–A4)
   repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
+              [--window W] [--arrival-rate R | --fixed-rate R]
                                               exercise the store facade end to
                                               end (typed KV ops + a DES run,
                                               optionally over N key-space
-                                              shards); deterministic in --seed
-  repro scaling [--shards 1,2,4,8] [--quick] [--out DIR]
+                                              shards, with a W-deep in-flight
+                                              pipeline and an open-loop
+                                              Poisson/fixed arrival process at
+                                              R ops/s per client);
+                                              deterministic in --seed
+  repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
                                               scale-out sweep: throughput vs
                                               shard count, all three schemes
+  repro window [--windows 1,2,4,8,16] [--quick] [--out DIR] [--json FILE]
+                                              pipelining sweep: throughput and
+                                              p99 latency vs in-flight window,
+                                              all three schemes (window = 1
+                                              reproduces the closed-loop runs
+                                              bit for bit)
+  repro bench-gate --baseline FILE --current FILE [--tolerance 0.10]
+                                              compare a benchmark JSON artifact
+                                              against a committed baseline;
+                                              fails on Erda throughput
+                                              regressions beyond the tolerance
   repro recover                               crash-recovery demo (PJRT batch verify)
   repro verify-runtime                        check AOT artifacts against local CRC
   repro help                                  this text
@@ -212,15 +350,57 @@ mod tests {
     fn parses_smoke() {
         assert_eq!(
             p("smoke --scheme erda").unwrap(),
-            Cmd::Smoke { scheme: Scheme::Erda, seed: 0xE2DA, shards: 1 }
+            Cmd::Smoke {
+                scheme: Scheme::Erda,
+                seed: 0xE2DA,
+                shards: 1,
+                window: 1,
+                arrival: Arrival::Closed
+            }
         );
         assert_eq!(
             p("smoke --scheme raw --seed 7").unwrap(),
-            Cmd::Smoke { scheme: Scheme::ReadAfterWrite, seed: 7, shards: 1 }
+            Cmd::Smoke {
+                scheme: Scheme::ReadAfterWrite,
+                seed: 7,
+                shards: 1,
+                window: 1,
+                arrival: Arrival::Closed
+            }
         );
         assert_eq!(
             p("smoke --seed 9 --scheme redo --shards 4").unwrap(),
-            Cmd::Smoke { scheme: Scheme::RedoLogging, seed: 9, shards: 4 }
+            Cmd::Smoke {
+                scheme: Scheme::RedoLogging,
+                seed: 9,
+                shards: 4,
+                window: 1,
+                arrival: Arrival::Closed
+            }
+        );
+    }
+
+    #[test]
+    fn parses_windowed_open_loop_smoke() {
+        assert_eq!(
+            p("smoke --scheme erda --shards 2 --window 8 --arrival-rate 20000").unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::Erda,
+                seed: 0xE2DA,
+                shards: 2,
+                window: 8,
+                arrival: Arrival::Poisson { rate: 20000.0 }
+            }
+        );
+        assert_eq!(
+            p("smoke --scheme redo --window 4 --fixed-rate 5000").unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::RedoLogging,
+                seed: 0xE2DA,
+                shards: 1,
+                window: 4,
+                arrival: Arrival::Fixed { rate: 5000.0 }
+            }
         );
     }
 
@@ -233,6 +413,10 @@ mod tests {
         assert!(p("smoke --scheme erda --bogus").is_err());
         assert!(p("smoke --scheme erda --shards 0").is_err());
         assert!(p("smoke --scheme erda --shards two").is_err());
+        assert!(p("smoke --scheme erda --window 0").is_err());
+        assert!(p("smoke --scheme erda --arrival-rate 0").is_err());
+        assert!(p("smoke --scheme erda --arrival-rate -5").is_err());
+        assert!(p("smoke --scheme erda --fixed-rate nope").is_err());
     }
 
     #[test]
@@ -242,15 +426,17 @@ mod tests {
             Cmd::Scaling {
                 shards: figures::SHARD_SWEEP.to_vec(),
                 fidelity: Fidelity::Full,
-                out: None
+                out: None,
+                json: None,
             }
         );
         assert_eq!(
-            p("scaling --shards 1,2,4 --quick --out results").unwrap(),
+            p("scaling --shards 1,2,4 --quick --out results --json BENCH_scaling.json").unwrap(),
             Cmd::Scaling {
                 shards: vec![1, 2, 4],
                 fidelity: Fidelity::Quick,
                 out: Some(PathBuf::from("results")),
+                json: Some(PathBuf::from("BENCH_scaling.json")),
             }
         );
     }
@@ -261,5 +447,55 @@ mod tests {
         assert!(p("scaling --shards 1,zero").is_err());
         assert!(p("scaling --shards 0,2").is_err());
         assert!(p("scaling --bogus").is_err());
+        assert!(p("scaling --json").is_err());
+    }
+
+    #[test]
+    fn parses_window_sweep() {
+        assert_eq!(
+            p("window").unwrap(),
+            Cmd::Window {
+                windows: figures::WINDOW_SWEEP.to_vec(),
+                fidelity: Fidelity::Full,
+                out: None,
+                json: None,
+            }
+        );
+        assert_eq!(
+            p("window --windows 1,4,16 --quick --json BENCH_window.json").unwrap(),
+            Cmd::Window {
+                windows: vec![1, 4, 16],
+                fidelity: Fidelity::Quick,
+                out: None,
+                json: Some(PathBuf::from("BENCH_window.json")),
+            }
+        );
+        assert!(p("window --windows 0,2").is_err());
+        assert!(p("window --windows").is_err());
+        assert!(p("window --bogus").is_err());
+    }
+
+    #[test]
+    fn parses_bench_gate() {
+        assert_eq!(
+            p("bench-gate --baseline ci/baselines/BENCH_scaling.json --current BENCH_scaling.json")
+                .unwrap(),
+            Cmd::BenchGate {
+                baseline: PathBuf::from("ci/baselines/BENCH_scaling.json"),
+                current: PathBuf::from("BENCH_scaling.json"),
+                tolerance: 0.10,
+            }
+        );
+        assert_eq!(
+            p("bench-gate --baseline a.json --current b.json --tolerance 0.25").unwrap(),
+            Cmd::BenchGate {
+                baseline: PathBuf::from("a.json"),
+                current: PathBuf::from("b.json"),
+                tolerance: 0.25,
+            }
+        );
+        assert!(p("bench-gate --baseline a.json").is_err(), "current is required");
+        assert!(p("bench-gate --current b.json").is_err(), "baseline is required");
+        assert!(p("bench-gate --baseline a --current b --tolerance 1.5").is_err());
     }
 }

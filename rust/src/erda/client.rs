@@ -1,4 +1,4 @@
-//! The Erda client actor: the protocol state machine of §3.3/§4.2/§4.3.
+//! The Erda client: the protocol state machine of §3.3/§4.2/§4.3.
 //!
 //! Normal mode:
 //! * **Read** = two one-sided RDMA reads (hash-entry neighborhood, then the
@@ -17,10 +17,17 @@
 //! Failure injection: a scripted [`Request::CrashDuringPut`] posts only a
 //! prefix of the object's chunks and kills the client, leaving a torn
 //! object for other clients (and recovery) to detect.
+//!
+//! The per-op state machine is factored into [`begin_op`]/[`advance_op`]
+//! (crate-internal), consumed by two actors: the closed-loop [`ErdaClient`]
+//! here (one op in flight — the paper's client model) and the windowed
+//! [`crate::store::pipeline::PipelinedClient`], which keeps several of
+//! these state machines in flight at once.
 
 use super::server::ErdaWorld;
 use crate::log::{object, HeadId, LogOffset, NO_OFFSET};
 use crate::sim::{Actor, Step, Time};
+use crate::store::pipeline::OpOutcome;
 use crate::store::{OpSource, Request};
 
 /// Client tunables.
@@ -40,7 +47,10 @@ impl Default for ClientConfig {
     }
 }
 
-enum St {
+/// Per-op protocol state. `start` is the op's latency clock origin: issue
+/// time for closed-loop ops, arrival time for open-loop ops (queueing
+/// counts).
+pub(crate) enum St {
     NextOp,
     /// Waiting for the entry-neighborhood RDMA read to complete.
     EntryRead { key: Vec<u8>, retries: u32, start: Time, cleaning: bool },
@@ -68,7 +78,275 @@ enum St {
     Dead,
 }
 
-/// One simulated client thread (closed loop).
+/// Issue the entry-neighborhood read (first hop of the read path).
+fn issue_entry_read(
+    w: &mut ErdaWorld,
+    key: Vec<u8>,
+    retries: u32,
+    start: Time,
+    now: Time,
+    cleaning: bool,
+) -> OpOutcome<St> {
+    let (_, len) = w.server.neighborhood_addr(&key);
+    let done = w.fabric.read_done(now, len);
+    OpOutcome::Continue(St::EntryRead { key, retries, start, cleaning }, done)
+}
+
+/// Issue the object read at `(head, off)`.
+#[allow(clippy::too_many_arguments)]
+fn issue_object_read(
+    cfg: &ClientConfig,
+    w: &mut ErdaWorld,
+    key: Vec<u8>,
+    head: HeadId,
+    off: LogOffset,
+    fallback: Option<LogOffset>,
+    retries: u32,
+    start: Time,
+    now: Time,
+    cleaning: bool,
+) -> OpOutcome<St> {
+    let window = object::wire_size(key.len(), cfg.max_value).min(w.server.log.window(off));
+    let done = w.fabric.read_done(now, window);
+    OpOutcome::Continue(
+        St::ObjectRead { key, head, off, fallback, retries, start, window, cleaning },
+        done,
+    )
+}
+
+/// Write path step 1: write_with_imm metadata request (§3.3).
+fn issue_write_request(
+    w: &mut ErdaWorld,
+    key: Vec<u8>,
+    obj: Vec<u8>,
+    start: Time,
+    now: Time,
+    crash_chunks: Option<usize>,
+) -> OpOutcome<St> {
+    let t = &w.fabric.timing;
+    let req = key.len() + 16; // key + length + imm identifier
+    let svc = t.cpu_erda_write;
+    let arrival = w.fabric.one_way(now, req);
+    let resv = w.cpu.reserve(arrival, svc);
+    let done = resv.end + w.fabric.timing.two_sided_rtt / 2;
+    w.fabric.note_two_sided(req, 16);
+    OpOutcome::Continue(St::WriteReply { key, obj, start, crash_chunks }, done)
+}
+
+/// Start one operation: post its first verb(s) at `now`; the op's latency
+/// clock runs from `start` (== `now` for closed-loop clients).
+pub(crate) fn begin_op(
+    cfg: &ClientConfig,
+    w: &mut ErdaWorld,
+    op: Request,
+    start: Time,
+    now: Time,
+) -> OpOutcome<St> {
+    let t = &w.fabric.timing;
+    match op {
+        Request::Get { key } => {
+            let h = super::head_of(&key, w.server.num_heads());
+            if w.server.is_cleaning(h) {
+                // §4.4: two-sided send path during cleaning.
+                let svc = t.cpu_request_fixed
+                    + t.cpu_log_search
+                    + t.cpu_hash_op
+                    + t.cpu_bytes(cfg.max_value);
+                let arrival = w.fabric.one_way(now, key.len() + 16);
+                let resv = w.cpu.reserve(arrival, svc);
+                let resp_wire =
+                    w.fabric.timing.wire(object::wire_size(key.len(), cfg.max_value));
+                let done = resv.end + (w.fabric.timing.two_sided_rtt / 2) + resp_wire;
+                w.fabric.note_two_sided(key.len() + 16, cfg.max_value);
+                OpOutcome::Continue(St::CleanRead { key, start }, done)
+            } else {
+                issue_entry_read(w, key, 0, start, now, false)
+            }
+        }
+        Request::Put { key, value } => {
+            let h = super::head_of(&key, w.server.num_heads());
+            if w.server.is_cleaning(h) {
+                let svc = t.cpu_request_fixed
+                    + t.cpu_baseline_write
+                    + t.cpu_hash_op
+                    + t.cpu_bytes(value.len())
+                    + t.nvm_write(object::wire_size(key.len(), value.len()));
+                let arrival = w.fabric.one_way(now, object::wire_size(key.len(), value.len()));
+                let resv = w.cpu.reserve(arrival, svc);
+                let done = resv.end + w.fabric.timing.two_sided_rtt / 2;
+                w.fabric.note_two_sided(object::wire_size(key.len(), value.len()), 16);
+                OpOutcome::Continue(St::CleanWrite { key, value, deleted: false, start }, done)
+            } else {
+                let obj = object::encode_object(&key, &value);
+                issue_write_request(w, key, obj, start, now, None)
+            }
+        }
+        Request::Delete { key } => {
+            let h = super::head_of(&key, w.server.num_heads());
+            if w.server.is_cleaning(h) {
+                let svc = t.cpu_request_fixed + t.cpu_baseline_write + t.cpu_hash_op;
+                let arrival = w.fabric.one_way(now, key.len() + 16);
+                let resv = w.cpu.reserve(arrival, svc);
+                let done = resv.end + w.fabric.timing.two_sided_rtt / 2;
+                w.fabric.note_two_sided(key.len() + 16, 16);
+                let st = St::CleanWrite { key, value: Vec::new(), deleted: true, start };
+                OpOutcome::Continue(st, done)
+            } else {
+                let obj = object::encode_delete(&key);
+                issue_write_request(w, key, obj, start, now, None)
+            }
+        }
+        Request::CrashDuringPut { key, value, chunks } => {
+            let obj = object::encode_object(&key, &value);
+            issue_write_request(w, key, obj, start, now, Some(chunks))
+        }
+    }
+}
+
+/// Advance an in-flight op whose pending verb completed at `now`.
+pub(crate) fn advance_op(
+    cfg: &ClientConfig,
+    w: &mut ErdaWorld,
+    st: St,
+    now: Time,
+) -> OpOutcome<St> {
+    match st {
+        St::NextOp | St::Dead => unreachable!("not an in-flight op state"),
+
+        St::EntryRead { key, retries, start, cleaning } => {
+            let (addr, len) = w.server.neighborhood_addr(&key);
+            let bytes = {
+                let ErdaWorld { nvm, fabric, .. } = w;
+                fabric.sample(now, nvm, addr, len)
+            };
+            match super::server::ErdaServer::parse_neighborhood(&bytes, &key) {
+                None => {
+                    w.counters.read_misses += 1;
+                    OpOutcome::Finished { start, cleaning }
+                }
+                Some(e) => {
+                    let newest = e.atomic.newest();
+                    if newest == NO_OFFSET {
+                        w.counters.read_misses += 1;
+                        return OpOutcome::Finished { start, cleaning };
+                    }
+                    let fb = match e.atomic.oldest() {
+                        NO_OFFSET => None,
+                        o => Some(o),
+                    };
+                    issue_object_read(
+                        cfg, w, key, e.head_id, newest, fb, retries, start, now, cleaning,
+                    )
+                }
+            }
+        }
+
+        St::ObjectRead { key, head, off, fallback, retries, start, window, cleaning } => {
+            let addr = w.server.log.addr_of(head, off);
+            let bytes = {
+                let ErdaWorld { nvm, fabric, .. } = w;
+                fabric.sample(now, nvm, addr, window)
+            };
+            match object::decode(&bytes) {
+                Ok(v) if v.deleted => {
+                    // A valid delete record: key is absent.
+                    w.counters.read_misses += 1;
+                    OpOutcome::Finished { start, cleaning }
+                }
+                Ok(_) => OpOutcome::Finished { start, cleaning },
+                Err(_) => {
+                    // Torn or not-yet-written object detected by checksum
+                    // — the §4.2 consistency path.
+                    w.counters.inconsistencies += 1;
+                    if let Some(old) = fallback {
+                        w.counters.fallbacks += 1;
+                        // Notify the server (repair message; small send).
+                        let t = &w.fabric.timing;
+                        let svc = t.cpu_request_fixed + t.cpu_hash_op;
+                        let arrival = w.fabric.one_way(now, key.len() + 16);
+                        w.cpu.reserve(arrival, svc);
+                        // The repair is served one way later; chunks that
+                        // persist in between must be visible to its
+                        // still-torn re-check (§4.3 race guard).
+                        {
+                            let ErdaWorld { nvm, fabric, .. } = w;
+                            fabric.flush(arrival, nvm);
+                        }
+                        if w.server.repair(&mut w.nvm, &key, off) {
+                            w.counters.repairs += 1;
+                        }
+                        issue_object_read(
+                            cfg, w, key, head, old, None, retries, start, now, cleaning,
+                        )
+                    } else if retries < cfg.max_retries {
+                        w.counters.retries += 1;
+                        OpOutcome::Continue(
+                            St::RetryWait { key, retries: retries + 1, start, cleaning },
+                            now + cfg.retry_delay,
+                        )
+                    } else {
+                        w.counters.read_misses += 1;
+                        OpOutcome::Finished { start, cleaning }
+                    }
+                }
+            }
+        }
+
+        St::RetryWait { key, retries, start, cleaning } => {
+            issue_entry_read(w, key, retries, start, now, cleaning)
+        }
+
+        St::CleanRead { key, start } => {
+            // Server resolved the read at service time; data returned now.
+            let _ = w.server.local_read(&w.nvm, &key);
+            OpOutcome::Finished { start, cleaning: true }
+        }
+
+        St::CleanWrite { key, value, deleted, start } => {
+            let h = super::head_of(&key, w.server.num_heads());
+            if w.server.is_cleaning(h) {
+                w.server.cleaning_write(&mut w.nvm, &key, &value, deleted);
+            } else {
+                // Cleaning finished while the request was in flight:
+                // serve as a normal server-side append (same effect).
+                let obj = if deleted {
+                    object::encode_delete(&key)
+                } else {
+                    object::encode_object(&key, &value)
+                };
+                let (_, _, addr) = w.server.write_request(&mut w.nvm, &key, obj.len());
+                w.nvm.write(addr, &obj);
+            }
+            OpOutcome::Finished { start, cleaning: true }
+        }
+
+        St::WriteReply { key, obj, start, crash_chunks } => {
+            // Server applied the metadata update at service time; the
+            // reply carries (head, offset) — mutate + post the data now.
+            let (_head, _off, addr) = w.server.write_request(&mut w.nvm, &key, obj.len());
+            match crash_chunks {
+                Some(chunks) => {
+                    let ErdaWorld { nvm, fabric, .. } = w;
+                    fabric.post_write_partial(now, nvm, addr, &obj, chunks);
+                    // Client dies: op never completes, nothing recorded.
+                    OpOutcome::Crashed
+                }
+                None => {
+                    let ack = w.fabric.write_done(now, obj.len());
+                    {
+                        let ErdaWorld { nvm, fabric, .. } = w;
+                        fabric.post_write(now, nvm, addr, &obj);
+                    }
+                    OpOutcome::Continue(St::WriteAck { start, cleaning: false }, ack)
+                }
+            }
+        }
+
+        St::WriteAck { start, cleaning } => OpOutcome::Finished { start, cleaning },
+    }
+}
+
+/// One simulated client thread (closed loop: one op in flight).
 pub struct ErdaClient {
     src: OpSource,
     ops_left: u64,
@@ -87,260 +365,42 @@ impl ErdaClient {
         self.st = St::Dead;
         Step::Done
     }
-
-    /// Op finished: record + loop.
-    fn complete(&mut self, w: &mut ErdaWorld, start: Time, now: Time, cleaning: bool) -> Step {
-        w.counters.record_op(start, now, cleaning);
-        self.ops_left = self.ops_left.saturating_sub(1);
-        if self.ops_left == 0 {
-            return self.die(w);
-        }
-        self.st = St::NextOp;
-        Step::At(now)
-    }
-
-    /// Issue the entry-neighborhood read (first hop of the read path).
-    fn issue_entry_read(&mut self, w: &mut ErdaWorld, key: Vec<u8>, retries: u32, start: Time, now: Time, cleaning: bool) -> Step {
-        let (_, len) = w.server.neighborhood_addr(&key);
-        let done = w.fabric.read_done(now, len);
-        self.st = St::EntryRead { key, retries, start, cleaning };
-        Step::At(done)
-    }
-
-    /// Issue the object read at `(head, off)`.
-    fn issue_object_read(
-        &mut self,
-        w: &mut ErdaWorld,
-        key: Vec<u8>,
-        head: HeadId,
-        off: LogOffset,
-        fallback: Option<LogOffset>,
-        retries: u32,
-        start: Time,
-        now: Time,
-        cleaning: bool,
-    ) -> Step {
-        let window = object::wire_size(key.len(), self.cfg.max_value).min(w.server.log.window(off));
-        let done = w.fabric.read_done(now, window);
-        self.st = St::ObjectRead { key, head, off, fallback, retries, start, window, cleaning };
-        Step::At(done)
-    }
-
-    fn start_op(&mut self, w: &mut ErdaWorld, now: Time) -> Step {
-        let op = match self.src.next() {
-            Some(op) => op,
-            None => return self.die(w),
-        };
-        let t = &w.fabric.timing;
-        match op {
-            Request::Get { key } => {
-                let h = super::head_of(&key, w.server.num_heads());
-                if w.server.is_cleaning(h) {
-                    // §4.4: two-sided send path during cleaning.
-                    let svc = t.cpu_request_fixed + t.cpu_log_search + t.cpu_hash_op
-                        + t.cpu_bytes(self.cfg.max_value);
-                    let arrival = w.fabric.one_way(now, key.len() + 16);
-                    let resv = w.cpu.reserve(arrival, svc);
-                    let resp_wire = w.fabric.timing.wire(object::wire_size(key.len(), self.cfg.max_value));
-                    let done = resv.end + (w.fabric.timing.two_sided_rtt / 2) + resp_wire;
-                    w.fabric.note_two_sided(key.len() + 16, self.cfg.max_value);
-                    self.st = St::CleanRead { key, start: now };
-                    Step::At(done)
-                } else {
-                    self.issue_entry_read(w, key, 0, now, now, false)
-                }
-            }
-            Request::Put { key, value } => {
-                let h = super::head_of(&key, w.server.num_heads());
-                if w.server.is_cleaning(h) {
-                    let svc = t.cpu_request_fixed + t.cpu_baseline_write + t.cpu_hash_op
-                        + t.cpu_bytes(value.len()) + t.nvm_write(object::wire_size(key.len(), value.len()));
-                    let arrival = w.fabric.one_way(now, object::wire_size(key.len(), value.len()));
-                    let resv = w.cpu.reserve(arrival, svc);
-                    let done = resv.end + w.fabric.timing.two_sided_rtt / 2;
-                    w.fabric.note_two_sided(object::wire_size(key.len(), value.len()), 16);
-                    self.st = St::CleanWrite { key, value, deleted: false, start: now };
-                    Step::At(done)
-                } else {
-                    let obj = object::encode_object(&key, &value);
-                    self.issue_write_request(w, key, obj, now, None)
-                }
-            }
-            Request::Delete { key } => {
-                let h = super::head_of(&key, w.server.num_heads());
-                if w.server.is_cleaning(h) {
-                    let svc = t.cpu_request_fixed + t.cpu_baseline_write + t.cpu_hash_op;
-                    let arrival = w.fabric.one_way(now, key.len() + 16);
-                    let resv = w.cpu.reserve(arrival, svc);
-                    let done = resv.end + w.fabric.timing.two_sided_rtt / 2;
-                    w.fabric.note_two_sided(key.len() + 16, 16);
-                    self.st = St::CleanWrite { key, value: Vec::new(), deleted: true, start: now };
-                    Step::At(done)
-                } else {
-                    let obj = object::encode_delete(&key);
-                    self.issue_write_request(w, key, obj, now, None)
-                }
-            }
-            Request::CrashDuringPut { key, value, chunks } => {
-                let obj = object::encode_object(&key, &value);
-                self.issue_write_request(w, key, obj, now, Some(chunks))
-            }
-        }
-    }
-
-    /// Write path step 1: write_with_imm metadata request (§3.3).
-    fn issue_write_request(
-        &mut self,
-        w: &mut ErdaWorld,
-        key: Vec<u8>,
-        obj: Vec<u8>,
-        now: Time,
-        crash_chunks: Option<usize>,
-    ) -> Step {
-        let t = &w.fabric.timing;
-        let req = key.len() + 16; // key + length + imm identifier
-        let svc = t.cpu_erda_write;
-        let arrival = w.fabric.one_way(now, req);
-        let resv = w.cpu.reserve(arrival, svc);
-        let done = resv.end + w.fabric.timing.two_sided_rtt / 2;
-        w.fabric.note_two_sided(req, 16);
-        self.st = St::WriteReply { key, obj, start: now, crash_chunks };
-        Step::At(done)
-    }
 }
 
 impl Actor<ErdaWorld> for ErdaClient {
     fn step(&mut self, w: &mut ErdaWorld, now: Time) -> Step {
         match std::mem::replace(&mut self.st, St::Dead) {
-            St::NextOp => self.start_op(w, now),
-
-            St::EntryRead { key, retries, start, cleaning } => {
-                let (addr, len) = w.server.neighborhood_addr(&key);
-                let bytes = {
-                    let ErdaWorld { nvm, fabric, .. } = w;
-                    fabric.sample(now, nvm, addr, len)
+            St::NextOp => {
+                let op = match self.src.next() {
+                    Some(op) => op,
+                    None => return self.die(w),
                 };
-                match super::server::ErdaServer::parse_neighborhood(&bytes, &key) {
-                    None => {
-                        w.counters.read_misses += 1;
-                        self.complete(w, start, now, cleaning)
+                match begin_op(&self.cfg, w, op, now, now) {
+                    OpOutcome::Continue(st, at) => {
+                        self.st = st;
+                        Step::At(at)
                     }
-                    Some(e) => {
-                        let newest = e.atomic.newest();
-                        if newest == NO_OFFSET {
-                            w.counters.read_misses += 1;
-                            return self.complete(w, start, now, cleaning);
-                        }
-                        let fb = match e.atomic.oldest() {
-                            NO_OFFSET => None,
-                            o => Some(o),
-                        };
-                        self.issue_object_read(w, key, e.head_id, newest, fb, retries, start, now, cleaning)
-                    }
+                    _ => unreachable!("every op spans at least one verb"),
                 }
             }
-
-            St::ObjectRead { key, head, off, fallback, retries, start, window, cleaning } => {
-                let addr = w.server.log.addr_of(head, off);
-                let bytes = {
-                    let ErdaWorld { nvm, fabric, .. } = w;
-                    fabric.sample(now, nvm, addr, window)
-                };
-                match object::decode(&bytes) {
-                    Ok(v) if v.deleted => {
-                        // A valid delete record: key is absent.
-                        w.counters.read_misses += 1;
-                        self.complete(w, start, now, cleaning)
-                    }
-                    Ok(_) => self.complete(w, start, now, cleaning),
-                    Err(_) => {
-                        // Torn or not-yet-written object detected by checksum
-                        // — the §4.2 consistency path.
-                        w.counters.inconsistencies += 1;
-                        if let Some(old) = fallback {
-                            w.counters.fallbacks += 1;
-                            // Notify the server (repair message; small send).
-                            let t = &w.fabric.timing;
-                            let svc = t.cpu_request_fixed + t.cpu_hash_op;
-                            let arrival = w.fabric.one_way(now, key.len() + 16);
-                            w.cpu.reserve(arrival, svc);
-                            // The repair is served one way later; chunks that
-                            // persist in between must be visible to its
-                            // still-torn re-check (§4.3 race guard).
-                            {
-                                let ErdaWorld { nvm, fabric, .. } = w;
-                                fabric.flush(arrival, nvm);
-                            }
-                            if w.server.repair(&mut w.nvm, &key, off) {
-                                w.counters.repairs += 1;
-                            }
-                            self.issue_object_read(w, key, head, old, None, retries, start, now, cleaning)
-                        } else if retries < self.cfg.max_retries {
-                            w.counters.retries += 1;
-                            self.st = St::RetryWait { key, retries: retries + 1, start, cleaning };
-                            Step::At(now + self.cfg.retry_delay)
-                        } else {
-                            w.counters.read_misses += 1;
-                            self.complete(w, start, now, cleaning)
-                        }
-                    }
-                }
-            }
-
-            St::RetryWait { key, retries, start, cleaning } => {
-                self.issue_entry_read(w, key, retries, start, now, cleaning)
-            }
-
-            St::CleanRead { key, start } => {
-                // Server resolved the read at service time; data returned now.
-                let _ = w.server.local_read(&w.nvm, &key);
-                self.complete(w, start, now, true)
-            }
-
-            St::CleanWrite { key, value, deleted, start } => {
-                let h = super::head_of(&key, w.server.num_heads());
-                if w.server.is_cleaning(h) {
-                    w.server.cleaning_write(&mut w.nvm, &key, &value, deleted);
-                } else {
-                    // Cleaning finished while the request was in flight:
-                    // serve as a normal server-side append (same effect).
-                    let obj = if deleted {
-                        object::encode_delete(&key)
-                    } else {
-                        object::encode_object(&key, &value)
-                    };
-                    let (_, _, addr) = w.server.write_request(&mut w.nvm, &key, obj.len());
-                    w.nvm.write(addr, &obj);
-                }
-                self.complete(w, start, now, true)
-            }
-
-            St::WriteReply { key, obj, start, crash_chunks } => {
-                // Server applied the metadata update at service time; the
-                // reply carries (head, offset) — mutate + post the data now.
-                let (_head, _off, addr) = w.server.write_request(&mut w.nvm, &key, obj.len());
-                match crash_chunks {
-                    Some(chunks) => {
-                        let ErdaWorld { nvm, fabric, .. } = w;
-                        fabric.post_write_partial(now, nvm, addr, &obj, chunks);
-                        // Client dies: op never completes, nothing recorded.
-                        self.die(w)
-                    }
-                    None => {
-                        let ack = w.fabric.write_done(now, obj.len());
-                        {
-                            let ErdaWorld { nvm, fabric, .. } = w;
-                            fabric.post_write(now, nvm, addr, &obj);
-                        }
-                        self.st = St::WriteAck { start, cleaning: false };
-                        Step::At(ack)
-                    }
-                }
-            }
-
-            St::WriteAck { start, cleaning } => self.complete(w, start, now, cleaning),
-
             St::Dead => Step::Done,
+            st => match advance_op(&self.cfg, w, st, now) {
+                OpOutcome::Continue(st, at) => {
+                    self.st = st;
+                    Step::At(at)
+                }
+                OpOutcome::Finished { start, cleaning } => {
+                    // Op finished: record + loop.
+                    w.counters.record_op(start, now, cleaning);
+                    self.ops_left = self.ops_left.saturating_sub(1);
+                    if self.ops_left == 0 {
+                        return self.die(w);
+                    }
+                    self.st = St::NextOp;
+                    Step::At(now)
+                }
+                OpOutcome::Crashed => self.die(w),
+            },
         }
     }
 }

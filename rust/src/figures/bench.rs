@@ -1,0 +1,401 @@
+//! Benchmark JSON artifacts + the CI regression gate.
+//!
+//! `repro scaling --json F` / `repro window --json F` serialize the
+//! rendered sweep as a small JSON document (`BENCH_*.json`), which CI
+//! uploads as an artifact and compares against a baseline committed under
+//! `ci/baselines/` with `repro bench-gate`: any Erda throughput column
+//! regressing more than the tolerance fails the build. The crate is
+//! dependency-free, so both the writer and the (deliberately minimal)
+//! reader live here.
+
+use super::Rendered;
+use crate::error::{anyhow, bail, Result};
+
+/// Escape a string for a JSON literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Rendered {
+    /// The benchmark-artifact JSON form: id, title, header, rows — all
+    /// strings, so the reader stays trivial.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"id\": \"{}\",\n", esc(&self.id)));
+        s.push_str(&format!("  \"title\": \"{}\",\n", esc(&self.title)));
+        let head: Vec<String> = self.header.iter().map(|h| format!("\"{}\"", esc(h))).collect();
+        s.push_str(&format!("  \"header\": [{}],\n", head.join(", ")));
+        s.push_str("  \"rows\": [\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            let cells: Vec<String> = row.iter().map(|c| format!("\"{}\"", esc(c))).collect();
+            let comma = if i + 1 < self.rows.len() { "," } else { "" };
+            s.push_str(&format!("    [{}]{}\n", cells.join(", "), comma));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// A parsed benchmark artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BenchDoc {
+    pub id: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+/// Minimal JSON reader for the artifact shape above: objects, arrays and
+/// strings (unknown keys are tolerated and skipped). Not a general JSON
+/// parser — exactly enough for documents this module writes.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(s: &'a str) -> Self {
+        Reader { b: s.as_bytes(), i: 0 }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && (self.b[self.i] as char).is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.ws();
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of JSON"))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != c {
+            bail!("expected {:?} at byte {}, found {:?}", c as char, self.i, got as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        // Accumulate raw bytes (multibyte UTF-8 passes through untouched)
+        // and validate once at the closing quote.
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let c = *self.b.get(self.i).ok_or_else(|| anyhow!("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => {
+                    return String::from_utf8(out).map_err(|_| anyhow!("invalid UTF-8 in string"))
+                }
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or_else(|| anyhow!("bad escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'n' => out.push(b'\n'),
+                        b'r' => out.push(b'\r'),
+                        b't' => out.push(b'\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("bad \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| anyhow!("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            let ch = char::from_u32(cp).unwrap_or('\u{FFFD}');
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                            self.i += 4;
+                        }
+                        other => bail!("unsupported escape \\{}", other as char),
+                    }
+                }
+                c => out.push(c),
+            }
+        }
+    }
+
+    /// Skip any value (used for unknown keys).
+    fn skip_value(&mut self) -> Result<()> {
+        match self.peek()? {
+            b'"' => {
+                self.string()?;
+            }
+            b'[' => {
+                self.expect(b'[')?;
+                if self.peek()? == b']' {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value()?;
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b']' => {
+                            self.i += 1;
+                            break;
+                        }
+                        other => bail!("bad array separator {:?}", other as char),
+                    }
+                }
+            }
+            b'{' => {
+                self.expect(b'{')?;
+                if self.peek()? == b'}' {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.string()?;
+                    self.expect(b':')?;
+                    self.skip_value()?;
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b'}' => {
+                            self.i += 1;
+                            break;
+                        }
+                        other => bail!("bad object separator {:?}", other as char),
+                    }
+                }
+            }
+            _ => {
+                // Bare scalar (number / true / false / null): consume the token.
+                while self.i < self.b.len()
+                    && !matches!(self.b[self.i], b',' | b']' | b'}')
+                    && !(self.b[self.i] as char).is_ascii_whitespace()
+                {
+                    self.i += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn string_array(&mut self) -> Result<Vec<String>> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            out.push(self.string()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                other => bail!("bad array separator {:?}", other as char),
+            }
+        }
+    }
+}
+
+/// Parse a benchmark artifact produced by [`Rendered::to_json`].
+pub fn parse(doc: &str) -> Result<BenchDoc> {
+    let mut r = Reader::new(doc);
+    r.expect(b'{')?;
+    let mut id = None;
+    let mut header = None;
+    let mut rows: Option<Vec<Vec<String>>> = None;
+    loop {
+        if r.peek()? == b'}' {
+            r.i += 1;
+            break;
+        }
+        let key = r.string()?;
+        r.expect(b':')?;
+        match key.as_str() {
+            "id" => id = Some(r.string()?),
+            "header" => header = Some(r.string_array()?),
+            "rows" => {
+                r.expect(b'[')?;
+                let mut rs = Vec::new();
+                if r.peek()? == b']' {
+                    r.i += 1;
+                } else {
+                    loop {
+                        rs.push(r.string_array()?);
+                        match r.peek()? {
+                            b',' => r.i += 1,
+                            b']' => {
+                                r.i += 1;
+                                break;
+                            }
+                            other => bail!("bad rows separator {:?}", other as char),
+                        }
+                    }
+                }
+                rows = Some(rs);
+            }
+            _ => r.skip_value()?,
+        }
+        match r.peek()? {
+            b',' => r.i += 1,
+            b'}' => {
+                r.i += 1;
+                break;
+            }
+            other => bail!("bad object separator {:?}", other as char),
+        }
+    }
+    Ok(BenchDoc {
+        id: id.ok_or_else(|| anyhow!("artifact missing \"id\""))?,
+        header: header.ok_or_else(|| anyhow!("artifact missing \"header\""))?,
+        rows: rows.ok_or_else(|| anyhow!("artifact missing \"rows\""))?,
+    })
+}
+
+/// One gate comparison line.
+#[derive(Clone, Debug)]
+pub struct GateLine {
+    pub row_key: String,
+    pub column: String,
+    pub baseline: f64,
+    pub current: f64,
+    pub pass: bool,
+}
+
+/// Compare `current` against `baseline`: every `erda*_kops` column of every
+/// baseline row must be ≥ `(1 - tolerance) × baseline`. Rows are keyed by
+/// their first cell; a baseline row or column missing from `current` fails.
+/// Returns the comparison lines; `Err` only for malformed inputs.
+pub fn gate(baseline: &BenchDoc, current: &BenchDoc, tolerance: f64) -> Result<Vec<GateLine>> {
+    if baseline.id != current.id {
+        bail!("artifact mismatch: baseline {:?} vs current {:?}", baseline.id, current.id);
+    }
+    let gated: Vec<usize> = baseline
+        .header
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| h.starts_with("erda") && h.ends_with("_kops"))
+        .map(|(i, _)| i)
+        .collect();
+    if gated.is_empty() {
+        bail!("baseline {:?} has no erda*_kops column to gate on", baseline.id);
+    }
+    let mut lines = Vec::new();
+    for brow in &baseline.rows {
+        let key = brow.first().ok_or_else(|| anyhow!("empty baseline row"))?;
+        let crow = current.rows.iter().find(|r| r.first() == Some(key));
+        for &col in &gated {
+            let name = &baseline.header[col];
+            let b: f64 = brow
+                .get(col)
+                .ok_or_else(|| anyhow!("baseline row {key:?} missing column {name:?}"))?
+                .parse()?;
+            let (c, pass) = match crow.and_then(|r| r.get(col)) {
+                Some(cell) => {
+                    let c: f64 = cell.parse()?;
+                    (c, c >= (1.0 - tolerance) * b)
+                }
+                None => (f64::NAN, false),
+            };
+            lines.push(GateLine {
+                row_key: key.clone(),
+                column: name.clone(),
+                baseline: b,
+                current: c,
+                pass,
+            });
+        }
+    }
+    Ok(lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(id: &str, rows: &[&[&str]]) -> BenchDoc {
+        BenchDoc {
+            id: id.into(),
+            header: vec!["shards".into(), "erda_kops".into(), "redo_kops".into()],
+            rows: rows
+                .iter()
+                .map(|r| r.iter().map(|c| c.to_string()).collect())
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = Rendered {
+            id: "scaling".into(),
+            title: "a \"quoted\" title\nwith newline".into(),
+            header: vec!["shards".into(), "erda_kops".into()],
+            rows: vec![
+                vec!["1".into(), "12.34".into()],
+                vec!["2".into(), "24.68".into()],
+            ],
+        };
+        let parsed = parse(&r.to_json()).unwrap();
+        assert_eq!(parsed.id, "scaling");
+        assert_eq!(parsed.header, r.header);
+        assert_eq!(parsed.rows, r.rows);
+    }
+
+    #[test]
+    fn parse_tolerates_unknown_keys_and_whitespace() {
+        let doc = r#"{
+            "note": {"nested": ["x", "y"], "n": 42},
+            "id": "window",
+            "title": "t",
+            "header": ["window", "erda_kops"],
+            "rows": [["1", "10.0"]]
+        }"#;
+        let parsed = parse(doc).unwrap();
+        assert_eq!(parsed.id, "window");
+        assert_eq!(parsed.rows.len(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse("{").is_err());
+        assert!(parse("{\"id\": \"x\"}").is_err(), "missing header/rows");
+        assert!(parse("[]").is_err());
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_fails_regressions() {
+        let base = doc("scaling", &[&["1", "100.0", "50.0"], &["2", "200.0", "90.0"]]);
+        // 1-shard erda within 10%, 2-shard regressed 25%.
+        let cur = doc("scaling", &[&["1", "95.0", "10.0"], &["2", "150.0", "95.0"]]);
+        let lines = gate(&base, &cur, 0.10).unwrap();
+        assert_eq!(lines.len(), 2, "only erda_kops is gated");
+        assert!(lines[0].pass, "{:?}", lines[0]);
+        assert!(!lines[1].pass, "{:?}", lines[1]);
+        // Improvements always pass.
+        let better = doc("scaling", &[&["1", "300.0", "1.0"], &["2", "400.0", "1.0"]]);
+        assert!(gate(&base, &better, 0.10).unwrap().iter().all(|l| l.pass));
+    }
+
+    #[test]
+    fn gate_fails_on_missing_rows_and_mismatched_ids() {
+        let base = doc("scaling", &[&["1", "100.0", "50.0"], &["4", "300.0", "90.0"]]);
+        let cur = doc("scaling", &[&["1", "100.0", "50.0"]]);
+        let lines = gate(&base, &cur, 0.10).unwrap();
+        assert!(lines.iter().any(|l| !l.pass), "missing row 4 must fail");
+        let other = doc("window", &[&["1", "100.0", "50.0"]]);
+        assert!(gate(&base, &other, 0.10).is_err());
+    }
+}

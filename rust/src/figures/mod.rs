@@ -9,6 +9,7 @@
 //! for every experiment.
 
 pub mod ablations;
+pub mod bench;
 pub mod table1;
 
 use std::fmt::Write as _;
@@ -27,6 +28,8 @@ pub const VALUE_SIZES: [usize; 9] = [16, 32, 64, 128, 256, 512, 1024, 2048, 4096
 pub const THREADS: [usize; 8] = [1, 2, 4, 6, 8, 10, 12, 16];
 /// The default shard sweep of the scale-out experiment (`repro scaling`).
 pub const SHARD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+/// The default in-flight-window sweep (`repro window`).
+pub const WINDOW_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
 
 /// One rendered experiment: a CSV-able grid plus a markdown view.
 #[derive(Clone, Debug)]
@@ -288,6 +291,52 @@ pub fn scaling(shard_counts: &[usize], fid: Fidelity) -> Rendered {
     }
 }
 
+/// In-flight-window sweep (not a figure of the paper — its clients are
+/// closed loop): throughput and tail latency vs the per-client window for
+/// all three schemes under YCSB-C. Pipelining exposes what the closed-loop
+/// figures hide: Erda's one-sided reads never touch a server CPU, so its
+/// throughput climbs with the window (and its p99 stays flat), while the
+/// baselines — whose reads all queue at the server CPU — stay pinned at
+/// the c/s ceiling with exploding tails. `window = 1` runs the identical
+/// closed-loop client path as every other figure — bit for bit.
+pub fn window_sweep(windows: &[usize], fid: Fidelity) -> Rendered {
+    let clients = 8;
+    let mut rows = Vec::new();
+    for &window in windows {
+        let mut row = vec![window.to_string()];
+        for scheme in SchemeSel::ALL {
+            let mut cfg = base_cfg(scheme, Workload::ReadOnly, 256, clients, fid);
+            cfg.window = window;
+            // Keep the measured span comparable across windows: a deeper
+            // pipeline completes its quota proportionally faster, and a
+            // fixed quota at window 16 would end inside the warmup. Reads
+            // only, so the quota growth adds no NVM appends to re-size for.
+            cfg.ops_per_client = cfg.ops_per_client.saturating_mul(window as u64);
+            let mut stats = run(&cfg);
+            row.push(format!("{:.2}", stats.kops()));
+            row.push(format!("{:.2}", stats.latency.percentile_us(0.99)));
+        }
+        rows.push(row);
+    }
+    Rendered {
+        id: "window".into(),
+        title: format!(
+            "Pipelining: throughput (KOp/s) and p99 latency (µs) vs in-flight window \
+             ({clients} clients, YCSB-C, 256 B)"
+        ),
+        header: vec![
+            "window".into(),
+            "erda_kops".into(),
+            "erda_p99_us".into(),
+            "redo_kops".into(),
+            "redo_p99_us".into(),
+            "raw_kops".into(),
+            "raw_p99_us".into(),
+        ],
+        rows,
+    }
+}
+
 /// Run one experiment by paper number ("14".."26", "table1").
 pub fn by_id(id: &str, fid: Fidelity) -> Option<Rendered> {
     let wl = Workload::ALL;
@@ -308,14 +357,15 @@ pub fn by_id(id: &str, fid: Fidelity) -> Option<Rendered> {
         "table1" | "t1" | "1" => table1(),
         "ablations" | "abl" => ablations(),
         "scaling" => scaling(&SHARD_SWEEP, fid),
+        "window" => window_sweep(&WINDOW_SWEEP, fid),
         _ => return None,
     })
 }
 
 /// All experiment ids, in paper order (plus the repo's own extensions).
-pub const ALL_IDS: [&str; 16] = [
+pub const ALL_IDS: [&str; 17] = [
     "14", "15", "16", "17", "18", "19", "20", "21", "22", "23", "24", "25", "26", "table1",
-    "ablations", "scaling",
+    "ablations", "scaling", "window",
 ];
 
 #[cfg(test)]
@@ -353,6 +403,20 @@ mod tests {
         let redo1: f64 = r.rows[0][2].parse().unwrap();
         let redo2: f64 = r.rows[1][2].parse().unwrap();
         assert!(redo2 > 1.3 * redo1, "redo: {redo1} -> {redo2} KOp/s with 2 shards");
+    }
+
+    #[test]
+    fn quick_window_sweep_shows_erda_gaining() {
+        let r = window_sweep(&[1, 8], Fidelity::Quick);
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.header.len(), 7);
+        let e1: f64 = r.rows[0][1].parse().unwrap();
+        let e8: f64 = r.rows[1][1].parse().unwrap();
+        assert!(e8 > 1.5 * e1, "erda must gain with the window: {e1} -> {e8} KOp/s");
+        // Redo Logging is CPU-capped: window 8 cannot multiply it.
+        let r1: f64 = r.rows[0][3].parse().unwrap();
+        let r8: f64 = r.rows[1][3].parse().unwrap();
+        assert!(r8 < 4.0 * r1, "redo saturates at the CPU ceiling: {r1} -> {r8}");
     }
 
     #[test]

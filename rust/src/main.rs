@@ -23,24 +23,110 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        Cmd::Smoke { scheme, seed, shards } => smoke(scheme, seed, shards),
-        Cmd::Scaling { shards, fidelity, out } => {
-            figures::scaling(&shards, fidelity).emit(out.as_deref());
-            Ok(())
+        Cmd::Smoke { scheme, seed, shards, window, arrival } => {
+            smoke(scheme, seed, shards, window, arrival)
+        }
+        Cmd::Scaling { shards, fidelity, out, json } => {
+            let r = figures::scaling(&shards, fidelity);
+            r.emit(out.as_deref());
+            emit_json(&r, json.as_deref())
+        }
+        Cmd::Window { windows, fidelity, out, json } => {
+            let r = figures::window_sweep(&windows, fidelity);
+            r.emit(out.as_deref());
+            emit_json(&r, json.as_deref())
+        }
+        Cmd::BenchGate { baseline, current, tolerance } => {
+            bench_gate(&baseline, &current, tolerance)
         }
         Cmd::VerifyRuntime => verify_runtime(),
         Cmd::Recover => recover_demo(),
     }
 }
 
+/// Write a rendered sweep as a benchmark JSON artifact (for CI).
+fn emit_json(r: &erda::figures::Rendered, path: Option<&std::path::Path>) -> Result<()> {
+    if let Some(path) = path {
+        std::fs::write(path, r.to_json())?;
+        eprintln!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// Compare a benchmark artifact against the committed baseline: every
+/// `erda*_kops` cell must be within `tolerance` of the baseline (regressions
+/// beyond it fail; improvements always pass).
+fn bench_gate(
+    baseline: &std::path::Path,
+    current: &std::path::Path,
+    tolerance: f64,
+) -> Result<()> {
+    use erda::error::Context;
+    use erda::figures::bench;
+
+    let base = bench::parse(
+        &std::fs::read_to_string(baseline)
+            .with_context(|| format!("reading baseline {}", baseline.display()))?,
+    )
+    .with_context(|| format!("parsing baseline {}", baseline.display()))?;
+    let cur = bench::parse(
+        &std::fs::read_to_string(current)
+            .with_context(|| format!("reading current {}", current.display()))?,
+    )
+    .with_context(|| format!("parsing current {}", current.display()))?;
+
+    let lines = bench::gate(&base, &cur, tolerance)?;
+    println!(
+        "bench-gate: {} vs baseline (tolerance {:.0}%)",
+        base.id,
+        tolerance * 100.0
+    );
+    let mut failed = 0;
+    for l in &lines {
+        let verdict = if l.pass { "ok  " } else { "FAIL" };
+        println!(
+            "  [{verdict}] {}={} {}: baseline {:.2} current {:.2}",
+            base.header.first().map(String::as_str).unwrap_or("row"),
+            l.row_key,
+            l.column,
+            l.baseline,
+            l.current,
+        );
+        if !l.pass {
+            failed += 1;
+        }
+    }
+    erda::ensure!(
+        failed == 0,
+        "bench-gate: {failed} of {} comparisons regressed more than {:.0}% \
+         (if intentional, refresh ci/baselines/ from the CI artifacts)",
+        lines.len(),
+        tolerance * 100.0
+    );
+    println!("bench-gate OK ({} comparisons)", lines.len());
+    Ok(())
+}
+
 /// Facade smoke test: typed one-shot ops through `Db`, then a full DES run
 /// through `Cluster` — the same two doors every example and test uses —
-/// over `shards` key-space partitions. Deterministic in `seed`.
-fn smoke(scheme: erda::store::Scheme, seed: u64, shards: usize) -> Result<()> {
+/// over `shards` key-space partitions, with a `window`-deep in-flight
+/// pipeline and (optionally) an open-loop arrival process. Deterministic in
+/// `seed`.
+fn smoke(
+    scheme: erda::store::Scheme,
+    seed: u64,
+    shards: usize,
+    window: usize,
+    arrival: erda::ycsb::Arrival,
+) -> Result<()> {
     use erda::store::{Cluster, RemoteStore, Request};
     use erda::ycsb::{key_of, Workload};
 
-    println!("smoke: scheme = {}, seed = {seed:#x}, shards = {shards}", scheme.label());
+    println!(
+        "smoke: scheme = {}, seed = {seed:#x}, shards = {shards}, window = {window}, \
+         arrival = {arrival:?}",
+        scheme.label()
+    );
 
     // 1. Typed KV ops against a synchronous store handle (routing by key).
     let mut db = Cluster::builder()
@@ -63,11 +149,14 @@ fn smoke(scheme: erda::store::Scheme, seed: u64, shards: usize) -> Result<()> {
     );
     println!("  db ops OK: put / get / delete / torn-write ({:?})", db.op_stats());
 
-    // 2. End-to-end DES run (clients fanned out over the shard worlds).
+    // 2. End-to-end DES run (clients fanned out over the shard worlds,
+    // each keeping up to `window` ops in flight).
     let outcome = Cluster::builder()
         .scheme(scheme)
         .shards(shards)
         .clients(4)
+        .window(window)
+        .arrival(arrival)
         .ops_per_client(250)
         .workload(Workload::UpdateHeavy)
         .records(200)
@@ -95,6 +184,20 @@ fn smoke(scheme: erda::store::Scheme, seed: u64, shards: usize) -> Result<()> {
         "sharded run under-counted: {} ops vs expected {expected_ops}",
         s.ops
     );
+    if arrival.is_open() {
+        erda::ensure!(
+            s.offered_ops == expected_ops,
+            "open-loop offered-load under-counted: {} vs {expected_ops}",
+            s.offered_ops
+        );
+        println!(
+            "  open loop: offered {:.2} KOp/s, achieved {:.0}%, mean queue depth {:.1} (max {})",
+            s.offered_kops(),
+            s.achieved_fraction() * 100.0,
+            s.mean_queue_depth(),
+            s.queue_depth_max
+        );
+    }
     println!(
         "  engine run OK: {} ops over {} shard(s), {:.2} KOp/s, mean {:.2} µs, {} DES events",
         s.ops,

@@ -49,6 +49,11 @@ impl LatencyRecorder {
         self.mean_ns() / 1_000.0
     }
 
+    /// Percentile (0.0..=1.0) in microseconds.
+    pub fn percentile_us(&mut self, p: f64) -> f64 {
+        self.percentile_ns(p) as f64 / 1_000.0
+    }
+
     /// Percentile (0.0..=1.0) in nanoseconds.
     pub fn percentile_ns(&mut self, p: f64) -> Time {
         if self.samples.is_empty() {
@@ -94,6 +99,15 @@ pub struct Counters {
     pub cleanings_completed: u64,
     /// Staged records applied to destination storage (baseline applier).
     pub applied: u64,
+    /// Open-loop arrivals inside the measurement window (offered load; 0
+    /// for closed-loop runs, where offered = achieved by construction).
+    pub ops_offered: u64,
+    /// Client-side pending-queue depth, sampled at every open-loop arrival:
+    /// Σ depth, number of samples, and the maximum — how far offered load
+    /// ran ahead of the window + service capacity.
+    pub queue_depth_sum: u64,
+    pub queue_depth_samples: u64,
+    pub queue_depth_max: u32,
     /// Virtual time measurement starts (ops completing before are warmup).
     pub measure_from: Time,
     pub first_completion: Time,
@@ -117,6 +131,10 @@ impl Counters {
         self.read_misses += other.read_misses;
         self.cleanings_completed += other.cleanings_completed;
         self.applied += other.applied;
+        self.ops_offered += other.ops_offered;
+        self.queue_depth_sum += other.queue_depth_sum;
+        self.queue_depth_samples += other.queue_depth_samples;
+        self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
         // Like first_completion below, 0 means "unset" (a default-initialized
         // accumulator): adopt the other side's boundary instead of clamping
         // a real warmup down to 0.
@@ -148,6 +166,19 @@ impl Counters {
             self.first_completion = end;
         }
         self.last_completion = self.last_completion.max(end);
+    }
+
+    /// Record an open-loop arrival at `at` that found `queue_depth` ops
+    /// already waiting client-side (offered-load + queue-depth accounting;
+    /// arrivals inside warmup are not measured, like ops).
+    pub fn record_arrival(&mut self, at: Time, queue_depth: usize) {
+        if at < self.measure_from {
+            return;
+        }
+        self.ops_offered += 1;
+        self.queue_depth_sum += queue_depth as u64;
+        self.queue_depth_samples += 1;
+        self.queue_depth_max = self.queue_depth_max.max(queue_depth as u32);
     }
 }
 
@@ -184,6 +215,17 @@ pub struct RunStats {
     pub cleanings: u64,
     /// DES events executed (engine cost diagnostics).
     pub events: u64,
+    /// Open-loop arrivals inside the measurement window (offered load;
+    /// 0 for closed-loop runs — there offered load *is* `ops`).
+    pub offered_ops: u64,
+    /// Client-side pending-queue depth samples (taken at arrivals).
+    pub queue_depth_sum: u64,
+    pub queue_depth_samples: u64,
+    pub queue_depth_max: u32,
+    /// Ops admitted through the client-NIC ingress queue (0 = disabled).
+    pub ingress_admitted: u64,
+    /// Total time ops queued at the ingress before posting their verb.
+    pub ingress_wait_ns: u128,
 }
 
 impl RunStats {
@@ -201,6 +243,40 @@ impl RunStats {
             return 0.0;
         }
         self.server_cpu_busy_ns as f64 / self.ops as f64
+    }
+
+    /// Offered load in KOp/s. For closed-loop runs (no recorded arrivals)
+    /// offered = achieved, so this falls back to [`RunStats::kops`].
+    pub fn offered_kops(&self) -> f64 {
+        if self.offered_ops == 0 || self.duration_ns == 0 {
+            return self.kops();
+        }
+        self.offered_ops as f64 / (self.duration_ns as f64 * 1e-9) / 1e3
+    }
+
+    /// Fraction of offered ops that completed (1.0 when closed loop or not
+    /// saturated; < 1.0 when the run ended with work still queued).
+    pub fn achieved_fraction(&self) -> f64 {
+        if self.offered_ops == 0 {
+            return 1.0;
+        }
+        (self.ops as f64 / self.offered_ops as f64).min(1.0)
+    }
+
+    /// Mean client-side pending-queue depth over the arrival samples.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_depth_samples == 0 {
+            return 0.0;
+        }
+        self.queue_depth_sum as f64 / self.queue_depth_samples as f64
+    }
+
+    /// Mean ingress queueing delay per admitted op, ns (0 when disabled).
+    pub fn mean_ingress_wait_ns(&self) -> f64 {
+        if self.ingress_admitted == 0 {
+            return 0.0;
+        }
+        self.ingress_wait_ns as f64 / self.ingress_admitted as f64
     }
 
     /// Aggregate per-shard run stats into the cluster-level view: every
@@ -226,6 +302,12 @@ impl RunStats {
             out.applied += p.applied;
             out.cleanings += p.cleanings;
             out.events += p.events;
+            out.offered_ops += p.offered_ops;
+            out.queue_depth_sum += p.queue_depth_sum;
+            out.queue_depth_samples += p.queue_depth_samples;
+            out.queue_depth_max = out.queue_depth_max.max(p.queue_depth_max);
+            out.ingress_admitted += p.ingress_admitted;
+            out.ingress_wait_ns += p.ingress_wait_ns;
         }
         out
     }
@@ -235,6 +317,7 @@ impl RunStats {
         c: &Counters,
         server_cpu_busy_ns: u128,
         nvm: crate::nvm::WriteStats,
+        fabric: crate::rdma::FabricStats,
         events: u64,
     ) -> RunStats {
         RunStats {
@@ -253,6 +336,12 @@ impl RunStats {
             applied: c.applied,
             cleanings: c.cleanings_completed,
             events,
+            offered_ops: c.ops_offered,
+            queue_depth_sum: c.queue_depth_sum,
+            queue_depth_samples: c.queue_depth_samples,
+            queue_depth_max: c.queue_depth_max,
+            ingress_admitted: fabric.ingress_admitted,
+            ingress_wait_ns: fabric.ingress_wait_ns,
         }
     }
 }
@@ -395,7 +484,12 @@ mod tests {
             write_ops: 1,
             atomic_ops: 0,
         };
-        let s = RunStats::collect(&c, 5, nvm, 9);
+        let fabric = crate::rdma::FabricStats {
+            ingress_admitted: 4,
+            ingress_wait_ns: 1200,
+            ..Default::default()
+        };
+        let s = RunStats::collect(&c, 5, nvm, fabric, 9);
         assert_eq!(s.ops, 1);
         assert_eq!(s.inconsistencies_detected, 2);
         assert_eq!(s.fallback_reads, 1);
@@ -406,5 +500,45 @@ mod tests {
         assert_eq!(s.nvm_requested_bytes, 22);
         assert_eq!(s.server_cpu_busy_ns, 5);
         assert_eq!(s.events, 9);
+        assert_eq!(s.ingress_admitted, 4);
+        assert_eq!(s.mean_ingress_wait_ns(), 300.0);
+    }
+
+    #[test]
+    fn arrival_accounting_respects_warmup_and_tracks_depth() {
+        let mut c = Counters { measure_from: 100, ..Default::default() };
+        c.record_arrival(50, 9); // warmup: dropped
+        c.record_arrival(150, 0);
+        c.record_arrival(160, 3);
+        c.record_arrival(170, 7);
+        assert_eq!(c.ops_offered, 3);
+        assert_eq!(c.queue_depth_sum, 10);
+        assert_eq!(c.queue_depth_samples, 3);
+        assert_eq!(c.queue_depth_max, 7);
+    }
+
+    #[test]
+    fn offered_vs_achieved_helpers() {
+        // Closed loop: offered falls back to achieved.
+        let closed = RunStats { ops: 100, duration_ns: 1_000_000_000, ..Default::default() };
+        assert!((closed.offered_kops() - closed.kops()).abs() < 1e-12);
+        assert_eq!(closed.achieved_fraction(), 1.0);
+        // Open loop, saturated: 200 offered, 100 achieved.
+        let open = RunStats {
+            ops: 100,
+            offered_ops: 200,
+            duration_ns: 1_000_000_000,
+            queue_depth_sum: 500,
+            queue_depth_samples: 200,
+            queue_depth_max: 42,
+            ..Default::default()
+        };
+        assert!((open.offered_kops() - 2.0 * open.kops()).abs() < 1e-9);
+        assert_eq!(open.achieved_fraction(), 0.5);
+        assert_eq!(open.mean_queue_depth(), 2.5);
+        // Merge keeps sums and maxes.
+        let m = RunStats::merged(&[open.clone(), closed]);
+        assert_eq!(m.offered_ops, 200);
+        assert_eq!(m.queue_depth_max, 42);
     }
 }

@@ -1,9 +1,10 @@
-//! The fabric: verb timing + the volatile NIC cache.
+//! The fabric: verb timing + the volatile NIC cache + (optionally) the
+//! client-side NIC ingress queue.
 
 use std::collections::VecDeque;
 
 use crate::nvm::{Addr, Nvm};
-use crate::sim::{Time, Timing};
+use crate::sim::{CpuPool, Time, Timing};
 
 /// A chunk of a one-sided write waiting in the NIC's volatile cache.
 #[derive(Clone, Debug)]
@@ -23,6 +24,11 @@ pub struct FabricStats {
     pub bytes_written: u64,
     /// Chunks dropped from the NIC cache by an injected failure.
     pub chunks_dropped: u64,
+    /// Ops admitted through the client-NIC ingress queue.
+    pub ingress_admitted: u64,
+    /// Total virtual time ops spent queued at the ingress before their
+    /// first verb could post.
+    pub ingress_wait_ns: u128,
 }
 
 /// The simulated RDMA fabric between all clients and one server.
@@ -30,6 +36,12 @@ pub struct Fabric {
     pub timing: Timing,
     pending: VecDeque<PendingChunk>,
     stats: FabricStats,
+    /// Client-side NIC ingress, modeled as a c-server FIFO queue: every op
+    /// issue occupies one of `c` DMA channels for its request's wire time
+    /// before the verb can post. `None` (the default) = unbounded ingress,
+    /// i.e. the pre-windowing behavior where verbs post instantly — kept as
+    /// the default so closed-loop runs reproduce bit-for-bit.
+    ingress: Option<CpuPool>,
 }
 
 /// NIC drain granularity: RNICs move cache lines; NVM programs 64 B lines.
@@ -37,7 +49,45 @@ const CHUNK: usize = 64;
 
 impl Fabric {
     pub fn new(timing: Timing) -> Self {
-        Fabric { timing, pending: VecDeque::new(), stats: FabricStats::default() }
+        Fabric { timing, pending: VecDeque::new(), stats: FabricStats::default(), ingress: None }
+    }
+
+    /// Enable the shared client-NIC ingress queue with `channels` parallel
+    /// DMA channels (a c-server in virtual time). Disabled by default.
+    pub fn set_ingress(&mut self, channels: usize) {
+        self.ingress = Some(CpuPool::new(channels));
+    }
+
+    /// Is the ingress queue enabled?
+    pub fn has_ingress(&self) -> bool {
+        self.ingress.is_some()
+    }
+
+    /// Reset the ingress accounting (measurement boundary — warmup-era
+    /// admissions and waits must not leak into the measured figures).
+    pub fn reset_ingress_stats(&mut self) {
+        self.stats.ingress_admitted = 0;
+        self.stats.ingress_wait_ns = 0;
+    }
+
+    /// Admit an op's first verb of `bytes` through the client-NIC ingress.
+    /// Returns the admission instant: `now` when the ingress is disabled or
+    /// a channel is free, later when all channels are busy serializing
+    /// earlier requests — the queueing delay that bounds offered load at
+    /// the client side. Channel occupancy is the request's wire time with
+    /// the [`Timing::ingress_post_ns`] per-verb floor (doorbell + DMA
+    /// setup).
+    pub fn ingress_admit(&mut self, now: Time, bytes: usize) -> Time {
+        match &mut self.ingress {
+            None => now,
+            Some(q) => {
+                let svc = self.timing.wire(bytes).max(self.timing.ingress_post_ns);
+                let resv = q.reserve(now, svc);
+                self.stats.ingress_admitted += 1;
+                self.stats.ingress_wait_ns += (resv.start - now) as u128;
+                resv.start
+            }
+        }
     }
 
     /// Apply every pending NIC-cache chunk that has reached its persist time.
@@ -231,6 +281,41 @@ mod tests {
         let seen = f.sample(big_ack, &mut nvm, big_addr, 1 << 16);
         let persisted = seen.iter().filter(|&&b| b == 2).count();
         assert!(persisted < (1 << 16), "ACK must not imply full persistence");
+    }
+
+    #[test]
+    fn ingress_disabled_admits_instantly() {
+        let (mut f, _) = setup();
+        assert!(!f.has_ingress());
+        assert_eq!(f.ingress_admit(123, 4096), 123);
+        assert_eq!(f.stats().ingress_admitted, 0);
+    }
+
+    #[test]
+    fn ingress_serializes_past_channel_count() {
+        let (mut f, _) = setup();
+        f.set_ingress(2);
+        // 4096 B at 0.2 ns/B = 819 ns channel occupancy.
+        let svc = f.timing.wire(4096);
+        let a = f.ingress_admit(0, 4096);
+        let b = f.ingress_admit(0, 4096);
+        let c = f.ingress_admit(0, 4096);
+        assert_eq!(a, 0);
+        assert_eq!(b, 0, "second channel free");
+        assert_eq!(c, svc, "third op waits for a channel");
+        let s = f.stats();
+        assert_eq!(s.ingress_admitted, 3);
+        assert_eq!(s.ingress_wait_ns, svc as u128);
+    }
+
+    #[test]
+    fn ingress_small_verbs_pay_the_posting_floor() {
+        let (mut f, _) = setup();
+        f.set_ingress(1);
+        let floor = f.timing.ingress_post_ns;
+        assert!(floor > 0);
+        assert_eq!(f.ingress_admit(0, 16), 0);
+        assert_eq!(f.ingress_admit(0, 16), floor, "posting floor per verb");
     }
 
     #[test]

@@ -1,0 +1,100 @@
+//! Completion tokens for actors with multiple outstanding operations.
+//!
+//! The engine contract is one wake-up per actor ([`super::Step::At`]); an
+//! actor that keeps a *window* of operations in flight therefore multiplexes
+//! its own completions: each outstanding op registers a token with its
+//! completion time, the actor sleeps until the earliest one, and on wake-up
+//! drains every token that is due. `CompletionSet` is that per-actor
+//! bookkeeping — a deterministic min-heap of `(time, seq, token)` with FIFO
+//! tie-breaking, mirroring the engine heap so same-instant completions
+//! resolve in registration order.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::Time;
+
+/// Deterministic per-actor completion queue: tokens become due at absolute
+/// virtual times; same-time tokens drain in registration (FIFO) order.
+#[derive(Debug, Default)]
+pub struct CompletionSet {
+    heap: BinaryHeap<Reverse<(Time, u64, usize)>>,
+    seq: u64,
+}
+
+impl CompletionSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `token` to complete at absolute time `at`.
+    pub fn arm(&mut self, token: usize, at: Time) {
+        self.heap.push(Reverse((at, self.seq, token)));
+        self.seq += 1;
+    }
+
+    /// Earliest due time of any armed token.
+    pub fn next_due(&self) -> Option<Time> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    /// Pop the next token if it is due at or before `now`.
+    pub fn pop_due(&mut self, now: Time) -> Option<usize> {
+        match self.heap.peek() {
+            Some(Reverse((t, _, _))) if *t <= now => {
+                let Reverse((_, _, tok)) = self.heap.pop().expect("peeked");
+                Some(tok)
+            }
+            _ => None,
+        }
+    }
+
+    /// Number of armed tokens.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drains_in_time_order() {
+        let mut c = CompletionSet::new();
+        c.arm(0, 30);
+        c.arm(1, 10);
+        c.arm(2, 20);
+        assert_eq!(c.next_due(), Some(10));
+        assert_eq!(c.pop_due(25), Some(1));
+        assert_eq!(c.pop_due(25), Some(2));
+        assert_eq!(c.pop_due(25), None, "token 0 not due yet");
+        assert_eq!(c.next_due(), Some(30));
+        assert_eq!(c.pop_due(30), Some(0));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn same_time_tokens_fifo() {
+        let mut c = CompletionSet::new();
+        for tok in [5usize, 3, 9, 1] {
+            c.arm(tok, 100);
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| c.pop_due(100)).collect();
+        assert_eq!(order, vec![5, 3, 9, 1], "registration order preserved");
+    }
+
+    #[test]
+    fn rearming_a_token_is_independent() {
+        let mut c = CompletionSet::new();
+        c.arm(0, 10);
+        assert_eq!(c.pop_due(10), Some(0));
+        c.arm(0, 20);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.pop_due(20), Some(0));
+    }
+}

@@ -14,11 +14,13 @@
 //! Everything is seeded: two runs with the same config produce identical
 //! results, which the test suite exploits heavily.
 
+pub mod completion;
 pub mod engine;
 pub mod resource;
 pub mod rng;
 pub mod timing;
 
+pub use completion::CompletionSet;
 pub use engine::{Actor, Engine, Step};
 pub use resource::CpuPool;
 pub use rng::Rng;

@@ -55,6 +55,10 @@ pub struct Timing {
     /// Delay from NIC-ack to NVM persistence for one-sided writes
     /// (the volatile-cache window the RDA problem lives in), ns.
     pub nic_flush_delay: Time,
+    /// Client-NIC ingress: minimum channel occupancy per posted verb
+    /// (doorbell + WQE/DMA setup), ns — the floor under the wire time when
+    /// the ingress c-server is enabled.
+    pub ingress_post_ns: Time,
 }
 
 impl Default for Timing {
@@ -74,6 +78,7 @@ impl Default for Timing {
             cpu_apply: 6_000,
             server_cores: 4,
             nic_flush_delay: 3_000,     // ADR-domain flush window
+            ingress_post_ns: 300,       // WQE post + DMA setup per verb
         }
     }
 }

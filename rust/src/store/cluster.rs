@@ -36,6 +36,7 @@
 //! raw [`DriverConfig`] (what `crate::workload::run` and the figure sweeps
 //! use).
 
+use super::pipeline::{BaselineDriver, ErdaDriver, PipelinedClient};
 use super::{Db, OpSource, Request, Scheme};
 use crate::baselines::{ApplierActor, ApplierConfig, BaselineClient, BaselineWorld};
 use crate::erda::{CleanerActor, CleanerConfig, ClientConfig, ErdaClient, ErdaWorld};
@@ -44,7 +45,7 @@ use crate::metrics::RunStats;
 use crate::nvm::NvmConfig;
 use crate::sim::{Actor, Engine, Step, Time, Timing};
 use crate::workload::DriverConfig;
-use crate::ycsb::{Generator, Workload};
+use crate::ycsb::{Arrival, ArrivalGen, Generator, Workload};
 
 /// One scripted client: spawn time, its op list, and (for Erda) client
 /// tunables.
@@ -96,6 +97,36 @@ impl ClusterBuilder {
     /// Ops per YCSB client (after this the client exits).
     pub fn ops_per_client(mut self, n: u64) -> Self {
         self.cfg.ops_per_client = n;
+        self
+    }
+
+    /// Per-client in-flight window: keep up to `n` ops outstanding
+    /// simultaneously (out-of-order completion, per-key ordering kept).
+    /// 1 = the paper's closed-loop client, bit-for-bit.
+    pub fn window(mut self, n: usize) -> Self {
+        assert!(n >= 1, "the in-flight window is at least 1");
+        self.cfg.window = n;
+        self
+    }
+
+    /// Arrival process for the YCSB clients: [`Arrival::Closed`] (default)
+    /// or an open-loop fixed-rate / Poisson process per client.
+    pub fn arrival(mut self, a: Arrival) -> Self {
+        if let Some(rate) = a.rate() {
+            assert!(
+                rate.is_finite() && rate > 0.0,
+                "open-loop arrival rate must be positive and finite, got {rate}"
+            );
+        }
+        self.cfg.arrival = a;
+        self
+    }
+
+    /// Meter every op issue through a shared client-NIC ingress queue with
+    /// `channels` parallel DMA channels (a c-server in virtual time).
+    pub fn ingress(mut self, channels: usize) -> Self {
+        assert!(channels >= 1, "the ingress queue needs at least one channel");
+        self.cfg.ingress_channels = Some(channels);
         self
     }
 
@@ -247,6 +278,7 @@ impl Actor<ErdaWorld> for Marker {
     fn step(&mut self, w: &mut ErdaWorld, _now: Time) -> Step {
         w.cpu.reset_accounting();
         w.nvm.reset_stats();
+        w.fabric.reset_ingress_stats();
         Step::Done
     }
 }
@@ -255,6 +287,7 @@ impl Actor<BaselineWorld> for Marker {
     fn step(&mut self, w: &mut BaselineWorld, _now: Time) -> Step {
         w.cpu.reset_accounting();
         w.nvm.reset_stats();
+        w.fabric.reset_ingress_stats();
         Step::Done
     }
 }
@@ -302,12 +335,18 @@ impl Cluster {
         shard: usize,
         shards: usize,
     ) -> ErdaWorld {
+        // Per-shard sizing: each world gets its share of the data-derived
+        // arena and a table sized for its record share, not the cluster's
+        // (the old O(shards × cluster) memory flagged in ROADMAP).
         let mut world = ErdaWorld::new(
             cfg.timing.clone(),
-            NvmConfig { capacity: cfg.nvm_capacity },
+            NvmConfig { capacity: cfg.shard_nvm_capacity() },
             cfg.log_cfg,
-            cfg.table_cap(),
+            cfg.shard_table_cap(),
         );
+        if let Some(c) = cfg.ingress_channels {
+            world.fabric.set_ingress(c);
+        }
         world.preload_shard(preload.0, preload.1, shard, shards);
         world.nvm.reset_stats();
         if let Some(th) = cfg.cleaning_threshold {
@@ -328,16 +367,33 @@ impl Cluster {
         let slot_size = object::wire_size(24, slot_value);
         let mut world = BaselineWorld::new(
             cfg.timing.clone(),
-            NvmConfig { capacity: cfg.nvm_capacity },
+            NvmConfig { capacity: cfg.shard_nvm_capacity() },
             scheme,
-            cfg.table_cap(),
+            cfg.shard_table_cap(),
             cfg.log_cfg.region_size,
             cfg.log_cfg.segment_size,
             slot_size,
         );
+        if let Some(c) = cfg.ingress_channels {
+            world.fabric.set_ingress(c);
+        }
         world.preload_shard(preload.0, preload.1, shard, shards);
         world.nvm.reset_stats();
         world
+    }
+
+    /// Do the YCSB clients run the windowed/open-loop pipeline? (Scripted
+    /// clients always stay closed loop — failure-injection scripts rely on
+    /// strictly sequential semantics.)
+    fn use_pipeline(cfg: &DriverConfig) -> bool {
+        cfg.window > 1 || cfg.arrival.is_open() || cfg.ingress_channels.is_some()
+    }
+
+    /// The open-loop arrival generator for client `c` (None = closed loop).
+    fn client_arrivals(cfg: &DriverConfig, c: u64) -> Option<ArrivalGen> {
+        cfg.arrival
+            .is_open()
+            .then(|| ArrivalGen::new(cfg.arrival, cfg.workload.seed, c, 0))
     }
 
     /// Split every script into per-shard subsequences: each op goes to the
@@ -490,8 +546,19 @@ impl Cluster {
         }
         for &c in clients {
             let src = Self::client_source(cfg, c, shard, shards);
-            let client = ErdaClient::new(src, cfg.ops_per_client, default_cfg);
-            engine.spawn(Box::new(client), 0);
+            if Self::use_pipeline(cfg) {
+                let client = PipelinedClient::new(
+                    ErdaDriver(default_cfg),
+                    src,
+                    cfg.ops_per_client,
+                    cfg.window,
+                    Self::client_arrivals(cfg, c),
+                );
+                engine.spawn(Box::new(client), 0);
+            } else {
+                let client = ErdaClient::new(src, cfg.ops_per_client, default_cfg);
+                engine.spawn(Box::new(client), 0);
+            }
         }
         if cfg.cleaning_threshold.is_some() {
             for h in 0..cfg.log_cfg.num_heads {
@@ -502,8 +569,13 @@ impl Cluster {
 
         let events = engine.events();
         let mut world = engine.state;
-        let stats =
-            RunStats::collect(&world.counters, world.cpu.busy_ns(), world.nvm.stats(), events);
+        let stats = RunStats::collect(
+            &world.counters,
+            world.cpu.busy_ns(),
+            world.nvm.stats(),
+            world.fabric.stats(),
+            events,
+        );
         world.settle();
         (stats, Db::from_erda(world))
     }
@@ -530,16 +602,32 @@ impl Cluster {
         }
         for &c in clients {
             let src = Self::client_source(cfg, c, shard, shards);
-            let client = BaselineClient::new(src, cfg.ops_per_client);
-            engine.spawn(Box::new(client), 0);
+            if Self::use_pipeline(cfg) {
+                let client = PipelinedClient::new(
+                    BaselineDriver,
+                    src,
+                    cfg.ops_per_client,
+                    cfg.window,
+                    Self::client_arrivals(cfg, c),
+                );
+                engine.spawn(Box::new(client), 0);
+            } else {
+                let client = BaselineClient::new(src, cfg.ops_per_client);
+                engine.spawn(Box::new(client), 0);
+            }
         }
         engine.spawn(Box::new(ApplierActor::new(ApplierConfig::default())), 0);
         engine.run();
 
         let events = engine.events();
         let mut world = engine.state;
-        let stats =
-            RunStats::collect(&world.counters, world.cpu.busy_ns(), world.nvm.stats(), events);
+        let stats = RunStats::collect(
+            &world.counters,
+            world.cpu.busy_ns(),
+            world.nvm.stats(),
+            world.fabric.stats(),
+            events,
+        );
         world.settle();
         (stats, Db::from_baseline(world))
     }
@@ -694,6 +782,158 @@ mod tests {
                 stats.ops
             );
         }
+    }
+
+    #[test]
+    fn erda_throughput_grows_with_the_window() {
+        // The tentpole claim: Erda's one-sided read path has no server-CPU
+        // bottleneck at all, so pipelining ops per client must raise
+        // throughput roughly with the window.
+        let kops = |window: usize| {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .clients(4)
+                .window(window)
+                .workload(Workload::ReadOnly)
+                .ops_per_client(200)
+                .records(128)
+                .value_size(256)
+                .warmup(0)
+                .run()
+                .stats
+                .kops()
+        };
+        let w1 = kops(1);
+        let w8 = kops(8);
+        assert!(w8 > 4.0 * w1, "window 8 must overlap Erda ops: {w1} -> {w8} KOp/s");
+    }
+
+    #[test]
+    fn windowed_baselines_saturate_at_the_cpu_ceiling() {
+        // Redo Logging is CPU-bound: a larger window fills the queue but
+        // cannot push past c/s, so window 16 gains far less than 16x.
+        let kops = |window: usize| {
+            Cluster::builder()
+                .scheme(Scheme::RedoLogging)
+                .clients(4)
+                .window(window)
+                .ops_per_client(150)
+                .records(128)
+                .value_size(256)
+                .warmup(0)
+                .run()
+                .stats
+                .kops()
+        };
+        let w1 = kops(1);
+        let w16 = kops(16);
+        assert!(w16 < 8.0 * w1, "Redo must hit the CPU ceiling: {w1} -> {w16} KOp/s");
+        assert!(w16 > w1, "queueing still helps below saturation: {w1} -> {w16}");
+    }
+
+    #[test]
+    fn open_loop_run_accounts_offered_vs_achieved() {
+        // Saturating open loop: arrivals outpace service; every arrival is
+        // offered, every op eventually completes (the queue drains after
+        // arrivals stop), and the queue depth is visibly nonzero.
+        let outcome = Cluster::builder()
+            .scheme(Scheme::Erda)
+            .clients(2)
+            .window(2)
+            .arrival(crate::ycsb::Arrival::Fixed { rate: 500_000.0 })
+            .ops_per_client(150)
+            .records(64)
+            .value_size(64)
+            .warmup(0)
+            .run();
+        let s = &outcome.stats;
+        assert_eq!(s.offered_ops, 2 * 150, "every arrival recorded as offered");
+        assert_eq!(s.ops, 2 * 150, "backlog drains once arrivals stop");
+        assert!(s.queue_depth_max > 0, "offered must outpace the window");
+        assert!(s.mean_queue_depth() > 0.0);
+    }
+
+    #[test]
+    fn open_loop_runs_are_deterministic() {
+        let run = || {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(2)
+                .clients(4)
+                .window(4)
+                .arrival(crate::ycsb::Arrival::Poisson { rate: 100_000.0 })
+                .ops_per_client(100)
+                .records(64)
+                .value_size(64)
+                .warmup(0)
+                .run()
+                .stats
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.offered_ops, b.offered_ops);
+        assert_eq!(a.duration_ns, b.duration_ns);
+        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
+        assert_eq!(a.queue_depth_max, b.queue_depth_max);
+    }
+
+    #[test]
+    fn sharded_worlds_are_sized_per_shard() {
+        let cap = 256 << 20;
+        let db = Cluster::builder()
+            .scheme(Scheme::Erda)
+            .shards(4)
+            .nvm_capacity(cap)
+            .records(256)
+            .value_size(64)
+            .preload(256, 64)
+            .build_db();
+        for s in 0..4 {
+            let c = db.shard_nvm_capacity(s).expect("shard exists");
+            assert!(c < cap, "shard {s} arena must be a share, not the cluster: {c}");
+        }
+        let single = Cluster::builder()
+            .scheme(Scheme::Erda)
+            .nvm_capacity(cap)
+            .records(256)
+            .value_size(64)
+            .preload(256, 64)
+            .build_db();
+        assert_eq!(single.shard_nvm_capacity(0), Some(cap), "single shard unchanged");
+        assert_eq!(single.shard_nvm_capacity(1), None);
+    }
+
+    #[test]
+    fn ingress_contention_bounds_erda_scaling() {
+        // With a 1-channel client-NIC ingress, admissions serialize: the
+        // windowed run must be slower than the unmetered one, and waits
+        // must be accounted.
+        let run = |ingress: Option<usize>| {
+            let mut b = Cluster::builder()
+                .scheme(Scheme::Erda)
+                .clients(8)
+                .window(8)
+                .ops_per_client(100)
+                .records(128)
+                .value_size(1024)
+                .warmup(0);
+            if let Some(c) = ingress {
+                b = b.ingress(c);
+            }
+            b.run().stats
+        };
+        let free = run(None);
+        let metered = run(Some(1));
+        assert_eq!(free.ingress_admitted, 0);
+        assert_eq!(metered.ingress_admitted, 8 * 100);
+        assert!(metered.ingress_wait_ns > 0, "one channel must queue 64 in-flight ops");
+        assert!(
+            metered.kops() < free.kops(),
+            "ingress contention must cost throughput: {} vs {}",
+            metered.kops(),
+            free.kops()
+        );
     }
 
     #[test]

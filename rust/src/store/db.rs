@@ -86,6 +86,17 @@ impl Db {
         super::shard_of(key, self.shards.len())
     }
 
+    /// Simulated NVM capacity of one shard world, in bytes (None = shard
+    /// index out of range). With `shards(n)`, per-world capacity is the
+    /// data-derived share of the cluster arena plus fixed overhead — the
+    /// sizing regression tests assert it stops being O(cluster) per shard.
+    pub fn shard_nvm_capacity(&self, shard: usize) -> Option<usize> {
+        self.shards.get(shard).map(|inner| match inner {
+            Inner::Erda(w) => w.nvm.capacity(),
+            Inner::Baseline(w) => w.nvm.capacity(),
+        })
+    }
+
     /// NVM write accounting, summed over every shard world.
     pub fn nvm_stats(&self) -> WriteStats {
         let mut out = WriteStats::default();

@@ -28,6 +28,7 @@
 
 pub mod cluster;
 pub mod db;
+pub(crate) mod pipeline;
 
 pub use cluster::{Cluster, ClusterBuilder, RunOutcome};
 pub use db::Db;

@@ -1,0 +1,615 @@
+//! Windowed, open-loop client actors: the async pipeline over every scheme.
+//!
+//! The paper's clients are closed loop — one op in flight, the next issued
+//! only on completion — so attainable throughput is `clients / latency` and
+//! the NIC-level parallelism Erda frees up (no server CPU on the data path)
+//! never shows in a figure. [`PipelinedClient`] changes the client model,
+//! not the protocols: it keeps up to `window` per-op state machines (the
+//! same [`crate::erda::client`] / [`crate::baselines::client`] state
+//! machines the closed-loop actors drive) in flight simultaneously,
+//! completing them out of order while preserving **per-key ordering** — no
+//! op ever observably overtakes an earlier op on its key.
+//!
+//! Per-key ordering is read/write-aware: a *write* (put/delete) waits for
+//! every in-flight op on its key and for any earlier queued op on it; a
+//! *read* waits only for in-flight or earlier-queued **writes** on its key
+//! — concurrent reads of one key share the window freely, which is what
+//! keeps Erda's YCSB-C throughput scaling linearly with the window even
+//! under Zipfian skew.
+//!
+//! Arrivals are either *closed loop with a window* (a free lane draws the
+//! next op immediately — measures saturation throughput vs window) or
+//! *open loop* ([`crate::ycsb::Arrival::Fixed`] /
+//! [`crate::ycsb::Arrival::Poisson`]): ops arrive at externally-paced
+//! instants regardless of completion progress and queue client-side when
+//! the window is full. Offered vs achieved load and the pending-queue
+//! depth are accounted in [`crate::metrics::Counters`]; open-loop latency
+//! is measured from *arrival* (queueing included).
+//!
+//! With `window = 1` and closed-loop arrivals this actor reproduces the
+//! closed-loop clients' runs bit for bit (same engine events, same times,
+//! same counters) — asserted by `rust/tests/open_loop.rs` — which is why
+//! the cluster driver can route every configuration through one model.
+
+use std::collections::VecDeque;
+
+use crate::baselines::BaselineWorld;
+use crate::erda::{ClientConfig, ErdaWorld};
+use crate::metrics::Counters;
+use crate::rdma::Fabric;
+use crate::sim::{Actor, CompletionSet, Step, Time};
+use crate::store::{OpSource, Request};
+use crate::ycsb::ArrivalGen;
+
+/// What happened to an in-flight op at a protocol step.
+pub(crate) enum OpOutcome<S> {
+    /// Still in flight: new state, next completion instant.
+    Continue(S, Time),
+    /// Completed; record latency from `start` (cleaning-mode ops split out).
+    Finished { start: Time, cleaning: bool },
+    /// The client process died mid-op (failure injection).
+    Crashed,
+}
+
+/// The world surface the windowed client needs, implemented by both shared
+/// world types so one actor drives every scheme.
+pub(crate) trait ClientWorld {
+    fn counters_mut(&mut self) -> &mut Counters;
+    fn fabric_mut(&mut self) -> &mut Fabric;
+}
+
+impl ClientWorld for ErdaWorld {
+    fn counters_mut(&mut self) -> &mut Counters {
+        &mut self.counters
+    }
+    fn fabric_mut(&mut self) -> &mut Fabric {
+        &mut self.fabric
+    }
+}
+
+impl ClientWorld for BaselineWorld {
+    fn counters_mut(&mut self) -> &mut Counters {
+        &mut self.counters
+    }
+    fn fabric_mut(&mut self) -> &mut Fabric {
+        &mut self.fabric
+    }
+}
+
+/// Scheme adapter: begins and advances one op's protocol state machine.
+pub(crate) trait OpDriver {
+    type World: ClientWorld;
+    type St;
+    fn begin(
+        &self,
+        w: &mut Self::World,
+        op: Request,
+        start: Time,
+        now: Time,
+    ) -> OpOutcome<Self::St>;
+    fn advance(&self, w: &mut Self::World, st: Self::St, now: Time) -> OpOutcome<Self::St>;
+}
+
+/// The Erda protocol driver (carries the client tunables).
+pub(crate) struct ErdaDriver(pub ClientConfig);
+
+impl OpDriver for ErdaDriver {
+    type World = ErdaWorld;
+    type St = crate::erda::client::St;
+    fn begin(&self, w: &mut ErdaWorld, op: Request, start: Time, now: Time) -> OpOutcome<Self::St> {
+        crate::erda::client::begin_op(&self.0, w, op, start, now)
+    }
+    fn advance(&self, w: &mut ErdaWorld, st: Self::St, now: Time) -> OpOutcome<Self::St> {
+        crate::erda::client::advance_op(&self.0, w, st, now)
+    }
+}
+
+/// The Redo Logging / Read After Write protocol driver.
+pub(crate) struct BaselineDriver;
+
+impl OpDriver for BaselineDriver {
+    type World = BaselineWorld;
+    type St = crate::baselines::client::St;
+    fn begin(
+        &self,
+        w: &mut BaselineWorld,
+        op: Request,
+        start: Time,
+        now: Time,
+    ) -> OpOutcome<Self::St> {
+        crate::baselines::client::begin_op(w, op, start, now)
+    }
+    fn advance(&self, w: &mut BaselineWorld, st: Self::St, now: Time) -> OpOutcome<Self::St> {
+        crate::baselines::client::advance_op(w, st, now)
+    }
+}
+
+/// The client→server payload an op pushes through the client NIC when it
+/// issues (what the ingress c-server meters): write payloads dominate,
+/// reads/deletes post a small request WQE.
+fn ingress_bytes(req: &Request) -> usize {
+    match req {
+        Request::Get { key } | Request::Delete { key } => key.len() + 16,
+        Request::Put { key, value } | Request::CrashDuringPut { key, value, .. } => {
+            crate::log::object::wire_size(key.len(), value.len())
+        }
+    }
+}
+
+/// Does this op mutate its key (and therefore order exclusively)?
+fn is_write(req: &Request) -> bool {
+    !matches!(req, Request::Get { .. })
+}
+
+/// One windowed client actor (see module docs).
+pub(crate) struct PipelinedClient<D: OpDriver> {
+    driver: D,
+    src: OpSource,
+    /// Ops still to draw from the source.
+    to_draw: u64,
+    window: usize,
+    /// Open-loop arrival process (None = closed loop with a window).
+    arrivals: Option<ArrivalGen>,
+    /// Drawn-but-unissued ops, oldest first, with their arrival instant
+    /// (None for closed-loop draws: latency starts at issue).
+    pending: VecDeque<(Request, Option<Time>)>,
+    /// Per-lane op state (None = free lane).
+    lanes: Vec<Option<D::St>>,
+    /// Per-lane in-flight (key, is_write) — the per-key ordering gate.
+    lane_keys: Vec<Option<(Vec<u8>, bool)>>,
+    /// Completion tokens: lane index → due instant.
+    due: CompletionSet,
+    alive: bool,
+}
+
+impl<D: OpDriver> PipelinedClient<D> {
+    pub fn new(
+        driver: D,
+        src: OpSource,
+        ops: u64,
+        window: usize,
+        arrivals: Option<ArrivalGen>,
+    ) -> Self {
+        let window = window.max(1);
+        PipelinedClient {
+            driver,
+            src,
+            to_draw: ops,
+            window,
+            arrivals,
+            pending: VecDeque::new(),
+            lanes: (0..window).map(|_| None).collect(),
+            lane_keys: (0..window).map(|_| None).collect(),
+            due: CompletionSet::new(),
+            alive: true,
+        }
+    }
+
+    fn die(&mut self, w: &mut D::World) -> Step {
+        let c = w.counters_mut();
+        c.active_clients = c.active_clients.saturating_sub(1);
+        self.alive = false;
+        Step::Done
+    }
+
+    /// No more work now or ever: nothing to draw, nothing queued, nothing
+    /// in flight.
+    fn done(&self) -> bool {
+        self.to_draw == 0 && self.pending.is_empty() && self.due.is_empty()
+    }
+
+    /// Would issuing `req` now reorder it against an in-flight op on the
+    /// same key? Writes need the key fully quiet; reads wait only for
+    /// in-flight writes (read-read shares the window).
+    fn key_blocked(&self, req: &Request) -> bool {
+        let key = req.key();
+        let write = is_write(req);
+        self.lane_keys
+            .iter()
+            .flatten()
+            .any(|(k, w)| (write || *w) && k.as_slice() == key)
+    }
+
+    /// Is an earlier op on this key still parked in the pending queue?
+    /// (Nothing may overtake a queued op on its own key — per-key FIFO.)
+    fn pending_has_key(&self, key: &[u8]) -> bool {
+        self.pending.iter().any(|(r, _)| r.key() == key)
+    }
+
+    fn free_lane(&self) -> Option<usize> {
+        self.lanes.iter().position(|l| l.is_none())
+    }
+
+    /// Issue `req` on `lane`. Returns false if the client crashed (Redo's
+    /// CrashDuringPut dies before any verb posts).
+    fn issue_on(
+        &mut self,
+        w: &mut D::World,
+        lane: usize,
+        req: Request,
+        start: Time,
+        now: Time,
+    ) -> bool {
+        let key = req.key().to_vec();
+        let write = is_write(&req);
+        let admitted = w.fabric_mut().ingress_admit(now, ingress_bytes(&req));
+        match self.driver.begin(w, req, start, admitted) {
+            OpOutcome::Continue(st, at) => {
+                self.lanes[lane] = Some(st);
+                self.lane_keys[lane] = Some((key, write));
+                self.due.arm(lane, at);
+                true
+            }
+            OpOutcome::Crashed => false,
+            OpOutcome::Finished { .. } => unreachable!("every op spans at least one verb"),
+        }
+    }
+
+    /// The oldest pending op that may issue now: first entry whose key gate
+    /// is open AND that no earlier pending entry shares a key with (per-key
+    /// FIFO within the queue; skipping blocked keys reorders across keys —
+    /// allowed — never within one key).
+    fn next_issuable_pending(&self) -> Option<usize> {
+        let mut seen: Vec<&[u8]> = Vec::new();
+        for (i, (r, _)) in self.pending.iter().enumerate() {
+            let key = r.key();
+            if seen.iter().any(|s| *s == key) {
+                continue;
+            }
+            if !self.key_blocked(r) {
+                return Some(i);
+            }
+            seen.push(key);
+        }
+        None
+    }
+
+    /// Fill free lanes: oldest issuable pending op first, then (closed loop
+    /// only) fresh draws from the source. Returns false on client crash.
+    fn issue_pass(&mut self, w: &mut D::World, now: Time) -> bool {
+        'lanes: while let Some(lane) = self.free_lane() {
+            if let Some(i) = self.next_issuable_pending() {
+                let (req, arrived) = self.pending.remove(i).expect("position indexed");
+                let start = arrived.unwrap_or(now);
+                if !self.issue_on(w, lane, req, start, now) {
+                    return false;
+                }
+                continue 'lanes;
+            }
+            // Open loop: new work only arrives with the arrival process.
+            if self.arrivals.is_some() {
+                break;
+            }
+            // Closed loop: draw until something issuable turns up, parking
+            // blocked draws (bounded by the window so a hot key cannot pull
+            // the whole op stream into the backlog). A draw also parks when
+            // an earlier op on its key is parked — nothing overtakes within
+            // a key.
+            while self.to_draw > 0 && self.pending.len() < self.window {
+                match self.src.next() {
+                    None => {
+                        self.to_draw = 0;
+                        break;
+                    }
+                    Some(req) => {
+                        self.to_draw -= 1;
+                        if self.key_blocked(&req) || self.pending_has_key(req.key()) {
+                            self.pending.push_back((req, None));
+                        } else if self.issue_on(w, lane, req, now, now) {
+                            continue 'lanes;
+                        } else {
+                            return false;
+                        }
+                    }
+                }
+            }
+            break;
+        }
+        true
+    }
+}
+
+impl<D: OpDriver> Actor<D::World> for PipelinedClient<D> {
+    fn step(&mut self, w: &mut D::World, now: Time) -> Step {
+        if !self.alive {
+            return Step::Done;
+        }
+        let mut arrived = false;
+        let mut freed = false;
+
+        // Phase 1: open-loop arrivals due by now join the pending queue
+        // (offered-load + queue-depth accounting happens at the arrival).
+        if let Some(gen) = &mut self.arrivals {
+            while self.to_draw > 0 && gen.peek() <= now {
+                let at = gen.next_arrival();
+                match self.src.next() {
+                    None => {
+                        self.to_draw = 0;
+                        break;
+                    }
+                    Some(req) => {
+                        self.to_draw -= 1;
+                        w.counters_mut().record_arrival(at, self.pending.len());
+                        self.pending.push_back((req, Some(at)));
+                        arrived = true;
+                    }
+                }
+            }
+        }
+
+        // Phase 2: in-flight ops whose pending verb completed by now.
+        while let Some(lane) = self.due.pop_due(now) {
+            let st = self.lanes[lane].take().expect("armed lane holds a state");
+            match self.driver.advance(w, st, now) {
+                OpOutcome::Continue(st, at) => {
+                    self.lanes[lane] = Some(st);
+                    self.due.arm(lane, at);
+                }
+                OpOutcome::Finished { start, cleaning } => {
+                    w.counters_mut().record_op(start, now, cleaning);
+                    self.lane_keys[lane] = None;
+                    freed = true;
+                }
+                // The client process died: every other in-flight op dies
+                // with it, unrecorded (same semantics as the closed-loop
+                // client's failure injection).
+                OpOutcome::Crashed => return self.die(w),
+            }
+        }
+        if self.done() {
+            return self.die(w);
+        }
+        // When a lane freed or work arrived, hand back to the engine before
+        // issuing: the issue pass runs in a fresh step at the same instant,
+        // so the issue order relative to other same-instant actors matches
+        // the closed-loop clients' `NextOp` cadence exactly. A step that
+        // only advanced in-flight ops (Continue re-arms) falls through —
+        // nothing new became issuable, and scheduling an extra no-op step
+        // would add engine events the closed-loop clients never schedule.
+        if arrived || freed {
+            return Step::At(now);
+        }
+
+        // Phase 3: issue pass.
+        if !self.issue_pass(w, now) {
+            return self.die(w); // crashed while issuing (Redo crash op)
+        }
+        if self.done() {
+            return self.die(w);
+        }
+        let mut wake = self.due.next_due();
+        if self.to_draw > 0 {
+            if let Some(gen) = &self.arrivals {
+                let a = gen.peek();
+                wake = Some(wake.map_or(a, |t| t.min(a)));
+            }
+        }
+        match wake {
+            Some(t) => Step::At(t),
+            // Unreachable in practice (work remaining implies a wake time);
+            // retire defensively rather than wedge the engine.
+            None => self.die(w),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::log::LogConfig;
+    use crate::nvm::NvmConfig;
+    use crate::sim::{Engine, Timing};
+    use crate::ycsb::{key_of, Arrival};
+
+    fn erda_world() -> ErdaWorld {
+        let mut w = ErdaWorld::new(
+            Timing::default(),
+            NvmConfig { capacity: 32 << 20 },
+            LogConfig::default(),
+            1 << 10,
+        );
+        w.preload(16, 64);
+        w.nvm.reset_stats();
+        w
+    }
+
+    fn script(ops: Vec<Request>) -> OpSource {
+        OpSource::script(ops)
+    }
+
+    fn put(i: u64) -> Request {
+        Request::Put { key: key_of(i), value: vec![0x11u8; 64] }
+    }
+
+    fn get(i: u64) -> Request {
+        Request::Get { key: key_of(i) }
+    }
+
+    #[test]
+    fn windowed_scripted_run_completes_every_op() {
+        let mut w = erda_world();
+        w.counters.active_clients = 1;
+        let ops = vec![get(0), put(1), get(2), put(3), get(4), put(5)];
+        let n = ops.len() as u64;
+        let client = PipelinedClient::new(
+            ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
+            script(ops),
+            n,
+            4,
+            None,
+        );
+        let mut e = Engine::new(w);
+        e.spawn(Box::new(client), 0);
+        e.run();
+        assert_eq!(e.state.counters.ops_measured, n);
+        assert_eq!(e.state.counters.read_misses, 0);
+        assert_eq!(e.state.counters.active_clients, 0);
+    }
+
+    #[test]
+    fn window_overlaps_ops_and_cuts_makespan() {
+        // 8 independent reads: window 8 should finish ~8x faster than
+        // window 1 (pure-latency Erda reads overlap perfectly).
+        let run = |window: usize| -> Time {
+            let mut w = erda_world();
+            w.counters.active_clients = 1;
+            let ops: Vec<Request> = (0..8).map(get).collect();
+            let client = PipelinedClient::new(
+                ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
+                script(ops),
+                8,
+                window,
+                None,
+            );
+            let mut e = Engine::new(w);
+            e.spawn(Box::new(client), 0);
+            e.run()
+        };
+        let t1 = run(1);
+        let t8 = run(8);
+        assert!(
+            t8 * 6 < t1,
+            "window 8 must overlap independent reads: {t8} vs {t1}"
+        );
+    }
+
+    #[test]
+    fn per_key_ordering_holds_under_window() {
+        // Two puts then a get on the SAME key, window 4: the get must see
+        // the second put's value, i.e. ops on one key never reorder.
+        let mut w = erda_world();
+        w.counters.active_clients = 1;
+        let key = key_of(3);
+        let ops = vec![
+            Request::Put { key: key.clone(), value: vec![0xAAu8; 64] },
+            Request::Put { key: key.clone(), value: vec![0xBBu8; 64] },
+            Request::Get { key: key.clone() },
+        ];
+        let client = PipelinedClient::new(
+            ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
+            script(ops),
+            3,
+            4,
+            None,
+        );
+        let mut e = Engine::new(w);
+        e.spawn(Box::new(client), 0);
+        e.run();
+        e.state.settle();
+        assert_eq!(e.state.counters.ops_measured, 3);
+        assert_eq!(e.state.counters.read_misses, 0, "get must not race ahead of the puts");
+        assert_eq!(e.state.get(&key).expect("present"), vec![0xBBu8; 64]);
+    }
+
+    #[test]
+    fn reads_on_one_key_share_the_window() {
+        // 6 reads of the SAME key: writes order exclusively, but read-read
+        // has no dependency — with window 6 the makespan is ~one read, not
+        // six.
+        let run = |window: usize| -> Time {
+            let mut w = erda_world();
+            w.counters.active_clients = 1;
+            let ops: Vec<Request> = (0..6).map(|_| get(1)).collect();
+            let client = PipelinedClient::new(
+                ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
+                script(ops),
+                6,
+                window,
+                None,
+            );
+            let mut e = Engine::new(w);
+            e.spawn(Box::new(client), 0);
+            e.run()
+        };
+        let t1 = run(1);
+        let t6 = run(6);
+        assert!(t6 * 4 < t1, "same-key reads must overlap: {t6} vs {t1}");
+    }
+
+    #[test]
+    fn open_loop_records_offered_load_and_queue_depth() {
+        // Arrivals far faster than service with window 1: offered load is
+        // recorded at arrival, the backlog grows, and every op still
+        // completes (achieved == offered once the queue drains).
+        let mut w = erda_world();
+        w.counters.active_clients = 1;
+        let n = 40u64;
+        let gen = ArrivalGen::new(Arrival::Fixed { rate: 1_000_000.0 }, 9, 0, 0);
+        let client = PipelinedClient::new(
+            ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
+            script((0..n).map(get).collect()),
+            n,
+            1,
+            Some(gen),
+        );
+        let mut e = Engine::new(w);
+        e.spawn(Box::new(client), 0);
+        e.run();
+        let c = &e.state.counters;
+        assert_eq!(c.ops_offered, n, "every arrival recorded");
+        assert_eq!(c.ops_measured, n, "queue drains after arrivals stop");
+        assert!(c.queue_depth_max > 5, "1 Mops/s into ~16 Kops/s service must queue");
+        assert_eq!(c.queue_depth_samples, n);
+    }
+
+    #[test]
+    fn baseline_driver_runs_windowed() {
+        use crate::baselines::Scheme;
+        let mut w = BaselineWorld::new(
+            Timing::default(),
+            NvmConfig { capacity: 32 << 20 },
+            Scheme::RedoLogging,
+            1 << 10,
+            1 << 20,
+            1 << 16,
+            crate::log::object::wire_size(20, 64),
+        );
+        w.preload(8, 64);
+        w.nvm.reset_stats();
+        w.counters.active_clients = 1;
+        let ops: Vec<Request> = (0..8).map(|i| if i % 2 == 0 { get(i) } else { put(i) }).collect();
+        let client = PipelinedClient::new(BaselineDriver, script(ops), 8, 4, None);
+        let mut e = Engine::new(w);
+        e.spawn(Box::new(client), 0);
+        e.run();
+        assert_eq!(e.state.counters.ops_measured, 8);
+        assert_eq!(e.state.counters.read_misses, 0);
+    }
+
+    #[test]
+    fn ingress_queue_delays_admissions_under_window() {
+        // 16 overlapping puts (distinct keys, window 16), ingress with one
+        // channel vs disabled: same-instant issues serialize at the client
+        // NIC, so the metered run must record waits and stretch the
+        // makespan.
+        let run = |channels: Option<usize>| -> (Time, u64, u128) {
+            let mut w = erda_world();
+            if let Some(c) = channels {
+                w.fabric.set_ingress(c);
+            }
+            w.counters.active_clients = 1;
+            let ops: Vec<Request> = (0..16).map(put).collect();
+            let client = PipelinedClient::new(
+                ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
+                script(ops),
+                16,
+                16,
+                None,
+            );
+            let mut e = Engine::new(w);
+            e.spawn(Box::new(client), 0);
+            let end = e.run();
+            let s = e.state.fabric.stats();
+            (end, s.ingress_admitted, s.ingress_wait_ns)
+        };
+        let (t_off, admitted_off, _) = run(None);
+        let (t_on, admitted_on, wait_on) = run(Some(1));
+        assert_eq!(admitted_off, 0);
+        assert_eq!(admitted_on, 16, "every op admitted through the ingress");
+        assert!(wait_on > 0, "one channel must queue 16 same-instant issues");
+        assert!(
+            t_on > t_off,
+            "serialized admissions must stretch the makespan: {t_on} vs {t_off}"
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! Open-loop arrival processes for client actors.
+//!
+//! A closed-loop client issues its next op only when the previous one
+//! completes, so per-shard load self-throttles to whatever the shard can
+//! serve — Zipfian skew never shows up as shard imbalance. An *open-loop*
+//! client draws arrival instants from an external process (Poisson, or a
+//! deterministic fixed rate) regardless of completion progress; ops that
+//! cannot be issued yet queue client-side, which is exactly how offered
+//! load can exceed achieved load and how hot shards fall behind.
+
+use crate::sim::{Rng, Time, SEC};
+
+/// How a client's operations arrive.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum Arrival {
+    /// Closed loop: the next op is drawn on completion (the paper's model).
+    #[default]
+    Closed,
+    /// Deterministic open loop: one arrival every `1/rate` seconds.
+    Fixed {
+        /// Arrival rate in ops per second (per client).
+        rate: f64,
+    },
+    /// Poisson open loop: exponential inter-arrival times with mean
+    /// `1/rate` seconds.
+    Poisson {
+        /// Mean arrival rate in ops per second (per client).
+        rate: f64,
+    },
+}
+
+impl Arrival {
+    /// Is this an open-loop process (arrivals independent of completions)?
+    pub fn is_open(&self) -> bool {
+        !matches!(self, Arrival::Closed)
+    }
+
+    /// The configured rate in ops/s, if open loop.
+    pub fn rate(&self) -> Option<f64> {
+        match self {
+            Arrival::Closed => None,
+            Arrival::Fixed { rate } | Arrival::Poisson { rate } => Some(*rate),
+        }
+    }
+}
+
+/// Streaming generator of arrival instants for one client (deterministic in
+/// its seed; one independent RNG stream per client, separate from the op
+/// stream so the arrival process never perturbs key/value draws).
+pub struct ArrivalGen {
+    kind: Arrival,
+    rng: Rng,
+    /// Next arrival instant (absolute virtual time).
+    next: Time,
+    /// Fixed-rate bookkeeping: arrivals so far (avoids drift from summing
+    /// rounded inter-arrival gaps).
+    count: u64,
+    start: Time,
+}
+
+impl ArrivalGen {
+    /// Build a generator starting at virtual time `start`. The first arrival
+    /// is at `start` itself, so open-loop clients begin work immediately
+    /// (mirroring the closed-loop clients' first op at spawn time).
+    pub fn new(kind: Arrival, seed: u64, stream: u64, start: Time) -> Self {
+        debug_assert!(kind.rate().map(|r| r > 0.0).unwrap_or(true), "rate must be positive");
+        let rng = Rng::new(seed ^ stream.wrapping_mul(0xD1B5_4A32_D192_ED03) ^ 0xA11C_0057);
+        ArrivalGen { kind, rng, next: start, count: 0, start }
+    }
+
+    /// Interval mean in nanoseconds.
+    fn mean_gap_ns(rate: f64) -> f64 {
+        SEC as f64 / rate
+    }
+
+    /// The next arrival instant; advances the process.
+    pub fn next_arrival(&mut self) -> Time {
+        let at = self.next;
+        self.count += 1;
+        self.next = match self.kind {
+            Arrival::Closed => Time::MAX, // never used; Closed has no arrivals
+            Arrival::Fixed { rate } => {
+                // k-th arrival at start + round(k * gap): drift-free.
+                self.start + (self.count as f64 * Self::mean_gap_ns(rate)).round() as Time
+            }
+            Arrival::Poisson { rate } => {
+                // Exponential gap via inverse CDF; clamp the uniform away
+                // from 0 so ln stays finite.
+                let u = self.rng.gen_f64().max(1e-12);
+                let gap = (-u.ln() * Self::mean_gap_ns(rate)).round() as Time;
+                at + gap.max(1)
+            }
+        };
+        at
+    }
+
+    /// Peek the upcoming arrival instant without consuming it.
+    pub fn peek(&self) -> Time {
+        self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_rate_is_exact_and_drift_free() {
+        // 1 Mops/s -> one arrival every 1000 ns, exactly.
+        let mut g = ArrivalGen::new(Arrival::Fixed { rate: 1_000_000.0 }, 7, 0, 500);
+        let times: Vec<Time> = (0..5).map(|_| g.next_arrival()).collect();
+        assert_eq!(times, vec![500, 1_500, 2_500, 3_500, 4_500]);
+    }
+
+    #[test]
+    fn poisson_mean_gap_near_configured_rate() {
+        let rate = 100_000.0; // mean gap 10_000 ns
+        let mut g = ArrivalGen::new(Arrival::Poisson { rate }, 42, 3, 0);
+        let n = 20_000;
+        let mut last = g.next_arrival();
+        let mut sum = 0u64;
+        for _ in 0..n {
+            let t = g.next_arrival();
+            sum += t - last;
+            last = t;
+        }
+        let mean = sum as f64 / n as f64;
+        assert!(
+            (9_000.0..11_000.0).contains(&mean),
+            "mean gap {mean} ns vs expected 10_000"
+        );
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed_and_stream() {
+        let run = |seed, stream| -> Vec<Time> {
+            let mut g = ArrivalGen::new(Arrival::Poisson { rate: 50_000.0 }, seed, stream, 0);
+            (0..100).map(|_| g.next_arrival()).collect()
+        };
+        assert_eq!(run(1, 0), run(1, 0), "same seed+stream replays identically");
+        assert_ne!(run(1, 0), run(1, 1), "streams differ");
+        assert_ne!(run(1, 0), run(2, 0), "seeds differ");
+    }
+
+    #[test]
+    fn arrivals_strictly_increase() {
+        let mut g = ArrivalGen::new(Arrival::Poisson { rate: 1e9 }, 5, 0, 0);
+        let mut last = g.next_arrival();
+        for _ in 0..1000 {
+            let t = g.next_arrival();
+            assert!(t > last, "arrivals must advance: {t} after {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn arrival_kind_accessors() {
+        assert!(!Arrival::Closed.is_open());
+        assert!(Arrival::Fixed { rate: 1.0 }.is_open());
+        assert!(Arrival::Poisson { rate: 1.0 }.is_open());
+        assert_eq!(Arrival::Closed.rate(), None);
+        assert_eq!(Arrival::Fixed { rate: 2.0 }.rate(), Some(2.0));
+    }
+}

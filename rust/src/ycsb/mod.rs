@@ -5,8 +5,10 @@
 //! update-only (100 % write). Keys are `user<NNNN>`; values are seeded
 //! random bytes of the configured size.
 
+pub mod arrival;
 pub mod zipf;
 
+pub use arrival::{Arrival, ArrivalGen};
 pub use zipf::Zipfian;
 
 use crate::sim::Rng;

@@ -1,0 +1,180 @@
+//! Integration tests for the windowed / open-loop client pipeline.
+//!
+//! Covers the PR-3 acceptance surface end-to-end through the public
+//! facade: window=1 reducing to the closed-loop engine bit for bit,
+//! open-loop determinism, per-key-ordering health under deep windows,
+//! offered-vs-achieved accounting when the ingress queue saturates, and
+//! the per-shard world-sizing regression. (Fine-grained per-key ordering
+//! is additionally asserted at the state-machine level by the unit tests
+//! in `store::pipeline`.)
+
+use erda::metrics::RunStats;
+use erda::store::{Cluster, ClusterBuilder, Scheme};
+use erda::ycsb::{Arrival, Workload};
+
+fn builder(scheme: Scheme) -> ClusterBuilder {
+    Cluster::builder()
+        .scheme(scheme)
+        .clients(4)
+        .ops_per_client(200)
+        .workload(Workload::UpdateHeavy)
+        .records(128)
+        .value_size(256)
+        .warmup(0)
+}
+
+/// The windowed actor with `window = 1`, closed-loop arrivals and a
+/// contention-free ingress must reproduce the closed-loop clients' run
+/// exactly: same ops, same virtual timeline, same engine event count, same
+/// latency distribution, same substrate traffic. (A 4096-channel ingress
+/// admits every verb instantly — its only effect is routing the YCSB
+/// clients through the pipelined actor.)
+#[test]
+fn window_one_reduces_to_the_closed_loop_engine_bit_for_bit() {
+    for scheme in Scheme::ALL {
+        let closed: RunStats = builder(scheme).run().stats;
+        let mut piped: RunStats = builder(scheme).window(1).ingress(4096).run().stats;
+
+        assert_eq!(closed.ops, piped.ops, "{scheme:?} ops");
+        assert_eq!(closed.duration_ns, piped.duration_ns, "{scheme:?} makespan");
+        assert_eq!(closed.events, piped.events, "{scheme:?} engine events");
+        assert_eq!(
+            closed.nvm_programmed_bytes, piped.nvm_programmed_bytes,
+            "{scheme:?} NVM programmed"
+        );
+        assert_eq!(
+            closed.nvm_requested_bytes, piped.nvm_requested_bytes,
+            "{scheme:?} NVM requested"
+        );
+        assert_eq!(
+            closed.server_cpu_busy_ns, piped.server_cpu_busy_ns,
+            "{scheme:?} server CPU"
+        );
+        assert_eq!(closed.read_misses, piped.read_misses, "{scheme:?} read misses");
+        let mut closed = closed;
+        assert_eq!(closed.latency.count(), piped.latency.count(), "{scheme:?} samples");
+        assert_eq!(closed.latency.mean_ns(), piped.latency.mean_ns(), "{scheme:?} mean");
+        for p in [0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(
+                closed.latency.percentile_ns(p),
+                piped.latency.percentile_ns(p),
+                "{scheme:?} p{p}"
+            );
+        }
+        // The forced-pipeline run differs only in ingress accounting.
+        assert_eq!(piped.ingress_admitted, piped.ops, "{scheme:?} every op admitted");
+        assert_eq!(piped.ingress_wait_ns, 0, "{scheme:?} 4096 channels never queue");
+    }
+}
+
+/// Same seed, same config → identical open-loop runs; different seeds
+/// diverge. Poisson arrivals are part of the seeded determinism contract.
+#[test]
+fn open_loop_runs_are_deterministic_in_the_seed() {
+    let run = |seed: u64| -> RunStats {
+        builder(Scheme::Erda)
+            .window(4)
+            .arrival(Arrival::Poisson { rate: 50_000.0 })
+            .seed(seed)
+            .run()
+            .stats
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(a.ops, b.ops);
+    assert_eq!(a.offered_ops, b.offered_ops);
+    assert_eq!(a.duration_ns, b.duration_ns);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
+    assert_eq!(a.queue_depth_max, b.queue_depth_max);
+    let c = run(8);
+    assert!(
+        c.duration_ns != a.duration_ns || c.nvm_programmed_bytes != a.nvm_programmed_bytes,
+        "a different seed must produce a different run"
+    );
+}
+
+/// Deep windows across every scheme and a sharded geometry stay healthy:
+/// full quota completes, no read misses (per-key ordering keeps reads
+/// behind the writes they depend on), and out-of-order completion does not
+/// lose ops.
+#[test]
+fn windowed_runs_complete_their_quota_across_schemes_and_shards() {
+    for scheme in Scheme::ALL {
+        for shards in [1usize, 3] {
+            let s = builder(scheme).shards(shards).window(8).run().stats;
+            assert_eq!(s.ops, 4 * 200, "{scheme:?}/{shards} shards: full quota");
+            assert_eq!(s.read_misses, 0, "{scheme:?}/{shards} shards: no lost reads");
+        }
+    }
+}
+
+/// Erda gains throughput with the window while window=1 equals the
+/// closed-loop result — the acceptance shape of the `repro window` sweep.
+#[test]
+fn erda_throughput_scales_with_window_and_window_one_matches_closed_loop() {
+    let readonly = |b: ClusterBuilder| b.workload(Workload::ReadOnly);
+    let closed = readonly(builder(Scheme::Erda)).run().stats;
+    let w1 = readonly(builder(Scheme::Erda)).window(1).run().stats;
+    // window(1) without open-loop/ingress IS the closed-loop path.
+    assert_eq!(closed.duration_ns, w1.duration_ns);
+    assert_eq!(closed.ops, w1.ops);
+    assert_eq!(closed.events, w1.events);
+    // One-sided reads have no server bottleneck: throughput tracks the
+    // window all the way up.
+    let w4 = readonly(builder(Scheme::Erda)).window(4).run().stats;
+    let w16 = readonly(builder(Scheme::Erda)).window(16).run().stats;
+    assert!(w4.kops() > 2.0 * w1.kops(), "{} -> {}", w1.kops(), w4.kops());
+    assert!(w16.kops() > 2.0 * w4.kops(), "{} -> {}", w4.kops(), w16.kops());
+}
+
+/// Saturate a 1-channel client-NIC ingress with an open-loop arrival storm:
+/// offered load is fully accounted, the client-side queue visibly builds,
+/// ingress waits are recorded, and the backlog still drains to completion
+/// once arrivals stop (achieved == offered at quiescence).
+#[test]
+fn ingress_saturation_accounts_offered_vs_achieved() {
+    let s = builder(Scheme::Erda)
+        .window(8)
+        .ingress(1)
+        .arrival(Arrival::Fixed { rate: 400_000.0 })
+        .run()
+        .stats;
+    assert_eq!(s.offered_ops, 4 * 200, "every arrival offered");
+    assert_eq!(s.ops, 4 * 200, "backlog drains to completion");
+    assert!((s.achieved_fraction() - 1.0).abs() < 1e-12);
+    assert!(s.queue_depth_max > 4, "arrival storm must out-run the window");
+    assert!(s.mean_queue_depth() > 0.0);
+    assert_eq!(s.ingress_admitted, 4 * 200);
+    assert!(s.ingress_wait_ns > 0, "one channel must queue 32 in-flight issues");
+    // Offered rate should clearly exceed what one windowed client achieves
+    // mid-run; at quiescence the counts agree, so compare the makespan
+    // instead: 800 ops at 400 K/s/client arrive within ~500 µs, while
+    // service stretches far past it.
+    assert!(
+        s.duration_ns > 2 * 500_000,
+        "service must lag the arrival storm: {} ns",
+        s.duration_ns
+    );
+}
+
+/// Per-shard world sizing (the ROADMAP O(shards × cluster) memory fix):
+/// shard worlds allocate a share of the cluster arena, not all of it, and
+/// sharded runs still complete without exhausting the smaller arenas.
+#[test]
+fn shard_worlds_allocate_a_share_not_the_cluster() {
+    let cap = 128 << 20;
+    let outcome = builder(Scheme::Erda).shards(4).nvm_capacity(cap).run();
+    assert_eq!(outcome.stats.ops, 4 * 200, "sized-down worlds must still fit the run");
+    for s in 0..4 {
+        let c = outcome.db.shard_nvm_capacity(s).expect("shard exists");
+        assert!(
+            c < cap,
+            "shard {s}: per-world arena must be a share of the cluster, got {c} of {cap}"
+        );
+        assert!(c > cap / 8, "shard {s}: the share keeps fixed overhead + skew headroom");
+    }
+    // Single-shard geometry is untouched (the paper's setup).
+    let single = builder(Scheme::Erda).nvm_capacity(cap).run();
+    assert_eq!(single.db.shard_nvm_capacity(0), Some(cap));
+}
