@@ -8,8 +8,11 @@
 //!
 //! Like the Erda client, the per-op state machine is factored into
 //! [`begin_op`]/[`advance_op`] (crate-internal) so the closed-loop
-//! [`BaselineClient`] here and the windowed
-//! [`crate::store::pipeline::PipelinedClient`] drive the same protocol.
+//! [`BaselineClient`] here and the windowed cluster-level
+//! [`crate::store::pipeline::PipelinedClient`] drive the same protocol —
+//! the windowed client binds each op to the shard world its key routes to,
+//! so its window spans shards inside the co-simulated cluster
+//! ([`crate::store::cosim::ClusterState`]).
 
 use super::server::{BaselineWorld, Scheme};
 use crate::log::{object, LogOffset};

@@ -5,13 +5,16 @@
 //! repro figures --fig 18 [--quick] [--out DIR]  one figure (14..26)
 //! repro figures --table 1 [--out DIR]           Table 1
 //! repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
-//!             [--window W] [--arrival-rate R | --fixed-rate R]
+//!             [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
 //!                                               facade end-to-end smoke run
 //! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
 //!                                               shard-count throughput sweep
 //! repro window [--windows 1,2,4,8,16] [--quick] [--out DIR] [--json FILE]
 //!                                               in-flight-window sweep
-//! repro bench-gate --baseline F --current F [--tolerance 0.10]
+//! repro cross-shard [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
+//!                                               co-sim sweep: one window over
+//!                                               all shards + global NIC bound
+//! repro bench-gate --baseline F --current F [--tolerance 0.10] [--update]
 //!                                               benchmark regression gate
 //! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
 //! repro verify-runtime                          artifact self-check
@@ -30,8 +33,16 @@ use crate::ycsb::Arrival;
 pub enum Cmd {
     Figures { ids: Vec<String>, fidelity: Fidelity, out: Option<PathBuf> },
     /// Exercise the `store` facade end-to-end for one scheme, over one or
-    /// more shards, optionally with a windowed / open-loop client pipeline.
-    Smoke { scheme: Scheme, seed: u64, shards: usize, window: usize, arrival: Arrival },
+    /// more shards, optionally with a windowed / open-loop client pipeline
+    /// and the shared client-NIC ingress.
+    Smoke {
+        scheme: Scheme,
+        seed: u64,
+        shards: usize,
+        window: usize,
+        arrival: Arrival,
+        ingress: Option<usize>,
+    },
     /// Scale-out sweep: throughput vs shard count for all three schemes.
     Scaling {
         shards: Vec<usize>,
@@ -46,8 +57,17 @@ pub enum Cmd {
         out: Option<PathBuf>,
         json: Option<PathBuf>,
     },
-    /// Compare a benchmark JSON artifact against a committed baseline.
-    BenchGate { baseline: PathBuf, current: PathBuf, tolerance: f64 },
+    /// Co-sim sweep: one client window spanning every shard, with and
+    /// without the shared-ingress global NIC bound.
+    CrossShard {
+        shards: Vec<usize>,
+        fidelity: Fidelity,
+        out: Option<PathBuf>,
+        json: Option<PathBuf>,
+    },
+    /// Compare a benchmark JSON artifact against a committed baseline;
+    /// `update` writes the passing current artifact over the baseline.
+    BenchGate { baseline: PathBuf, current: PathBuf, tolerance: f64, update: bool },
     Recover,
     VerifyRuntime,
     Help,
@@ -98,6 +118,7 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let mut shards: usize = 1;
             let mut window: usize = 1;
             let mut arrival = Arrival::Closed;
+            let mut ingress: Option<usize> = None;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--scheme" => match it.next() {
@@ -150,11 +171,23 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         }
                         None => bail!("--fixed-rate needs ops/s per client"),
                     },
+                    "--ingress" => match it.next() {
+                        Some(v) => {
+                            let channels = v.parse::<usize>()?;
+                            if channels == 0 {
+                                bail!("--ingress needs at least one channel");
+                            }
+                            ingress = Some(channels);
+                        }
+                        None => bail!("--ingress needs a channel count"),
+                    },
                     other => bail!("unknown smoke flag {other:?}"),
                 }
             }
             match scheme {
-                Some(scheme) => Ok(Cmd::Smoke { scheme, seed, shards, window, arrival }),
+                Some(scheme) => {
+                    Ok(Cmd::Smoke { scheme, seed, shards, window, arrival, ingress })
+                }
                 None => bail!("smoke: pass --scheme erda|redo|raw"),
             }
         }
@@ -224,10 +257,44 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             }
             Ok(Cmd::Window { windows, fidelity, out, json })
         }
+        "cross-shard" | "cross_shard" => {
+            let mut shards: Vec<usize> = figures::CROSS_SHARD_SWEEP.to_vec();
+            let mut fidelity = Fidelity::Full;
+            let mut out = None;
+            let mut json = None;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--shards" => match it.next() {
+                        Some(v) => {
+                            shards = v
+                                .split(',')
+                                .map(|s| s.trim().parse::<usize>())
+                                .collect::<Result<Vec<_>, _>>()?;
+                            if shards.is_empty() || shards.contains(&0) {
+                                bail!("--shards needs a comma list of counts ≥ 1");
+                            }
+                        }
+                        None => bail!("--shards needs a comma list, e.g. 1,2,4,8"),
+                    },
+                    "--quick" => fidelity = Fidelity::Quick,
+                    "--out" => match it.next() {
+                        Some(v) => out = Some(PathBuf::from(v)),
+                        None => bail!("--out needs a directory"),
+                    },
+                    "--json" => match it.next() {
+                        Some(v) => json = Some(PathBuf::from(v)),
+                        None => bail!("--json needs a file path"),
+                    },
+                    other => bail!("unknown cross-shard flag {other:?}"),
+                }
+            }
+            Ok(Cmd::CrossShard { shards, fidelity, out, json })
+        }
         "bench-gate" => {
             let mut baseline = None;
             let mut current = None;
             let mut tolerance = 0.10;
+            let mut update = false;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--baseline" => match it.next() {
@@ -247,12 +314,13 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         }
                         None => bail!("--tolerance needs a fraction, e.g. 0.10"),
                     },
+                    "--update" => update = true,
                     other => bail!("unknown bench-gate flag {other:?}"),
                 }
             }
             match (baseline, current) {
                 (Some(baseline), Some(current)) => {
-                    Ok(Cmd::BenchGate { baseline, current, tolerance })
+                    Ok(Cmd::BenchGate { baseline, current, tolerance, update })
                 }
                 _ => bail!("bench-gate: pass --baseline FILE and --current FILE"),
             }
@@ -273,15 +341,17 @@ USAGE:
   repro figures --table 1 [--out DIR]         Table 1 (NVM writes per op)
   repro figures --ablations [--out DIR]       design-choice ablations (A1–A4)
   repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
-              [--window W] [--arrival-rate R | --fixed-rate R]
+              [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
                                               exercise the store facade end to
                                               end (typed KV ops + a DES run,
                                               optionally over N key-space
-                                              shards, with a W-deep in-flight
-                                              pipeline and an open-loop
-                                              Poisson/fixed arrival process at
-                                              R ops/s per client);
-                                              deterministic in --seed
+                                              shards co-simulated in one event
+                                              heap, with a W-deep in-flight
+                                              pipeline spanning the shards, an
+                                              open-loop Poisson/fixed arrival
+                                              process at R ops/s per client,
+                                              and a C-channel shared client-NIC
+                                              ingress); deterministic in --seed
   repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
                                               scale-out sweep: throughput vs
                                               shard count, all three schemes
@@ -291,11 +361,19 @@ USAGE:
                                               all three schemes (window = 1
                                               reproduces the closed-loop runs
                                               bit for bit)
-  repro bench-gate --baseline FILE --current FILE [--tolerance 0.10]
+  repro cross-shard [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
+                                              co-sim sweep: one client window
+                                              interleaving ops across all
+                                              shards, with and without the
+                                              shared-ingress NIC bound (plus
+                                              per-interval saturation metrics)
+  repro bench-gate --baseline FILE --current FILE [--tolerance 0.10] [--update]
                                               compare a benchmark JSON artifact
                                               against a committed baseline;
                                               fails on Erda throughput
-                                              regressions beyond the tolerance
+                                              regressions beyond the tolerance;
+                                              --update rewrites the baseline
+                                              with the passing current artifact
   repro recover                               crash-recovery demo (PJRT batch verify)
   repro verify-runtime                        check AOT artifacts against local CRC
   repro help                                  this text
@@ -355,7 +433,8 @@ mod tests {
                 seed: 0xE2DA,
                 shards: 1,
                 window: 1,
-                arrival: Arrival::Closed
+                arrival: Arrival::Closed,
+                ingress: None
             }
         );
         assert_eq!(
@@ -365,7 +444,8 @@ mod tests {
                 seed: 7,
                 shards: 1,
                 window: 1,
-                arrival: Arrival::Closed
+                arrival: Arrival::Closed,
+                ingress: None
             }
         );
         assert_eq!(
@@ -375,7 +455,8 @@ mod tests {
                 seed: 9,
                 shards: 4,
                 window: 1,
-                arrival: Arrival::Closed
+                arrival: Arrival::Closed,
+                ingress: None
             }
         );
     }
@@ -383,13 +464,15 @@ mod tests {
     #[test]
     fn parses_windowed_open_loop_smoke() {
         assert_eq!(
-            p("smoke --scheme erda --shards 2 --window 8 --arrival-rate 20000").unwrap(),
+            p("smoke --scheme erda --shards 2 --window 8 --arrival-rate 20000 --ingress 2")
+                .unwrap(),
             Cmd::Smoke {
                 scheme: Scheme::Erda,
                 seed: 0xE2DA,
                 shards: 2,
                 window: 8,
-                arrival: Arrival::Poisson { rate: 20000.0 }
+                arrival: Arrival::Poisson { rate: 20000.0 },
+                ingress: Some(2)
             }
         );
         assert_eq!(
@@ -399,7 +482,8 @@ mod tests {
                 seed: 0xE2DA,
                 shards: 1,
                 window: 4,
-                arrival: Arrival::Fixed { rate: 5000.0 }
+                arrival: Arrival::Fixed { rate: 5000.0 },
+                ingress: None
             }
         );
     }
@@ -417,6 +501,8 @@ mod tests {
         assert!(p("smoke --scheme erda --arrival-rate 0").is_err());
         assert!(p("smoke --scheme erda --arrival-rate -5").is_err());
         assert!(p("smoke --scheme erda --fixed-rate nope").is_err());
+        assert!(p("smoke --scheme erda --ingress 0").is_err());
+        assert!(p("smoke --scheme erda --ingress").is_err());
     }
 
     #[test]
@@ -476,6 +562,31 @@ mod tests {
     }
 
     #[test]
+    fn parses_cross_shard_sweep() {
+        assert_eq!(
+            p("cross-shard").unwrap(),
+            Cmd::CrossShard {
+                shards: figures::CROSS_SHARD_SWEEP.to_vec(),
+                fidelity: Fidelity::Full,
+                out: None,
+                json: None,
+            }
+        );
+        assert_eq!(
+            p("cross-shard --shards 1,2 --quick --json BENCH_cross_shard.json").unwrap(),
+            Cmd::CrossShard {
+                shards: vec![1, 2],
+                fidelity: Fidelity::Quick,
+                out: None,
+                json: Some(PathBuf::from("BENCH_cross_shard.json")),
+            }
+        );
+        assert!(p("cross-shard --shards 0,2").is_err());
+        assert!(p("cross-shard --shards").is_err());
+        assert!(p("cross-shard --bogus").is_err());
+    }
+
+    #[test]
     fn parses_bench_gate() {
         assert_eq!(
             p("bench-gate --baseline ci/baselines/BENCH_scaling.json --current BENCH_scaling.json")
@@ -484,14 +595,16 @@ mod tests {
                 baseline: PathBuf::from("ci/baselines/BENCH_scaling.json"),
                 current: PathBuf::from("BENCH_scaling.json"),
                 tolerance: 0.10,
+                update: false,
             }
         );
         assert_eq!(
-            p("bench-gate --baseline a.json --current b.json --tolerance 0.25").unwrap(),
+            p("bench-gate --baseline a.json --current b.json --tolerance 0.25 --update").unwrap(),
             Cmd::BenchGate {
                 baseline: PathBuf::from("a.json"),
                 current: PathBuf::from("b.json"),
                 tolerance: 0.25,
+                update: true,
             }
         );
         assert!(p("bench-gate --baseline a.json").is_err(), "current is required");

@@ -21,8 +21,12 @@
 //! The per-op state machine is factored into [`begin_op`]/[`advance_op`]
 //! (crate-internal), consumed by two actors: the closed-loop [`ErdaClient`]
 //! here (one op in flight — the paper's client model) and the windowed
-//! [`crate::store::pipeline::PipelinedClient`], which keeps several of
-//! these state machines in flight at once.
+//! cluster-level [`crate::store::pipeline::PipelinedClient`], which keeps
+//! several of these state machines in flight at once — each bound to the
+//! shard world its key routes to, so one client's window spans shards in
+//! the co-simulated cluster. Both drivers mutate only the world they are
+//! handed, which is what lets the same `begin`/`advance` code run under a
+//! single-world engine or inside [`crate::store::cosim::ClusterState`].
 
 use super::server::ErdaWorld;
 use crate::log::{object, HeadId, LogOffset, NO_OFFSET};

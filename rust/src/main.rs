@@ -23,8 +23,8 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        Cmd::Smoke { scheme, seed, shards, window, arrival } => {
-            smoke(scheme, seed, shards, window, arrival)
+        Cmd::Smoke { scheme, seed, shards, window, arrival, ingress } => {
+            smoke(scheme, seed, shards, window, arrival, ingress)
         }
         Cmd::Scaling { shards, fidelity, out, json } => {
             let r = figures::scaling(&shards, fidelity);
@@ -36,8 +36,13 @@ fn main() -> Result<()> {
             r.emit(out.as_deref());
             emit_json(&r, json.as_deref())
         }
-        Cmd::BenchGate { baseline, current, tolerance } => {
-            bench_gate(&baseline, &current, tolerance)
+        Cmd::CrossShard { shards, fidelity, out, json } => {
+            let r = figures::cross_shard(&shards, fidelity);
+            r.emit(out.as_deref());
+            emit_json(&r, json.as_deref())
+        }
+        Cmd::BenchGate { baseline, current, tolerance, update } => {
+            bench_gate(&baseline, &current, tolerance, update)
         }
         Cmd::VerifyRuntime => verify_runtime(),
         Cmd::Recover => recover_demo(),
@@ -55,11 +60,14 @@ fn emit_json(r: &erda::figures::Rendered, path: Option<&std::path::Path>) -> Res
 
 /// Compare a benchmark artifact against the committed baseline: every
 /// `erda*_kops` cell must be within `tolerance` of the baseline (regressions
-/// beyond it fail; improvements always pass).
+/// beyond it fail; improvements always pass). With `update`, a passing gate
+/// rewrites the baseline file with the current artifact — how a green CI
+/// run refreshes the conservative seeded floors in `ci/baselines/`.
 fn bench_gate(
     baseline: &std::path::Path,
     current: &std::path::Path,
     tolerance: f64,
+    update: bool,
 ) -> Result<()> {
     use erda::error::Context;
     use erda::figures::bench;
@@ -69,11 +77,10 @@ fn bench_gate(
             .with_context(|| format!("reading baseline {}", baseline.display()))?,
     )
     .with_context(|| format!("parsing baseline {}", baseline.display()))?;
-    let cur = bench::parse(
-        &std::fs::read_to_string(current)
-            .with_context(|| format!("reading current {}", current.display()))?,
-    )
-    .with_context(|| format!("parsing current {}", current.display()))?;
+    let cur_doc = std::fs::read_to_string(current)
+        .with_context(|| format!("reading current {}", current.display()))?;
+    let cur = bench::parse(&cur_doc)
+        .with_context(|| format!("parsing current {}", current.display()))?;
 
     let lines = bench::gate(&base, &cur, tolerance)?;
     println!(
@@ -104,27 +111,38 @@ fn bench_gate(
         tolerance * 100.0
     );
     println!("bench-gate OK ({} comparisons)", lines.len());
+    if update {
+        std::fs::write(baseline, &cur_doc)
+            .with_context(|| format!("updating baseline {}", baseline.display()))?;
+        println!(
+            "bench-gate: refreshed baseline {} from {}",
+            baseline.display(),
+            current.display()
+        );
+    }
     Ok(())
 }
 
 /// Facade smoke test: typed one-shot ops through `Db`, then a full DES run
 /// through `Cluster` — the same two doors every example and test uses —
-/// over `shards` key-space partitions, with a `window`-deep in-flight
-/// pipeline and (optionally) an open-loop arrival process. Deterministic in
-/// `seed`.
+/// over `shards` key-space partitions co-simulated in one event heap, with
+/// a `window`-deep in-flight pipeline spanning the shards, (optionally) an
+/// open-loop arrival process, and (optionally) the shared client-NIC
+/// ingress. Deterministic in `seed`.
 fn smoke(
     scheme: erda::store::Scheme,
     seed: u64,
     shards: usize,
     window: usize,
     arrival: erda::ycsb::Arrival,
+    ingress: Option<usize>,
 ) -> Result<()> {
     use erda::store::{Cluster, RemoteStore, Request};
     use erda::ycsb::{key_of, Workload};
 
     println!(
         "smoke: scheme = {}, seed = {seed:#x}, shards = {shards}, window = {window}, \
-         arrival = {arrival:?}",
+         arrival = {arrival:?}, ingress = {ingress:?}",
         scheme.label()
     );
 
@@ -149,9 +167,10 @@ fn smoke(
     );
     println!("  db ops OK: put / get / delete / torn-write ({:?})", db.op_stats());
 
-    // 2. End-to-end DES run (clients fanned out over the shard worlds,
-    // each keeping up to `window` ops in flight).
-    let outcome = Cluster::builder()
+    // 2. End-to-end DES run: every shard world in ONE engine; windowed
+    // clients keep up to `window` ops in flight, routed across shards at
+    // issue time, metered by the shared ingress when enabled.
+    let mut b = Cluster::builder()
         .scheme(scheme)
         .shards(shards)
         .clients(4)
@@ -165,8 +184,11 @@ fn smoke(
         // Measure everything: the full-quota check below needs every op of
         // every spawned client counted (the default 5 ms warmup would drop
         // the early ones).
-        .warmup(0)
-        .run();
+        .warmup(0);
+    if let Some(c) = ingress {
+        b = b.ingress(c);
+    }
+    let outcome = b.run();
     let s = &outcome.stats;
     erda::ensure!(
         s.ops > 0 && s.read_misses == 0,
@@ -175,15 +197,35 @@ fn smoke(
         s.read_misses
     );
     // Independently derived expectation (NOT computed from per_shard, which
-    // `stats` is already the merge of): clients fan out over the owning
-    // shards, so every one of the 4 clients must finish its full 250-op
-    // quota no matter the geometry.
+    // `stats` is already the merge of): whether clients are shard-pinned
+    // (closed loop) or cluster-level (windowed/open-loop), every one of the
+    // 4 clients must finish its full 250-op quota no matter the geometry.
     let expected_ops = 4 * 250;
     erda::ensure!(
         s.ops == expected_ops,
         "sharded run under-counted: {} ops vs expected {expected_ops}",
         s.ops
     );
+    if let Some(c) = ingress {
+        erda::ensure!(
+            s.ingress_admitted == expected_ops,
+            "shared ingress must meter every issue: {} vs {expected_ops}",
+            s.ingress_admitted
+        );
+        println!(
+            "  shared ingress: {c} channel(s), {} admissions, mean wait {:.0} ns",
+            s.ingress_admitted,
+            s.mean_ingress_wait_ns()
+        );
+    }
+    if shards > 1 && window > 1 {
+        let spanned = outcome.per_shard.iter().filter(|p| p.ops > 0).count();
+        erda::ensure!(
+            spanned > 1,
+            "cluster-level windows must span shards: ops landed on {spanned} shard(s)"
+        );
+        println!("  co-sim: client windows spanned {spanned} of {shards} shard(s)");
+    }
     if arrival.is_open() {
         erda::ensure!(
             s.offered_ops == expected_ops,

@@ -15,6 +15,27 @@
 
 use crate::sim::Time;
 
+/// Width of one throughput-accounting interval (1 ms of virtual time).
+/// With millisecond buckets a bucket's op count *is* its KOp/s.
+pub const INTERVAL_NS: Time = crate::sim::MS;
+
+/// Hard cap on interval buckets (backstop against a pathological run
+/// allocating unbounded history; ops past the cap land in the last bucket).
+const MAX_INTERVALS: usize = 1 << 20;
+
+/// Bucket index of instant `at` in a measurement starting at `from`.
+fn interval_of(at: Time, from: Time) -> usize {
+    (((at.saturating_sub(from)) / INTERVAL_NS) as usize).min(MAX_INTERVALS - 1)
+}
+
+/// Add `n` to `buckets[idx]`, growing the vector as the run advances.
+fn bump(buckets: &mut Vec<u64>, idx: usize, n: u64) {
+    if buckets.len() <= idx {
+        buckets.resize(idx + 1, 0);
+    }
+    buckets[idx] += n;
+}
+
 /// Latency recorder: mean/percentiles over recorded operation latencies.
 #[derive(Clone, Debug, Default)]
 pub struct LatencyRecorder {
@@ -108,6 +129,14 @@ pub struct Counters {
     pub queue_depth_sum: u64,
     pub queue_depth_samples: u64,
     pub queue_depth_max: u32,
+    /// Completed ops per [`INTERVAL_NS`] interval of the measured phase
+    /// (index 0 starts at `measure_from`): the achieved-throughput timeline,
+    /// so saturation shows up *while* it happens, not only as a final queue
+    /// depth.
+    pub interval_done: Vec<u64>,
+    /// Open-loop arrivals per interval (the offered-load timeline; empty
+    /// for closed-loop runs).
+    pub interval_offered: Vec<u64>,
     /// Virtual time measurement starts (ops completing before are warmup).
     pub measure_from: Time,
     pub first_completion: Time,
@@ -135,6 +164,12 @@ impl Counters {
         self.queue_depth_sum += other.queue_depth_sum;
         self.queue_depth_samples += other.queue_depth_samples;
         self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
+        for (i, &n) in other.interval_done.iter().enumerate() {
+            bump(&mut self.interval_done, i, n);
+        }
+        for (i, &n) in other.interval_offered.iter().enumerate() {
+            bump(&mut self.interval_offered, i, n);
+        }
         // Like first_completion below, 0 means "unset" (a default-initialized
         // accumulator): adopt the other side's boundary instead of clamping
         // a real warmup down to 0.
@@ -157,6 +192,7 @@ impl Counters {
             return;
         }
         self.ops_measured += 1;
+        bump(&mut self.interval_done, interval_of(end, self.measure_from), 1);
         if during_cleaning {
             self.latency_during_cleaning.record(end - start);
         } else {
@@ -176,6 +212,7 @@ impl Counters {
             return;
         }
         self.ops_offered += 1;
+        bump(&mut self.interval_offered, interval_of(at, self.measure_from), 1);
         self.queue_depth_sum += queue_depth as u64;
         self.queue_depth_samples += 1;
         self.queue_depth_max = self.queue_depth_max.max(queue_depth as u32);
@@ -222,10 +259,18 @@ pub struct RunStats {
     pub queue_depth_sum: u64,
     pub queue_depth_samples: u64,
     pub queue_depth_max: u32,
-    /// Ops admitted through the client-NIC ingress queue (0 = disabled).
+    /// Ops admitted through the shared client-NIC ingress queue (0 =
+    /// disabled; one queue per cluster, not per shard).
     pub ingress_admitted: u64,
     /// Total time ops queued at the ingress before posting their verb.
     pub ingress_wait_ns: u128,
+    /// Completed ops per [`INTERVAL_NS`] interval of the measured phase
+    /// (achieved-throughput timeline; with 1 ms intervals a bucket's count
+    /// equals its KOp/s).
+    pub interval_done: Vec<u64>,
+    /// Open-loop arrivals per interval (offered-load timeline; empty for
+    /// closed-loop runs).
+    pub interval_offered: Vec<u64>,
 }
 
 impl RunStats {
@@ -279,45 +324,45 @@ impl RunStats {
         self.ingress_wait_ns as f64 / self.ingress_admitted as f64
     }
 
-    /// Aggregate per-shard run stats into the cluster-level view: every
-    /// counter (ops, misses, NVM bytes, CPU busy time, events, …) is the
-    /// *sum* of the shards, latency distributions merge sample-for-sample,
-    /// and the measured duration is the slowest shard's makespan (shards
-    /// run concurrently, so the cluster finishes when the last one does).
-    pub fn merged(parts: &[RunStats]) -> RunStats {
-        let mut out = RunStats::default();
-        for p in parts {
-            out.ops += p.ops;
-            out.duration_ns = out.duration_ns.max(p.duration_ns);
-            out.latency.merge(&p.latency);
-            out.latency_cleaning.merge(&p.latency_cleaning);
-            out.server_cpu_busy_ns += p.server_cpu_busy_ns;
-            out.nvm_programmed_bytes += p.nvm_programmed_bytes;
-            out.nvm_requested_bytes += p.nvm_requested_bytes;
-            out.inconsistencies_detected += p.inconsistencies_detected;
-            out.fallback_reads += p.fallback_reads;
-            out.retries += p.retries;
-            out.repairs += p.repairs;
-            out.read_misses += p.read_misses;
-            out.applied += p.applied;
-            out.cleanings += p.cleanings;
-            out.events += p.events;
-            out.offered_ops += p.offered_ops;
-            out.queue_depth_sum += p.queue_depth_sum;
-            out.queue_depth_samples += p.queue_depth_samples;
-            out.queue_depth_max = out.queue_depth_max.max(p.queue_depth_max);
-            out.ingress_admitted += p.ingress_admitted;
-            out.ingress_wait_ns += p.ingress_wait_ns;
+    /// Achieved throughput per interval, KOp/s (the saturation timeline).
+    pub fn interval_kops(&self) -> Vec<f64> {
+        let per_sec = 1e9 / INTERVAL_NS as f64;
+        self.interval_done.iter().map(|&n| n as f64 * per_sec / 1e3).collect()
+    }
+
+    /// Peak single-interval achieved throughput, KOp/s.
+    pub fn peak_interval_kops(&self) -> f64 {
+        self.interval_kops().iter().copied().fold(0.0, f64::max)
+    }
+
+    /// The worst per-interval achieved/offered fraction over intervals with
+    /// any offered load — the offered-vs-achieved gap *while saturated*
+    /// (1.0 for closed-loop runs, where nothing is ever offered-and-unmet
+    /// inside an interval).
+    pub fn worst_interval_fraction(&self) -> f64 {
+        let mut worst = 1.0f64;
+        for (i, &offered) in self.interval_offered.iter().enumerate() {
+            if offered == 0 {
+                continue;
+            }
+            let done = self.interval_done.get(i).copied().unwrap_or(0);
+            worst = worst.min(done as f64 / offered as f64);
         }
-        out
+        worst
     }
 
     /// Collect run stats from the shared counters + substrate accounting.
+    /// Cluster-level aggregation happens *before* collection — the cluster
+    /// driver merges every shard's [`Counters`] (one timeline) and sums the
+    /// substrate accounting, then collects once — so there is no
+    /// RunStats-level merge: per-shard breakdowns and the cluster view are
+    /// both collected from counters.
+    /// Ingress accounting is cluster-level (the shared NIC queue), not a
+    /// world substrate — fold it in with [`RunStats::with_ingress`].
     pub fn collect(
         c: &Counters,
         server_cpu_busy_ns: u128,
         nvm: crate::nvm::WriteStats,
-        fabric: crate::rdma::FabricStats,
         events: u64,
     ) -> RunStats {
         RunStats {
@@ -340,9 +385,18 @@ impl RunStats {
             queue_depth_sum: c.queue_depth_sum,
             queue_depth_samples: c.queue_depth_samples,
             queue_depth_max: c.queue_depth_max,
-            ingress_admitted: fabric.ingress_admitted,
-            ingress_wait_ns: fabric.ingress_wait_ns,
+            ingress_admitted: 0,
+            ingress_wait_ns: 0,
+            interval_done: c.interval_done.clone(),
+            interval_offered: c.interval_offered.clone(),
         }
+    }
+
+    /// Fold the shared client-NIC ingress accounting into these stats.
+    pub fn with_ingress(mut self, ingress: crate::rdma::IngressStats) -> RunStats {
+        self.ingress_admitted = ingress.admitted;
+        self.ingress_wait_ns = ingress.wait_ns;
+        self
     }
 }
 
@@ -409,44 +463,6 @@ mod tests {
     }
 
     #[test]
-    fn merged_sums_counters_and_maxes_duration() {
-        let a = RunStats {
-            ops: 10,
-            duration_ns: 500,
-            server_cpu_busy_ns: 7,
-            nvm_programmed_bytes: 100,
-            nvm_requested_bytes: 150,
-            read_misses: 1,
-            applied: 4,
-            events: 20,
-            ..Default::default()
-        };
-        let mut b = RunStats {
-            ops: 5,
-            duration_ns: 900,
-            server_cpu_busy_ns: 3,
-            nvm_programmed_bytes: 50,
-            nvm_requested_bytes: 60,
-            inconsistencies_detected: 2,
-            events: 11,
-            ..Default::default()
-        };
-        b.latency.record(42);
-        let m = RunStats::merged(&[a, b]);
-        assert_eq!(m.ops, 15);
-        assert_eq!(m.duration_ns, 900, "makespan = slowest shard");
-        assert_eq!(m.server_cpu_busy_ns, 10);
-        assert_eq!(m.nvm_programmed_bytes, 150);
-        assert_eq!(m.nvm_requested_bytes, 210);
-        assert_eq!(m.inconsistencies_detected, 2);
-        assert_eq!(m.read_misses, 1);
-        assert_eq!(m.applied, 4);
-        assert_eq!(m.events, 31);
-        assert_eq!(m.latency.count(), 1);
-        assert_eq!(RunStats::merged(&[]).ops, 0);
-    }
-
-    #[test]
     fn counters_merge_folds_worlds() {
         let mut a = Counters { inconsistencies: 1, read_misses: 2, ..Default::default() };
         a.record_op(0, 10, false);
@@ -484,12 +500,8 @@ mod tests {
             write_ops: 1,
             atomic_ops: 0,
         };
-        let fabric = crate::rdma::FabricStats {
-            ingress_admitted: 4,
-            ingress_wait_ns: 1200,
-            ..Default::default()
-        };
-        let s = RunStats::collect(&c, 5, nvm, fabric, 9);
+        let ingress = crate::rdma::IngressStats { admitted: 4, wait_ns: 1200 };
+        let s = RunStats::collect(&c, 5, nvm, 9).with_ingress(ingress);
         assert_eq!(s.ops, 1);
         assert_eq!(s.inconsistencies_detected, 2);
         assert_eq!(s.fallback_reads, 1);
@@ -518,6 +530,54 @@ mod tests {
     }
 
     #[test]
+    fn interval_buckets_track_the_throughput_timeline() {
+        let mut c = Counters { measure_from: INTERVAL_NS, ..Default::default() };
+        // Warmup op: no bucket.
+        c.record_op(0, INTERVAL_NS / 2, false);
+        assert!(c.interval_done.is_empty());
+        // Two ops in the first measured interval, one in the third.
+        c.record_op(INTERVAL_NS, INTERVAL_NS + 10, false);
+        c.record_op(INTERVAL_NS, INTERVAL_NS + 20, false);
+        c.record_op(INTERVAL_NS, 3 * INTERVAL_NS + 5, true);
+        assert_eq!(c.interval_done, vec![2, 0, 1]);
+        // Arrivals bucket on the offered timeline.
+        c.record_arrival(INTERVAL_NS + 1, 0);
+        c.record_arrival(2 * INTERVAL_NS + 1, 3);
+        c.record_arrival(2 * INTERVAL_NS + 2, 4);
+        assert_eq!(c.interval_offered, vec![1, 2]);
+
+        // Merge is element-wise over both timelines.
+        let mut other = Counters { measure_from: INTERVAL_NS, ..Default::default() };
+        other.record_op(INTERVAL_NS, INTERVAL_NS + 1, false);
+        other.record_arrival(3 * INTERVAL_NS + 1, 0);
+        let mut merged = c.clone();
+        merged.merge(&other);
+        assert_eq!(merged.interval_done, vec![3, 0, 1]);
+        assert_eq!(merged.interval_offered, vec![1, 2, 1]);
+
+        // RunStats carries the buckets; 1 ms buckets read directly as KOp/s.
+        let s = RunStats::collect(&c, 0, crate::nvm::WriteStats::default(), 0);
+        assert_eq!(s.interval_done, vec![2, 0, 1]);
+        assert_eq!(s.interval_kops(), vec![2.0, 0.0, 1.0]);
+        assert_eq!(s.peak_interval_kops(), 2.0);
+        // Interval 0: 2 done vs 1 offered (fraction clamps the min at 1.0
+        // contributions ≥ 1); interval 1: 0 done vs 2 offered → worst 0.0.
+        assert_eq!(s.worst_interval_fraction(), 0.0);
+    }
+
+    #[test]
+    fn worst_interval_fraction_defaults_to_one() {
+        let closed = RunStats { interval_done: vec![5, 5], ..Default::default() };
+        assert_eq!(closed.worst_interval_fraction(), 1.0);
+        let matched = RunStats {
+            interval_done: vec![4, 6],
+            interval_offered: vec![4, 4],
+            ..Default::default()
+        };
+        assert_eq!(matched.worst_interval_fraction(), 1.0);
+    }
+
+    #[test]
     fn offered_vs_achieved_helpers() {
         // Closed loop: offered falls back to achieved.
         let closed = RunStats { ops: 100, duration_ns: 1_000_000_000, ..Default::default() };
@@ -536,9 +596,5 @@ mod tests {
         assert!((open.offered_kops() - 2.0 * open.kops()).abs() < 1e-9);
         assert_eq!(open.achieved_fraction(), 0.5);
         assert_eq!(open.mean_queue_depth(), 2.5);
-        // Merge keeps sums and maxes.
-        let m = RunStats::merged(&[open.clone(), closed]);
-        assert_eq!(m.offered_ops, 200);
-        assert_eq!(m.queue_depth_max, 42);
     }
 }

@@ -23,6 +23,14 @@ impl WriteStats {
             atomic_ops: self.atomic_ops - earlier.atomic_ops,
         }
     }
+
+    /// Fold another world's traffic into this one (cluster aggregation).
+    pub fn merge(&mut self, other: WriteStats) {
+        self.programmed_bytes += other.programmed_bytes;
+        self.requested_bytes += other.requested_bytes;
+        self.write_ops += other.write_ops;
+        self.atomic_ops += other.atomic_ops;
+    }
 }
 
 #[cfg(test)]
@@ -35,5 +43,12 @@ mod tests {
         let b = WriteStats { programmed_bytes: 25, requested_bytes: 40, write_ops: 5, atomic_ops: 3 };
         let d = b.since(&a);
         assert_eq!(d, WriteStats { programmed_bytes: 15, requested_bytes: 28, write_ops: 3, atomic_ops: 2 });
+    }
+
+    #[test]
+    fn merge_sums_fields() {
+        let mut a = WriteStats { programmed_bytes: 10, requested_bytes: 12, write_ops: 2, atomic_ops: 1 };
+        a.merge(WriteStats { programmed_bytes: 5, requested_bytes: 8, write_ops: 1, atomic_ops: 0 });
+        assert_eq!(a, WriteStats { programmed_bytes: 15, requested_bytes: 20, write_ops: 3, atomic_ops: 1 });
     }
 }

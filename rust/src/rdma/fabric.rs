@@ -1,10 +1,71 @@
-//! The fabric: verb timing + the volatile NIC cache + (optionally) the
-//! client-side NIC ingress queue.
+//! The fabric: verb timing + the volatile NIC cache, plus the shared
+//! client-side NIC [`Ingress`] queue.
 
 use std::collections::VecDeque;
 
 use crate::nvm::{Addr, Nvm};
 use crate::sim::{CpuPool, Time, Timing};
+
+/// Client-NIC ingress statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngressStats {
+    /// Ops admitted through the ingress queue.
+    pub admitted: u64,
+    /// Total virtual time ops spent queued at the ingress before their
+    /// first verb could post.
+    pub wait_ns: u128,
+}
+
+/// The shared client-NIC ingress, modeled as a c-server FIFO queue: every
+/// op issue occupies one of `channels` DMA channels for its request's wire
+/// time (floored at [`Timing::ingress_post_ns`]) before the verb can post.
+///
+/// There is exactly **one** instance per cluster run — not one per shard
+/// world. One-sided RDMA removes the server CPU from the data path, so the
+/// honest bottleneck at scale is the *shared* client NIC: every shard's
+/// issue path meters through this single queue, which is what makes the
+/// NIC bound global instead of a per-shard fiction that would overstate
+/// scale-out.
+pub struct Ingress {
+    timing: Timing,
+    pool: CpuPool,
+    stats: IngressStats,
+}
+
+impl Ingress {
+    /// An ingress with `channels` parallel DMA channels.
+    pub fn new(timing: Timing, channels: usize) -> Self {
+        assert!(channels >= 1, "the ingress queue needs at least one channel");
+        Ingress { timing, pool: CpuPool::new(channels), stats: IngressStats::default() }
+    }
+
+    /// Admit an op's first verb of `bytes` through the client NIC. Returns
+    /// the admission instant: `now` when a channel is free, later when all
+    /// channels are busy serializing earlier requests — the queueing delay
+    /// that bounds aggregate offered load at the client side.
+    pub fn admit(&mut self, now: Time, bytes: usize) -> Time {
+        let svc = self.timing.wire(bytes).max(self.timing.ingress_post_ns);
+        let resv = self.pool.reserve(now, svc);
+        self.stats.admitted += 1;
+        self.stats.wait_ns += (resv.start - now) as u128;
+        resv.start
+    }
+
+    /// Number of parallel DMA channels.
+    pub fn channels(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Reset the accounting (measurement boundary — warmup-era admissions
+    /// and waits must not leak into the measured figures).
+    pub fn reset_stats(&mut self) {
+        self.stats = IngressStats::default();
+    }
+
+    pub fn stats(&self) -> IngressStats {
+        self.stats
+    }
+}
 
 /// A chunk of a one-sided write waiting in the NIC's volatile cache.
 #[derive(Clone, Debug)]
@@ -24,24 +85,15 @@ pub struct FabricStats {
     pub bytes_written: u64,
     /// Chunks dropped from the NIC cache by an injected failure.
     pub chunks_dropped: u64,
-    /// Ops admitted through the client-NIC ingress queue.
-    pub ingress_admitted: u64,
-    /// Total virtual time ops spent queued at the ingress before their
-    /// first verb could post.
-    pub ingress_wait_ns: u128,
 }
 
-/// The simulated RDMA fabric between all clients and one server.
+/// The simulated RDMA fabric between all clients and one server. (The
+/// client-side NIC ingress queue is NOT per fabric — it is the cluster-wide
+/// [`Ingress`], shared by every shard world's issue path.)
 pub struct Fabric {
     pub timing: Timing,
     pending: VecDeque<PendingChunk>,
     stats: FabricStats,
-    /// Client-side NIC ingress, modeled as a c-server FIFO queue: every op
-    /// issue occupies one of `c` DMA channels for its request's wire time
-    /// before the verb can post. `None` (the default) = unbounded ingress,
-    /// i.e. the pre-windowing behavior where verbs post instantly — kept as
-    /// the default so closed-loop runs reproduce bit-for-bit.
-    ingress: Option<CpuPool>,
 }
 
 /// NIC drain granularity: RNICs move cache lines; NVM programs 64 B lines.
@@ -49,45 +101,7 @@ const CHUNK: usize = 64;
 
 impl Fabric {
     pub fn new(timing: Timing) -> Self {
-        Fabric { timing, pending: VecDeque::new(), stats: FabricStats::default(), ingress: None }
-    }
-
-    /// Enable the shared client-NIC ingress queue with `channels` parallel
-    /// DMA channels (a c-server in virtual time). Disabled by default.
-    pub fn set_ingress(&mut self, channels: usize) {
-        self.ingress = Some(CpuPool::new(channels));
-    }
-
-    /// Is the ingress queue enabled?
-    pub fn has_ingress(&self) -> bool {
-        self.ingress.is_some()
-    }
-
-    /// Reset the ingress accounting (measurement boundary — warmup-era
-    /// admissions and waits must not leak into the measured figures).
-    pub fn reset_ingress_stats(&mut self) {
-        self.stats.ingress_admitted = 0;
-        self.stats.ingress_wait_ns = 0;
-    }
-
-    /// Admit an op's first verb of `bytes` through the client-NIC ingress.
-    /// Returns the admission instant: `now` when the ingress is disabled or
-    /// a channel is free, later when all channels are busy serializing
-    /// earlier requests — the queueing delay that bounds offered load at
-    /// the client side. Channel occupancy is the request's wire time with
-    /// the [`Timing::ingress_post_ns`] per-verb floor (doorbell + DMA
-    /// setup).
-    pub fn ingress_admit(&mut self, now: Time, bytes: usize) -> Time {
-        match &mut self.ingress {
-            None => now,
-            Some(q) => {
-                let svc = self.timing.wire(bytes).max(self.timing.ingress_post_ns);
-                let resv = q.reserve(now, svc);
-                self.stats.ingress_admitted += 1;
-                self.stats.ingress_wait_ns += (resv.start - now) as u128;
-                resv.start
-            }
-        }
+        Fabric { timing, pending: VecDeque::new(), stats: FabricStats::default() }
     }
 
     /// Apply every pending NIC-cache chunk that has reached its persist time.
@@ -284,38 +298,32 @@ mod tests {
     }
 
     #[test]
-    fn ingress_disabled_admits_instantly() {
-        let (mut f, _) = setup();
-        assert!(!f.has_ingress());
-        assert_eq!(f.ingress_admit(123, 4096), 123);
-        assert_eq!(f.stats().ingress_admitted, 0);
-    }
-
-    #[test]
     fn ingress_serializes_past_channel_count() {
-        let (mut f, _) = setup();
-        f.set_ingress(2);
+        let mut q = Ingress::new(Timing::default(), 2);
+        assert_eq!(q.channels(), 2);
         // 4096 B at 0.2 ns/B = 819 ns channel occupancy.
-        let svc = f.timing.wire(4096);
-        let a = f.ingress_admit(0, 4096);
-        let b = f.ingress_admit(0, 4096);
-        let c = f.ingress_admit(0, 4096);
+        let svc = q.timing.wire(4096);
+        let a = q.admit(0, 4096);
+        let b = q.admit(0, 4096);
+        let c = q.admit(0, 4096);
         assert_eq!(a, 0);
         assert_eq!(b, 0, "second channel free");
         assert_eq!(c, svc, "third op waits for a channel");
-        let s = f.stats();
-        assert_eq!(s.ingress_admitted, 3);
-        assert_eq!(s.ingress_wait_ns, svc as u128);
+        let s = q.stats();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.wait_ns, svc as u128);
+        q.reset_stats();
+        assert_eq!(q.stats().admitted, 0);
+        assert_eq!(q.stats().wait_ns, 0);
     }
 
     #[test]
     fn ingress_small_verbs_pay_the_posting_floor() {
-        let (mut f, _) = setup();
-        f.set_ingress(1);
-        let floor = f.timing.ingress_post_ns;
+        let mut q = Ingress::new(Timing::default(), 1);
+        let floor = q.timing.ingress_post_ns;
         assert!(floor > 0);
-        assert_eq!(f.ingress_admit(0, 16), 0);
-        assert_eq!(f.ingress_admit(0, 16), floor, "posting floor per verb");
+        assert_eq!(q.admit(0, 16), 0);
+        assert_eq!(q.admit(0, 16), floor, "posting floor per verb");
     }
 
     #[test]

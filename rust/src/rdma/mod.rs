@@ -20,4 +20,4 @@
 
 pub mod fabric;
 
-pub use fabric::{Fabric, FabricStats};
+pub use fabric::{Fabric, FabricStats, Ingress, IngressStats};

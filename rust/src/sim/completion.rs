@@ -8,6 +8,13 @@
 //! bookkeeping — a deterministic min-heap of `(time, seq, token)` with FIFO
 //! tie-breaking, mirroring the engine heap so same-instant completions
 //! resolve in registration order.
+//!
+//! In the co-simulated cluster the tokens are the *lanes* of a
+//! cluster-level windowed client ([`crate::store::pipeline`]), whose
+//! in-flight ops span different shard worlds: because the set orders by
+//! `(time, seq)` only, same-instant completions from different shards
+//! drain in the order their verbs were posted — the same deterministic
+//! tie-break the engine applies across shards.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

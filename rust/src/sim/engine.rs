@@ -7,6 +7,18 @@
 //! log applier, or the Erda log cleaner. Each `step` runs at a virtual
 //! instant and returns when (absolute virtual time) the actor next wants to
 //! run, or `Done`.
+//!
+//! **Ordering contract.** Events execute in ascending `(time, seq)` order,
+//! where `seq` is a single engine-wide counter assigned at scheduling time
+//! (spawn or reschedule). Same-instant events therefore run in FIFO
+//! scheduling order — fully deterministic, with no dependence on actor
+//! identity, hash state, or iteration order. This is also the cross-shard
+//! determinism guarantee of the co-simulated cluster
+//! ([`crate::store::cosim`]): all shard worlds share ONE heap, so
+//! same-timestamp events from *different shards* interleave identically on
+//! every run with the same seed, and the per-shard subsequence of the
+//! global event order is exactly what a dedicated per-shard engine would
+//! have executed.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -159,6 +171,36 @@ mod tests {
         assert!(e.pending() > 0);
         e.run();
         assert_eq!(e.state, 101);
+    }
+
+    #[test]
+    fn interleaved_reschedules_replay_identically() {
+        // Two actors collide at t = 0, 35, 70, … (periods 5 and 7): the
+        // (time, seq) order must make every collision resolve the same way
+        // on every run — the property cross-shard co-simulation leans on.
+        let run = || -> Vec<(Time, u32)> {
+            let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+            let mut e = Engine::new(0u64);
+            e.spawn(Box::new(Counter { ticks: 42, period: 5, log: log.clone(), id: 0 }), 0);
+            e.spawn(Box::new(Counter { ticks: 30, period: 7, log: log.clone(), id: 1 }), 0);
+            e.run();
+            let v = log.borrow().clone();
+            v
+        };
+        let a = run();
+        assert_eq!(a, run(), "same schedule must replay identically");
+        // At every collision instant the earlier-SCHEDULED actor steps
+        // first: at t=0 that is actor 0 (spawned first); at t=35 it is
+        // actor 1, whose 35-event was scheduled at its t=28 step — before
+        // actor 0 scheduled its own at t=30.
+        let at = |t: Time| -> Vec<u32> {
+            a.iter().filter(|&&(at, _)| at == t).map(|&(_, id)| id).collect()
+        };
+        assert_eq!(at(0), vec![0, 1]);
+        assert_eq!(at(35), vec![1, 0]);
+        for w in a.windows(2) {
+            assert!(w[0].0 <= w[1].0, "time order violated: {w:?}");
+        }
     }
 
     #[test]

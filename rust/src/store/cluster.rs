@@ -21,29 +21,41 @@
 //! println!("{:.1} KOp/s", outcome.stats.kops());
 //! ```
 //!
-//! **Scale-out:** `.shards(n)` partitions the key space over `n` fully
-//! independent server worlds (own NVM arena, log heads, hopscotch table,
-//! cleaner/applier, CPU pool, fabric). Operations route by the
-//! deterministic [`super::shard_of`] function, client actors fan out
-//! round-robin across the shards (each drawing only the ops its shard
-//! owns), scripted ops are split per shard with order preserved, and the
-//! cluster-level [`RunStats`] is [`RunStats::merged`] over the per-shard
-//! stats (also returned in [`RunOutcome::per_shard`]). Because shards run
-//! concurrently, the merged makespan is the slowest shard's.
+//! **Scale-out (co-simulated):** `.shards(n)` partitions the key space over
+//! `n` server worlds (own NVM arena, log heads, hopscotch table,
+//! cleaner/applier, CPU pool, fabric), all advanced by **one** event heap —
+//! [`super::cosim::ClusterState`] is the engine state, so every shard lives
+//! on one virtual timeline with deterministic `(time, seq)` ordering across
+//! shards and the returned makespan is exact, not a "slowest shard"
+//! approximation. Operations route by the deterministic [`super::shard_of`]
+//! function. Windowed / open-loop runs spawn **cluster-level** clients
+//! ([`PipelinedClient`]) that draw the full YCSB stream and route each op
+//! to its shard at issue time — one client's window genuinely interleaves
+//! ops across shards, metered by the ONE shared client-NIC [`Ingress`]
+//! when enabled. Plain closed-loop runs (`window = 1`) keep the paper's
+//! client model: per-shard clients fan out round-robin, each drawing only
+//! the ops its shard owns, exactly as before the co-sim refactor — and at
+//! `shards = 1` the whole construction reproduces the legacy single-world
+//! engine bit for bit (asserted in `rust/tests/open_loop.rs`).
 //!
-//! Scripted clients (`script_at`) drive failure-injection and Table-1-style
-//! measurements through the same engine; [`Cluster::from_config`] adapts a
-//! raw [`DriverConfig`] (what `crate::workload::run` and the figure sweeps
-//! use).
+//! Scripted ops are split per owning shard with order preserved, and the
+//! cluster-level [`RunStats`] is collected from the merged counters of the
+//! one timeline (sums across shards; the per-shard breakdown rides in
+//! [`RunOutcome::per_shard`]). Scripted clients (`script_at`) drive
+//! failure-injection and Table-1-style measurements through the same
+//! engine; [`Cluster::from_config`] adapts a raw [`DriverConfig`] (what
+//! `crate::workload::run` and the figure sweeps use).
 
-use super::pipeline::{BaselineDriver, ErdaDriver, PipelinedClient};
+use super::cosim::{ClusterState, Marker, Scoped};
+use super::pipeline::{BaselineDriver, ClientWorld, ErdaDriver, PipelinedClient};
 use super::{Db, OpSource, Request, Scheme};
 use crate::baselines::{ApplierActor, ApplierConfig, BaselineClient, BaselineWorld};
 use crate::erda::{CleanerActor, CleanerConfig, ClientConfig, ErdaClient, ErdaWorld};
 use crate::log::{object, LogConfig};
-use crate::metrics::RunStats;
-use crate::nvm::NvmConfig;
-use crate::sim::{Actor, Engine, Step, Time, Timing};
+use crate::metrics::{Counters, RunStats};
+use crate::nvm::{NvmConfig, WriteStats};
+use crate::rdma::Ingress;
+use crate::sim::{Engine, Time, Timing};
 use crate::workload::DriverConfig;
 use crate::ycsb::{Arrival, ArrivalGen, Generator, Workload};
 
@@ -122,8 +134,10 @@ impl ClusterBuilder {
         self
     }
 
-    /// Meter every op issue through a shared client-NIC ingress queue with
-    /// `channels` parallel DMA channels (a c-server in virtual time).
+    /// Meter every op issue through the shared client-NIC ingress queue
+    /// with `channels` parallel DMA channels (a c-server in virtual time).
+    /// ONE queue serves the whole cluster — every shard's issue path
+    /// admits through it, making the NIC bound global.
     pub fn ingress(mut self, channels: usize) -> Self {
         assert!(channels >= 1, "the ingress queue needs at least one channel");
         self.cfg.ingress_channels = Some(channels);
@@ -260,36 +274,28 @@ pub struct Cluster {
     scripts: Vec<ScriptSpec>,
 }
 
-/// What a finished run hands back: the cluster-level stats (the merge of
-/// every shard), the per-shard breakdown, and a settled, directly
-/// inspectable store handle over the final world state of every shard.
+/// What a finished run hands back: the cluster-level stats (collected from
+/// the merged counters of the one co-simulated timeline), the per-shard
+/// breakdown, and a settled, directly inspectable store handle over the
+/// final world state of every shard.
 pub struct RunOutcome {
     pub stats: RunStats,
     /// One entry per shard, in shard order (length 1 for single-server
-    /// runs). `stats` is exactly [`RunStats::merged`] over these.
+    /// runs). Every additive field of `stats` (ops, NVM bytes, CPU time,
+    /// latency samples, …) is the sum/merge of these, and the makespan is
+    /// their max — exact, because all shards share one virtual clock. The
+    /// exceptions are cluster-level quantities with no per-shard home:
+    /// `stats.events` counts the whole engine, while per-shard `events`
+    /// cover shard-scoped actors plus the warmup marker (one engine event
+    /// attributed to *every* shard it resets, so per-shard events sum to
+    /// `stats.events + shards - 1` even closed loop) and never the
+    /// cluster-level windowed clients; the shared-ingress accounting
+    /// lives only in `stats`; and
+    /// open-loop queue-depth samples describe the *client's* whole pending
+    /// queue — each sample is booked on the arriving op's shard, so read
+    /// queue depth at cluster level, not per shard.
     pub per_shard: Vec<RunStats>,
     pub db: Db,
-}
-
-/// Resets CPU/NVM accounting at the measurement boundary.
-struct Marker;
-
-impl Actor<ErdaWorld> for Marker {
-    fn step(&mut self, w: &mut ErdaWorld, _now: Time) -> Step {
-        w.cpu.reset_accounting();
-        w.nvm.reset_stats();
-        w.fabric.reset_ingress_stats();
-        Step::Done
-    }
-}
-
-impl Actor<BaselineWorld> for Marker {
-    fn step(&mut self, w: &mut BaselineWorld, _now: Time) -> Step {
-        w.cpu.reset_accounting();
-        w.nvm.reset_stats();
-        w.fabric.reset_ingress_stats();
-        Step::Done
-    }
 }
 
 impl Cluster {
@@ -344,9 +350,6 @@ impl Cluster {
             cfg.log_cfg,
             cfg.shard_table_cap(),
         );
-        if let Some(c) = cfg.ingress_channels {
-            world.fabric.set_ingress(c);
-        }
         world.preload_shard(preload.0, preload.1, shard, shards);
         world.nvm.reset_stats();
         if let Some(th) = cfg.cleaning_threshold {
@@ -374,9 +377,6 @@ impl Cluster {
             cfg.log_cfg.segment_size,
             slot_size,
         );
-        if let Some(c) = cfg.ingress_channels {
-            world.fabric.set_ingress(c);
-        }
         world.preload_shard(preload.0, preload.1, shard, shards);
         world.nvm.reset_stats();
         world
@@ -474,37 +474,26 @@ impl Cluster {
         Db::merge_shards(parts)
     }
 
-    /// Run the simulation to quiescence; returns cluster stats, per-shard
-    /// stats, and a settled store over every shard world.
+    /// Run the simulation to quiescence — every shard world in ONE engine —
+    /// and return cluster stats, per-shard stats, and a settled store over
+    /// every shard world.
     pub fn run(self) -> RunOutcome {
         let shards = self.cfg.shards.max(1);
         let script_max = self.script_max_value();
         let Cluster { cfg, preload, scripts } = self;
         let shard_scripts = Self::split_scripts(scripts, shards);
-
         let owned = Self::shards_with_keys(cfg.workload.record_count, shards);
         let owning: Vec<usize> = (0..shards).filter(|&s| owned[s]).collect();
-        let mut per_shard = Vec::with_capacity(shards);
-        let mut dbs = Vec::with_capacity(shards);
-        for (shard, scripts) in shard_scripts.into_iter().enumerate() {
-            let clients = Self::client_ids_for(cfg.clients, shard, &owning);
-            let (stats, db) = match cfg.scheme {
-                Scheme::Erda => Self::run_erda_shard(
-                    &cfg, preload, scripts, &clients, shard, shards, script_max,
-                ),
-                _ => Self::run_baseline_shard(
-                    &cfg, preload, scripts, &clients, shard, shards, script_max,
-                ),
-            };
-            per_shard.push(stats);
-            dbs.push(db);
+        match cfg.scheme {
+            Scheme::Erda => Self::run_erda(&cfg, preload, shard_scripts, &owning, script_max),
+            _ => Self::run_baseline(&cfg, preload, shard_scripts, &owning, script_max),
         }
-        let stats = RunStats::merged(&per_shard);
-        RunOutcome { stats, per_shard, db: Db::merge_shards(dbs) }
     }
 
-    /// A YCSB op source for client `c`: the full stream for single-server
-    /// runs, the shard-owned subsequence otherwise.
+    /// A YCSB op source for a *shard-pinned* closed-loop client: the full
+    /// stream for single-server runs, the shard-owned subsequence otherwise.
+    /// (Cluster-level windowed clients draw the full stream instead and
+    /// route per op.)
     fn client_source(cfg: &DriverConfig, c: u64, shard: usize, shards: usize) -> OpSource {
         let gen = Generator::new(cfg.workload.clone(), c);
         if shards == 1 {
@@ -514,19 +503,30 @@ impl Cluster {
         }
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn run_erda_shard(
+    /// The YCSB clients every world must count as active: cluster-level
+    /// windowed clients may issue to any shard, shard-pinned closed-loop
+    /// clients only to their own.
+    fn world_client_count(cfg: &DriverConfig, shard: usize, owning: &[usize]) -> usize {
+        if Self::use_pipeline(cfg) {
+            cfg.clients
+        } else {
+            Self::client_ids_for(cfg.clients, shard, owning).len()
+        }
+    }
+
+    /// The shared client-NIC ingress for this run (one per cluster).
+    fn make_ingress(cfg: &DriverConfig) -> Option<Ingress> {
+        cfg.ingress_channels.map(|c| Ingress::new(cfg.timing.clone(), c))
+    }
+
+    fn run_erda(
         cfg: &DriverConfig,
         preload: (u64, usize),
-        scripts: Vec<ScriptSpec>,
-        clients: &[u64],
-        shard: usize,
-        shards: usize,
+        shard_scripts: Vec<Vec<ScriptSpec>>,
+        owning: &[usize],
         script_max: usize,
-    ) -> (RunStats, Db) {
-        let mut world = Self::make_erda_world(cfg, preload, shard, shards);
-        world.counters.measure_from = cfg.warmup;
-        world.counters.active_clients = (clients.len() + scripts.len()) as u32;
+    ) -> RunOutcome {
+        let shards = shard_scripts.len();
         let default_cfg = Self::client_cfg(cfg);
         // Scripted clients may read values bigger than the YCSB value size
         // (preloaded or script-written); size their read window for the
@@ -537,99 +537,148 @@ impl Cluster {
             ..ClientConfig::default()
         };
 
-        let mut engine = Engine::new(world);
-        engine.spawn(Box::new(Marker), cfg.warmup);
-        for s in scripts {
-            let n = s.ops.len() as u64;
-            let ccfg = s.cfg.unwrap_or(script_cfg);
-            engine.spawn(Box::new(ErdaClient::new(OpSource::script(s.ops), n, ccfg)), s.start);
+        let mut worlds = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let mut w = Self::make_erda_world(cfg, preload, shard, shards);
+            w.counters.measure_from = cfg.warmup;
+            w.counters.active_clients =
+                (Self::world_client_count(cfg, shard, owning) + shard_scripts[shard].len()) as u32;
+            worlds.push(w);
         }
-        for &c in clients {
-            let src = Self::client_source(cfg, c, shard, shards);
-            if Self::use_pipeline(cfg) {
+        let mut engine = Engine::new(ClusterState::new(worlds, Self::make_ingress(cfg)));
+        engine.spawn(Box::new(Marker), cfg.warmup);
+        for (shard, scripts) in shard_scripts.into_iter().enumerate() {
+            for s in scripts {
+                let n = s.ops.len() as u64;
+                let ccfg = s.cfg.unwrap_or(script_cfg);
+                let client = ErdaClient::new(OpSource::script(s.ops), n, ccfg);
+                engine.spawn(Box::new(Scoped::new(shard, client)), s.start);
+            }
+        }
+        if Self::use_pipeline(cfg) {
+            for c in 0..cfg.clients as u64 {
                 let client = PipelinedClient::new(
                     ErdaDriver(default_cfg),
-                    src,
+                    OpSource::Ycsb(Generator::new(cfg.workload.clone(), c)),
                     cfg.ops_per_client,
                     cfg.window,
                     Self::client_arrivals(cfg, c),
+                    shards,
                 );
                 engine.spawn(Box::new(client), 0);
-            } else {
-                let client = ErdaClient::new(src, cfg.ops_per_client, default_cfg);
-                engine.spawn(Box::new(client), 0);
+            }
+        } else {
+            for shard in 0..shards {
+                for &c in &Self::client_ids_for(cfg.clients, shard, owning) {
+                    let src = Self::client_source(cfg, c, shard, shards);
+                    let client = ErdaClient::new(src, cfg.ops_per_client, default_cfg);
+                    engine.spawn(Box::new(Scoped::new(shard, client)), 0);
+                }
             }
         }
         if cfg.cleaning_threshold.is_some() {
-            for h in 0..cfg.log_cfg.num_heads {
-                engine.spawn(Box::new(CleanerActor::new(h as u8, cfg.cleaner)), cfg.warmup / 2);
+            for shard in 0..shards {
+                for h in 0..cfg.log_cfg.num_heads {
+                    let cleaner = CleanerActor::new(h as u8, cfg.cleaner);
+                    engine.spawn(Box::new(Scoped::new(shard, cleaner)), cfg.warmup / 2);
+                }
             }
         }
         engine.run();
-
-        let events = engine.events();
-        let mut world = engine.state;
-        let stats = RunStats::collect(
-            &world.counters,
-            world.cpu.busy_ns(),
-            world.nvm.stats(),
-            world.fabric.stats(),
-            events,
-        );
-        world.settle();
-        (stats, Db::from_erda(world))
+        Self::finish(engine, |mut w: ErdaWorld| {
+            w.settle();
+            Db::from_erda(w)
+        })
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn run_baseline_shard(
+    fn run_baseline(
         cfg: &DriverConfig,
         preload: (u64, usize),
-        scripts: Vec<ScriptSpec>,
-        clients: &[u64],
-        shard: usize,
-        shards: usize,
+        shard_scripts: Vec<Vec<ScriptSpec>>,
+        owning: &[usize],
         script_max: usize,
-    ) -> (RunStats, Db) {
-        let mut world = Self::make_baseline_world(cfg, preload, script_max, shard, shards);
-        world.counters.measure_from = cfg.warmup;
-        world.counters.active_clients = (clients.len() + scripts.len()) as u32;
-
-        let mut engine = Engine::new(world);
-        engine.spawn(Box::new(Marker), cfg.warmup);
-        for s in scripts {
-            let n = s.ops.len() as u64;
-            engine.spawn(Box::new(BaselineClient::new(OpSource::script(s.ops), n)), s.start);
+    ) -> RunOutcome {
+        let shards = shard_scripts.len();
+        let mut worlds = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let mut w = Self::make_baseline_world(cfg, preload, script_max, shard, shards);
+            w.counters.measure_from = cfg.warmup;
+            w.counters.active_clients =
+                (Self::world_client_count(cfg, shard, owning) + shard_scripts[shard].len()) as u32;
+            worlds.push(w);
         }
-        for &c in clients {
-            let src = Self::client_source(cfg, c, shard, shards);
-            if Self::use_pipeline(cfg) {
+        let mut engine = Engine::new(ClusterState::new(worlds, Self::make_ingress(cfg)));
+        engine.spawn(Box::new(Marker), cfg.warmup);
+        for (shard, scripts) in shard_scripts.into_iter().enumerate() {
+            for s in scripts {
+                let n = s.ops.len() as u64;
+                let client = BaselineClient::new(OpSource::script(s.ops), n);
+                engine.spawn(Box::new(Scoped::new(shard, client)), s.start);
+            }
+        }
+        if Self::use_pipeline(cfg) {
+            for c in 0..cfg.clients as u64 {
                 let client = PipelinedClient::new(
                     BaselineDriver,
-                    src,
+                    OpSource::Ycsb(Generator::new(cfg.workload.clone(), c)),
                     cfg.ops_per_client,
                     cfg.window,
                     Self::client_arrivals(cfg, c),
+                    shards,
                 );
                 engine.spawn(Box::new(client), 0);
-            } else {
-                let client = BaselineClient::new(src, cfg.ops_per_client);
-                engine.spawn(Box::new(client), 0);
+            }
+        } else {
+            for shard in 0..shards {
+                for &c in &Self::client_ids_for(cfg.clients, shard, owning) {
+                    let src = Self::client_source(cfg, c, shard, shards);
+                    let client = BaselineClient::new(src, cfg.ops_per_client);
+                    engine.spawn(Box::new(Scoped::new(shard, client)), 0);
+                }
             }
         }
-        engine.spawn(Box::new(ApplierActor::new(ApplierConfig::default())), 0);
+        for shard in 0..shards {
+            let applier = ApplierActor::new(ApplierConfig::default());
+            engine.spawn(Box::new(Scoped::new(shard, applier)), 0);
+        }
         engine.run();
+        Self::finish(engine, |mut w: BaselineWorld| {
+            w.settle();
+            Db::from_baseline(w)
+        })
+    }
 
+    /// Collect the finished co-sim engine into a [`RunOutcome`]: per-shard
+    /// stats from each world's counters/substrates, cluster stats from the
+    /// merged counters of the one timeline (so the makespan is exact), the
+    /// engine-wide event count, and the shared-ingress accounting.
+    fn finish<W: ClientWorld>(
+        engine: Engine<ClusterState<W>>,
+        mut to_db: impl FnMut(W) -> Db,
+    ) -> RunOutcome {
         let events = engine.events();
-        let mut world = engine.state;
-        let stats = RunStats::collect(
-            &world.counters,
-            world.cpu.busy_ns(),
-            world.nvm.stats(),
-            world.fabric.stats(),
-            events,
-        );
-        world.settle();
-        (stats, Db::from_baseline(world))
+        let ingress_stats = engine.state.ingress_stats();
+        let ClusterState { worlds, shard_events, .. } = engine.state;
+        let mut merged = Counters::default();
+        let mut cpu_total: u128 = 0;
+        let mut nvm_total = WriteStats::default();
+        let mut per_shard = Vec::with_capacity(worlds.len());
+        let mut dbs = Vec::with_capacity(worlds.len());
+        for (shard, w) in worlds.into_iter().enumerate() {
+            per_shard.push(RunStats::collect(
+                w.counters(),
+                w.cpu_busy_ns(),
+                w.nvm_stats(),
+                shard_events[shard],
+            ));
+            merged.merge(w.counters());
+            cpu_total += w.cpu_busy_ns();
+            nvm_total.merge(w.nvm_stats());
+            dbs.push(to_db(w));
+        }
+        let stats =
+            RunStats::collect(&merged, cpu_total, nvm_total, events).with_ingress(ingress_stats);
+        RunOutcome { stats, per_shard, db: Db::merge_shards(dbs) }
     }
 }
 

@@ -27,6 +27,7 @@
 //!   this function and supports per-shard crash/recovery.
 
 pub mod cluster;
+pub(crate) mod cosim;
 pub mod db;
 pub(crate) mod pipeline;
 

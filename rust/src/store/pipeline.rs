@@ -1,4 +1,5 @@
-//! Windowed, open-loop client actors: the async pipeline over every scheme.
+//! Windowed, open-loop, **cluster-level** client actors: the async pipeline
+//! over every scheme and every shard.
 //!
 //! The paper's clients are closed loop — one op in flight, the next issued
 //! only on completion — so attainable throughput is `clients / latency` and
@@ -10,12 +11,21 @@
 //! completing them out of order while preserving **per-key ordering** — no
 //! op ever observably overtakes an earlier op on its key.
 //!
+//! Since the co-sim refactor the actor is *cluster-level*: it runs against
+//! [`super::cosim::ClusterState`], routes each op to its shard world via
+//! [`crate::store::shard_of`] **at issue time**, and its lanes are
+//! `(shard, key)`-aware — one client's window genuinely interleaves ops
+//! across shards instead of being cloned round-robin into per-shard
+//! engines. Every issue is metered by the ONE shared client-NIC ingress
+//! (when enabled), which is what makes the NIC bound global.
+//!
 //! Per-key ordering is read/write-aware: a *write* (put/delete) waits for
 //! every in-flight op on its key and for any earlier queued op on it; a
 //! *read* waits only for in-flight or earlier-queued **writes** on its key
 //! — concurrent reads of one key share the window freely, which is what
 //! keeps Erda's YCSB-C throughput scaling linearly with the window even
-//! under Zipfian skew.
+//! under Zipfian skew. (A key lives on exactly one shard, so the per-key
+//! gate needs no shard awareness beyond the lane's route.)
 //!
 //! Arrivals are either *closed loop with a window* (a free lane draws the
 //! next op immediately — measures saturation throughput vs window) or
@@ -23,21 +33,23 @@
 //! [`crate::ycsb::Arrival::Poisson`]): ops arrive at externally-paced
 //! instants regardless of completion progress and queue client-side when
 //! the window is full. Offered vs achieved load and the pending-queue
-//! depth are accounted in [`crate::metrics::Counters`]; open-loop latency
-//! is measured from *arrival* (queueing included).
+//! depth are accounted in [`crate::metrics::Counters`] of the op's shard;
+//! open-loop latency is measured from *arrival* (queueing included).
 //!
-//! With `window = 1` and closed-loop arrivals this actor reproduces the
-//! closed-loop clients' runs bit for bit (same engine events, same times,
-//! same counters) — asserted by `rust/tests/open_loop.rs` — which is why
-//! the cluster driver can route every configuration through one model.
+//! With `window = 1`, closed-loop arrivals and one shard this actor
+//! reproduces the closed-loop clients' runs bit for bit (same engine
+//! events, same times, same counters) — asserted by
+//! `rust/tests/open_loop.rs` — which is why the cluster driver can route
+//! every configuration through one model.
 
 use std::collections::VecDeque;
 
 use crate::baselines::BaselineWorld;
 use crate::erda::{ClientConfig, ErdaWorld};
 use crate::metrics::Counters;
-use crate::rdma::Fabric;
+use crate::nvm::WriteStats;
 use crate::sim::{Actor, CompletionSet, Step, Time};
+use crate::store::cosim::ClusterState;
 use crate::store::{OpSource, Request};
 use crate::ycsb::ArrivalGen;
 
@@ -51,32 +63,59 @@ pub(crate) enum OpOutcome<S> {
     Crashed,
 }
 
-/// The world surface the windowed client needs, implemented by both shared
-/// world types so one actor drives every scheme.
+/// The world surface the cluster driver and windowed client need,
+/// implemented by both shared world types so one actor drives every scheme.
 pub(crate) trait ClientWorld {
+    fn counters(&self) -> &Counters;
     fn counters_mut(&mut self) -> &mut Counters;
-    fn fabric_mut(&mut self) -> &mut Fabric;
+    /// Server CPU busy time since the last measurement reset.
+    fn cpu_busy_ns(&self) -> u128;
+    /// NVM write traffic since the last measurement reset.
+    fn nvm_stats(&self) -> WriteStats;
+    /// Reset CPU/NVM accounting at the measurement boundary.
+    fn reset_measurement(&mut self);
 }
 
 impl ClientWorld for ErdaWorld {
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
     fn counters_mut(&mut self) -> &mut Counters {
         &mut self.counters
     }
-    fn fabric_mut(&mut self) -> &mut Fabric {
-        &mut self.fabric
+    fn cpu_busy_ns(&self) -> u128 {
+        self.cpu.busy_ns()
+    }
+    fn nvm_stats(&self) -> WriteStats {
+        self.nvm.stats()
+    }
+    fn reset_measurement(&mut self) {
+        self.cpu.reset_accounting();
+        self.nvm.reset_stats();
     }
 }
 
 impl ClientWorld for BaselineWorld {
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
     fn counters_mut(&mut self) -> &mut Counters {
         &mut self.counters
     }
-    fn fabric_mut(&mut self) -> &mut Fabric {
-        &mut self.fabric
+    fn cpu_busy_ns(&self) -> u128 {
+        self.cpu.busy_ns()
+    }
+    fn nvm_stats(&self) -> WriteStats {
+        self.nvm.stats()
+    }
+    fn reset_measurement(&mut self) {
+        self.cpu.reset_accounting();
+        self.nvm.reset_stats();
     }
 }
 
-/// Scheme adapter: begins and advances one op's protocol state machine.
+/// Scheme adapter: begins and advances one op's protocol state machine
+/// against the op's own shard world.
 pub(crate) trait OpDriver {
     type World: ClientWorld;
     type St;
@@ -141,13 +180,15 @@ fn is_write(req: &Request) -> bool {
     !matches!(req, Request::Get { .. })
 }
 
-/// One windowed client actor (see module docs).
+/// One windowed cluster-level client actor (see module docs).
 pub(crate) struct PipelinedClient<D: OpDriver> {
     driver: D,
     src: OpSource,
     /// Ops still to draw from the source.
     to_draw: u64,
     window: usize,
+    /// Shard count the client routes over (`shard_of` at issue time).
+    shards: usize,
     /// Open-loop arrival process (None = closed loop with a window).
     arrivals: Option<ArrivalGen>,
     /// Drawn-but-unissued ops, oldest first, with their arrival instant
@@ -155,8 +196,9 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     pending: VecDeque<(Request, Option<Time>)>,
     /// Per-lane op state (None = free lane).
     lanes: Vec<Option<D::St>>,
-    /// Per-lane in-flight (key, is_write) — the per-key ordering gate.
-    lane_keys: Vec<Option<(Vec<u8>, bool)>>,
+    /// Per-lane in-flight route: (shard, key, is_write) — the per-key
+    /// ordering gate plus where the op's completion lands.
+    lane_keys: Vec<Option<(usize, Vec<u8>, bool)>>,
     /// Completion tokens: lane index → due instant.
     due: CompletionSet,
     alive: bool,
@@ -169,6 +211,7 @@ impl<D: OpDriver> PipelinedClient<D> {
         ops: u64,
         window: usize,
         arrivals: Option<ArrivalGen>,
+        shards: usize,
     ) -> Self {
         let window = window.max(1);
         PipelinedClient {
@@ -176,6 +219,7 @@ impl<D: OpDriver> PipelinedClient<D> {
             src,
             to_draw: ops,
             window,
+            shards: shards.max(1),
             arrivals,
             pending: VecDeque::new(),
             lanes: (0..window).map(|_| None).collect(),
@@ -185,9 +229,13 @@ impl<D: OpDriver> PipelinedClient<D> {
         }
     }
 
-    fn die(&mut self, w: &mut D::World) -> Step {
-        let c = w.counters_mut();
-        c.active_clients = c.active_clients.saturating_sub(1);
+    /// Client leaves the run: a cluster-level client counts as active on
+    /// every shard world (it may issue to any), so it retires from all.
+    fn die(&mut self, s: &mut ClusterState<D::World>) -> Step {
+        for w in &mut s.worlds {
+            let c = w.counters_mut();
+            c.active_clients = c.active_clients.saturating_sub(1);
+        }
         self.alive = false;
         Step::Done
     }
@@ -207,7 +255,7 @@ impl<D: OpDriver> PipelinedClient<D> {
         self.lane_keys
             .iter()
             .flatten()
-            .any(|(k, w)| (write || *w) && k.as_slice() == key)
+            .any(|(_, k, w)| (write || *w) && k.as_slice() == key)
     }
 
     /// Is an earlier op on this key still parked in the pending queue?
@@ -220,11 +268,12 @@ impl<D: OpDriver> PipelinedClient<D> {
         self.lanes.iter().position(|l| l.is_none())
     }
 
-    /// Issue `req` on `lane`. Returns false if the client crashed (Redo's
-    /// CrashDuringPut dies before any verb posts).
+    /// Issue `req` on `lane`: admit through the shared client NIC, route to
+    /// the key's shard, post the first verb. Returns false if the client
+    /// crashed (Redo's CrashDuringPut dies before any verb posts).
     fn issue_on(
         &mut self,
-        w: &mut D::World,
+        s: &mut ClusterState<D::World>,
         lane: usize,
         req: Request,
         start: Time,
@@ -232,11 +281,12 @@ impl<D: OpDriver> PipelinedClient<D> {
     ) -> bool {
         let key = req.key().to_vec();
         let write = is_write(&req);
-        let admitted = w.fabric_mut().ingress_admit(now, ingress_bytes(&req));
-        match self.driver.begin(w, req, start, admitted) {
+        let shard = crate::store::shard_of(&key, self.shards);
+        let admitted = s.admit(now, ingress_bytes(&req));
+        match self.driver.begin(&mut s.worlds[shard], req, start, admitted) {
             OpOutcome::Continue(st, at) => {
                 self.lanes[lane] = Some(st);
-                self.lane_keys[lane] = Some((key, write));
+                self.lane_keys[lane] = Some((shard, key, write));
                 self.due.arm(lane, at);
                 true
             }
@@ -266,12 +316,12 @@ impl<D: OpDriver> PipelinedClient<D> {
 
     /// Fill free lanes: oldest issuable pending op first, then (closed loop
     /// only) fresh draws from the source. Returns false on client crash.
-    fn issue_pass(&mut self, w: &mut D::World, now: Time) -> bool {
+    fn issue_pass(&mut self, s: &mut ClusterState<D::World>, now: Time) -> bool {
         'lanes: while let Some(lane) = self.free_lane() {
             if let Some(i) = self.next_issuable_pending() {
                 let (req, arrived) = self.pending.remove(i).expect("position indexed");
                 let start = arrived.unwrap_or(now);
-                if !self.issue_on(w, lane, req, start, now) {
+                if !self.issue_on(s, lane, req, start, now) {
                     return false;
                 }
                 continue 'lanes;
@@ -295,7 +345,7 @@ impl<D: OpDriver> PipelinedClient<D> {
                         self.to_draw -= 1;
                         if self.key_blocked(&req) || self.pending_has_key(req.key()) {
                             self.pending.push_back((req, None));
-                        } else if self.issue_on(w, lane, req, now, now) {
+                        } else if self.issue_on(s, lane, req, now, now) {
                             continue 'lanes;
                         } else {
                             return false;
@@ -309,8 +359,8 @@ impl<D: OpDriver> PipelinedClient<D> {
     }
 }
 
-impl<D: OpDriver> Actor<D::World> for PipelinedClient<D> {
-    fn step(&mut self, w: &mut D::World, now: Time) -> Step {
+impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
+    fn step(&mut self, s: &mut ClusterState<D::World>, now: Time) -> Step {
         if !self.alive {
             return Step::Done;
         }
@@ -318,7 +368,10 @@ impl<D: OpDriver> Actor<D::World> for PipelinedClient<D> {
         let mut freed = false;
 
         // Phase 1: open-loop arrivals due by now join the pending queue
-        // (offered-load + queue-depth accounting happens at the arrival).
+        // (offered-load + queue-depth accounting happens at the arrival,
+        // on the counters of the shard that owns the op's key; the sampled
+        // depth is the CLIENT's whole pending queue — a client-level
+        // quantity that only aggregates meaningfully at cluster level).
         if let Some(gen) = &mut self.arrivals {
             while self.to_draw > 0 && gen.peek() <= now {
                 let at = gen.next_arrival();
@@ -329,7 +382,8 @@ impl<D: OpDriver> Actor<D::World> for PipelinedClient<D> {
                     }
                     Some(req) => {
                         self.to_draw -= 1;
-                        w.counters_mut().record_arrival(at, self.pending.len());
+                        let shard = crate::store::shard_of(req.key(), self.shards);
+                        s.worlds[shard].counters_mut().record_arrival(at, self.pending.len());
                         self.pending.push_back((req, Some(at)));
                         arrived = true;
                     }
@@ -337,27 +391,29 @@ impl<D: OpDriver> Actor<D::World> for PipelinedClient<D> {
             }
         }
 
-        // Phase 2: in-flight ops whose pending verb completed by now.
+        // Phase 2: in-flight ops whose pending verb completed by now — each
+        // advances against the shard world its lane routed to.
         while let Some(lane) = self.due.pop_due(now) {
             let st = self.lanes[lane].take().expect("armed lane holds a state");
-            match self.driver.advance(w, st, now) {
+            let shard = self.lane_keys[lane].as_ref().expect("armed lane has a route").0;
+            match self.driver.advance(&mut s.worlds[shard], st, now) {
                 OpOutcome::Continue(st, at) => {
                     self.lanes[lane] = Some(st);
                     self.due.arm(lane, at);
                 }
                 OpOutcome::Finished { start, cleaning } => {
-                    w.counters_mut().record_op(start, now, cleaning);
+                    s.worlds[shard].counters_mut().record_op(start, now, cleaning);
                     self.lane_keys[lane] = None;
                     freed = true;
                 }
                 // The client process died: every other in-flight op dies
                 // with it, unrecorded (same semantics as the closed-loop
                 // client's failure injection).
-                OpOutcome::Crashed => return self.die(w),
+                OpOutcome::Crashed => return self.die(s),
             }
         }
         if self.done() {
-            return self.die(w);
+            return self.die(s);
         }
         // When a lane freed or work arrived, hand back to the engine before
         // issuing: the issue pass runs in a fresh step at the same instant,
@@ -371,11 +427,11 @@ impl<D: OpDriver> Actor<D::World> for PipelinedClient<D> {
         }
 
         // Phase 3: issue pass.
-        if !self.issue_pass(w, now) {
-            return self.die(w); // crashed while issuing (Redo crash op)
+        if !self.issue_pass(s, now) {
+            return self.die(s); // crashed while issuing (Redo crash op)
         }
         if self.done() {
-            return self.die(w);
+            return self.die(s);
         }
         let mut wake = self.due.next_due();
         if self.to_draw > 0 {
@@ -388,7 +444,7 @@ impl<D: OpDriver> Actor<D::World> for PipelinedClient<D> {
             Some(t) => Step::At(t),
             // Unreachable in practice (work remaining implies a wake time);
             // retire defensively rather than wedge the engine.
-            None => self.die(w),
+            None => self.die(s),
         }
     }
 }
@@ -398,6 +454,7 @@ mod tests {
     use super::*;
     use crate::log::LogConfig;
     use crate::nvm::NvmConfig;
+    use crate::rdma::Ingress;
     use crate::sim::{Engine, Timing};
     use crate::ycsb::{key_of, Arrival};
 
@@ -413,6 +470,11 @@ mod tests {
         w
     }
 
+    fn single(mut w: ErdaWorld) -> ClusterState<ErdaWorld> {
+        w.counters.active_clients = 1;
+        ClusterState::new(vec![w], None)
+    }
+
     fn script(ops: Vec<Request>) -> OpSource {
         OpSource::script(ops)
     }
@@ -425,25 +487,29 @@ mod tests {
         Request::Get { key: key_of(i) }
     }
 
-    #[test]
-    fn windowed_scripted_run_completes_every_op() {
-        let mut w = erda_world();
-        w.counters.active_clients = 1;
-        let ops = vec![get(0), put(1), get(2), put(3), get(4), put(5)];
+    fn erda_client(ops: Vec<Request>, window: usize) -> PipelinedClient<ErdaDriver> {
         let n = ops.len() as u64;
-        let client = PipelinedClient::new(
+        PipelinedClient::new(
             ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
             script(ops),
             n,
-            4,
+            window,
             None,
-        );
-        let mut e = Engine::new(w);
-        e.spawn(Box::new(client), 0);
+            1,
+        )
+    }
+
+    #[test]
+    fn windowed_scripted_run_completes_every_op() {
+        let ops = vec![get(0), put(1), get(2), put(3), get(4), put(5)];
+        let n = ops.len() as u64;
+        let mut e = Engine::new(single(erda_world()));
+        e.spawn(Box::new(erda_client(ops, 4)), 0);
         e.run();
-        assert_eq!(e.state.counters.ops_measured, n);
-        assert_eq!(e.state.counters.read_misses, 0);
-        assert_eq!(e.state.counters.active_clients, 0);
+        let c = &e.state.worlds[0].counters;
+        assert_eq!(c.ops_measured, n);
+        assert_eq!(c.read_misses, 0);
+        assert_eq!(c.active_clients, 0);
     }
 
     #[test]
@@ -451,18 +517,9 @@ mod tests {
         // 8 independent reads: window 8 should finish ~8x faster than
         // window 1 (pure-latency Erda reads overlap perfectly).
         let run = |window: usize| -> Time {
-            let mut w = erda_world();
-            w.counters.active_clients = 1;
             let ops: Vec<Request> = (0..8).map(get).collect();
-            let client = PipelinedClient::new(
-                ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
-                script(ops),
-                8,
-                window,
-                None,
-            );
-            let mut e = Engine::new(w);
-            e.spawn(Box::new(client), 0);
+            let mut e = Engine::new(single(erda_world()));
+            e.spawn(Box::new(erda_client(ops, window)), 0);
             e.run()
         };
         let t1 = run(1);
@@ -477,28 +534,20 @@ mod tests {
     fn per_key_ordering_holds_under_window() {
         // Two puts then a get on the SAME key, window 4: the get must see
         // the second put's value, i.e. ops on one key never reorder.
-        let mut w = erda_world();
-        w.counters.active_clients = 1;
         let key = key_of(3);
         let ops = vec![
             Request::Put { key: key.clone(), value: vec![0xAAu8; 64] },
             Request::Put { key: key.clone(), value: vec![0xBBu8; 64] },
             Request::Get { key: key.clone() },
         ];
-        let client = PipelinedClient::new(
-            ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
-            script(ops),
-            3,
-            4,
-            None,
-        );
-        let mut e = Engine::new(w);
-        e.spawn(Box::new(client), 0);
+        let mut e = Engine::new(single(erda_world()));
+        e.spawn(Box::new(erda_client(ops, 4)), 0);
         e.run();
-        e.state.settle();
-        assert_eq!(e.state.counters.ops_measured, 3);
-        assert_eq!(e.state.counters.read_misses, 0, "get must not race ahead of the puts");
-        assert_eq!(e.state.get(&key).expect("present"), vec![0xBBu8; 64]);
+        let w = &mut e.state.worlds[0];
+        w.settle();
+        assert_eq!(w.counters.ops_measured, 3);
+        assert_eq!(w.counters.read_misses, 0, "get must not race ahead of the puts");
+        assert_eq!(w.get(&key).expect("present"), vec![0xBBu8; 64]);
     }
 
     #[test]
@@ -507,18 +556,9 @@ mod tests {
         // has no dependency — with window 6 the makespan is ~one read, not
         // six.
         let run = |window: usize| -> Time {
-            let mut w = erda_world();
-            w.counters.active_clients = 1;
             let ops: Vec<Request> = (0..6).map(|_| get(1)).collect();
-            let client = PipelinedClient::new(
-                ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
-                script(ops),
-                6,
-                window,
-                None,
-            );
-            let mut e = Engine::new(w);
-            e.spawn(Box::new(client), 0);
+            let mut e = Engine::new(single(erda_world()));
+            e.spawn(Box::new(erda_client(ops, window)), 0);
             e.run()
         };
         let t1 = run(1);
@@ -531,8 +571,6 @@ mod tests {
         // Arrivals far faster than service with window 1: offered load is
         // recorded at arrival, the backlog grows, and every op still
         // completes (achieved == offered once the queue drains).
-        let mut w = erda_world();
-        w.counters.active_clients = 1;
         let n = 40u64;
         let gen = ArrivalGen::new(Arrival::Fixed { rate: 1_000_000.0 }, 9, 0, 0);
         let client = PipelinedClient::new(
@@ -541,11 +579,12 @@ mod tests {
             n,
             1,
             Some(gen),
+            1,
         );
-        let mut e = Engine::new(w);
+        let mut e = Engine::new(single(erda_world()));
         e.spawn(Box::new(client), 0);
         e.run();
-        let c = &e.state.counters;
+        let c = &e.state.worlds[0].counters;
         assert_eq!(c.ops_offered, n, "every arrival recorded");
         assert_eq!(c.ops_measured, n, "queue drains after arrivals stop");
         assert!(c.queue_depth_max > 5, "1 Mops/s into ~16 Kops/s service must queue");
@@ -568,39 +607,75 @@ mod tests {
         w.nvm.reset_stats();
         w.counters.active_clients = 1;
         let ops: Vec<Request> = (0..8).map(|i| if i % 2 == 0 { get(i) } else { put(i) }).collect();
-        let client = PipelinedClient::new(BaselineDriver, script(ops), 8, 4, None);
-        let mut e = Engine::new(w);
+        let client = PipelinedClient::new(BaselineDriver, script(ops), 8, 4, None, 1);
+        let mut e = Engine::new(ClusterState::new(vec![w], None));
         e.spawn(Box::new(client), 0);
         e.run();
-        assert_eq!(e.state.counters.ops_measured, 8);
-        assert_eq!(e.state.counters.read_misses, 0);
+        let c = &e.state.worlds[0].counters;
+        assert_eq!(c.ops_measured, 8);
+        assert_eq!(c.read_misses, 0);
     }
 
     #[test]
-    fn ingress_queue_delays_admissions_under_window() {
-        // 16 overlapping puts (distinct keys, window 16), ingress with one
-        // channel vs disabled: same-instant issues serialize at the client
-        // NIC, so the metered run must record waits and stretch the
-        // makespan.
-        let run = |channels: Option<usize>| -> (Time, u64, u128) {
-            let mut w = erda_world();
-            if let Some(c) = channels {
-                w.fabric.set_ingress(c);
-            }
-            w.counters.active_clients = 1;
-            let ops: Vec<Request> = (0..16).map(put).collect();
+    fn one_window_interleaves_ops_across_shards() {
+        // TWO shard worlds, ONE client, window 8: keys route by shard_of at
+        // issue time, so both worlds complete ops from the same window, and
+        // the makespan shrinks vs window 1 — the co-sim property the old
+        // per-shard engines could not express.
+        let shards = 2usize;
+        let run = |window: usize| -> (Time, Vec<u64>) {
+            let worlds: Vec<ErdaWorld> = (0..shards)
+                .map(|sh| {
+                    let mut w = ErdaWorld::new(
+                        Timing::default(),
+                        NvmConfig { capacity: 32 << 20 },
+                        LogConfig::default(),
+                        1 << 10,
+                    );
+                    w.preload_shard(16, 64, sh, shards);
+                    w.nvm.reset_stats();
+                    w.counters.active_clients = 1;
+                    w
+                })
+                .collect();
+            let ops: Vec<Request> = (0..16).map(get).collect();
             let client = PipelinedClient::new(
                 ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
                 script(ops),
                 16,
-                16,
+                window,
                 None,
+                shards,
             );
-            let mut e = Engine::new(w);
+            let mut e = Engine::new(ClusterState::new(worlds, None));
             e.spawn(Box::new(client), 0);
             let end = e.run();
-            let s = e.state.fabric.stats();
-            (end, s.ingress_admitted, s.ingress_wait_ns)
+            (end, e.state.worlds.iter().map(|w| w.counters.ops_measured).collect())
+        };
+        let (t1, per1) = run(1);
+        let (t8, per8) = run(8);
+        assert_eq!(per1.iter().sum::<u64>(), 16);
+        assert_eq!(per8, per1, "routing is by key, not by window depth");
+        assert!(per8.iter().all(|&n| n > 0), "the window must span both shards: {per8:?}");
+        assert!(t8 * 4 < t1, "cross-shard overlap must cut the makespan: {t8} vs {t1}");
+    }
+
+    #[test]
+    fn ingress_queue_delays_admissions_under_window() {
+        // 16 overlapping puts (distinct keys, window 16), shared ingress
+        // with one channel vs unmetered: same-instant issues serialize at
+        // the client NIC, so the metered run must record waits and stretch
+        // the makespan.
+        let run = |channels: Option<usize>| -> (Time, u64, u128) {
+            let ingress = channels.map(|c| Ingress::new(Timing::default(), c));
+            let mut w = erda_world();
+            w.counters.active_clients = 1;
+            let ops: Vec<Request> = (0..16).map(put).collect();
+            let mut e = Engine::new(ClusterState::new(vec![w], ingress));
+            e.spawn(Box::new(erda_client(ops, 16)), 0);
+            let end = e.run();
+            let s = e.state.ingress_stats();
+            (end, s.admitted, s.wait_ns)
         };
         let (t_off, admitted_off, _) = run(None);
         let (t_on, admitted_on, wait_on) = run(Some(1));

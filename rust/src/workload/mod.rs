@@ -20,10 +20,12 @@ pub use crate::store::Scheme as SchemeSel;
 pub struct DriverConfig {
     pub scheme: SchemeSel,
     pub workload: WorkloadConfig,
-    /// Independent server worlds the key space is partitioned across
-    /// (scale-out; 1 = the paper's single-server setup). Routing is the
-    /// deterministic [`crate::store::shard_of`]; client threads fan out
-    /// round-robin over the shards.
+    /// Server worlds the key space is partitioned across (scale-out; 1 =
+    /// the paper's single-server setup), all co-simulated in ONE event
+    /// heap. Routing is the deterministic [`crate::store::shard_of`]:
+    /// closed-loop client threads fan out round-robin over the shards;
+    /// windowed/open-loop clients are cluster-level and route each op at
+    /// issue time, so one window spans shards.
     pub shards: usize,
     /// Simulated client threads (closed loop).
     pub clients: usize,
@@ -38,10 +40,10 @@ pub struct DriverConfig {
     /// open-loop process (fixed-rate / Poisson, per client) whose arrivals
     /// queue client-side when the window is full.
     pub arrival: Arrival,
-    /// Client-side NIC ingress: `Some(c)` meters every op issue through a
-    /// c-channel c-server queue (shared by all clients of a shard world),
-    /// bounding offered load the way a real shared NIC does. `None`
-    /// (default) = unmetered, the pre-windowing behavior.
+    /// Client-side NIC ingress: `Some(c)` meters every op issue through
+    /// ONE c-channel c-server queue shared by every client and every shard
+    /// of the cluster — a truly global NIC bound on aggregate offered
+    /// load. `None` (default) = unmetered, the pre-windowing behavior.
     pub ingress_channels: Option<usize>,
     /// Virtual warmup: ops *starting* before this are not measured, and CPU/
     /// NVM accounting resets at this instant.

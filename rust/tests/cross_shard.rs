@@ -1,0 +1,222 @@
+//! Integration tests for the co-simulated cluster engine: deterministic
+//! cross-shard `(time, seq)` ordering, a single client's window spanning
+//! shards, the globally-shared client-NIC ingress, exact merged makespans,
+//! and the per-interval throughput timeline.
+
+use erda::metrics::RunStats;
+use erda::store::{Cluster, ClusterBuilder, Scheme};
+use erda::ycsb::{Arrival, Workload};
+
+fn builder(scheme: Scheme, shards: usize) -> ClusterBuilder {
+    Cluster::builder()
+        .scheme(scheme)
+        .shards(shards)
+        .clients(4)
+        .ops_per_client(150)
+        .workload(Workload::UpdateHeavy)
+        .records(128)
+        .value_size(256)
+        .warmup(0)
+}
+
+/// Seed stability across shards (the documented `(time, seq)` tie-break):
+/// the same seed replays the co-simulated cluster identically — down to
+/// the engine event count, the full latency distribution, and the interval
+/// timeline — at shards ∈ {2, 4}; a different seed diverges.
+#[test]
+fn cosim_runs_are_seed_stable_at_2_and_4_shards() {
+    for shards in [2usize, 4] {
+        let run = |seed: u64| -> RunStats {
+            builder(Scheme::Erda, shards)
+                .window(8)
+                .arrival(Arrival::Poisson { rate: 80_000.0 })
+                .seed(seed)
+                .run()
+                .stats
+        };
+        let mut a = run(7);
+        let mut b = run(7);
+        assert_eq!(a.ops, b.ops, "{shards} shards");
+        assert_eq!(a.offered_ops, b.offered_ops, "{shards} shards");
+        assert_eq!(a.duration_ns, b.duration_ns, "{shards} shards");
+        assert_eq!(a.events, b.events, "{shards} shards: same global event count");
+        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes, "{shards} shards");
+        assert_eq!(a.server_cpu_busy_ns, b.server_cpu_busy_ns, "{shards} shards");
+        assert_eq!(a.ingress_admitted, b.ingress_admitted, "{shards} shards");
+        assert_eq!(a.interval_done, b.interval_done, "{shards} shards: same timeline");
+        assert_eq!(a.latency.count(), b.latency.count(), "{shards} shards");
+        for p in [0.5, 0.99, 1.0] {
+            assert_eq!(
+                a.latency.percentile_ns(p),
+                b.latency.percentile_ns(p),
+                "{shards} shards p{p}"
+            );
+        }
+        let c = run(8);
+        assert!(
+            c.duration_ns != a.duration_ns || c.nvm_programmed_bytes != a.nvm_programmed_bytes,
+            "{shards} shards: a different seed must produce a different run"
+        );
+    }
+}
+
+/// ONE client with a deep window over 2 shards: ops from the same window
+/// land on both shard worlds (the co-sim property the old per-shard engines
+/// could not express), and the window overlap cuts the makespan vs
+/// window 1 on the same geometry.
+#[test]
+fn a_single_clients_window_spans_shards() {
+    let run = |window: usize| {
+        Cluster::builder()
+            .scheme(Scheme::Erda)
+            .shards(2)
+            .clients(1)
+            .window(window)
+            .workload(Workload::ReadOnly)
+            .ops_per_client(200)
+            .records(64)
+            .value_size(256)
+            .warmup(0)
+            // A contention-free ingress forces the windowed client path at
+            // window 1 too, so both runs use the same client model.
+            .ingress(4096)
+            .run()
+    };
+    let w1 = run(1);
+    let w8 = run(8);
+    let spanned = |o: &erda::store::RunOutcome| {
+        o.per_shard.iter().filter(|p| p.ops > 0).count()
+    };
+    assert_eq!(spanned(&w8), 2, "one window must feed both shards");
+    assert_eq!(spanned(&w1), 2);
+    assert_eq!(w8.stats.ops, 200);
+    assert_eq!(w8.stats.read_misses, 0);
+    assert!(
+        w8.stats.duration_ns * 4 < w1.stats.duration_ns,
+        "cross-shard overlap must cut the makespan: {} vs {}",
+        w8.stats.duration_ns,
+        w1.stats.duration_ns
+    );
+}
+
+/// The shared ingress is ONE queue over all shards: every issue of every
+/// shard is admitted through it, and a 1-channel queue costs throughput
+/// against the unmetered run on the same multi-shard geometry.
+#[test]
+fn shared_ingress_meters_every_shard_globally() {
+    let run = |ingress: Option<usize>| {
+        // 4 KiB payloads keep the single ingress channel busy (wire time
+        // dominates the posting floor), so the bound visibly binds.
+        let mut b = builder(Scheme::Erda, 4).window(8).value_size(4096);
+        if let Some(c) = ingress {
+            b = b.ingress(c);
+        }
+        b.run()
+    };
+    let free = run(None);
+    let metered = run(Some(1));
+    assert_eq!(free.stats.ingress_admitted, 0);
+    assert_eq!(
+        metered.stats.ingress_admitted,
+        metered.stats.ops,
+        "every op of every shard admits through the ONE queue"
+    );
+    assert!(metered.stats.ingress_wait_ns > 0, "32 in-flight issues must queue");
+    // The bound is global: per-shard stats carry no ingress numbers —
+    // admissions are not a per-world resource anymore.
+    assert!(metered.per_shard.iter().all(|p| p.ingress_admitted == 0));
+    assert!(
+        metered.stats.kops() < free.stats.kops(),
+        "the global NIC bound must cost throughput: {} vs {}",
+        metered.stats.kops(),
+        free.stats.kops()
+    );
+}
+
+/// Cluster stats come from ONE timeline: every additive field is the sum of
+/// the per-shard breakdown, the makespan is the exact max (shared clock),
+/// and the interval timeline sums across shards op for op.
+#[test]
+fn merged_stats_equal_per_shard_sums_on_one_timeline() {
+    for scheme in Scheme::ALL {
+        let outcome = builder(scheme, 4).window(4).run();
+        let s = &outcome.stats;
+        assert_eq!(outcome.per_shard.len(), 4, "{scheme:?}");
+        assert_eq!(s.ops, 4 * 150, "{scheme:?}: full quota");
+        assert_eq!(
+            s.ops,
+            outcome.per_shard.iter().map(|p| p.ops).sum::<u64>(),
+            "{scheme:?}: cluster ops = Σ shard ops"
+        );
+        assert_eq!(
+            s.nvm_programmed_bytes,
+            outcome.per_shard.iter().map(|p| p.nvm_programmed_bytes).sum::<u64>(),
+            "{scheme:?}: cluster NVM = Σ shard NVM"
+        );
+        assert_eq!(
+            s.server_cpu_busy_ns,
+            outcome.per_shard.iter().map(|p| p.server_cpu_busy_ns).sum::<u128>(),
+            "{scheme:?}: cluster CPU = Σ shard CPU"
+        );
+        assert_eq!(
+            s.latency.count() as u64,
+            outcome.per_shard.iter().map(|p| p.latency.count() as u64).sum::<u64>(),
+            "{scheme:?}: latency samples merge"
+        );
+        assert_eq!(
+            s.duration_ns,
+            outcome.per_shard.iter().map(|p| p.duration_ns).max().unwrap(),
+            "{scheme:?}: exact makespan = max over the shared clock"
+        );
+        // Interval timeline: cluster bucket counts are the shard sums, and
+        // the whole timeline accounts every measured op.
+        assert_eq!(
+            s.interval_done.iter().sum::<u64>(),
+            s.ops,
+            "{scheme:?}: interval buckets cover every op"
+        );
+        let max_len =
+            outcome.per_shard.iter().map(|p| p.interval_done.len()).max().unwrap_or(0);
+        assert_eq!(s.interval_done.len(), max_len, "{scheme:?}");
+        for i in 0..max_len {
+            let sum: u64 = outcome
+                .per_shard
+                .iter()
+                .map(|p| p.interval_done.get(i).copied().unwrap_or(0))
+                .sum();
+            assert_eq!(s.interval_done[i], sum, "{scheme:?}: bucket {i}");
+        }
+    }
+}
+
+/// Open-loop saturation on the co-sim cluster: the per-interval timeline
+/// shows achieved throughput lagging offered arrivals *while saturated*,
+/// even though the totals converge once the backlog drains.
+#[test]
+fn interval_timeline_exposes_the_saturated_gap() {
+    let s = builder(Scheme::Erda, 2)
+        .window(2)
+        .value_size(1024)
+        .ingress(1)
+        .arrival(Arrival::Fixed { rate: 400_000.0 })
+        .run()
+        .stats;
+    assert_eq!(s.offered_ops, 4 * 150, "every arrival offered");
+    assert_eq!(s.ops, 4 * 150, "backlog drains to completion");
+    assert_eq!(s.interval_offered.iter().sum::<u64>(), s.offered_ops);
+    assert_eq!(s.interval_done.iter().sum::<u64>(), s.ops);
+    assert!(
+        s.worst_interval_fraction() < 0.9,
+        "the gap must be visible per interval while saturated: {}",
+        s.worst_interval_fraction()
+    );
+    assert!(s.peak_interval_kops() > 0.0);
+    // The backlog-drain tail: achieved ops keep completing in intervals
+    // after arrivals stop, so the done-timeline outlives the offered one.
+    assert!(
+        s.interval_done.len() >= s.interval_offered.len(),
+        "service must lag arrivals: {} vs {} intervals",
+        s.interval_done.len(),
+        s.interval_offered.len()
+    );
+}

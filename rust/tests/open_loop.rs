@@ -1,12 +1,14 @@
-//! Integration tests for the windowed / open-loop client pipeline.
+//! Integration tests for the windowed / open-loop client pipeline and the
+//! co-simulated cluster engine.
 //!
-//! Covers the PR-3 acceptance surface end-to-end through the public
-//! facade: window=1 reducing to the closed-loop engine bit for bit,
-//! open-loop determinism, per-key-ordering health under deep windows,
-//! offered-vs-achieved accounting when the ingress queue saturates, and
-//! the per-shard world-sizing regression. (Fine-grained per-key ordering
-//! is additionally asserted at the state-machine level by the unit tests
-//! in `store::pipeline`.)
+//! Covers the PR-3/PR-4 acceptance surface end-to-end through the public
+//! facade: window=1 reducing to the closed-loop engine bit for bit, the
+//! co-sim cluster at shards=1/window=1 reproducing a hand-built LEGACY
+//! single-world engine bit for bit, open-loop determinism, per-key-ordering
+//! health under deep windows, offered-vs-achieved accounting when the
+//! ingress queue saturates, and the per-shard world-sizing regression.
+//! (Fine-grained per-key ordering is additionally asserted at the
+//! state-machine level by the unit tests in `store::pipeline`.)
 
 use erda::metrics::RunStats;
 use erda::store::{Cluster, ClusterBuilder, Scheme};
@@ -64,6 +66,158 @@ fn window_one_reduces_to_the_closed_loop_engine_bit_for_bit() {
         // The forced-pipeline run differs only in ingress accounting.
         assert_eq!(piped.ingress_admitted, piped.ops, "{scheme:?} every op admitted");
         assert_eq!(piped.ingress_wait_ns, 0, "{scheme:?} 4096 channels never queue");
+    }
+}
+
+/// The co-simulated cluster engine at `shards = 1, window = 1` must
+/// reproduce the LEGACY pre-co-sim engine — one world as the engine state,
+/// actors stepping it directly — bit for bit: same ops, same virtual
+/// timeline, same engine event count, same latency distribution, same
+/// NVM/CPU traffic. The legacy engine is hand-built here exactly as the
+/// PR-3 cluster driver built it (marker at warmup, closed-loop clients at
+/// 0, applier for the baselines), so the facade's co-sim path is pinned
+/// against the original construction, not against itself.
+#[test]
+fn cosim_at_one_shard_reproduces_the_legacy_engine_bit_for_bit() {
+    use erda::sim::{Actor, Engine, Step, Time};
+    use erda::workload::DriverConfig;
+    use erda::ycsb::{Generator, WorkloadConfig};
+
+    const CLIENTS: usize = 4;
+    const OPS: u64 = 200;
+    const WARMUP: Time = 2 * erda::sim::MS;
+
+    fn workload_cfg() -> WorkloadConfig {
+        WorkloadConfig {
+            workload: Workload::UpdateHeavy,
+            record_count: 128,
+            value_size: 256,
+            theta: 0.99,
+            seed: 0xE2DA,
+        }
+    }
+
+    fn driver_cfg(scheme: Scheme) -> DriverConfig {
+        DriverConfig {
+            scheme,
+            workload: workload_cfg(),
+            clients: CLIENTS,
+            ops_per_client: OPS,
+            warmup: WARMUP,
+            ..DriverConfig::default()
+        }
+    }
+
+    /// The legacy measurement-boundary marker (what the per-world engines
+    /// spawned at the warmup instant).
+    struct LegacyMarker;
+    impl Actor<erda::erda::ErdaWorld> for LegacyMarker {
+        fn step(&mut self, w: &mut erda::erda::ErdaWorld, _now: Time) -> Step {
+            w.cpu.reset_accounting();
+            w.nvm.reset_stats();
+            Step::Done
+        }
+    }
+    impl Actor<erda::baselines::BaselineWorld> for LegacyMarker {
+        fn step(&mut self, w: &mut erda::baselines::BaselineWorld, _now: Time) -> Step {
+            w.cpu.reset_accounting();
+            w.nvm.reset_stats();
+            Step::Done
+        }
+    }
+
+    fn legacy_erda(cfg: &DriverConfig) -> RunStats {
+        use erda::erda::{ClientConfig, ErdaClient, ErdaWorld};
+        let mut w = ErdaWorld::new(
+            cfg.timing.clone(),
+            erda::nvm::NvmConfig { capacity: cfg.shard_nvm_capacity() },
+            cfg.log_cfg,
+            cfg.shard_table_cap(),
+        );
+        w.preload(cfg.workload.record_count, cfg.workload.value_size);
+        w.nvm.reset_stats();
+        w.counters.measure_from = cfg.warmup;
+        w.counters.active_clients = cfg.clients as u32;
+        let ccfg = ClientConfig { max_value: cfg.workload.value_size, ..Default::default() };
+        let mut e = Engine::new(w);
+        e.spawn(Box::new(LegacyMarker), cfg.warmup);
+        for c in 0..cfg.clients as u64 {
+            let src = erda::store::OpSource::Ycsb(Generator::new(cfg.workload.clone(), c));
+            e.spawn(Box::new(ErdaClient::new(src, cfg.ops_per_client, ccfg)), 0);
+        }
+        e.run();
+        let events = e.events();
+        let w = e.state;
+        RunStats::collect(&w.counters, w.cpu.busy_ns(), w.nvm.stats(), events)
+    }
+
+    fn legacy_baseline(cfg: &DriverConfig) -> RunStats {
+        use erda::baselines::{ApplierActor, ApplierConfig, BaselineClient, BaselineWorld};
+        let slot = erda::log::object::wire_size(24, cfg.workload.value_size);
+        let mut w = BaselineWorld::new(
+            cfg.timing.clone(),
+            erda::nvm::NvmConfig { capacity: cfg.shard_nvm_capacity() },
+            cfg.scheme.baseline().expect("baseline scheme"),
+            cfg.shard_table_cap(),
+            cfg.log_cfg.region_size,
+            cfg.log_cfg.segment_size,
+            slot,
+        );
+        w.preload(cfg.workload.record_count, cfg.workload.value_size);
+        w.nvm.reset_stats();
+        w.counters.measure_from = cfg.warmup;
+        w.counters.active_clients = cfg.clients as u32;
+        let mut e = Engine::new(w);
+        e.spawn(Box::new(LegacyMarker), cfg.warmup);
+        for c in 0..cfg.clients as u64 {
+            let src = erda::store::OpSource::Ycsb(Generator::new(cfg.workload.clone(), c));
+            e.spawn(Box::new(BaselineClient::new(src, cfg.ops_per_client)), 0);
+        }
+        e.spawn(Box::new(ApplierActor::new(ApplierConfig::default())), 0);
+        e.run();
+        let events = e.events();
+        let w = e.state;
+        RunStats::collect(&w.counters, w.cpu.busy_ns(), w.nvm.stats(), events)
+    }
+
+    for scheme in Scheme::ALL {
+        let cfg = driver_cfg(scheme);
+        let legacy = match scheme {
+            Scheme::Erda => legacy_erda(&cfg),
+            _ => legacy_baseline(&cfg),
+        };
+        let cosim = Cluster::from_config(&cfg).run();
+        let mut co = cosim.stats;
+        let mut legacy = legacy;
+
+        assert_eq!(legacy.ops, co.ops, "{scheme:?} ops");
+        assert_eq!(legacy.duration_ns, co.duration_ns, "{scheme:?} makespan");
+        assert_eq!(legacy.events, co.events, "{scheme:?} engine events");
+        assert_eq!(
+            legacy.nvm_programmed_bytes, co.nvm_programmed_bytes,
+            "{scheme:?} NVM programmed"
+        );
+        assert_eq!(
+            legacy.nvm_requested_bytes, co.nvm_requested_bytes,
+            "{scheme:?} NVM requested"
+        );
+        assert_eq!(legacy.server_cpu_busy_ns, co.server_cpu_busy_ns, "{scheme:?} CPU");
+        assert_eq!(legacy.read_misses, co.read_misses, "{scheme:?} read misses");
+        assert_eq!(legacy.applied, co.applied, "{scheme:?} applied");
+        assert_eq!(legacy.latency.count(), co.latency.count(), "{scheme:?} samples");
+        assert_eq!(legacy.latency.mean_ns(), co.latency.mean_ns(), "{scheme:?} mean");
+        for p in [0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(
+                legacy.latency.percentile_ns(p),
+                co.latency.percentile_ns(p),
+                "{scheme:?} p{p}"
+            );
+        }
+        assert_eq!(legacy.interval_done, co.interval_done, "{scheme:?} interval buckets");
+        // The co-sim run's per-shard breakdown is the same single world.
+        assert_eq!(cosim.per_shard.len(), 1, "{scheme:?}");
+        assert_eq!(cosim.per_shard[0].ops, co.ops, "{scheme:?} per-shard ops");
+        assert_eq!(cosim.per_shard[0].events, co.events, "{scheme:?} per-shard events");
     }
 }
 

@@ -278,6 +278,95 @@ fn engine_runs_are_deterministic_per_scheme() {
     }
 }
 
+/// Co-sim conformance: at 4 shards the cluster-level counters are exactly
+/// the sum/merge of the per-shard breakdown for every scheme — whether the
+/// clients are shard-pinned (closed loop) or cluster-level (windowed).
+#[test]
+fn cosim_merged_counters_equal_per_shard_sums() {
+    for scheme in Scheme::ALL {
+        for window in [1usize, 4] {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .shards(4)
+                .clients(4)
+                .window(window)
+                .workload(Workload::UpdateHeavy)
+                .records(64)
+                .value_size(64)
+                .ops_per_client(100)
+                .warmup(0)
+                .run();
+            let s = &outcome.stats;
+            assert_eq!(s.ops, 4 * 100, "{scheme:?}/w{window}");
+            for (name, cluster, shard_sum) in [
+                ("ops", s.ops, outcome.per_shard.iter().map(|p| p.ops).sum::<u64>()),
+                (
+                    "nvm",
+                    s.nvm_programmed_bytes,
+                    outcome.per_shard.iter().map(|p| p.nvm_programmed_bytes).sum(),
+                ),
+                (
+                    "applied",
+                    s.applied,
+                    outcome.per_shard.iter().map(|p| p.applied).sum(),
+                ),
+                (
+                    "misses",
+                    s.read_misses,
+                    outcome.per_shard.iter().map(|p| p.read_misses).sum(),
+                ),
+            ] {
+                assert_eq!(cluster, shard_sum, "{scheme:?}/w{window}: {name}");
+            }
+            assert_eq!(
+                s.server_cpu_busy_ns,
+                outcome.per_shard.iter().map(|p| p.server_cpu_busy_ns).sum::<u128>(),
+                "{scheme:?}/w{window}: cpu"
+            );
+            assert_eq!(
+                s.duration_ns,
+                outcome.per_shard.iter().map(|p| p.duration_ns).max().unwrap(),
+                "{scheme:?}/w{window}: exact makespan on the shared clock"
+            );
+        }
+    }
+}
+
+/// Per-shard crash/recovery stays isolated AFTER a co-simulated windowed
+/// run: the settled Db of a cross-shard engine run still crashes and
+/// recovers one shard without touching the others.
+#[test]
+fn per_shard_crash_recovery_survives_a_cosim_run() {
+    let outcome = Cluster::builder()
+        .scheme(Scheme::Erda)
+        .shards(4)
+        .clients(2)
+        .window(4)
+        .workload(Workload::ReadOnly)
+        .records(32)
+        .value_size(VALUE)
+        .preload(32, VALUE)
+        .ops_per_client(100)
+        .warmup(0)
+        .run();
+    assert_eq!(outcome.stats.ops, 200);
+    let mut db = outcome.db;
+
+    let torn_key = key_of(5);
+    let crashed = db.shard_of_key(&torn_key);
+    db.crash_during_put(&torn_key, &vec![0xEEu8; VALUE], 1).unwrap();
+    db.crash_shard(crashed).unwrap();
+    let report = db.recover_shard(crashed).unwrap();
+    assert_eq!(report.entries_rolled_back, 1, "{report:?}");
+    assert_eq!(db.get(&torn_key).unwrap(), Some(vec![0xA5u8; VALUE]), "rolled back");
+    for i in 0..32u64 {
+        let k = key_of(i);
+        if k != torn_key {
+            assert_eq!(db.get(&k).unwrap(), Some(vec![0xA5u8; VALUE]), "bystander {i}");
+        }
+    }
+}
+
 /// Per-shard crash/recovery restores a consistent version on the crashed
 /// shard and does not touch the others (the acceptance scenario).
 #[test]
