@@ -1,0 +1,79 @@
+//! Replication: give every shard a synchronously-written RDMA mirror and
+//! survive a primary failure — all through the unified `store` facade.
+//!
+//! With `.mirrored(true)` every put replays on the shard's mirror world
+//! over the shared fabric before it ACKs (the mirror's integrity rides on
+//! Erda's existing checksum gate — no primary coordination needed), so a
+//! failed primary can be replaced by its mirror with `fail_primary` +
+//! `promote_mirror`: the promoted replica recovers onto its last
+//! checksum-consistent version. The run also shows the honest cost of
+//! availability: mirrored throughput drops (the op waits for BOTH
+//! persists) and NVM writes double — with the mirror share accounted
+//! separately, never folded into primary totals.
+//!
+//! Run: `cargo run --release --example mirrored_cluster`
+
+use erda::store::{Cluster, RemoteStore, Scheme};
+use erda::ycsb::{key_of, Workload};
+
+fn main() {
+    // 1. Unreplicated vs mirrored: same seed, same workload.
+    let run = |mirrored: bool| {
+        Cluster::builder()
+            .scheme(Scheme::Erda)
+            .shards(2)
+            .mirrored(mirrored)
+            .clients(4)
+            .window(2)
+            .ops_per_client(300)
+            .workload(Workload::UpdateOnly)
+            .records(128)
+            .value_size(256)
+            .warmup(0)
+            .run()
+    };
+    let plain = run(false);
+    let mirrored = run(true);
+    println!("Erda, 4 clients, window 2, update-only, 256 B, 2 shards:");
+    println!(
+        "  unreplicated: {:>7.2} KOp/s, mean {:.1} µs, {} NVM bytes",
+        plain.stats.kops(),
+        plain.stats.latency.mean_us(),
+        plain.stats.nvm_programmed_bytes
+    );
+    println!(
+        "  mirrored:     {:>7.2} KOp/s, mean {:.1} µs, {} NVM bytes \
+         ({} at mirrors, mean mirror leg {:.1} µs)",
+        mirrored.stats.kops(),
+        mirrored.stats.latency.mean_us(),
+        mirrored.stats.nvm_programmed_bytes,
+        mirrored.stats.mirror_nvm_programmed_bytes,
+        mirrored.stats.mean_mirror_leg_us()
+    );
+    assert_eq!(mirrored.stats.ops, 4 * 300, "mirroring must not lose ops");
+    assert_eq!(mirrored.stats.mirror_legs, mirrored.stats.ops, "every put replicated");
+
+    // 2. Failover: tear a write on one primary, lose that primary, promote
+    // its mirror, and read the last consistent version back.
+    let mut db = mirrored.db;
+    let victim_key = key_of(7);
+    let victim = db.shard_of_key(&victim_key);
+    let before = db.get(&victim_key).unwrap().expect("key 7 live after the run");
+    db.crash_during_put(&victim_key, &vec![0xEEu8; 256], 1).unwrap();
+    db.fail_primary(victim).unwrap();
+    let report = db.promote_mirror(victim).unwrap();
+    println!(
+        "\nshard {victim} failed over: {} entries checked on the promoted mirror, \
+         {} rolled back",
+        report.entries_checked, report.entries_rolled_back
+    );
+    assert_eq!(
+        db.get(&victim_key).unwrap(),
+        Some(before),
+        "promoted mirror serves the pre-tear version"
+    );
+    for i in 0..128u64 {
+        assert!(db.get(&key_of(i)).unwrap().is_some(), "key {i} lost in failover");
+    }
+    println!("all 128 keys alive on the promoted cluster ✓");
+}

@@ -13,6 +13,14 @@
 //! the windowed client binds each op to the shard world its key routes to,
 //! so its window spans shards inside the co-simulated cluster
 //! ([`crate::store::cosim::ClusterState`]).
+//!
+//! Under synchronous mirroring ([`crate::store::mirror`]) the windowed
+//! client replays [`begin_op`] with the same put/delete against the shard's
+//! MIRROR world once the primary leg completes — so each baseline replica
+//! pays its usual protocol (Redo: two-sided send + server-CPU redo append;
+//! RAW: address request, one-sided staged write, persistence-forcing read)
+//! *including* the staged double-write, exactly as the paper's comparison
+//! demands in a replicated setting.
 
 use super::server::{BaselineWorld, Scheme};
 use crate::log::{object, LogOffset};

@@ -6,7 +6,7 @@
 //! repro figures --table 1 [--out DIR]           Table 1
 //! repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
 //!             [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
-//!                                               facade end-to-end smoke run
+//!             [--mirrored]                      facade end-to-end smoke run
 //! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
 //!                                               shard-count throughput sweep
 //! repro window [--windows 1,2,4,8,16] [--quick] [--out DIR] [--json FILE]
@@ -14,6 +14,9 @@
 //! repro cross-shard [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
 //!                                               co-sim sweep: one window over
 //!                                               all shards + global NIC bound
+//! repro mirror [--shards 1,2] [--quick] [--out DIR] [--json FILE]
+//!                                               replication sweep: mirrored vs
+//!                                               unreplicated, all schemes
 //! repro bench-gate --baseline F --current F [--tolerance 0.10] [--update]
 //!                                               benchmark regression gate
 //! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
@@ -33,8 +36,9 @@ use crate::ycsb::Arrival;
 pub enum Cmd {
     Figures { ids: Vec<String>, fidelity: Fidelity, out: Option<PathBuf> },
     /// Exercise the `store` facade end-to-end for one scheme, over one or
-    /// more shards, optionally with a windowed / open-loop client pipeline
-    /// and the shared client-NIC ingress.
+    /// more shards, optionally with a windowed / open-loop client pipeline,
+    /// the shared client-NIC ingress, and synchronous mirroring (incl. a
+    /// fail-primary → promote-mirror check).
     Smoke {
         scheme: Scheme,
         seed: u64,
@@ -42,6 +46,7 @@ pub enum Cmd {
         window: usize,
         arrival: Arrival,
         ingress: Option<usize>,
+        mirrored: bool,
     },
     /// Scale-out sweep: throughput vs shard count for all three schemes.
     Scaling {
@@ -65,12 +70,65 @@ pub enum Cmd {
         out: Option<PathBuf>,
         json: Option<PathBuf>,
     },
+    /// Replication sweep: unreplicated vs synchronously mirrored runs for
+    /// all three schemes (throughput, p99, NVM-write amplification, mirror
+    /// NVM share).
+    Mirror {
+        shards: Vec<usize>,
+        fidelity: Fidelity,
+        out: Option<PathBuf>,
+        json: Option<PathBuf>,
+    },
     /// Compare a benchmark JSON artifact against a committed baseline;
     /// `update` writes the passing current artifact over the baseline.
     BenchGate { baseline: PathBuf, current: PathBuf, tolerance: f64, update: bool },
     Recover,
     VerifyRuntime,
     Help,
+}
+
+/// The shared flag set of every sweep subcommand (`scaling`,
+/// `cross-shard`, `mirror`, `window`): one comma-list flag (`--shards` /
+/// `--windows`), `--quick`, `--out DIR`, `--json FILE`. `name` labels
+/// unknown-flag errors; `noun` names the list elements in error text.
+fn parse_sweep_flags(
+    name: &str,
+    list_flag: &str,
+    noun: &str,
+    defaults: &[usize],
+    it: &mut std::iter::Peekable<std::slice::Iter<'_, String>>,
+) -> Result<(Vec<usize>, Fidelity, Option<PathBuf>, Option<PathBuf>)> {
+    let mut list: Vec<usize> = defaults.to_vec();
+    let mut fidelity = Fidelity::Full;
+    let mut out = None;
+    let mut json = None;
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            flag if flag == list_flag => match it.next() {
+                Some(v) => {
+                    list = v
+                        .split(',')
+                        .map(|s| s.trim().parse::<usize>())
+                        .collect::<Result<Vec<_>, _>>()?;
+                    if list.is_empty() || list.contains(&0) {
+                        bail!("{list_flag} needs a comma list of {noun} ≥ 1");
+                    }
+                }
+                None => bail!("{list_flag} needs a comma list, e.g. 1,2,4,8"),
+            },
+            "--quick" => fidelity = Fidelity::Quick,
+            "--out" => match it.next() {
+                Some(v) => out = Some(PathBuf::from(v)),
+                None => bail!("--out needs a directory"),
+            },
+            "--json" => match it.next() {
+                Some(v) => json = Some(PathBuf::from(v)),
+                None => bail!("--json needs a file path"),
+            },
+            other => bail!("unknown {name} flag {other:?}"),
+        }
+    }
+    Ok((list, fidelity, out, json))
 }
 
 /// Parse `args` (without argv[0]).
@@ -119,6 +177,7 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let mut window: usize = 1;
             let mut arrival = Arrival::Closed;
             let mut ingress: Option<usize> = None;
+            let mut mirrored = false;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--scheme" => match it.next() {
@@ -181,114 +240,41 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         }
                         None => bail!("--ingress needs a channel count"),
                     },
+                    "--mirrored" => mirrored = true,
                     other => bail!("unknown smoke flag {other:?}"),
                 }
             }
             match scheme {
                 Some(scheme) => {
-                    Ok(Cmd::Smoke { scheme, seed, shards, window, arrival, ingress })
+                    Ok(Cmd::Smoke { scheme, seed, shards, window, arrival, ingress, mirrored })
                 }
                 None => bail!("smoke: pass --scheme erda|redo|raw"),
             }
         }
         "scaling" => {
-            let mut shards: Vec<usize> = figures::SHARD_SWEEP.to_vec();
-            let mut fidelity = Fidelity::Full;
-            let mut out = None;
-            let mut json = None;
-            while let Some(a) = it.next() {
-                match a.as_str() {
-                    "--shards" => match it.next() {
-                        Some(v) => {
-                            shards = v
-                                .split(',')
-                                .map(|s| s.trim().parse::<usize>())
-                                .collect::<Result<Vec<_>, _>>()?;
-                            if shards.is_empty() || shards.contains(&0) {
-                                bail!("--shards needs a comma list of counts ≥ 1");
-                            }
-                        }
-                        None => bail!("--shards needs a comma list, e.g. 1,2,4,8"),
-                    },
-                    "--quick" => fidelity = Fidelity::Quick,
-                    "--out" => match it.next() {
-                        Some(v) => out = Some(PathBuf::from(v)),
-                        None => bail!("--out needs a directory"),
-                    },
-                    "--json" => match it.next() {
-                        Some(v) => json = Some(PathBuf::from(v)),
-                        None => bail!("--json needs a file path"),
-                    },
-                    other => bail!("unknown scaling flag {other:?}"),
-                }
-            }
+            let (shards, fidelity, out, json) =
+                parse_sweep_flags("scaling", "--shards", "counts", &figures::SHARD_SWEEP, &mut it)?;
             Ok(Cmd::Scaling { shards, fidelity, out, json })
         }
         "window" => {
-            let mut windows: Vec<usize> = figures::WINDOW_SWEEP.to_vec();
-            let mut fidelity = Fidelity::Full;
-            let mut out = None;
-            let mut json = None;
-            while let Some(a) = it.next() {
-                match a.as_str() {
-                    "--windows" => match it.next() {
-                        Some(v) => {
-                            windows = v
-                                .split(',')
-                                .map(|s| s.trim().parse::<usize>())
-                                .collect::<Result<Vec<_>, _>>()?;
-                            if windows.is_empty() || windows.contains(&0) {
-                                bail!("--windows needs a comma list of sizes ≥ 1");
-                            }
-                        }
-                        None => bail!("--windows needs a comma list, e.g. 1,2,4,8,16"),
-                    },
-                    "--quick" => fidelity = Fidelity::Quick,
-                    "--out" => match it.next() {
-                        Some(v) => out = Some(PathBuf::from(v)),
-                        None => bail!("--out needs a directory"),
-                    },
-                    "--json" => match it.next() {
-                        Some(v) => json = Some(PathBuf::from(v)),
-                        None => bail!("--json needs a file path"),
-                    },
-                    other => bail!("unknown window flag {other:?}"),
-                }
-            }
+            let (windows, fidelity, out, json) =
+                parse_sweep_flags("window", "--windows", "sizes", &figures::WINDOW_SWEEP, &mut it)?;
             Ok(Cmd::Window { windows, fidelity, out, json })
         }
         "cross-shard" | "cross_shard" => {
-            let mut shards: Vec<usize> = figures::CROSS_SHARD_SWEEP.to_vec();
-            let mut fidelity = Fidelity::Full;
-            let mut out = None;
-            let mut json = None;
-            while let Some(a) = it.next() {
-                match a.as_str() {
-                    "--shards" => match it.next() {
-                        Some(v) => {
-                            shards = v
-                                .split(',')
-                                .map(|s| s.trim().parse::<usize>())
-                                .collect::<Result<Vec<_>, _>>()?;
-                            if shards.is_empty() || shards.contains(&0) {
-                                bail!("--shards needs a comma list of counts ≥ 1");
-                            }
-                        }
-                        None => bail!("--shards needs a comma list, e.g. 1,2,4,8"),
-                    },
-                    "--quick" => fidelity = Fidelity::Quick,
-                    "--out" => match it.next() {
-                        Some(v) => out = Some(PathBuf::from(v)),
-                        None => bail!("--out needs a directory"),
-                    },
-                    "--json" => match it.next() {
-                        Some(v) => json = Some(PathBuf::from(v)),
-                        None => bail!("--json needs a file path"),
-                    },
-                    other => bail!("unknown cross-shard flag {other:?}"),
-                }
-            }
+            let (shards, fidelity, out, json) = parse_sweep_flags(
+                "cross-shard",
+                "--shards",
+                "counts",
+                &figures::CROSS_SHARD_SWEEP,
+                &mut it,
+            )?;
             Ok(Cmd::CrossShard { shards, fidelity, out, json })
+        }
+        "mirror" => {
+            let (shards, fidelity, out, json) =
+                parse_sweep_flags("mirror", "--shards", "counts", &figures::MIRROR_SWEEP, &mut it)?;
+            Ok(Cmd::Mirror { shards, fidelity, out, json })
         }
         "bench-gate" => {
             let mut baseline = None;
@@ -342,6 +328,7 @@ USAGE:
   repro figures --ablations [--out DIR]       design-choice ablations (A1–A4)
   repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
               [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
+              [--mirrored]
                                               exercise the store facade end to
                                               end (typed KV ops + a DES run,
                                               optionally over N key-space
@@ -349,9 +336,13 @@ USAGE:
                                               heap, with a W-deep in-flight
                                               pipeline spanning the shards, an
                                               open-loop Poisson/fixed arrival
-                                              process at R ops/s per client,
-                                              and a C-channel shared client-NIC
-                                              ingress); deterministic in --seed
+                                              process at R ops/s per client, a
+                                              C-channel shared client-NIC
+                                              ingress, and --mirrored giving
+                                              every shard a synchronously
+                                              written mirror world plus a
+                                              fail-primary → promote-mirror
+                                              check); deterministic in --seed
   repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
                                               scale-out sweep: throughput vs
                                               shard count, all three schemes
@@ -367,6 +358,13 @@ USAGE:
                                               shards, with and without the
                                               shared-ingress NIC bound (plus
                                               per-interval saturation metrics)
+  repro mirror [--shards 1,2] [--quick] [--out DIR] [--json FILE]
+                                              replication sweep: unreplicated
+                                              vs synchronously mirrored runs
+                                              for all three schemes —
+                                              throughput, mirrored p99, and
+                                              NVM-write amplification with the
+                                              mirror share split out
   repro bench-gate --baseline FILE --current FILE [--tolerance 0.10] [--update]
                                               compare a benchmark JSON artifact
                                               against a committed baseline;
@@ -434,7 +432,8 @@ mod tests {
                 shards: 1,
                 window: 1,
                 arrival: Arrival::Closed,
-                ingress: None
+                ingress: None,
+                mirrored: false
             }
         );
         assert_eq!(
@@ -445,7 +444,8 @@ mod tests {
                 shards: 1,
                 window: 1,
                 arrival: Arrival::Closed,
-                ingress: None
+                ingress: None,
+                mirrored: false
             }
         );
         assert_eq!(
@@ -456,7 +456,8 @@ mod tests {
                 shards: 4,
                 window: 1,
                 arrival: Arrival::Closed,
-                ingress: None
+                ingress: None,
+                mirrored: false
             }
         );
     }
@@ -472,7 +473,8 @@ mod tests {
                 shards: 2,
                 window: 8,
                 arrival: Arrival::Poisson { rate: 20000.0 },
-                ingress: Some(2)
+                ingress: Some(2),
+                mirrored: false
             }
         );
         assert_eq!(
@@ -483,7 +485,24 @@ mod tests {
                 shards: 1,
                 window: 4,
                 arrival: Arrival::Fixed { rate: 5000.0 },
-                ingress: None
+                ingress: None,
+                mirrored: false
+            }
+        );
+    }
+
+    #[test]
+    fn parses_mirrored_smoke() {
+        assert_eq!(
+            p("smoke --scheme raw --mirrored --shards 2 --window 4").unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::ReadAfterWrite,
+                seed: 0xE2DA,
+                shards: 2,
+                window: 4,
+                arrival: Arrival::Closed,
+                ingress: None,
+                mirrored: true
             }
         );
     }
@@ -584,6 +603,31 @@ mod tests {
         assert!(p("cross-shard --shards 0,2").is_err());
         assert!(p("cross-shard --shards").is_err());
         assert!(p("cross-shard --bogus").is_err());
+    }
+
+    #[test]
+    fn parses_mirror_sweep() {
+        assert_eq!(
+            p("mirror").unwrap(),
+            Cmd::Mirror {
+                shards: figures::MIRROR_SWEEP.to_vec(),
+                fidelity: Fidelity::Full,
+                out: None,
+                json: None,
+            }
+        );
+        assert_eq!(
+            p("mirror --shards 1,2 --quick --json BENCH_mirror.json").unwrap(),
+            Cmd::Mirror {
+                shards: vec![1, 2],
+                fidelity: Fidelity::Quick,
+                out: None,
+                json: Some(PathBuf::from("BENCH_mirror.json")),
+            }
+        );
+        assert!(p("mirror --shards 0,2").is_err());
+        assert!(p("mirror --shards").is_err());
+        assert!(p("mirror --bogus").is_err());
     }
 
     #[test]

@@ -27,6 +27,15 @@
 //! the co-simulated cluster. Both drivers mutate only the world they are
 //! handed, which is what lets the same `begin`/`advance` code run under a
 //! single-world engine or inside [`crate::store::cosim::ClusterState`].
+//!
+//! That world-parametricity is also what makes synchronous mirroring
+//! ([`crate::store::mirror`]) a pure composition: the windowed client adds
+//! an extra in-flight leg per put/delete by replaying this very state
+//! machine — [`begin_op`] with the same request — against the shard's
+//! MIRROR world once the primary leg persists, so the mirror pays the full
+//! protocol (write_with_imm metadata update at the mirror server + the
+//! one-sided data write, checksum-gated on the mirror's log) and the op
+//! ACKs only after both replicas persisted.
 
 use super::server::ErdaWorld;
 use crate::log::{object, HeadId, LogOffset, NO_OFFSET};

@@ -32,6 +32,8 @@ pub const SHARD_SWEEP: [usize; 4] = [1, 2, 4, 8];
 pub const WINDOW_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
 /// The default shard sweep of the co-sim experiment (`repro cross-shard`).
 pub const CROSS_SHARD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+/// The default shard sweep of the replication experiment (`repro mirror`).
+pub const MIRROR_SWEEP: [usize; 2] = [1, 2];
 
 /// One rendered experiment: a CSV-able grid plus a markdown view.
 #[derive(Clone, Debug)]
@@ -429,6 +431,76 @@ pub fn cross_shard(shard_counts: &[usize], fid: Fidelity) -> Rendered {
     }
 }
 
+/// Replication sweep (`repro mirror`): unreplicated vs synchronously
+/// mirrored runs for all three schemes under a pure-update mix. Per scheme
+/// and shard count the row reports unmirrored and mirrored throughput, the
+/// mirrored p99, the NVM-write amplification (mirrored / unmirrored total
+/// programmed bytes — ≈ 2 for every scheme: each replica repeats its own
+/// write discipline), and the mirror share of the mirrored run's NVM bytes
+/// (≈ 0.5 — mirror writes are accounted separately, never folded into
+/// primary totals). The paper's headline claim carries over to the
+/// replicated setting: mirrored Erda still programs ≈ half the NVM bytes
+/// per update of the mirrored baselines, because the ~2× replication
+/// factor multiplies both sides.
+pub fn mirror(shard_counts: &[usize], fid: Fidelity) -> Rendered {
+    let clients = 4;
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        let mut row = vec![shards.to_string()];
+        for scheme in SchemeSel::ALL {
+            let mut cfg = base_cfg(scheme, Workload::UpdateOnly, 256, clients, fid);
+            cfg.shards = shards;
+            let plain = run(&cfg);
+            let mut mcfg = cfg.clone();
+            mcfg.mirrored = true;
+            let mut mir = run(&mcfg);
+            let amp = if plain.nvm_programmed_bytes == 0 {
+                0.0
+            } else {
+                mir.nvm_programmed_bytes as f64 / plain.nvm_programmed_bytes as f64
+            };
+            let mir_frac = if mir.nvm_programmed_bytes == 0 {
+                0.0
+            } else {
+                mir.mirror_nvm_programmed_bytes as f64 / mir.nvm_programmed_bytes as f64
+            };
+            row.push(format!("{:.2}", plain.kops()));
+            row.push(format!("{:.2}", mir.kops()));
+            row.push(format!("{:.2}", mir.latency.percentile_us(0.99)));
+            row.push(format!("{amp:.2}"));
+            row.push(format!("{mir_frac:.3}"));
+        }
+        rows.push(row);
+    }
+    Rendered {
+        id: "mirror".into(),
+        title: format!(
+            "Replication: unreplicated vs synchronously mirrored throughput (KOp/s), \
+             mirrored p99 (µs) and NVM-write amplification \
+             ({clients} clients, update-only, 256 B)"
+        ),
+        header: vec![
+            "shards".into(),
+            "erda_kops".into(),
+            "erda_mir_kops".into(),
+            "erda_mir_p99_us".into(),
+            "erda_mir_nvm_x".into(),
+            "erda_mir_nvm_frac".into(),
+            "redo_kops".into(),
+            "redo_mir_kops".into(),
+            "redo_mir_p99_us".into(),
+            "redo_mir_nvm_x".into(),
+            "redo_mir_nvm_frac".into(),
+            "raw_kops".into(),
+            "raw_mir_kops".into(),
+            "raw_mir_p99_us".into(),
+            "raw_mir_nvm_x".into(),
+            "raw_mir_nvm_frac".into(),
+        ],
+        rows,
+    }
+}
+
 /// Run one experiment by paper number ("14".."26", "table1").
 pub fn by_id(id: &str, fid: Fidelity) -> Option<Rendered> {
     let wl = Workload::ALL;
@@ -451,14 +523,15 @@ pub fn by_id(id: &str, fid: Fidelity) -> Option<Rendered> {
         "scaling" => scaling(&SHARD_SWEEP, fid),
         "window" => window_sweep(&WINDOW_SWEEP, fid),
         "cross-shard" | "cross_shard" => cross_shard(&CROSS_SHARD_SWEEP, fid),
+        "mirror" => mirror(&MIRROR_SWEEP, fid),
         _ => return None,
     })
 }
 
 /// All experiment ids, in paper order (plus the repo's own extensions).
-pub const ALL_IDS: [&str; 18] = [
+pub const ALL_IDS: [&str; 19] = [
     "14", "15", "16", "17", "18", "19", "20", "21", "22", "23", "24", "25", "26", "table1",
-    "ablations", "scaling", "window", "cross-shard",
+    "ablations", "scaling", "window", "cross-shard", "mirror",
 ];
 
 #[cfg(test)]
@@ -538,6 +611,35 @@ mod tests {
         assert!(cell(1, 6) < 0.9, "saturation must show per interval: {}", r.rows[1][6]);
         // Peak interval throughput is reported and plausible.
         assert!(cell(1, 3) > 0.0);
+    }
+
+    #[test]
+    fn quick_mirror_sweep_doubles_nvm_and_splits_the_mirror_share() {
+        let r = mirror(&[1], Fidelity::Quick);
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.header.len(), 16);
+        let cell = |col: usize| -> f64 { r.rows[0][col].parse().unwrap() };
+        // Columns per scheme: kops, mir_kops, mir_p99_us, nvm_x, nvm_frac.
+        for (scheme, base) in [("erda", 1), ("redo", 6), ("raw", 11)] {
+            let kops = cell(base);
+            let mir_kops = cell(base + 1);
+            assert!(
+                mir_kops < kops,
+                "{scheme}: the synchronous mirror leg must cost throughput: \
+                 {kops} -> {mir_kops}"
+            );
+            assert!(mir_kops > 0.0, "{scheme}: mirrored runs still complete");
+            let amp = cell(base + 3);
+            assert!(
+                (1.5..2.5).contains(&amp),
+                "{scheme}: two replicas must ≈ double the NVM writes, got {amp}"
+            );
+            let frac = cell(base + 4);
+            assert!(
+                (0.35..0.65).contains(&frac),
+                "{scheme}: the mirror share must be accounted separately, got {frac}"
+            );
+        }
     }
 
     #[test]

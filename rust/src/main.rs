@@ -23,8 +23,8 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        Cmd::Smoke { scheme, seed, shards, window, arrival, ingress } => {
-            smoke(scheme, seed, shards, window, arrival, ingress)
+        Cmd::Smoke { scheme, seed, shards, window, arrival, ingress, mirrored } => {
+            smoke(scheme, seed, shards, window, arrival, ingress, mirrored)
         }
         Cmd::Scaling { shards, fidelity, out, json } => {
             let r = figures::scaling(&shards, fidelity);
@@ -38,6 +38,11 @@ fn main() -> Result<()> {
         }
         Cmd::CrossShard { shards, fidelity, out, json } => {
             let r = figures::cross_shard(&shards, fidelity);
+            r.emit(out.as_deref());
+            emit_json(&r, json.as_deref())
+        }
+        Cmd::Mirror { shards, fidelity, out, json } => {
+            let r = figures::mirror(&shards, fidelity);
             r.emit(out.as_deref());
             emit_json(&r, json.as_deref())
         }
@@ -127,8 +132,10 @@ fn bench_gate(
 /// through `Cluster` — the same two doors every example and test uses —
 /// over `shards` key-space partitions co-simulated in one event heap, with
 /// a `window`-deep in-flight pipeline spanning the shards, (optionally) an
-/// open-loop arrival process, and (optionally) the shared client-NIC
-/// ingress. Deterministic in `seed`.
+/// open-loop arrival process, (optionally) the shared client-NIC ingress,
+/// and (optionally) synchronous mirroring incl. a fail-primary →
+/// promote-mirror failover check. Deterministic in `seed`.
+#[allow(clippy::too_many_arguments)]
 fn smoke(
     scheme: erda::store::Scheme,
     seed: u64,
@@ -136,13 +143,14 @@ fn smoke(
     window: usize,
     arrival: erda::ycsb::Arrival,
     ingress: Option<usize>,
+    mirrored: bool,
 ) -> Result<()> {
     use erda::store::{Cluster, RemoteStore, Request};
     use erda::ycsb::{key_of, Workload};
 
     println!(
         "smoke: scheme = {}, seed = {seed:#x}, shards = {shards}, window = {window}, \
-         arrival = {arrival:?}, ingress = {ingress:?}",
+         arrival = {arrival:?}, ingress = {ingress:?}, mirrored = {mirrored}",
         scheme.label()
     );
 
@@ -150,6 +158,7 @@ fn smoke(
     let mut db = Cluster::builder()
         .scheme(scheme)
         .shards(shards)
+        .mirrored(mirrored)
         .records(16)
         .value_size(64)
         .preload(16, 64)
@@ -166,13 +175,32 @@ fn smoke(
         "torn write surfaced an inconsistent value"
     );
     println!("  db ops OK: put / get / delete / torn-write ({:?})", db.op_stats());
+    if mirrored {
+        // Failover: the torn key's primary dies; the promoted mirror must
+        // serve the last checksum-consistent version of every key.
+        let failed_shard = db.shard_of_key(&key_of(2));
+        erda::ensure!(
+            db.mirror_get(&key_of(0))? == Some(vec![0x5Au8; 64]),
+            "put did not replicate to the mirror"
+        );
+        db.fail_primary(failed_shard)?;
+        db.promote_mirror(failed_shard)?;
+        erda::ensure!(
+            db.get(&key_of(2))? == Some(vec![0xA5u8; 64]),
+            "promoted mirror lost the consistent version"
+        );
+        erda::ensure!(db.get(&key_of(0))? == Some(vec![0x5Au8; 64]), "failover lost a write");
+        println!("  failover OK: fail_primary({failed_shard}) → promote_mirror → consistent");
+    }
 
     // 2. End-to-end DES run: every shard world in ONE engine; windowed
     // clients keep up to `window` ops in flight, routed across shards at
-    // issue time, metered by the shared ingress when enabled.
+    // issue time, metered by the shared ingress when enabled; with
+    // --mirrored every put replays on the shard's mirror world before ACK.
     let mut b = Cluster::builder()
         .scheme(scheme)
         .shards(shards)
+        .mirrored(mirrored)
         .clients(4)
         .window(window)
         .arrival(arrival)
@@ -207,9 +235,12 @@ fn smoke(
         s.ops
     );
     if let Some(c) = ingress {
+        // Every op issue admits once; every synchronous mirror leg admits
+        // again (replication traffic shares the one NIC).
+        let expected_admissions = expected_ops + s.mirror_legs;
         erda::ensure!(
-            s.ingress_admitted == expected_ops,
-            "shared ingress must meter every issue: {} vs {expected_ops}",
+            s.ingress_admitted == expected_admissions,
+            "shared ingress must meter every issue: {} vs {expected_admissions}",
             s.ingress_admitted
         );
         println!(
@@ -225,6 +256,33 @@ fn smoke(
             "cluster-level windows must span shards: ops landed on {spanned} shard(s)"
         );
         println!("  co-sim: client windows spanned {spanned} of {shards} shard(s)");
+    }
+    if mirrored {
+        erda::ensure!(
+            outcome.per_mirror.len() == shards,
+            "mirrored run must report one mirror row per shard: {} vs {shards}",
+            outcome.per_mirror.len()
+        );
+        erda::ensure!(s.mirror_legs > 0, "an update-heavy mirrored run must record mirror legs");
+        erda::ensure!(
+            s.mirror_nvm_programmed_bytes > 0
+                && s.mirror_nvm_programmed_bytes < s.nvm_programmed_bytes,
+            "mirror NVM writes must be accounted separately: {} of {}",
+            s.mirror_nvm_programmed_bytes,
+            s.nvm_programmed_bytes
+        );
+        erda::ensure!(
+            outcome.per_mirror.iter().all(|m| m.ops == 0),
+            "ops must ACK on the primary, never on the mirror"
+        );
+        println!(
+            "  mirroring: {} legs, mean leg {:.2} µs, {} mirror NVM bytes \
+             (of {} total)",
+            s.mirror_legs,
+            s.mean_mirror_leg_us(),
+            s.mirror_nvm_programmed_bytes,
+            s.nvm_programmed_bytes
+        );
     }
     if arrival.is_open() {
         erda::ensure!(

@@ -137,6 +137,15 @@ pub struct Counters {
     /// Open-loop arrivals per interval (the offered-load timeline; empty
     /// for closed-loop runs).
     pub interval_offered: Vec<u64>,
+    /// Synchronous mirror legs completed inside the measurement window.
+    /// Recorded on the MIRROR world's counters by the windowed client, so
+    /// replication work attributes to the replica that absorbed it.
+    pub mirror_legs: u64,
+    /// Wire bytes those mirror legs pushed through the client NIC.
+    pub mirror_bytes: u64,
+    /// Total virtual time ops spent in their mirror leg (primary persist →
+    /// mirror persist) — the latency synchronous mirroring adds to a put.
+    pub mirror_leg_ns: u128,
     /// Virtual time measurement starts (ops completing before are warmup).
     pub measure_from: Time,
     pub first_completion: Time,
@@ -170,6 +179,9 @@ impl Counters {
         for (i, &n) in other.interval_offered.iter().enumerate() {
             bump(&mut self.interval_offered, i, n);
         }
+        self.mirror_legs += other.mirror_legs;
+        self.mirror_bytes += other.mirror_bytes;
+        self.mirror_leg_ns += other.mirror_leg_ns;
         // Like first_completion below, 0 means "unset" (a default-initialized
         // accumulator): adopt the other side's boundary instead of clamping
         // a real warmup down to 0.
@@ -202,6 +214,19 @@ impl Counters {
             self.first_completion = end;
         }
         self.last_completion = self.last_completion.max(end);
+    }
+
+    /// Record a completed synchronous mirror leg: issued at `issued` (the
+    /// instant the primary leg persisted), acknowledged at `done`, having
+    /// pushed `bytes` through the client NIC. Call on the MIRROR world's
+    /// counters. Warmup-era legs are dropped, like ops.
+    pub fn record_mirror_leg(&mut self, issued: Time, done: Time, bytes: usize) {
+        if issued < self.measure_from {
+            return;
+        }
+        self.mirror_legs += 1;
+        self.mirror_bytes += bytes as u64;
+        self.mirror_leg_ns += (done - issued) as u128;
     }
 
     /// Record an open-loop arrival at `at` that found `queue_depth` ops
@@ -271,6 +296,17 @@ pub struct RunStats {
     /// Open-loop arrivals per interval (offered-load timeline; empty for
     /// closed-loop runs).
     pub interval_offered: Vec<u64>,
+    /// Synchronous mirror legs completed (0 = unmirrored run).
+    pub mirror_legs: u64,
+    /// Wire bytes the mirror legs pushed through the client NIC.
+    pub mirror_bytes: u64,
+    /// Total virtual time ops spent in their mirror leg.
+    pub mirror_leg_ns: u128,
+    /// NVM bytes programmed at MIRROR replicas — a subset of
+    /// `nvm_programmed_bytes` (which is replication-factor-aware: it counts
+    /// every byte every replica programmed), split out so mirror writes are
+    /// never silently folded into primary totals.
+    pub mirror_nvm_programmed_bytes: u64,
 }
 
 impl RunStats {
@@ -314,6 +350,20 @@ impl RunStats {
             return 0.0;
         }
         self.queue_depth_sum as f64 / self.queue_depth_samples as f64
+    }
+
+    /// NVM bytes programmed at the PRIMARY replicas (total minus mirror).
+    pub fn primary_nvm_programmed_bytes(&self) -> u64 {
+        self.nvm_programmed_bytes - self.mirror_nvm_programmed_bytes
+    }
+
+    /// Mean latency of the synchronous mirror leg, µs (0 when unmirrored) —
+    /// what replication adds to a put on top of the primary persist.
+    pub fn mean_mirror_leg_us(&self) -> f64 {
+        if self.mirror_legs == 0 {
+            return 0.0;
+        }
+        self.mirror_leg_ns as f64 / self.mirror_legs as f64 / 1_000.0
     }
 
     /// Mean ingress queueing delay per admitted op, ns (0 when disabled).
@@ -389,6 +439,10 @@ impl RunStats {
             ingress_wait_ns: 0,
             interval_done: c.interval_done.clone(),
             interval_offered: c.interval_offered.clone(),
+            mirror_legs: c.mirror_legs,
+            mirror_bytes: c.mirror_bytes,
+            mirror_leg_ns: c.mirror_leg_ns,
+            mirror_nvm_programmed_bytes: 0,
         }
     }
 
@@ -396,6 +450,14 @@ impl RunStats {
     pub fn with_ingress(mut self, ingress: crate::rdma::IngressStats) -> RunStats {
         self.ingress_admitted = ingress.admitted;
         self.ingress_wait_ns = ingress.wait_ns;
+        self
+    }
+
+    /// Record how many of `nvm_programmed_bytes` landed at mirror replicas
+    /// (cluster-level attribution — the driver sums the mirror worlds'
+    /// substrate accounting and folds it in here).
+    pub fn with_mirror_nvm(mut self, bytes: u64) -> RunStats {
+        self.mirror_nvm_programmed_bytes = bytes;
         self
     }
 }
@@ -514,6 +576,41 @@ mod tests {
         assert_eq!(s.events, 9);
         assert_eq!(s.ingress_admitted, 4);
         assert_eq!(s.mean_ingress_wait_ns(), 300.0);
+    }
+
+    #[test]
+    fn mirror_leg_accounting_respects_warmup_and_merges() {
+        let mut c = Counters { measure_from: 100, ..Default::default() };
+        c.record_mirror_leg(50, 90, 4096); // warmup: dropped
+        c.record_mirror_leg(150, 250, 1024);
+        c.record_mirror_leg(200, 260, 1024);
+        assert_eq!(c.mirror_legs, 2);
+        assert_eq!(c.mirror_bytes, 2048);
+        assert_eq!(c.mirror_leg_ns, 160);
+
+        let mut other = Counters::default();
+        other.record_mirror_leg(0, 40, 512);
+        c.merge(&other);
+        assert_eq!(c.mirror_legs, 3);
+        assert_eq!(c.mirror_bytes, 2560);
+        assert_eq!(c.mirror_leg_ns, 200);
+
+        let s = RunStats::collect(&c, 0, crate::nvm::WriteStats::default(), 0)
+            .with_mirror_nvm(777);
+        assert_eq!(s.mirror_legs, 3);
+        assert_eq!(s.mirror_bytes, 2560);
+        assert_eq!(s.mirror_leg_ns, 200);
+        assert_eq!(s.mirror_nvm_programmed_bytes, 777);
+        assert!((s.mean_mirror_leg_us() - 200.0 / 3.0 / 1000.0).abs() < 1e-9);
+
+        // Replication-aware split: primary = total − mirror.
+        let split = RunStats {
+            nvm_programmed_bytes: 1000,
+            mirror_nvm_programmed_bytes: 400,
+            ..Default::default()
+        };
+        assert_eq!(split.primary_nvm_programmed_bytes(), 600);
+        assert_eq!(RunStats::default().mean_mirror_leg_us(), 0.0);
     }
 
     #[test]

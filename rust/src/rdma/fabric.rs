@@ -25,7 +25,9 @@ pub struct IngressStats {
 /// honest bottleneck at scale is the *shared* client NIC: every shard's
 /// issue path meters through this single queue, which is what makes the
 /// NIC bound global instead of a per-shard fiction that would overstate
-/// scale-out.
+/// scale-out. Synchronous mirror legs ([`crate::store::mirror`]) admit
+/// through the same queue — replication traffic is priced like any other
+/// client traffic, never given a phantom NIC of its own.
 pub struct Ingress {
     timing: Timing,
     pool: CpuPool,

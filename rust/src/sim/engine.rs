@@ -18,7 +18,8 @@
 //! same-timestamp events from *different shards* interleave identically on
 //! every run with the same seed, and the per-shard subsequence of the
 //! global event order is exactly what a dedicated per-shard engine would
-//! have executed.
+//! have executed. The contract is written out in full — alongside the layer
+//! map it anchors — in `docs/ARCHITECTURE.md`.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

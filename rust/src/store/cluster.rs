@@ -38,6 +38,13 @@
 //! `shards = 1` the whole construction reproduces the legacy single-world
 //! engine bit for bit (asserted in `rust/tests/open_loop.rs`).
 //!
+//! **Replication:** `.mirrored(true)` gives every shard a synchronously
+//! written mirror world in the same engine (world layout
+//! `[P0..Pn-1, M0..Mn-1]`, see [`super::mirror`]): every put/delete replays
+//! on the mirror over the shared fabric/ingress and ACKs only after both
+//! replicas persisted, and the per-world stats split by replica role
+//! ([`RunOutcome::per_shard`] vs [`RunOutcome::per_mirror`]).
+//!
 //! Scripted ops are split per owning shard with order preserved, and the
 //! cluster-level [`RunStats`] is collected from the merged counters of the
 //! one timeline (sums across shards; the per-shard breakdown rides in
@@ -97,6 +104,18 @@ impl ClusterBuilder {
     pub fn shards(mut self, n: usize) -> Self {
         assert!(n >= 1, "a cluster has at least one shard");
         self.cfg.shards = n;
+        self
+    }
+
+    /// Give every shard a synchronously-written mirror world in the same
+    /// co-sim engine ([`super::mirror`]): each put/delete replays on the
+    /// mirror over the shared fabric/ingress and ACKs only after both
+    /// replicas persisted; reads stay on the primary. The settled [`Db`]
+    /// supports [`Db::fail_primary`] / [`Db::promote_mirror`]. YCSB runs
+    /// only — scripted clients are shard-scoped and stay unreplicated, so
+    /// mirrored engine runs reject them.
+    pub fn mirrored(mut self, yes: bool) -> Self {
+        self.cfg.mirrored = yes;
         self
     }
 
@@ -280,21 +299,30 @@ pub struct Cluster {
 /// final world state of every shard.
 pub struct RunOutcome {
     pub stats: RunStats,
-    /// One entry per shard, in shard order (length 1 for single-server
-    /// runs). Every additive field of `stats` (ops, NVM bytes, CPU time,
-    /// latency samples, …) is the sum/merge of these, and the makespan is
-    /// their max — exact, because all shards share one virtual clock. The
+    /// One entry per PRIMARY shard world, in shard order (length 1 for
+    /// single-server runs) — mirror replicas report in [`Self::per_mirror`]
+    /// instead of being folded into primary shard totals. Every additive
+    /// field of `stats` (ops, NVM bytes, CPU time, latency samples, …) is
+    /// the sum/merge of these plus the mirror rows, and the makespan is
+    /// their max — exact, because all worlds share one virtual clock. The
     /// exceptions are cluster-level quantities with no per-shard home:
-    /// `stats.events` counts the whole engine, while per-shard `events`
-    /// cover shard-scoped actors plus the warmup marker (one engine event
-    /// attributed to *every* shard it resets, so per-shard events sum to
-    /// `stats.events + shards - 1` even closed loop) and never the
+    /// `stats.events` counts the whole engine, while per-world `events`
+    /// cover world-scoped actors plus the warmup marker (one engine event
+    /// attributed to *every* world it resets, so per-world events sum to
+    /// `stats.events + worlds - 1` even closed loop) and never the
     /// cluster-level windowed clients; the shared-ingress accounting
     /// lives only in `stats`; and
     /// open-loop queue-depth samples describe the *client's* whole pending
     /// queue — each sample is booked on the arriving op's shard, so read
     /// queue depth at cluster level, not per shard.
     pub per_shard: Vec<RunStats>,
+    /// One entry per MIRROR world, in shard order; empty for unmirrored
+    /// runs. Mirror rows record no ops of their own (ops ACK on the
+    /// primary) — their payload is the replication work: `mirror_legs`,
+    /// `mirror_bytes`, `mirror_leg_ns` and the mirror's NVM/CPU accounting,
+    /// also summed into `stats` (`stats.mirror_nvm_programmed_bytes` splits
+    /// the NVM share back out).
+    pub per_mirror: Vec<RunStats>,
     pub db: Db,
 }
 
@@ -384,9 +412,12 @@ impl Cluster {
 
     /// Do the YCSB clients run the windowed/open-loop pipeline? (Scripted
     /// clients always stay closed loop — failure-injection scripts rely on
-    /// strictly sequential semantics.)
+    /// strictly sequential semantics.) Mirrored runs always pipeline: the
+    /// mirror leg is a cluster-level concern (it spans two worlds), and at
+    /// `window = 1` the pipelined client reproduces the closed-loop path
+    /// bit for bit, so the paper's client model is preserved.
     fn use_pipeline(cfg: &DriverConfig) -> bool {
-        cfg.window > 1 || cfg.arrival.is_open() || cfg.ingress_channels.is_some()
+        cfg.window > 1 || cfg.arrival.is_open() || cfg.ingress_channels.is_some() || cfg.mirrored
     }
 
     /// The open-loop arrival generator for client `c` (None = closed loop).
@@ -456,22 +487,23 @@ impl Cluster {
     pub fn into_db(self) -> Db {
         let shards = self.cfg.shards.max(1);
         let script_max = self.script_max_value();
-        let mut parts = Vec::with_capacity(shards);
-        for shard in 0..shards {
-            parts.push(match self.cfg.scheme {
-                Scheme::Erda => {
-                    Db::from_erda(Self::make_erda_world(&self.cfg, self.preload, shard, shards))
-                }
-                _ => Db::from_baseline(Self::make_baseline_world(
-                    &self.cfg,
-                    self.preload,
-                    script_max,
-                    shard,
-                    shards,
-                )),
-            });
+        let make = |shard: usize| match self.cfg.scheme {
+            Scheme::Erda => {
+                Db::from_erda(Self::make_erda_world(&self.cfg, self.preload, shard, shards))
+            }
+            _ => Db::from_baseline(Self::make_baseline_world(
+                &self.cfg,
+                self.preload,
+                script_max,
+                shard,
+                shards,
+            )),
+        };
+        let mut db = Db::merge_shards((0..shards).map(&make).collect());
+        if self.cfg.mirrored {
+            db.attach_mirrors((0..shards).map(&make).collect());
         }
-        Db::merge_shards(parts)
+        db
     }
 
     /// Run the simulation to quiescence — every shard world in ONE engine —
@@ -481,6 +513,12 @@ impl Cluster {
         let shards = self.cfg.shards.max(1);
         let script_max = self.script_max_value();
         let Cluster { cfg, preload, scripts } = self;
+        assert!(
+            !cfg.mirrored || scripts.is_empty(),
+            "mirrored engine runs take YCSB clients only: scripted clients are \
+             shard-scoped and would write past the mirror (use Db for scripted \
+             mirrored scenarios)"
+        );
         let shard_scripts = Self::split_scripts(scripts, shards);
         let owned = Self::shards_with_keys(cfg.workload.record_count, shards);
         let owning: Vec<usize> = (0..shards).filter(|&s| owned[s]).collect();
@@ -537,15 +575,22 @@ impl Cluster {
             ..ClientConfig::default()
         };
 
-        let mut worlds = Vec::with_capacity(shards);
-        for shard in 0..shards {
+        // Primaries first, then (mirrored clusters) one mirror world per
+        // shard — same geometry, same preload, so the mirror starts as an
+        // exact replica. Cluster-level clients may touch every world, so
+        // mirrors carry the same active-client count.
+        let total_worlds = if cfg.mirrored { 2 * shards } else { shards };
+        let mut worlds = Vec::with_capacity(total_worlds);
+        for widx in 0..total_worlds {
+            let shard = widx % shards;
             let mut w = Self::make_erda_world(cfg, preload, shard, shards);
             w.counters.measure_from = cfg.warmup;
             w.counters.active_clients =
                 (Self::world_client_count(cfg, shard, owning) + shard_scripts[shard].len()) as u32;
             worlds.push(w);
         }
-        let mut engine = Engine::new(ClusterState::new(worlds, Self::make_ingress(cfg)));
+        let mut engine =
+            Engine::new(ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), shards));
         engine.spawn(Box::new(Marker), cfg.warmup);
         for (shard, scripts) in shard_scripts.into_iter().enumerate() {
             for s in scripts {
@@ -564,6 +609,7 @@ impl Cluster {
                     cfg.window,
                     Self::client_arrivals(cfg, c),
                     shards,
+                    cfg.mirrored,
                 );
                 engine.spawn(Box::new(client), 0);
             }
@@ -577,10 +623,12 @@ impl Cluster {
             }
         }
         if cfg.cleaning_threshold.is_some() {
-            for shard in 0..shards {
+            // Mirror worlds clean their own logs too (their heads fill at
+            // the primary's write rate).
+            for widx in 0..total_worlds {
                 for h in 0..cfg.log_cfg.num_heads {
                     let cleaner = CleanerActor::new(h as u8, cfg.cleaner);
-                    engine.spawn(Box::new(Scoped::new(shard, cleaner)), cfg.warmup / 2);
+                    engine.spawn(Box::new(Scoped::new(widx, cleaner)), cfg.warmup / 2);
                 }
             }
         }
@@ -599,15 +647,18 @@ impl Cluster {
         script_max: usize,
     ) -> RunOutcome {
         let shards = shard_scripts.len();
-        let mut worlds = Vec::with_capacity(shards);
-        for shard in 0..shards {
+        let total_worlds = if cfg.mirrored { 2 * shards } else { shards };
+        let mut worlds = Vec::with_capacity(total_worlds);
+        for widx in 0..total_worlds {
+            let shard = widx % shards;
             let mut w = Self::make_baseline_world(cfg, preload, script_max, shard, shards);
             w.counters.measure_from = cfg.warmup;
             w.counters.active_clients =
                 (Self::world_client_count(cfg, shard, owning) + shard_scripts[shard].len()) as u32;
             worlds.push(w);
         }
-        let mut engine = Engine::new(ClusterState::new(worlds, Self::make_ingress(cfg)));
+        let mut engine =
+            Engine::new(ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), shards));
         engine.spawn(Box::new(Marker), cfg.warmup);
         for (shard, scripts) in shard_scripts.into_iter().enumerate() {
             for s in scripts {
@@ -625,6 +676,7 @@ impl Cluster {
                     cfg.window,
                     Self::client_arrivals(cfg, c),
                     shards,
+                    cfg.mirrored,
                 );
                 engine.spawn(Box::new(client), 0);
             }
@@ -637,9 +689,10 @@ impl Cluster {
                 }
             }
         }
-        for shard in 0..shards {
+        // Every world — mirrors included — drains its own staged queue.
+        for widx in 0..total_worlds {
             let applier = ApplierActor::new(ApplierConfig::default());
-            engine.spawn(Box::new(Scoped::new(shard, applier)), 0);
+            engine.spawn(Box::new(Scoped::new(widx, applier)), 0);
         }
         engine.run();
         Self::finish(engine, |mut w: BaselineWorld| {
@@ -648,37 +701,54 @@ impl Cluster {
         })
     }
 
-    /// Collect the finished co-sim engine into a [`RunOutcome`]: per-shard
-    /// stats from each world's counters/substrates, cluster stats from the
-    /// merged counters of the one timeline (so the makespan is exact), the
-    /// engine-wide event count, and the shared-ingress accounting.
+    /// Collect the finished co-sim engine into a [`RunOutcome`]: per-world
+    /// stats from each world's counters/substrates — split by replica role,
+    /// so mirror NVM/CPU work is never silently folded into primary shard
+    /// totals — cluster stats from the merged counters of the one timeline
+    /// (so the makespan is exact), the engine-wide event count, and the
+    /// shared-ingress accounting.
     fn finish<W: ClientWorld>(
         engine: Engine<ClusterState<W>>,
         mut to_db: impl FnMut(W) -> Db,
     ) -> RunOutcome {
         let events = engine.events();
         let ingress_stats = engine.state.ingress_stats();
-        let ClusterState { worlds, shard_events, .. } = engine.state;
+        let ClusterState { worlds, primaries, shard_events, .. } = engine.state;
         let mut merged = Counters::default();
         let mut cpu_total: u128 = 0;
         let mut nvm_total = WriteStats::default();
-        let mut per_shard = Vec::with_capacity(worlds.len());
-        let mut dbs = Vec::with_capacity(worlds.len());
-        for (shard, w) in worlds.into_iter().enumerate() {
-            per_shard.push(RunStats::collect(
+        let mut mirror_nvm: u64 = 0;
+        let mut per_shard = Vec::with_capacity(primaries);
+        let mut per_mirror = Vec::with_capacity(worlds.len() - primaries);
+        let mut primary_dbs = Vec::with_capacity(primaries);
+        let mut mirror_dbs = Vec::with_capacity(worlds.len() - primaries);
+        for (widx, w) in worlds.into_iter().enumerate() {
+            let stats = RunStats::collect(
                 w.counters(),
                 w.cpu_busy_ns(),
                 w.nvm_stats(),
-                shard_events[shard],
-            ));
+                shard_events[widx],
+            );
             merged.merge(w.counters());
             cpu_total += w.cpu_busy_ns();
             nvm_total.merge(w.nvm_stats());
-            dbs.push(to_db(w));
+            if widx < primaries {
+                per_shard.push(stats);
+                primary_dbs.push(to_db(w));
+            } else {
+                mirror_nvm += stats.nvm_programmed_bytes;
+                per_mirror.push(stats);
+                mirror_dbs.push(to_db(w));
+            }
         }
-        let stats =
-            RunStats::collect(&merged, cpu_total, nvm_total, events).with_ingress(ingress_stats);
-        RunOutcome { stats, per_shard, db: Db::merge_shards(dbs) }
+        let stats = RunStats::collect(&merged, cpu_total, nvm_total, events)
+            .with_ingress(ingress_stats)
+            .with_mirror_nvm(mirror_nvm);
+        let mut db = Db::merge_shards(primary_dbs);
+        if !mirror_dbs.is_empty() {
+            db.attach_mirrors(mirror_dbs);
+        }
+        RunOutcome { stats, per_shard, per_mirror, db }
     }
 }
 
@@ -925,6 +995,118 @@ mod tests {
         assert_eq!(a.duration_ns, b.duration_ns);
         assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
         assert_eq!(a.queue_depth_max, b.queue_depth_max);
+    }
+
+    #[test]
+    fn mirrored_run_replicates_and_splits_accounting() {
+        for scheme in Scheme::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .shards(2)
+                .mirrored(true)
+                .clients(4)
+                .window(2)
+                .workload(Workload::UpdateHeavy)
+                .records(48)
+                .value_size(64)
+                .ops_per_client(100)
+                .warmup(0)
+                .run();
+            let s = &outcome.stats;
+            assert_eq!(s.ops, 4 * 100, "{scheme:?}: mirroring must not lose ops");
+            assert_eq!(s.read_misses, 0, "{scheme:?}");
+            assert_eq!(outcome.per_shard.len(), 2, "{scheme:?}");
+            assert_eq!(outcome.per_mirror.len(), 2, "{scheme:?}");
+            assert!(
+                outcome.per_mirror.iter().all(|m| m.ops == 0),
+                "{scheme:?}: ops ACK on the primary, never on the mirror"
+            );
+            assert!(s.mirror_legs > 0, "{scheme:?}: puts must replicate");
+            assert_eq!(
+                s.mirror_legs,
+                outcome.per_mirror.iter().map(|m| m.mirror_legs).sum::<u64>(),
+                "{scheme:?}: legs attribute to mirror worlds"
+            );
+            assert!(
+                outcome.per_shard.iter().all(|p| p.mirror_legs == 0),
+                "{scheme:?}: primary rows carry no mirror legs"
+            );
+            assert!(s.mirror_nvm_programmed_bytes > 0, "{scheme:?}");
+            assert_eq!(
+                s.mirror_nvm_programmed_bytes,
+                outcome.per_mirror.iter().map(|m| m.nvm_programmed_bytes).sum::<u64>(),
+                "{scheme:?}: mirror NVM bytes split out, not folded into primaries"
+            );
+            assert_eq!(
+                s.nvm_programmed_bytes,
+                outcome
+                    .per_shard
+                    .iter()
+                    .chain(&outcome.per_mirror)
+                    .map(|p| p.nvm_programmed_bytes)
+                    .sum::<u64>(),
+                "{scheme:?}: total NVM is replication-factor-aware"
+            );
+            assert!(
+                s.primary_nvm_programmed_bytes() > 0,
+                "{scheme:?}: primaries still account their own writes"
+            );
+            assert!(outcome.db.is_mirrored(), "{scheme:?}: the settled Db keeps the mirrors");
+        }
+    }
+
+    #[test]
+    fn mirrored_runs_are_deterministic() {
+        let run = || {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(2)
+                .mirrored(true)
+                .clients(3)
+                .window(4)
+                .workload(Workload::UpdateHeavy)
+                .records(32)
+                .value_size(64)
+                .ops_per_client(80)
+                .warmup(0)
+                .run()
+                .stats
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.duration_ns, b.duration_ns);
+        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
+        assert_eq!(a.mirror_legs, b.mirror_legs);
+        assert_eq!(a.mirror_nvm_programmed_bytes, b.mirror_nvm_programmed_bytes);
+    }
+
+    #[test]
+    fn unmirrored_outcome_has_no_mirror_rows() {
+        let outcome = Cluster::builder()
+            .scheme(Scheme::Erda)
+            .clients(2)
+            .ops_per_client(40)
+            .records(32)
+            .value_size(64)
+            .warmup(0)
+            .run();
+        assert!(outcome.per_mirror.is_empty());
+        assert_eq!(outcome.stats.mirror_legs, 0);
+        assert_eq!(outcome.stats.mirror_nvm_programmed_bytes, 0);
+        assert!(!outcome.db.is_mirrored());
+    }
+
+    #[test]
+    #[should_panic(expected = "mirrored engine runs")]
+    fn mirrored_run_rejects_scripts() {
+        let _ = Cluster::builder()
+            .scheme(Scheme::Erda)
+            .mirrored(true)
+            .records(8)
+            .value_size(32)
+            .script(vec![Request::Get { key: key_of(0) }])
+            .run();
     }
 
     #[test]

@@ -20,6 +20,12 @@
 //! sequence is exactly what the old per-shard engines executed — which is
 //! why a `shards = 1, window = 1` co-sim run reproduces the legacy engine
 //! bit for bit.
+//!
+//! Mirrored clusters ([`super::mirror`]) extend the same layout: the world
+//! vector holds the primaries first and one mirror world per shard after
+//! them, so the synchronous mirror leg of a put and the primary ACK order
+//! on the one shared clock. See `docs/ARCHITECTURE.md` for the full layer
+//! map and determinism contract.
 
 use crate::rdma::{Ingress, IngressStats};
 use crate::sim::{Actor, Step, Time};
@@ -27,24 +33,43 @@ use crate::sim::{Actor, Step, Time};
 use super::pipeline::ClientWorld;
 
 /// The engine state of a co-simulated cluster run: all shard worlds, the
-/// one shared client-NIC ingress, and per-shard event attribution.
+/// one shared client-NIC ingress, and per-world event attribution.
 pub(crate) struct ClusterState<W> {
-    /// One world per shard, in shard order.
+    /// One world per shard in shard order — and, for mirrored clusters,
+    /// one mirror world per shard after them: `[P0..Pn-1, M0..Mn-1]`
+    /// (shard `s`'s mirror lives at
+    /// [`super::mirror::mirror_world_index`]`(primaries, s)`).
     pub worlds: Vec<W>,
+    /// How many of `worlds` are primaries (`== worlds.len()` when the
+    /// cluster is unmirrored).
+    pub primaries: usize,
     /// The ONE client-NIC ingress queue metering every shard's issue path
     /// (`None` = unmetered). Cluster-global on purpose: this is what makes
-    /// the NIC bound real instead of per-shard.
+    /// the NIC bound real instead of per-shard — mirror legs admit through
+    /// the same queue, so replication traffic is priced honestly.
     pub ingress: Option<Ingress>,
-    /// Engine steps attributed to shard-scoped actors (scripted clients,
+    /// Engine steps attributed to world-scoped actors (scripted clients,
     /// cleaners, appliers, the marker). Cluster-level clients act on
-    /// several shards per step and are counted only in the engine total.
+    /// several worlds per step and are counted only in the engine total.
     pub shard_events: Vec<u64>,
 }
 
 impl<W> ClusterState<W> {
     pub fn new(worlds: Vec<W>, ingress: Option<Ingress>) -> Self {
         let n = worlds.len();
-        ClusterState { worlds, ingress, shard_events: vec![0; n] }
+        Self::with_mirrors(worlds, ingress, n)
+    }
+
+    /// A cluster state whose first `primaries` worlds are primaries and the
+    /// rest (either none, or exactly one per primary) are their mirrors.
+    pub fn with_mirrors(worlds: Vec<W>, ingress: Option<Ingress>, primaries: usize) -> Self {
+        let n = worlds.len();
+        assert!(
+            n == primaries || n == 2 * primaries,
+            "world layout must be primaries-only or one mirror per primary: \
+             {n} worlds, {primaries} primaries"
+        );
+        ClusterState { worlds, primaries, ingress, shard_events: vec![0; n] }
     }
 
     /// Admit an op issue of `bytes` through the shared client NIC; `now`
@@ -175,6 +200,23 @@ mod tests {
             assert_eq!(pair[0].0, pair[1].0, "both shards tick at the same instant");
             assert_eq!((pair[0].1, pair[1].1), (0, 1), "FIFO tie-break across shards");
         }
+    }
+
+    #[test]
+    fn mirrored_layout_tracks_primaries() {
+        let plain: ClusterState<u64> = ClusterState::new(vec![0, 0], None);
+        assert_eq!(plain.primaries, 2);
+        let mirrored: ClusterState<u64> =
+            ClusterState::with_mirrors(vec![0, 0, 0, 0], None, 2);
+        assert_eq!(mirrored.primaries, 2);
+        assert_eq!(mirrored.shard_events.len(), 4, "mirrors get event attribution too");
+        assert_eq!(crate::store::mirror::mirror_world_index(mirrored.primaries, 1), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "world layout")]
+    fn lopsided_mirror_layout_is_rejected() {
+        let _: ClusterState<u64> = ClusterState::with_mirrors(vec![0, 0, 0], None, 2);
     }
 
     #[test]

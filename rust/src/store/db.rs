@@ -14,6 +14,17 @@
 //! shard ([`Db::crash_shard`]/[`Db::recover_shard`]), which leaves the
 //! other shards untouched.
 //!
+//! **Replication** ([`super::mirror`]): a handle built with
+//! `ClusterBuilder::mirrored(true)` carries one mirror world per shard.
+//! Every put/delete applies to both replicas before it returns (synchronous
+//! mirroring); reads are served by the primary; an injected
+//! [`Request::CrashDuringPut`] tears the PRIMARY only — the dying writer
+//! never reaches its mirror leg — which is exactly what makes failover
+//! safe: [`Db::fail_primary`] takes a primary out, and
+//! [`Db::promote_mirror`] swaps the mirror in and recovers it onto its last
+//! checksum-consistent version (Erda runs the full log-scan recovery;
+//! the baselines drain their staged queue through the applier CRC gate).
+//!
 //! For timing-accurate runs (latency/throughput/CPU figures) use
 //! [`super::Cluster`], which returns a settled `Db` for inspection after
 //! the engine quiesces.
@@ -33,23 +44,38 @@ enum Inner {
 /// A synchronous store handle over one world per shard (see module docs).
 pub struct Db {
     shards: Vec<Inner>,
+    /// One mirror world per shard (empty = unmirrored handle). `None`
+    /// entries mark mirrors consumed by [`Db::promote_mirror`].
+    mirrors: Vec<Option<Inner>>,
+    /// Primaries taken out by [`Db::fail_primary`], awaiting promotion.
+    failed: Vec<bool>,
     stats: OpStats,
 }
 
 impl Db {
     /// An empty single-shard store with default geometry for `scheme` — the
     /// one-line way in. Use [`super::Cluster::builder`]`.build_db()` for
-    /// full control (including `.shards(n)`).
+    /// full control (including `.shards(n)` and `.mirrored(true)`).
     pub fn open(scheme: Scheme) -> Db {
         super::Cluster::builder().scheme(scheme).preload(0, 0).build_db()
     }
 
     pub(crate) fn from_erda(world: ErdaWorld) -> Db {
-        Db { shards: vec![Inner::Erda(Box::new(world))], stats: OpStats::default() }
+        Db {
+            shards: vec![Inner::Erda(Box::new(world))],
+            mirrors: Vec::new(),
+            failed: vec![false],
+            stats: OpStats::default(),
+        }
     }
 
     pub(crate) fn from_baseline(world: BaselineWorld) -> Db {
-        Db { shards: vec![Inner::Baseline(Box::new(world))], stats: OpStats::default() }
+        Db {
+            shards: vec![Inner::Baseline(Box::new(world))],
+            mirrors: Vec::new(),
+            failed: vec![false],
+            stats: OpStats::default(),
+        }
     }
 
     /// Assemble a sharded handle from single-shard parts (the cluster
@@ -64,6 +90,7 @@ impl Db {
         let mut stats = OpStats::default();
         for p in parts {
             debug_assert_eq!(p.shards.len(), 1, "parts are single-shard");
+            debug_assert!(p.mirrors.is_empty(), "mirrors attach after the merge");
             stats.gets += p.stats.gets;
             stats.puts += p.stats.puts;
             stats.deletes += p.stats.deletes;
@@ -73,7 +100,34 @@ impl Db {
             stats.applied += p.stats.applied;
             shards.extend(p.shards);
         }
-        Db { shards, stats }
+        let n = shards.len();
+        Db { shards, mirrors: Vec::new(), failed: vec![false; n], stats }
+    }
+
+    /// Attach one mirror world per shard (the cluster driver builds them
+    /// exactly like the primaries, in shard order).
+    pub(crate) fn attach_mirrors(&mut self, parts: Vec<Db>) {
+        assert_eq!(parts.len(), self.shards.len(), "one mirror per shard");
+        assert!(self.mirrors.is_empty(), "mirrors already attached");
+        self.mirrors = parts
+            .into_iter()
+            .map(|mut p| {
+                debug_assert_eq!(p.shards.len(), 1, "mirror parts are single-shard");
+                Some(p.shards.pop().expect("one world"))
+            })
+            .collect();
+    }
+
+    /// Was this handle built with synchronous mirroring? (Individual shards
+    /// may since have consumed their mirror via [`Db::promote_mirror`] —
+    /// see [`Db::has_mirror`].)
+    pub fn is_mirrored(&self) -> bool {
+        !self.mirrors.is_empty()
+    }
+
+    /// Does `shard` currently have a mirror to fail over to?
+    pub fn has_mirror(&self, shard: usize) -> bool {
+        matches!(self.mirrors.get(shard), Some(Some(_)))
     }
 
     /// Number of shard worlds behind this handle.
@@ -97,7 +151,9 @@ impl Db {
         })
     }
 
-    /// NVM write accounting, summed over every shard world.
+    /// NVM write accounting, summed over every PRIMARY shard world (mirror
+    /// replicas report separately in [`Db::mirror_nvm_stats`], so the
+    /// replication factor never silently inflates primary totals).
     pub fn nvm_stats(&self) -> WriteStats {
         let mut out = WriteStats::default();
         for inner in &self.shards {
@@ -111,6 +167,33 @@ impl Db {
             out.atomic_ops += s.atomic_ops;
         }
         out
+    }
+
+    /// NVM write accounting summed over the live MIRROR worlds (zeroes for
+    /// an unmirrored handle).
+    pub fn mirror_nvm_stats(&self) -> WriteStats {
+        let mut out = WriteStats::default();
+        for inner in self.mirrors.iter().flatten() {
+            out.merge(match inner {
+                Inner::Erda(w) => w.nvm.stats(),
+                Inner::Baseline(w) => w.nvm.stats(),
+            });
+        }
+        out
+    }
+
+    /// Read `key` from its shard's MIRROR replica (full consistency path —
+    /// checksum gate, fallback), without touching this handle's op stats:
+    /// the inspection surface mirror-consistency tests ride on. Errors when
+    /// the shard has no live mirror.
+    pub fn mirror_get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>, StoreError> {
+        let shard = self.shard_of_key(key);
+        let mut scratch = OpStats::default();
+        match self.mirrors.get_mut(shard).and_then(|m| m.as_mut()) {
+            None => Err(StoreError::Unsupported("no mirror for this shard")),
+            Some(Inner::Erda(w)) => Self::erda_get(w, &mut scratch, key),
+            Some(Inner::Baseline(w)) => Ok(w.server.read(&w.nvm, key)),
+        }
     }
 
     /// Erda only: occupied bytes under log head `h` of shard 0 (the
@@ -155,16 +238,23 @@ impl Db {
         Ok(())
     }
 
+    /// Wipe the volatile bookkeeping (log tails, append indices) an Erda
+    /// server loses at a power failure — what crash injection and failover
+    /// promotion both simulate before the recovery scan.
+    fn reset_erda_volatile(w: &mut ErdaWorld) {
+        for h in 0..w.server.num_heads() {
+            let head = w.server.log.head_mut(h as u8);
+            head.tail = 0;
+            head.index.clear();
+        }
+    }
+
     /// Crash one shard server, leaving the other shards untouched —
     /// independent failure domains are the point of the partition.
     pub fn crash_shard(&mut self, shard: usize) -> Result<(), StoreError> {
         match self.shards.get_mut(shard) {
             Some(Inner::Erda(w)) => {
-                for h in 0..w.server.num_heads() {
-                    let head = w.server.log.head_mut(h as u8);
-                    head.tail = 0;
-                    head.index.clear();
-                }
+                Self::reset_erda_volatile(w);
                 Ok(())
             }
             Some(Inner::Baseline(_)) => {
@@ -172,6 +262,58 @@ impl Db {
             }
             None => Err(StoreError::Unsupported("shard index out of range")),
         }
+    }
+
+    /// Take the primary of `shard` out of service (a fail-stop server
+    /// failure). Requires a live mirror to fail over to; until
+    /// [`Db::promote_mirror`] runs, every op routed to the shard returns
+    /// [`StoreError::Unsupported`].
+    pub fn fail_primary(&mut self, shard: usize) -> Result<(), StoreError> {
+        if shard >= self.shards.len() {
+            return Err(StoreError::Unsupported("shard index out of range"));
+        }
+        if !self.has_mirror(shard) {
+            return Err(StoreError::Unsupported("no mirror to fail over to"));
+        }
+        self.failed[shard] = true;
+        Ok(())
+    }
+
+    /// Promote `shard`'s mirror to primary after [`Db::fail_primary`]: the
+    /// mirror world replaces the failed primary and recovers onto its last
+    /// checksum-consistent version — Erda runs the full §4.2 log-scan
+    /// recovery (volatile bookkeeping rebuilt, torn in-flight mirror legs
+    /// rolled back by checksum); the baselines drain their staged queue
+    /// through the applier's CRC gate. The shard is single-homed afterwards
+    /// ([`Db::has_mirror`] turns false) and serves ops again.
+    pub fn promote_mirror(&mut self, shard: usize) -> Result<RecoveryReport, StoreError> {
+        if !self.failed.get(shard).copied().unwrap_or(false) {
+            return Err(StoreError::Unsupported("primary still alive — fail_primary first"));
+        }
+        let mirror = self.mirrors[shard]
+            .take()
+            .ok_or(StoreError::Unsupported("no mirror to promote"))?;
+        self.shards[shard] = mirror;
+        self.failed[shard] = false;
+        match &mut self.shards[shard] {
+            Inner::Erda(w) => {
+                Self::reset_erda_volatile(w);
+                let ErdaWorld { nvm, server, .. } = &mut **w;
+                Ok(recover(server, nvm, &mut LocalCheck))
+            }
+            Inner::Baseline(w) => {
+                Self::drain_baseline(w, &mut self.stats);
+                Ok(RecoveryReport::default())
+            }
+        }
+    }
+
+    /// The primary of `shard` must be in service.
+    fn check_alive(&self, shard: usize) -> Result<(), StoreError> {
+        if self.failed.get(shard).copied().unwrap_or(false) {
+            return Err(StoreError::Unsupported("primary failed — promote_mirror first"));
+        }
+        Ok(())
     }
 
     /// Run crash recovery on every shard with the local checksum verifier;
@@ -253,7 +395,10 @@ impl Db {
     /// Inject a torn write: start a put but persist only the first `chunks`
     /// 64-byte chunks, as a crashing client would (the [`Request`] form is
     /// [`Request::CrashDuringPut`]). Routed to the key's shard like any
-    /// other write.
+    /// other write. On mirrored handles the tear stays on the PRIMARY: the
+    /// writer dies during its primary leg, so the mirror leg never issues
+    /// and the mirror keeps the last consistent version — the state
+    /// [`Db::promote_mirror`] recovers onto.
     pub fn crash_during_put(
         &mut self,
         key: &[u8],
@@ -265,6 +410,7 @@ impl Db {
         let obj = object::encode_object(key, value);
         let cut = (chunks * 64).min(obj.len());
         let shard = self.shard_of_key(key);
+        self.check_alive(shard)?;
         match &mut self.shards[shard] {
             Inner::Erda(w) => {
                 // Metadata publishes first (§3.3); only a prefix of the
@@ -388,6 +534,41 @@ impl Db {
         }
     }
 
+    /// Apply a put to one world — the write discipline of its scheme. Used
+    /// for the primary and, on mirrored handles, replayed on the mirror.
+    fn apply_put(
+        inner: &mut Inner,
+        stats: &mut OpStats,
+        key: &[u8],
+        value: &[u8],
+    ) -> Result<(), StoreError> {
+        match inner {
+            Inner::Erda(w) => {
+                let obj = object::encode_object(key, value);
+                let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
+                w.nvm.write(addr, &obj);
+                Ok(())
+            }
+            Inner::Baseline(w) => Self::baseline_put(w, stats, key, value),
+        }
+    }
+
+    /// Apply a delete to one world (primary or mirror replay).
+    fn apply_delete(inner: &mut Inner, key: &[u8]) -> Result<(), StoreError> {
+        match inner {
+            Inner::Erda(w) => {
+                let obj = object::encode_delete(key);
+                let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
+                w.nvm.write(addr, &obj);
+                Ok(())
+            }
+            Inner::Baseline(w) => {
+                w.server.delete(&mut w.nvm, key);
+                Ok(())
+            }
+        }
+    }
+
     fn baseline_put(
         w: &mut BaselineWorld,
         stats: &mut OpStats,
@@ -423,8 +604,9 @@ impl RemoteStore for Db {
     }
 
     fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>, StoreError> {
-        self.stats.gets += 1;
         let shard = self.shard_of_key(key);
+        self.check_alive(shard)?;
+        self.stats.gets += 1;
         match &mut self.shards[shard] {
             Inner::Erda(w) => Self::erda_get(w, &mut self.stats, key),
             Inner::Baseline(w) => {
@@ -441,13 +623,16 @@ impl RemoteStore for Db {
         Self::check_key(key)?;
         Self::check_obj_size(key, value, self.max_obj())?;
         let shard = self.shard_of_key(key);
-        match &mut self.shards[shard] {
-            Inner::Erda(w) => {
-                let obj = object::encode_object(key, value);
-                let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
-                w.nvm.write(addr, &obj);
-            }
-            Inner::Baseline(w) => Self::baseline_put(w, &mut self.stats, key, value)?,
+        self.check_alive(shard)?;
+        Self::apply_put(&mut self.shards[shard], &mut self.stats, key, value)?;
+        // Synchronous mirroring: the mirror persists before the op returns.
+        // Its drain lands in scratch stats — op_stats() reports the
+        // PRIMARY's view (like nvm_stats), so the replication factor never
+        // doubles `applied`; the mirror world's own counters still record
+        // its applies, and mirror_nvm_stats() carries its write traffic.
+        if let Some(m) = self.mirrors.get_mut(shard).and_then(|m| m.as_mut()) {
+            let mut scratch = OpStats::default();
+            Self::apply_put(m, &mut scratch, key, value)?;
         }
         self.stats.puts += 1;
         Ok(())
@@ -456,15 +641,10 @@ impl RemoteStore for Db {
     fn delete(&mut self, key: &[u8]) -> Result<(), StoreError> {
         Self::check_key(key)?;
         let shard = self.shard_of_key(key);
-        match &mut self.shards[shard] {
-            Inner::Erda(w) => {
-                let obj = object::encode_delete(key);
-                let (_, _, addr) = w.server.try_write_request(&mut w.nvm, key, obj.len())?;
-                w.nvm.write(addr, &obj);
-            }
-            Inner::Baseline(w) => {
-                w.server.delete(&mut w.nvm, key);
-            }
+        self.check_alive(shard)?;
+        Self::apply_delete(&mut self.shards[shard], key)?;
+        if let Some(m) = self.mirrors.get_mut(shard).and_then(|m| m.as_mut()) {
+            Self::apply_delete(m, key)?;
         }
         self.stats.deletes += 1;
         Ok(())
@@ -599,6 +779,115 @@ mod tests {
             db.delete(&key_of(6)).unwrap();
             assert_eq!(db.get(&key_of(6)).unwrap(), None, "{scheme:?}");
         }
+    }
+
+    fn open_mirrored(scheme: Scheme) -> Db {
+        Cluster::builder()
+            .scheme(scheme)
+            .mirrored(true)
+            .records(4)
+            .value_size(16)
+            .preload(4, 16)
+            .build_db()
+    }
+
+    #[test]
+    fn mirrored_db_replicates_writes_and_deletes() {
+        for scheme in Scheme::ALL {
+            let mut db = open_mirrored(scheme);
+            assert!(db.is_mirrored(), "{scheme:?}");
+            assert!(db.has_mirror(0), "{scheme:?}");
+            // The mirror starts as an exact replica of the preload.
+            assert_eq!(db.mirror_get(&key_of(0)).unwrap(), Some(vec![0xA5u8; 16]), "{scheme:?}");
+            // Puts and deletes replay on the mirror before returning.
+            db.put(&key_of(0), b"fresh-val-16byte").unwrap();
+            assert_eq!(
+                db.mirror_get(&key_of(0)).unwrap().as_deref(),
+                Some(&b"fresh-val-16byte"[..]),
+                "{scheme:?} put must replicate"
+            );
+            db.delete(&key_of(1)).unwrap();
+            assert_eq!(db.mirror_get(&key_of(1)).unwrap(), None, "{scheme:?} delete replicates");
+            // The mirror has real NVM write traffic of its own.
+            assert!(db.mirror_nvm_stats().programmed_bytes > 0, "{scheme:?}");
+            // …but op_stats reports the PRIMARY's view: one put applied
+            // once, never doubled by the mirror replay.
+            if scheme != Scheme::Erda {
+                assert_eq!(db.op_stats().applied, 1, "{scheme:?}: applied must not double");
+            }
+            // A torn put stays on the primary; the mirror keeps the old
+            // version (the writer died during the primary leg).
+            db.crash_during_put(&key_of(2), &vec![0xEEu8; 16], 0).unwrap();
+            assert_eq!(
+                db.mirror_get(&key_of(2)).unwrap(),
+                Some(vec![0xA5u8; 16]),
+                "{scheme:?} the mirror never sees the torn write"
+            );
+        }
+    }
+
+    #[test]
+    fn promote_mirror_recovers_checksum_consistent_state_all_schemes() {
+        for scheme in Scheme::ALL {
+            let mut db = open_mirrored(scheme);
+            db.put(&key_of(0), b"fresh-val-16byte").unwrap();
+            db.delete(&key_of(1)).unwrap();
+            // Tear an in-flight update on the primary (chunks: 0 — the
+            // 44-byte object would fit one 64-byte chunk whole), then lose
+            // the primary entirely.
+            db.crash_during_put(&key_of(2), &vec![0xEEu8; 16], 0).unwrap();
+            db.fail_primary(0).unwrap();
+            // A failed shard serves nothing until promotion.
+            assert!(matches!(db.get(&key_of(0)), Err(StoreError::Unsupported(_))), "{scheme:?}");
+            assert!(
+                matches!(db.put(&key_of(0), b"fresh-val-16byte"), Err(StoreError::Unsupported(_))),
+                "{scheme:?}"
+            );
+            let report = db.promote_mirror(0).unwrap();
+            // The promoted replica serves the last checksum-consistent
+            // version of every key: committed writes survive, the torn
+            // update never happened, deletes hold.
+            assert_eq!(
+                db.get(&key_of(0)).unwrap().as_deref(),
+                Some(&b"fresh-val-16byte"[..]),
+                "{scheme:?} committed write survives failover"
+            );
+            assert_eq!(db.get(&key_of(1)).unwrap(), None, "{scheme:?} delete survives");
+            assert_eq!(
+                db.get(&key_of(2)).unwrap(),
+                Some(vec![0xA5u8; 16]),
+                "{scheme:?} torn update rolls back to the old version"
+            );
+            assert_eq!(db.get(&key_of(3)).unwrap(), Some(vec![0xA5u8; 16]), "{scheme:?}");
+            if scheme == Scheme::Erda {
+                assert_eq!(report.entries_rolled_back, 0, "{scheme:?}: mirror was consistent");
+            }
+            // Single-homed afterwards, and writable again.
+            assert!(!db.has_mirror(0), "{scheme:?}");
+            db.put(&key_of(3), b"post-promote-16B").unwrap();
+            assert_eq!(
+                db.get(&key_of(3)).unwrap().as_deref(),
+                Some(&b"post-promote-16B"[..]),
+                "{scheme:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn failover_guards_are_typed_errors() {
+        // Unmirrored handles cannot fail over.
+        let mut db = open(Scheme::Erda);
+        assert!(!db.is_mirrored());
+        assert!(matches!(db.fail_primary(0), Err(StoreError::Unsupported(_))));
+        assert!(matches!(db.promote_mirror(0), Err(StoreError::Unsupported(_))));
+        // Promotion requires an explicit primary failure first.
+        let mut db = open_mirrored(Scheme::Erda);
+        assert!(matches!(db.promote_mirror(0), Err(StoreError::Unsupported(_))));
+        // Out-of-range shards are typed errors, not panics.
+        assert!(matches!(db.fail_primary(9), Err(StoreError::Unsupported(_))));
+        // mirror_get on an unmirrored handle errors.
+        let mut db = open(Scheme::Erda);
+        assert!(matches!(db.mirror_get(&key_of(0)), Err(StoreError::Unsupported(_))));
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! RDMA synchronous mirroring: one mirror world per shard, in the same
+//! co-simulated engine.
+//!
+//! `ClusterBuilder::mirrored(true)` gives every shard world a **mirror**
+//! world with identical geometry and preload. On every put (and delete) the
+//! client adds one extra in-flight leg: once the primary leg persists, it
+//! admits the same payload through the shared client-NIC
+//! [`crate::rdma::Ingress`] and replays the scheme's own write protocol
+//! against the mirror world — a one-sided RDMA write of the log entry for
+//! Erda, the usual two-sided/staged double-write for the Redo Logging and
+//! Read After Write baselines — and the op ACKs only after **both**
+//! replicas persisted
+//! (synchronous mirroring, per the RDMA remote-mirroring line of Tavakkol
+//! et al. in PAPERS.md). Reads stay on the primary (linearizable reads from
+//! the primary replica).
+//!
+//! The paper's property does the heavy lifting here: Erda's checksum-gated,
+//! zero-copy writes give the mirror data integrity *for free* — a mirror
+//! validates any fetched log entry locally via its CRC, with no primary
+//! coordination or acknowledgment round trips, so failover
+//! ([`crate::store::Db::fail_primary`] / [`crate::store::Db::promote_mirror`])
+//! recovers onto the mirror's last checksum-consistent version exactly like
+//! single-server crash recovery. The baselines mirror too, but each replica
+//! pays their usual staged double-write, so the paper's ~50 % NVM-write
+//! reduction claim carries over unchanged to the replicated setting (the
+//! `repro mirror` sweep measures it).
+//!
+//! Because both replicas live on the ONE co-simulated event heap
+//! ([`super::cosim::ClusterState`], world layout `[P0..Pn-1, M0..Mn-1]`),
+//! the mirror write and the primary ACK order on a single clock, and the
+//! shared ingress prices the mirroring traffic honestly instead of granting
+//! replication a phantom NIC. See `docs/ARCHITECTURE.md` for where this
+//! hooks into the layer map.
+//!
+//! **Known limitation (documented, not hidden):** a client's per-key lane
+//! gate orders its OWN ops — a write on a key holds the lane until both
+//! replicas persisted, so one client can never reorder its mirror legs.
+//! Two *different* clients racing writes on the same key, however, are
+//! serialized by each replica's metadata server independently, so the
+//! replicas may adopt the racers in different last-writer-wins orders —
+//! the multi-writer ambiguity client-driven mirroring inherits from the
+//! paper's (coordination-free) write path. Primary-assigned per-key
+//! versions would close it; see ROADMAP. Single-writer-per-key workloads
+//! (and every test here) are unaffected.
+
+use super::Request;
+
+/// Which replica of a shard a world (or a stats row) describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardRole {
+    /// The world that owns the shard's key range and serves reads.
+    Primary,
+    /// The synchronously-written replica reads never touch; promotion
+    /// target after a primary failure.
+    Mirror,
+}
+
+impl ShardRole {
+    /// Human-readable label (stats rows, error messages).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardRole::Primary => "primary",
+            ShardRole::Mirror => "mirror",
+        }
+    }
+}
+
+/// Index of shard `shard`'s mirror world in the co-sim world vector
+/// (`[P0..Pn-1, M0..Mn-1]` — primaries first, mirrors after).
+pub(crate) fn mirror_world_index(primaries: usize, shard: usize) -> usize {
+    debug_assert!(shard < primaries, "shard {shard} out of range for {primaries} primaries");
+    primaries + shard
+}
+
+/// The mirror leg's request, if `req` mutates state: puts and deletes
+/// replicate; gets never leave the primary, and an injected
+/// [`Request::CrashDuringPut`] kills the writer during the *primary* leg,
+/// so its mirror leg never issues — which is exactly what leaves the mirror
+/// on the last consistent version for promotion.
+pub(crate) fn replicate(req: &Request) -> Option<Request> {
+    match req {
+        Request::Put { .. } | Request::Delete { .. } => Some(req.clone()),
+        Request::Get { .. } | Request::CrashDuringPut { .. } => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ycsb::key_of;
+
+    #[test]
+    fn roles_label() {
+        assert_eq!(ShardRole::Primary.label(), "primary");
+        assert_eq!(ShardRole::Mirror.label(), "mirror");
+        assert_ne!(ShardRole::Primary, ShardRole::Mirror);
+    }
+
+    #[test]
+    fn mirror_world_layout_is_primaries_then_mirrors() {
+        assert_eq!(mirror_world_index(1, 0), 1);
+        assert_eq!(mirror_world_index(4, 0), 4);
+        assert_eq!(mirror_world_index(4, 3), 7);
+    }
+
+    #[test]
+    fn only_mutations_replicate() {
+        let key = key_of(1);
+        let put = Request::Put { key: key.clone(), value: vec![1u8; 8] };
+        assert_eq!(replicate(&put), Some(put.clone()));
+        let del = Request::Delete { key: key.clone() };
+        assert_eq!(replicate(&del), Some(del.clone()));
+        assert_eq!(replicate(&Request::Get { key: key.clone() }), None);
+        assert_eq!(
+            replicate(&Request::CrashDuringPut { key, value: vec![2u8; 8], chunks: 1 }),
+            None,
+            "a writer that dies mid-primary-leg never reaches the mirror"
+        );
+    }
+}

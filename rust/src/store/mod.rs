@@ -25,14 +25,23 @@
 //!   `n` independent server worlds (each with its own NVM arena, log heads,
 //!   hash table and background actors); [`Db`] routes every operation by
 //!   this function and supports per-shard crash/recovery.
+//! * [`mirror`] — RDMA synchronous mirroring: `.mirrored(true)` gives every
+//!   shard a mirror world in the same co-sim engine; puts/deletes replay on
+//!   the mirror before they ACK, reads stay on the primary, and
+//!   [`Db::fail_primary`] / [`Db::promote_mirror`] fail over onto the
+//!   mirror's last checksum-consistent version.
+//!
+//! The full layer map lives in `docs/ARCHITECTURE.md`.
 
 pub mod cluster;
 pub(crate) mod cosim;
 pub mod db;
+pub mod mirror;
 pub(crate) mod pipeline;
 
 pub use cluster::{Cluster, ClusterBuilder, RunOutcome};
 pub use db::Db;
+pub use mirror::ShardRole;
 
 use std::collections::VecDeque;
 use std::fmt;

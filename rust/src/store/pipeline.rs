@@ -36,11 +36,21 @@
 //! depth are accounted in [`crate::metrics::Counters`] of the op's shard;
 //! open-loop latency is measured from *arrival* (queueing included).
 //!
-//! With `window = 1`, closed-loop arrivals and one shard this actor
-//! reproduces the closed-loop clients' runs bit for bit (same engine
+//! In a **mirrored** cluster ([`crate::store::mirror`]) every put/delete
+//! gains a second in-flight leg: when the primary leg persists, the lane
+//! admits the same payload through the shared ingress again and replays the
+//! scheme's write protocol against the shard's mirror world — the op
+//! completes (and records its latency, on the primary world) only after
+//! both replicas persisted. The lane keeps its `(shard, key)` gate across
+//! both legs, so nothing overtakes a put on its key before the mirror
+//! caught up.
+//!
+//! With `window = 1`, closed-loop arrivals, one shard and no mirroring this
+//! actor reproduces the closed-loop clients' runs bit for bit (same engine
 //! events, same times, same counters) — asserted by
 //! `rust/tests/open_loop.rs` — which is why the cluster driver can route
-//! every configuration through one model.
+//! every configuration through one model. See `docs/ARCHITECTURE.md` for
+//! where this actor sits in the layer map.
 
 use std::collections::VecDeque;
 
@@ -180,6 +190,21 @@ fn is_write(req: &Request) -> bool {
     !matches!(req, Request::Get { .. })
 }
 
+/// Where an in-flight lane routed and what it still owes: the per-key
+/// ordering gate plus the (mirrored-cluster) replication bookkeeping.
+struct Route {
+    shard: usize,
+    key: Vec<u8>,
+    write: bool,
+    /// Queued mirror replay (mirrored clusters, mutating ops only): begun
+    /// the instant the primary leg persists.
+    mirror: Option<Request>,
+    /// In-flight mirror leg: (issue instant, wire bytes, primary-leg
+    /// cleaning flag). `Some` while the lane's state machine runs against
+    /// the mirror world instead of the primary.
+    mirror_leg: Option<(Time, usize, bool)>,
+}
+
 /// One windowed cluster-level client actor (see module docs).
 pub(crate) struct PipelinedClient<D: OpDriver> {
     driver: D,
@@ -189,6 +214,9 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     window: usize,
     /// Shard count the client routes over (`shard_of` at issue time).
     shards: usize,
+    /// Mirrored cluster: every put/delete replays on the shard's mirror
+    /// world (at world index `shards + shard`) before it ACKs.
+    mirrored: bool,
     /// Open-loop arrival process (None = closed loop with a window).
     arrivals: Option<ArrivalGen>,
     /// Drawn-but-unissued ops, oldest first, with their arrival instant
@@ -196,15 +224,15 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     pending: VecDeque<(Request, Option<Time>)>,
     /// Per-lane op state (None = free lane).
     lanes: Vec<Option<D::St>>,
-    /// Per-lane in-flight route: (shard, key, is_write) — the per-key
-    /// ordering gate plus where the op's completion lands.
-    lane_keys: Vec<Option<(usize, Vec<u8>, bool)>>,
+    /// Per-lane in-flight route (None = free lane).
+    routes: Vec<Option<Route>>,
     /// Completion tokens: lane index → due instant.
     due: CompletionSet,
     alive: bool,
 }
 
 impl<D: OpDriver> PipelinedClient<D> {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         driver: D,
         src: OpSource,
@@ -212,6 +240,7 @@ impl<D: OpDriver> PipelinedClient<D> {
         window: usize,
         arrivals: Option<ArrivalGen>,
         shards: usize,
+        mirrored: bool,
     ) -> Self {
         let window = window.max(1);
         PipelinedClient {
@@ -220,10 +249,11 @@ impl<D: OpDriver> PipelinedClient<D> {
             to_draw: ops,
             window,
             shards: shards.max(1),
+            mirrored,
             arrivals,
             pending: VecDeque::new(),
             lanes: (0..window).map(|_| None).collect(),
-            lane_keys: (0..window).map(|_| None).collect(),
+            routes: (0..window).map(|_| None).collect(),
             due: CompletionSet::new(),
             alive: true,
         }
@@ -248,14 +278,16 @@ impl<D: OpDriver> PipelinedClient<D> {
 
     /// Would issuing `req` now reorder it against an in-flight op on the
     /// same key? Writes need the key fully quiet; reads wait only for
-    /// in-flight writes (read-read shares the window).
+    /// in-flight writes (read-read shares the window). A mirrored write
+    /// holds its lane — and therefore this gate — until the mirror leg
+    /// persisted too.
     fn key_blocked(&self, req: &Request) -> bool {
         let key = req.key();
         let write = is_write(req);
-        self.lane_keys
+        self.routes
             .iter()
             .flatten()
-            .any(|(_, k, w)| (write || *w) && k.as_slice() == key)
+            .any(|r| (write || r.write) && r.key.as_slice() == key)
     }
 
     /// Is an earlier op on this key still parked in the pending queue?
@@ -282,11 +314,12 @@ impl<D: OpDriver> PipelinedClient<D> {
         let key = req.key().to_vec();
         let write = is_write(&req);
         let shard = crate::store::shard_of(&key, self.shards);
+        let mirror = if self.mirrored { crate::store::mirror::replicate(&req) } else { None };
         let admitted = s.admit(now, ingress_bytes(&req));
         match self.driver.begin(&mut s.worlds[shard], req, start, admitted) {
             OpOutcome::Continue(st, at) => {
                 self.lanes[lane] = Some(st);
-                self.lane_keys[lane] = Some((shard, key, write));
+                self.routes[lane] = Some(Route { shard, key, write, mirror, mirror_leg: None });
                 self.due.arm(lane, at);
                 true
             }
@@ -392,19 +425,68 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
         }
 
         // Phase 2: in-flight ops whose pending verb completed by now — each
-        // advances against the shard world its lane routed to.
+        // advances against the world its lane currently runs on: the op's
+        // primary shard world, or (mirror leg in flight) its mirror world.
         while let Some(lane) = self.due.pop_due(now) {
             let st = self.lanes[lane].take().expect("armed lane holds a state");
-            let shard = self.lane_keys[lane].as_ref().expect("armed lane has a route").0;
-            match self.driver.advance(&mut s.worlds[shard], st, now) {
+            let (shard, on_mirror) = {
+                let r = self.routes[lane].as_ref().expect("armed lane has a route");
+                (r.shard, r.mirror_leg.is_some())
+            };
+            let world = if on_mirror {
+                crate::store::mirror::mirror_world_index(self.shards, shard)
+            } else {
+                shard
+            };
+            match self.driver.advance(&mut s.worlds[world], st, now) {
                 OpOutcome::Continue(st, at) => {
                     self.lanes[lane] = Some(st);
                     self.due.arm(lane, at);
                 }
                 OpOutcome::Finished { start, cleaning } => {
-                    s.worlds[shard].counters_mut().record_op(start, now, cleaning);
-                    self.lane_keys[lane] = None;
-                    freed = true;
+                    let route = self.routes[lane].as_mut().expect("armed lane has a route");
+                    let finished_mirror = route.mirror_leg.take();
+                    let next_mirror =
+                        if finished_mirror.is_none() { route.mirror.take() } else { None };
+                    if let Some((issued, bytes, primary_cleaning)) = finished_mirror {
+                        // Mirror leg persisted: account the leg on the
+                        // mirror world, record the whole op — latency spans
+                        // BOTH persists — on the primary's counters.
+                        let mw = crate::store::mirror::mirror_world_index(self.shards, shard);
+                        s.worlds[mw].counters_mut().record_mirror_leg(issued, now, bytes);
+                        s.worlds[shard].counters_mut().record_op(
+                            start,
+                            now,
+                            primary_cleaning || cleaning,
+                        );
+                        self.routes[lane] = None;
+                        freed = true;
+                    } else if let Some(req) = next_mirror {
+                        // Primary persisted; replicate before ACK: admit the
+                        // mirror payload through the shared NIC and replay
+                        // the write protocol against the mirror world.
+                        let bytes = ingress_bytes(&req);
+                        let admitted = s.admit(now, bytes);
+                        let mw = crate::store::mirror::mirror_world_index(self.shards, shard);
+                        match self.driver.begin(&mut s.worlds[mw], req, start, admitted) {
+                            OpOutcome::Continue(st, at) => {
+                                self.routes[lane]
+                                    .as_mut()
+                                    .expect("armed lane has a route")
+                                    .mirror_leg = Some((now, bytes, cleaning));
+                                self.lanes[lane] = Some(st);
+                                self.due.arm(lane, at);
+                            }
+                            OpOutcome::Crashed => return self.die(s),
+                            OpOutcome::Finished { .. } => {
+                                unreachable!("every op spans at least one verb")
+                            }
+                        }
+                    } else {
+                        s.worlds[shard].counters_mut().record_op(start, now, cleaning);
+                        self.routes[lane] = None;
+                        freed = true;
+                    }
                 }
                 // The client process died: every other in-flight op dies
                 // with it, unrecorded (same semantics as the closed-loop
@@ -496,6 +578,7 @@ mod tests {
             window,
             None,
             1,
+            false,
         )
     }
 
@@ -580,6 +663,7 @@ mod tests {
             1,
             Some(gen),
             1,
+            false,
         );
         let mut e = Engine::new(single(erda_world()));
         e.spawn(Box::new(client), 0);
@@ -607,7 +691,7 @@ mod tests {
         w.nvm.reset_stats();
         w.counters.active_clients = 1;
         let ops: Vec<Request> = (0..8).map(|i| if i % 2 == 0 { get(i) } else { put(i) }).collect();
-        let client = PipelinedClient::new(BaselineDriver, script(ops), 8, 4, None, 1);
+        let client = PipelinedClient::new(BaselineDriver, script(ops), 8, 4, None, 1, false);
         let mut e = Engine::new(ClusterState::new(vec![w], None));
         e.spawn(Box::new(client), 0);
         e.run();
@@ -646,6 +730,7 @@ mod tests {
                 window,
                 None,
                 shards,
+                false,
             );
             let mut e = Engine::new(ClusterState::new(worlds, None));
             e.spawn(Box::new(client), 0);
@@ -658,6 +743,92 @@ mod tests {
         assert_eq!(per8, per1, "routing is by key, not by window depth");
         assert!(per8.iter().all(|&n| n > 0), "the window must span both shards: {per8:?}");
         assert!(t8 * 4 < t1, "cross-shard overlap must cut the makespan: {t8} vs {t1}");
+    }
+
+    #[test]
+    fn mirror_leg_replicates_writes_and_accounts_on_the_mirror() {
+        // One shard + its mirror world, window 4: every put replays on the
+        // mirror before it ACKs; reads never leave the primary. At
+        // quiescence the mirror holds byte-identical values, ops are
+        // recorded on the primary only, and the mirror world carries the
+        // mirror-leg accounting.
+        let mut primary = erda_world();
+        let mut mirror = erda_world();
+        primary.counters.active_clients = 1;
+        mirror.counters.active_clients = 1;
+        let ops = vec![put(0), get(1), put(2), put(0), get(2)];
+        let writes = 3u64;
+        let n = ops.len() as u64;
+        let client = PipelinedClient::new(
+            ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
+            script(ops),
+            n,
+            4,
+            None,
+            1,
+            true,
+        );
+        let mut e = Engine::new(ClusterState::with_mirrors(vec![primary, mirror], None, 1));
+        e.spawn(Box::new(client), 0);
+        e.run();
+        for w in &mut e.state.worlds {
+            w.settle();
+        }
+        let (p, m) = (&e.state.worlds[0], &e.state.worlds[1]);
+        assert_eq!(p.counters.ops_measured, n, "ops record on the primary");
+        assert_eq!(m.counters.ops_measured, 0, "the mirror records no ops of its own");
+        assert_eq!(m.counters.mirror_legs, writes, "one mirror leg per put");
+        assert!(m.counters.mirror_bytes > 0);
+        assert!(m.counters.mirror_leg_ns > 0, "the leg takes virtual time");
+        assert_eq!(p.counters.mirror_legs, 0, "legs attribute to the mirror world");
+        assert_eq!(p.counters.read_misses, 0);
+        assert_eq!(p.counters.active_clients, 0);
+        assert_eq!(m.counters.active_clients, 0);
+        for i in [0u64, 2] {
+            assert_eq!(
+                e.state.worlds[1].get(&key_of(i)),
+                e.state.worlds[0].get(&key_of(i)),
+                "mirror must hold the primary's bytes for key {i}"
+            );
+            assert!(e.state.worlds[1].get(&key_of(i)).is_some());
+        }
+        // NVM traffic: the mirror programmed the same appended objects.
+        assert!(e.state.worlds[1].nvm.stats().programmed_bytes > 0);
+    }
+
+    #[test]
+    fn mirror_leg_stretches_put_latency() {
+        // Synchronous mirroring ACKs after BOTH persists: a mirrored put
+        // must take longer than an unmirrored one on the same geometry.
+        let run = |mirrored: bool| -> Time {
+            let mut primary = erda_world();
+            primary.counters.active_clients = 1;
+            let mut worlds = vec![primary];
+            let primaries = 1;
+            if mirrored {
+                let mut m = erda_world();
+                m.counters.active_clients = 1;
+                worlds.push(m);
+            }
+            let client = PipelinedClient::new(
+                ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
+                script(vec![put(0)]),
+                1,
+                1,
+                None,
+                1,
+                mirrored,
+            );
+            let mut e = Engine::new(ClusterState::with_mirrors(worlds, None, primaries));
+            e.spawn(Box::new(client), 0);
+            e.run()
+        };
+        let plain = run(false);
+        let mirrored = run(true);
+        assert!(
+            mirrored > plain,
+            "the mirror leg must stretch the ACK: {mirrored} vs {plain}"
+        );
     }
 
     #[test]

@@ -27,6 +27,12 @@ pub struct DriverConfig {
     /// windowed/open-loop clients are cluster-level and route each op at
     /// issue time, so one window spans shards.
     pub shards: usize,
+    /// Synchronous RDMA mirroring ([`crate::store::mirror`]): every shard
+    /// gains a mirror world in the same engine; each put/delete replays on
+    /// the mirror over the shared fabric/ingress and ACKs only after both
+    /// replicas persisted. Reads stay on the primary. Forces the pipelined
+    /// client path (bit-identical to closed loop at `window = 1`).
+    pub mirrored: bool,
     /// Simulated client threads (closed loop).
     pub clients: usize,
     /// Ops per client (after this the client exits).
@@ -64,6 +70,7 @@ impl Default for DriverConfig {
             scheme: SchemeSel::Erda,
             workload: WorkloadConfig::default(),
             shards: 1,
+            mirrored: false,
             clients: 4,
             ops_per_client: 500,
             window: 1,

@@ -1,0 +1,181 @@
+//! Replication conformance: RDMA synchronous mirroring across shard worlds
+//! (`store::mirror`).
+//!
+//! Three contracts, each checked against all three schemes:
+//!
+//! 1. **Transparency** — a mirrored run preserves per-op results vs an
+//!    unmirrored run on the same seed (reads are linearizable from the
+//!    primary; per-key program order is preserved by the window's key
+//!    gate), and at quiescence the mirror holds byte-identical state.
+//! 2. **Failover** — `fail_primary` + `promote_mirror` recovers onto the
+//!    mirror's last checksum-consistent version: committed writes survive,
+//!    torn in-flight writes never surface.
+//! 3. **Honest pricing** — mirror legs meter through the ONE shared
+//!    client-NIC ingress and their NVM writes are accounted separately
+//!    from primary shard totals.
+
+use erda::store::{Cluster, RemoteStore, Scheme};
+use erda::ycsb::{key_of, Workload};
+
+const VALUE: usize = 64;
+const RECORDS: u64 = 24;
+
+fn builder(scheme: Scheme, shards: usize, window: usize, mirrored: bool) -> Cluster {
+    Cluster::builder()
+        .scheme(scheme)
+        .shards(shards)
+        .window(window)
+        .mirrored(mirrored)
+        .clients(1)
+        .ops_per_client(200)
+        .workload(Workload::UpdateHeavy)
+        .records(RECORDS)
+        .value_size(VALUE)
+        .preload(RECORDS, VALUE)
+        .nvm_capacity(64 << 20)
+        .warmup(0)
+        .build()
+}
+
+/// Mirrored runs preserve per-op results vs unmirrored on the same seed:
+/// one client, so program order fixes every per-key outcome — same ops,
+/// zero misses in both, identical final primary contents — and the mirror
+/// ends byte-identical to its primary. (At `shards > 1` both sides use a
+/// window > 1 so both draw the same cluster-level op stream; at
+/// `window = 1` the pipelined mirrored client reproduces the closed-loop
+/// issue order bit for bit.)
+#[test]
+fn mirrored_runs_preserve_per_op_results_on_the_same_seed() {
+    for (shards, window) in [(1usize, 1usize), (1, 4), (2, 4)] {
+        for scheme in Scheme::ALL {
+            let plain = builder(scheme, shards, window, false).run();
+            let mirrored = builder(scheme, shards, window, true).run();
+            let tag = format!("{scheme:?}/shards{shards}/w{window}");
+            assert_eq!(plain.stats.ops, mirrored.stats.ops, "{tag}: op count");
+            assert_eq!(plain.stats.read_misses, 0, "{tag}: plain misses");
+            assert_eq!(mirrored.stats.read_misses, 0, "{tag}: mirrored misses");
+            let mut a = plain.db;
+            let mut b = mirrored.db;
+            for i in 0..RECORDS {
+                let key = key_of(i);
+                let pv = a.get(&key).unwrap();
+                let mv = b.get(&key).unwrap();
+                assert_eq!(pv, mv, "{tag}: key {i} diverged between runs");
+                assert_eq!(
+                    b.mirror_get(&key).unwrap(),
+                    mv,
+                    "{tag}: mirror must hold the primary's bytes for key {i}"
+                );
+            }
+        }
+    }
+}
+
+/// The acceptance scenario: after a mirrored engine run, failing every
+/// primary and promoting its mirror serves exactly the state the primary
+/// held at quiescence — for Erda, Redo Logging and Read After Write.
+#[test]
+fn promotion_after_primary_failure_recovers_consistent_state() {
+    for scheme in Scheme::ALL {
+        let shards = 2;
+        let outcome = builder(scheme, shards, 4, true).run();
+        assert_eq!(outcome.stats.ops, 200, "{scheme:?}");
+        let mut db = outcome.db;
+        let before: Vec<Option<Vec<u8>>> =
+            (0..RECORDS).map(|i| db.get(&key_of(i)).unwrap()).collect();
+        assert!(
+            before.iter().all(Option::is_some),
+            "{scheme:?}: every preloaded key must be live before failover"
+        );
+        for shard in 0..shards {
+            db.fail_primary(shard).unwrap_or_else(|e| panic!("{scheme:?}: fail {shard}: {e}"));
+            db.promote_mirror(shard)
+                .unwrap_or_else(|e| panic!("{scheme:?}: promote {shard}: {e}"));
+            assert!(!db.has_mirror(shard), "{scheme:?}: shard {shard} single-homed");
+        }
+        for (i, expected) in before.iter().enumerate() {
+            assert_eq!(
+                db.get(&key_of(i as u64)).unwrap(),
+                *expected,
+                "{scheme:?}: key {i} lost or corrupted by failover"
+            );
+        }
+        // The promoted cluster still takes writes.
+        db.put(&key_of(0), &vec![0x42u8; VALUE]).unwrap();
+        assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![0x42u8; VALUE]), "{scheme:?}");
+    }
+}
+
+/// Mirror traffic is priced through the ONE shared client NIC: with the
+/// ingress enabled, admissions count every op issue PLUS every mirror leg.
+#[test]
+fn mirror_legs_admit_through_the_shared_ingress() {
+    for scheme in Scheme::ALL {
+        let outcome = Cluster::builder()
+            .scheme(scheme)
+            .shards(2)
+            .mirrored(true)
+            .ingress(4)
+            .clients(2)
+            .window(2)
+            .ops_per_client(100)
+            .workload(Workload::UpdateHeavy)
+            .records(RECORDS)
+            .value_size(VALUE)
+            .nvm_capacity(64 << 20)
+            .warmup(0)
+            .run();
+        let s = &outcome.stats;
+        assert_eq!(s.ops, 200, "{scheme:?}");
+        assert!(s.mirror_legs > 0, "{scheme:?}: updates must replicate");
+        assert_eq!(
+            s.ingress_admitted,
+            s.ops + s.mirror_legs,
+            "{scheme:?}: every issue AND every mirror leg meters through the NIC"
+        );
+    }
+}
+
+/// Synchronous mirroring costs what it claims: the mirrored run's mean
+/// latency exceeds the unmirrored run's (the put ACKs only after both
+/// persists), and its NVM accounting splits the mirror share out.
+#[test]
+fn mirroring_stretches_latency_and_splits_nvm_accounting() {
+    for scheme in Scheme::ALL {
+        let mk = |mirrored: bool| {
+            Cluster::builder()
+                .scheme(scheme)
+                .mirrored(mirrored)
+                .clients(2)
+                .ops_per_client(150)
+                .workload(Workload::UpdateOnly)
+                .records(RECORDS)
+                .value_size(256)
+                .nvm_capacity(64 << 20)
+                .warmup(0)
+                .run()
+        };
+        let plain = mk(false);
+        let mirrored = mk(true);
+        assert!(
+            mirrored.stats.latency.mean_ns() > plain.stats.latency.mean_ns(),
+            "{scheme:?}: waiting for the second persist must cost latency: {} vs {}",
+            mirrored.stats.latency.mean_ns(),
+            plain.stats.latency.mean_ns()
+        );
+        assert_eq!(mirrored.stats.mirror_legs, mirrored.stats.ops, "{scheme:?}: all-update run");
+        assert!(mirrored.stats.mean_mirror_leg_us() > 0.0, "{scheme:?}");
+        let total = mirrored.stats.nvm_programmed_bytes;
+        let mirror = mirrored.stats.mirror_nvm_programmed_bytes;
+        assert!(mirror > 0 && mirror < total, "{scheme:?}: split {mirror} of {total}");
+        assert_eq!(
+            mirrored.stats.primary_nvm_programmed_bytes(),
+            total - mirror,
+            "{scheme:?}"
+        );
+        // Two replicas, each paying its own write discipline: the mirrored
+        // run programs ≈ 2× the unmirrored bytes for every scheme.
+        let amp = total as f64 / plain.stats.nvm_programmed_bytes as f64;
+        assert!((1.5..2.5).contains(&amp), "{scheme:?}: amplification {amp}");
+    }
+}
