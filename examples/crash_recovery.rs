@@ -37,7 +37,7 @@ fn main() {
                 chunks,
             }])
             .script_at(1 * MS, vec![Request::Get { key: key_of(7) }])
-            .run();
+            .run().unwrap();
 
         detected += outcome.stats.inconsistencies_detected;
         let mut db = outcome.db;

@@ -48,7 +48,7 @@ fn main() {
         .records(128)
         .value_size(256)
         .warmup(0)
-        .run();
+        .run().unwrap();
     println!("one client, window 8, 2 shards (YCSB-C):");
     for (sh, p) in outcome.per_shard.iter().enumerate() {
         println!("  shard {sh}: {:>5} ops completed from the one window", p.ops);
@@ -65,8 +65,8 @@ fn main() {
         "shards", "free KOp/s", "win util", "nic KOp/s", "nic wait µs"
     );
     for shards in [1usize, 2, 4] {
-        let free = base(shards).run().stats;
-        let nic = base(shards).ingress(1).run().stats;
+        let free = base(shards).run().unwrap().stats;
+        let nic = base(shards).ingress(1).run().unwrap().stats;
         // Little's law: mean in-flight = throughput × mean latency; the
         // fraction of `clients × window` it fills is window utilization.
         let in_flight = free.kops() * 1e3 * free.latency.mean_ns() * 1e-9;

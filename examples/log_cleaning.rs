@@ -23,7 +23,7 @@ fn main() {
         .seed(11)
         .warmup(0)
         .cleaning_threshold(256 << 10) // compact at 256 KiB/head
-        .run();
+        .run().unwrap();
 
     let s = &outcome.stats;
     let mut db = outcome.db;

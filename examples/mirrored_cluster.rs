@@ -31,6 +31,7 @@ fn main() {
             .value_size(256)
             .warmup(0)
             .run()
+            .unwrap()
     };
     let plain = run(false);
     let mirrored = run(true);

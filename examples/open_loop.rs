@@ -37,6 +37,7 @@ fn main() {
                 .value_size(256)
                 .warmup(0)
                 .run()
+                .unwrap()
                 .stats
                 .kops()
         };
@@ -62,6 +63,7 @@ fn main() {
             .value_size(256)
             .warmup(0)
             .run()
+            .unwrap()
             .stats;
         println!(
             "  {rate:>12.0} {:>14.2} {:>14.2} {:>9.0}% {:>11.1}",
@@ -90,7 +92,7 @@ fn main() {
         if let Some(c) = channels {
             b = b.ingress(c);
         }
-        let stats = b.run().stats;
+        let stats = b.run().unwrap().stats;
         println!(
             "  {label:>10}: {:>8.2} KOp/s, mean ingress wait {:>7.0} ns",
             stats.kops(),

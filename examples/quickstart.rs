@@ -42,7 +42,7 @@ fn main() {
             chunks: 1,
         }])
         .script_at(2 * MS, vec![Request::Get { key: key_of(5) }])
-        .run();
+        .run().unwrap();
 
     // 2. The run's stats tell the §4.2 consistency story.
     let s = &outcome.stats;

@@ -30,7 +30,7 @@ fn main() {
             .records(256)
             .value_size(256)
             .warmup(0)
-            .run();
+            .run().unwrap();
         let kops = outcome.stats.kops();
         if shards == 1 {
             first = kops;

@@ -38,6 +38,7 @@ fn main() {
                 .warmup(5 * MS)
                 .nvm_capacity(128 << 20)
                 .run()
+                .unwrap()
                 .stats;
             assert_eq!(s.read_misses, 0, "{scheme:?}/{wl:?} lost reads");
             println!(

@@ -6,7 +6,7 @@
 //! repro figures --table 1 [--out DIR]           Table 1
 //! repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
 //!             [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
-//!             [--mirrored]                      facade end-to-end smoke run
+//!             [--mirrored | --reshard-at MS]    facade end-to-end smoke run
 //! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
 //!                                               shard-count throughput sweep
 //! repro window [--windows 1,2,4,8,16] [--quick] [--out DIR] [--json FILE]
@@ -17,6 +17,10 @@
 //! repro mirror [--shards 1,2] [--quick] [--out DIR] [--json FILE]
 //!                                               replication sweep: mirrored vs
 //!                                               unreplicated, all schemes
+//! repro reshard [--shards 1,2] [--quick] [--out DIR] [--json FILE]
+//!                                               elastic-resharding sweep:
+//!                                               mid-run scale-out n -> n+1,
+//!                                               all schemes
 //! repro bench-gate --baseline F --current F [--tolerance 0.10] [--update]
 //!                                               benchmark regression gate
 //! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
@@ -47,6 +51,9 @@ pub enum Cmd {
         arrival: Arrival,
         ingress: Option<usize>,
         mirrored: bool,
+        /// Fire a scale-out reshard (shards -> shards + 1) at this virtual
+        /// millisecond of the run (mutually exclusive with `mirrored`).
+        reshard_at: Option<u64>,
     },
     /// Scale-out sweep: throughput vs shard count for all three schemes.
     Scaling {
@@ -74,6 +81,15 @@ pub enum Cmd {
     /// all three schemes (throughput, p99, NVM-write amplification, mirror
     /// NVM share).
     Mirror {
+        shards: Vec<usize>,
+        fidelity: Fidelity,
+        out: Option<PathBuf>,
+        json: Option<PathBuf>,
+    },
+    /// Elastic-resharding sweep: plain vs mid-run scale-out (n -> n+1
+    /// shards) for all three schemes (throughput, migration-window dip,
+    /// migrated keys/bytes, bounced ops).
+    Reshard {
         shards: Vec<usize>,
         fidelity: Fidelity,
         out: Option<PathBuf>,
@@ -178,6 +194,7 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let mut arrival = Arrival::Closed;
             let mut ingress: Option<usize> = None;
             let mut mirrored = false;
+            let mut reshard_at: Option<u64> = None;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--scheme" => match it.next() {
@@ -241,13 +258,34 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         None => bail!("--ingress needs a channel count"),
                     },
                     "--mirrored" => mirrored = true,
+                    "--reshard-at" => match it.next() {
+                        Some(v) => {
+                            let ms = v.parse::<u64>()?;
+                            if ms == 0 {
+                                bail!("--reshard-at needs a virtual millisecond ≥ 1");
+                            }
+                            reshard_at = Some(ms);
+                        }
+                        None => bail!("--reshard-at needs a virtual millisecond"),
+                    },
                     other => bail!("unknown smoke flag {other:?}"),
                 }
             }
+            if mirrored && reshard_at.is_some() {
+                bail!("--mirrored and --reshard-at do not compose yet (slot migration \
+                       would have to move mirror pairs atomically)");
+            }
             match scheme {
-                Some(scheme) => {
-                    Ok(Cmd::Smoke { scheme, seed, shards, window, arrival, ingress, mirrored })
-                }
+                Some(scheme) => Ok(Cmd::Smoke {
+                    scheme,
+                    seed,
+                    shards,
+                    window,
+                    arrival,
+                    ingress,
+                    mirrored,
+                    reshard_at,
+                }),
                 None => bail!("smoke: pass --scheme erda|redo|raw"),
             }
         }
@@ -275,6 +313,16 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let (shards, fidelity, out, json) =
                 parse_sweep_flags("mirror", "--shards", "counts", &figures::MIRROR_SWEEP, &mut it)?;
             Ok(Cmd::Mirror { shards, fidelity, out, json })
+        }
+        "reshard" => {
+            let (shards, fidelity, out, json) = parse_sweep_flags(
+                "reshard",
+                "--shards",
+                "counts",
+                &figures::RESHARD_SWEEP,
+                &mut it,
+            )?;
+            Ok(Cmd::Reshard { shards, fidelity, out, json })
         }
         "bench-gate" => {
             let mut baseline = None;
@@ -328,7 +376,7 @@ USAGE:
   repro figures --ablations [--out DIR]       design-choice ablations (A1–A4)
   repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
               [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
-              [--mirrored]
+              [--mirrored | --reshard-at MS]
                                               exercise the store facade end to
                                               end (typed KV ops + a DES run,
                                               optionally over N key-space
@@ -338,11 +386,14 @@ USAGE:
                                               open-loop Poisson/fixed arrival
                                               process at R ops/s per client, a
                                               C-channel shared client-NIC
-                                              ingress, and --mirrored giving
+                                              ingress, --mirrored giving
                                               every shard a synchronously
                                               written mirror world plus a
                                               fail-primary → promote-mirror
-                                              check); deterministic in --seed
+                                              check, and --reshard-at firing a
+                                              mid-run scale-out from N to N+1
+                                              shards at virtual millisecond
+                                              MS); deterministic in --seed
   repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
                                               scale-out sweep: throughput vs
                                               shard count, all three schemes
@@ -365,6 +416,13 @@ USAGE:
                                               throughput, mirrored p99, and
                                               NVM-write amplification with the
                                               mirror share split out
+  repro reshard [--shards 1,2] [--quick] [--out DIR] [--json FILE]
+                                              elastic-resharding sweep: plain
+                                              vs mid-run scale-out (n -> n+1
+                                              shards) for all three schemes —
+                                              throughput, migration-window
+                                              dip, migrated keys/bytes and
+                                              bounced ops
   repro bench-gate --baseline FILE --current FILE [--tolerance 0.10] [--update]
                                               compare a benchmark JSON artifact
                                               against a committed baseline;
@@ -433,7 +491,8 @@ mod tests {
                 window: 1,
                 arrival: Arrival::Closed,
                 ingress: None,
-                mirrored: false
+                mirrored: false,
+                reshard_at: None,
             }
         );
         assert_eq!(
@@ -445,7 +504,8 @@ mod tests {
                 window: 1,
                 arrival: Arrival::Closed,
                 ingress: None,
-                mirrored: false
+                mirrored: false,
+                reshard_at: None,
             }
         );
         assert_eq!(
@@ -457,7 +517,8 @@ mod tests {
                 window: 1,
                 arrival: Arrival::Closed,
                 ingress: None,
-                mirrored: false
+                mirrored: false,
+                reshard_at: None,
             }
         );
     }
@@ -474,7 +535,8 @@ mod tests {
                 window: 8,
                 arrival: Arrival::Poisson { rate: 20000.0 },
                 ingress: Some(2),
-                mirrored: false
+                mirrored: false,
+                reshard_at: None,
             }
         );
         assert_eq!(
@@ -486,7 +548,8 @@ mod tests {
                 window: 4,
                 arrival: Arrival::Fixed { rate: 5000.0 },
                 ingress: None,
-                mirrored: false
+                mirrored: false,
+                reshard_at: None,
             }
         );
     }
@@ -502,8 +565,33 @@ mod tests {
                 window: 4,
                 arrival: Arrival::Closed,
                 ingress: None,
-                mirrored: true
+                mirrored: true,
+                reshard_at: None,
             }
+        );
+    }
+
+    #[test]
+    fn parses_reshard_smoke() {
+        assert_eq!(
+            p("smoke --scheme erda --shards 2 --window 4 --reshard-at 8").unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::Erda,
+                seed: 0xE2DA,
+                shards: 2,
+                window: 4,
+                arrival: Arrival::Closed,
+                ingress: None,
+                mirrored: false,
+                reshard_at: Some(8),
+            }
+        );
+        assert!(p("smoke --scheme erda --reshard-at").is_err());
+        assert!(p("smoke --scheme erda --reshard-at 0").is_err());
+        assert!(p("smoke --scheme erda --reshard-at soon").is_err());
+        assert!(
+            p("smoke --scheme erda --mirrored --reshard-at 8").is_err(),
+            "mirrors and slot migration do not compose yet"
         );
     }
 
@@ -628,6 +716,31 @@ mod tests {
         assert!(p("mirror --shards 0,2").is_err());
         assert!(p("mirror --shards").is_err());
         assert!(p("mirror --bogus").is_err());
+    }
+
+    #[test]
+    fn parses_reshard_sweep() {
+        assert_eq!(
+            p("reshard").unwrap(),
+            Cmd::Reshard {
+                shards: figures::RESHARD_SWEEP.to_vec(),
+                fidelity: Fidelity::Full,
+                out: None,
+                json: None,
+            }
+        );
+        assert_eq!(
+            p("reshard --shards 1,2 --quick --json BENCH_reshard.json").unwrap(),
+            Cmd::Reshard {
+                shards: vec![1, 2],
+                fidelity: Fidelity::Quick,
+                out: None,
+                json: Some(PathBuf::from("BENCH_reshard.json")),
+            }
+        );
+        assert!(p("reshard --shards 0,2").is_err());
+        assert!(p("reshard --shards").is_err());
+        assert!(p("reshard --bogus").is_err());
     }
 
     #[test]

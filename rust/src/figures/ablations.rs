@@ -100,7 +100,7 @@ fn a3_checksum_gate() -> (u64, u64) {
     }
     let reads: Vec<Request> = (0..100).map(|j| Request::Get { key: key_of(j % 10) }).collect();
     b = b.script_client(1 * MS, reads, ClientConfig { max_value: 1024, ..Default::default() });
-    let stats = b.run().stats;
+    let stats = b.run().expect("single-shard scripted run is always supported").stats;
     (stats.inconsistencies_detected, stats.fallback_reads + stats.retries)
 }
 

@@ -23,8 +23,8 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        Cmd::Smoke { scheme, seed, shards, window, arrival, ingress, mirrored } => {
-            smoke(scheme, seed, shards, window, arrival, ingress, mirrored)
+        Cmd::Smoke { scheme, seed, shards, window, arrival, ingress, mirrored, reshard_at } => {
+            smoke(scheme, seed, shards, window, arrival, ingress, mirrored, reshard_at)
         }
         Cmd::Scaling { shards, fidelity, out, json } => {
             let r = figures::scaling(&shards, fidelity);
@@ -43,6 +43,11 @@ fn main() -> Result<()> {
         }
         Cmd::Mirror { shards, fidelity, out, json } => {
             let r = figures::mirror(&shards, fidelity);
+            r.emit(out.as_deref());
+            emit_json(&r, json.as_deref())
+        }
+        Cmd::Reshard { shards, fidelity, out, json } => {
+            let r = figures::reshard(&shards, fidelity);
             r.emit(out.as_deref());
             emit_json(&r, json.as_deref())
         }
@@ -134,7 +139,9 @@ fn bench_gate(
 /// a `window`-deep in-flight pipeline spanning the shards, (optionally) an
 /// open-loop arrival process, (optionally) the shared client-NIC ingress,
 /// and (optionally) synchronous mirroring incl. a fail-primary →
-/// promote-mirror failover check. Deterministic in `seed`.
+/// promote-mirror failover check, or (optionally) a mid-run scale-out
+/// reshard from `shards` to `shards + 1` with zero-lost-write checks.
+/// Deterministic in `seed`.
 #[allow(clippy::too_many_arguments)]
 fn smoke(
     scheme: erda::store::Scheme,
@@ -144,13 +151,15 @@ fn smoke(
     arrival: erda::ycsb::Arrival,
     ingress: Option<usize>,
     mirrored: bool,
+    reshard_at: Option<u64>,
 ) -> Result<()> {
-    use erda::store::{Cluster, RemoteStore, Request};
+    use erda::store::{Cluster, RemoteStore, Request, ReshardPlan};
     use erda::ycsb::{key_of, Workload};
 
     println!(
         "smoke: scheme = {}, seed = {seed:#x}, shards = {shards}, window = {window}, \
-         arrival = {arrival:?}, ingress = {ingress:?}, mirrored = {mirrored}",
+         arrival = {arrival:?}, ingress = {ingress:?}, mirrored = {mirrored}, \
+         reshard_at = {reshard_at:?} ms",
         scheme.label()
     );
 
@@ -192,6 +201,22 @@ fn smoke(
         erda::ensure!(db.get(&key_of(0))? == Some(vec![0x5Au8; 64]), "failover lost a write");
         println!("  failover OK: fail_primary({failed_shard}) → promote_mirror → consistent");
     }
+    if reshard_at.is_some() && shards > 1 {
+        // The settled counterpart of the mid-run migration: rebalance the
+        // synchronous handle's slot table and re-read through the new
+        // routing — every surviving key must keep its last acked value.
+        let moved = db.rebalance()?;
+        erda::ensure!(
+            db.get(&key_of(0))? == Some(vec![0x5Au8; 64]),
+            "rebalance lost an acked write"
+        );
+        erda::ensure!(db.get(&key_of(1))?.is_none(), "rebalance resurrected a deleted key");
+        erda::ensure!(
+            db.get(&key_of(2))? == Some(vec![0xA5u8; 64]),
+            "rebalance lost the torn key's consistent version"
+        );
+        println!("  db rebalance OK: {moved} keys moved, reads intact");
+    }
 
     // 2. End-to-end DES run: every shard world in ONE engine; windowed
     // clients keep up to `window` ops in flight, routed across shards at
@@ -216,7 +241,10 @@ fn smoke(
     if let Some(c) = ingress {
         b = b.ingress(c);
     }
-    let outcome = b.run();
+    if let Some(ms) = reshard_at {
+        b = b.reshard(ReshardPlan::scale_out(shards, shards + 1, ms * erda::sim::MS));
+    }
+    let outcome = b.run()?;
     let s = &outcome.stats;
     erda::ensure!(
         s.ops > 0 && s.read_misses == 0,
@@ -282,6 +310,23 @@ fn smoke(
             s.mean_mirror_leg_us(),
             s.mirror_nvm_programmed_bytes,
             s.nvm_programmed_bytes
+        );
+    }
+    if reshard_at.is_some() {
+        erda::ensure!(
+            outcome.per_shard.len() == shards + 1,
+            "scale-out must grow the cluster: {} worlds vs {}",
+            outcome.per_shard.len(),
+            shards + 1
+        );
+        erda::ensure!(s.migrated_keys > 0, "a scale-out run must migrate keys");
+        erda::ensure!(
+            outcome.per_shard[shards].migrated_keys > 0,
+            "migrated keys must land on the new shard"
+        );
+        println!(
+            "  reshard OK: {} keys ({} bytes) migrated to shard {shards}, {} ops bounced",
+            s.migrated_keys, s.migration_bytes, s.bounced_ops
         );
     }
     if arrival.is_open() {

@@ -146,6 +146,16 @@ pub struct Counters {
     /// Total virtual time ops spent in their mirror leg (primary persist →
     /// mirror persist) — the latency synchronous mirroring adds to a put.
     pub mirror_leg_ns: u128,
+    /// Keys copied into this world by a slot migration ([`crate::store`]'s
+    /// reshard subsystem). Recorded on the DESTINATION world's counters, so
+    /// migration work attributes to the shard that absorbed it.
+    pub migrated_keys: u64,
+    /// Object bytes those migrated keys wrote through the destination's
+    /// staged write path (the migration's NVM + fabric payload).
+    pub migration_bytes: u64,
+    /// Foreground ops bounced by a migration fence (parked at issue time
+    /// and re-issued under the post-flip epoch; each op counts once).
+    pub bounced_ops: u64,
     /// Virtual time measurement starts (ops completing before are warmup).
     pub measure_from: Time,
     pub first_completion: Time,
@@ -182,6 +192,9 @@ impl Counters {
         self.mirror_legs += other.mirror_legs;
         self.mirror_bytes += other.mirror_bytes;
         self.mirror_leg_ns += other.mirror_leg_ns;
+        self.migrated_keys += other.migrated_keys;
+        self.migration_bytes += other.migration_bytes;
+        self.bounced_ops += other.bounced_ops;
         // Like first_completion below, 0 means "unset" (a default-initialized
         // accumulator): adopt the other side's boundary instead of clamping
         // a real warmup down to 0.
@@ -227,6 +240,28 @@ impl Counters {
         self.mirror_legs += 1;
         self.mirror_bytes += bytes as u64;
         self.mirror_leg_ns += (done - issued) as u128;
+    }
+
+    /// Record one key landing here by slot migration at `at`, having
+    /// written `bytes` through this world's staged write path. Call on the
+    /// DESTINATION world's counters. Warmup-era copies are dropped, like
+    /// ops and mirror legs.
+    pub fn record_migrated_key(&mut self, at: Time, bytes: usize) {
+        if at < self.measure_from {
+            return;
+        }
+        self.migrated_keys += 1;
+        self.migration_bytes += bytes as u64;
+    }
+
+    /// Record a foreground op bounced by a migration fence at `at` (call
+    /// once per op, on the counters of the shard that owned the op's key at
+    /// bounce time).
+    pub fn record_bounce(&mut self, at: Time) {
+        if at < self.measure_from {
+            return;
+        }
+        self.bounced_ops += 1;
     }
 
     /// Record an open-loop arrival at `at` that found `queue_depth` ops
@@ -307,6 +342,15 @@ pub struct RunStats {
     /// every byte every replica programmed), split out so mirror writes are
     /// never silently folded into primary totals.
     pub mirror_nvm_programmed_bytes: u64,
+    /// Keys copied by slot migration (0 = no reshard ran). Attributed to
+    /// the destination shard in per-shard breakdowns.
+    pub migrated_keys: u64,
+    /// Object bytes the migration pushed through the destination's staged
+    /// write path (and the shared ingress, when metered).
+    pub migration_bytes: u64,
+    /// Foreground ops bounced by a migration fence and re-issued under the
+    /// new epoch (each op counts once, however long the fence held).
+    pub bounced_ops: u64,
 }
 
 impl RunStats {
@@ -443,6 +487,9 @@ impl RunStats {
             mirror_bytes: c.mirror_bytes,
             mirror_leg_ns: c.mirror_leg_ns,
             mirror_nvm_programmed_bytes: 0,
+            migrated_keys: c.migrated_keys,
+            migration_bytes: c.migration_bytes,
+            bounced_ops: c.bounced_ops,
         }
     }
 
@@ -611,6 +658,32 @@ mod tests {
         };
         assert_eq!(split.primary_nvm_programmed_bytes(), 600);
         assert_eq!(RunStats::default().mean_mirror_leg_us(), 0.0);
+    }
+
+    #[test]
+    fn migration_accounting_respects_warmup_and_merges() {
+        let mut c = Counters { measure_from: 100, ..Default::default() };
+        c.record_migrated_key(50, 4096); // warmup: dropped
+        c.record_bounce(50); // warmup: dropped
+        c.record_migrated_key(150, 1024);
+        c.record_migrated_key(200, 2048);
+        c.record_bounce(160);
+        assert_eq!(c.migrated_keys, 2);
+        assert_eq!(c.migration_bytes, 3072);
+        assert_eq!(c.bounced_ops, 1);
+
+        let mut other = Counters::default();
+        other.record_migrated_key(0, 512);
+        other.record_bounce(1);
+        c.merge(&other);
+        assert_eq!(c.migrated_keys, 3);
+        assert_eq!(c.migration_bytes, 3584);
+        assert_eq!(c.bounced_ops, 2);
+
+        let s = RunStats::collect(&c, 0, crate::nvm::WriteStats::default(), 0);
+        assert_eq!(s.migrated_keys, 3);
+        assert_eq!(s.migration_bytes, 3584);
+        assert_eq!(s.bounced_ops, 2);
     }
 
     #[test]

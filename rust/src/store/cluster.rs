@@ -17,7 +17,8 @@
 //!     .clients(8)
 //!     .workload(Workload::UpdateHeavy)
 //!     .preload(1000, 256)
-//!     .run();
+//!     .run()
+//!     .unwrap();
 //! println!("{:.1} KOp/s", outcome.stats.kops());
 //! ```
 //!
@@ -27,8 +28,10 @@
 //! [`super::cosim::ClusterState`] is the engine state, so every shard lives
 //! on one virtual timeline with deterministic `(time, seq)` ordering across
 //! shards and the returned makespan is exact, not a "slowest shard"
-//! approximation. Operations route by the deterministic [`super::shard_of`]
-//! function. Windowed / open-loop runs spawn **cluster-level** clients
+//! approximation. Operations route through the cluster's shared slot table
+//! ([`super::reshard::SlotTable`]) — the identity map, bit-for-bit
+//! [`super::shard_of`], until a `.reshard(plan)` migration flips slots
+//! mid-run. Windowed / open-loop runs spawn **cluster-level** clients
 //! ([`PipelinedClient`]) that draw the full YCSB stream and route each op
 //! to its shard at issue time — one client's window genuinely interleaves
 //! ops across shards, metered by the ONE shared client-NIC [`Ingress`]
@@ -55,7 +58,8 @@
 
 use super::cosim::{ClusterState, Marker, Scoped};
 use super::pipeline::{BaselineDriver, ClientWorld, ErdaDriver, PipelinedClient};
-use super::{Db, OpSource, Request, Scheme};
+use super::reshard::{MigrationActor, ReshardWorld, SlotRouter};
+use super::{Db, OpSource, Request, ReshardPlan, Scheme, StoreError, SLOTS};
 use crate::baselines::{ApplierActor, ApplierConfig, BaselineClient, BaselineWorld};
 use crate::erda::{CleanerActor, CleanerConfig, ClientConfig, ErdaClient, ErdaWorld};
 use crate::log::{object, LogConfig};
@@ -260,6 +264,17 @@ impl ClusterBuilder {
         self
     }
 
+    /// Reshard the cluster mid-run: at the plan's virtual instant a
+    /// [`MigrationActor`] on the shared event heap fences each listed slot,
+    /// drains its keys to the destination shard over the shared ingress,
+    /// and flips the slot table ([`super::reshard`]). Destinations past the
+    /// current shard count grow the world vector (scale-out); the settled
+    /// [`Db`] inherits the final slot table.
+    pub fn reshard(mut self, plan: ReshardPlan) -> Self {
+        self.cfg.reshard = Some(plan);
+        self
+    }
+
     /// Replace the whole driver config (sweeps that already carry one).
     pub fn config(mut self, cfg: DriverConfig) -> Self {
         self.cfg = cfg;
@@ -281,7 +296,7 @@ impl ClusterBuilder {
     }
 
     /// Build + run in one step.
-    pub fn run(self) -> RunOutcome {
+    pub fn run(self) -> Result<RunOutcome, StoreError> {
         self.build().run()
     }
 }
@@ -417,7 +432,11 @@ impl Cluster {
     /// `window = 1` the pipelined client reproduces the closed-loop path
     /// bit for bit, so the paper's client model is preserved.
     fn use_pipeline(cfg: &DriverConfig) -> bool {
-        cfg.window > 1 || cfg.arrival.is_open() || cfg.ingress_channels.is_some() || cfg.mirrored
+        cfg.window > 1
+            || cfg.arrival.is_open()
+            || cfg.ingress_channels.is_some()
+            || cfg.mirrored
+            || cfg.reshard.is_some()
     }
 
     /// The open-loop arrival generator for client `c` (None = closed loop).
@@ -508,24 +527,45 @@ impl Cluster {
 
     /// Run the simulation to quiescence — every shard world in ONE engine —
     /// and return cluster stats, per-shard stats, and a settled store over
-    /// every shard world.
-    pub fn run(self) -> RunOutcome {
+    /// every shard world. Unsupported feature combinations come back as
+    /// typed [`StoreError::Unsupported`] instead of panicking.
+    pub fn run(self) -> Result<RunOutcome, StoreError> {
         let shards = self.cfg.shards.max(1);
         let script_max = self.script_max_value();
         let Cluster { cfg, preload, scripts } = self;
-        assert!(
-            !cfg.mirrored || scripts.is_empty(),
-            "mirrored engine runs take YCSB clients only: scripted clients are \
-             shard-scoped and would write past the mirror (use Db for scripted \
-             mirrored scenarios)"
-        );
+        if cfg.mirrored && !scripts.is_empty() {
+            return Err(StoreError::Unsupported(
+                "mirrored engine runs take YCSB clients only: scripted clients are \
+                 shard-scoped and would write past the mirror (use Db for scripted \
+                 mirrored scenarios)",
+            ));
+        }
+        if let Some(plan) = &cfg.reshard {
+            if cfg.mirrored {
+                return Err(StoreError::Unsupported(
+                    "reshard plans and mirrored clusters do not compose yet: a slot \
+                     move would have to migrate the mirror replica in lockstep",
+                ));
+            }
+            if !scripts.is_empty() {
+                return Err(StoreError::Unsupported(
+                    "scripted clients are shard-pinned at spawn and cannot follow a \
+                     mid-run slot migration (use YCSB clients with a reshard plan)",
+                ));
+            }
+            if plan.moves.iter().any(|m| m.slot >= SLOTS) {
+                return Err(StoreError::Unsupported(
+                    "reshard plan references a slot outside the routing table",
+                ));
+            }
+        }
         let shard_scripts = Self::split_scripts(scripts, shards);
         let owned = Self::shards_with_keys(cfg.workload.record_count, shards);
         let owning: Vec<usize> = (0..shards).filter(|&s| owned[s]).collect();
-        match cfg.scheme {
+        Ok(match cfg.scheme {
             Scheme::Erda => Self::run_erda(&cfg, preload, shard_scripts, &owning, script_max),
             _ => Self::run_baseline(&cfg, preload, shard_scripts, &owning, script_max),
-        }
+        })
     }
 
     /// A YCSB op source for a *shard-pinned* closed-loop client: the full
@@ -557,6 +597,30 @@ impl Cluster {
         cfg.ingress_channels.map(|c| Ingress::new(cfg.timing.clone(), c))
     }
 
+    /// How many primary worlds the run needs: the configured shards plus
+    /// any NEW shards a reshard plan migrates slots onto. Scale-out
+    /// destinations preload nothing — their keys arrive by migration only.
+    fn primary_world_count(cfg: &DriverConfig, shards: usize) -> usize {
+        let extra =
+            cfg.reshard.as_ref().map_or(0, |p| (p.max_shard() + 1).saturating_sub(shards));
+        shards + extra
+    }
+
+    /// Spawn the migration actor when the run carries a non-empty reshard
+    /// plan. An empty plan spawns NOTHING — zero extra heap events, so a
+    /// plan-free run is bit-for-bit the pre-reshard engine.
+    fn spawn_migration<W: ClientWorld + ReshardWorld + 'static>(
+        engine: &mut Engine<ClusterState<W>>,
+        cfg: &DriverConfig,
+    ) {
+        if let Some(plan) = &cfg.reshard {
+            if !plan.moves.is_empty() {
+                let at = plan.at;
+                engine.spawn(Box::new(MigrationActor::new(plan.clone())), at);
+            }
+        }
+    }
+
     fn run_erda(
         cfg: &DriverConfig,
         preload: (u64, usize),
@@ -575,23 +639,32 @@ impl Cluster {
             ..ClientConfig::default()
         };
 
-        // Primaries first, then (mirrored clusters) one mirror world per
-        // shard — same geometry, same preload, so the mirror starts as an
-        // exact replica. Cluster-level clients may touch every world, so
-        // mirrors carry the same active-client count.
-        let total_worlds = if cfg.mirrored { 2 * shards } else { shards };
+        // Primaries first — the configured shards plus any reshard-grown
+        // ones — then (mirrored clusters) one mirror world per shard, same
+        // geometry, same preload, so the mirror starts as an exact replica.
+        // Cluster-level clients may touch every world, so mirrors carry the
+        // same active-client count. Reshard-grown worlds preload nothing
+        // (no key routes to them until their slots flip).
+        let primaries = Self::primary_world_count(cfg, shards);
+        let total_worlds = if cfg.mirrored { 2 * shards } else { primaries };
         let mut worlds = Vec::with_capacity(total_worlds);
         for widx in 0..total_worlds {
-            let shard = widx % shards;
+            let shard = widx % primaries;
             let mut w = Self::make_erda_world(cfg, preload, shard, shards);
             w.counters.measure_from = cfg.warmup;
-            w.counters.active_clients =
-                (Self::world_client_count(cfg, shard, owning) + shard_scripts[shard].len()) as u32;
+            w.counters.active_clients = (Self::world_client_count(cfg, shard, owning)
+                + shard_scripts.get(shard).map_or(0, |v| v.len()))
+                as u32;
             worlds.push(w);
         }
         let mut engine =
-            Engine::new(ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), shards));
+            Engine::new(ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), primaries));
+        // The router's base count is the ORIGINAL shard count — preload and
+        // plan-free routing must stay bit-for-bit `shard_of(key, shards)`
+        // even when the world vector grew for a scale-out destination.
+        engine.state.router = SlotRouter::identity(shards);
         engine.spawn(Box::new(Marker), cfg.warmup);
+        Self::spawn_migration(&mut engine, cfg);
         for (shard, scripts) in shard_scripts.into_iter().enumerate() {
             for s in scripts {
                 let n = s.ops.len() as u64;
@@ -608,7 +681,7 @@ impl Cluster {
                     cfg.ops_per_client,
                     cfg.window,
                     Self::client_arrivals(cfg, c),
-                    shards,
+                    primaries,
                     cfg.mirrored,
                 );
                 engine.spawn(Box::new(client), 0);
@@ -647,19 +720,23 @@ impl Cluster {
         script_max: usize,
     ) -> RunOutcome {
         let shards = shard_scripts.len();
-        let total_worlds = if cfg.mirrored { 2 * shards } else { shards };
+        let primaries = Self::primary_world_count(cfg, shards);
+        let total_worlds = if cfg.mirrored { 2 * shards } else { primaries };
         let mut worlds = Vec::with_capacity(total_worlds);
         for widx in 0..total_worlds {
-            let shard = widx % shards;
+            let shard = widx % primaries;
             let mut w = Self::make_baseline_world(cfg, preload, script_max, shard, shards);
             w.counters.measure_from = cfg.warmup;
-            w.counters.active_clients =
-                (Self::world_client_count(cfg, shard, owning) + shard_scripts[shard].len()) as u32;
+            w.counters.active_clients = (Self::world_client_count(cfg, shard, owning)
+                + shard_scripts.get(shard).map_or(0, |v| v.len()))
+                as u32;
             worlds.push(w);
         }
         let mut engine =
-            Engine::new(ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), shards));
+            Engine::new(ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), primaries));
+        engine.state.router = SlotRouter::identity(shards);
         engine.spawn(Box::new(Marker), cfg.warmup);
+        Self::spawn_migration(&mut engine, cfg);
         for (shard, scripts) in shard_scripts.into_iter().enumerate() {
             for s in scripts {
                 let n = s.ops.len() as u64;
@@ -675,7 +752,7 @@ impl Cluster {
                     cfg.ops_per_client,
                     cfg.window,
                     Self::client_arrivals(cfg, c),
-                    shards,
+                    primaries,
                     cfg.mirrored,
                 );
                 engine.spawn(Box::new(client), 0);
@@ -713,7 +790,7 @@ impl Cluster {
     ) -> RunOutcome {
         let events = engine.events();
         let ingress_stats = engine.state.ingress_stats();
-        let ClusterState { worlds, primaries, shard_events, .. } = engine.state;
+        let ClusterState { worlds, primaries, shard_events, router, .. } = engine.state;
         let mut merged = Counters::default();
         let mut cpu_total: u128 = 0;
         let mut nvm_total = WriteStats::default();
@@ -748,6 +825,9 @@ impl Cluster {
         if !mirror_dbs.is_empty() {
             db.attach_mirrors(mirror_dbs);
         }
+        // The settled Db routes exactly as the run ended: identity for
+        // plan-free runs, the flipped slot table after a migration.
+        db.install_router(router.table);
         RunOutcome { stats, per_shard, per_mirror, db }
     }
 }
@@ -768,7 +848,7 @@ mod tests {
                 .records(50)
                 .value_size(64)
                 .warmup(0)
-                .run();
+                .run().unwrap();
             assert!(outcome.stats.ops > 0, "{scheme:?} completed no ops");
             assert_eq!(outcome.stats.read_misses, 0, "{scheme:?} lost reads");
             assert_eq!(outcome.db.scheme(), scheme);
@@ -788,7 +868,7 @@ mod tests {
                 Request::Put { key: key_of(0), value: vec![9u8; 32] },
                 Request::Get { key: key_of(0) },
             ])
-            .run();
+            .run().unwrap();
         assert_eq!(outcome.stats.ops, 2);
         let mut db = outcome.db;
         assert_eq!(db.get(&key_of(0)).unwrap().unwrap(), vec![9u8; 32]);
@@ -797,8 +877,8 @@ mod tests {
     #[test]
     fn from_config_matches_builder_defaults() {
         let cfg = DriverConfig { ops_per_client: 40, clients: 2, ..Default::default() };
-        let a = Cluster::from_config(&cfg).run().stats;
-        let b = Cluster::from_config(&cfg).run().stats;
+        let a = Cluster::from_config(&cfg).run().unwrap().stats;
+        let b = Cluster::from_config(&cfg).run().unwrap().stats;
         assert_eq!(a.ops, b.ops);
         assert_eq!(a.duration_ns, b.duration_ns);
     }
@@ -814,7 +894,7 @@ mod tests {
                 .records(64)
                 .value_size(64)
                 .warmup(0)
-                .run();
+                .run().unwrap();
             assert_eq!(outcome.per_shard.len(), 4, "{scheme:?}");
             assert_eq!(outcome.stats.ops, 8 * 100, "{scheme:?}: every client finishes its quota");
             assert_eq!(outcome.stats.read_misses, 0, "{scheme:?} lost reads");
@@ -854,6 +934,7 @@ mod tests {
                 .value_size(64)
                 .warmup(0)
                 .run()
+                .unwrap()
                 .stats
         };
         let a = run();
@@ -882,7 +963,7 @@ mod tests {
             .records(records)
             .value_size(32)
             .warmup(0)
-            .run();
+            .run().unwrap();
         assert_eq!(outcome.stats.ops, clients as u64 * quota);
         assert_eq!(outcome.stats.read_misses, 0);
         assert_eq!(outcome.per_shard.len(), shards);
@@ -919,6 +1000,7 @@ mod tests {
                 .value_size(256)
                 .warmup(0)
                 .run()
+                .unwrap()
                 .stats
                 .kops()
         };
@@ -941,6 +1023,7 @@ mod tests {
                 .value_size(256)
                 .warmup(0)
                 .run()
+                .unwrap()
                 .stats
                 .kops()
         };
@@ -964,7 +1047,7 @@ mod tests {
             .records(64)
             .value_size(64)
             .warmup(0)
-            .run();
+            .run().unwrap();
         let s = &outcome.stats;
         assert_eq!(s.offered_ops, 2 * 150, "every arrival recorded as offered");
         assert_eq!(s.ops, 2 * 150, "backlog drains once arrivals stop");
@@ -986,6 +1069,7 @@ mod tests {
                 .value_size(64)
                 .warmup(0)
                 .run()
+                .unwrap()
                 .stats
         };
         let a = run();
@@ -1011,7 +1095,7 @@ mod tests {
                 .value_size(64)
                 .ops_per_client(100)
                 .warmup(0)
-                .run();
+                .run().unwrap();
             let s = &outcome.stats;
             assert_eq!(s.ops, 4 * 100, "{scheme:?}: mirroring must not lose ops");
             assert_eq!(s.read_misses, 0, "{scheme:?}");
@@ -1070,6 +1154,7 @@ mod tests {
                 .ops_per_client(80)
                 .warmup(0)
                 .run()
+                .unwrap()
                 .stats
         };
         let a = run();
@@ -1090,7 +1175,7 @@ mod tests {
             .records(32)
             .value_size(64)
             .warmup(0)
-            .run();
+            .run().unwrap();
         assert!(outcome.per_mirror.is_empty());
         assert_eq!(outcome.stats.mirror_legs, 0);
         assert_eq!(outcome.stats.mirror_nvm_programmed_bytes, 0);
@@ -1098,15 +1183,112 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "mirrored engine runs")]
-    fn mirrored_run_rejects_scripts() {
-        let _ = Cluster::builder()
+    fn mirrored_run_rejects_scripts_with_a_typed_error() {
+        let err = Cluster::builder()
             .scheme(Scheme::Erda)
             .mirrored(true)
             .records(8)
             .value_size(32)
             .script(vec![Request::Get { key: key_of(0) }])
-            .run();
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, StoreError::Unsupported(_)), "typed error, not a panic: {err:?}");
+        assert!(err.to_string().contains("mirrored engine runs"), "{err}");
+    }
+
+    #[test]
+    fn reshard_rejects_mirrors_scripts_and_bad_slots() {
+        let base = || {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(2)
+                .clients(2)
+                .ops_per_client(10)
+                .records(16)
+                .value_size(32)
+                .warmup(0)
+        };
+        let err = base()
+            .mirrored(true)
+            .reshard(ReshardPlan::scale_out(2, 3, 1000))
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, StoreError::Unsupported(_)), "{err:?}");
+        let err = base()
+            .reshard(ReshardPlan::scale_out(2, 3, 1000))
+            .script(vec![Request::Get { key: key_of(0) }])
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, StoreError::Unsupported(_)), "{err:?}");
+        let err = base()
+            .reshard(ReshardPlan {
+                at: 1000,
+                moves: vec![crate::store::SlotMove { slot: SLOTS, to: 2 }],
+            })
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("slot outside"), "{err}");
+    }
+
+    #[test]
+    fn mid_run_scale_out_moves_keys_and_keeps_every_ack() {
+        // The tentpole end to end, for every scheme: 2 → 3 shards mid-run.
+        // Every client finishes its quota, nothing is lost to the fence,
+        // migrated keys land on the new shard, and the settled Db serves
+        // every key from the post-flip owner.
+        for scheme in Scheme::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .shards(2)
+                .clients(4)
+                .window(2)
+                .workload(Workload::UpdateHeavy)
+                .ops_per_client(150)
+                .records(64)
+                .value_size(64)
+                .warmup(0)
+                .reshard(ReshardPlan::scale_out(2, 3, 50_000))
+                .run()
+                .unwrap();
+            let s = &outcome.stats;
+            assert_eq!(s.ops, 4 * 150, "{scheme:?}: the fence must not eat ops");
+            assert_eq!(s.read_misses, 0, "{scheme:?}: no key lost in migration");
+            assert!(s.migrated_keys > 0, "{scheme:?}: the plan moves preloaded keys");
+            assert!(s.migration_bytes > 0, "{scheme:?}");
+            assert_eq!(outcome.per_shard.len(), 3, "{scheme:?}: world vector grew");
+            assert!(
+                outcome.per_shard[2].migrated_keys > 0,
+                "{scheme:?}: migrated keys account on the destination"
+            );
+        }
+    }
+
+    #[test]
+    fn reshard_runs_are_deterministic() {
+        let run = || {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(2)
+                .clients(3)
+                .window(4)
+                .workload(Workload::UpdateHeavy)
+                .ops_per_client(120)
+                .records(48)
+                .value_size(64)
+                .warmup(0)
+                .reshard(ReshardPlan::scale_out(2, 3, 40_000))
+                .run()
+                .unwrap()
+                .stats
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.duration_ns, b.duration_ns);
+        assert_eq!(a.migrated_keys, b.migrated_keys);
+        assert_eq!(a.migration_bytes, b.migration_bytes);
+        assert_eq!(a.bounced_ops, b.bounced_ops);
+        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
     }
 
     #[test]
@@ -1152,7 +1334,7 @@ mod tests {
             if let Some(c) = ingress {
                 b = b.ingress(c);
             }
-            b.run().stats
+            b.run().unwrap().stats
         };
         let free = run(None);
         let metered = run(Some(1));
@@ -1182,6 +1364,7 @@ mod tests {
                 .value_size(256)
                 .warmup(0)
                 .run()
+                .unwrap()
                 .stats
                 .kops()
         };

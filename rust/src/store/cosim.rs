@@ -31,6 +31,7 @@ use crate::rdma::{Ingress, IngressStats};
 use crate::sim::{Actor, Step, Time};
 
 use super::pipeline::ClientWorld;
+use super::reshard::SlotRouter;
 
 /// The engine state of a co-simulated cluster run: all shard worlds, the
 /// one shared client-NIC ingress, and per-world event attribution.
@@ -52,6 +53,12 @@ pub(crate) struct ClusterState<W> {
     /// cleaners, appliers, the marker). Cluster-level clients act on
     /// several worlds per step and are counted only in the engine total.
     pub shard_events: Vec<u64>,
+    /// The ONE slot-table router every cluster-level client and the
+    /// migration actor share ([`super::reshard`]). Defaults to the
+    /// identity map over the primaries — bit-for-bit `shard_of` — so
+    /// plan-free runs reproduce exactly; the cluster driver overrides the
+    /// base shard count when a reshard plan grows the world vector.
+    pub router: SlotRouter,
 }
 
 impl<W> ClusterState<W> {
@@ -69,7 +76,13 @@ impl<W> ClusterState<W> {
             "world layout must be primaries-only or one mirror per primary: \
              {n} worlds, {primaries} primaries"
         );
-        ClusterState { worlds, primaries, ingress, shard_events: vec![0; n] }
+        ClusterState {
+            worlds,
+            primaries,
+            ingress,
+            shard_events: vec![0; n],
+            router: SlotRouter::identity(primaries),
+        }
     }
 
     /// Admit an op issue of `bytes` through the shared client NIC; `now`

@@ -29,7 +29,8 @@
 //! [`super::Cluster`], which returns a settled `Db` for inspection after
 //! the engine quiesces.
 
-use super::{OpStats, RemoteStore, Request, Response, Scheme, StoreError};
+use super::reshard::ReshardWorld;
+use super::{OpStats, RemoteStore, Request, Response, Scheme, SlotTable, StoreError, SLOTS};
 use crate::baselines::{ApplyVerdict, BaselineWorld, PendingWrite, Scheme as BaselineScheme};
 use crate::erda::{recover, BatchCheck, ErdaWorld, LocalCheck, RecoveryReport};
 use crate::log::{object, NO_OFFSET};
@@ -49,6 +50,10 @@ pub struct Db {
     mirrors: Vec<Option<Inner>>,
     /// Primaries taken out by [`Db::fail_primary`], awaiting promotion.
     failed: Vec<bool>,
+    /// Slot → shard routing ([`super::reshard`]): the identity map (routing
+    /// ≡ [`super::shard_of`]) until a cluster run's migration or a
+    /// [`Db::split_slot`]/[`Db::rebalance`] call flips slots.
+    router: SlotTable,
     stats: OpStats,
 }
 
@@ -65,6 +70,7 @@ impl Db {
             shards: vec![Inner::Erda(Box::new(world))],
             mirrors: Vec::new(),
             failed: vec![false],
+            router: SlotTable::identity(1),
             stats: OpStats::default(),
         }
     }
@@ -74,6 +80,7 @@ impl Db {
             shards: vec![Inner::Baseline(Box::new(world))],
             mirrors: Vec::new(),
             failed: vec![false],
+            router: SlotTable::identity(1),
             stats: OpStats::default(),
         }
     }
@@ -101,7 +108,28 @@ impl Db {
             shards.extend(p.shards);
         }
         let n = shards.len();
-        Db { shards, mirrors: Vec::new(), failed: vec![false; n], stats }
+        Db {
+            shards,
+            mirrors: Vec::new(),
+            failed: vec![false; n],
+            router: SlotTable::identity(n),
+            stats,
+        }
+    }
+
+    /// Install the routing table a finished cluster run ended with, so the
+    /// settled handle serves every key from its post-migration owner.
+    pub(crate) fn install_router(&mut self, table: SlotTable) {
+        debug_assert!(
+            table.max_shard() < self.shards.len(),
+            "routing table points past the world vector"
+        );
+        self.router = table;
+    }
+
+    /// The handle's current slot → shard routing table.
+    pub fn router(&self) -> &SlotTable {
+        &self.router
     }
 
     /// Attach one mirror world per shard (the cluster driver builds them
@@ -135,9 +163,10 @@ impl Db {
         self.shards.len()
     }
 
-    /// Which shard owns `key` under this handle's geometry.
+    /// Which shard owns `key` under this handle's routing table (identity
+    /// — [`super::shard_of`] — until slots were flipped by a migration).
     pub fn shard_of_key(&self, key: &[u8]) -> usize {
-        super::shard_of(key, self.shards.len())
+        self.router.route(key)
     }
 
     /// Simulated NVM capacity of one shard world, in bytes (None = shard
@@ -590,6 +619,98 @@ impl Db {
         Self::drain_baseline(w, stats);
         Ok(())
     }
+
+    fn reshard_world(inner: &Inner) -> &dyn ReshardWorld {
+        match inner {
+            Inner::Erda(w) => &**w,
+            Inner::Baseline(w) => &**w,
+        }
+    }
+
+    fn reshard_world_mut(inner: &mut Inner) -> &mut dyn ReshardWorld {
+        match inner {
+            Inner::Erda(w) => &mut **w,
+            Inner::Baseline(w) => &mut **w,
+        }
+    }
+
+    /// Guards shared by the synchronous migration entry points.
+    fn check_reshardable(&self, slot: usize, to: usize) -> Result<(), StoreError> {
+        if self.is_mirrored() {
+            return Err(StoreError::Unsupported(
+                "resharding a mirrored handle (the mirror replica would have to \
+                 migrate in lockstep)",
+            ));
+        }
+        if self.failed.iter().any(|&f| f) {
+            return Err(StoreError::Unsupported("a primary is failed — promote_mirror first"));
+        }
+        if slot >= SLOTS {
+            return Err(StoreError::Unsupported("slot index outside the routing table"));
+        }
+        if to >= self.shards.len() {
+            return Err(StoreError::Unsupported(
+                "destination shard out of range (the synchronous handle cannot grow \
+                 its world vector — build with Cluster::builder().shards(n))",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Move every key of `slot` onto shard `to` and flip the slot: the
+    /// synchronous (zero-virtual-time) counterpart of the co-sim migration
+    /// actor. Each key migrates through the destination scheme's own staged
+    /// write path — the same zero-copy discipline the actor uses — then the
+    /// source entry is evicted. Returns the number of keys moved.
+    pub fn split_slot(&mut self, slot: usize, to: usize) -> Result<u64, StoreError> {
+        self.check_reshardable(slot, to)?;
+        Ok(self.move_slot(slot, to))
+    }
+
+    /// Spread every slot evenly over ALL current shards (`slot * n / SLOTS`)
+    /// and migrate whatever that reassigns — the one-call way to make an
+    /// N-shard handle's load even after growth. Returns total keys moved.
+    pub fn rebalance(&mut self) -> Result<u64, StoreError> {
+        let n = self.shards.len();
+        self.check_reshardable(0, 0)?;
+        let mut moved = 0;
+        for slot in 0..SLOTS {
+            moved += self.move_slot(slot, (slot * n) / SLOTS);
+        }
+        Ok(moved)
+    }
+
+    /// The unguarded move: gather `slot`'s keys from every non-destination
+    /// shard (sorted, so migration order is deterministic), copy each last
+    /// acked value into `to` via the scheme's write path, evict the source
+    /// entry, flip the table.
+    fn move_slot(&mut self, slot: usize, to: usize) -> u64 {
+        let mut pairs: Vec<(usize, Vec<u8>)> = Vec::new();
+        for src in 0..self.shards.len() {
+            if src == to {
+                continue;
+            }
+            for key in Self::reshard_world(&self.shards[src]).slot_keys(slot) {
+                pairs.push((src, key));
+            }
+        }
+        pairs.sort_by(|a, b| a.1.cmp(&b.1));
+        let mut moved = 0;
+        for (src, key) in pairs {
+            if let Some(value) = Self::reshard_world(&self.shards[src]).read_value(&key) {
+                Self::reshard_world_mut(&mut self.shards[to]).migrate_in(&key, &value);
+                // Baselines stage the copy; drain so the slot lands applied
+                // before the flip (one-shot semantics, like every Db put).
+                if let Inner::Baseline(w) = &mut self.shards[to] {
+                    Self::drain_baseline(w, &mut self.stats);
+                }
+                moved += 1;
+            }
+            Self::reshard_world_mut(&mut self.shards[src]).evict(&key);
+        }
+        self.router.flip(slot, to);
+        moved
+    }
 }
 
 impl RemoteStore for Db {
@@ -888,6 +1009,69 @@ mod tests {
         // mirror_get on an unmirrored handle errors.
         let mut db = open(Scheme::Erda);
         assert!(matches!(db.mirror_get(&key_of(0)), Err(StoreError::Unsupported(_))));
+    }
+
+    fn open_sharded(scheme: Scheme, shards: usize) -> Db {
+        Cluster::builder()
+            .scheme(scheme)
+            .shards(shards)
+            .records(32)
+            .value_size(16)
+            .preload(32, 16)
+            .build_db()
+    }
+
+    #[test]
+    fn split_slot_moves_keys_and_reroutes_all_schemes() {
+        for scheme in Scheme::ALL {
+            let mut db = open_sharded(scheme, 4);
+            let slot = crate::store::slot_of(&key_of(0));
+            let in_slot: Vec<u64> =
+                (0..32u64).filter(|&i| crate::store::slot_of(&key_of(i)) == slot).collect();
+            let to = (db.shard_of_key(&key_of(0)) + 1) % 4;
+            let movable = in_slot.iter().filter(|&&i| db.shard_of_key(&key_of(i)) != to).count();
+            let moved = db.split_slot(slot, to).unwrap();
+            assert_eq!(moved as usize, movable, "{scheme:?}: every off-destination key moves");
+            for &i in &in_slot {
+                assert_eq!(db.shard_of_key(&key_of(i)), to, "{scheme:?}: slot reroutes whole");
+            }
+            // Every key — moved or bystander — still serves its value, and
+            // the handle stays writable under the new routing.
+            for i in 0..32u64 {
+                assert_eq!(db.get(&key_of(i)).unwrap(), Some(vec![0xA5u8; 16]), "{scheme:?} {i}");
+            }
+            db.put(&key_of(in_slot[0]), b"post-split-val16").unwrap();
+            assert_eq!(
+                db.get(&key_of(in_slot[0])).unwrap().as_deref(),
+                Some(&b"post-split-val16"[..]),
+                "{scheme:?}"
+            );
+            assert!(!db.router().is_identity(), "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn rebalance_spreads_slots_and_preserves_every_key() {
+        for scheme in Scheme::ALL {
+            let mut db = open_sharded(scheme, 3);
+            db.rebalance().unwrap();
+            assert!(!db.router().is_identity(), "{scheme:?}");
+            for i in 0..32u64 {
+                let key = key_of(i);
+                let slot = crate::store::slot_of(&key);
+                assert_eq!(db.shard_of_key(&key), (slot * 3) / crate::store::SLOTS, "{scheme:?}");
+                assert_eq!(db.get(&key).unwrap(), Some(vec![0xA5u8; 16]), "{scheme:?} {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn reshard_guards_are_typed_errors() {
+        let mut db = open_mirrored(Scheme::Erda);
+        assert!(matches!(db.split_slot(0, 0), Err(StoreError::Unsupported(_))));
+        let mut db = open_sharded(Scheme::Erda, 2);
+        assert!(matches!(db.split_slot(0, 5), Err(StoreError::Unsupported(_))));
+        assert!(matches!(db.split_slot(crate::store::SLOTS, 1), Err(StoreError::Unsupported(_))));
     }
 
     #[test]

@@ -30,6 +30,12 @@
 //!   the mirror before they ACK, reads stay on the primary, and
 //!   [`Db::fail_primary`] / [`Db::promote_mirror`] fail over onto the
 //!   mirror's last checksum-consistent version.
+//! * [`reshard`] — elastic slot-table routing: a versioned [`SlotTable`]
+//!   in front of [`shard_of`] (identity until a plan flips a slot), plus an
+//!   online migration actor that drains a slot's keys over the shared
+//!   ingress as the scheme's own staged writes with epoch-fenced routing —
+//!   `ClusterBuilder::reshard` mid-run, [`Db::split_slot`] /
+//!   [`Db::rebalance`] settled.
 //!
 //! The full layer map lives in `docs/ARCHITECTURE.md`.
 
@@ -38,10 +44,12 @@ pub(crate) mod cosim;
 pub mod db;
 pub mod mirror;
 pub(crate) mod pipeline;
+pub mod reshard;
 
 pub use cluster::{Cluster, ClusterBuilder, RunOutcome};
 pub use db::Db;
 pub use mirror::ShardRole;
+pub use reshard::{slot_of, ReshardPlan, SlotMove, SlotTable, SLOTS};
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -122,13 +130,21 @@ pub fn shard_of(key: &[u8], shards: usize) -> usize {
     if shards <= 1 {
         return 0;
     }
+    ((route_hash(key) as u64 * shards as u64) >> 32) as usize
+}
+
+/// The finalized routing hash both [`shard_of`] and [`reshard::slot_of`]
+/// reduce (FNV-1a-32 + murmur3 fmix32 avalanche): slot and shard routing
+/// MUST read the same hash, or a slot's key range and a shard's would
+/// disagree about what a "range" is.
+pub(crate) fn route_hash(key: &[u8]) -> u32 {
     let mut h = crate::crc::fnv1a(key);
     h ^= h >> 16;
     h = h.wrapping_mul(0x85EB_CA6B);
     h ^= h >> 13;
     h = h.wrapping_mul(0xC2B2_AE35);
     h ^= h >> 16;
-    ((h as u64 * shards as u64) >> 32) as usize
+    h
 }
 
 /// Typed store failure.

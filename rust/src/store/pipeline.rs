@@ -12,12 +12,20 @@
 //! op ever observably overtakes an earlier op on its key.
 //!
 //! Since the co-sim refactor the actor is *cluster-level*: it runs against
-//! [`super::cosim::ClusterState`], routes each op to its shard world via
-//! [`crate::store::shard_of`] **at issue time**, and its lanes are
-//! `(shard, key)`-aware — one client's window genuinely interleaves ops
-//! across shards instead of being cloned round-robin into per-shard
-//! engines. Every issue is metered by the ONE shared client-NIC ingress
-//! (when enabled), which is what makes the NIC bound global.
+//! [`super::cosim::ClusterState`], routes each op to its shard world
+//! **at issue time** through the cluster's shared slot-table router
+//! ([`super::reshard::SlotRouter`] — bit-for-bit
+//! [`crate::store::shard_of`] until a migration plan flips a slot), and
+//! its lanes are `(shard, key)`-aware — one client's window genuinely
+//! interleaves ops across shards instead of being cloned round-robin into
+//! per-shard engines. Every issue is metered by the ONE shared client-NIC
+//! ingress (when enabled), which is what makes the NIC bound global.
+//!
+//! While a slot migrates ([`super::reshard`]) the router fences it: ops on
+//! the fenced slot are *bounced* — parked in the pending queue, counted
+//! once in `Counters::bounced_ops` — and re-issue under the new routing
+//! epoch once the flip publishes, so a moving key's write order survives
+//! the ownership handoff. Ops on every other slot issue undisturbed.
 //!
 //! Per-key ordering is read/write-aware: a *write* (put/delete) waits for
 //! every in-flight op on its key and for any earlier queued op on it; a
@@ -60,6 +68,7 @@ use crate::metrics::Counters;
 use crate::nvm::WriteStats;
 use crate::sim::{Actor, CompletionSet, Step, Time};
 use crate::store::cosim::ClusterState;
+use crate::store::reshard::{slot_of, SlotRouter, MIGRATION_QUANTUM};
 use crate::store::{OpSource, Request};
 use crate::ycsb::ArrivalGen;
 
@@ -194,6 +203,13 @@ fn is_write(req: &Request) -> bool {
 /// ordering gate plus the (mirrored-cluster) replication bookkeeping.
 struct Route {
     shard: usize,
+    /// The routing slot the key hashed to (in-flight accounting the
+    /// migration fence waits on).
+    slot: usize,
+    /// Routing epoch snapshotted at issue time: the fence guarantees a
+    /// lane's owner never changes mid-flight, so by completion the epoch
+    /// may only have advanced for OTHER slots.
+    epoch: u64,
     key: Vec<u8>,
     write: bool,
     /// Queued mirror replay (mirrored clusters, mutating ops only): begun
@@ -212,7 +228,8 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     /// Ops still to draw from the source.
     to_draw: u64,
     window: usize,
-    /// Shard count the client routes over (`shard_of` at issue time).
+    /// Primary world count (mirror worlds live at `shards + shard`; the
+    /// per-op shard itself comes from the cluster's shared router).
     shards: usize,
     /// Mirrored cluster: every put/delete replays on the shard's mirror
     /// world (at world index `shards + shard`) before it ACKs.
@@ -220,8 +237,10 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     /// Open-loop arrival process (None = closed loop with a window).
     arrivals: Option<ArrivalGen>,
     /// Drawn-but-unissued ops, oldest first, with their arrival instant
-    /// (None for closed-loop draws: latency starts at issue).
-    pending: VecDeque<(Request, Option<Time>)>,
+    /// (None for closed-loop draws: latency starts at issue) and whether
+    /// the op already counted as bounced by a migration fence (the flag
+    /// keeps the count at one per op however long the fence holds).
+    pending: VecDeque<(Request, Option<Time>, bool)>,
     /// Per-lane op state (None = free lane).
     lanes: Vec<Option<D::St>>,
     /// Per-lane in-flight route (None = free lane).
@@ -261,10 +280,17 @@ impl<D: OpDriver> PipelinedClient<D> {
 
     /// Client leaves the run: a cluster-level client counts as active on
     /// every shard world (it may issue to any), so it retires from all.
+    /// In-flight lanes die with it — their slot in-flight notes must be
+    /// returned, or a later migration fence would wait on ghosts forever.
     fn die(&mut self, s: &mut ClusterState<D::World>) -> Step {
         for w in &mut s.worlds {
             let c = w.counters_mut();
             c.active_clients = c.active_clients.saturating_sub(1);
+        }
+        for r in self.routes.iter_mut() {
+            if let Some(r) = r.take() {
+                s.router.note_done(r.slot);
+            }
         }
         self.alive = false;
         Step::Done
@@ -293,7 +319,7 @@ impl<D: OpDriver> PipelinedClient<D> {
     /// Is an earlier op on this key still parked in the pending queue?
     /// (Nothing may overtake a queued op on its own key — per-key FIFO.)
     fn pending_has_key(&self, key: &[u8]) -> bool {
-        self.pending.iter().any(|(r, _)| r.key() == key)
+        self.pending.iter().any(|(r, _, _)| r.key() == key)
     }
 
     fn free_lane(&self) -> Option<usize> {
@@ -313,13 +339,16 @@ impl<D: OpDriver> PipelinedClient<D> {
     ) -> bool {
         let key = req.key().to_vec();
         let write = is_write(&req);
-        let shard = crate::store::shard_of(&key, self.shards);
+        let (slot, shard) = s.router.route(&key);
+        let epoch = s.router.table.epoch();
         let mirror = if self.mirrored { crate::store::mirror::replicate(&req) } else { None };
         let admitted = s.admit(now, ingress_bytes(&req));
         match self.driver.begin(&mut s.worlds[shard], req, start, admitted) {
             OpOutcome::Continue(st, at) => {
+                s.router.note_issue(slot);
                 self.lanes[lane] = Some(st);
-                self.routes[lane] = Some(Route { shard, key, write, mirror, mirror_leg: None });
+                self.routes[lane] =
+                    Some(Route { shard, slot, epoch, key, write, mirror, mirror_leg: None });
                 self.due.arm(lane, at);
                 true
             }
@@ -329,17 +358,18 @@ impl<D: OpDriver> PipelinedClient<D> {
     }
 
     /// The oldest pending op that may issue now: first entry whose key gate
-    /// is open AND that no earlier pending entry shares a key with (per-key
-    /// FIFO within the queue; skipping blocked keys reorders across keys —
-    /// allowed — never within one key).
-    fn next_issuable_pending(&self) -> Option<usize> {
+    /// is open, whose slot is not behind a migration fence, AND that no
+    /// earlier pending entry shares a key with (per-key FIFO within the
+    /// queue; skipping blocked keys reorders across keys — allowed — never
+    /// within one key).
+    fn next_issuable_pending(&self, router: &SlotRouter) -> Option<usize> {
         let mut seen: Vec<&[u8]> = Vec::new();
-        for (i, (r, _)) in self.pending.iter().enumerate() {
+        for (i, (r, _, _)) in self.pending.iter().enumerate() {
             let key = r.key();
             if seen.iter().any(|s| *s == key) {
                 continue;
             }
-            if !self.key_blocked(r) {
+            if !self.key_blocked(r) && !router.blocked(slot_of(key)) {
                 return Some(i);
             }
             seen.push(key);
@@ -350,9 +380,22 @@ impl<D: OpDriver> PipelinedClient<D> {
     /// Fill free lanes: oldest issuable pending op first, then (closed loop
     /// only) fresh draws from the source. Returns false on client crash.
     fn issue_pass(&mut self, s: &mut ClusterState<D::World>, now: Time) -> bool {
+        // A migration fence is up: every queued op parked behind it counts
+        // as bounced exactly once (it re-issues under the post-flip epoch).
+        if s.router.fenced().is_some() {
+            for (req, _, bounced) in self.pending.iter_mut() {
+                if !*bounced {
+                    let (slot, shard) = s.router.route(req.key());
+                    if s.router.blocked(slot) {
+                        *bounced = true;
+                        s.worlds[shard].counters_mut().record_bounce(now);
+                    }
+                }
+            }
+        }
         'lanes: while let Some(lane) = self.free_lane() {
-            if let Some(i) = self.next_issuable_pending() {
-                let (req, arrived) = self.pending.remove(i).expect("position indexed");
+            if let Some(i) = self.next_issuable_pending(&s.router) {
+                let (req, arrived, _) = self.pending.remove(i).expect("position indexed");
                 let start = arrived.unwrap_or(now);
                 if !self.issue_on(s, lane, req, start, now) {
                     return false;
@@ -376,8 +419,14 @@ impl<D: OpDriver> PipelinedClient<D> {
                     }
                     Some(req) => {
                         self.to_draw -= 1;
-                        if self.key_blocked(&req) || self.pending_has_key(req.key()) {
-                            self.pending.push_back((req, None));
+                        let (slot, shard) = s.router.route(req.key());
+                        if s.router.blocked(slot) {
+                            // Fenced slot: park as bounced; the op re-issues
+                            // under the new epoch once the flip lands.
+                            s.worlds[shard].counters_mut().record_bounce(now);
+                            self.pending.push_back((req, None, true));
+                        } else if self.key_blocked(&req) || self.pending_has_key(req.key()) {
+                            self.pending.push_back((req, None, false));
                         } else if self.issue_on(s, lane, req, now, now) {
                             continue 'lanes;
                         } else {
@@ -415,9 +464,9 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
                     }
                     Some(req) => {
                         self.to_draw -= 1;
-                        let shard = crate::store::shard_of(req.key(), self.shards);
+                        let shard = s.router.route(req.key()).1;
                         s.worlds[shard].counters_mut().record_arrival(at, self.pending.len());
-                        self.pending.push_back((req, Some(at)));
+                        self.pending.push_back((req, Some(at), false));
                         arrived = true;
                     }
                 }
@@ -459,7 +508,12 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
                             now,
                             primary_cleaning || cleaning,
                         );
-                        self.routes[lane] = None;
+                        let r = self.routes[lane].take().expect("armed lane has a route");
+                        debug_assert!(
+                            r.epoch <= s.router.table.epoch(),
+                            "routing epochs only advance"
+                        );
+                        s.router.note_done(r.slot);
                         freed = true;
                     } else if let Some(req) = next_mirror {
                         // Primary persisted; replicate before ACK: admit the
@@ -484,7 +538,12 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
                         }
                     } else {
                         s.worlds[shard].counters_mut().record_op(start, now, cleaning);
-                        self.routes[lane] = None;
+                        let r = self.routes[lane].take().expect("armed lane has a route");
+                        debug_assert!(
+                            r.epoch <= s.router.table.epoch(),
+                            "routing epochs only advance"
+                        );
+                        s.router.note_done(r.slot);
                         freed = true;
                     }
                 }
@@ -524,9 +583,17 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
         }
         match wake {
             Some(t) => Step::At(t),
-            // Unreachable in practice (work remaining implies a wake time);
-            // retire defensively rather than wedge the engine.
-            None => self.die(s),
+            None => {
+                if self.pending.is_empty() {
+                    // Unreachable in practice (work remaining implies a wake
+                    // time); retire defensively rather than wedge the engine.
+                    self.die(s)
+                } else {
+                    // Every remaining op is parked behind a migration fence
+                    // with nothing in flight: poll until the flip lands.
+                    Step::At(now + MIGRATION_QUANTUM)
+                }
+            }
         }
     }
 }

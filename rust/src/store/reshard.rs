@@ -1,0 +1,641 @@
+//! Elastic slot-table routing with online, zero-copy key migration.
+//!
+//! [`super::shard_of`] is a pure hash: correct, coordination-free — and
+//! frozen. Growing a cluster from `n` to `n + 1` shards remaps most keys at
+//! once, which no live system survives. This module interposes a **slot
+//! table** between the hash and the shard: every key hashes to one of
+//! [`SLOTS`] slots (the top bits of the same finalized FNV-1a hash
+//! `shard_of` reduces), and each slot maps to a shard. Ownership now moves
+//! slot by slot instead of all at once.
+//!
+//! Two properties keep the existing engine bit-for-bit reproducible:
+//!
+//! * **Identity degeneracy.** A fresh table assigns no slot explicitly —
+//!   routing delegates per key to `shard_of`, so every seed, conformance
+//!   test and bench baseline reproduces exactly until a plan actually flips
+//!   a slot. (A materialized 256-entry table would NOT be identical: for
+//!   non-power-of-two shard counts a slot's key range straddles a shard
+//!   boundary, so only explicit flips are stored.)
+//! * **No plan, no actor.** An empty [`ReshardPlan`] spawns nothing: zero
+//!   extra engine events, identical `(time, seq)` interleaving.
+//!
+//! Migration is the paper's own write path used sideways (§3–4): a record
+//! moves as one Erda-style one-sided write of the log entry into the
+//! destination world plus an 8-byte atomic hash-entry update — no remote
+//! CPU on the data path, checksum-consistent at every instant; the Redo /
+//! RAW baselines migrate through their usual staged double-write. The
+//! [`MigrationActor`] runs on the ONE co-sim `(time, seq)` event heap and
+//! admits every copied record through the shared client-NIC
+//! [`crate::rdma::Ingress`], so migration traffic competes with foreground
+//! ops for the same NIC instead of teleporting.
+//!
+//! **Fence rule** (the epoch-handoff discipline of one-sided ownership
+//! transfer — cf. the RDMA-agreement line in PAPERS.md): when a slot starts
+//! moving, the router bumps the routing **epoch** and fences the slot. Ops
+//! already in flight under the old epoch drain to completion first (the
+//! actor polls the slot's in-flight count down to zero); new ops on the
+//! slot are *bounced* — parked client-side, counted once in
+//! `Counters::bounced_ops` — and re-issue under the new epoch after the
+//! flip, so per-key write order is preserved across the ownership change.
+//! Ops on every other slot never notice.
+
+use std::collections::VecDeque;
+
+use crate::log::object;
+use crate::sim::{Actor, Step, Time};
+
+use super::cosim::ClusterState;
+use super::pipeline::ClientWorld;
+
+/// Slots in the routing table. 256 keeps a slot at ~0.4 % of the key space
+/// — fine-grained enough to split a hot range, coarse enough that the table
+/// is one cache line per 64 slots.
+pub const SLOTS: usize = 256;
+
+/// Virtual-time quantum between migration actor steps: quiesce polls and
+/// per-key copy spacing (1 µs — comparable to one one-sided write).
+pub(crate) const MIGRATION_QUANTUM: Time = 1_000;
+
+/// Which slot owns `key`: the top bits of the same finalized hash
+/// [`super::shard_of`] reduces, so slot and shard routing agree on what a
+/// "key range" is.
+pub fn slot_of(key: &[u8]) -> usize {
+    ((super::route_hash(key) as u64 * SLOTS as u64) >> 32) as usize
+}
+
+/// The versioned slot → shard routing table.
+///
+/// Identity by construction: an unassigned slot delegates per key to
+/// [`super::shard_of`] over `base_shards`, which makes the empty table
+/// byte-equivalent to the pre-reshard router (the degenerate case every
+/// existing seed reproduces through). [`SlotTable::flip`] pins a slot to an
+/// explicit owner and bumps the epoch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SlotTable {
+    /// Shard count the identity (unassigned) slots hash over.
+    base_shards: usize,
+    /// Explicit owner per slot; `None` = identity routing.
+    assigned: Vec<Option<u32>>,
+    /// Routing version: bumped on every fence and every flip, snapshotted
+    /// by clients at issue time.
+    epoch: u64,
+}
+
+impl SlotTable {
+    /// The degenerate table: every slot unassigned, routing ≡ `shard_of`.
+    pub fn identity(shards: usize) -> Self {
+        SlotTable { base_shards: shards.max(1), assigned: vec![None; SLOTS], epoch: 0 }
+    }
+
+    /// Which shard owns `key` under the current epoch.
+    pub fn route(&self, key: &[u8]) -> usize {
+        self.route_slot(slot_of(key), key)
+    }
+
+    /// Routing with the slot already computed (the hot path of the
+    /// per-op router).
+    pub fn route_slot(&self, slot: usize, key: &[u8]) -> usize {
+        match self.assigned[slot] {
+            Some(owner) => owner as usize,
+            None => super::shard_of(key, self.base_shards),
+        }
+    }
+
+    /// Pin `slot` to `to` and bump the epoch (the 8-byte table flip that
+    /// publishes an ownership change).
+    pub fn flip(&mut self, slot: usize, to: usize) {
+        self.assigned[slot] = Some(to as u32);
+        self.epoch += 1;
+    }
+
+    /// Bump the epoch without changing routing (a fence going up).
+    pub(crate) fn bump_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// The current routing version.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Shard count identity slots hash over.
+    pub fn base_shards(&self) -> usize {
+        self.base_shards
+    }
+
+    /// Is this still the degenerate identity map (no slot ever flipped)?
+    pub fn is_identity(&self) -> bool {
+        self.assigned.iter().all(|a| a.is_none())
+    }
+
+    /// Highest shard id any key can route to (sizes the world vector).
+    pub fn max_shard(&self) -> usize {
+        self.assigned
+            .iter()
+            .flatten()
+            .map(|&s| s as usize)
+            .chain(std::iter::once(self.base_shards - 1))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// One planned ownership change: all keys of `slot` move to shard `to`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SlotMove {
+    pub slot: usize,
+    pub to: usize,
+}
+
+/// A migration plan: at virtual instant `at`, move the listed slots (in
+/// order, one at a time — each fully fenced, drained, flipped before the
+/// next starts). An empty plan is a no-op: no actor spawns, no event fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReshardPlan {
+    /// Virtual instant the first fence goes up.
+    pub at: Time,
+    pub moves: Vec<SlotMove>,
+}
+
+impl ReshardPlan {
+    /// The canonical scale-out plan `from → to` shards: every slot whose
+    /// share of the hash space lands on a NEW shard under `to`-way
+    /// multiply-high routing moves there; slots staying on existing shards
+    /// keep identity routing (zero migration for them). For `from == to`
+    /// the plan is empty.
+    pub fn scale_out(from: usize, to: usize, at: Time) -> Self {
+        assert!(from >= 1 && to >= from, "scale-out grows the shard count: {from} -> {to}");
+        let moves = (0..SLOTS)
+            .filter_map(|slot| {
+                let target = (slot * to) / SLOTS;
+                (target >= from).then_some(SlotMove { slot, to: target })
+            })
+            .collect();
+        ReshardPlan { at, moves }
+    }
+
+    /// Highest destination shard id the plan touches (the cluster driver
+    /// sizes the world vector to `max(shards, max_shard + 1)`).
+    pub fn max_shard(&self) -> usize {
+        self.moves.iter().map(|m| m.to).max().unwrap_or(0)
+    }
+}
+
+/// The per-run router: the slot table plus the fence state the pipelined
+/// clients and the migration actor coordinate through. Lives in
+/// [`super::cosim::ClusterState`] so every cluster-level actor shares one
+/// view on the one event heap.
+pub(crate) struct SlotRouter {
+    pub table: SlotTable,
+    /// The slot currently fenced for migration (at most one at a time).
+    migrating: Option<usize>,
+    /// In-flight foreground ops per slot (issued, not yet completed) — what
+    /// the fence waits on before the keys move.
+    in_flight: Vec<u32>,
+}
+
+impl SlotRouter {
+    pub fn identity(shards: usize) -> Self {
+        SlotRouter {
+            table: SlotTable::identity(shards),
+            migrating: None,
+            in_flight: vec![0; SLOTS],
+        }
+    }
+
+    /// Route `key` under the current epoch: `(slot, shard)`.
+    pub fn route(&self, key: &[u8]) -> (usize, usize) {
+        let slot = slot_of(key);
+        (slot, self.table.route_slot(slot, key))
+    }
+
+    /// The slot currently behind a fence, if any.
+    pub fn fenced(&self) -> Option<usize> {
+        self.migrating
+    }
+
+    /// May an op on `slot` issue right now?
+    pub fn blocked(&self, slot: usize) -> bool {
+        self.migrating == Some(slot)
+    }
+
+    pub fn note_issue(&mut self, slot: usize) {
+        self.in_flight[slot] += 1;
+    }
+
+    pub fn note_done(&mut self, slot: usize) {
+        debug_assert!(self.in_flight[slot] > 0, "slot {slot} completion without an issue");
+        self.in_flight[slot] = self.in_flight[slot].saturating_sub(1);
+    }
+
+    pub fn in_flight(&self, slot: usize) -> u32 {
+        self.in_flight[slot]
+    }
+
+    /// Raise the fence on `slot`: new ops on it bounce; the epoch bumps so
+    /// clients can tell their issue-time snapshot is stale.
+    pub fn fence(&mut self, slot: usize) {
+        debug_assert!(self.migrating.is_none(), "one slot migrates at a time");
+        self.migrating = Some(slot);
+        self.table.bump_epoch();
+    }
+
+    /// Publish the new owner and drop the fence (the atomic table flip).
+    pub fn unfence(&mut self, slot: usize, to: usize) {
+        debug_assert_eq!(self.migrating, Some(slot), "unfencing a slot that is not fenced");
+        self.migrating = None;
+        self.table.flip(slot, to);
+    }
+}
+
+/// The world surface key migration needs, implemented by both shared world
+/// types so ONE actor migrates every scheme through that scheme's own
+/// staged write path.
+pub(crate) trait ReshardWorld {
+    /// Sorted live keys of `slot` on this world (metadata scan; migration
+    /// enumerates the source's hash table, never the log).
+    fn slot_keys(&self, slot: usize) -> Vec<Vec<u8>>;
+    /// The last acked value of `key` here (None = absent or deleted).
+    fn read_value(&self, key: &[u8]) -> Option<Vec<u8>>;
+    /// Is the world ready to absorb one more migrated record? (RAW's ring
+    /// buffer backpressures; Erda always is.)
+    fn migrate_ready(&self) -> bool {
+        true
+    }
+    /// Write `key = value` in through the scheme's own write protocol;
+    /// returns the wire bytes programmed.
+    fn migrate_in(&mut self, key: &[u8], value: &[u8]) -> usize;
+    /// Drop `key`'s metadata entry after a successful copy (the zero-copy
+    /// half: the source log bytes stay where they are, only the 8-byte
+    /// entry goes).
+    fn evict(&mut self, key: &[u8]);
+}
+
+impl ReshardWorld for crate::erda::ErdaWorld {
+    fn slot_keys(&self, slot: usize) -> Vec<Vec<u8>> {
+        let mut keys: Vec<Vec<u8>> = self
+            .server
+            .table
+            .live_slots()
+            .filter_map(|s| self.server.table.read_entry(&self.nvm, s))
+            .map(|e| e.key)
+            .filter(|k| slot_of(k) == slot)
+            .collect();
+        keys.sort();
+        keys.dedup();
+        keys
+    }
+
+    fn read_value(&self, key: &[u8]) -> Option<Vec<u8>> {
+        self.get(key)
+    }
+
+    fn migrate_in(&mut self, key: &[u8], value: &[u8]) -> usize {
+        let obj = object::encode_object(key, value);
+        let (_, _, addr) = self
+            .server
+            .try_write_request(&mut self.nvm, key, obj.len())
+            .expect("migration write into the destination world");
+        self.nvm.write(addr, &obj);
+        obj.len()
+    }
+
+    fn evict(&mut self, key: &[u8]) {
+        if let Some(slot) = self.server.table.lookup(&self.nvm, key) {
+            self.server.table.remove(&mut self.nvm, slot);
+        }
+    }
+}
+
+impl ReshardWorld for crate::baselines::BaselineWorld {
+    fn slot_keys(&self, slot: usize) -> Vec<Vec<u8>> {
+        let mut keys: Vec<Vec<u8>> = self
+            .server
+            .table
+            .live_slots()
+            .filter_map(|s| self.server.table.read_entry(&self.nvm, s))
+            .map(|e| e.key)
+            .filter(|k| slot_of(k) == slot)
+            .collect();
+        keys.sort();
+        keys.dedup();
+        keys
+    }
+
+    fn read_value(&self, key: &[u8]) -> Option<Vec<u8>> {
+        self.get(key)
+    }
+
+    fn migrate_ready(&self) -> bool {
+        self.server.pending_len() < self.server.ring_cap
+    }
+
+    fn migrate_in(&mut self, key: &[u8], value: &[u8]) -> usize {
+        let obj = object::encode_object(key, value);
+        match self.server.scheme {
+            crate::baselines::Scheme::RedoLogging => {
+                self.server
+                    .redo_write(&mut self.nvm, key, value)
+                    .expect("migration redo-write into the destination world");
+            }
+            crate::baselines::Scheme::ReadAfterWrite => {
+                let off = self.server.raw_reserve(&mut self.nvm, obj.len());
+                self.nvm.write(self.server.staging.addr_of(off), &obj);
+                self.server
+                    .raw_commit(&mut self.nvm, key, value, off, obj.len() as u32)
+                    .expect("migration raw-commit into the destination world");
+            }
+        }
+        obj.len()
+    }
+
+    fn evict(&mut self, key: &[u8]) {
+        // Baseline delete zeroes the metadata entry AND the pending-read
+        // shadow — exactly the eviction a migrated key needs.
+        self.server.delete(&mut self.nvm, key);
+    }
+}
+
+/// A slot move mid-drain: the fenced slot, its destination, and the keys
+/// still to copy (`None` until the slot quiesced and was enumerated).
+struct MoveInProgress {
+    slot: usize,
+    to: usize,
+    /// `(source world, key)` queue, sorted by key bytes for determinism.
+    keys: Option<VecDeque<(usize, Vec<u8>)>>,
+}
+
+/// The migration actor: executes a [`ReshardPlan`] on the shared co-sim
+/// event heap, one slot at a time, one key per event step.
+///
+/// Per slot: **fence** (epoch bump; new ops on the slot bounce) → **wait**
+/// for the slot's in-flight count to reach zero (old-epoch ops complete
+/// before any key moves) → **drain** each key as an ingress-admitted
+/// one-sided write into the destination world plus an entry eviction at
+/// the source → **flip** the slot table and drop the fence. Never spawned
+/// for an empty plan, so a no-plan run carries zero extra events.
+pub(crate) struct MigrationActor {
+    moves: VecDeque<SlotMove>,
+    current: Option<MoveInProgress>,
+}
+
+impl MigrationActor {
+    pub fn new(plan: ReshardPlan) -> Self {
+        MigrationActor { moves: plan.moves.into(), current: None }
+    }
+}
+
+impl<W: ClientWorld + ReshardWorld> Actor<ClusterState<W>> for MigrationActor {
+    fn step(&mut self, s: &mut ClusterState<W>, now: Time) -> Step {
+        // Phase 0: between moves — raise the next fence, or retire.
+        let cur = match self.current.as_mut() {
+            Some(cur) => cur,
+            None => match self.moves.pop_front() {
+                None => return Step::Done,
+                Some(m) => {
+                    s.router.fence(m.slot);
+                    self.current = Some(MoveInProgress { slot: m.slot, to: m.to, keys: None });
+                    return Step::At(now + MIGRATION_QUANTUM);
+                }
+            },
+        };
+
+        // Phase 1: quiesce — old-epoch ops on the slot drain to completion
+        // before a single key moves (per-key order across the handoff).
+        let keys = match cur.keys.as_mut() {
+            Some(keys) => keys,
+            None => {
+                if s.router.in_flight(cur.slot) > 0 {
+                    return Step::At(now + MIGRATION_QUANTUM);
+                }
+                // Enumerate once, at the quiesced instant: under identity
+                // routing a slot's keys may straddle two source shards, so
+                // every primary except the destination is scanned.
+                let mut found: Vec<(usize, Vec<u8>)> = Vec::new();
+                for src in (0..s.primaries).filter(|&w| w != cur.to) {
+                    for key in s.worlds[src].slot_keys(cur.slot) {
+                        found.push((src, key));
+                    }
+                }
+                found.sort_by(|a, b| a.1.cmp(&b.1));
+                cur.keys = Some(found.into());
+                cur.keys.as_mut().expect("just set")
+            }
+        };
+
+        // Phase 2: drain one key per event step.
+        if let Some((src, key)) = keys.pop_front() {
+            if !s.worlds[cur.to].migrate_ready() {
+                // Destination backpressure (RAW ring full): let its applier
+                // catch up and retry the same key.
+                keys.push_front((src, key));
+                return Step::At(now + MIGRATION_QUANTUM);
+            }
+            return match s.worlds[src].read_value(&key) {
+                Some(value) => {
+                    // One record = one admission through the shared client
+                    // NIC (migration traffic is priced like any write), one
+                    // staged write at the destination, one 8-byte entry
+                    // eviction at the source.
+                    let wire = object::wire_size(key.len(), value.len());
+                    let admitted = s.admit(now, wire).max(now);
+                    let to = cur.to;
+                    let copied = s.worlds[to].migrate_in(&key, &value);
+                    s.worlds[to].counters_mut().record_migrated_key(admitted, copied);
+                    s.worlds[src].evict(&key);
+                    Step::At(admitted + MIGRATION_QUANTUM)
+                }
+                // Deleted while fenced-off runs drained, or a tombstone:
+                // nothing to copy, just drop the stale entry.
+                None => {
+                    s.worlds[src].evict(&key);
+                    Step::At(now + MIGRATION_QUANTUM)
+                }
+            };
+        }
+
+        // Phase 3: the slot is empty at every source — flip and unfence.
+        let (slot, to) = (cur.slot, cur.to);
+        s.router.unfence(slot, to);
+        self.current = None;
+        Step::At(now + MIGRATION_QUANTUM)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::erda::ErdaWorld;
+    use crate::log::LogConfig;
+    use crate::nvm::NvmConfig;
+    use crate::sim::{Engine, Timing};
+    use crate::store::shard_of;
+    use crate::ycsb::key_of;
+
+    #[test]
+    fn slot_of_is_total_and_deterministic() {
+        for i in 0..4000u64 {
+            let key = key_of(i);
+            let s = slot_of(&key);
+            assert!(s < SLOTS);
+            assert_eq!(s, slot_of(&key));
+        }
+    }
+
+    #[test]
+    fn identity_table_is_bit_for_bit_shard_of() {
+        // Satellite: the degenerate slot map must reproduce shard_of
+        // exactly — including the non-power-of-two counts where a
+        // materialized 256-entry table would disagree on slot-boundary
+        // keys.
+        for shards in [1usize, 2, 3, 4, 5, 7, 8, 16] {
+            let t = SlotTable::identity(shards);
+            assert!(t.is_identity());
+            assert_eq!(t.epoch(), 0);
+            assert_eq!(t.base_shards(), shards);
+            for i in 0..4000u64 {
+                let key = key_of(i);
+                assert_eq!(
+                    t.route(&key),
+                    shard_of(&key, shards),
+                    "identity routing diverged for {shards} shards"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flip_moves_exactly_one_slot_and_bumps_the_epoch() {
+        let mut t = SlotTable::identity(2);
+        let key = key_of(11);
+        let slot = slot_of(&key);
+        t.flip(slot, 7);
+        assert_eq!(t.epoch(), 1);
+        assert!(!t.is_identity());
+        assert_eq!(t.max_shard(), 7);
+        for i in 0..2000u64 {
+            let k = key_of(i);
+            if slot_of(&k) == slot {
+                assert_eq!(t.route(&k), 7, "flipped slot owns all its keys");
+            } else {
+                assert_eq!(t.route(&k), shard_of(&k, 2), "other slots keep identity");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_out_plan_targets_only_new_shards() {
+        let plan = ReshardPlan::scale_out(2, 3, 5_000);
+        assert!(!plan.moves.is_empty());
+        assert_eq!(plan.max_shard(), 2);
+        assert!(plan.moves.iter().all(|m| m.to == 2 && m.slot < SLOTS));
+        // Applying the plan keeps routing total over the grown cluster.
+        let mut t = SlotTable::identity(2);
+        for m in &plan.moves {
+            t.flip(m.slot, m.to);
+        }
+        assert_eq!(t.epoch(), plan.moves.len() as u64);
+        let mut hits = [0u32; 3];
+        for i in 0..3000u64 {
+            let k = key_of(i);
+            let sh = t.route(&k);
+            assert!(sh < 3, "post-plan routing must stay total");
+            hits[sh] += 1;
+        }
+        assert!(hits.iter().all(|&c| c > 0), "all three shards own keys: {hits:?}");
+        // Degenerate: no growth, no moves.
+        assert!(ReshardPlan::scale_out(4, 4, 0).moves.is_empty());
+    }
+
+    #[test]
+    fn router_fence_blocks_one_slot_and_counts_in_flight() {
+        let mut r = SlotRouter::identity(2);
+        let key = key_of(3);
+        let (slot, shard) = r.route(&key);
+        assert_eq!(shard, shard_of(&key, 2));
+        assert!(!r.blocked(slot));
+        r.note_issue(slot);
+        r.note_issue(slot);
+        assert_eq!(r.in_flight(slot), 2);
+        r.fence(slot);
+        assert_eq!(r.fenced(), Some(slot));
+        assert!(r.blocked(slot));
+        assert!(!r.blocked((slot + 1) % SLOTS), "only the migrating slot fences");
+        let epoch_fenced = r.table.epoch();
+        assert_eq!(epoch_fenced, 1, "the fence bumps the epoch");
+        r.note_done(slot);
+        r.note_done(slot);
+        assert_eq!(r.in_flight(slot), 0);
+        r.unfence(slot, 1);
+        assert!(r.fenced().is_none());
+        assert_eq!(r.table.epoch(), 2, "the flip bumps the epoch again");
+        assert_eq!(r.route(&key).1, 1, "post-flip routing follows the table");
+    }
+
+    fn erda_world(shard: usize, shards: usize) -> ErdaWorld {
+        let mut w = ErdaWorld::new(
+            Timing::default(),
+            NvmConfig { capacity: 16 << 20 },
+            LogConfig::default(),
+            1 << 10,
+        );
+        w.preload_shard(64, 32, shard, shards);
+        w.nvm.reset_stats();
+        w
+    }
+
+    #[test]
+    fn migration_actor_moves_a_slot_between_erda_worlds() {
+        // Pick a slot that owns at least one key on shard 0 of 2.
+        let (slot, moved_keys): (usize, Vec<Vec<u8>>) = (0..64u64)
+            .map(key_of)
+            .find_map(|k| {
+                if shard_of(&k, 2) != 0 {
+                    return None;
+                }
+                let slot = slot_of(&k);
+                let keys: Vec<Vec<u8>> = (0..64u64)
+                    .map(key_of)
+                    .filter(|k2| slot_of(k2) == slot && shard_of(k2, 2) == 0)
+                    .collect();
+                Some((slot, keys))
+            })
+            .expect("some preloaded key lives on shard 0");
+        let worlds = vec![erda_world(0, 2), erda_world(1, 2)];
+        let mut e = Engine::new(ClusterState::new(worlds, None));
+        let plan = ReshardPlan { at: 100, moves: vec![SlotMove { slot, to: 1 }] };
+        e.spawn(Box::new(MigrationActor::new(plan)), 100);
+        e.run();
+        assert_eq!(e.state.router.table.route_slot(slot, &moved_keys[0]), 1, "slot flipped");
+        assert!(e.state.router.fenced().is_none(), "the fence came down");
+        e.state.worlds[1].settle();
+        for k in &moved_keys {
+            assert_eq!(
+                e.state.worlds[1].get(k).as_deref(),
+                Some(&vec![0xA5u8; 32][..]),
+                "migrated key must be readable at the destination"
+            );
+            assert!(
+                e.state.worlds[0].server.table.lookup(&e.state.worlds[0].nvm, k).is_none(),
+                "source entry evicted after the copy"
+            );
+        }
+        let migrated = e.state.worlds[1].counters.migrated_keys;
+        assert_eq!(migrated, moved_keys.len() as u64, "every key accounted");
+        assert!(e.state.worlds[1].counters.migration_bytes > 0);
+    }
+
+    #[test]
+    fn empty_plan_spawns_nothing_and_identity_router_defaults() {
+        // The no-op guarantees: an empty plan has no moves to execute, and
+        // a fresh ClusterState routes identically to shard_of.
+        assert!(ReshardPlan { at: 0, moves: vec![] }.moves.is_empty());
+        let s: ClusterState<u64> = ClusterState::new(vec![0, 0, 0], None);
+        assert!(s.router.table.is_identity());
+        assert_eq!(s.router.table.base_shards(), 3);
+        for i in 0..500u64 {
+            let k = key_of(i);
+            assert_eq!(s.router.route(&k).1, shard_of(&k, 3));
+        }
+    }
+}

@@ -62,6 +62,13 @@ pub struct DriverConfig {
     pub cleaning_threshold: Option<u32>,
     /// Cleaner tuning (batch size controls CPU burstiness felt by clients).
     pub cleaner: CleanerConfig,
+    /// Mid-run elastic resharding ([`crate::store::reshard`]): `Some(plan)`
+    /// spawns a migration actor that fences, drains, and flips the planned
+    /// slots at the plan's virtual instant; destinations past `shards` grow
+    /// the world vector (scale-out). `None` (default) = the identity slot
+    /// table, bit-for-bit [`crate::store::shard_of`] routing. Forces the
+    /// pipelined client path.
+    pub reshard: Option<crate::store::ReshardPlan>,
 }
 
 impl Default for DriverConfig {
@@ -82,6 +89,7 @@ impl Default for DriverConfig {
             timing: Timing::default(),
             cleaning_threshold: None,
             cleaner: CleanerConfig::default(),
+            reshard: None,
         }
     }
 }
@@ -145,7 +153,7 @@ impl DriverConfig {
 
 /// Run one simulation; returns the collected metrics.
 pub fn run(cfg: &DriverConfig) -> RunStats {
-    Cluster::from_config(cfg).run().stats
+    Cluster::from_config(cfg).run().expect("unsupported DriverConfig combination").stats
 }
 
 #[cfg(test)]

@@ -32,6 +32,7 @@ fn cosim_runs_are_seed_stable_at_2_and_4_shards() {
                 .arrival(Arrival::Poisson { rate: 80_000.0 })
                 .seed(seed)
                 .run()
+                .unwrap()
                 .stats
         };
         let mut a = run(7);
@@ -81,6 +82,7 @@ fn a_single_clients_window_spans_shards() {
             // window 1 too, so both runs use the same client model.
             .ingress(4096)
             .run()
+            .unwrap()
     };
     let w1 = run(1);
     let w8 = run(8);
@@ -111,7 +113,7 @@ fn shared_ingress_meters_every_shard_globally() {
         if let Some(c) = ingress {
             b = b.ingress(c);
         }
-        b.run()
+        b.run().unwrap()
     };
     let free = run(None);
     let metered = run(Some(1));
@@ -139,7 +141,7 @@ fn shared_ingress_meters_every_shard_globally() {
 #[test]
 fn merged_stats_equal_per_shard_sums_on_one_timeline() {
     for scheme in Scheme::ALL {
-        let outcome = builder(scheme, 4).window(4).run();
+        let outcome = builder(scheme, 4).window(4).run().unwrap();
         let s = &outcome.stats;
         assert_eq!(outcome.per_shard.len(), 4, "{scheme:?}");
         assert_eq!(s.ops, 4 * 150, "{scheme:?}: full quota");
@@ -200,6 +202,7 @@ fn interval_timeline_exposes_the_saturated_gap() {
         .ingress(1)
         .arrival(Arrival::Fixed { rate: 400_000.0 })
         .run()
+        .unwrap()
         .stats;
     assert_eq!(s.offered_ops, 4 * 150, "every arrival offered");
     assert_eq!(s.ops, 4 * 150, "backlog drains to completion");

@@ -35,7 +35,7 @@ fn torn_write_detected_and_repaired_by_reader() {
             ClientConfig::default(),
         )
         .script_client(1 * MS, vec![Request::Get { key: key.clone() }], ClientConfig::default())
-        .run();
+        .run().unwrap();
 
     let s = &outcome.stats;
     assert_eq!(s.inconsistencies_detected, 1, "checksum must flag the torn object");
@@ -63,7 +63,7 @@ fn fully_lost_write_on_fresh_key_retries_then_misses() {
             vec![Request::Get { key: key.clone() }],
             ClientConfig { max_retries: 3, ..ClientConfig::default() },
         )
-        .run();
+        .run().unwrap();
 
     let s = &outcome.stats;
     assert!(s.inconsistencies_detected >= 1);
@@ -94,7 +94,7 @@ fn concurrent_reader_during_write_window_falls_back_or_waits() {
             vec![Request::Get { key: key.clone() }; 4],
             ClientConfig::default(),
         )
-        .run();
+        .run().unwrap();
 
     // Whatever interleaving resulted, no read may return garbage or miss.
     assert_eq!(outcome.stats.read_misses, 0);
@@ -124,7 +124,7 @@ fn server_crash_recovery_with_torn_tail() {
         vec![Request::CrashDuringPut { key: key_of(2), value: vec![0xEE; 128], chunks: 1 }],
         ClientConfig::default(),
     );
-    let mut db = b.run().db;
+    let mut db = b.run().unwrap().db;
 
     db.crash().expect("erda store");
     let report = db.recover().expect("recovery runs");
@@ -157,7 +157,7 @@ fn read_your_own_writes_sequential() {
             ],
             ClientConfig::default(),
         )
-        .run();
+        .run().unwrap();
 
     // The two post-update reads hit; the post-delete read misses.
     let s = &outcome.stats;
@@ -177,7 +177,7 @@ fn many_clients_zipfian_no_anomalies() {
         .seed(99)
         .clients(8)
         .ops_per_client(400)
-        .run();
+        .run().unwrap();
 
     let s = &outcome.stats;
     assert_eq!(s.read_misses, 0, "no lost keys under contention");

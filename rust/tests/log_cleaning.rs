@@ -22,7 +22,7 @@ fn cleaning_run(threshold: u32, clients: usize, ops: u64) -> (RunStats, Db) {
         .warmup(0)
         .cleaning_threshold(threshold)
         .cleaner(CleanerConfig { batch: 8, poll: 100_000, one_shot: false })
-        .run();
+        .run().unwrap();
     (outcome.stats, outcome.db)
 }
 
@@ -104,7 +104,7 @@ fn values_stay_consistent_across_cleaning() {
         .ops_per_client(600)
         .warmup(0)
         .cleaning_threshold(16 << 10)
-        .run();
+        .run().unwrap();
 
     assert!(outcome.stats.cleanings >= 1, "cleaning must have run");
     let mut db = outcome.db;

@@ -48,8 +48,8 @@ fn builder(scheme: Scheme, shards: usize, window: usize, mirrored: bool) -> Clus
 fn mirrored_runs_preserve_per_op_results_on_the_same_seed() {
     for (shards, window) in [(1usize, 1usize), (1, 4), (2, 4)] {
         for scheme in Scheme::ALL {
-            let plain = builder(scheme, shards, window, false).run();
-            let mirrored = builder(scheme, shards, window, true).run();
+            let plain = builder(scheme, shards, window, false).run().unwrap();
+            let mirrored = builder(scheme, shards, window, true).run().unwrap();
             let tag = format!("{scheme:?}/shards{shards}/w{window}");
             assert_eq!(plain.stats.ops, mirrored.stats.ops, "{tag}: op count");
             assert_eq!(plain.stats.read_misses, 0, "{tag}: plain misses");
@@ -78,7 +78,7 @@ fn mirrored_runs_preserve_per_op_results_on_the_same_seed() {
 fn promotion_after_primary_failure_recovers_consistent_state() {
     for scheme in Scheme::ALL {
         let shards = 2;
-        let outcome = builder(scheme, shards, 4, true).run();
+        let outcome = builder(scheme, shards, 4, true).run().unwrap();
         assert_eq!(outcome.stats.ops, 200, "{scheme:?}");
         let mut db = outcome.db;
         let before: Vec<Option<Vec<u8>>> =
@@ -124,7 +124,7 @@ fn mirror_legs_admit_through_the_shared_ingress() {
             .value_size(VALUE)
             .nvm_capacity(64 << 20)
             .warmup(0)
-            .run();
+            .run().unwrap();
         let s = &outcome.stats;
         assert_eq!(s.ops, 200, "{scheme:?}");
         assert!(s.mirror_legs > 0, "{scheme:?}: updates must replicate");
@@ -154,6 +154,7 @@ fn mirroring_stretches_latency_and_splits_nvm_accounting() {
                 .nvm_capacity(64 << 20)
                 .warmup(0)
                 .run()
+                .unwrap()
         };
         let plain = mk(false);
         let mirrored = mk(true);

@@ -34,8 +34,8 @@ fn builder(scheme: Scheme) -> ClusterBuilder {
 #[test]
 fn window_one_reduces_to_the_closed_loop_engine_bit_for_bit() {
     for scheme in Scheme::ALL {
-        let closed: RunStats = builder(scheme).run().stats;
-        let mut piped: RunStats = builder(scheme).window(1).ingress(4096).run().stats;
+        let closed: RunStats = builder(scheme).run().unwrap().stats;
+        let mut piped: RunStats = builder(scheme).window(1).ingress(4096).run().unwrap().stats;
 
         assert_eq!(closed.ops, piped.ops, "{scheme:?} ops");
         assert_eq!(closed.duration_ns, piped.duration_ns, "{scheme:?} makespan");
@@ -186,7 +186,7 @@ fn cosim_at_one_shard_reproduces_the_legacy_engine_bit_for_bit() {
             Scheme::Erda => legacy_erda(&cfg),
             _ => legacy_baseline(&cfg),
         };
-        let cosim = Cluster::from_config(&cfg).run();
+        let cosim = Cluster::from_config(&cfg).run().unwrap();
         let mut co = cosim.stats;
         let mut legacy = legacy;
 
@@ -231,6 +231,7 @@ fn open_loop_runs_are_deterministic_in_the_seed() {
             .arrival(Arrival::Poisson { rate: 50_000.0 })
             .seed(seed)
             .run()
+            .unwrap()
             .stats
     };
     let a = run(7);
@@ -256,7 +257,7 @@ fn open_loop_runs_are_deterministic_in_the_seed() {
 fn windowed_runs_complete_their_quota_across_schemes_and_shards() {
     for scheme in Scheme::ALL {
         for shards in [1usize, 3] {
-            let s = builder(scheme).shards(shards).window(8).run().stats;
+            let s = builder(scheme).shards(shards).window(8).run().unwrap().stats;
             assert_eq!(s.ops, 4 * 200, "{scheme:?}/{shards} shards: full quota");
             assert_eq!(s.read_misses, 0, "{scheme:?}/{shards} shards: no lost reads");
         }
@@ -268,16 +269,16 @@ fn windowed_runs_complete_their_quota_across_schemes_and_shards() {
 #[test]
 fn erda_throughput_scales_with_window_and_window_one_matches_closed_loop() {
     let readonly = |b: ClusterBuilder| b.workload(Workload::ReadOnly);
-    let closed = readonly(builder(Scheme::Erda)).run().stats;
-    let w1 = readonly(builder(Scheme::Erda)).window(1).run().stats;
+    let closed = readonly(builder(Scheme::Erda)).run().unwrap().stats;
+    let w1 = readonly(builder(Scheme::Erda)).window(1).run().unwrap().stats;
     // window(1) without open-loop/ingress IS the closed-loop path.
     assert_eq!(closed.duration_ns, w1.duration_ns);
     assert_eq!(closed.ops, w1.ops);
     assert_eq!(closed.events, w1.events);
     // One-sided reads have no server bottleneck: throughput tracks the
     // window all the way up.
-    let w4 = readonly(builder(Scheme::Erda)).window(4).run().stats;
-    let w16 = readonly(builder(Scheme::Erda)).window(16).run().stats;
+    let w4 = readonly(builder(Scheme::Erda)).window(4).run().unwrap().stats;
+    let w16 = readonly(builder(Scheme::Erda)).window(16).run().unwrap().stats;
     assert!(w4.kops() > 2.0 * w1.kops(), "{} -> {}", w1.kops(), w4.kops());
     assert!(w16.kops() > 2.0 * w4.kops(), "{} -> {}", w4.kops(), w16.kops());
 }
@@ -293,6 +294,7 @@ fn ingress_saturation_accounts_offered_vs_achieved() {
         .ingress(1)
         .arrival(Arrival::Fixed { rate: 400_000.0 })
         .run()
+        .unwrap()
         .stats;
     assert_eq!(s.offered_ops, 4 * 200, "every arrival offered");
     assert_eq!(s.ops, 4 * 200, "backlog drains to completion");
@@ -318,7 +320,7 @@ fn ingress_saturation_accounts_offered_vs_achieved() {
 #[test]
 fn shard_worlds_allocate_a_share_not_the_cluster() {
     let cap = 128 << 20;
-    let outcome = builder(Scheme::Erda).shards(4).nvm_capacity(cap).run();
+    let outcome = builder(Scheme::Erda).shards(4).nvm_capacity(cap).run().unwrap();
     assert_eq!(outcome.stats.ops, 4 * 200, "sized-down worlds must still fit the run");
     for s in 0..4 {
         let c = outcome.db.shard_nvm_capacity(s).expect("shard exists");
@@ -329,6 +331,6 @@ fn shard_worlds_allocate_a_share_not_the_cluster() {
         assert!(c > cap / 8, "shard {s}: the share keeps fixed overhead + skew headroom");
     }
     // Single-shard geometry is untouched (the paper's setup).
-    let single = builder(Scheme::Erda).nvm_capacity(cap).run();
+    let single = builder(Scheme::Erda).nvm_capacity(cap).run().unwrap();
     assert_eq!(single.db.shard_nvm_capacity(0), Some(cap));
 }

@@ -229,7 +229,7 @@ fn engine_conformance_all_schemes_at_1_and_4_shards() {
                     chunks: 1,
                 }])
                 .script_at(2 * MS, vec![Request::Get { key: key_of(2) }])
-                .run();
+                .run().unwrap();
 
             let s = &outcome.stats;
             assert_eq!(
@@ -265,6 +265,7 @@ fn engine_runs_are_deterministic_per_scheme() {
                     .ops_per_client(150)
                     .warmup(0)
                     .run()
+                    .unwrap()
                     .stats
             };
             let a = run();
@@ -295,7 +296,7 @@ fn cosim_merged_counters_equal_per_shard_sums() {
                 .value_size(64)
                 .ops_per_client(100)
                 .warmup(0)
-                .run();
+                .run().unwrap();
             let s = &outcome.stats;
             assert_eq!(s.ops, 4 * 100, "{scheme:?}/w{window}");
             for (name, cluster, shard_sum) in [
@@ -348,7 +349,7 @@ fn per_shard_crash_recovery_survives_a_cosim_run() {
         .preload(32, VALUE)
         .ops_per_client(100)
         .warmup(0)
-        .run();
+        .run().unwrap();
     assert_eq!(outcome.stats.ops, 200);
     let mut db = outcome.db;
 
