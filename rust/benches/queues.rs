@@ -1,0 +1,75 @@
+//! Event-queue micro-benchmarks (PR 7): the legacy global binary heap vs
+//! the tiered per-lane scheduler at growing pending-event populations.
+//! (`harness = false` — criterion is not in the offline vendor set; the
+//! statistics harness lives in `erda::bench_util`.)
+//!
+//! Each measurement holds the queue at a steady-state population of N
+//! pending events and times one pop + one monotone re-push — the exact
+//! cycle `Engine::run_until` drives. The tiered queue's win is the small
+//! top heap: a pop touches one lane of ~N/lanes events plus a top heap of
+//! at most `lanes` entries, instead of one log₂(N) sift over everything.
+//!
+//! Run: `cargo bench --bench queues`
+
+use erda::bench_util::Bench;
+use erda::sim::{EventQueue, HeapQueue, Rng, TieredQueue};
+
+const LANES: usize = 64;
+const ACTORS: usize = 64;
+
+/// Fill `q` with `n` events at seeded times, returning (clock, seq) so the
+/// steady-state loop keeps pushing in engine order (times never go back).
+fn fill(q: &mut dyn EventQueue, n: usize, rng: &mut Rng) -> (u64, u64) {
+    let mut seq = 0u64;
+    for _ in 0..n {
+        let t = rng.gen_range(1_000_000);
+        q.push((t, seq, (seq as usize) % ACTORS));
+        seq += 1;
+    }
+    (1_000_000, seq)
+}
+
+/// One steady-state scheduler cycle: pop the due event, schedule a
+/// successor a seeded delta later. The population stays exactly `n`.
+fn cycle(q: &mut dyn EventQueue, clock: &mut u64, seq: &mut u64, rng: &mut Rng) -> u64 {
+    let (t, _, id) = q.pop().expect("steady-state queue never drains");
+    *clock = (*clock).max(t);
+    q.push((*clock + 1 + rng.gen_range(10_000), *seq, id));
+    *seq += 1;
+    t
+}
+
+fn main() {
+    let mut b = Bench::new("queues");
+
+    for &n in &[1_000usize, 10_000, 100_000] {
+        let label = if n >= 10_000 { format!("{}k", n / 1000) } else { n.to_string() };
+
+        let mut heap = HeapQueue::new();
+        let mut rng = Rng::new(0xE2DA_0007);
+        let (mut clock, mut seq) = fill(&mut heap, n, &mut rng);
+        b.bench(&format!("heap_pop_push/{label}"), || {
+            cycle(&mut heap, &mut clock, &mut seq, &mut rng)
+        });
+
+        let mut tiered = TieredQueue::new(LANES);
+        let mut rng = Rng::new(0xE2DA_0007);
+        let (mut clock, mut seq) = fill(&mut tiered, n, &mut rng);
+        b.bench(&format!("tiered_pop_push/{label}"), || {
+            cycle(&mut tiered, &mut clock, &mut seq, &mut rng)
+        });
+
+        if let (Some(h), Some(t)) = (
+            b.result_ns(&format!("heap_pop_push/{label}")),
+            b.result_ns(&format!("tiered_pop_push/{label}")),
+        ) {
+            println!(
+                "  -> {label} pending: heap {h:.0} ns/cycle, tiered {t:.0} ns/cycle \
+                 ({:.2}x)",
+                h / t
+            );
+        }
+    }
+
+    b.finish();
+}

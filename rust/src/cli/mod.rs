@@ -6,6 +6,7 @@
 //! repro figures --table 1 [--out DIR]           Table 1
 //! repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
 //!             [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
+//!             [--scheduler heap|tiered] [--doorbell N]
 //!             [--mirrored | --reshard-at MS]    facade end-to-end smoke run
 //! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
 //!                                               shard-count throughput sweep
@@ -21,6 +22,10 @@
 //!                                               elastic-resharding sweep:
 //!                                               mid-run scale-out n -> n+1,
 //!                                               all schemes
+//! repro scale [--clients 8,32] [--quick] [--out DIR] [--json FILE]
+//!                                               scheduler/doorbell scale sweep:
+//!                                               heap vs tiered (bit-for-bit)
+//!                                               and doorbell-8 batching
 //! repro bench-gate --baseline F --current F [--tolerance 0.10] [--update]
 //!                                               benchmark regression gate
 //! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
@@ -32,6 +37,7 @@ use std::path::PathBuf;
 
 use crate::error::{anyhow, bail, Result};
 use crate::figures::{self, Fidelity};
+use crate::sim::SchedulerKind;
 use crate::store::Scheme;
 use crate::ycsb::Arrival;
 
@@ -54,6 +60,12 @@ pub enum Cmd {
         /// Fire a scale-out reshard (shards -> shards + 1) at this virtual
         /// millisecond of the run (mutually exclusive with `mirrored`).
         reshard_at: Option<u64>,
+        /// Event-queue implementation for the co-sim engine (bit-for-bit
+        /// identical results either way; tiered is the default).
+        scheduler: SchedulerKind,
+        /// Doorbell batch width: coalesce up to N ready ops per ingress
+        /// post (1 = per-op admission, the pre-batching path).
+        doorbell: usize,
     },
     /// Scale-out sweep: throughput vs shard count for all three schemes.
     Scaling {
@@ -91,6 +103,14 @@ pub enum Cmd {
     /// migrated keys/bytes, bounced ops).
     Reshard {
         shards: Vec<usize>,
+        fidelity: Fidelity,
+        out: Option<PathBuf>,
+        json: Option<PathBuf>,
+    },
+    /// Scheduler/doorbell scale sweep: heap vs tiered event queues
+    /// (asserted bit-for-bit) plus doorbell-8 batching vs client count.
+    Scale {
+        clients: Vec<usize>,
         fidelity: Fidelity,
         out: Option<PathBuf>,
         json: Option<PathBuf>,
@@ -195,6 +215,8 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let mut ingress: Option<usize> = None;
             let mut mirrored = false;
             let mut reshard_at: Option<u64> = None;
+            let mut scheduler = SchedulerKind::default();
+            let mut doorbell: usize = 1;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--scheme" => match it.next() {
@@ -257,6 +279,23 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         }
                         None => bail!("--ingress needs a channel count"),
                     },
+                    "--scheduler" => match it.next() {
+                        Some(v) => {
+                            scheduler = SchedulerKind::parse(v).ok_or_else(|| {
+                                anyhow!("unknown scheduler {v:?} (heap|tiered)")
+                            })?
+                        }
+                        None => bail!("--scheduler needs heap|tiered"),
+                    },
+                    "--doorbell" => match it.next() {
+                        Some(v) => {
+                            doorbell = v.parse::<usize>()?;
+                            if doorbell == 0 {
+                                bail!("--doorbell needs a batch width ≥ 1");
+                            }
+                        }
+                        None => bail!("--doorbell needs a batch width"),
+                    },
                     "--mirrored" => mirrored = true,
                     "--reshard-at" => match it.next() {
                         Some(v) => {
@@ -285,6 +324,8 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                     ingress,
                     mirrored,
                     reshard_at,
+                    scheduler,
+                    doorbell,
                 }),
                 None => bail!("smoke: pass --scheme erda|redo|raw"),
             }
@@ -323,6 +364,16 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                 &mut it,
             )?;
             Ok(Cmd::Reshard { shards, fidelity, out, json })
+        }
+        "scale" => {
+            let (clients, fidelity, out, json) = parse_sweep_flags(
+                "scale",
+                "--clients",
+                "counts",
+                &figures::SCALE_SWEEP,
+                &mut it,
+            )?;
+            Ok(Cmd::Scale { clients, fidelity, out, json })
         }
         "bench-gate" => {
             let mut baseline = None;
@@ -376,6 +427,7 @@ USAGE:
   repro figures --ablations [--out DIR]       design-choice ablations (A1–A4)
   repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
               [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
+              [--scheduler heap|tiered] [--doorbell N]
               [--mirrored | --reshard-at MS]
                                               exercise the store facade end to
                                               end (typed KV ops + a DES run,
@@ -393,7 +445,12 @@ USAGE:
                                               check, and --reshard-at firing a
                                               mid-run scale-out from N to N+1
                                               shards at virtual millisecond
-                                              MS); deterministic in --seed
+                                              MS, --scheduler picking the
+                                              event-queue impl — bit-for-bit
+                                              identical results — and
+                                              --doorbell coalescing up to N
+                                              ready ops per ingress post);
+                                              deterministic in --seed
   repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
                                               scale-out sweep: throughput vs
                                               shard count, all three schemes
@@ -423,6 +480,13 @@ USAGE:
                                               throughput, migration-window
                                               dip, migrated keys/bytes and
                                               bounced ops
+  repro scale [--clients 8,32] [--quick] [--out DIR] [--json FILE]
+                                              scheduler/doorbell scale sweep:
+                                              heap vs tiered event queues
+                                              (asserted bit-for-bit, host
+                                              wall-clock reported) and
+                                              doorbell-8 batching vs client
+                                              count
   repro bench-gate --baseline FILE --current FILE [--tolerance 0.10] [--update]
                                               compare a benchmark JSON artifact
                                               against a committed baseline;
@@ -493,6 +557,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
             }
         );
         assert_eq!(
@@ -506,6 +572,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
             }
         );
         assert_eq!(
@@ -519,6 +587,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
             }
         );
     }
@@ -537,6 +607,8 @@ mod tests {
                 ingress: Some(2),
                 mirrored: false,
                 reshard_at: None,
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
             }
         );
         assert_eq!(
@@ -550,6 +622,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
             }
         );
     }
@@ -567,6 +641,8 @@ mod tests {
                 ingress: None,
                 mirrored: true,
                 reshard_at: None,
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
             }
         );
     }
@@ -584,6 +660,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: Some(8),
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
             }
         );
         assert!(p("smoke --scheme erda --reshard-at").is_err());
@@ -610,6 +688,70 @@ mod tests {
         assert!(p("smoke --scheme erda --fixed-rate nope").is_err());
         assert!(p("smoke --scheme erda --ingress 0").is_err());
         assert!(p("smoke --scheme erda --ingress").is_err());
+        assert!(p("smoke --scheme erda --scheduler calendar").is_err());
+        assert!(p("smoke --scheme erda --scheduler").is_err());
+        assert!(p("smoke --scheme erda --doorbell 0").is_err());
+        assert!(p("smoke --scheme erda --doorbell many").is_err());
+        assert!(p("smoke --scheme erda --doorbell").is_err());
+    }
+
+    #[test]
+    fn parses_scheduler_and_doorbell_smoke() {
+        assert_eq!(
+            p("smoke --scheme erda --shards 2 --window 8 --scheduler heap --doorbell 4").unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::Erda,
+                seed: 0xE2DA,
+                shards: 2,
+                window: 8,
+                arrival: Arrival::Closed,
+                ingress: None,
+                mirrored: false,
+                reshard_at: None,
+                scheduler: SchedulerKind::Heap,
+                doorbell: 4,
+            }
+        );
+        assert_eq!(
+            p("smoke --scheme redo --scheduler tiered").unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::RedoLogging,
+                seed: 0xE2DA,
+                shards: 1,
+                window: 1,
+                arrival: Arrival::Closed,
+                ingress: None,
+                mirrored: false,
+                reshard_at: None,
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
+            }
+        );
+    }
+
+    #[test]
+    fn parses_scale_sweep() {
+        assert_eq!(
+            p("scale").unwrap(),
+            Cmd::Scale {
+                clients: figures::SCALE_SWEEP.to_vec(),
+                fidelity: Fidelity::Full,
+                out: None,
+                json: None,
+            }
+        );
+        assert_eq!(
+            p("scale --clients 8,32 --quick --json BENCH_scale.json").unwrap(),
+            Cmd::Scale {
+                clients: vec![8, 32],
+                fidelity: Fidelity::Quick,
+                out: None,
+                json: Some(PathBuf::from("BENCH_scale.json")),
+            }
+        );
+        assert!(p("scale --clients 0,8").is_err());
+        assert!(p("scale --clients").is_err());
+        assert!(p("scale --bogus").is_err());
     }
 
     #[test]

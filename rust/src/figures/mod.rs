@@ -37,6 +37,9 @@ pub const MIRROR_SWEEP: [usize; 2] = [1, 2];
 /// The default starting-shard sweep of the elastic-resharding experiment
 /// (`repro reshard`): each entry n runs a mid-run scale-out from n to n+1.
 pub const RESHARD_SWEEP: [usize; 2] = [1, 2];
+/// The default client sweep of the scheduler/doorbell scale experiment
+/// (`repro scale`).
+pub const SCALE_SWEEP: [usize; 2] = [8, 32];
 
 /// One rendered experiment: a CSV-able grid plus a markdown view.
 #[derive(Clone, Debug)]
@@ -605,6 +608,97 @@ pub fn reshard(shard_counts: &[usize], fid: Fidelity) -> Rendered {
     }
 }
 
+/// Scale sweep (`repro scale`): the PR-7 event-core refactor measured at
+/// growing client populations. Per client count the sweep runs the same
+/// sharded, ingress-metered, write-heavy Erda workload three ways:
+///
+/// 1. **heap** — the legacy single [`crate::sim::HeapQueue`] scheduler;
+/// 2. **tiered** — the default [`crate::sim::TieredQueue`] (per-world
+///    lanes under a small top heap), asserted bit-for-bit equal to the
+///    heap run down to the latency stream — the schedulers differ only in
+///    cost, never in order;
+/// 3. **tiered + doorbell 8** — client posts coalesced eight to a
+///    doorbell ([`DriverConfig::doorbell_batch`]): same op totals, one
+///    posting floor per batch instead of per op.
+///
+/// Simulated throughput gates in CI (`erda_kops`, `erda_b8_kops`); the
+/// host wall-clock columns are informational only — they say how fast the
+/// simulator itself ran, which is the whole point of the tiered queue.
+pub fn scale(client_counts: &[usize], fid: Fidelity) -> Rendered {
+    let window = 8;
+    let mut rows = Vec::new();
+    for &clients in client_counts {
+        let shards = (clients / 8).max(2);
+        let mk = |scheduler: crate::sim::SchedulerKind, doorbell: usize| {
+            let mut cfg = base_cfg(SchemeSel::Erda, Workload::UpdateHeavy, 256, clients, fid);
+            cfg.shards = shards;
+            cfg.window = window;
+            cfg.ingress_channels = Some(1);
+            cfg.scheduler = scheduler;
+            cfg.doorbell_batch = doorbell;
+            cfg
+        };
+        let t0 = std::time::Instant::now();
+        let heap = run(&mk(crate::sim::SchedulerKind::Heap, 1));
+        let heap_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = std::time::Instant::now();
+        let tiered = run(&mk(crate::sim::SchedulerKind::Tiered, 1));
+        let tiered_ms = t1.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(heap.ops, tiered.ops, "{clients} clients: scheduler changed the op total");
+        assert_eq!(
+            heap.duration_ns, tiered.duration_ns,
+            "{clients} clients: scheduler changed the makespan"
+        );
+        assert_eq!(
+            (heap.latency.count(), heap.latency.mean_ns()),
+            (tiered.latency.count(), tiered.latency.mean_ns()),
+            "{clients} clients: scheduler changed the latency stream"
+        );
+        assert_eq!(
+            heap.nvm_programmed_bytes, tiered.nvm_programmed_bytes,
+            "{clients} clients: scheduler changed the NVM traffic"
+        );
+        let b8 = run(&mk(crate::sim::SchedulerKind::Tiered, 8));
+        assert_eq!(heap.ops, b8.ops, "{clients} clients: doorbell changed the op total");
+        assert!(b8.batched_posts > 0, "{clients} clients: doorbell 8 coalesced nothing");
+        assert!(
+            b8.mean_batch_size() > 1.0,
+            "{clients} clients: doorbell batches must carry > 1 op"
+        );
+        rows.push(vec![
+            clients.to_string(),
+            shards.to_string(),
+            format!("{:.2}", tiered.kops()),
+            format!("{:.2}", b8.kops()),
+            format!("{:.2}", b8.mean_batch_size()),
+            b8.batched_posts.to_string(),
+            format!("{:.1}", tiered.sched_pops as f64 / 1e3),
+            format!("{heap_ms:.1}"),
+            format!("{tiered_ms:.1}"),
+        ]);
+    }
+    Rendered {
+        id: "scale".into(),
+        title: format!(
+            "Scale: tiered scheduler (bit-for-bit vs heap) and doorbell-8 batching vs \
+             client count (window {window}, YCSB-A, 256 B, 1-channel shared ingress; \
+             *_ms = host wall clock, informational)"
+        ),
+        header: vec![
+            "clients".into(),
+            "shards".into(),
+            "erda_kops".into(),
+            "erda_b8_kops".into(),
+            "b8_mean_batch".into(),
+            "b8_posts".into(),
+            "sched_pops_k".into(),
+            "heap_ms".into(),
+            "tiered_ms".into(),
+        ],
+        rows,
+    }
+}
+
 /// Run one experiment by paper number ("14".."26", "table1").
 pub fn by_id(id: &str, fid: Fidelity) -> Option<Rendered> {
     let wl = Workload::ALL;
@@ -629,14 +723,15 @@ pub fn by_id(id: &str, fid: Fidelity) -> Option<Rendered> {
         "cross-shard" | "cross_shard" => cross_shard(&CROSS_SHARD_SWEEP, fid),
         "mirror" => mirror(&MIRROR_SWEEP, fid),
         "reshard" => reshard(&RESHARD_SWEEP, fid),
+        "scale" => scale(&SCALE_SWEEP, fid),
         _ => return None,
     })
 }
 
 /// All experiment ids, in paper order (plus the repo's own extensions).
-pub const ALL_IDS: [&str; 20] = [
+pub const ALL_IDS: [&str; 21] = [
     "14", "15", "16", "17", "18", "19", "20", "21", "22", "23", "24", "25", "26", "table1",
-    "ablations", "scaling", "window", "cross-shard", "mirror", "reshard",
+    "ablations", "scaling", "window", "cross-shard", "mirror", "reshard", "scale",
 ];
 
 #[cfg(test)]
@@ -765,6 +860,21 @@ mod tests {
             assert!(cell(base + 3) > 0.0, "{scheme}: keys must migrate");
             assert!(cell(base + 4) > 0.0, "{scheme}: migration bytes must be accounted");
         }
+    }
+
+    #[test]
+    fn quick_scale_sweep_pins_equivalence_and_batching() {
+        // The bit-for-bit heap-vs-tiered and doorbell assertions run inside
+        // scale() itself; here we pin the reported shapes.
+        let r = scale(&[8], Fidelity::Quick);
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.header.len(), 9);
+        let cell = |col: usize| -> f64 { r.rows[0][col].parse().unwrap() };
+        assert!(cell(2) > 0.0, "tiered run must complete");
+        assert!(cell(3) > 0.0, "doorbell-8 run must complete");
+        assert!(cell(4) > 1.0, "doorbell batches must average > 1 op");
+        assert!(cell(5) > 0.0, "doorbell posts must be counted");
+        assert!(cell(6) > 0.0, "scheduler pops must be surfaced");
     }
 
     #[test]

@@ -23,9 +23,21 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        Cmd::Smoke { scheme, seed, shards, window, arrival, ingress, mirrored, reshard_at } => {
-            smoke(scheme, seed, shards, window, arrival, ingress, mirrored, reshard_at)
-        }
+        Cmd::Smoke {
+            scheme,
+            seed,
+            shards,
+            window,
+            arrival,
+            ingress,
+            mirrored,
+            reshard_at,
+            scheduler,
+            doorbell,
+        } => smoke(
+            scheme, seed, shards, window, arrival, ingress, mirrored, reshard_at, scheduler,
+            doorbell,
+        ),
         Cmd::Scaling { shards, fidelity, out, json } => {
             let r = figures::scaling(&shards, fidelity);
             r.emit(out.as_deref());
@@ -48,6 +60,11 @@ fn main() -> Result<()> {
         }
         Cmd::Reshard { shards, fidelity, out, json } => {
             let r = figures::reshard(&shards, fidelity);
+            r.emit(out.as_deref());
+            emit_json(&r, json.as_deref())
+        }
+        Cmd::Scale { clients, fidelity, out, json } => {
+            let r = figures::scale(&clients, fidelity);
             r.emit(out.as_deref());
             emit_json(&r, json.as_deref())
         }
@@ -141,6 +158,9 @@ fn bench_gate(
 /// and (optionally) synchronous mirroring incl. a fail-primary →
 /// promote-mirror failover check, or (optionally) a mid-run scale-out
 /// reshard from `shards` to `shards + 1` with zero-lost-write checks.
+/// The engine runs under the requested event-queue `scheduler` (results
+/// are bit-for-bit identical across kinds) and, with `doorbell > 1`,
+/// coalesces ready ops into doorbell-batched ingress posts.
 /// Deterministic in `seed`.
 #[allow(clippy::too_many_arguments)]
 fn smoke(
@@ -152,6 +172,8 @@ fn smoke(
     ingress: Option<usize>,
     mirrored: bool,
     reshard_at: Option<u64>,
+    scheduler: erda::sim::SchedulerKind,
+    doorbell: usize,
 ) -> Result<()> {
     use erda::store::{Cluster, RemoteStore, Request, ReshardPlan};
     use erda::ycsb::{key_of, Workload};
@@ -159,7 +181,7 @@ fn smoke(
     println!(
         "smoke: scheme = {}, seed = {seed:#x}, shards = {shards}, window = {window}, \
          arrival = {arrival:?}, ingress = {ingress:?}, mirrored = {mirrored}, \
-         reshard_at = {reshard_at:?} ms",
+         reshard_at = {reshard_at:?} ms, scheduler = {scheduler:?}, doorbell = {doorbell}",
         scheme.label()
     );
 
@@ -234,6 +256,8 @@ fn smoke(
         .records(200)
         .value_size(256)
         .seed(seed)
+        .scheduler(scheduler)
+        .doorbell_batch(doorbell)
         // Measure everything: the full-quota check below needs every op of
         // every spawned client counted (the default 5 ms warmup would drop
         // the early ones).
@@ -275,6 +299,26 @@ fn smoke(
             "  shared ingress: {c} channel(s), {} admissions, mean wait {:.0} ns",
             s.ingress_admitted,
             s.mean_ingress_wait_ns()
+        );
+    }
+    if doorbell > 1 {
+        erda::ensure!(
+            s.batched_posts > 0,
+            "doorbell {doorbell} must post at least one batch"
+        );
+        // A window-1 client never has two ready ops to coalesce; only a
+        // real pipeline can make batches wider than one.
+        if window > 1 {
+            erda::ensure!(
+                s.mean_batch_size() > 1.0,
+                "doorbell batches must average more than one op: {:.2}",
+                s.mean_batch_size()
+            );
+        }
+        println!(
+            "  doorbell: {} posts, mean batch {:.2} ops",
+            s.batched_posts,
+            s.mean_batch_size()
         );
     }
     if shards > 1 && window > 1 {

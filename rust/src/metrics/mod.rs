@@ -156,6 +156,12 @@ pub struct Counters {
     /// Foreground ops bounced by a migration fence (parked at issue time
     /// and re-issued under the post-flip epoch; each op counts once).
     pub bounced_ops: u64,
+    /// Doorbell-batched ingress posts rung inside the measurement window
+    /// (0 on the default per-op admission path). Recorded on the shard
+    /// world owning the first op of each batch.
+    pub batched_posts: u64,
+    /// Ops coalesced into those posts (mean batch size = ops / posts).
+    pub batched_ops: u64,
     /// Virtual time measurement starts (ops completing before are warmup).
     pub measure_from: Time,
     pub first_completion: Time,
@@ -195,6 +201,8 @@ impl Counters {
         self.migrated_keys += other.migrated_keys;
         self.migration_bytes += other.migration_bytes;
         self.bounced_ops += other.bounced_ops;
+        self.batched_posts += other.batched_posts;
+        self.batched_ops += other.batched_ops;
         // Like first_completion below, 0 means "unset" (a default-initialized
         // accumulator): adopt the other side's boundary instead of clamping
         // a real warmup down to 0.
@@ -262,6 +270,17 @@ impl Counters {
             return;
         }
         self.bounced_ops += 1;
+    }
+
+    /// Record one doorbell-batched ingress post rung at `at`, coalescing
+    /// `ops` ready ops (call on the counters of the shard owning the first
+    /// staged op). Warmup-era posts are dropped, like ops.
+    pub fn record_batch(&mut self, at: Time, ops: u64) {
+        if at < self.measure_from {
+            return;
+        }
+        self.batched_posts += 1;
+        self.batched_ops += ops;
     }
 
     /// Record an open-loop arrival at `at` that found `queue_depth` ops
@@ -351,6 +370,17 @@ pub struct RunStats {
     /// Foreground ops bounced by a migration fence and re-issued under the
     /// new epoch (each op counts once, however long the fence held).
     pub bounced_ops: u64,
+    /// Doorbell-batched ingress posts (0 = per-op admission ran).
+    pub batched_posts: u64,
+    /// Ops coalesced into those posts.
+    pub batched_ops: u64,
+    /// Events pushed into the engine's event queue over the whole run —
+    /// scheduler-cost diagnostics (engine-level like `events`, so warmup
+    /// is included; identical across queue kinds by the equivalence
+    /// contract).
+    pub sched_pushes: u64,
+    /// Events popped from the engine's event queue over the whole run.
+    pub sched_pops: u64,
 }
 
 impl RunStats {
@@ -408,6 +438,15 @@ impl RunStats {
             return 0.0;
         }
         self.mirror_leg_ns as f64 / self.mirror_legs as f64 / 1_000.0
+    }
+
+    /// Mean ops per doorbell-batched ingress post (0.0 when per-op
+    /// admission ran — i.e. `doorbell_batch` was 1 or unset).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batched_posts == 0 {
+            return 0.0;
+        }
+        self.batched_ops as f64 / self.batched_posts as f64
     }
 
     /// Mean ingress queueing delay per admitted op, ns (0 when disabled).
@@ -490,6 +529,10 @@ impl RunStats {
             migrated_keys: c.migrated_keys,
             migration_bytes: c.migration_bytes,
             bounced_ops: c.bounced_ops,
+            batched_posts: c.batched_posts,
+            batched_ops: c.batched_ops,
+            sched_pushes: 0,
+            sched_pops: 0,
         }
     }
 
@@ -497,6 +540,14 @@ impl RunStats {
     pub fn with_ingress(mut self, ingress: crate::rdma::IngressStats) -> RunStats {
         self.ingress_admitted = ingress.admitted;
         self.ingress_wait_ns = ingress.wait_ns;
+        self
+    }
+
+    /// Fold the engine's event-queue traffic into these stats (engine
+    /// accounting like `events`, folded in by the cluster driver).
+    pub fn with_scheduler(mut self, pushes: u64, pops: u64) -> RunStats {
+        self.sched_pushes = pushes;
+        self.sched_pops = pops;
         self
     }
 
@@ -684,6 +735,31 @@ mod tests {
         assert_eq!(s.migrated_keys, 3);
         assert_eq!(s.migration_bytes, 3584);
         assert_eq!(s.bounced_ops, 2);
+    }
+
+    #[test]
+    fn batch_accounting_respects_warmup_and_merges() {
+        let mut c = Counters { measure_from: 100, ..Default::default() };
+        c.record_batch(50, 8); // warmup: dropped
+        c.record_batch(150, 4);
+        c.record_batch(200, 6);
+        assert_eq!(c.batched_posts, 2);
+        assert_eq!(c.batched_ops, 10);
+
+        let mut other = Counters::default();
+        other.record_batch(0, 2);
+        c.merge(&other);
+        assert_eq!(c.batched_posts, 3);
+        assert_eq!(c.batched_ops, 12);
+
+        let s = RunStats::collect(&c, 0, crate::nvm::WriteStats::default(), 0)
+            .with_scheduler(500, 480);
+        assert_eq!(s.batched_posts, 3);
+        assert_eq!(s.batched_ops, 12);
+        assert_eq!(s.mean_batch_size(), 4.0);
+        assert_eq!(s.sched_pushes, 500);
+        assert_eq!(s.sched_pops, 480);
+        assert_eq!(RunStats::default().mean_batch_size(), 0.0);
     }
 
     #[test]

@@ -46,10 +46,25 @@ impl Ingress {
     /// channels are busy serializing earlier requests — the queueing delay
     /// that bounds aggregate offered load at the client side.
     pub fn admit(&mut self, now: Time, bytes: usize) -> Time {
-        let svc = self.timing.wire(bytes).max(self.timing.ingress_post_ns);
+        self.admit_batch(now, &[bytes])
+    }
+
+    /// Admit a doorbell-batched post: `bytes` holds the first-verb sizes
+    /// of every op rung through one doorbell. The batch occupies a channel
+    /// for the *sum* of the wire times but pays the posting floor
+    /// ([`Timing::ingress_post_ns`]) only once — the whole point of
+    /// doorbell batching on real RNICs. All ops share one admission
+    /// instant; `admitted` counts ops (not posts), so an op-count
+    /// invariant (`admitted == ops + mirror_legs`) holds at any batch
+    /// size, and the per-op wait is charged once per op. A 1-element
+    /// batch is bit-for-bit [`Ingress::admit`].
+    pub fn admit_batch(&mut self, now: Time, bytes: &[usize]) -> Time {
+        debug_assert!(!bytes.is_empty(), "a doorbell rings at least one op");
+        let wire: Time = bytes.iter().map(|&b| self.timing.wire(b)).sum();
+        let svc = wire.max(self.timing.ingress_post_ns);
         let resv = self.pool.reserve(now, svc);
-        self.stats.admitted += 1;
-        self.stats.wait_ns += (resv.start - now) as u128;
+        self.stats.admitted += bytes.len() as u64;
+        self.stats.wait_ns += (resv.start - now) as u128 * bytes.len() as u128;
         resv.start
     }
 
@@ -326,6 +341,40 @@ mod tests {
         assert!(floor > 0);
         assert_eq!(q.admit(0, 16), 0);
         assert_eq!(q.admit(0, 16), floor, "posting floor per verb");
+    }
+
+    #[test]
+    fn doorbell_batch_pays_one_posting_floor() {
+        // 4 small verbs rung separately: 4 posting floors back to back.
+        let mut per_op = Ingress::new(Timing::default(), 1);
+        let floor = per_op.timing.ingress_post_ns;
+        for i in 0..4 {
+            assert_eq!(per_op.admit(0, 16), i * floor);
+        }
+        // The same 4 verbs through one doorbell: their summed wire time is
+        // under the floor, so the whole batch costs ONE floor charge.
+        let mut batched = Ingress::new(Timing::default(), 1);
+        let wire4 = batched.timing.wire(16) * 4;
+        assert!(wire4 < floor, "premise: tiny verbs are floor-bound");
+        assert_eq!(batched.admit_batch(0, &[16, 16, 16, 16]), 0);
+        assert_eq!(batched.admit(0, 16), floor, "next op queues one floor, not four");
+        // `admitted` counts ops either way; waits are charged per op.
+        assert_eq!(per_op.stats().admitted, 4);
+        assert_eq!(batched.stats().admitted, 5);
+        let b = batched.admit_batch(0, &[16, 16]);
+        assert_eq!(b, 2 * floor);
+        assert_eq!(batched.stats().wait_ns, floor as u128 + 2 * 2 * floor as u128);
+    }
+
+    #[test]
+    fn one_element_batch_is_plain_admit() {
+        let mut a = Ingress::new(Timing::default(), 2);
+        let mut b = Ingress::new(Timing::default(), 2);
+        for (t, bytes) in [(0, 4096), (10, 64), (10, 4096), (900, 16)] {
+            assert_eq!(a.admit(t, bytes), b.admit_batch(t, &[bytes]));
+        }
+        assert_eq!(a.stats().admitted, b.stats().admitted);
+        assert_eq!(a.stats().wait_ns, b.stats().wait_ns);
     }
 
     #[test]

@@ -15,18 +15,30 @@
 //! `(time, seq)` only, same-instant completions from different shards
 //! drain in the order their verbs were posted — the same deterministic
 //! tie-break the engine applies across shards.
+//!
+//! The backing queue is pluggable like the engine's
+//! ([`crate::sim::queue`]); both kinds pop the identical `(time, seq)`
+//! order, so the choice never changes a drain sequence.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
+use super::queue::{EventQueue, HeapQueue, SchedulerKind, TieredQueue};
 use super::Time;
+
+/// Lane count for a tiered-backed set: windows are small (tens of lanes),
+/// so a handful of sub-heaps is plenty.
+const TIERED_LANES: usize = 8;
 
 /// Deterministic per-actor completion queue: tokens become due at absolute
 /// virtual times; same-time tokens drain in registration (FIFO) order.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct CompletionSet {
-    heap: BinaryHeap<Reverse<(Time, u64, usize)>>,
+    queue: Box<dyn EventQueue>,
     seq: u64,
+}
+
+impl Default for CompletionSet {
+    fn default() -> Self {
+        CompletionSet { queue: Box::new(HeapQueue::new()), seq: 0 }
+    }
 }
 
 impl CompletionSet {
@@ -34,22 +46,33 @@ impl CompletionSet {
         Self::default()
     }
 
+    /// A set backed by the given scheduler kind (identical drain order
+    /// either way; see module doc).
+    pub fn with_kind(kind: SchedulerKind) -> Self {
+        let queue: Box<dyn EventQueue> = match kind {
+            SchedulerKind::Heap => Box::new(HeapQueue::new()),
+            SchedulerKind::Tiered => Box::new(TieredQueue::new(TIERED_LANES)),
+        };
+        CompletionSet { queue, seq: 0 }
+    }
+
     /// Register `token` to complete at absolute time `at`.
     pub fn arm(&mut self, token: usize, at: Time) {
-        self.heap.push(Reverse((at, self.seq, token)));
+        self.queue.push((at, self.seq, token));
         self.seq += 1;
     }
 
-    /// Earliest due time of any armed token.
-    pub fn next_due(&self) -> Option<Time> {
-        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    /// Earliest due time of any armed token. (`&mut` because a lazily
+    /// maintained queue settles its bookkeeping to answer exactly.)
+    pub fn next_due(&mut self) -> Option<Time> {
+        self.queue.peek().map(|(t, _, _)| t)
     }
 
     /// Pop the next token if it is due at or before `now`.
     pub fn pop_due(&mut self, now: Time) -> Option<usize> {
-        match self.heap.peek() {
-            Some(Reverse((t, _, _))) if *t <= now => {
-                let Reverse((_, _, tok)) = self.heap.pop().expect("peeked");
+        match self.queue.peek() {
+            Some((t, _, _)) if t <= now => {
+                let (_, _, tok) = self.queue.pop().expect("peeked");
                 Some(tok)
             }
             _ => None,
@@ -58,11 +81,11 @@ impl CompletionSet {
 
     /// Number of armed tokens.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.queue.is_empty()
     }
 }
 
@@ -103,5 +126,20 @@ mod tests {
         c.arm(0, 20);
         assert_eq!(c.len(), 1);
         assert_eq!(c.pop_due(20), Some(0));
+    }
+
+    #[test]
+    fn both_backends_drain_identically() {
+        let drain = |mut c: CompletionSet| -> Vec<usize> {
+            for (tok, at) in [(4usize, 70), (0, 10), (2, 70), (7, 30), (1, 10)] {
+                c.arm(tok, at);
+            }
+            assert_eq!(c.next_due(), Some(10));
+            std::iter::from_fn(|| c.pop_due(100)).collect()
+        };
+        let heap = drain(CompletionSet::with_kind(SchedulerKind::Heap));
+        let tiered = drain(CompletionSet::with_kind(SchedulerKind::Tiered));
+        assert_eq!(heap, tiered);
+        assert_eq!(heap, vec![0, 1, 7, 4, 2]);
     }
 }

@@ -20,11 +20,18 @@
 //! global event order is exactly what a dedicated per-shard engine would
 //! have executed. The contract is written out in full — alongside the layer
 //! map it anchors — in `docs/ARCHITECTURE.md`.
+//!
+//! The queue behind the engine is pluggable ([`crate::sim::queue`]): the
+//! legacy global `BinaryHeap` or the default tiered per-lane scheduler.
+//! Both pop the exact `(time, seq)` minimum, so the choice never changes
+//! results — only the simulator's own wall-clock cost at scale.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
+use super::queue::{EventQueue, SchedulerKind};
 use super::Time;
+
+/// Lane count for the default tiered queue when the caller does not pick
+/// one (the cluster driver passes its world count instead).
+const DEFAULT_LANES: usize = 16;
 
 /// What an actor wants after a step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,12 +48,12 @@ pub trait Actor<S> {
     fn step(&mut self, state: &mut S, now: Time) -> Step;
 }
 
-/// Discrete-event engine: heap of (time, seq, actor) with FIFO tie-breaking.
+/// Discrete-event engine: queue of (time, seq, actor) with FIFO tie-breaking.
 pub struct Engine<S> {
     /// Shared world: substrates (NVM, fabric, CPU pool), server state, metrics.
     pub state: S,
     actors: Vec<Box<dyn Actor<S>>>,
-    heap: BinaryHeap<Reverse<(Time, u64, usize)>>,
+    queue: Box<dyn EventQueue>,
     now: Time,
     seq: u64,
     events: u64,
@@ -54,15 +61,29 @@ pub struct Engine<S> {
 
 impl<S> Engine<S> {
     pub fn new(state: S) -> Self {
-        Engine { state, actors: Vec::new(), heap: BinaryHeap::new(), now: 0, seq: 0, events: 0 }
+        Self::with_queue(state, SchedulerKind::default().queue(DEFAULT_LANES))
     }
 
-    /// Register an actor; it first runs at time `at`.
+    /// An engine over an explicit event queue (see [`SchedulerKind`]).
+    pub fn with_queue(state: S, queue: Box<dyn EventQueue>) -> Self {
+        Engine { state, actors: Vec::new(), queue, now: 0, seq: 0, events: 0 }
+    }
+
+    /// Enqueue actor `id` at `at`, clamped to `now`: a stale timestamp
+    /// (e.g. an actor spawned with a start time the run has already
+    /// passed) fires immediately instead of violating the time order.
+    fn schedule(&mut self, id: usize, at: Time) {
+        let at = at.max(self.now);
+        self.queue.push((at, self.seq, id));
+        self.seq += 1;
+    }
+
+    /// Register an actor; it first runs at time `at` (or `now`, if `at`
+    /// is already in the past).
     pub fn spawn(&mut self, actor: Box<dyn Actor<S>>, at: Time) -> usize {
         let id = self.actors.len();
         self.actors.push(actor);
-        self.heap.push(Reverse((at, self.seq, id)));
-        self.seq += 1;
+        self.schedule(id, at);
         id
     }
 
@@ -76,25 +97,29 @@ impl<S> Engine<S> {
         self.events
     }
 
-    /// Run until the heap drains or `deadline` (virtual) is passed.
+    /// Event-queue traffic so far: `(pushes, pops)`.
+    pub fn sched_stats(&self) -> (u64, u64) {
+        (self.queue.pushes(), self.queue.pops())
+    }
+
+    /// Run until the queue drains or `deadline` (virtual) is passed.
     /// Returns the virtual time of the last executed event.
     pub fn run_until(&mut self, deadline: Time) -> Time {
-        while let Some(&Reverse((t, _, _))) = self.heap.peek() {
+        while let Some((t, _, _)) = self.queue.peek() {
             if t > deadline {
                 break;
             }
-            let Reverse((t, _, id)) = self.heap.pop().expect("peeked");
+            let (t, _, id) = self.queue.pop().expect("peeked");
             debug_assert!(t >= self.now, "time went backwards: {t} < {}", self.now);
             self.now = t;
             self.events += 1;
             match self.actors[id].step(&mut self.state, t) {
                 Step::At(next) => {
-                    assert!(
+                    debug_assert!(
                         next >= t,
                         "actor {id} scheduled into the past: {next} < {t}"
                     );
-                    self.heap.push(Reverse((next, self.seq, id)));
-                    self.seq += 1;
+                    self.schedule(id, next);
                 }
                 Step::Done => {}
             }
@@ -109,7 +134,7 @@ impl<S> Engine<S> {
 
     /// Number of actors still scheduled.
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        self.queue.len()
     }
 }
 
@@ -213,5 +238,73 @@ mod tests {
         let end = e.run();
         assert_eq!(end, e.now());
         assert!(e.events() >= 70);
+    }
+
+    #[test]
+    fn late_spawned_actor_is_clamped_to_now() {
+        // Spawning with a start time the run has already passed must not
+        // push the clock backwards: the actor fires at `now` instead.
+        let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let mut e = Engine::new(0u64);
+        e.spawn(Box::new(Counter { ticks: 5, period: 10, log: log.clone(), id: 0 }), 0);
+        e.run_until(40); // clock now at 40
+        e.spawn(Box::new(Counter { ticks: 0, period: 1, log: log.clone(), id: 9 }), 7);
+        e.run();
+        let nine: Vec<Time> = log
+            .borrow()
+            .iter()
+            .filter(|&&(_, id)| id == 9)
+            .map(|&(t, _)| t)
+            .collect();
+        assert_eq!(nine, vec![40], "stale spawn time must clamp to now");
+        let times: Vec<Time> = log.borrow().iter().map(|&(t, _)| t).collect();
+        let mut sorted = times.clone();
+        sorted.sort();
+        assert_eq!(times, sorted, "clamping must preserve time order");
+    }
+
+    struct PastScheduler;
+
+    impl Actor<u64> for PastScheduler {
+        fn step(&mut self, _state: &mut u64, now: Time) -> Step {
+            if now < 10 {
+                Step::At(now + 10)
+            } else {
+                Step::At(now - 5) // bug: reschedules into the past
+            }
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "scheduled into the past")]
+    fn rescheduling_into_the_past_is_caught_in_debug() {
+        let mut e = Engine::new(0u64);
+        e.spawn(Box::new(PastScheduler), 0);
+        e.run_until(50);
+    }
+
+    #[test]
+    fn heap_and_tiered_queues_replay_identically() {
+        // The engine-level restatement of the queue equivalence: the same
+        // actor population produces a bit-identical execution log under
+        // both schedulers.
+        let run = |kind: crate::sim::SchedulerKind| -> (Vec<(Time, u32)>, u64, Time) {
+            let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+            let mut e = Engine::with_queue(0u64, kind.queue(4));
+            for id in 0..12u32 {
+                let period = 3 + (id as Time % 5);
+                e.spawn(
+                    Box::new(Counter { ticks: 20, period, log: log.clone(), id }),
+                    id as Time % 3,
+                );
+            }
+            let end = e.run();
+            let v = log.borrow().clone();
+            (v, e.events(), end)
+        };
+        let heap = run(crate::sim::SchedulerKind::Heap);
+        let tiered = run(crate::sim::SchedulerKind::Tiered);
+        assert_eq!(heap, tiered, "schedulers must be bit-for-bit equivalent");
     }
 }

@@ -16,12 +16,14 @@
 
 pub mod completion;
 pub mod engine;
+pub mod queue;
 pub mod resource;
 pub mod rng;
 pub mod timing;
 
 pub use completion::CompletionSet;
 pub use engine::{Actor, Engine, Step};
+pub use queue::{Event, EventQueue, HeapQueue, SchedulerKind, TieredQueue};
 pub use resource::CpuPool;
 pub use rng::Rng;
 pub use timing::Timing;

@@ -1,0 +1,351 @@
+//! Pluggable event queues behind the discrete-event engine.
+//!
+//! The engine's ordering contract is a single total order over scheduled
+//! events: ascending `(time, seq)`, where `seq` is an engine-wide counter
+//! assigned at scheduling time (so same-instant events fire FIFO). Any
+//! [`EventQueue`] implementation must pop the exact global minimum under
+//! that order — the two implementations here are therefore bit-for-bit
+//! interchangeable, and the equivalence is pinned by tests at every layer
+//! (this module, `sim::engine`, `store::cluster`, `rust/tests/`).
+//!
+//! - [`HeapQueue`] is the legacy single `BinaryHeap`: O(log n) in *all*
+//!   pending events across every world.
+//! - [`TieredQueue`] shards events into per-lane sub-heaps (lane =
+//!   `actor_id % lanes`; the cluster driver passes one lane per world)
+//!   merged by a small top heap of lane heads, so the pop path is
+//!   O(log lanes + log per-lane-pending) — at thousands of clients across
+//!   dozens of shards the top heap stays tiny while each sub-heap holds
+//!   only its own world's events.
+//!
+//! The top heap holds *snapshots* of lane heads and is maintained lazily:
+//! a push that becomes its lane's new head also pushes a `(time, seq,
+//! lane)` snapshot; stale snapshots (the event they describe is no longer
+//! the lane head, because it was popped or was never re-observed as head)
+//! are discarded on the way out by comparing the globally-unique `seq`
+//! against the lane's current head. Lazy invalidation is why [`peek`]
+//! takes `&mut self`: answering "what fires next" may first need to purge
+//! stale snapshots, and an unpurged answer could claim an earlier time
+//! than any real pending event (which would break `run_until`'s deadline
+//! check).
+//!
+//! [`peek`]: EventQueue::peek
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::Time;
+
+/// One scheduled event: `(fire_time, engine-wide seq, actor id)`.
+pub type Event = (Time, u64, usize);
+
+/// A priority queue over [`Event`]s that pops the global `(time, seq)`
+/// minimum. Implementations also count traffic so `RunStats` can report
+/// scheduler pressure (`sched_pushes`/`sched_pops`).
+pub trait EventQueue: std::fmt::Debug {
+    /// Enqueue an event.
+    fn push(&mut self, e: Event);
+    /// Remove and return the `(time, seq)` minimum, if any.
+    fn pop(&mut self) -> Option<Event>;
+    /// The `(time, seq)` minimum without removing it. Takes `&mut self`
+    /// because lazily-maintained implementations purge stale bookkeeping
+    /// before they can answer exactly.
+    fn peek(&mut self) -> Option<Event>;
+    /// Number of pending events.
+    fn len(&self) -> usize;
+    /// True when no events are pending.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Total events ever pushed.
+    fn pushes(&self) -> u64;
+    /// Total events ever popped.
+    fn pops(&self) -> u64;
+}
+
+/// The legacy implementation: one global min-heap over every pending
+/// event. Simple and allocation-light; O(log total-pending) per op.
+#[derive(Debug, Default)]
+pub struct HeapQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    pushes: u64,
+    pops: u64,
+}
+
+impl HeapQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EventQueue for HeapQueue {
+    fn push(&mut self, e: Event) {
+        self.heap.push(Reverse(e));
+        self.pushes += 1;
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        let Reverse(e) = self.heap.pop()?;
+        self.pops += 1;
+        Some(e)
+    }
+
+    fn peek(&mut self) -> Option<Event> {
+        self.heap.peek().map(|&Reverse(e)| e)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    fn pops(&self) -> u64 {
+        self.pops
+    }
+}
+
+/// Per-lane sub-heaps merged by a small top heap of lane-head snapshots.
+///
+/// Invariant: every non-empty lane's current head has at least one
+/// snapshot in the top heap (a snapshot is pushed whenever an event
+/// *becomes* its lane's head — at push time, or when a pop exposes it).
+/// Snapshots can be stale or duplicated; `settle` discards any whose
+/// `seq` no longer matches the lane head's (seqs are globally unique, so
+/// equality means the snapshot IS the head).
+#[derive(Debug)]
+pub struct TieredQueue {
+    lanes: Vec<BinaryHeap<Reverse<Event>>>,
+    /// `(time, seq, actor, lane)` snapshots of lane heads, min-first.
+    /// Carrying the full event lets `peek` answer without touching the
+    /// lane; `seq` is globally unique so `(time, seq)` alone orders.
+    top: BinaryHeap<Reverse<(Time, u64, usize, usize)>>,
+    len: usize,
+    pushes: u64,
+    pops: u64,
+}
+
+impl TieredQueue {
+    /// A queue with `lanes` sub-heaps (clamped to at least one); events
+    /// land in lane `actor_id % lanes`.
+    pub fn new(lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        TieredQueue {
+            lanes: (0..lanes).map(|_| BinaryHeap::new()).collect(),
+            top: BinaryHeap::new(),
+            len: 0,
+            pushes: 0,
+            pops: 0,
+        }
+    }
+
+    /// Drop stale top-heap snapshots until the top entry describes the
+    /// actual head of its lane (or the top heap is empty).
+    fn settle(&mut self) {
+        while let Some(&Reverse((_, seq, _, lane))) = self.top.peek() {
+            match self.lanes[lane].peek() {
+                Some(&Reverse((_, head_seq, _))) if head_seq == seq => return,
+                _ => {
+                    self.top.pop();
+                }
+            }
+        }
+    }
+}
+
+impl EventQueue for TieredQueue {
+    fn push(&mut self, e: Event) {
+        let (t, seq, id) = e;
+        let lane = id % self.lanes.len();
+        let was_head = match self.lanes[lane].peek() {
+            None => true,
+            Some(&Reverse(head)) => (t, seq) < (head.0, head.1),
+        };
+        self.lanes[lane].push(Reverse(e));
+        if was_head {
+            self.top.push(Reverse((t, seq, id, lane)));
+        }
+        self.len += 1;
+        self.pushes += 1;
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        self.settle();
+        let Reverse((_, _, _, lane)) = self.top.pop()?;
+        let Reverse(e) = self.lanes[lane].pop().expect("settled head exists");
+        if let Some(&Reverse((t, seq, id))) = self.lanes[lane].peek() {
+            self.top.push(Reverse((t, seq, id, lane)));
+        }
+        self.len -= 1;
+        self.pops += 1;
+        Some(e)
+    }
+
+    fn peek(&mut self) -> Option<Event> {
+        self.settle();
+        self.top.peek().map(|&Reverse((t, seq, id, _))| (t, seq, id))
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    fn pops(&self) -> u64 {
+        self.pops
+    }
+}
+
+/// Which [`EventQueue`] implementation a run uses. Both produce identical
+/// results (same `(time, seq)` pop order); the choice only affects the
+/// simulator's own wall-clock cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// The legacy single global `BinaryHeap`.
+    Heap,
+    /// Per-lane sub-heaps merged by a small top heap (the default).
+    #[default]
+    Tiered,
+}
+
+impl SchedulerKind {
+    /// Build a queue of this kind; `lanes` sizes the tiered variant
+    /// (callers pass the world count) and is ignored by the heap.
+    pub fn queue(self, lanes: usize) -> Box<dyn EventQueue> {
+        match self {
+            SchedulerKind::Heap => Box::new(HeapQueue::new()),
+            SchedulerKind::Tiered => Box::new(TieredQueue::new(lanes)),
+        }
+    }
+
+    /// Parse a CLI spelling (`heap` | `tiered`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "heap" => Some(SchedulerKind::Heap),
+            "tiered" => Some(SchedulerKind::Tiered),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        for q in [
+            &mut HeapQueue::new() as &mut dyn EventQueue,
+            &mut TieredQueue::new(4),
+        ] {
+            q.push((30, 0, 2));
+            q.push((10, 1, 7));
+            q.push((30, 2, 2));
+            q.push((20, 3, 1));
+            q.push((10, 4, 3));
+            let order: Vec<Event> = std::iter::from_fn(|| q.pop()).collect();
+            assert_eq!(
+                order,
+                vec![(10, 1, 7), (10, 4, 3), (20, 3, 1), (30, 0, 2), (30, 2, 2)]
+            );
+            assert_eq!(q.pushes(), 5);
+            assert_eq!(q.pops(), 5);
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn peek_matches_pop_under_interleaving() {
+        let mut q = TieredQueue::new(3);
+        let mut seq = 0u64;
+        let mut push = |q: &mut TieredQueue, t: Time, id: usize| {
+            q.push((t, seq, id));
+            seq += 1;
+        };
+        push(&mut q, 50, 0);
+        push(&mut q, 40, 1);
+        assert_eq!(q.peek(), Some((40, 1, 1)));
+        // A later push to the same lane that undercuts the old head must
+        // be visible through peek immediately (fresh snapshot wins).
+        push(&mut q, 10, 4); // lane 1 again
+        assert_eq!(q.peek(), Some((10, 2, 4)));
+        assert_eq!(q.pop(), Some((10, 2, 4)));
+        // The stale (40, 1) snapshot was superseded, then the pop exposed
+        // (40, 1) as head again — settle must still find it.
+        assert_eq!(q.peek(), Some((40, 1, 1)));
+        assert_eq!(q.pop(), Some((40, 1, 1)));
+        assert_eq!(q.pop(), Some((50, 0, 0)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.peek(), None);
+    }
+
+    #[test]
+    fn single_lane_degenerates_to_one_heap() {
+        let mut q = TieredQueue::new(1);
+        for (i, t) in [90u64, 10, 50, 10, 70].into_iter().enumerate() {
+            q.push((t, i as u64, i));
+        }
+        let times: Vec<Time> = std::iter::from_fn(|| q.pop()).map(|e| e.0).collect();
+        assert_eq!(times, vec![10, 10, 50, 70, 90]);
+    }
+
+    #[test]
+    fn zero_lane_request_is_clamped() {
+        let mut q = TieredQueue::new(0);
+        q.push((5, 0, 3));
+        assert_eq!(q.pop(), Some((5, 0, 3)));
+    }
+
+    /// The load-bearing property: under a random interleaving of pushes
+    /// and pops the tiered queue's pop stream is bit-identical to the
+    /// reference heap's.
+    #[test]
+    fn fuzz_equivalence_with_heap() {
+        let mut rng = Rng::new(0xE2DA_0007);
+        for lanes in [1usize, 3, 8, 64] {
+            let mut heap = HeapQueue::new();
+            let mut tiered = TieredQueue::new(lanes);
+            let mut seq = 0u64;
+            for _ in 0..2_000 {
+                if rng.gen_bool(0.6) || heap.is_empty() {
+                    // Non-monotone times on purpose: the queue itself
+                    // imposes no clock, only the engine does.
+                    let e = (rng.gen_range(1_000), seq, rng.gen_range(40) as usize);
+                    seq += 1;
+                    heap.push(e);
+                    tiered.push(e);
+                } else {
+                    assert_eq!(tiered.peek(), heap.peek());
+                    assert_eq!(tiered.pop(), heap.pop());
+                }
+                assert_eq!(tiered.len(), heap.len());
+            }
+            while !heap.is_empty() {
+                assert_eq!(tiered.pop(), heap.pop());
+            }
+            assert!(tiered.is_empty());
+            assert_eq!(tiered.pushes(), heap.pushes());
+            assert_eq!(tiered.pops(), heap.pops());
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(SchedulerKind::parse("heap"), Some(SchedulerKind::Heap));
+        assert_eq!(SchedulerKind::parse("tiered"), Some(SchedulerKind::Tiered));
+        assert_eq!(SchedulerKind::parse("calendar"), None);
+        assert_eq!(SchedulerKind::default(), SchedulerKind::Tiered);
+        let mut q = SchedulerKind::Heap.queue(4);
+        q.push((1, 0, 0));
+        assert_eq!(q.pop(), Some((1, 0, 0)));
+        let mut q = SchedulerKind::Tiered.queue(4);
+        q.push((1, 0, 0));
+        assert_eq!(q.pop(), Some((1, 0, 0)));
+    }
+}

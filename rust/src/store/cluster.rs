@@ -167,6 +167,28 @@ impl ClusterBuilder {
         self
     }
 
+    /// Which event-queue implementation drives the co-sim engine (and the
+    /// windowed clients' completion sets): the tiered per-world scheduler
+    /// (default) or the legacy global binary heap. Results are bit-for-bit
+    /// identical either way — both pop the exact `(time, seq)` order — so
+    /// this only trades the simulator's own wall-clock cost.
+    pub fn scheduler(mut self, kind: crate::sim::SchedulerKind) -> Self {
+        self.cfg.scheduler = kind;
+        self
+    }
+
+    /// Doorbell batching: coalesce up to `n` ready ops of one client's
+    /// window into ONE posted ingress batch — one posting floor plus the
+    /// summed wire time, all ops sharing the admission instant, the way
+    /// real RNICs are driven. 1 (default) = per-op admission, bit-for-bit
+    /// the pre-batching path. Mirror legs stay per-leg admitted (they ring
+    /// as each primary persist lands, not in ready groups).
+    pub fn doorbell_batch(mut self, n: usize) -> Self {
+        assert!(n >= 1, "a doorbell batch coalesces at least one op");
+        self.cfg.doorbell_batch = n;
+        self
+    }
+
     /// YCSB mix for the closed-loop clients.
     pub fn workload(mut self, wl: Workload) -> Self {
         self.cfg.workload.workload = wl;
@@ -437,6 +459,7 @@ impl Cluster {
             || cfg.ingress_channels.is_some()
             || cfg.mirrored
             || cfg.reshard.is_some()
+            || cfg.doorbell_batch > 1
     }
 
     /// The open-loop arrival generator for client `c` (None = closed loop).
@@ -657,8 +680,13 @@ impl Cluster {
                 as u32;
             worlds.push(w);
         }
-        let mut engine =
-            Engine::new(ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), primaries));
+        // One event lane per world: cluster traffic is keyed by actor, and
+        // worlds are the natural sharding of same-instant activity.
+        let lanes = worlds.len();
+        let mut engine = Engine::with_queue(
+            ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), primaries),
+            cfg.scheduler.queue(lanes),
+        );
         // The router's base count is the ORIGINAL shard count — preload and
         // plan-free routing must stay bit-for-bit `shard_of(key, shards)`
         // even when the world vector grew for a scale-out destination.
@@ -683,7 +711,9 @@ impl Cluster {
                     Self::client_arrivals(cfg, c),
                     primaries,
                     cfg.mirrored,
-                );
+                )
+                .scheduler(cfg.scheduler)
+                .doorbell(cfg.doorbell_batch);
                 engine.spawn(Box::new(client), 0);
             }
         } else {
@@ -732,8 +762,11 @@ impl Cluster {
                 as u32;
             worlds.push(w);
         }
-        let mut engine =
-            Engine::new(ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), primaries));
+        let lanes = worlds.len();
+        let mut engine = Engine::with_queue(
+            ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), primaries),
+            cfg.scheduler.queue(lanes),
+        );
         engine.state.router = SlotRouter::identity(shards);
         engine.spawn(Box::new(Marker), cfg.warmup);
         Self::spawn_migration(&mut engine, cfg);
@@ -754,7 +787,9 @@ impl Cluster {
                     Self::client_arrivals(cfg, c),
                     primaries,
                     cfg.mirrored,
-                );
+                )
+                .scheduler(cfg.scheduler)
+                .doorbell(cfg.doorbell_batch);
                 engine.spawn(Box::new(client), 0);
             }
         } else {
@@ -790,6 +825,7 @@ impl Cluster {
     ) -> RunOutcome {
         let events = engine.events();
         let ingress_stats = engine.state.ingress_stats();
+        let sched = engine.sched_stats();
         let ClusterState { worlds, primaries, shard_events, router, .. } = engine.state;
         let mut merged = Counters::default();
         let mut cpu_total: u128 = 0;
@@ -820,7 +856,8 @@ impl Cluster {
         }
         let stats = RunStats::collect(&merged, cpu_total, nvm_total, events)
             .with_ingress(ingress_stats)
-            .with_mirror_nvm(mirror_nvm);
+            .with_mirror_nvm(mirror_nvm)
+            .with_scheduler(sched.0, sched.1);
         let mut db = Db::merge_shards(primary_dbs);
         if !mirror_dbs.is_empty() {
             db.attach_mirrors(mirror_dbs);
@@ -942,6 +979,78 @@ mod tests {
         assert_eq!(a.ops, b.ops);
         assert_eq!(a.duration_ns, b.duration_ns);
         assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
+    }
+
+    #[test]
+    fn heap_and_tiered_schedulers_run_bit_for_bit() {
+        // The builder-level face of the tiered-queue refactor: the same
+        // sharded, windowed, ingress-metered run under either scheduler
+        // kind is indistinguishable down to the latency stream and the
+        // settled store. Only the push/pop counters may (and need not)
+        // differ in cost, never in count — both kinds see the same events.
+        let run = |kind: crate::sim::SchedulerKind| {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(3)
+                .clients(6)
+                .window(4)
+                .ingress(2)
+                .ops_per_client(80)
+                .records(48)
+                .value_size(64)
+                .warmup(0)
+                .scheduler(kind)
+                .run()
+                .unwrap()
+        };
+        let heap = run(crate::sim::SchedulerKind::Heap);
+        let tiered = run(crate::sim::SchedulerKind::Tiered);
+        assert_eq!(heap.stats.ops, tiered.stats.ops);
+        assert_eq!(heap.stats.duration_ns, tiered.stats.duration_ns);
+        assert_eq!(heap.stats.events, tiered.stats.events);
+        assert_eq!(heap.stats.latency.count(), tiered.stats.latency.count());
+        assert_eq!(heap.stats.latency.mean_ns(), tiered.stats.latency.mean_ns());
+        assert_eq!(heap.stats.nvm_programmed_bytes, tiered.stats.nvm_programmed_bytes);
+        assert_eq!(heap.stats.sched_pushes, tiered.stats.sched_pushes);
+        assert_eq!(heap.stats.sched_pops, tiered.stats.sched_pops);
+        assert!(heap.stats.sched_pops > 0, "scheduler counters are surfaced");
+        let mut hd = heap.db;
+        let mut td = tiered.db;
+        for r in 0..48u64 {
+            let k = key_of(crate::ycsb::zipf::scrambled_id(r, 48));
+            assert_eq!(hd.get(&k).unwrap(), td.get(&k).unwrap(), "key {r} diverged");
+        }
+    }
+
+    #[test]
+    fn doorbell_batching_keeps_totals_and_records_posts() {
+        // doorbell_batch(1) IS the default path (bit-for-bit); a real batch
+        // width keeps every op-count invariant and surfaces its coalescing
+        // in the batch counters.
+        let run = |n: usize| {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(2)
+                .clients(4)
+                .window(8)
+                .ingress(1)
+                .ops_per_client(60)
+                .records(32)
+                .value_size(64)
+                .warmup(0)
+                .doorbell_batch(n)
+                .run()
+                .unwrap()
+                .stats
+        };
+        let plain = run(1);
+        let batched = run(4);
+        assert_eq!(plain.batched_posts, 0, "width 1 never reports batches");
+        assert_eq!(plain.ops, batched.ops, "batching never changes the op total");
+        assert_eq!(plain.ingress_admitted, batched.ingress_admitted, "admitted counts ops");
+        assert!(batched.batched_posts > 0, "width 4 coalesces at least one post");
+        assert!(batched.mean_batch_size() > 1.0, "batches carry more than one op");
+        assert_eq!(batched.batched_ops, plain.ops, "every measured op rode a doorbell");
     }
 
     #[test]

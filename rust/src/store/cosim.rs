@@ -95,6 +95,16 @@ impl<W> ClusterState<W> {
         }
     }
 
+    /// Admit a doorbell-batched post of first-verb sizes through the
+    /// shared NIC ([`Ingress::admit_batch`]): one posting floor, summed
+    /// wire time, one shared admission instant. `now` when unmetered.
+    pub fn admit_batch(&mut self, now: Time, bytes: &[usize]) -> Time {
+        match &mut self.ingress {
+            None => now,
+            Some(q) => q.admit_batch(now, bytes),
+        }
+    }
+
     pub fn ingress_stats(&self) -> IngressStats {
         self.ingress.as_ref().map(|q| q.stats()).unwrap_or_default()
     }

@@ -66,7 +66,7 @@ use crate::baselines::BaselineWorld;
 use crate::erda::{ClientConfig, ErdaWorld};
 use crate::metrics::Counters;
 use crate::nvm::WriteStats;
-use crate::sim::{Actor, CompletionSet, Step, Time};
+use crate::sim::{Actor, CompletionSet, SchedulerKind, Step, Time};
 use crate::store::cosim::ClusterState;
 use crate::store::reshard::{slot_of, SlotRouter, MIGRATION_QUANTUM};
 use crate::store::{OpSource, Request};
@@ -247,6 +247,11 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     routes: Vec<Option<Route>>,
     /// Completion tokens: lane index → due instant.
     due: CompletionSet,
+    /// Doorbell batch size: up to this many ready ops coalesce into one
+    /// posted ingress batch per gather round. 1 = per-op admission
+    /// (bit-for-bit the pre-batching path: each round stages one op and
+    /// one-element batches admit identically).
+    batch: usize,
     alive: bool,
 }
 
@@ -274,8 +279,25 @@ impl<D: OpDriver> PipelinedClient<D> {
             lanes: (0..window).map(|_| None).collect(),
             routes: (0..window).map(|_| None).collect(),
             due: CompletionSet::new(),
+            batch: 1,
             alive: true,
         }
+    }
+
+    /// Coalesce up to `n` ready ops into one doorbell-batched ingress post
+    /// per gather round (1 = legacy per-op admission, bit for bit).
+    pub fn doorbell(mut self, n: usize) -> Self {
+        self.batch = n.max(1);
+        self
+    }
+
+    /// Back the lane completion set with the given scheduler kind (call at
+    /// construction, before any op is in flight; drain order is identical
+    /// either way).
+    pub fn scheduler(mut self, kind: SchedulerKind) -> Self {
+        debug_assert!(self.due.is_empty(), "swap the completion set before arming lanes");
+        self.due = CompletionSet::with_kind(kind);
+        self
     }
 
     /// Client leaves the run: a cluster-level client counts as active on
@@ -306,14 +328,17 @@ impl<D: OpDriver> PipelinedClient<D> {
     /// same key? Writes need the key fully quiet; reads wait only for
     /// in-flight writes (read-read shares the window). A mirrored write
     /// holds its lane — and therefore this gate — until the mirror leg
-    /// persisted too.
-    fn key_blocked(&self, req: &Request) -> bool {
+    /// persisted too. Ops staged for the current doorbell batch gate
+    /// exactly like in-flight ones (they are committed to issue, just not
+    /// begun yet); the per-op path always passes an empty stage.
+    fn key_blocked(&self, req: &Request, staged: &[(usize, Request, Time)]) -> bool {
         let key = req.key();
         let write = is_write(req);
         self.routes
             .iter()
             .flatten()
             .any(|r| (write || r.write) && r.key.as_slice() == key)
+            || staged.iter().any(|(_, r, _)| (write || is_write(r)) && r.key() == key)
     }
 
     /// Is an earlier op on this key still parked in the pending queue?
@@ -322,27 +347,31 @@ impl<D: OpDriver> PipelinedClient<D> {
         self.pending.iter().any(|(r, _, _)| r.key() == key)
     }
 
-    fn free_lane(&self) -> Option<usize> {
-        self.lanes.iter().position(|l| l.is_none())
+    /// First lane that is neither in flight nor claimed by the stage.
+    fn free_lane(&self, staged: &[(usize, Request, Time)]) -> Option<usize> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .position(|(i, l)| l.is_none() && !staged.iter().any(|&(lane, _, _)| lane == i))
     }
 
-    /// Issue `req` on `lane`: admit through the shared client NIC, route to
-    /// the key's shard, post the first verb. Returns false if the client
-    /// crashed (Redo's CrashDuringPut dies before any verb posts).
-    fn issue_on(
+    /// Post the first verb of an already-admitted `req` on `lane`: route
+    /// to the key's shard and start the op state machine. Returns false if
+    /// the client crashed (Redo's CrashDuringPut dies before any verb
+    /// posts — the admission stays charged, the doorbell already rang).
+    fn begin_on(
         &mut self,
         s: &mut ClusterState<D::World>,
         lane: usize,
         req: Request,
         start: Time,
-        now: Time,
+        admitted: Time,
     ) -> bool {
         let key = req.key().to_vec();
         let write = is_write(&req);
         let (slot, shard) = s.router.route(&key);
         let epoch = s.router.table.epoch();
         let mirror = if self.mirrored { crate::store::mirror::replicate(&req) } else { None };
-        let admitted = s.admit(now, ingress_bytes(&req));
         match self.driver.begin(&mut s.worlds[shard], req, start, admitted) {
             OpOutcome::Continue(st, at) => {
                 s.router.note_issue(slot);
@@ -362,14 +391,18 @@ impl<D: OpDriver> PipelinedClient<D> {
     /// earlier pending entry shares a key with (per-key FIFO within the
     /// queue; skipping blocked keys reorders across keys — allowed — never
     /// within one key).
-    fn next_issuable_pending(&self, router: &SlotRouter) -> Option<usize> {
+    fn next_issuable_pending(
+        &self,
+        router: &SlotRouter,
+        staged: &[(usize, Request, Time)],
+    ) -> Option<usize> {
         let mut seen: Vec<&[u8]> = Vec::new();
         for (i, (r, _, _)) in self.pending.iter().enumerate() {
             let key = r.key();
             if seen.iter().any(|s| *s == key) {
                 continue;
             }
-            if !self.key_blocked(r) && !router.blocked(slot_of(key)) {
+            if !self.key_blocked(r, staged) && !router.blocked(slot_of(key)) {
                 return Some(i);
             }
             seen.push(key);
@@ -377,29 +410,23 @@ impl<D: OpDriver> PipelinedClient<D> {
         None
     }
 
-    /// Fill free lanes: oldest issuable pending op first, then (closed loop
-    /// only) fresh draws from the source. Returns false on client crash.
-    fn issue_pass(&mut self, s: &mut ClusterState<D::World>, now: Time) -> bool {
-        // A migration fence is up: every queued op parked behind it counts
-        // as bounced exactly once (it re-issues under the post-flip epoch).
-        if s.router.fenced().is_some() {
-            for (req, _, bounced) in self.pending.iter_mut() {
-                if !*bounced {
-                    let (slot, shard) = s.router.route(req.key());
-                    if s.router.blocked(slot) {
-                        *bounced = true;
-                        s.worlds[shard].counters_mut().record_bounce(now);
-                    }
-                }
-            }
-        }
-        'lanes: while let Some(lane) = self.free_lane() {
-            if let Some(i) = self.next_issuable_pending(&s.router) {
+    /// Gather up to `batch` ready ops — one per free lane, oldest issuable
+    /// pending first, then (closed loop only) fresh draws — WITHOUT
+    /// admitting them: the doorbell gather. Every gate (migration fence,
+    /// per-key ordering, window bound) applies exactly as on the per-op
+    /// path, with staged ops counting as in flight for the key gate.
+    fn stage_round(
+        &mut self,
+        s: &mut ClusterState<D::World>,
+        now: Time,
+    ) -> Vec<(usize, Request, Time)> {
+        let mut staged: Vec<(usize, Request, Time)> = Vec::new();
+        'lanes: while staged.len() < self.batch {
+            let Some(lane) = self.free_lane(&staged) else { break };
+            if let Some(i) = self.next_issuable_pending(&s.router, &staged) {
                 let (req, arrived, _) = self.pending.remove(i).expect("position indexed");
                 let start = arrived.unwrap_or(now);
-                if !self.issue_on(s, lane, req, start, now) {
-                    return false;
-                }
+                staged.push((lane, req, start));
                 continue 'lanes;
             }
             // Open loop: new work only arrives with the arrival process.
@@ -425,19 +452,61 @@ impl<D: OpDriver> PipelinedClient<D> {
                             // under the new epoch once the flip lands.
                             s.worlds[shard].counters_mut().record_bounce(now);
                             self.pending.push_back((req, None, true));
-                        } else if self.key_blocked(&req) || self.pending_has_key(req.key()) {
+                        } else if self.key_blocked(&req, &staged)
+                            || self.pending_has_key(req.key())
+                        {
                             self.pending.push_back((req, None, false));
-                        } else if self.issue_on(s, lane, req, now, now) {
-                            continue 'lanes;
                         } else {
-                            return false;
+                            staged.push((lane, req, now));
+                            continue 'lanes;
                         }
                     }
                 }
             }
             break;
         }
-        true
+        staged
+    }
+
+    /// Fill free lanes in gather rounds: stage up to `batch` ready ops,
+    /// ring ONE doorbell for them (one posting floor, summed wire time,
+    /// shared admission instant), post each. With `batch == 1` every round
+    /// stages a single op and a one-element batch admits identically to
+    /// [`ClusterState::admit`] — the legacy per-op path, bit for bit.
+    /// Returns false on client crash.
+    fn issue_pass(&mut self, s: &mut ClusterState<D::World>, now: Time) -> bool {
+        // A migration fence is up: every queued op parked behind it counts
+        // as bounced exactly once (it re-issues under the post-flip epoch).
+        if s.router.fenced().is_some() {
+            for (req, _, bounced) in self.pending.iter_mut() {
+                if !*bounced {
+                    let (slot, shard) = s.router.route(req.key());
+                    if s.router.blocked(slot) {
+                        *bounced = true;
+                        s.worlds[shard].counters_mut().record_bounce(now);
+                    }
+                }
+            }
+        }
+        loop {
+            let staged = self.stage_round(s, now);
+            if staged.is_empty() {
+                return true;
+            }
+            let bytes: Vec<usize> = staged.iter().map(|(_, r, _)| ingress_bytes(r)).collect();
+            let admitted = s.admit_batch(now, &bytes);
+            if self.batch > 1 {
+                // Batch accounting lives on the shard owning the first
+                // staged op (merged cluster-wide like every counter).
+                let (_, shard) = s.router.route(staged[0].1.key());
+                s.worlds[shard].counters_mut().record_batch(now, staged.len() as u64);
+            }
+            for (lane, req, start) in staged {
+                if !self.begin_on(s, lane, req, start, admitted) {
+                    return false;
+                }
+            }
+        }
     }
 }
 
@@ -924,5 +993,84 @@ mod tests {
             t_on > t_off,
             "serialized admissions must stretch the makespan: {t_on} vs {t_off}"
         );
+    }
+
+    #[test]
+    fn doorbell_one_and_either_scheduler_are_bit_for_bit_default() {
+        // The three knob spellings of "today's behavior" — untouched
+        // client, explicit doorbell(1), and either completion-set backend —
+        // must replay the exact same run.
+        let run = |mk: fn(PipelinedClient<ErdaDriver>) -> PipelinedClient<ErdaDriver>| {
+            let ops = vec![put(0), get(1), put(2), put(0), get(2), put(3)];
+            let n = ops.len() as u64;
+            let mut w = erda_world();
+            w.counters.active_clients = 1;
+            let ingress = Some(Ingress::new(Timing::default(), 1));
+            let mut e = Engine::new(ClusterState::new(vec![w], ingress));
+            e.spawn(Box::new(mk(erda_client(ops, 4))), 0);
+            let end = e.run();
+            let c = &e.state.worlds[0].counters;
+            (end, e.events(), c.ops_measured, c.latency.mean_ns(), c.batched_posts, n)
+        };
+        let base = run(|c| c);
+        assert_eq!(base, run(|c| c.doorbell(1)));
+        assert_eq!(base, run(|c| c.scheduler(SchedulerKind::Heap)));
+        assert_eq!(base, run(|c| c.scheduler(SchedulerKind::Tiered)));
+        assert_eq!(base.2, base.5, "every op completes");
+        assert_eq!(base.4, 0, "doorbell(1) never records a batched post");
+    }
+
+    #[test]
+    fn doorbell_batching_coalesces_posting_floors() {
+        // 16 same-instant puts through a 1-channel ingress: per-op
+        // admission pays 16 posting floors back to back; doorbell(8) rings
+        // two batches, so admissions (and the makespan) come out earlier
+        // while every op-count invariant holds unchanged.
+        let run = |batch: usize| -> (Time, u64, u128, Counters) {
+            let mut w = erda_world();
+            w.counters.active_clients = 1;
+            let ops: Vec<Request> = (0..16).map(put).collect();
+            let ingress = Some(Ingress::new(Timing::default(), 1));
+            let mut e = Engine::new(ClusterState::new(vec![w], ingress));
+            e.spawn(Box::new(erda_client(ops, 16).doorbell(batch)), 0);
+            let end = e.run();
+            let s = e.state.ingress_stats();
+            (end, s.admitted, s.wait_ns, e.state.worlds[0].counters.clone())
+        };
+        let (t1, admitted1, wait1, c1) = run(1);
+        let (t8, admitted8, wait8, c8) = run(8);
+        assert_eq!(admitted1, 16);
+        assert_eq!(admitted8, 16, "admitted counts ops at any batch size");
+        assert_eq!(c8.ops_measured, 16);
+        assert_eq!(c8.read_misses, 0);
+        assert_eq!(c1.batched_posts, 0);
+        assert_eq!(c8.batched_posts, 2, "16 ready ops at doorbell(8) = two posts");
+        assert_eq!(c8.batched_ops, 16);
+        assert!(
+            wait8 < wait1,
+            "one floor per batch must cut queueing: {wait8} vs {wait1}"
+        );
+        assert!(t8 <= t1, "batching must not slow the run: {t8} vs {t1}");
+    }
+
+    #[test]
+    fn doorbell_batching_preserves_per_key_order() {
+        // Same-key puts+get under doorbell(4): staged ops gate the key
+        // exactly like in-flight ones, so the get still sees the second
+        // put and nothing co-stages on a dirty key.
+        let key = key_of(3);
+        let ops = vec![
+            Request::Put { key: key.clone(), value: vec![0xAAu8; 64] },
+            Request::Put { key: key.clone(), value: vec![0xBBu8; 64] },
+            Request::Get { key: key.clone() },
+        ];
+        let mut e = Engine::new(single(erda_world()));
+        e.spawn(Box::new(erda_client(ops, 4).doorbell(4)), 0);
+        e.run();
+        let w = &mut e.state.worlds[0];
+        w.settle();
+        assert_eq!(w.counters.ops_measured, 3);
+        assert_eq!(w.counters.read_misses, 0, "get must not race ahead of the puts");
+        assert_eq!(w.get(&key).expect("present"), vec![0xBBu8; 64]);
     }
 }

@@ -69,6 +69,18 @@ pub struct DriverConfig {
     /// table, bit-for-bit [`crate::store::shard_of`] routing. Forces the
     /// pipelined client path.
     pub reshard: Option<crate::store::ReshardPlan>,
+    /// Which event-queue implementation drives the engine (and the
+    /// windowed clients' completion sets). Both kinds pop the identical
+    /// `(time, seq)` order, so results are bit-for-bit the same; the
+    /// tiered default keeps the simulator's own pop cost scaling with
+    /// active worlds instead of total pending events.
+    pub scheduler: crate::sim::SchedulerKind,
+    /// Client-side doorbell batching: coalesce up to this many ready ops
+    /// of one client's window into ONE posted ingress batch (one posting
+    /// floor + summed wire time, shared admission instant). 1 (default) =
+    /// per-op admission, bit-for-bit the pre-batching path. Values > 1
+    /// force the pipelined client path.
+    pub doorbell_batch: usize,
 }
 
 impl Default for DriverConfig {
@@ -90,6 +102,8 @@ impl Default for DriverConfig {
             cleaning_threshold: None,
             cleaner: CleanerConfig::default(),
             reshard: None,
+            scheduler: crate::sim::SchedulerKind::default(),
+            doorbell_batch: 1,
         }
     }
 }

@@ -1,0 +1,207 @@
+//! Scheduler-equivalence suite (PR 7): the tiered event queue is a pure
+//! cost optimization — it must replay the EXACT `(time, seq)` total order
+//! of the legacy binary heap. Every scheme × shard count × cluster flavor
+//! (plain, mirrored, mid-run reshard) is run under both queue kinds and
+//! compared down to the event count, makespan, latency stream, interval
+//! timeline, and the settled store. Likewise `doorbell_batch(1)` IS the
+//! pre-batching admission path, bit for bit, and wider doorbells keep
+//! every op-count invariant while recording their coalescing.
+
+use erda::metrics::RunStats;
+use erda::sim::{SchedulerKind, MS};
+use erda::store::{Cluster, ClusterBuilder, ReshardPlan, RemoteStore, RunOutcome, Scheme};
+use erda::ycsb::{key_of, Workload};
+
+const RECORDS: u64 = 64;
+
+/// Cluster flavors the equivalence matrix covers. Mirrored + reshard is
+/// skipped: the builder rejects the combination (slot migration does not
+/// move mirror pairs yet).
+#[derive(Clone, Copy, Debug)]
+enum Flavor {
+    Plain,
+    Mirrored,
+    Reshard,
+}
+
+fn builder(scheme: Scheme, shards: usize, flavor: Flavor) -> ClusterBuilder {
+    let mut b = Cluster::builder()
+        .scheme(scheme)
+        .shards(shards)
+        .clients(4)
+        .window(4)
+        .ops_per_client(100)
+        .workload(Workload::UpdateHeavy)
+        .records(RECORDS)
+        .value_size(64)
+        .warmup(0);
+    match flavor {
+        Flavor::Plain => {}
+        Flavor::Mirrored => b = b.mirrored(true),
+        Flavor::Reshard => {
+            b = b.reshard(ReshardPlan::scale_out(shards, shards + 1, MS));
+        }
+    }
+    b
+}
+
+/// Every observable of a run that the queue swap could conceivably move.
+/// (`&mut` only because percentile extraction sorts the recorder.)
+fn fingerprint(o: &mut RunOutcome) -> (u64, u64, u64, u64, usize, f64, u64, Vec<u64>) {
+    let s = &mut o.stats;
+    (
+        s.ops,
+        s.events,
+        s.duration_ns,
+        s.nvm_programmed_bytes,
+        s.latency.count(),
+        s.latency.mean_ns(),
+        s.latency.percentile_ns(1.0),
+        s.interval_done.clone(),
+    )
+}
+
+/// The settled store, sampled at every preloaded (scrambled) key.
+fn settled_values(o: RunOutcome) -> Vec<Option<Vec<u8>>> {
+    let mut db = o.db;
+    (0..RECORDS)
+        .map(|r| {
+            let id = erda::ycsb::zipf::scrambled_id(r, RECORDS);
+            db.get(&key_of(id)).expect("settled read")
+        })
+        .collect()
+}
+
+#[test]
+fn tiered_queue_replays_the_heap_bit_for_bit_everywhere() {
+    for scheme in Scheme::ALL {
+        for shards in [1usize, 4] {
+            for flavor in [Flavor::Plain, Flavor::Mirrored, Flavor::Reshard] {
+                let run = |kind: SchedulerKind| {
+                    builder(scheme, shards, flavor).scheduler(kind).run().unwrap()
+                };
+                let mut heap = run(SchedulerKind::Heap);
+                let mut tiered = run(SchedulerKind::Tiered);
+                let label = format!("{scheme:?}/{shards} shards/{flavor:?}");
+                assert_eq!(fingerprint(&mut heap), fingerprint(&mut tiered), "{label}");
+                assert_eq!(
+                    (heap.stats.sched_pushes, heap.stats.sched_pops),
+                    (tiered.stats.sched_pushes, tiered.stats.sched_pops),
+                    "{label}: both kinds see the same event traffic"
+                );
+                assert!(heap.stats.sched_pops > 0, "{label}: pop counter surfaced");
+                assert_eq!(
+                    heap.per_shard.len(),
+                    tiered.per_shard.len(),
+                    "{label}: same world geometry"
+                );
+                assert_eq!(
+                    settled_values(heap),
+                    settled_values(tiered),
+                    "{label}: settled stores diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn doorbell_width_one_is_the_default_path_bit_for_bit() {
+    // An ingress-metered windowed run is where batching *could* change
+    // admission timing; width 1 must not.
+    let run = |explicit: bool| {
+        let mut b = builder(Scheme::Erda, 4, Flavor::Plain).ingress(1);
+        if explicit {
+            b = b.doorbell_batch(1);
+        }
+        b.run().unwrap()
+    };
+    let mut default = run(false);
+    let mut width1 = run(true);
+    assert_eq!(fingerprint(&mut default), fingerprint(&mut width1));
+    assert_eq!(default.stats.ingress_admitted, width1.stats.ingress_admitted);
+    assert_eq!(default.stats.ingress_wait_ns, width1.stats.ingress_wait_ns);
+    assert_eq!(width1.stats.batched_posts, 0, "width 1 never reports batches");
+    assert_eq!(settled_values(default), settled_values(width1));
+}
+
+#[test]
+fn wide_doorbells_keep_op_totals_and_record_batches() {
+    let run = |n: usize| {
+        builder(Scheme::Erda, 2, Flavor::Plain)
+            .window(8)
+            .ingress(1)
+            .doorbell_batch(n)
+            .run()
+            .unwrap()
+            .stats
+    };
+    let plain = run(1);
+    let wide = run(4);
+    assert_eq!(plain.ops, wide.ops, "batching never changes the op total");
+    assert_eq!(plain.read_misses, 0);
+    assert_eq!(wide.read_misses, 0);
+    assert_eq!(
+        plain.ingress_admitted, wide.ingress_admitted,
+        "admission counts ops, not posts"
+    );
+    assert!(wide.batched_posts > 0, "width 4 posts real batches");
+    assert_eq!(wide.batched_ops, wide.ops, "every measured op rode a doorbell");
+    assert!(wide.mean_batch_size() > 1.0, "batches average more than one op");
+    assert!(
+        wide.ingress_wait_ns < plain.ingress_wait_ns,
+        "coalesced posting floors must cut queueing: {} vs {}",
+        wide.ingress_wait_ns,
+        plain.ingress_wait_ns
+    );
+}
+
+#[test]
+fn doorbell_batching_works_under_mirroring() {
+    // Mirror legs stay per-leg admitted; only client posts coalesce. The
+    // op-count invariant (admitted == ops + mirror legs) must hold at any
+    // batch width.
+    let s = builder(Scheme::Erda, 2, Flavor::Mirrored)
+        .window(8)
+        .ingress(2)
+        .doorbell_batch(4)
+        .run()
+        .unwrap()
+        .stats;
+    assert_eq!(s.ops, 4 * 100);
+    assert!(s.mirror_legs > 0, "update-heavy mirrored run records legs");
+    assert_eq!(
+        s.ingress_admitted,
+        s.ops + s.mirror_legs,
+        "every op and every mirror leg admits exactly once"
+    );
+    assert!(s.batched_posts > 0);
+}
+
+/// Pure-stats helper equivalence at the workload facade: the same
+/// `DriverConfig` through `workload::run` under both kinds.
+#[test]
+fn workload_facade_is_scheduler_agnostic() {
+    use erda::workload::{run, DriverConfig};
+    let mk = |kind: SchedulerKind| {
+        let mut cfg = DriverConfig {
+            clients: 4,
+            ops_per_client: 100,
+            shards: 2,
+            window: 4,
+            warmup: 0,
+            ..DriverConfig::default()
+        };
+        cfg.workload.record_count = RECORDS;
+        cfg.workload.value_size = 64;
+        cfg.scheduler = kind;
+        cfg
+    };
+    let a: RunStats = run(&mk(SchedulerKind::Heap));
+    let b: RunStats = run(&mk(SchedulerKind::Tiered));
+    assert_eq!(a.ops, b.ops);
+    assert_eq!(a.duration_ns, b.duration_ns);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
+    assert_eq!(a.interval_done, b.interval_done);
+}
