@@ -7,7 +7,8 @@
 //! repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
 //!             [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
 //!             [--scheduler heap|tiered] [--doorbell N]
-//!             [--mirrored | --reshard-at MS]    facade end-to-end smoke run
+//!             [--mirrored [--read-policy primary|mirror|rr] [--fail-at MS]
+//!              | --reshard-at MS]               facade end-to-end smoke run
 //! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
 //!                                               shard-count throughput sweep
 //! repro window [--windows 1,2,4,8,16] [--quick] [--out DIR] [--json FILE]
@@ -26,6 +27,10 @@
 //!                                               scheduler/doorbell scale sweep:
 //!                                               heap vs tiered (bit-for-bit)
 //!                                               and doorbell-8 batching
+//! repro sla [--shards 1,2] [--quick] [--out DIR] [--json FILE]
+//!                                               availability sweep: mid-run
+//!                                               primary kill + mirror failover
+//!                                               per scheme x read policy
 //! repro bench-gate --baseline F --current F [--tolerance 0.10] [--update]
 //!                                               benchmark regression gate
 //! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
@@ -38,7 +43,7 @@ use std::path::PathBuf;
 use crate::error::{anyhow, bail, Result};
 use crate::figures::{self, Fidelity};
 use crate::sim::SchedulerKind;
-use crate::store::Scheme;
+use crate::store::{ReadPolicy, Scheme};
 use crate::ycsb::Arrival;
 
 /// Parsed command line.
@@ -60,6 +65,12 @@ pub enum Cmd {
         /// Fire a scale-out reshard (shards -> shards + 1) at this virtual
         /// millisecond of the run (mutually exclusive with `mirrored`).
         reshard_at: Option<u64>,
+        /// Kill shard 0's primary at this virtual millisecond and promote
+        /// its recovered mirror after a blackout (requires `mirrored`).
+        fail_at: Option<u64>,
+        /// Where mirrored runs serve GETs from (requires `mirrored` for
+        /// anything but the default primary-only policy).
+        read_policy: ReadPolicy,
         /// Event-queue implementation for the co-sim engine (bit-for-bit
         /// identical results either way; tiered is the default).
         scheduler: SchedulerKind,
@@ -111,6 +122,15 @@ pub enum Cmd {
     /// (asserted bit-for-bit) plus doorbell-8 batching vs client count.
     Scale {
         clients: Vec<usize>,
+        fidelity: Fidelity,
+        out: Option<PathBuf>,
+        json: Option<PathBuf>,
+    },
+    /// Availability-SLA sweep: mirrored runs with a mid-run primary kill
+    /// and mirror failover, per scheme × read policy (throughput dip,
+    /// downtime, p99/p999 stretch, failover bounces).
+    Sla {
+        shards: Vec<usize>,
         fidelity: Fidelity,
         out: Option<PathBuf>,
         json: Option<PathBuf>,
@@ -215,6 +235,8 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let mut ingress: Option<usize> = None;
             let mut mirrored = false;
             let mut reshard_at: Option<u64> = None;
+            let mut fail_at: Option<u64> = None;
+            let mut read_policy = ReadPolicy::default();
             let mut scheduler = SchedulerKind::default();
             let mut doorbell: usize = 1;
             while let Some(a) = it.next() {
@@ -307,12 +329,42 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         }
                         None => bail!("--reshard-at needs a virtual millisecond"),
                     },
+                    "--fail-at" => match it.next() {
+                        Some(v) => {
+                            let ms = v.parse::<u64>()?;
+                            if ms == 0 {
+                                bail!("--fail-at needs a virtual millisecond ≥ 1");
+                            }
+                            fail_at = Some(ms);
+                        }
+                        None => bail!("--fail-at needs a virtual millisecond"),
+                    },
+                    "--read-policy" => match it.next() {
+                        Some(v) => {
+                            read_policy = ReadPolicy::parse(v).ok_or_else(|| {
+                                anyhow!("unknown read policy {v:?} (primary|mirror|rr)")
+                            })?
+                        }
+                        None => bail!("--read-policy needs primary|mirror|rr"),
+                    },
                     other => bail!("unknown smoke flag {other:?}"),
                 }
             }
             if mirrored && reshard_at.is_some() {
                 bail!("--mirrored and --reshard-at do not compose yet (slot migration \
                        would have to move mirror pairs atomically)");
+            }
+            if fail_at.is_some() && !mirrored {
+                bail!("--fail-at kills a primary and fails over to its mirror: \
+                       pass --mirrored too");
+            }
+            if fail_at.is_some() && reshard_at.is_some() {
+                bail!("--fail-at and --reshard-at do not compose yet (a promotion \
+                       would have to rendezvous with an in-flight slot migration)");
+            }
+            if read_policy != ReadPolicy::Primary && !mirrored {
+                bail!("--read-policy needs a mirror replica to read from: \
+                       pass --mirrored too");
             }
             match scheme {
                 Some(scheme) => Ok(Cmd::Smoke {
@@ -324,6 +376,8 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                     ingress,
                     mirrored,
                     reshard_at,
+                    fail_at,
+                    read_policy,
                     scheduler,
                     doorbell,
                 }),
@@ -374,6 +428,11 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                 &mut it,
             )?;
             Ok(Cmd::Scale { clients, fidelity, out, json })
+        }
+        "sla" => {
+            let (shards, fidelity, out, json) =
+                parse_sweep_flags("sla", "--shards", "counts", &figures::SLA_SWEEP, &mut it)?;
+            Ok(Cmd::Sla { shards, fidelity, out, json })
         }
         "bench-gate" => {
             let mut baseline = None;
@@ -428,7 +487,8 @@ USAGE:
   repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
               [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
               [--scheduler heap|tiered] [--doorbell N]
-              [--mirrored | --reshard-at MS]
+              [--mirrored [--read-policy primary|mirror|rr] [--fail-at MS]
+               | --reshard-at MS]
                                               exercise the store facade end to
                                               end (typed KV ops + a DES run,
                                               optionally over N key-space
@@ -442,14 +502,21 @@ USAGE:
                                               every shard a synchronously
                                               written mirror world plus a
                                               fail-primary → promote-mirror
-                                              check, and --reshard-at firing a
-                                              mid-run scale-out from N to N+1
-                                              shards at virtual millisecond
-                                              MS, --scheduler picking the
-                                              event-queue impl — bit-for-bit
-                                              identical results — and
-                                              --doorbell coalescing up to N
-                                              ready ops per ingress post);
+                                              check, --read-policy serving
+                                              mirrored GETs from the primary,
+                                              the mirror, or round-robin,
+                                              --fail-at killing shard 0's
+                                              primary at virtual millisecond
+                                              MS mid-run and promoting its
+                                              recovered mirror after a
+                                              blackout, and --reshard-at
+                                              firing a mid-run scale-out from
+                                              N to N+1 shards at virtual
+                                              millisecond MS, --scheduler
+                                              picking the event-queue impl —
+                                              bit-for-bit identical results —
+                                              and --doorbell coalescing up to
+                                              N ready ops per ingress post);
                                               deterministic in --seed
   repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
                                               scale-out sweep: throughput vs
@@ -487,6 +554,14 @@ USAGE:
                                               wall-clock reported) and
                                               doorbell-8 batching vs client
                                               count
+  repro sla [--shards 1,2] [--quick] [--out DIR] [--json FILE]
+                                              availability sweep: mirrored run
+                                              vs mid-run primary kill + mirror
+                                              failover per scheme x read
+                                              policy — throughput dip,
+                                              downtime, p99/p999 stretch and
+                                              failover bounces, with zero
+                                              acked-write loss asserted inline
   repro bench-gate --baseline FILE --current FILE [--tolerance 0.10] [--update]
                                               compare a benchmark JSON artifact
                                               against a committed baseline;
@@ -557,6 +632,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
                 doorbell: 1,
             }
@@ -572,6 +649,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
                 doorbell: 1,
             }
@@ -587,6 +666,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
                 doorbell: 1,
             }
@@ -607,6 +688,8 @@ mod tests {
                 ingress: Some(2),
                 mirrored: false,
                 reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
                 doorbell: 1,
             }
@@ -622,6 +705,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
                 doorbell: 1,
             }
@@ -641,6 +726,8 @@ mod tests {
                 ingress: None,
                 mirrored: true,
                 reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
                 doorbell: 1,
             }
@@ -660,6 +747,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: Some(8),
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
                 doorbell: 1,
             }
@@ -671,6 +760,81 @@ mod tests {
             p("smoke --scheme erda --mirrored --reshard-at 8").is_err(),
             "mirrors and slot migration do not compose yet"
         );
+    }
+
+    #[test]
+    fn parses_fault_smoke() {
+        assert_eq!(
+            p("smoke --scheme erda --mirrored --shards 2 --window 4 --fail-at 8 \
+               --read-policy mirror")
+                .unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::Erda,
+                seed: 0xE2DA,
+                shards: 2,
+                window: 4,
+                arrival: Arrival::Closed,
+                ingress: None,
+                mirrored: true,
+                reshard_at: None,
+                fail_at: Some(8),
+                read_policy: ReadPolicy::MirrorPreferred,
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
+            }
+        );
+        assert_eq!(
+            p("smoke --scheme redo --mirrored --read-policy rr").unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::RedoLogging,
+                seed: 0xE2DA,
+                shards: 1,
+                window: 1,
+                arrival: Arrival::Closed,
+                ingress: None,
+                mirrored: true,
+                reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::RoundRobin,
+                scheduler: SchedulerKind::Tiered,
+                doorbell: 1,
+            }
+        );
+        assert!(p("smoke --scheme erda --fail-at 8").is_err(), "fault needs a mirror");
+        assert!(p("smoke --scheme erda --mirrored --fail-at 0").is_err());
+        assert!(p("smoke --scheme erda --mirrored --fail-at").is_err());
+        assert!(p("smoke --scheme erda --read-policy mirror").is_err(), "policy needs a mirror");
+        assert!(p("smoke --scheme erda --mirrored --read-policy warm").is_err());
+        assert!(p("smoke --scheme erda --mirrored --read-policy").is_err());
+        assert!(
+            p("smoke --scheme erda --mirrored --fail-at 8 --reshard-at 8").is_err(),
+            "faults and slot migration do not compose yet"
+        );
+    }
+
+    #[test]
+    fn parses_sla_sweep() {
+        assert_eq!(
+            p("sla").unwrap(),
+            Cmd::Sla {
+                shards: figures::SLA_SWEEP.to_vec(),
+                fidelity: Fidelity::Full,
+                out: None,
+                json: None,
+            }
+        );
+        assert_eq!(
+            p("sla --shards 1,2 --quick --json BENCH_sla.json").unwrap(),
+            Cmd::Sla {
+                shards: vec![1, 2],
+                fidelity: Fidelity::Quick,
+                out: None,
+                json: Some(PathBuf::from("BENCH_sla.json")),
+            }
+        );
+        assert!(p("sla --shards 0,2").is_err());
+        assert!(p("sla --shards").is_err());
+        assert!(p("sla --bogus").is_err());
     }
 
     #[test]
@@ -708,6 +872,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Heap,
                 doorbell: 4,
             }
@@ -723,6 +889,8 @@ mod tests {
                 ingress: None,
                 mirrored: false,
                 reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
                 doorbell: 1,
             }

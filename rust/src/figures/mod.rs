@@ -40,6 +40,12 @@ pub const RESHARD_SWEEP: [usize; 2] = [1, 2];
 /// The default client sweep of the scheduler/doorbell scale experiment
 /// (`repro scale`).
 pub const SCALE_SWEEP: [usize; 2] = [8, 32];
+/// The default shard sweep of the availability experiment (`repro sla`):
+/// each entry n runs a mirrored n-shard cluster and kills shard 0's
+/// primary mid-measurement. n = 1 blacks out the whole cluster (the
+/// blackout shows as empty 1 ms buckets); n = 2 keeps the other shard
+/// serving through the failover.
+pub const SLA_SWEEP: [usize; 2] = [1, 2];
 
 /// One rendered experiment: a CSV-able grid plus a markdown view.
 #[derive(Clone, Debug)]
@@ -608,6 +614,121 @@ pub fn reshard(shard_counts: &[usize], fid: Fidelity) -> Rendered {
     }
 }
 
+/// Availability-SLA sweep (`repro sla`): mirrored runs with a
+/// mid-measurement fail-stop of shard 0's primary, per scheme × read
+/// policy. For each shard count and [`crate::store::ReadPolicy`] the row
+/// reports the fault-free mirrored throughput, the faulted run's
+/// throughput, the per-shard downtime (the plan's blackout, measured on
+/// the killed shard's counters), the blackout-window throughput dip
+/// (worst full 1 ms interval vs the run's median), the p99/p999 stretch
+/// (faulted / fault-free tail latency — the parked ops' blackout stall
+/// lands in the tail, not in lost ops), and the failover bounces (ops
+/// caught in flight on the dead primary or parked during the blackout,
+/// re-issued against the promoted mirror). Every faulted run is checked
+/// inline for the paper-level availability claim: the full op quota
+/// completes with zero read misses — no acked write is lost to the
+/// failover — for all three schemes, because each replica persists with
+/// its own scheme's write discipline before the ACK.
+pub fn sla(shard_counts: &[usize], fid: Fidelity) -> Rendered {
+    use crate::store::{FaultPlan, ReadPolicy};
+    let clients = 8;
+    let window = 4;
+    let blackout = 2 * MS;
+    let stretch = |plain: f64, faulted: f64| {
+        if plain <= 0.0 {
+            0.0
+        } else {
+            faulted / plain
+        }
+    };
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        for policy in ReadPolicy::ALL {
+            let mut row = vec![shards.to_string(), policy.id().to_string()];
+            for scheme in SchemeSel::ALL {
+                let mut cfg = base_cfg(scheme, Workload::UpdateHeavy, 256, clients, fid);
+                cfg.shards = shards;
+                cfg.window = window;
+                cfg.mirrored = true;
+                cfg.read_policy = policy;
+                let mut plain = run(&cfg);
+                let mut fcfg = cfg.clone();
+                // Kill shard 0 shortly after the warmup boundary so the
+                // blackout lands inside the measured phase of even the
+                // quickest run.
+                fcfg.faults = FaultPlan::fail_at(0, 8 * MS, blackout);
+                let mut sla = run(&fcfg);
+                let tag = format!("{scheme:?}/{shards}/{}", policy.id());
+                assert_eq!(plain.ops, sla.ops, "{tag}: the failover must not eat ops");
+                assert_eq!(
+                    sla.read_misses, 0,
+                    "{tag}: a read missed after failover — lost acked write"
+                );
+                assert_eq!(sla.faults_injected, 1, "{tag}: exactly one planned fault");
+                assert!(sla.downtime_ns > 0, "{tag}: the blackout must be accounted");
+                let dip = migration_dip_pct(&sla);
+                assert!(dip > 0.0, "{tag}: the blackout must show in the 1 ms buckets");
+                if shards == 1 {
+                    assert!(
+                        sla.blackout_intervals() >= 1,
+                        "{tag}: a whole-cluster blackout must empty full intervals"
+                    );
+                }
+                row.push(format!("{:.2}", plain.kops()));
+                row.push(format!("{:.2}", sla.kops()));
+                row.push(format!("{:.1}", sla.downtime_ms()));
+                row.push(format!("{dip:.1}"));
+                row.push(format!("{:.2}", stretch(
+                    plain.latency.percentile_us(0.99),
+                    sla.latency.percentile_us(0.99),
+                )));
+                row.push(format!("{:.2}", stretch(
+                    plain.latency.percentile_us(0.999),
+                    sla.latency.percentile_us(0.999),
+                )));
+                row.push(sla.failover_bounces.to_string());
+            }
+            rows.push(row);
+        }
+    }
+    Rendered {
+        id: "sla".into(),
+        title: format!(
+            "Availability: mirrored run vs mid-run primary kill + mirror failover — \
+             throughput (KOp/s), downtime (ms), blackout dip, p99/p999 stretch and \
+             failover bounces per scheme x read policy \
+             ({clients} clients, window {window}, YCSB-A, 256 B, {} ms blackout)",
+            blackout / MS
+        ),
+        header: vec![
+            "shards".into(),
+            "read_policy".into(),
+            "erda_kops".into(),
+            "erda_sla_kops".into(),
+            "erda_down_ms".into(),
+            "erda_dip_pct".into(),
+            "erda_p99x".into(),
+            "erda_p999x".into(),
+            "erda_bounced".into(),
+            "redo_kops".into(),
+            "redo_sla_kops".into(),
+            "redo_down_ms".into(),
+            "redo_dip_pct".into(),
+            "redo_p99x".into(),
+            "redo_p999x".into(),
+            "redo_bounced".into(),
+            "raw_kops".into(),
+            "raw_sla_kops".into(),
+            "raw_down_ms".into(),
+            "raw_dip_pct".into(),
+            "raw_p99x".into(),
+            "raw_p999x".into(),
+            "raw_bounced".into(),
+        ],
+        rows,
+    }
+}
+
 /// Scale sweep (`repro scale`): the PR-7 event-core refactor measured at
 /// growing client populations. Per client count the sweep runs the same
 /// sharded, ingress-metered, write-heavy Erda workload three ways:
@@ -724,14 +845,15 @@ pub fn by_id(id: &str, fid: Fidelity) -> Option<Rendered> {
         "mirror" => mirror(&MIRROR_SWEEP, fid),
         "reshard" => reshard(&RESHARD_SWEEP, fid),
         "scale" => scale(&SCALE_SWEEP, fid),
+        "sla" => sla(&SLA_SWEEP, fid),
         _ => return None,
     })
 }
 
 /// All experiment ids, in paper order (plus the repo's own extensions).
-pub const ALL_IDS: [&str; 21] = [
+pub const ALL_IDS: [&str; 22] = [
     "14", "15", "16", "17", "18", "19", "20", "21", "22", "23", "24", "25", "26", "table1",
-    "ablations", "scaling", "window", "cross-shard", "mirror", "reshard", "scale",
+    "ablations", "scaling", "window", "cross-shard", "mirror", "reshard", "scale", "sla",
 ];
 
 #[cfg(test)]
@@ -875,6 +997,32 @@ mod tests {
         assert!(cell(4) > 1.0, "doorbell batches must average > 1 op");
         assert!(cell(5) > 0.0, "doorbell posts must be counted");
         assert!(cell(6) > 0.0, "scheduler pops must be surfaced");
+    }
+
+    #[test]
+    fn quick_sla_sweep_survives_the_kill_and_reports_the_dip() {
+        // The zero-lost-writes, downtime and visible-dip checks run inside
+        // sla() itself for every scheme; here we pin the reported shapes on
+        // the cheapest cell (2 shards, primary reads only).
+        let r = sla(&[2], Fidelity::Quick);
+        assert_eq!(r.rows.len(), crate::store::ReadPolicy::ALL.len());
+        assert_eq!(r.header.len(), 23);
+        // Columns per scheme: kops, sla_kops, down_ms, dip_pct, p99x,
+        // p999x, bounced.
+        for row in &r.rows {
+            for (scheme, base) in [("erda", 2), ("redo", 9), ("raw", 16)] {
+                let cell = |col: usize| -> f64 { row[col].parse().unwrap() };
+                assert!(cell(base) > 0.0, "{scheme}: fault-free run must complete");
+                assert!(cell(base + 1) > 0.0, "{scheme}: faulted run must complete");
+                assert!(
+                    (cell(base + 2) - 2.0).abs() < 1e-9,
+                    "{scheme}: downtime = the plan's 2 ms blackout, got {}",
+                    row[base + 2]
+                );
+                assert!(cell(base + 3) > 0.0, "{scheme}: the dip must be visible");
+                assert!(cell(base + 6) > 0.0, "{scheme}: the kill must bounce ops");
+            }
+        }
     }
 
     #[test]

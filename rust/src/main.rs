@@ -32,11 +32,13 @@ fn main() -> Result<()> {
             ingress,
             mirrored,
             reshard_at,
+            fail_at,
+            read_policy,
             scheduler,
             doorbell,
         } => smoke(
-            scheme, seed, shards, window, arrival, ingress, mirrored, reshard_at, scheduler,
-            doorbell,
+            scheme, seed, shards, window, arrival, ingress, mirrored, reshard_at, fail_at,
+            read_policy, scheduler, doorbell,
         ),
         Cmd::Scaling { shards, fidelity, out, json } => {
             let r = figures::scaling(&shards, fidelity);
@@ -65,6 +67,11 @@ fn main() -> Result<()> {
         }
         Cmd::Scale { clients, fidelity, out, json } => {
             let r = figures::scale(&clients, fidelity);
+            r.emit(out.as_deref());
+            emit_json(&r, json.as_deref())
+        }
+        Cmd::Sla { shards, fidelity, out, json } => {
+            let r = figures::sla(&shards, fidelity);
             r.emit(out.as_deref());
             emit_json(&r, json.as_deref())
         }
@@ -155,9 +162,10 @@ fn bench_gate(
 /// over `shards` key-space partitions co-simulated in one event heap, with
 /// a `window`-deep in-flight pipeline spanning the shards, (optionally) an
 /// open-loop arrival process, (optionally) the shared client-NIC ingress,
-/// and (optionally) synchronous mirroring incl. a fail-primary →
-/// promote-mirror failover check, or (optionally) a mid-run scale-out
-/// reshard from `shards` to `shards + 1` with zero-lost-write checks.
+/// and (optionally) synchronous mirroring incl. a typed-fault failover
+/// check, a mirrored read policy, a mid-run primary kill with mirror
+/// promotion (`fail_at`), or (optionally) a mid-run scale-out reshard from
+/// `shards` to `shards + 1` with zero-lost-write checks.
 /// The engine runs under the requested event-queue `scheduler` (results
 /// are bit-for-bit identical across kinds) and, with `doorbell > 1`,
 /// coalesces ready ops into doorbell-batched ingress posts.
@@ -172,16 +180,19 @@ fn smoke(
     ingress: Option<usize>,
     mirrored: bool,
     reshard_at: Option<u64>,
+    fail_at: Option<u64>,
+    read_policy: erda::store::ReadPolicy,
     scheduler: erda::sim::SchedulerKind,
     doorbell: usize,
 ) -> Result<()> {
-    use erda::store::{Cluster, RemoteStore, Request, ReshardPlan};
+    use erda::store::{Cluster, Fault, FaultPlan, ReadPolicy, RemoteStore, Request, ReshardPlan};
     use erda::ycsb::{key_of, Workload};
 
     println!(
         "smoke: scheme = {}, seed = {seed:#x}, shards = {shards}, window = {window}, \
          arrival = {arrival:?}, ingress = {ingress:?}, mirrored = {mirrored}, \
-         reshard_at = {reshard_at:?} ms, scheduler = {scheduler:?}, doorbell = {doorbell}",
+         reshard_at = {reshard_at:?} ms, fail_at = {fail_at:?} ms, \
+         read_policy = {read_policy:?}, scheduler = {scheduler:?}, doorbell = {doorbell}",
         scheme.label()
     );
 
@@ -207,21 +218,24 @@ fn smoke(
     );
     println!("  db ops OK: put / get / delete / torn-write ({:?})", db.op_stats());
     if mirrored {
-        // Failover: the torn key's primary dies; the promoted mirror must
-        // serve the last checksum-consistent version of every key.
+        // Failover through the ONE typed front door: the torn key's primary
+        // dies; the promoted mirror must serve the last checksum-consistent
+        // version of every key.
         let failed_shard = db.shard_of_key(&key_of(2));
         erda::ensure!(
             db.mirror_get(&key_of(0))? == Some(vec![0x5Au8; 64]),
             "put did not replicate to the mirror"
         );
-        db.fail_primary(failed_shard)?;
-        db.promote_mirror(failed_shard)?;
+        db.inject(Fault::FailPrimary(failed_shard))?;
+        db.inject(Fault::PromoteMirror(failed_shard))?;
         erda::ensure!(
             db.get(&key_of(2))? == Some(vec![0xA5u8; 64]),
             "promoted mirror lost the consistent version"
         );
         erda::ensure!(db.get(&key_of(0))? == Some(vec![0x5Au8; 64]), "failover lost a write");
-        println!("  failover OK: fail_primary({failed_shard}) → promote_mirror → consistent");
+        println!(
+            "  failover OK: inject(FailPrimary({failed_shard})) → PromoteMirror → consistent"
+        );
     }
     if reshard_at.is_some() && shards > 1 {
         // The settled counterpart of the mid-run migration: rebalance the
@@ -258,6 +272,7 @@ fn smoke(
         .seed(seed)
         .scheduler(scheduler)
         .doorbell_batch(doorbell)
+        .read_policy(read_policy)
         // Measure everything: the full-quota check below needs every op of
         // every spawned client counted (the default 5 ms warmup would drop
         // the early ones).
@@ -267,6 +282,11 @@ fn smoke(
     }
     if let Some(ms) = reshard_at {
         b = b.reshard(ReshardPlan::scale_out(shards, shards + 1, ms * erda::sim::MS));
+    }
+    if let Some(ms) = fail_at {
+        // Kill shard 0's primary mid-run; promote its recovered mirror
+        // after a 2 ms blackout.
+        b = b.faults(FaultPlan::fail_at(0, ms * erda::sim::MS, 2 * erda::sim::MS));
     }
     let outcome = b.run()?;
     let s = &outcome.stats;
@@ -343,10 +363,20 @@ fn smoke(
             s.mirror_nvm_programmed_bytes,
             s.nvm_programmed_bytes
         );
-        erda::ensure!(
-            outcome.per_mirror.iter().all(|m| m.ops == 0),
-            "ops must ACK on the primary, never on the mirror"
-        );
+        if read_policy == ReadPolicy::Primary && fail_at.is_none() {
+            erda::ensure!(
+                outcome.per_mirror.iter().all(|m| m.ops == 0),
+                "ops must ACK on the primary, never on the mirror"
+            );
+        } else if read_policy != ReadPolicy::Primary {
+            // Mirror-served GETs book on the mirror row. (A fail_at kill
+            // may land after the quota drains, so only the read policy
+            // guarantees mirror-row ops.)
+            erda::ensure!(
+                outcome.per_mirror.iter().map(|m| m.ops).sum::<u64>() > 0,
+                "a mirror read policy must serve GETs from the mirror"
+            );
+        }
         println!(
             "  mirroring: {} legs, mean leg {:.2} µs, {} mirror NVM bytes \
              (of {} total)",
@@ -371,6 +401,26 @@ fn smoke(
         println!(
             "  reshard OK: {} keys ({} bytes) migrated to shard {shards}, {} ops bounced",
             s.migrated_keys, s.migration_bytes, s.bounced_ops
+        );
+    }
+    if let Some(ms) = fail_at {
+        erda::ensure!(
+            s.faults_injected == 1,
+            "the fault plan must kill exactly one primary: {} injected",
+            s.faults_injected
+        );
+        erda::ensure!(s.downtime_ns > 0, "a killed shard must book blackout downtime");
+        erda::ensure!(
+            !outcome.db.has_mirror(0),
+            "shard 0 must be single-homed on the promoted replica after failover"
+        );
+        // No failover_bounces assert: the engine drains the heap, so on a
+        // short run the quota can complete before the fault instant fires.
+        println!(
+            "  failover OK: shard 0 killed at {ms} ms, {} in-flight ops bounced, \
+             {:.1} ms downtime",
+            s.failover_bounces,
+            s.downtime_ms()
         );
     }
     if arrival.is_open() {
@@ -433,7 +483,7 @@ fn verify_runtime() -> Result<()> {
 fn recover_demo() -> Result<()> {
     use erda::log::LogConfig;
     use erda::runtime::PjrtCheck;
-    use erda::store::{Cluster, RemoteStore, Scheme};
+    use erda::store::{Cluster, Fault, RemoteStore, Scheme};
     use erda::ycsb::key_of;
 
     let rt = erda::runtime::Runtime::load_default()?;
@@ -449,7 +499,7 @@ fn recover_demo() -> Result<()> {
 
     // Tear three updates: metadata published, data missing or truncated.
     for (i, chunks) in [(7u64, 0usize), (42, 0), (99, 1)] {
-        db.crash_during_put(&key_of(i), &vec![0xEEu8; 256], chunks)?;
+        db.inject(Fault::TearWrite { key: key_of(i), value: vec![0xEEu8; 256], chunks })?;
         println!(
             "tore update of {:?} ({} of 284 bytes persisted)",
             String::from_utf8_lossy(&key_of(i)),

@@ -156,6 +156,19 @@ pub struct Counters {
     /// Foreground ops bounced by a migration fence (parked at issue time
     /// and re-issued under the post-flip epoch; each op counts once).
     pub bounced_ops: u64,
+    /// Mid-run primary failures injected on this shard ([`crate::store`]'s
+    /// fault subsystem). Recorded on the failed PRIMARY world's counters.
+    pub faults_injected: u64,
+    /// Virtual time this shard spent with its primary dead and its mirror
+    /// not yet promoted (kill instant → promotion instant): the
+    /// availability gap a mid-run fault opens. Recorded on the failed
+    /// primary world at promotion.
+    pub downtime_ns: u64,
+    /// Foreground ops bounced by a shard failure (an in-flight lane that
+    /// completed with `ShardDown`, or a draw parked while its shard was
+    /// down) and re-issued against the promoted replica; each op counts
+    /// once, like `bounced_ops`.
+    pub failover_bounces: u64,
     /// Doorbell-batched ingress posts rung inside the measurement window
     /// (0 on the default per-op admission path). Recorded on the shard
     /// world owning the first op of each batch.
@@ -201,6 +214,9 @@ impl Counters {
         self.migrated_keys += other.migrated_keys;
         self.migration_bytes += other.migration_bytes;
         self.bounced_ops += other.bounced_ops;
+        self.faults_injected += other.faults_injected;
+        self.downtime_ns += other.downtime_ns;
+        self.failover_bounces += other.failover_bounces;
         self.batched_posts += other.batched_posts;
         self.batched_ops += other.batched_ops;
         // Like first_completion below, 0 means "unset" (a default-initialized
@@ -270,6 +286,36 @@ impl Counters {
             return;
         }
         self.bounced_ops += 1;
+    }
+
+    /// Record a primary failure injected on this shard at `at` (call on the
+    /// failed PRIMARY world's counters). Warmup-era faults are dropped from
+    /// the counter, like ops — the failover itself still happens.
+    pub fn record_fault(&mut self, at: Time) {
+        if at < self.measure_from {
+            return;
+        }
+        self.faults_injected += 1;
+    }
+
+    /// Record, at promotion instant `at`, the `ns` of virtual time the shard
+    /// spent down (kill → promotion). Call on the failed primary world's
+    /// counters, alongside [`Counters::record_fault`].
+    pub fn record_downtime(&mut self, at: Time, ns: u64) {
+        if at < self.measure_from {
+            return;
+        }
+        self.downtime_ns += ns;
+    }
+
+    /// Record a foreground op bounced by a shard failure at `at` (call once
+    /// per op, on the failed shard's counters) — the failover twin of
+    /// [`Counters::record_bounce`].
+    pub fn record_failover_bounce(&mut self, at: Time) {
+        if at < self.measure_from {
+            return;
+        }
+        self.failover_bounces += 1;
     }
 
     /// Record one doorbell-batched ingress post rung at `at`, coalescing
@@ -370,6 +416,14 @@ pub struct RunStats {
     /// Foreground ops bounced by a migration fence and re-issued under the
     /// new epoch (each op counts once, however long the fence held).
     pub bounced_ops: u64,
+    /// Mid-run primary failures injected (0 = no fault plan ran).
+    pub faults_injected: u64,
+    /// Virtual time shards spent down (primary dead, mirror not yet
+    /// promoted), summed across shards — the availability gap in ns.
+    pub downtime_ns: u64,
+    /// Foreground ops bounced by a shard failure and re-issued against the
+    /// promoted replica (each op counts once).
+    pub failover_bounces: u64,
     /// Doorbell-batched ingress posts (0 = per-op admission ran).
     pub batched_posts: u64,
     /// Ops coalesced into those posts.
@@ -484,6 +538,27 @@ impl RunStats {
         worst
     }
 
+    /// Summed shard downtime in milliseconds (the `repro sla` unit).
+    pub fn downtime_ms(&self) -> f64 {
+        self.downtime_ns as f64 / 1e6
+    }
+
+    /// Blackout-window depth: completed-op interval buckets that went to
+    /// ZERO strictly between the first and last non-empty buckets — whole
+    /// milliseconds in the middle of the run where nothing completed. A
+    /// healthy run reports 0; a mid-run fault with a multi-ms recovery
+    /// shows the gap here even when mean throughput barely moves.
+    pub fn blackout_intervals(&self) -> usize {
+        let first = self.interval_done.iter().position(|&n| n > 0);
+        let last = self.interval_done.iter().rposition(|&n| n > 0);
+        match (first, last) {
+            (Some(f), Some(l)) if l > f => {
+                self.interval_done[f + 1..l].iter().filter(|&&n| n == 0).count()
+            }
+            _ => 0,
+        }
+    }
+
     /// Collect run stats from the shared counters + substrate accounting.
     /// Cluster-level aggregation happens *before* collection — the cluster
     /// driver merges every shard's [`Counters`] (one timeline) and sums the
@@ -529,6 +604,9 @@ impl RunStats {
             migrated_keys: c.migrated_keys,
             migration_bytes: c.migration_bytes,
             bounced_ops: c.bounced_ops,
+            faults_injected: c.faults_injected,
+            downtime_ns: c.downtime_ns,
+            failover_bounces: c.failover_bounces,
             batched_posts: c.batched_posts,
             batched_ops: c.batched_ops,
             sched_pushes: 0,
@@ -735,6 +813,49 @@ mod tests {
         assert_eq!(s.migrated_keys, 3);
         assert_eq!(s.migration_bytes, 3584);
         assert_eq!(s.bounced_ops, 2);
+    }
+
+    #[test]
+    fn fault_accounting_respects_warmup_and_merges() {
+        let mut c = Counters { measure_from: 100, ..Default::default() };
+        c.record_fault(50); // warmup: dropped
+        c.record_downtime(60, 999); // warmup: dropped
+        c.record_failover_bounce(70); // warmup: dropped
+        c.record_fault(150);
+        c.record_downtime(250, 1_000);
+        c.record_failover_bounce(160);
+        c.record_failover_bounce(170);
+        assert_eq!(c.faults_injected, 1);
+        assert_eq!(c.downtime_ns, 1_000);
+        assert_eq!(c.failover_bounces, 2);
+
+        let mut other = Counters::default();
+        other.record_fault(0);
+        other.record_downtime(5, 500);
+        other.record_failover_bounce(1);
+        c.merge(&other);
+        assert_eq!(c.faults_injected, 2);
+        assert_eq!(c.downtime_ns, 1_500);
+        assert_eq!(c.failover_bounces, 3);
+
+        let s = RunStats::collect(&c, 0, crate::nvm::WriteStats::default(), 0);
+        assert_eq!(s.faults_injected, 2);
+        assert_eq!(s.downtime_ns, 1_500);
+        assert_eq!(s.failover_bounces, 3);
+        assert!((s.downtime_ms() - 0.0015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blackout_intervals_count_midrun_zero_buckets() {
+        // Zeros strictly between the first and last busy buckets count;
+        // leading/trailing empties do not.
+        let gap = RunStats { interval_done: vec![0, 4, 0, 0, 3, 0], ..Default::default() };
+        assert_eq!(gap.blackout_intervals(), 2);
+        let healthy = RunStats { interval_done: vec![5, 5, 5], ..Default::default() };
+        assert_eq!(healthy.blackout_intervals(), 0);
+        assert_eq!(RunStats::default().blackout_intervals(), 0);
+        let single = RunStats { interval_done: vec![0, 7], ..Default::default() };
+        assert_eq!(single.blackout_intervals(), 0);
     }
 
     #[test]

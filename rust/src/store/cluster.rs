@@ -48,18 +48,31 @@
 //! replicas persisted, and the per-world stats split by replica role
 //! ([`RunOutcome::per_shard`] vs [`RunOutcome::per_mirror`]).
 //!
+//! **Fault injection:** `.faults(plan)` ([`super::fault`]) kills shard
+//! primaries at planned virtual instants mid-run and promotes their
+//! recovered mirrors after a blackout; `.read_policy(p)` routes mirrored
+//! gets to either replica. Both are no-ops at their defaults, so plan-free
+//! runs replay bit for bit.
+//!
 //! Scripted ops are split per owning shard with order preserved, and the
 //! cluster-level [`RunStats`] is collected from the merged counters of the
 //! one timeline (sums across shards; the per-shard breakdown rides in
 //! [`RunOutcome::per_shard`]). Scripted clients (`script_at`) drive
 //! failure-injection and Table-1-style measurements through the same
-//! engine; [`Cluster::from_config`] adapts a raw [`DriverConfig`] (what
-//! `crate::workload::run` and the figure sweeps use).
+//! engine; in mirrored, resharded, or faulted runs they ride the
+//! cluster-level pipelined path (window 1 — strictly sequential, as
+//! failure-injection scripts require) so their writes replicate and their
+//! ops survive slot flips and failovers. [`Cluster::from_config`] adapts a
+//! raw [`DriverConfig`] (what `crate::workload::run` and the figure sweeps
+//! use).
 
 use super::cosim::{ClusterState, Marker, Scoped};
+use super::fault::{FaultActor, FaultWorld};
 use super::pipeline::{BaselineDriver, ClientWorld, ErdaDriver, PipelinedClient};
 use super::reshard::{MigrationActor, ReshardWorld, SlotRouter};
-use super::{Db, OpSource, Request, ReshardPlan, Scheme, StoreError, SLOTS};
+use super::{
+    Db, Fault, FaultPlan, OpSource, ReadPolicy, Request, ReshardPlan, Scheme, StoreError, SLOTS,
+};
 use crate::baselines::{ApplierActor, ApplierConfig, BaselineClient, BaselineWorld};
 use crate::erda::{CleanerActor, CleanerConfig, ClientConfig, ErdaClient, ErdaWorld};
 use crate::log::{object, LogConfig};
@@ -114,12 +127,55 @@ impl ClusterBuilder {
     /// Give every shard a synchronously-written mirror world in the same
     /// co-sim engine ([`super::mirror`]): each put/delete replays on the
     /// mirror over the shared fabric/ingress and ACKs only after both
-    /// replicas persisted; reads stay on the primary. The settled [`Db`]
-    /// supports [`Db::fail_primary`] / [`Db::promote_mirror`]. YCSB runs
-    /// only — scripted clients are shard-scoped and stay unreplicated, so
-    /// mirrored engine runs reject them.
+    /// replicas persisted; reads stay on the primary (see [`Self::read_policy`]).
+    /// The settled [`Db`] supports [`Db::inject`] failover. Scripted clients
+    /// ride the cluster-level pipelined path in mirrored runs, so their
+    /// writes replicate too.
     pub fn mirrored(mut self, yes: bool) -> Self {
         self.cfg.mirrored = yes;
+        self
+    }
+
+    /// Where mirrored runs serve GETs from: the primary (default,
+    /// bit-for-bit the pre-policy engine), the mirror, or alternating
+    /// replicas per client ([`ReadPolicy`]). Safe because the mirror ACKs
+    /// before the client does and every read CRC-checks its object.
+    /// Non-default policies require [`Self::mirrored`]`(true)`.
+    pub fn read_policy(mut self, policy: ReadPolicy) -> Self {
+        self.cfg.read_policy = policy;
+        self
+    }
+
+    /// Kill shard primaries mid-run: at each [`FaultPlan`] event's virtual
+    /// instant a [`FaultActor`] on the shared heap marks the shard down —
+    /// in-flight ops bounce back to their clients with failover accounting,
+    /// new ops park — and after the plan's blackout the mirror runs the
+    /// scheme's own recovery and is promoted. Requires
+    /// [`Self::mirrored`]`(true)`. An empty plan spawns NOTHING, so a
+    /// plan-free run replays bit for bit.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.cfg.faults = plan;
+        self
+    }
+
+    /// Apply a client config group (clients/ops/window/arrival) in one call
+    /// ([`crate::workload::ClientConfig`]).
+    pub fn client_group(mut self, g: crate::workload::ClientConfig) -> Self {
+        self.cfg.set_client(g);
+        self
+    }
+
+    /// Apply a replication config group (mirrored/read policy/fault plan)
+    /// in one call ([`crate::workload::ReplicationConfig`]).
+    pub fn replication(mut self, g: crate::workload::ReplicationConfig) -> Self {
+        self.cfg.set_replication(g);
+        self
+    }
+
+    /// Apply an engine config group (scheduler/doorbell/ingress) in one
+    /// call ([`crate::workload::EngineConfig`]).
+    pub fn engine(mut self, g: crate::workload::EngineConfig) -> Self {
+        self.cfg.set_engine(g);
         self
     }
 
@@ -354,8 +410,11 @@ pub struct RunOutcome {
     /// queue depth at cluster level, not per shard.
     pub per_shard: Vec<RunStats>,
     /// One entry per MIRROR world, in shard order; empty for unmirrored
-    /// runs. Mirror rows record no ops of their own (ops ACK on the
-    /// primary) — their payload is the replication work: `mirror_legs`,
+    /// runs. Under the default [`ReadPolicy::Primary`] mirror rows record
+    /// no ops of their own (ops ACK on the primary); mirror-served GETs
+    /// ([`ReadPolicy::MirrorPreferred`] / [`ReadPolicy::RoundRobin`]) and
+    /// post-failover ops on a promoted replica book `ops` on the mirror
+    /// row. Their main payload is the replication work: `mirror_legs`,
     /// `mirror_bytes`, `mirror_leg_ns` and the mirror's NVM/CPU accounting,
     /// also summed into `stats` (`stats.mirror_nvm_programmed_bytes` splits
     /// the NVM share back out).
@@ -448,8 +507,9 @@ impl Cluster {
     }
 
     /// Do the YCSB clients run the windowed/open-loop pipeline? (Scripted
-    /// clients always stay closed loop — failure-injection scripts rely on
-    /// strictly sequential semantics.) Mirrored runs always pipeline: the
+    /// clients always stay strictly sequential — shard-scoped closed loop
+    /// on legacy runs, window-1 cluster-level pipeline on mirrored /
+    /// resharded / faulted ones.) Mirrored runs always pipeline: the
     /// mirror leg is a cluster-level concern (it spans two worlds), and at
     /// `window = 1` the pipelined client reproduces the closed-loop path
     /// bit for bit, so the paper's client model is preserved.
@@ -460,6 +520,8 @@ impl Cluster {
             || cfg.mirrored
             || cfg.reshard.is_some()
             || cfg.doorbell_batch > 1
+            || !cfg.faults.is_empty()
+            || cfg.read_policy != ReadPolicy::Primary
     }
 
     /// The open-loop arrival generator for client `c` (None = closed loop).
@@ -556,12 +618,30 @@ impl Cluster {
         let shards = self.cfg.shards.max(1);
         let script_max = self.script_max_value();
         let Cluster { cfg, preload, scripts } = self;
-        if cfg.mirrored && !scripts.is_empty() {
+        if cfg.read_policy != ReadPolicy::Primary && !cfg.mirrored {
             return Err(StoreError::Unsupported(
-                "mirrored engine runs take YCSB clients only: scripted clients are \
-                 shard-scoped and would write past the mirror (use Db for scripted \
-                 mirrored scenarios)",
+                "read policies other than Primary serve GETs from a mirror replica: \
+                 set mirrored(true)",
             ));
+        }
+        if !cfg.faults.is_empty() {
+            if !cfg.mirrored {
+                return Err(StoreError::Unsupported(
+                    "fault plans kill shard primaries and fail over to their mirrors: \
+                     set mirrored(true)",
+                ));
+            }
+            if cfg.reshard.is_some() {
+                return Err(StoreError::Unsupported(
+                    "fault plans and reshard plans do not compose yet: a promotion \
+                     would have to rendezvous with an in-flight slot migration",
+                ));
+            }
+            if cfg.faults.max_shard() >= shards {
+                return Err(StoreError::Unsupported(
+                    "fault plan kills a shard outside the cluster",
+                ));
+            }
         }
         if let Some(plan) = &cfg.reshard {
             if cfg.mirrored {
@@ -570,24 +650,36 @@ impl Cluster {
                      move would have to migrate the mirror replica in lockstep",
                 ));
             }
-            if !scripts.is_empty() {
-                return Err(StoreError::Unsupported(
-                    "scripted clients are shard-pinned at spawn and cannot follow a \
-                     mid-run slot migration (use YCSB clients with a reshard plan)",
-                ));
-            }
             if plan.moves.iter().any(|m| m.slot >= SLOTS) {
                 return Err(StoreError::Unsupported(
                     "reshard plan references a slot outside the routing table",
                 ));
             }
         }
-        let shard_scripts = Self::split_scripts(scripts, shards);
+        // Mirrored / resharded / faulted runs route scripted clients through
+        // the cluster-level pipelined path (per-op routing, replication,
+        // failover bounce); legacy runs keep the shard-scoped closed-loop
+        // spawn bit for bit.
+        let cluster_scripted = cfg.mirrored || cfg.reshard.is_some() || !cfg.faults.is_empty();
+        let (cluster_scripts, shard_scripts) = if cluster_scripted {
+            (scripts, (0..shards).map(|_| Vec::new()).collect())
+        } else {
+            (Vec::new(), Self::split_scripts(scripts, shards))
+        };
         let owned = Self::shards_with_keys(cfg.workload.record_count, shards);
         let owning: Vec<usize> = (0..shards).filter(|&s| owned[s]).collect();
         Ok(match cfg.scheme {
-            Scheme::Erda => Self::run_erda(&cfg, preload, shard_scripts, &owning, script_max),
-            _ => Self::run_baseline(&cfg, preload, shard_scripts, &owning, script_max),
+            Scheme::Erda => {
+                Self::run_erda(&cfg, preload, shard_scripts, cluster_scripts, &owning, script_max)
+            }
+            _ => Self::run_baseline(
+                &cfg,
+                preload,
+                shard_scripts,
+                cluster_scripts,
+                &owning,
+                script_max,
+            ),
         })
     }
 
@@ -644,10 +736,24 @@ impl Cluster {
         }
     }
 
+    /// Spawn the fault actor when the run carries a non-empty fault plan.
+    /// Same discipline as [`Self::spawn_migration`]: an empty plan spawns
+    /// NOTHING, so a plan-free run is bit-for-bit the pre-fault engine.
+    fn spawn_faults<W: ClientWorld + FaultWorld + 'static>(
+        engine: &mut Engine<ClusterState<W>>,
+        cfg: &DriverConfig,
+    ) {
+        if !cfg.faults.is_empty() {
+            let at = cfg.faults.first_at();
+            engine.spawn(Box::new(FaultActor::new(cfg.faults.clone())), at);
+        }
+    }
+
     fn run_erda(
         cfg: &DriverConfig,
         preload: (u64, usize),
         shard_scripts: Vec<Vec<ScriptSpec>>,
+        cluster_scripts: Vec<ScriptSpec>,
         owning: &[usize],
         script_max: usize,
     ) -> RunOutcome {
@@ -675,9 +781,11 @@ impl Cluster {
             let shard = widx % primaries;
             let mut w = Self::make_erda_world(cfg, preload, shard, shards);
             w.counters.measure_from = cfg.warmup;
+            // Cluster-level scripted clients may issue to any shard, so
+            // every world counts them as active, like the windowed clients.
             w.counters.active_clients = (Self::world_client_count(cfg, shard, owning)
-                + shard_scripts.get(shard).map_or(0, |v| v.len()))
-                as u32;
+                + shard_scripts.get(shard).map_or(0, |v| v.len())
+                + cluster_scripts.len()) as u32;
             worlds.push(w);
         }
         // One event lane per world: cluster traffic is keyed by actor, and
@@ -693,6 +801,7 @@ impl Cluster {
         engine.state.router = SlotRouter::identity(shards);
         engine.spawn(Box::new(Marker), cfg.warmup);
         Self::spawn_migration(&mut engine, cfg);
+        Self::spawn_faults(&mut engine, cfg);
         for (shard, scripts) in shard_scripts.into_iter().enumerate() {
             for s in scripts {
                 let n = s.ops.len() as u64;
@@ -700,6 +809,26 @@ impl Cluster {
                 let client = ErdaClient::new(OpSource::script(s.ops), n, ccfg);
                 engine.spawn(Box::new(Scoped::new(shard, client)), s.start);
             }
+        }
+        // Cluster-level scripted clients: window 1 (strictly sequential, as
+        // failure-injection scripts require), routed per op, replicated and
+        // failover-aware exactly like the YCSB pipeline.
+        for s in cluster_scripts {
+            let n = s.ops.len() as u64;
+            let ccfg = s.cfg.unwrap_or(script_cfg);
+            let client = PipelinedClient::new(
+                ErdaDriver(ccfg),
+                OpSource::script(s.ops),
+                n,
+                1,
+                None,
+                primaries,
+                cfg.mirrored,
+            )
+            .scheduler(cfg.scheduler)
+            .read_policy(cfg.read_policy)
+            .with_faults(!cfg.faults.is_empty());
+            engine.spawn(Box::new(client), s.start);
         }
         if Self::use_pipeline(cfg) {
             for c in 0..cfg.clients as u64 {
@@ -713,7 +842,9 @@ impl Cluster {
                     cfg.mirrored,
                 )
                 .scheduler(cfg.scheduler)
-                .doorbell(cfg.doorbell_batch);
+                .doorbell(cfg.doorbell_batch)
+                .read_policy(cfg.read_policy)
+                .with_faults(!cfg.faults.is_empty());
                 engine.spawn(Box::new(client), 0);
             }
         } else {
@@ -746,6 +877,7 @@ impl Cluster {
         cfg: &DriverConfig,
         preload: (u64, usize),
         shard_scripts: Vec<Vec<ScriptSpec>>,
+        cluster_scripts: Vec<ScriptSpec>,
         owning: &[usize],
         script_max: usize,
     ) -> RunOutcome {
@@ -758,8 +890,8 @@ impl Cluster {
             let mut w = Self::make_baseline_world(cfg, preload, script_max, shard, shards);
             w.counters.measure_from = cfg.warmup;
             w.counters.active_clients = (Self::world_client_count(cfg, shard, owning)
-                + shard_scripts.get(shard).map_or(0, |v| v.len()))
-                as u32;
+                + shard_scripts.get(shard).map_or(0, |v| v.len())
+                + cluster_scripts.len()) as u32;
             worlds.push(w);
         }
         let lanes = worlds.len();
@@ -770,12 +902,29 @@ impl Cluster {
         engine.state.router = SlotRouter::identity(shards);
         engine.spawn(Box::new(Marker), cfg.warmup);
         Self::spawn_migration(&mut engine, cfg);
+        Self::spawn_faults(&mut engine, cfg);
         for (shard, scripts) in shard_scripts.into_iter().enumerate() {
             for s in scripts {
                 let n = s.ops.len() as u64;
                 let client = BaselineClient::new(OpSource::script(s.ops), n);
                 engine.spawn(Box::new(Scoped::new(shard, client)), s.start);
             }
+        }
+        for s in cluster_scripts {
+            let n = s.ops.len() as u64;
+            let client = PipelinedClient::new(
+                BaselineDriver,
+                OpSource::script(s.ops),
+                n,
+                1,
+                None,
+                primaries,
+                cfg.mirrored,
+            )
+            .scheduler(cfg.scheduler)
+            .read_policy(cfg.read_policy)
+            .with_faults(!cfg.faults.is_empty());
+            engine.spawn(Box::new(client), s.start);
         }
         if Self::use_pipeline(cfg) {
             for c in 0..cfg.clients as u64 {
@@ -789,7 +938,9 @@ impl Cluster {
                     cfg.mirrored,
                 )
                 .scheduler(cfg.scheduler)
-                .doorbell(cfg.doorbell_batch);
+                .doorbell(cfg.doorbell_batch)
+                .read_policy(cfg.read_policy)
+                .with_faults(!cfg.faults.is_empty());
                 engine.spawn(Box::new(client), 0);
             }
         } else {
@@ -826,7 +977,7 @@ impl Cluster {
         let events = engine.events();
         let ingress_stats = engine.state.ingress_stats();
         let sched = engine.sched_stats();
-        let ClusterState { worlds, primaries, shard_events, router, .. } = engine.state;
+        let ClusterState { worlds, primaries, shard_events, router, faults, .. } = engine.state;
         let mut merged = Counters::default();
         let mut cpu_total: u128 = 0;
         let mut nvm_total = WriteStats::default();
@@ -865,6 +1016,17 @@ impl Cluster {
         // The settled Db routes exactly as the run ended: identity for
         // plan-free runs, the flipped slot table after a migration.
         db.install_router(router.table);
+        // Replay the run's failovers on the settled handle so shards that
+        // were promoted mid-run keep serving from the promoted replica (the
+        // dead primary's settled world is stale — it missed the blackout's
+        // bounced ops). Promotion re-runs the scheme's recovery on the
+        // settled mirror, which is idempotent on a quiesced world.
+        for shard in 0..primaries {
+            if faults.promoted(shard) {
+                db.inject(Fault::FailPrimary(shard)).expect("settled mirrored shard");
+                db.inject(Fault::PromoteMirror(shard)).expect("settled mirror promotes");
+            }
+        }
         RunOutcome { stats, per_shard, per_mirror, db }
     }
 }
@@ -1292,21 +1454,40 @@ mod tests {
     }
 
     #[test]
-    fn mirrored_run_rejects_scripts_with_a_typed_error() {
-        let err = Cluster::builder()
-            .scheme(Scheme::Erda)
-            .mirrored(true)
-            .records(8)
-            .value_size(32)
-            .script(vec![Request::Get { key: key_of(0) }])
-            .run()
-            .unwrap_err();
-        assert!(matches!(err, StoreError::Unsupported(_)), "typed error, not a panic: {err:?}");
-        assert!(err.to_string().contains("mirrored engine runs"), "{err}");
+    fn mirrored_run_replicates_scripted_writes() {
+        // PR 8 closes the old rejection: scripted clients ride the
+        // cluster-level pipelined path in mirrored runs, so their writes
+        // land on BOTH replicas.
+        for scheme in Scheme::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .mirrored(true)
+                .clients(0)
+                .preload(8, 32)
+                .records(8)
+                .value_size(32)
+                .warmup(0)
+                .script(vec![
+                    Request::Put { key: key_of(0), value: vec![7u8; 32] },
+                    Request::Get { key: key_of(0) },
+                ])
+                .run()
+                .unwrap();
+            assert_eq!(outcome.stats.ops, 2, "{scheme:?}");
+            assert_eq!(outcome.stats.read_misses, 0, "{scheme:?}");
+            assert!(outcome.stats.mirror_legs > 0, "{scheme:?}: the scripted put replicates");
+            let mut db = outcome.db;
+            assert_eq!(db.get(&key_of(0)).unwrap().unwrap(), vec![7u8; 32], "{scheme:?}");
+            assert_eq!(
+                db.mirror_get(&key_of(0)).unwrap().unwrap(),
+                vec![7u8; 32],
+                "{scheme:?}: the mirror holds the scripted write"
+            );
+        }
     }
 
     #[test]
-    fn reshard_rejects_mirrors_scripts_and_bad_slots() {
+    fn reshard_accepts_scripts_but_rejects_mirrors_and_bad_slots() {
         let base = || {
             Cluster::builder()
                 .scheme(Scheme::Erda)
@@ -1323,12 +1504,18 @@ mod tests {
             .run()
             .unwrap_err();
         assert!(matches!(err, StoreError::Unsupported(_)), "{err:?}");
-        let err = base()
+        // Scripted clients now route per op through the cluster-level
+        // pipeline, so they survive a mid-run slot flip.
+        let outcome = base()
             .reshard(ReshardPlan::scale_out(2, 3, 1000))
-            .script(vec![Request::Get { key: key_of(0) }])
+            .script(vec![
+                Request::Put { key: key_of(0), value: vec![5u8; 32] },
+                Request::Get { key: key_of(0) },
+            ])
             .run()
-            .unwrap_err();
-        assert!(matches!(err, StoreError::Unsupported(_)), "{err:?}");
+            .unwrap();
+        assert_eq!(outcome.stats.ops, 2 * 10 + 2, "scripted ops complete across the flip");
+        assert_eq!(outcome.stats.read_misses, 0);
         let err = base()
             .reshard(ReshardPlan {
                 at: 1000,
@@ -1337,6 +1524,138 @@ mod tests {
             .run()
             .unwrap_err();
         assert!(err.to_string().contains("slot outside"), "{err}");
+    }
+
+    #[test]
+    fn fault_plans_validate_their_prerequisites() {
+        let base = || {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(2)
+                .clients(1)
+                .ops_per_client(10)
+                .records(16)
+                .value_size(32)
+                .warmup(0)
+        };
+        let err = base().faults(FaultPlan::fail_at(0, 1000, 1000)).run().unwrap_err();
+        assert!(err.to_string().contains("set mirrored(true)"), "{err}");
+        let err = base()
+            .mirrored(true)
+            .faults(FaultPlan::fail_at(2, 1000, 1000))
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("outside the cluster"), "{err}");
+        let err = base().read_policy(ReadPolicy::MirrorPreferred).run().unwrap_err();
+        assert!(err.to_string().contains("mirror replica"), "{err}");
+    }
+
+    #[test]
+    fn midrun_fault_fails_over_and_loses_no_acked_write() {
+        // The PR 8 tentpole end to end, for every scheme: kill shard 0's
+        // primary mid-run, recover + promote its mirror after the blackout.
+        // Every client finishes its quota, nothing is lost, downtime and
+        // bounce accounting land on the failed shard, and the settled Db
+        // serves the promoted replica.
+        for scheme in Scheme::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .shards(2)
+                .mirrored(true)
+                .clients(4)
+                .window(2)
+                .workload(Workload::UpdateHeavy)
+                .ops_per_client(150)
+                .records(64)
+                .value_size(64)
+                .warmup(0)
+                .faults(FaultPlan::fail_at(0, 50_000, 100_000))
+                .run()
+                .unwrap();
+            let s = &outcome.stats;
+            assert_eq!(s.ops, 4 * 150, "{scheme:?}: the blackout must not eat ops");
+            assert_eq!(s.read_misses, 0, "{scheme:?}: no acked write lost in failover");
+            assert_eq!(s.faults_injected, 1, "{scheme:?}");
+            assert_eq!(s.downtime_ns, 100_000, "{scheme:?}: blackout = plan's recover_after");
+            assert!(s.failover_bounces > 0, "{scheme:?}: the kill caught in-flight ops");
+            assert_eq!(
+                outcome.per_shard[0].faults_injected, 1,
+                "{scheme:?}: the fault accounts on the killed shard"
+            );
+            assert_eq!(outcome.per_shard[1].faults_injected, 0, "{scheme:?}");
+            let mut db = outcome.db;
+            assert!(
+                !db.has_mirror(0),
+                "{scheme:?}: shard 0 is single-homed on the promoted replica"
+            );
+            assert!(db.has_mirror(1), "{scheme:?}: shard 1 keeps its mirror");
+            for rank in 0..8u64 {
+                let id = crate::ycsb::zipf::scrambled_id(rank, 64);
+                let key = key_of(id);
+                assert!(
+                    db.get(&key).unwrap().is_some(),
+                    "{scheme:?}: preloaded key {rank} must survive the failover"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fault_runs_are_deterministic() {
+        let run = || {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(2)
+                .mirrored(true)
+                .clients(3)
+                .window(4)
+                .workload(Workload::UpdateHeavy)
+                .ops_per_client(120)
+                .records(48)
+                .value_size(64)
+                .warmup(0)
+                .faults(FaultPlan::fail_at(1, 40_000, 80_000))
+                .run()
+                .unwrap()
+                .stats
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.duration_ns, b.duration_ns);
+        assert_eq!(a.failover_bounces, b.failover_bounces);
+        assert_eq!(a.downtime_ns, b.downtime_ns);
+        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
+    }
+
+    #[test]
+    fn read_policies_split_mirrored_gets_across_replicas() {
+        let run = |policy: ReadPolicy| {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(2)
+                .mirrored(true)
+                .clients(2)
+                .workload(Workload::ReadMostly)
+                .ops_per_client(100)
+                .records(48)
+                .value_size(64)
+                .warmup(0)
+                .read_policy(policy)
+                .run()
+                .unwrap()
+        };
+        let primary = run(ReadPolicy::Primary);
+        assert!(primary.per_mirror.iter().all(|m| m.ops == 0), "Primary never reads the mirror");
+        for policy in [ReadPolicy::MirrorPreferred, ReadPolicy::RoundRobin] {
+            let outcome = run(policy);
+            assert_eq!(outcome.stats.ops, 200, "{policy:?}");
+            assert_eq!(outcome.stats.read_misses, 0, "{policy:?}: mirror reads are consistent");
+            assert!(
+                outcome.per_mirror.iter().map(|m| m.ops).sum::<u64>() > 0,
+                "{policy:?}: some gets must serve from the mirror"
+            );
+        }
     }
 
     #[test]

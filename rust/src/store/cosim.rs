@@ -30,6 +30,7 @@
 use crate::rdma::{Ingress, IngressStats};
 use crate::sim::{Actor, Step, Time};
 
+use super::fault::FaultState;
 use super::pipeline::ClientWorld;
 use super::reshard::SlotRouter;
 
@@ -59,6 +60,13 @@ pub(crate) struct ClusterState<W> {
     /// plan-free runs reproduce exactly; the cluster driver overrides the
     /// base shard count when a reshard plan grows the world vector.
     pub router: SlotRouter,
+    /// Per-shard failover state the pipelined clients and the
+    /// [`super::fault::FaultActor`] share: which primaries fail-stopped,
+    /// which shards are mirror-served. All-false unless a [`FaultPlan`]
+    /// runs, so plan-free runs replay bit for bit.
+    ///
+    /// [`FaultPlan`]: super::fault::FaultPlan
+    pub faults: FaultState,
 }
 
 impl<W> ClusterState<W> {
@@ -82,6 +90,7 @@ impl<W> ClusterState<W> {
             ingress,
             shard_events: vec![0; n],
             router: SlotRouter::identity(primaries),
+            faults: FaultState::new(primaries),
         }
     }
 

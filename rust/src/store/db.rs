@@ -9,10 +9,16 @@
 //! reads run the full consistency path — checksum gate, repair, fallback.
 //! That makes it both the quickest way to use the store as a plain KV map
 //! and the vehicle for the backend-agnostic conformance suite, including
-//! failure injection ([`Request::CrashDuringPut`]) and crash recovery —
-//! cluster-wide ([`Db::crash`]/[`Db::recover`]) or confined to a single
-//! shard ([`Db::crash_shard`]/[`Db::recover_shard`]), which leaves the
-//! other shards untouched.
+//! failure injection and crash recovery — cluster-wide
+//! ([`Db::crash`]/[`Db::recover`]) or confined to a single shard, which
+//! leaves the other shards untouched.
+//!
+//! **Failure injection** goes through ONE typed front door:
+//! [`Db::inject`]`(`[`Fault`]`)` — crash a shard's volatile state, tear a
+//! write mid-put, fail a primary, promote a mirror. The older per-fault
+//! methods ([`Db::crash_shard`], [`Db::crash_during_put`],
+//! [`Db::fail_primary`], [`Db::promote_mirror`]) remain as thin wrappers
+//! for source compatibility.
 //!
 //! **Replication** ([`super::mirror`]): a handle built with
 //! `ClusterBuilder::mirrored(true)` carries one mirror world per shard.
@@ -40,6 +46,31 @@ use crate::nvm::WriteStats;
 enum Inner {
     Erda(Box<ErdaWorld>),
     Baseline(Box<BaselineWorld>),
+}
+
+/// A typed fault to inject into a settled [`Db`] — the single front door
+/// for the failure-injection surface ([`Db::inject`]). Each variant maps
+/// onto one of the scenarios the conformance suite exercises; composing
+/// them scripts a full failover
+/// (`FailPrimary(s)` then `PromoteMirror(s)`), exactly what the engine's
+/// [`super::fault::FaultPlan`] replays mid-run on virtual time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Power-fail one shard server: volatile bookkeeping (log tails,
+    /// append indices) is lost; follow with [`Db::recover_shard`]. Erda
+    /// only, like [`Db::crash_shard`].
+    CrashShard(usize),
+    /// A client dies mid-put: only the first `chunks` 64-byte chunks of
+    /// the encoded object persist (the §4.3 torn-write window, frozen).
+    TearWrite { key: Vec<u8>, value: Vec<u8>, chunks: usize },
+    /// Fail-stop the primary of a mirrored shard; ops on it return
+    /// [`StoreError::ShardDown`] until its mirror is promoted.
+    FailPrimary(usize),
+    /// Promote the shard's mirror after `FailPrimary`: the mirror recovers
+    /// onto its last checksum-consistent version and serves as the (now
+    /// single-homed) primary. The only variant that yields a
+    /// [`RecoveryReport`].
+    PromoteMirror(usize),
 }
 
 /// A synchronous store handle over one world per shard (see module docs).
@@ -278,8 +309,25 @@ impl Db {
         }
     }
 
+    /// Inject a typed [`Fault`] — the unified failure-injection entry
+    /// point. Returns the recovery report for [`Fault::PromoteMirror`]
+    /// (`None` for every other variant, which has no report to give).
+    pub fn inject(&mut self, fault: Fault) -> Result<Option<RecoveryReport>, StoreError> {
+        match fault {
+            Fault::CrashShard(shard) => self.crash_shard(shard).map(|()| None),
+            Fault::TearWrite { key, value, chunks } => {
+                self.crash_during_put(&key, &value, chunks).map(|()| None)
+            }
+            Fault::FailPrimary(shard) => self.fail_primary(shard).map(|()| None),
+            Fault::PromoteMirror(shard) => self.promote_mirror(shard).map(Some),
+        }
+    }
+
     /// Crash one shard server, leaving the other shards untouched —
     /// independent failure domains are the point of the partition.
+    ///
+    /// Deprecated: prefer [`Db::inject`]`(Fault::CrashShard(shard))`; kept
+    /// as a thin wrapper for source compatibility.
     pub fn crash_shard(&mut self, shard: usize) -> Result<(), StoreError> {
         match self.shards.get_mut(shard) {
             Some(Inner::Erda(w)) => {
@@ -296,7 +344,10 @@ impl Db {
     /// Take the primary of `shard` out of service (a fail-stop server
     /// failure). Requires a live mirror to fail over to; until
     /// [`Db::promote_mirror`] runs, every op routed to the shard returns
-    /// [`StoreError::Unsupported`].
+    /// [`StoreError::ShardDown`].
+    ///
+    /// Deprecated: prefer [`Db::inject`]`(Fault::FailPrimary(shard))`;
+    /// kept as a thin wrapper for source compatibility.
     pub fn fail_primary(&mut self, shard: usize) -> Result<(), StoreError> {
         if shard >= self.shards.len() {
             return Err(StoreError::Unsupported("shard index out of range"));
@@ -315,6 +366,9 @@ impl Db {
     /// rolled back by checksum); the baselines drain their staged queue
     /// through the applier's CRC gate. The shard is single-homed afterwards
     /// ([`Db::has_mirror`] turns false) and serves ops again.
+    ///
+    /// Deprecated: prefer [`Db::inject`]`(Fault::PromoteMirror(shard))`;
+    /// kept as a thin wrapper for source compatibility.
     pub fn promote_mirror(&mut self, shard: usize) -> Result<RecoveryReport, StoreError> {
         if !self.failed.get(shard).copied().unwrap_or(false) {
             return Err(StoreError::Unsupported("primary still alive — fail_primary first"));
@@ -340,7 +394,7 @@ impl Db {
     /// The primary of `shard` must be in service.
     fn check_alive(&self, shard: usize) -> Result<(), StoreError> {
         if self.failed.get(shard).copied().unwrap_or(false) {
-            return Err(StoreError::Unsupported("primary failed — promote_mirror first"));
+            return Err(StoreError::ShardDown { shard });
         }
         Ok(())
     }
@@ -428,6 +482,9 @@ impl Db {
     /// writer dies during its primary leg, so the mirror leg never issues
     /// and the mirror keeps the last consistent version — the state
     /// [`Db::promote_mirror`] recovers onto.
+    ///
+    /// Deprecated: prefer [`Db::inject`]`(Fault::TearWrite { .. })`; kept
+    /// as a thin wrapper for source compatibility.
     pub fn crash_during_put(
         &mut self,
         key: &[u8],
@@ -956,15 +1013,26 @@ mod tests {
             // Tear an in-flight update on the primary (chunks: 0 — the
             // 44-byte object would fit one 64-byte chunk whole), then lose
             // the primary entirely.
-            db.crash_during_put(&key_of(2), &vec![0xEEu8; 16], 0).unwrap();
-            db.fail_primary(0).unwrap();
-            // A failed shard serves nothing until promotion.
-            assert!(matches!(db.get(&key_of(0)), Err(StoreError::Unsupported(_))), "{scheme:?}");
+            db.inject(Fault::TearWrite { key: key_of(2), value: vec![0xEEu8; 16], chunks: 0 })
+                .unwrap();
+            db.inject(Fault::FailPrimary(0)).unwrap();
+            // A failed shard serves nothing until promotion — the typed
+            // ShardDown error, naming the shard.
             assert!(
-                matches!(db.put(&key_of(0), b"fresh-val-16byte"), Err(StoreError::Unsupported(_))),
+                matches!(db.get(&key_of(0)), Err(StoreError::ShardDown { shard: 0 })),
                 "{scheme:?}"
             );
-            let report = db.promote_mirror(0).unwrap();
+            assert!(
+                matches!(
+                    db.put(&key_of(0), b"fresh-val-16byte"),
+                    Err(StoreError::ShardDown { shard: 0 })
+                ),
+                "{scheme:?}"
+            );
+            let report = db
+                .inject(Fault::PromoteMirror(0))
+                .unwrap()
+                .expect("promotion yields a recovery report");
             // The promoted replica serves the last checksum-consistent
             // version of every key: committed writes survive, the torn
             // update never happened, deletes hold.
@@ -999,16 +1067,37 @@ mod tests {
         // Unmirrored handles cannot fail over.
         let mut db = open(Scheme::Erda);
         assert!(!db.is_mirrored());
-        assert!(matches!(db.fail_primary(0), Err(StoreError::Unsupported(_))));
-        assert!(matches!(db.promote_mirror(0), Err(StoreError::Unsupported(_))));
+        assert!(matches!(db.inject(Fault::FailPrimary(0)), Err(StoreError::Unsupported(_))));
+        assert!(matches!(db.inject(Fault::PromoteMirror(0)), Err(StoreError::Unsupported(_))));
         // Promotion requires an explicit primary failure first.
         let mut db = open_mirrored(Scheme::Erda);
-        assert!(matches!(db.promote_mirror(0), Err(StoreError::Unsupported(_))));
+        assert!(matches!(db.inject(Fault::PromoteMirror(0)), Err(StoreError::Unsupported(_))));
         // Out-of-range shards are typed errors, not panics.
-        assert!(matches!(db.fail_primary(9), Err(StoreError::Unsupported(_))));
+        assert!(matches!(db.inject(Fault::FailPrimary(9)), Err(StoreError::Unsupported(_))));
         // mirror_get on an unmirrored handle errors.
         let mut db = open(Scheme::Erda);
         assert!(matches!(db.mirror_get(&key_of(0)), Err(StoreError::Unsupported(_))));
+    }
+
+    #[test]
+    fn inject_wrappers_match_the_legacy_methods() {
+        // The typed front door and the legacy per-fault methods are the
+        // same machinery: inject(CrashShard) + recover_shard round-trips a
+        // put, and inject(TearWrite) leaves the torn key rolled back
+        // exactly like crash_during_put does.
+        let mut db = open(Scheme::Erda);
+        db.put(&key_of(0), b"fresh-val-16byte").unwrap();
+        assert_eq!(db.inject(Fault::CrashShard(0)).unwrap(), None);
+        db.recover_shard(0).unwrap();
+        assert_eq!(db.get(&key_of(0)).unwrap().as_deref(), Some(&b"fresh-val-16byte"[..]));
+        db.inject(Fault::TearWrite { key: key_of(0), value: vec![0xEEu8; 16], chunks: 0 })
+            .unwrap();
+        assert_eq!(
+            db.get(&key_of(0)).unwrap().as_deref(),
+            Some(&b"fresh-val-16byte"[..]),
+            "torn update rolls back to the previous version"
+        );
+        assert!(db.op_stats().torn_detected > 0);
     }
 
     fn open_sharded(scheme: Scheme, shards: usize) -> Db {

@@ -1,0 +1,350 @@
+//! Mid-run fault injection with mirror failover.
+//!
+//! PR 5's failover acts only on the settled [`super::Db`] — no run ever
+//! observes a primary dying while requests are in flight, so the
+//! availability cost of recovery (the paper's §4.2 consistency claim made
+//! operational) is invisible. This module closes that gap with the same
+//! shape [`super::reshard`] used for elastic routing:
+//!
+//! * A typed [`FaultPlan`] / [`FaultEvent`] API (deliberately mirroring
+//!   [`super::ReshardPlan`]): at virtual instant `at`, the primary world of
+//!   `shard` fail-stops; `recover_after` ns later the shard's mirror has
+//!   finished the scheme's own §4.2 recovery and is **promoted** to serve.
+//! * A [`FaultActor`] on the ONE co-sim `(time, seq)` event heap executing
+//!   the plan. The kill itself is a flag flip in [`FaultState`] (shared
+//!   through [`super::cosim::ClusterState`]); the *clients* observe it —
+//!   an in-flight lane on the dead world completes with the semantics of a
+//!   typed [`super::StoreError::ShardDown`] at its natural completion
+//!   instant (the virtual time an RDMA timeout would fire) and is bounced
+//!   back to pending through the same park/bounce machinery migration
+//!   fences use, then re-issues against the promoted replica. No
+//!   acknowledged write is ever lost: a put ACKs only after both replicas
+//!   persisted, so everything acked lives on the mirror the shard fails
+//!   over to.
+//! * At the recovery instant the actor runs [`FaultWorld`]'s
+//!   `recover_for_promotion` on the mirror world — Erda wipes the volatile
+//!   bookkeeping and replays the §4.2 checksum-gated log scan; the
+//!   baselines drain their staged ring through the applier's CRC gate —
+//!   then flips the shard to mirror-served and records the downtime on the
+//!   failed shard's counters ([`crate::metrics::Counters::downtime_ns`]).
+//!
+//! **No plan, no actor:** an empty [`FaultPlan`] spawns nothing and
+//! [`FaultState`] stays all-false, so a fault-free run replays the exact
+//! PR 7 event sequence bit for bit (pinned in `rust/tests/fault.rs`).
+//!
+//! The failed primary never rejoins in this PR — the shard is single-homed
+//! after promotion (no new mirror legs), which is exactly what
+//! [`super::Db::promote_mirror`] models on the settled handle. Re-silvering
+//! a replacement mirror is ROADMAP material.
+
+use std::collections::VecDeque;
+
+use crate::sim::{Actor, Step, Time};
+
+use super::cosim::ClusterState;
+use super::mirror::mirror_world_index;
+use super::pipeline::ClientWorld;
+
+/// One planned fail-stop: at virtual instant `at`, shard `shard`'s primary
+/// world dies; `recover_after` ns later its mirror has finished recovery
+/// and is promoted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// The shard whose PRIMARY fail-stops.
+    pub shard: usize,
+    /// Virtual kill instant.
+    pub at: Time,
+    /// Virtual recovery duration: promotion happens at `at + recover_after`
+    /// (the §4.2 log-scan time, modeled as a plan parameter so sweeps can
+    /// stretch the blackout window).
+    pub recover_after: Time,
+}
+
+/// A fault plan: the fail-stop events to inject, executed in kill-instant
+/// order, one failover at a time. An empty plan is a no-op: no actor
+/// spawns, no event fires, the run is bit-for-bit a plain run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The canonical single-fault plan: kill `shard`'s primary at `at`,
+    /// promote its mirror `recover_after` ns later.
+    pub fn fail_at(shard: usize, at: Time, recover_after: Time) -> Self {
+        FaultPlan { events: vec![FaultEvent { shard, at, recover_after }] }
+    }
+
+    /// No events — the bit-for-bit no-op the default run uses.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Highest shard id the plan kills (the cluster driver validates it
+    /// against the shard count).
+    pub fn max_shard(&self) -> usize {
+        self.events.iter().map(|e| e.shard).max().unwrap_or(0)
+    }
+
+    /// Earliest kill instant (where the cluster driver spawns the actor).
+    pub fn first_at(&self) -> Time {
+        self.events.iter().map(|e| e.at).min().unwrap_or(0)
+    }
+}
+
+/// Per-shard failover state, shared through the cluster state so the
+/// pipelined clients and the fault actor coordinate on one view. All-false
+/// by default — a plan-free run never touches it.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct FaultState {
+    /// Primary world `s` fail-stopped (stays true forever — the dead
+    /// primary never rejoins).
+    killed: Vec<bool>,
+    /// Shard `s` is served by its promoted mirror.
+    promoted: Vec<bool>,
+    /// Kill instant per shard (valid while killed).
+    down_since: Vec<Time>,
+    /// Accumulated kill → promotion gap per shard.
+    downtime_ns: Vec<u64>,
+}
+
+impl FaultState {
+    pub fn new(primaries: usize) -> Self {
+        FaultState {
+            killed: vec![false; primaries],
+            promoted: vec![false; primaries],
+            down_since: vec![0; primaries],
+            downtime_ns: vec![0; primaries],
+        }
+    }
+
+    /// Fail-stop `shard`'s primary at `now`.
+    pub fn kill(&mut self, shard: usize, now: Time) {
+        debug_assert!(!self.killed[shard], "shard {shard} killed twice");
+        self.killed[shard] = true;
+        self.down_since[shard] = now;
+    }
+
+    /// Promote `shard`'s mirror at `now`; returns the downtime this fault
+    /// opened (kill → promotion, ns).
+    pub fn promote(&mut self, shard: usize, now: Time) -> u64 {
+        debug_assert!(self.killed[shard] && !self.promoted[shard]);
+        self.promoted[shard] = true;
+        let gap = now.saturating_sub(self.down_since[shard]);
+        self.downtime_ns[shard] += gap;
+        gap
+    }
+
+    /// Is `shard` currently unable to serve (primary dead, mirror not yet
+    /// promoted)? New ops on it park until promotion.
+    pub fn is_down(&self, shard: usize) -> bool {
+        shard < self.killed.len() && self.killed[shard] && !self.promoted[shard]
+    }
+
+    /// Was `world` (an index into the co-sim world vector) fail-stopped?
+    /// True only for killed primaries — mirrors never die here — and stays
+    /// true after promotion: a lane still in flight on the dead primary
+    /// must bounce no matter when its completion event pops.
+    pub fn world_killed(&self, world: usize) -> bool {
+        world < self.killed.len() && self.killed[world]
+    }
+
+    /// Is `shard` served by its promoted mirror?
+    pub fn promoted(&self, shard: usize) -> bool {
+        shard < self.promoted.len() && self.promoted[shard]
+    }
+
+    /// Any shard currently in its blackout window?
+    pub fn any_down(&self) -> bool {
+        (0..self.killed.len()).any(|s| self.is_down(s))
+    }
+
+    /// The world serving `shard`'s data right now: the promoted mirror
+    /// after failover, the primary otherwise.
+    pub fn serving_world(&self, primaries: usize, shard: usize) -> usize {
+        if self.promoted(shard) {
+            mirror_world_index(primaries, shard)
+        } else {
+            shard
+        }
+    }
+}
+
+/// The world surface promotion needs: run the scheme's own §4.2 recovery so
+/// the mirror can serve as primary — implemented by both shared world types
+/// so ONE actor fails over every scheme.
+pub(crate) trait FaultWorld {
+    /// Recover this (mirror) world onto its last checksum-consistent
+    /// version: Erda wipes volatile bookkeeping and replays the §4.2
+    /// log-scan; the baselines drain their staged queue through the
+    /// applier's CRC gate. Mirrors of the settled-handle logic in
+    /// [`super::Db::promote_mirror`].
+    fn recover_for_promotion(&mut self);
+}
+
+impl FaultWorld for crate::erda::ErdaWorld {
+    fn recover_for_promotion(&mut self) {
+        for h in 0..self.server.num_heads() {
+            let head = self.server.log.head_mut(h as u8);
+            head.tail = 0;
+            head.index.clear();
+        }
+        let crate::erda::ErdaWorld { nvm, server, .. } = self;
+        let _ = crate::erda::recover(server, nvm, &mut crate::erda::LocalCheck);
+    }
+}
+
+impl FaultWorld for crate::baselines::BaselineWorld {
+    fn recover_for_promotion(&mut self) {
+        while let Some((_, verdict)) = self.server.apply_one(&mut self.nvm) {
+            match verdict {
+                crate::baselines::ApplyVerdict::Applied => self.counters.applied += 1,
+                crate::baselines::ApplyVerdict::Torn => self.counters.inconsistencies += 1,
+                crate::baselines::ApplyVerdict::Skipped => {}
+            }
+        }
+    }
+}
+
+/// The fault actor: executes a [`FaultPlan`] on the shared co-sim event
+/// heap, one failover at a time.
+///
+/// Per event: at the kill instant, flip the shard down in [`FaultState`]
+/// and count the fault on the failed primary's counters — the clients do
+/// the rest (bounce in-flight lanes, park new draws). At the recovery
+/// instant, run the mirror's own recovery, promote it, and record the
+/// downtime. Never spawned for an empty plan.
+pub(crate) struct FaultActor {
+    events: VecDeque<FaultEvent>,
+    /// Shard whose recovery completes at the next step.
+    recovering: Option<usize>,
+}
+
+impl FaultActor {
+    pub fn new(mut plan: FaultPlan) -> Self {
+        // Kill-instant order, stable for determinism.
+        plan.events.sort_by_key(|e| e.at);
+        FaultActor { events: plan.events.into(), recovering: None }
+    }
+}
+
+impl<W: ClientWorld + FaultWorld> Actor<ClusterState<W>> for FaultActor {
+    fn step(&mut self, s: &mut ClusterState<W>, now: Time) -> Step {
+        // Recovery instant: the mirror finished its §4.2 scan — promote.
+        if let Some(shard) = self.recovering.take() {
+            let mw = mirror_world_index(s.primaries, shard);
+            s.worlds[mw].recover_for_promotion();
+            let gap = s.faults.promote(shard, now);
+            s.worlds[shard].counters_mut().record_downtime(now, gap);
+            return match self.events.front() {
+                Some(next) => Step::At(next.at.max(now)),
+                None => Step::Done,
+            };
+        }
+
+        // Kill instant: fail-stop the primary; clients bounce off the flag.
+        match self.events.pop_front() {
+            None => Step::Done,
+            Some(ev) => {
+                s.faults.kill(ev.shard, now);
+                s.worlds[ev.shard].counters_mut().record_fault(now);
+                self.recovering = Some(ev.shard);
+                // recover_after = 0 still promotes one quantum later so the
+                // kill and the promotion stay distinct instants.
+                Step::At(now + ev.recover_after.max(1))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::erda::ErdaWorld;
+    use crate::log::LogConfig;
+    use crate::nvm::NvmConfig;
+    use crate::sim::{Engine, Timing};
+    use crate::ycsb::key_of;
+
+    #[test]
+    fn plan_helpers_and_empty_default() {
+        let empty = FaultPlan::default();
+        assert!(empty.is_empty());
+        assert_eq!(empty.max_shard(), 0);
+        assert_eq!(empty.first_at(), 0);
+        let plan = FaultPlan::fail_at(1, 5_000, 2_000);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.max_shard(), 1);
+        assert_eq!(plan.first_at(), 5_000);
+        assert_eq!(plan.events, vec![FaultEvent { shard: 1, at: 5_000, recover_after: 2_000 }]);
+    }
+
+    #[test]
+    fn fault_state_tracks_blackout_and_promotion() {
+        let mut f = FaultState::new(2);
+        assert!(!f.any_down());
+        assert!(!f.is_down(0) && !f.promoted(0));
+        assert_eq!(f.serving_world(2, 1), 1);
+        f.kill(1, 1_000);
+        assert!(f.is_down(1) && f.any_down());
+        assert!(f.world_killed(1) && !f.world_killed(0));
+        assert!(!f.world_killed(3), "mirror worlds never die here");
+        assert_eq!(f.serving_world(2, 1), 1, "still routed at the (dead) primary pre-promotion");
+        let gap = f.promote(1, 3_500);
+        assert_eq!(gap, 2_500);
+        assert!(!f.is_down(1) && !f.any_down());
+        assert!(f.promoted(1));
+        assert!(f.world_killed(1), "the dead primary stays dead after promotion");
+        assert_eq!(f.serving_world(2, 1), 3, "promoted shard serves from its mirror world");
+        assert_eq!(f.downtime_ns[1], 2_500);
+    }
+
+    fn world_pair() -> Vec<ErdaWorld> {
+        let mk = || {
+            let mut w = ErdaWorld::new(
+                Timing::default(),
+                NvmConfig { capacity: 16 << 20 },
+                LogConfig::default(),
+                1 << 10,
+            );
+            w.preload(64, 32);
+            w.nvm.reset_stats();
+            w
+        };
+        vec![mk(), mk()]
+    }
+
+    #[test]
+    fn fault_actor_kills_then_promotes_the_mirror() {
+        // One shard + its mirror; kill at 10 µs, recover 5 µs later.
+        let mut e = Engine::new(ClusterState::with_mirrors(world_pair(), None, 1));
+        e.spawn(Box::new(FaultActor::new(FaultPlan::fail_at(0, 10_000, 5_000))), 10_000);
+        e.run();
+        assert!(e.state.faults.world_killed(0));
+        assert!(e.state.faults.promoted(0));
+        assert!(!e.state.faults.is_down(0), "blackout ends at promotion");
+        assert_eq!(e.state.faults.downtime_ns[0], 5_000);
+        assert_eq!(e.state.worlds[0].counters.faults_injected, 1);
+        assert_eq!(e.state.worlds[0].counters.downtime_ns, 5_000);
+        // The promoted mirror recovered onto a readable, consistent state.
+        e.state.worlds[1].settle();
+        for i in 0..64u64 {
+            assert_eq!(
+                e.state.worlds[1].get(&key_of(i)).as_deref(),
+                Some(&vec![0xA5u8; 32][..]),
+                "preloaded key readable on the promoted mirror"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_plan_leaves_state_untouched() {
+        // The no-op guarantee: FaultPlan::default() spawns no actor (the
+        // cluster driver checks is_empty), and a fresh FaultState reports
+        // nothing down and identity serving.
+        let s: ClusterState<u64> = ClusterState::new(vec![0, 0], None);
+        assert!(!s.faults.any_down());
+        assert_eq!(s.faults.serving_world(2, 0), 0);
+        assert_eq!(s.faults.serving_world(2, 1), 1);
+    }
+}

@@ -11,8 +11,8 @@
 //! Read After Write baselines — and the op ACKs only after **both**
 //! replicas persisted
 //! (synchronous mirroring, per the RDMA remote-mirroring line of Tavakkol
-//! et al. in PAPERS.md). Reads stay on the primary (linearizable reads from
-//! the primary replica).
+//! et al. in PAPERS.md). Reads go to the primary by default, but a
+//! [`ReadPolicy`] can serve them from either replica — see below.
 //!
 //! The paper's property does the heavy lifting here: Erda's checksum-gated,
 //! zero-copy writes give the mirror data integrity *for free* — a mirror
@@ -84,6 +84,58 @@ pub(crate) fn replicate(req: &Request) -> Option<Request> {
     }
 }
 
+/// Which replica serves a mirrored shard's **gets**.
+///
+/// Safety argument: every read in every scheme is CRC-gated — Erda
+/// validates the fetched log entry's checksum client-side and the baselines
+/// verify staged records before applying — so a get served from the mirror
+/// can never return a torn or half-replicated value; it either verifies or
+/// falls back exactly like a primary read. And because a put ACKs only
+/// after BOTH replicas persisted, every *acknowledged* write is readable
+/// from either replica. The only divergence window is an in-flight
+/// (unacknowledged) put from a *different* client, where the mirror may
+/// still serve the previous committed version — permitted, since that
+/// write has not yet been acknowledged to anyone.
+///
+/// Writes always route primary-first regardless of policy (the mirror leg
+/// replays them), so the policy never weakens the mirroring contract.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReadPolicy {
+    /// All gets on the primary (the PR 5 behavior; the default).
+    #[default]
+    Primary,
+    /// All gets on the mirror — drains read load off the primary entirely
+    /// (useful when the primary saturates on writes under Zipfian skew).
+    MirrorPreferred,
+    /// Deterministic per-client alternation between primary and mirror —
+    /// splits read load roughly evenly.
+    RoundRobin,
+}
+
+impl ReadPolicy {
+    pub const ALL: [ReadPolicy; 3] =
+        [ReadPolicy::Primary, ReadPolicy::MirrorPreferred, ReadPolicy::RoundRobin];
+
+    /// Stable CLI / column id.
+    pub fn id(&self) -> &'static str {
+        match self {
+            ReadPolicy::Primary => "primary",
+            ReadPolicy::MirrorPreferred => "mirror",
+            ReadPolicy::RoundRobin => "rr",
+        }
+    }
+
+    /// Parse a CLI spelling (the inverse of [`ReadPolicy::id`]).
+    pub fn parse(s: &str) -> Option<ReadPolicy> {
+        match s {
+            "primary" => Some(ReadPolicy::Primary),
+            "mirror" | "mirror-preferred" => Some(ReadPolicy::MirrorPreferred),
+            "rr" | "round-robin" => Some(ReadPolicy::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +153,17 @@ mod tests {
         assert_eq!(mirror_world_index(1, 0), 1);
         assert_eq!(mirror_world_index(4, 0), 4);
         assert_eq!(mirror_world_index(4, 3), 7);
+    }
+
+    #[test]
+    fn read_policy_ids_round_trip_and_default_is_primary() {
+        assert_eq!(ReadPolicy::default(), ReadPolicy::Primary);
+        for p in ReadPolicy::ALL {
+            assert_eq!(ReadPolicy::parse(p.id()), Some(p));
+        }
+        assert_eq!(ReadPolicy::parse("mirror-preferred"), Some(ReadPolicy::MirrorPreferred));
+        assert_eq!(ReadPolicy::parse("round-robin"), Some(ReadPolicy::RoundRobin));
+        assert_eq!(ReadPolicy::parse("quorum"), None);
     }
 
     #[test]

@@ -27,9 +27,16 @@
 //!   this function and supports per-shard crash/recovery.
 //! * [`mirror`] — RDMA synchronous mirroring: `.mirrored(true)` gives every
 //!   shard a mirror world in the same co-sim engine; puts/deletes replay on
-//!   the mirror before they ACK, reads stay on the primary, and
-//!   [`Db::fail_primary`] / [`Db::promote_mirror`] fail over onto the
-//!   mirror's last checksum-consistent version.
+//!   the mirror before they ACK, a [`ReadPolicy`] picks which replica
+//!   serves gets (primary by default; either is safe — every read is
+//!   CRC-gated), and [`Db::inject`] fails over onto the mirror's last
+//!   checksum-consistent version.
+//! * [`fault`] — mid-run fault injection: a typed [`FaultPlan`] kills a
+//!   primary world at a virtual instant; in-flight lanes on the shard
+//!   complete with [`StoreError::ShardDown`] and bounce, the mirror runs
+//!   the scheme's own §4.2 recovery and is promoted, and bounced ops
+//!   re-issue against the promoted replica — zero acked-write loss, with
+//!   per-shard downtime as a first-class metric (`repro sla`).
 //! * [`reshard`] — elastic slot-table routing: a versioned [`SlotTable`]
 //!   in front of [`shard_of`] (identity until a plan flips a slot), plus an
 //!   online migration actor that drains a slot's keys over the shared
@@ -42,13 +49,15 @@
 pub mod cluster;
 pub(crate) mod cosim;
 pub mod db;
+pub mod fault;
 pub mod mirror;
 pub(crate) mod pipeline;
 pub mod reshard;
 
 pub use cluster::{Cluster, ClusterBuilder, RunOutcome};
-pub use db::Db;
-pub use mirror::ShardRole;
+pub use db::{Db, Fault};
+pub use fault::{FaultEvent, FaultPlan};
+pub use mirror::{ReadPolicy, ShardRole};
 pub use reshard::{slot_of, ReshardPlan, SlotMove, SlotTable, SLOTS};
 
 use std::collections::VecDeque;
@@ -158,6 +167,11 @@ pub enum StoreError {
     ValueTooLarge { size: usize, max: usize },
     /// An entry exists but no consistent version of the value survives.
     Corrupt { key: Vec<u8> },
+    /// The shard's primary has fail-stopped and its mirror is not yet
+    /// promoted: the op cannot be served until failover completes. Engine
+    /// clients park and re-issue on this; on the settled [`Db`] it clears
+    /// once [`Fault::PromoteMirror`] is injected.
+    ShardDown { shard: usize },
     /// The operation is not meaningful for this scheme / handle.
     Unsupported(&'static str),
 }
@@ -174,6 +188,9 @@ impl fmt::Display for StoreError {
             }
             StoreError::Corrupt { key } => {
                 write!(f, "no consistent version of key {:?}", String::from_utf8_lossy(key))
+            }
+            StoreError::ShardDown { shard } => {
+                write!(f, "shard {shard} is down: primary failed, mirror not yet promoted")
             }
             StoreError::Unsupported(what) => write!(f, "unsupported operation: {what}"),
         }
@@ -414,5 +431,8 @@ mod tests {
         let e = StoreError::ValueTooLarge { size: 9000, max: 8192 };
         assert!(e.to_string().contains("9000"));
         assert!(StoreError::Corrupt { key: b"k".to_vec() }.to_string().contains('k'));
+        let down = StoreError::ShardDown { shard: 3 };
+        assert!(down.to_string().contains("shard 3"));
+        assert!(down.to_string().contains("down"));
     }
 }

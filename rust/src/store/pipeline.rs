@@ -27,6 +27,21 @@
 //! epoch once the flip publishes, so a moving key's write order survives
 //! the ownership handoff. Ops on every other slot issue undisturbed.
 //!
+//! Mid-run faults ([`super::fault`]) reuse the same park/bounce machinery:
+//! when a [`FaultPlan`] kills a shard's primary, an in-flight lane on the
+//! dead world completes with the semantics of
+//! [`crate::store::StoreError::ShardDown`] at its natural completion
+//! instant (the virtual time an RDMA timeout would fire) and bounces back
+//! to pending with its ORIGINAL start preserved — the blackout stall shows
+//! up in the latency tail, not hidden by a restart. New draws on a down
+//! shard park the same way (counted once in `Counters::failover_bounces`),
+//! and everything re-issues against the promoted mirror once the fault
+//! actor flips the shard — so no acknowledged write is ever lost and no op
+//! is dropped. A promoted shard is single-homed: its writes stop growing
+//! mirror legs.
+//!
+//! [`FaultPlan`]: super::fault::FaultPlan
+//!
 //! Per-key ordering is read/write-aware: a *write* (put/delete) waits for
 //! every in-flight op on its key and for any earlier queued op on it; a
 //! *read* waits only for in-flight or earlier-queued **writes** on its key
@@ -51,7 +66,10 @@
 //! completes (and records its latency, on the primary world) only after
 //! both replicas persisted. The lane keeps its `(shard, key)` gate across
 //! both legs, so nothing overtakes a put on its key before the mirror
-//! caught up.
+//! caught up. Gets route by [`crate::store::ReadPolicy`]: the primary by
+//! default (bit for bit the PR 5 behavior), or the mirror /
+//! deterministically alternating replicas — safe because every read is
+//! CRC-gated, and an op records its latency on the world that served it.
 //!
 //! With `window = 1`, closed-loop arrivals, one shard and no mirroring this
 //! actor reproduces the closed-loop clients' runs bit for bit (same engine
@@ -68,6 +86,8 @@ use crate::metrics::Counters;
 use crate::nvm::WriteStats;
 use crate::sim::{Actor, CompletionSet, SchedulerKind, Step, Time};
 use crate::store::cosim::ClusterState;
+use crate::store::fault::FaultState;
+use crate::store::mirror::ReadPolicy;
 use crate::store::reshard::{slot_of, SlotRouter, MIGRATION_QUANTUM};
 use crate::store::{OpSource, Request};
 use crate::ycsb::ArrivalGen;
@@ -203,6 +223,10 @@ fn is_write(req: &Request) -> bool {
 /// ordering gate plus the (mirrored-cluster) replication bookkeeping.
 struct Route {
     shard: usize,
+    /// The world the op's data leg runs on — `shard` on every legacy path;
+    /// the shard's mirror world for policy-routed reads and for any op on
+    /// a promoted (mirror-served) shard. Latency records here.
+    serve: usize,
     /// The routing slot the key hashed to (in-flight accounting the
     /// migration fence waits on).
     slot: usize,
@@ -212,6 +236,9 @@ struct Route {
     epoch: u64,
     key: Vec<u8>,
     write: bool,
+    /// Issue instant (open loop: arrival instant) — preserved across a
+    /// failover bounce so the blackout stall lands in the latency tail.
+    start: Time,
     /// Queued mirror replay (mirrored clusters, mutating ops only): begun
     /// the instant the primary leg persists.
     mirror: Option<Request>,
@@ -219,6 +246,10 @@ struct Route {
     /// cleaning flag). `Some` while the lane's state machine runs against
     /// the mirror world instead of the primary.
     mirror_leg: Option<(Time, usize, bool)>,
+    /// The original request, retained for re-issue after a failover bounce.
+    /// Populated only when a fault plan is active (`with_faults`), so
+    /// fault-free runs carry no extra clone.
+    redo: Option<Request>,
 }
 
 /// One windowed cluster-level client actor (see module docs).
@@ -252,6 +283,14 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     /// (bit-for-bit the pre-batching path: each round stages one op and
     /// one-element batches admit identically).
     batch: usize,
+    /// Which replica serves this client's gets in a mirrored cluster
+    /// (ignored unmirrored; `Primary` = bit-for-bit the PR 5 path).
+    read_policy: ReadPolicy,
+    /// Round-robin read counter (deterministic per-client alternation).
+    rr: u64,
+    /// A fault plan is active: retain each op's request in its route so a
+    /// failover bounce can re-issue it.
+    faulty: bool,
     alive: bool,
 }
 
@@ -280,7 +319,40 @@ impl<D: OpDriver> PipelinedClient<D> {
             routes: (0..window).map(|_| None).collect(),
             due: CompletionSet::new(),
             batch: 1,
+            read_policy: ReadPolicy::Primary,
+            rr: 0,
+            faulty: false,
             alive: true,
+        }
+    }
+
+    /// Serve this client's gets per `policy` (mirrored clusters only;
+    /// `Primary` = the default, bit-for-bit path).
+    pub fn read_policy(mut self, policy: ReadPolicy) -> Self {
+        self.read_policy = policy;
+        self
+    }
+
+    /// Arm the failover machinery: retain each op's request so a mid-run
+    /// primary kill can bounce it back to pending and re-issue it against
+    /// the promoted mirror. Off by default — fault-free runs carry no
+    /// retained clones and replay bit for bit.
+    pub fn with_faults(mut self, yes: bool) -> Self {
+        self.faulty = yes;
+        self
+    }
+
+    /// Should the next get go to the mirror? Deterministic: a fixed answer
+    /// per policy, or strict per-client alternation for round-robin
+    /// (first get primary, second mirror, ...).
+    fn mirror_read(&mut self) -> bool {
+        match self.read_policy {
+            ReadPolicy::Primary => false,
+            ReadPolicy::MirrorPreferred => true,
+            ReadPolicy::RoundRobin => {
+                self.rr = self.rr.wrapping_add(1);
+                self.rr % 2 == 0
+            }
         }
     }
 
@@ -371,13 +443,37 @@ impl<D: OpDriver> PipelinedClient<D> {
         let write = is_write(&req);
         let (slot, shard) = s.router.route(&key);
         let epoch = s.router.table.epoch();
-        let mirror = if self.mirrored { crate::store::mirror::replicate(&req) } else { None };
-        match self.driver.begin(&mut s.worlds[shard], req, start, admitted) {
+        let promoted = s.faults.promoted(shard);
+        // A promoted shard is single-homed (its old primary is dead), so
+        // its writes stop growing mirror legs and EVERY op serves from the
+        // mirror world regardless of read policy.
+        let mirror = if self.mirrored && !promoted {
+            crate::store::mirror::replicate(&req)
+        } else {
+            None
+        };
+        let serve = if promoted || (!write && self.mirrored && self.mirror_read()) {
+            crate::store::mirror::mirror_world_index(self.shards, shard)
+        } else {
+            shard
+        };
+        let redo = self.faulty.then(|| req.clone());
+        match self.driver.begin(&mut s.worlds[serve], req, start, admitted) {
             OpOutcome::Continue(st, at) => {
                 s.router.note_issue(slot);
                 self.lanes[lane] = Some(st);
-                self.routes[lane] =
-                    Some(Route { shard, slot, epoch, key, write, mirror, mirror_leg: None });
+                self.routes[lane] = Some(Route {
+                    shard,
+                    serve,
+                    slot,
+                    epoch,
+                    key,
+                    write,
+                    start,
+                    mirror,
+                    mirror_leg: None,
+                    redo,
+                });
                 self.due.arm(lane, at);
                 true
             }
@@ -394,6 +490,7 @@ impl<D: OpDriver> PipelinedClient<D> {
     fn next_issuable_pending(
         &self,
         router: &SlotRouter,
+        faults: &FaultState,
         staged: &[(usize, Request, Time)],
     ) -> Option<usize> {
         let mut seen: Vec<&[u8]> = Vec::new();
@@ -402,7 +499,8 @@ impl<D: OpDriver> PipelinedClient<D> {
             if seen.iter().any(|s| *s == key) {
                 continue;
             }
-            if !self.key_blocked(r, staged) && !router.blocked(slot_of(key)) {
+            let (slot, shard) = router.route(key);
+            if !self.key_blocked(r, staged) && !router.blocked(slot) && !faults.is_down(shard) {
                 return Some(i);
             }
             seen.push(key);
@@ -423,7 +521,7 @@ impl<D: OpDriver> PipelinedClient<D> {
         let mut staged: Vec<(usize, Request, Time)> = Vec::new();
         'lanes: while staged.len() < self.batch {
             let Some(lane) = self.free_lane(&staged) else { break };
-            if let Some(i) = self.next_issuable_pending(&s.router, &staged) {
+            if let Some(i) = self.next_issuable_pending(&s.router, &s.faults, &staged) {
                 let (req, arrived, _) = self.pending.remove(i).expect("position indexed");
                 let start = arrived.unwrap_or(now);
                 staged.push((lane, req, start));
@@ -451,6 +549,11 @@ impl<D: OpDriver> PipelinedClient<D> {
                             // Fenced slot: park as bounced; the op re-issues
                             // under the new epoch once the flip lands.
                             s.worlds[shard].counters_mut().record_bounce(now);
+                            self.pending.push_back((req, None, true));
+                        } else if s.faults.is_down(shard) {
+                            // Primary dead, mirror not yet promoted: park as
+                            // bounced until the fault actor flips the shard.
+                            s.worlds[shard].counters_mut().record_failover_bounce(now);
                             self.pending.push_back((req, None, true));
                         } else if self.key_blocked(&req, &staged)
                             || self.pending_has_key(req.key())
@@ -484,6 +587,20 @@ impl<D: OpDriver> PipelinedClient<D> {
                     if s.router.blocked(slot) {
                         *bounced = true;
                         s.worlds[shard].counters_mut().record_bounce(now);
+                    }
+                }
+            }
+        }
+        // A shard is mid-blackout: queued ops stuck behind the dead primary
+        // count as failover-bounced exactly once (they re-issue against the
+        // promoted mirror).
+        if s.faults.any_down() {
+            for (req, _, bounced) in self.pending.iter_mut() {
+                if !*bounced {
+                    let shard = s.router.route(req.key()).1;
+                    if s.faults.is_down(shard) {
+                        *bounced = true;
+                        s.worlds[shard].counters_mut().record_failover_bounce(now);
                     }
                 }
             }
@@ -544,17 +661,38 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
 
         // Phase 2: in-flight ops whose pending verb completed by now — each
         // advances against the world its lane currently runs on: the op's
-        // primary shard world, or (mirror leg in flight) its mirror world.
+        // serve world (primary, or the mirror for policy-routed reads and
+        // promoted shards), or (mirror leg in flight) its mirror world.
         while let Some(lane) = self.due.pop_due(now) {
             let st = self.lanes[lane].take().expect("armed lane holds a state");
-            let (shard, on_mirror) = {
+            let (shard, serve, on_mirror) = {
                 let r = self.routes[lane].as_ref().expect("armed lane has a route");
-                (r.shard, r.mirror_leg.is_some())
+                (r.shard, r.serve, r.mirror_leg.is_some())
             };
+            // The lane's data leg runs on a world whose primary was killed
+            // mid-flight: the op cannot complete. Bounce it — at its natural
+            // due instant, the virtual time an RDMA timeout would fire —
+            // back to pending (start preserved, so the blackout stall lands
+            // in the latency tail) to re-issue against the promoted mirror.
+            // A lane already on its MIRROR leg is exempt: the mirror world
+            // never dies, the leg completes, and the acked data lives on
+            // the replica about to be promoted.
+            if !on_mirror && s.faults.world_killed(serve) {
+                let r = self.routes[lane].take().expect("armed lane has a route");
+                s.router.note_done(r.slot);
+                s.worlds[r.shard].counters_mut().record_failover_bounce(now);
+                let req = r.redo.expect("fault runs retain the request for re-issue");
+                // Front of the queue: an op that was IN FLIGHT is older than
+                // anything parked in pending on its key, so re-queueing at
+                // the back would let a parked same-key op overtake it.
+                self.pending.push_front((req, Some(r.start), true));
+                freed = true;
+                continue;
+            }
             let world = if on_mirror {
                 crate::store::mirror::mirror_world_index(self.shards, shard)
             } else {
-                shard
+                serve
             };
             match self.driver.advance(&mut s.worlds[world], st, now) {
                 OpOutcome::Continue(st, at) => {
@@ -606,7 +744,10 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
                             }
                         }
                     } else {
-                        s.worlds[shard].counters_mut().record_op(start, now, cleaning);
+                        // Latency records on the world that served the op —
+                        // the primary on every legacy path, the mirror for
+                        // policy-routed reads and promoted shards.
+                        s.worlds[serve].counters_mut().record_op(start, now, cleaning);
                         let r = self.routes[lane].take().expect("armed lane has a route");
                         debug_assert!(
                             r.epoch <= s.router.table.epoch(),
@@ -659,7 +800,8 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
                     self.die(s)
                 } else {
                     // Every remaining op is parked behind a migration fence
-                    // with nothing in flight: poll until the flip lands.
+                    // or a fault blackout with nothing in flight: poll until
+                    // the flip (or the promotion) lands.
                     Step::At(now + MIGRATION_QUANTUM)
                 }
             }
@@ -1072,5 +1214,103 @@ mod tests {
         assert_eq!(w.counters.ops_measured, 3);
         assert_eq!(w.counters.read_misses, 0, "get must not race ahead of the puts");
         assert_eq!(w.get(&key).expect("present"), vec![0xBBu8; 64]);
+    }
+
+    fn mirrored_pair() -> ClusterState<ErdaWorld> {
+        let mut primary = erda_world();
+        let mut mirror = erda_world();
+        primary.counters.active_clients = 1;
+        mirror.counters.active_clients = 1;
+        ClusterState::with_mirrors(vec![primary, mirror], None, 1)
+    }
+
+    #[test]
+    fn read_policies_route_gets_to_the_chosen_replica() {
+        // 8 gets of preloaded keys on a mirrored shard: Primary serves all
+        // from world 0 (bit for bit), MirrorPreferred all from world 1,
+        // RoundRobin alternates — and every policy completes every op with
+        // zero misses (both replicas hold the preload).
+        let run = |policy: ReadPolicy| -> (u64, u64, u64) {
+            let ops: Vec<Request> = (0..8).map(get).collect();
+            let client = erda_client_mirrored(ops, 4).read_policy(policy);
+            let mut e = Engine::new(mirrored_pair());
+            e.spawn(Box::new(client), 0);
+            e.run();
+            let (p, m) = (&e.state.worlds[0].counters, &e.state.worlds[1].counters);
+            (p.ops_measured, m.ops_measured, p.read_misses + m.read_misses)
+        };
+        assert_eq!(run(ReadPolicy::Primary), (8, 0, 0));
+        assert_eq!(run(ReadPolicy::MirrorPreferred), (0, 8, 0));
+        assert_eq!(run(ReadPolicy::RoundRobin), (4, 4, 0));
+    }
+
+    fn erda_client_mirrored(ops: Vec<Request>, window: usize) -> PipelinedClient<ErdaDriver> {
+        let n = ops.len() as u64;
+        PipelinedClient::new(
+            ErdaDriver(ClientConfig { max_value: 64, ..Default::default() }),
+            script(ops),
+            n,
+            window,
+            None,
+            1,
+            true,
+        )
+    }
+
+    #[test]
+    fn midrun_kill_bounces_in_flight_ops_onto_the_promoted_mirror() {
+        // A fault actor kills the only primary while a window of puts is in
+        // flight: the dead lanes bounce, everything re-issues against the
+        // promoted mirror, and NO op (acked or pending) is lost — the
+        // mirror ends holding every written key.
+        use crate::store::fault::{FaultActor, FaultPlan};
+        let ops: Vec<Request> = (0..8).map(put).chain((0..8).map(get)).collect();
+        let n = ops.len() as u64;
+        let client = erda_client_mirrored(ops, 4).with_faults(true);
+        let mut e = Engine::new(mirrored_pair());
+        e.spawn(Box::new(client), 0);
+        // Kill a few microseconds in — mid-window — and promote 50 µs later.
+        e.spawn(Box::new(FaultActor::new(FaultPlan::fail_at(0, 3_000, 50_000))), 3_000);
+        let end = e.run();
+        assert!(end >= 53_000, "the run must span the blackout");
+        for w in &mut e.state.worlds {
+            w.settle();
+        }
+        let (p, m) = (&e.state.worlds[0], &e.state.worlds[1]);
+        let total = p.counters.ops_measured + m.counters.ops_measured;
+        assert_eq!(total, n, "every op completes despite the kill");
+        assert!(
+            m.counters.ops_measured > 0,
+            "post-promotion ops record on the serving mirror"
+        );
+        assert_eq!(p.counters.read_misses + m.counters.read_misses, 0);
+        assert!(p.counters.failover_bounces > 0, "the blackout must bounce something");
+        assert_eq!(p.counters.faults_injected, 1);
+        assert_eq!(p.counters.downtime_ns, 50_000);
+        for i in 0..8u64 {
+            assert!(
+                e.state.worlds[1].get(&key_of(i)).is_some(),
+                "key {i} must survive failover on the promoted mirror"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_free_faulty_flag_replays_bit_for_bit() {
+        // with_faults(true) alone (no FaultActor, no kill) only retains
+        // request clones — the run must be indistinguishable from the
+        // default path.
+        let run = |faulty: bool| {
+            let ops = vec![put(0), get(1), put(2), put(0), get(2)];
+            let n = ops.len() as u64;
+            let client = erda_client_mirrored(ops, 4).with_faults(faulty);
+            let mut e = Engine::new(mirrored_pair());
+            e.spawn(Box::new(client), 0);
+            let end = e.run();
+            let c = &e.state.worlds[0].counters;
+            (end, e.events(), c.ops_measured, c.latency.mean_ns())
+        };
+        assert_eq!(run(false), run(true));
+        assert_eq!(run(true).2, 5);
     }
 }

@@ -9,11 +9,69 @@ use crate::erda::CleanerConfig;
 use crate::log::LogConfig;
 use crate::metrics::RunStats;
 use crate::sim::{Time, Timing};
-use crate::store::Cluster;
+use crate::store::{Cluster, FaultPlan, ReadPolicy};
 use crate::ycsb::{Arrival, WorkloadConfig};
 
 /// Which of the three schemes to run — the facade's scheme enum.
 pub use crate::store::Scheme as SchemeSel;
+
+/// The client-shape knobs of a run, grouped: how many clients, how much
+/// work each does, how deep their windows are, and how their ops arrive.
+/// One of the three nameable config groups [`DriverConfig`] decomposes
+/// into (see [`DriverConfig::client`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientConfig {
+    /// Simulated client threads (closed loop).
+    pub clients: usize,
+    /// Ops per client (after this the client exits).
+    pub ops_per_client: u64,
+    /// Per-client in-flight window (1 = the paper's closed-loop model).
+    pub window: usize,
+    /// Closed loop or an open-loop arrival process.
+    pub arrival: Arrival,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig { clients: 4, ops_per_client: 500, window: 1, arrival: Arrival::Closed }
+    }
+}
+
+/// The replication knobs of a run, grouped: whether shards mirror, which
+/// replica serves reads, and what faults to inject mid-run (see
+/// [`DriverConfig::replication`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplicationConfig {
+    /// Synchronous RDMA mirroring: one mirror world per shard.
+    pub mirrored: bool,
+    /// Which replica serves gets on mirrored shards.
+    pub read_policy: ReadPolicy,
+    /// Mid-run primary kills + mirror promotions ([`crate::store::fault`]).
+    pub faults: FaultPlan,
+}
+
+/// The engine/fabric knobs of a run, grouped: event-queue backend,
+/// doorbell batching, and the shared client-NIC ingress (see
+/// [`DriverConfig::engine`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Which event-queue implementation drives the engine.
+    pub scheduler: crate::sim::SchedulerKind,
+    /// Client-side doorbell batching (1 = per-op admission).
+    pub doorbell_batch: usize,
+    /// Shared client-NIC ingress channels (`None` = unmetered).
+    pub ingress_channels: Option<usize>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            scheduler: crate::sim::SchedulerKind::default(),
+            doorbell_batch: 1,
+            ingress_channels: None,
+        }
+    }
+}
 
 /// Full configuration of one simulation run.
 #[derive(Clone, Debug)]
@@ -30,9 +88,19 @@ pub struct DriverConfig {
     /// Synchronous RDMA mirroring ([`crate::store::mirror`]): every shard
     /// gains a mirror world in the same engine; each put/delete replays on
     /// the mirror over the shared fabric/ingress and ACKs only after both
-    /// replicas persisted. Reads stay on the primary. Forces the pipelined
-    /// client path (bit-identical to closed loop at `window = 1`).
+    /// replicas persisted. Reads route by [`DriverConfig::read_policy`]
+    /// (primary by default). Forces the pipelined client path
+    /// (bit-identical to closed loop at `window = 1`).
     pub mirrored: bool,
+    /// Which replica serves gets on mirrored shards
+    /// ([`crate::store::ReadPolicy`]; ignored unmirrored). Non-default
+    /// values force the pipelined client path.
+    pub read_policy: ReadPolicy,
+    /// Mid-run fault injection ([`crate::store::fault`]): each event kills
+    /// a shard's primary at a virtual instant and promotes its recovered
+    /// mirror after a blackout. Requires `mirrored`; an empty plan (the
+    /// default) spawns nothing and replays bit for bit.
+    pub faults: FaultPlan,
     /// Simulated client threads (closed loop).
     pub clients: usize,
     /// Ops per client (after this the client exits).
@@ -90,6 +158,8 @@ impl Default for DriverConfig {
             workload: WorkloadConfig::default(),
             shards: 1,
             mirrored: false,
+            read_policy: ReadPolicy::Primary,
+            faults: FaultPlan::default(),
             clients: 4,
             ops_per_client: 500,
             window: 1,
@@ -109,6 +179,59 @@ impl Default for DriverConfig {
 }
 
 impl DriverConfig {
+    /// The client-shape group of this config, as one nameable struct.
+    pub fn client(&self) -> ClientConfig {
+        ClientConfig {
+            clients: self.clients,
+            ops_per_client: self.ops_per_client,
+            window: self.window,
+            arrival: self.arrival,
+        }
+    }
+
+    /// Install a [`ClientConfig`] group wholesale (builder-style).
+    pub fn set_client(&mut self, c: ClientConfig) -> &mut Self {
+        self.clients = c.clients;
+        self.ops_per_client = c.ops_per_client;
+        self.window = c.window;
+        self.arrival = c.arrival;
+        self
+    }
+
+    /// The replication group of this config, as one nameable struct.
+    pub fn replication(&self) -> ReplicationConfig {
+        ReplicationConfig {
+            mirrored: self.mirrored,
+            read_policy: self.read_policy,
+            faults: self.faults.clone(),
+        }
+    }
+
+    /// Install a [`ReplicationConfig`] group wholesale.
+    pub fn set_replication(&mut self, r: ReplicationConfig) -> &mut Self {
+        self.mirrored = r.mirrored;
+        self.read_policy = r.read_policy;
+        self.faults = r.faults;
+        self
+    }
+
+    /// The engine/fabric group of this config, as one nameable struct.
+    pub fn engine(&self) -> EngineConfig {
+        EngineConfig {
+            scheduler: self.scheduler,
+            doorbell_batch: self.doorbell_batch,
+            ingress_channels: self.ingress_channels,
+        }
+    }
+
+    /// Install an [`EngineConfig`] group wholesale.
+    pub fn set_engine(&mut self, e: EngineConfig) -> &mut Self {
+        self.scheduler = e.scheduler;
+        self.doorbell_batch = e.doorbell_batch;
+        self.ingress_channels = e.ingress_channels;
+        self
+    }
+
     /// Hash-table capacity: next power of two holding the records at ≤ 50 %.
     pub fn table_cap(&self) -> usize {
         (2 * self.workload.record_count as usize).next_power_of_two().max(1024)
@@ -307,6 +430,37 @@ mod tests {
         let tiny = DriverConfig { nvm_capacity: 1 << 20, shards: 16, ..Default::default() };
         assert!(tiny.shard_nvm_capacity() <= 1 << 20);
         assert!(tiny.shard_table_cap() >= 1024);
+    }
+
+    #[test]
+    fn config_groups_round_trip_and_defaults_match() {
+        // The three group structs are views of the same flat fields: their
+        // Defaults agree with DriverConfig::default(), and set_* followed
+        // by the getter round-trips.
+        let cfg = DriverConfig::default();
+        assert_eq!(cfg.client(), ClientConfig::default());
+        assert_eq!(cfg.replication(), ReplicationConfig::default());
+        assert_eq!(cfg.engine(), EngineConfig::default());
+        let mut cfg = DriverConfig::default();
+        let client = ClientConfig { clients: 8, ops_per_client: 50, window: 4, arrival: Arrival::Closed };
+        let repl = ReplicationConfig {
+            mirrored: true,
+            read_policy: ReadPolicy::MirrorPreferred,
+            faults: FaultPlan::fail_at(0, 8 * crate::sim::MS, crate::sim::MS),
+        };
+        let engine = EngineConfig {
+            scheduler: crate::sim::SchedulerKind::Heap,
+            doorbell_batch: 4,
+            ingress_channels: Some(2),
+        };
+        cfg.set_client(client.clone()).set_replication(repl.clone()).set_engine(engine.clone());
+        assert_eq!(cfg.client(), client);
+        assert_eq!(cfg.replication(), repl);
+        assert_eq!(cfg.engine(), engine);
+        assert_eq!(cfg.clients, 8);
+        assert!(cfg.mirrored);
+        assert_eq!(cfg.doorbell_batch, 4);
+        assert!(!cfg.faults.is_empty());
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Fault-injection conformance: mid-run primary kills with mirror failover
+//! (`store::fault`).
+//!
+//! Four contracts, each checked against all three schemes:
+//!
+//! 1. **Zero acked-write loss** — a `FaultPlan` that kills a primary mid-run
+//!    bounces the in-flight lanes, promotes the recovered mirror, and every
+//!    op still completes with zero read misses; every settled key stays
+//!    readable through the promoted replica.
+//! 2. **Determinism** — the same faulted run replays bit for bit: same ops,
+//!    same virtual duration, same event count, same bounce/downtime totals.
+//! 3. **The PR 7 pin** — `FaultPlan::default()` spawns nothing: a mirrored
+//!    run with an empty plan is bit-for-bit identical to a plain mirrored
+//!    run (ops, duration, events, NVM bytes, mirror legs, final state).
+//! 4. **Read policies & scripts** — `MirrorPreferred` / `RoundRobin` book
+//!    GETs on the mirror row without changing totals, and scripted clients
+//!    survive a mid-script failover with their writes intact.
+
+use erda::store::{Cluster, ClusterBuilder, FaultPlan, ReadPolicy, RemoteStore, Request, Scheme};
+use erda::ycsb::{key_of, Workload};
+
+const VALUE: usize = 64;
+const RECORDS: u64 = 24;
+
+fn builder(scheme: Scheme, shards: usize) -> ClusterBuilder {
+    Cluster::builder()
+        .scheme(scheme)
+        .shards(shards)
+        .window(2)
+        .mirrored(true)
+        .clients(4)
+        .ops_per_client(150)
+        .workload(Workload::UpdateHeavy)
+        .records(RECORDS)
+        .value_size(VALUE)
+        .preload(RECORDS, VALUE)
+        .nvm_capacity(64 << 20)
+        .warmup(0)
+}
+
+/// The acceptance scenario: kill shard 0's primary at 50 µs, promote its
+/// mirror after a 100 µs blackout — for one and two shards, all three
+/// schemes. Every op completes (bounced lanes re-issue against the promoted
+/// replica), no acked write is lost, and the shard ends single-homed.
+#[test]
+fn midrun_kill_fails_over_with_zero_acked_write_loss() {
+    for shards in [1usize, 2] {
+        for scheme in Scheme::ALL {
+            let outcome = builder(scheme, shards)
+                .faults(FaultPlan::fail_at(0, 50_000, 100_000))
+                .run()
+                .unwrap();
+            let tag = format!("{scheme:?}/shards{shards}");
+            let s = &outcome.stats;
+            assert_eq!(s.ops, 600, "{tag}: every op must complete across the failover");
+            assert_eq!(s.read_misses, 0, "{tag}: an acked write vanished");
+            assert_eq!(s.faults_injected, 1, "{tag}");
+            assert_eq!(s.downtime_ns, 100_000, "{tag}: blackout = kill → promotion gap");
+            assert!(s.failover_bounces > 0, "{tag}: the kill must catch live lanes");
+            assert_eq!(outcome.per_shard[0].faults_injected, 1, "{tag}: fault books on shard 0");
+            if shards == 2 {
+                assert_eq!(outcome.per_shard[1].faults_injected, 0, "{tag}: shard 1 untouched");
+            }
+            let mut db = outcome.db;
+            assert!(!db.has_mirror(0), "{tag}: shard 0 single-homed after promotion");
+            if shards == 2 {
+                assert!(db.has_mirror(1), "{tag}: surviving shard keeps its mirror");
+            }
+            for i in 0..RECORDS {
+                assert!(
+                    db.get(&key_of(i)).unwrap().is_some(),
+                    "{tag}: key {i} lost across the failover"
+                );
+            }
+            // The promoted cluster still takes writes.
+            db.put(&key_of(0), &vec![0x42u8; VALUE]).unwrap();
+            assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![0x42u8; VALUE]), "{tag}");
+        }
+    }
+}
+
+/// Faulted runs replay deterministically: same plan, same seed, same run —
+/// bit for bit, bounce for bounce.
+#[test]
+fn faulted_runs_replay_deterministically() {
+    for scheme in Scheme::ALL {
+        let mk = || {
+            builder(scheme, 2).faults(FaultPlan::fail_at(1, 40_000, 80_000)).run().unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        let fp = |o: &erda::store::RunOutcome| {
+            (
+                o.stats.ops,
+                o.stats.duration_ns,
+                o.stats.events,
+                o.stats.failover_bounces,
+                o.stats.downtime_ns,
+                o.stats.nvm_programmed_bytes,
+            )
+        };
+        assert_eq!(fp(&a), fp(&b), "{scheme:?}: faulted replay diverged");
+    }
+}
+
+/// The PR 7 pin: an empty `FaultPlan` spawns no actor and flips no flag, so
+/// a mirrored run with `FaultPlan::default()` is bit-for-bit identical to a
+/// plain mirrored run — same ops, virtual duration, event count, NVM bytes,
+/// mirror legs, and final contents.
+#[test]
+fn default_fault_plan_is_bit_for_bit_a_plain_mirrored_run() {
+    for scheme in Scheme::ALL {
+        let plain = builder(scheme, 2).run().unwrap();
+        let noop = builder(scheme, 2).faults(FaultPlan::default()).run().unwrap();
+        let fp = |o: &erda::store::RunOutcome| {
+            (
+                o.stats.ops,
+                o.stats.duration_ns,
+                o.stats.events,
+                o.stats.mirror_legs,
+                o.stats.nvm_programmed_bytes,
+                o.stats.read_misses,
+            )
+        };
+        assert_eq!(fp(&plain), fp(&noop), "{scheme:?}: an empty plan must be a no-op");
+        assert_eq!(noop.stats.faults_injected, 0, "{scheme:?}");
+        assert_eq!(noop.stats.downtime_ns, 0, "{scheme:?}");
+        let mut a = plain.db;
+        let mut b = noop.db;
+        for i in 0..RECORDS {
+            assert_eq!(
+                a.get(&key_of(i)).unwrap(),
+                b.get(&key_of(i)).unwrap(),
+                "{scheme:?}: key {i} diverged under an empty plan"
+            );
+        }
+    }
+}
+
+/// Mirror read policies serve GETs from the replica without changing run
+/// totals: `Primary` books nothing on the mirror rows, `MirrorPreferred`
+/// and `RoundRobin` book mirror ops, and all three finish every op with
+/// zero misses.
+#[test]
+fn read_policies_book_mirror_gets_without_changing_totals() {
+    for scheme in Scheme::ALL {
+        for policy in ReadPolicy::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .shards(2)
+                .window(2)
+                .mirrored(true)
+                .read_policy(policy)
+                .clients(2)
+                .ops_per_client(100)
+                .workload(Workload::ReadMostly)
+                .records(RECORDS)
+                .value_size(VALUE)
+                .preload(RECORDS, VALUE)
+                .nvm_capacity(64 << 20)
+                .warmup(0)
+                .run()
+                .unwrap();
+            let tag = format!("{scheme:?}/{}", policy.id());
+            assert_eq!(outcome.stats.ops, 200, "{tag}");
+            assert_eq!(outcome.stats.read_misses, 0, "{tag}");
+            let mirror_ops: u64 = outcome.per_mirror.iter().map(|m| m.ops).sum();
+            if policy == ReadPolicy::Primary {
+                assert_eq!(mirror_ops, 0, "{tag}: primary policy never reads the mirror");
+            } else {
+                assert!(mirror_ops > 0, "{tag}: mirror policy must serve GETs from the mirror");
+            }
+        }
+    }
+}
+
+/// Scripted clients ride the cluster-level pipelined path on mirrored runs
+/// (the PR 8 routing fix) and survive a mid-script failover: every scripted
+/// put lands, every scripted get hits, and the last acked bytes are served
+/// by the promoted replica.
+#[test]
+fn scripted_clients_survive_a_midscript_failover() {
+    for scheme in Scheme::ALL {
+        let mut ops = Vec::new();
+        for i in 0..20u64 {
+            ops.push(Request::Put { key: key_of(i), value: vec![i as u8 + 1; VALUE] });
+        }
+        for i in 0..20u64 {
+            ops.push(Request::Get { key: key_of(i) });
+        }
+        let outcome = Cluster::builder()
+            .scheme(scheme)
+            .shards(2)
+            .mirrored(true)
+            .clients(0)
+            .records(RECORDS)
+            .value_size(VALUE)
+            .preload(RECORDS, VALUE)
+            .nvm_capacity(64 << 20)
+            .warmup(0)
+            .script(ops)
+            .faults(FaultPlan::fail_at(0, 10_000, 20_000))
+            .run()
+            .unwrap();
+        assert_eq!(outcome.stats.ops, 40, "{scheme:?}: the whole script must run");
+        assert_eq!(outcome.stats.read_misses, 0, "{scheme:?}: a scripted put vanished");
+        assert_eq!(outcome.stats.faults_injected, 1, "{scheme:?}");
+        let mut db = outcome.db;
+        assert!(!db.has_mirror(0), "{scheme:?}");
+        for i in 0..20u64 {
+            assert_eq!(
+                db.get(&key_of(i)).unwrap(),
+                Some(vec![i as u8 + 1; VALUE]),
+                "{scheme:?}: scripted write {i} lost across the failover"
+            );
+        }
+    }
+}
