@@ -1,18 +1,28 @@
-//! Event-queue micro-benchmarks (PR 7): the legacy global binary heap vs
-//! the tiered per-lane scheduler at growing pending-event populations.
+//! Event-queue micro-benchmarks (PRs 7 and 9): the legacy global binary
+//! heap vs the tiered per-lane scheduler vs the bucketed calendar queue at
+//! growing pending-event populations.
 //! (`harness = false` — criterion is not in the offline vendor set; the
 //! statistics harness lives in `erda::bench_util`.)
 //!
-//! Each measurement holds the queue at a steady-state population of N
-//! pending events and times one pop + one monotone re-push — the exact
-//! cycle `Engine::run_until` drives. The tiered queue's win is the small
-//! top heap: a pop touches one lane of ~N/lanes events plus a top heap of
-//! at most `lanes` entries, instead of one log₂(N) sift over everything.
+//! Two workloads:
+//!
+//! - **pop_push** holds the queue at a steady-state population of N
+//!   pending events and times one pop + one monotone re-push — the exact
+//!   cycle `Engine::run_until` drives. The tiered queue's win is the small
+//!   top heap: a pop touches one lane of ~N/lanes events plus a top heap
+//!   of at most `lanes` entries, instead of one log₂(N) sift over
+//!   everything. The calendar queue's win is O(1) amortized: a pop scans
+//!   forward from the cursor bucket and a push drops into its time bucket.
+//! - **hold** interleaves seeded bursts of 1–4 pops with matching
+//!   re-pushes — the classic calendar-queue "hold" pattern, closer to a
+//!   real engine step where one event's handler schedules several
+//!   successors. Runs up to 10⁶ pending events, the population a
+//!   10⁵-client run keeps in flight.
 //!
 //! Run: `cargo bench --bench queues`
 
 use erda::bench_util::Bench;
-use erda::sim::{EventQueue, HeapQueue, Rng, TieredQueue};
+use erda::sim::{CalendarQueue, EventQueue, HeapQueue, Rng, TieredQueue};
 
 const LANES: usize = 64;
 const ACTORS: usize = 64;
@@ -39,36 +49,83 @@ fn cycle(q: &mut dyn EventQueue, clock: &mut u64, seq: &mut u64, rng: &mut Rng) 
     t
 }
 
+/// One "hold" burst: pop 1..=4 due events, re-push one successor per pop.
+/// The population is preserved across the burst; the burst width varies
+/// with the seeded stream like a handler fanning out follow-up events.
+fn hold(q: &mut dyn EventQueue, clock: &mut u64, seq: &mut u64, rng: &mut Rng) -> u64 {
+    let burst = 1 + rng.gen_range(4) as usize;
+    let mut last = 0;
+    for _ in 0..burst {
+        let (t, _, id) = q.pop().expect("steady-state queue never drains");
+        *clock = (*clock).max(t);
+        last = t;
+        q.push((*clock + 1 + rng.gen_range(10_000), *seq, id));
+        *seq += 1;
+    }
+    last
+}
+
+/// Run `work` over all three queue kinds at population `n`, then print the
+/// heap-relative speedups.
+fn contest(
+    b: &mut Bench,
+    workload: &str,
+    label: &str,
+    n: usize,
+    work: fn(&mut dyn EventQueue, &mut u64, &mut u64, &mut Rng) -> u64,
+) {
+    let mut heap = HeapQueue::new();
+    let mut rng = Rng::new(0xE2DA_0007);
+    let (mut clock, mut seq) = fill(&mut heap, n, &mut rng);
+    b.bench(&format!("heap_{workload}/{label}"), || {
+        work(&mut heap, &mut clock, &mut seq, &mut rng)
+    });
+
+    let mut tiered = TieredQueue::new(LANES);
+    let mut rng = Rng::new(0xE2DA_0007);
+    let (mut clock, mut seq) = fill(&mut tiered, n, &mut rng);
+    b.bench(&format!("tiered_{workload}/{label}"), || {
+        work(&mut tiered, &mut clock, &mut seq, &mut rng)
+    });
+
+    let mut calendar = CalendarQueue::new();
+    let mut rng = Rng::new(0xE2DA_0007);
+    let (mut clock, mut seq) = fill(&mut calendar, n, &mut rng);
+    b.bench(&format!("calendar_{workload}/{label}"), || {
+        work(&mut calendar, &mut clock, &mut seq, &mut rng)
+    });
+
+    if let (Some(h), Some(t), Some(c)) = (
+        b.result_ns(&format!("heap_{workload}/{label}")),
+        b.result_ns(&format!("tiered_{workload}/{label}")),
+        b.result_ns(&format!("calendar_{workload}/{label}")),
+    ) {
+        println!(
+            "  -> {label} pending ({workload}): heap {h:.0} ns, tiered {t:.0} ns \
+             ({:.2}x), calendar {c:.0} ns ({:.2}x)",
+            h / t,
+            h / c
+        );
+    }
+}
+
 fn main() {
     let mut b = Bench::new("queues");
 
     for &n in &[1_000usize, 10_000, 100_000] {
         let label = if n >= 10_000 { format!("{}k", n / 1000) } else { n.to_string() };
+        contest(&mut b, "pop_push", &label, n, cycle);
+    }
 
-        let mut heap = HeapQueue::new();
-        let mut rng = Rng::new(0xE2DA_0007);
-        let (mut clock, mut seq) = fill(&mut heap, n, &mut rng);
-        b.bench(&format!("heap_pop_push/{label}"), || {
-            cycle(&mut heap, &mut clock, &mut seq, &mut rng)
-        });
-
-        let mut tiered = TieredQueue::new(LANES);
-        let mut rng = Rng::new(0xE2DA_0007);
-        let (mut clock, mut seq) = fill(&mut tiered, n, &mut rng);
-        b.bench(&format!("tiered_pop_push/{label}"), || {
-            cycle(&mut tiered, &mut clock, &mut seq, &mut rng)
-        });
-
-        if let (Some(h), Some(t)) = (
-            b.result_ns(&format!("heap_pop_push/{label}")),
-            b.result_ns(&format!("tiered_pop_push/{label}")),
-        ) {
-            println!(
-                "  -> {label} pending: heap {h:.0} ns/cycle, tiered {t:.0} ns/cycle \
-                 ({:.2}x)",
-                h / t
-            );
-        }
+    for &n in &[1_000usize, 10_000, 100_000, 1_000_000] {
+        let label = if n >= 1_000_000 {
+            format!("{}m", n / 1_000_000)
+        } else if n >= 10_000 {
+            format!("{}k", n / 1000)
+        } else {
+            n.to_string()
+        };
+        contest(&mut b, "hold", &label, n, hold);
     }
 
     b.finish();

@@ -6,7 +6,8 @@
 //! repro figures --table 1 [--out DIR]           Table 1
 //! repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
 //!             [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
-//!             [--scheduler heap|tiered] [--doorbell N]
+//!             [--scheduler heap|tiered|calendar] [--lane-key world|actor]
+//!             [--doorbell N] [--mirror-doorbell N] [--migration-doorbell N]
 //!             [--mirrored [--read-policy primary|mirror|rr] [--fail-at MS]
 //!              | --reshard-at MS]               facade end-to-end smoke run
 //! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
@@ -23,10 +24,12 @@
 //!                                               elastic-resharding sweep:
 //!                                               mid-run scale-out n -> n+1,
 //!                                               all schemes
-//! repro scale [--clients 8,32] [--quick] [--out DIR] [--json FILE]
+//! repro scale [--clients 8,32,1024] [--quick] [--out DIR] [--json FILE]
 //!                                               scheduler/doorbell scale sweep:
-//!                                               heap vs tiered (bit-for-bit)
-//!                                               and doorbell-8 batching
+//!                                               heap vs tiered vs calendar
+//!                                               (bit-for-bit) and doorbell-8
+//!                                               batching, host wall clock +
+//!                                               events/sec per queue kind
 //! repro sla [--shards 1,2] [--quick] [--out DIR] [--json FILE]
 //!                                               availability sweep: mid-run
 //!                                               primary kill + mirror failover
@@ -42,7 +45,7 @@ use std::path::PathBuf;
 
 use crate::error::{anyhow, bail, Result};
 use crate::figures::{self, Fidelity};
-use crate::sim::SchedulerKind;
+use crate::sim::{LaneKey, SchedulerKind};
 use crate::store::{ReadPolicy, Scheme};
 use crate::ycsb::Arrival;
 
@@ -72,11 +75,23 @@ pub enum Cmd {
         /// anything but the default primary-only policy).
         read_policy: ReadPolicy,
         /// Event-queue implementation for the co-sim engine (bit-for-bit
-        /// identical results either way; tiered is the default).
+        /// identical results for all three kinds; tiered is the default).
         scheduler: SchedulerKind,
+        /// Lane keying for the tiered queue: one lane per world (default)
+        /// or one per actor for wide client populations. Pop order — and
+        /// therefore every result — is identical either way.
+        lane_key: LaneKey,
         /// Doorbell batch width: coalesce up to N ready ops per ingress
         /// post (1 = per-op admission, the pre-batching path).
         doorbell: usize,
+        /// Mirror-leg doorbell width: coalesce up to N replication legs
+        /// whose primaries persisted at the same instant into one ingress
+        /// post (1 = per-leg admission, bit for bit the unbatched path).
+        mirror_doorbell: usize,
+        /// Migration-drain doorbell width: copy up to N ready keys per
+        /// migration event step through one ingress post (1 = per-key
+        /// drain, bit for bit the unbatched path).
+        migration_doorbell: usize,
     },
     /// Scale-out sweep: throughput vs shard count for all three schemes.
     Scaling {
@@ -118,8 +133,9 @@ pub enum Cmd {
         out: Option<PathBuf>,
         json: Option<PathBuf>,
     },
-    /// Scheduler/doorbell scale sweep: heap vs tiered event queues
-    /// (asserted bit-for-bit) plus doorbell-8 batching vs client count.
+    /// Scheduler/doorbell scale sweep: heap vs tiered vs calendar event
+    /// queues (asserted bit-for-bit, host wall clock and host events/sec
+    /// reported per kind) plus doorbell-8 batching vs client count.
     Scale {
         clients: Vec<usize>,
         fidelity: Fidelity,
@@ -238,7 +254,10 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let mut fail_at: Option<u64> = None;
             let mut read_policy = ReadPolicy::default();
             let mut scheduler = SchedulerKind::default();
+            let mut lane_key = LaneKey::default();
             let mut doorbell: usize = 1;
+            let mut mirror_doorbell: usize = 1;
+            let mut migration_doorbell: usize = 1;
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--scheme" => match it.next() {
@@ -304,10 +323,18 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                     "--scheduler" => match it.next() {
                         Some(v) => {
                             scheduler = SchedulerKind::parse(v).ok_or_else(|| {
-                                anyhow!("unknown scheduler {v:?} (heap|tiered)")
+                                anyhow!("unknown scheduler {v:?} (heap|tiered|calendar)")
                             })?
                         }
-                        None => bail!("--scheduler needs heap|tiered"),
+                        None => bail!("--scheduler needs heap|tiered|calendar"),
+                    },
+                    "--lane-key" => match it.next() {
+                        Some(v) => {
+                            lane_key = LaneKey::parse(v).ok_or_else(|| {
+                                anyhow!("unknown lane key {v:?} (world|actor)")
+                            })?
+                        }
+                        None => bail!("--lane-key needs world|actor"),
                     },
                     "--doorbell" => match it.next() {
                         Some(v) => {
@@ -317,6 +344,24 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                             }
                         }
                         None => bail!("--doorbell needs a batch width"),
+                    },
+                    "--mirror-doorbell" => match it.next() {
+                        Some(v) => {
+                            mirror_doorbell = v.parse::<usize>()?;
+                            if mirror_doorbell == 0 {
+                                bail!("--mirror-doorbell needs a batch width ≥ 1");
+                            }
+                        }
+                        None => bail!("--mirror-doorbell needs a batch width"),
+                    },
+                    "--migration-doorbell" => match it.next() {
+                        Some(v) => {
+                            migration_doorbell = v.parse::<usize>()?;
+                            if migration_doorbell == 0 {
+                                bail!("--migration-doorbell needs a batch width ≥ 1");
+                            }
+                        }
+                        None => bail!("--migration-doorbell needs a batch width"),
                     },
                     "--mirrored" => mirrored = true,
                     "--reshard-at" => match it.next() {
@@ -379,7 +424,10 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                     fail_at,
                     read_policy,
                     scheduler,
+                    lane_key,
                     doorbell,
+                    mirror_doorbell,
+                    migration_doorbell,
                 }),
                 None => bail!("smoke: pass --scheme erda|redo|raw"),
             }
@@ -486,7 +534,8 @@ USAGE:
   repro figures --ablations [--out DIR]       design-choice ablations (A1–A4)
   repro smoke --scheme erda|redo|raw [--seed N] [--shards N]
               [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
-              [--scheduler heap|tiered] [--doorbell N]
+              [--scheduler heap|tiered|calendar] [--lane-key world|actor]
+              [--doorbell N] [--mirror-doorbell N] [--migration-doorbell N]
               [--mirrored [--read-policy primary|mirror|rr] [--fail-at MS]
                | --reshard-at MS]
                                               exercise the store facade end to
@@ -513,11 +562,20 @@ USAGE:
                                               firing a mid-run scale-out from
                                               N to N+1 shards at virtual
                                               millisecond MS, --scheduler
-                                              picking the event-queue impl —
-                                              bit-for-bit identical results —
-                                              and --doorbell coalescing up to
-                                              N ready ops per ingress post);
-                                              deterministic in --seed
+                                              picking the event-queue impl
+                                              (heap, tiered lanes, or a
+                                              bucketed calendar queue —
+                                              bit-for-bit identical results),
+                                              --lane-key keying tiered lanes
+                                              by world or by actor,
+                                              --doorbell coalescing up to N
+                                              ready client ops per ingress
+                                              post, --mirror-doorbell
+                                              coalescing up to N replication
+                                              legs per post, and
+                                              --migration-doorbell draining
+                                              up to N migrating keys per
+                                              post); deterministic in --seed
   repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
                                               scale-out sweep: throughput vs
                                               shard count, all three schemes
@@ -547,13 +605,16 @@ USAGE:
                                               throughput, migration-window
                                               dip, migrated keys/bytes and
                                               bounced ops
-  repro scale [--clients 8,32] [--quick] [--out DIR] [--json FILE]
+  repro scale [--clients 8,32,1024] [--quick] [--out DIR] [--json FILE]
                                               scheduler/doorbell scale sweep:
-                                              heap vs tiered event queues
-                                              (asserted bit-for-bit, host
-                                              wall-clock reported) and
-                                              doorbell-8 batching vs client
-                                              count
+                                              heap vs tiered vs calendar
+                                              event queues (asserted
+                                              bit-for-bit; host wall clock
+                                              and host events/sec reported
+                                              per queue kind) and doorbell-8
+                                              batching vs client count —
+                                              client counts are free-form,
+                                              e.g. 1000,10000,100000
   repro sla [--shards 1,2] [--quick] [--out DIR] [--json FILE]
                                               availability sweep: mirrored run
                                               vs mid-run primary kill + mirror
@@ -635,7 +696,10 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
         assert_eq!(
@@ -652,7 +716,10 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
         assert_eq!(
@@ -669,7 +736,10 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
     }
@@ -691,7 +761,10 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
         assert_eq!(
@@ -708,7 +781,10 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
     }
@@ -729,7 +805,10 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
     }
@@ -750,7 +829,10 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
         assert!(p("smoke --scheme erda --reshard-at").is_err());
@@ -780,7 +862,10 @@ mod tests {
                 fail_at: Some(8),
                 read_policy: ReadPolicy::MirrorPreferred,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
         assert_eq!(
@@ -797,7 +882,10 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::RoundRobin,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
         assert!(p("smoke --scheme erda --fail-at 8").is_err(), "fault needs a mirror");
@@ -852,11 +940,17 @@ mod tests {
         assert!(p("smoke --scheme erda --fixed-rate nope").is_err());
         assert!(p("smoke --scheme erda --ingress 0").is_err());
         assert!(p("smoke --scheme erda --ingress").is_err());
-        assert!(p("smoke --scheme erda --scheduler calendar").is_err());
+        assert!(p("smoke --scheme erda --scheduler wheel").is_err());
         assert!(p("smoke --scheme erda --scheduler").is_err());
+        assert!(p("smoke --scheme erda --lane-key diagonal").is_err());
+        assert!(p("smoke --scheme erda --lane-key").is_err());
         assert!(p("smoke --scheme erda --doorbell 0").is_err());
         assert!(p("smoke --scheme erda --doorbell many").is_err());
         assert!(p("smoke --scheme erda --doorbell").is_err());
+        assert!(p("smoke --scheme erda --mirror-doorbell 0").is_err());
+        assert!(p("smoke --scheme erda --mirror-doorbell").is_err());
+        assert!(p("smoke --scheme erda --migration-doorbell 0").is_err());
+        assert!(p("smoke --scheme erda --migration-doorbell").is_err());
     }
 
     #[test]
@@ -875,7 +969,10 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Heap,
+                lane_key: LaneKey::World,
                 doorbell: 4,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
             }
         );
         assert_eq!(
@@ -892,7 +989,52 @@ mod tests {
                 fail_at: None,
                 read_policy: ReadPolicy::Primary,
                 scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
                 doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
+            }
+        );
+        assert_eq!(
+            p("smoke --scheme erda --scheduler calendar --lane-key actor \
+               --mirrored --mirror-doorbell 8")
+                .unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::Erda,
+                seed: 0xE2DA,
+                shards: 1,
+                window: 1,
+                arrival: Arrival::Closed,
+                ingress: None,
+                mirrored: true,
+                reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
+                scheduler: SchedulerKind::Calendar,
+                lane_key: LaneKey::Actor,
+                doorbell: 1,
+                mirror_doorbell: 8,
+                migration_doorbell: 1,
+            }
+        );
+        assert_eq!(
+            p("smoke --scheme erda --shards 2 --reshard-at 8 --migration-doorbell 4").unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::Erda,
+                seed: 0xE2DA,
+                shards: 2,
+                window: 1,
+                arrival: Arrival::Closed,
+                ingress: None,
+                mirrored: false,
+                reshard_at: Some(8),
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
+                scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
+                doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 4,
             }
         );
     }

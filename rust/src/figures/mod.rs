@@ -38,8 +38,10 @@ pub const MIRROR_SWEEP: [usize; 2] = [1, 2];
 /// (`repro reshard`): each entry n runs a mid-run scale-out from n to n+1.
 pub const RESHARD_SWEEP: [usize; 2] = [1, 2];
 /// The default client sweep of the scheduler/doorbell scale experiment
-/// (`repro scale`).
-pub const SCALE_SWEEP: [usize; 2] = [8, 32];
+/// (`repro scale`). The CLI accepts arbitrary counts (`--clients
+/// 1000,10000,100000`) for wide-population runs; the default keeps the
+/// bench job and CI smoke affordable.
+pub const SCALE_SWEEP: [usize; 3] = [8, 32, 1024];
 /// The default shard sweep of the availability experiment (`repro sla`):
 /// each entry n runs a mirrored n-shard cluster and kills shard 0's
 /// primary mid-measurement. n = 1 blacks out the whole cluster (the
@@ -729,63 +731,89 @@ pub fn sla(shard_counts: &[usize], fid: Fidelity) -> Rendered {
     }
 }
 
-/// Scale sweep (`repro scale`): the PR-7 event-core refactor measured at
-/// growing client populations. Per client count the sweep runs the same
-/// sharded, ingress-metered, write-heavy Erda workload three ways:
+/// Scale sweep (`repro scale`): the event-core scheduler tiers measured
+/// at growing client populations. Per client count the sweep runs the
+/// same sharded, ingress-metered, write-heavy Erda workload four ways:
 ///
 /// 1. **heap** — the legacy single [`crate::sim::HeapQueue`] scheduler;
 /// 2. **tiered** — the default [`crate::sim::TieredQueue`] (per-world
-///    lanes under a small top heap), asserted bit-for-bit equal to the
-///    heap run down to the latency stream — the schedulers differ only in
-///    cost, never in order;
-/// 3. **tiered + doorbell 8** — client posts coalesced eight to a
+///    lanes under a small top heap; per-actor lanes
+///    ([`crate::sim::LaneKey::Actor`]) once the population is wide enough
+///    that per-world lanes degenerate to a few huge BTree lanes),
+///    asserted bit-for-bit equal to the heap run down to the latency
+///    stream — the schedulers differ only in cost, never in order;
+/// 3. **calendar** — the O(1)-amortized bucketed
+///    [`crate::sim::CalendarQueue`], asserted bit-for-bit the same way;
+/// 4. **tiered + doorbell 8** — client posts coalesced eight to a
 ///    doorbell ([`DriverConfig::doorbell_batch`]): same op totals, one
 ///    posting floor per batch instead of per op.
 ///
 /// Simulated throughput gates in CI (`erda_kops`, `erda_b8_kops`); the
-/// host wall-clock columns are informational only — they say how fast the
-/// simulator itself ran, which is the whole point of the tiered queue.
+/// host wall-clock and host-events-per-second columns are informational
+/// only — they say how fast the simulator itself ran at each population,
+/// which is the whole point of the scheduler tiers.
 pub fn scale(client_counts: &[usize], fid: Fidelity) -> Rendered {
     let window = 8;
     let mut rows = Vec::new();
     for &clients in client_counts {
-        let shards = (clients / 8).max(2);
-        let mk = |scheduler: crate::sim::SchedulerKind, doorbell: usize| {
+        let shards = (clients / 8).clamp(2, 8);
+        // Per-world lanes stop paying once thousands of actors pile into
+        // a handful of world lanes; key the tiered run by actor there.
+        let lane_key = if clients >= 256 {
+            crate::sim::LaneKey::Actor
+        } else {
+            crate::sim::LaneKey::World
+        };
+        let mk = |scheduler: crate::sim::SchedulerKind,
+                  lane_key: crate::sim::LaneKey,
+                  doorbell: usize| {
             let mut cfg = base_cfg(SchemeSel::Erda, Workload::UpdateHeavy, 256, clients, fid);
             cfg.shards = shards;
             cfg.window = window;
             cfg.ingress_channels = Some(1);
             cfg.scheduler = scheduler;
+            cfg.lane_key = lane_key;
             cfg.doorbell_batch = doorbell;
             cfg
         };
-        let t0 = std::time::Instant::now();
-        let heap = run(&mk(crate::sim::SchedulerKind::Heap, 1));
-        let heap_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let t1 = std::time::Instant::now();
-        let tiered = run(&mk(crate::sim::SchedulerKind::Tiered, 1));
-        let tiered_ms = t1.elapsed().as_secs_f64() * 1e3;
-        assert_eq!(heap.ops, tiered.ops, "{clients} clients: scheduler changed the op total");
-        assert_eq!(
-            heap.duration_ns, tiered.duration_ns,
-            "{clients} clients: scheduler changed the makespan"
-        );
-        assert_eq!(
-            (heap.latency.count(), heap.latency.mean_ns()),
-            (tiered.latency.count(), tiered.latency.mean_ns()),
-            "{clients} clients: scheduler changed the latency stream"
-        );
-        assert_eq!(
-            heap.nvm_programmed_bytes, tiered.nvm_programmed_bytes,
-            "{clients} clients: scheduler changed the NVM traffic"
-        );
-        let b8 = run(&mk(crate::sim::SchedulerKind::Tiered, 8));
+        let timed = |cfg: &DriverConfig| {
+            let t = std::time::Instant::now();
+            let stats = run(cfg);
+            (stats, t.elapsed().as_secs_f64())
+        };
+        let (heap, heap_s) = timed(&mk(crate::sim::SchedulerKind::Heap, lane_key, 1));
+        let (tiered, tiered_s) = timed(&mk(crate::sim::SchedulerKind::Tiered, lane_key, 1));
+        let (calendar, calendar_s) = timed(&mk(crate::sim::SchedulerKind::Calendar, lane_key, 1));
+        for (kind, other) in [("tiered", &tiered), ("calendar", &calendar)] {
+            assert_eq!(heap.ops, other.ops, "{clients} clients: {kind} changed the op total");
+            assert_eq!(
+                heap.duration_ns, other.duration_ns,
+                "{clients} clients: {kind} changed the makespan"
+            );
+            assert_eq!(
+                heap.events, other.events,
+                "{clients} clients: {kind} changed the event count"
+            );
+            assert_eq!(
+                (heap.latency.count(), heap.latency.mean_ns()),
+                (other.latency.count(), other.latency.mean_ns()),
+                "{clients} clients: {kind} changed the latency stream"
+            );
+            assert_eq!(
+                heap.nvm_programmed_bytes, other.nvm_programmed_bytes,
+                "{clients} clients: {kind} changed the NVM traffic"
+            );
+        }
+        let b8 = run(&mk(crate::sim::SchedulerKind::Tiered, lane_key, 8));
         assert_eq!(heap.ops, b8.ops, "{clients} clients: doorbell changed the op total");
         assert!(b8.batched_posts > 0, "{clients} clients: doorbell 8 coalesced nothing");
         assert!(
             b8.mean_batch_size() > 1.0,
             "{clients} clients: doorbell batches must carry > 1 op"
         );
+        let evps_k = |s: &crate::metrics::RunStats, secs: f64| {
+            format!("{:.0}", s.events as f64 / secs.max(1e-9) / 1e3)
+        };
         rows.push(vec![
             clients.to_string(),
             shards.to_string(),
@@ -794,16 +822,21 @@ pub fn scale(client_counts: &[usize], fid: Fidelity) -> Rendered {
             format!("{:.2}", b8.mean_batch_size()),
             b8.batched_posts.to_string(),
             format!("{:.1}", tiered.sched_pops as f64 / 1e3),
-            format!("{heap_ms:.1}"),
-            format!("{tiered_ms:.1}"),
+            format!("{:.1}", heap_s * 1e3),
+            format!("{:.1}", tiered_s * 1e3),
+            format!("{:.1}", calendar_s * 1e3),
+            evps_k(&heap, heap_s),
+            evps_k(&tiered, tiered_s),
+            evps_k(&calendar, calendar_s),
         ]);
     }
     Rendered {
         id: "scale".into(),
         title: format!(
-            "Scale: tiered scheduler (bit-for-bit vs heap) and doorbell-8 batching vs \
-             client count (window {window}, YCSB-A, 256 B, 1-channel shared ingress; \
-             *_ms = host wall clock, informational)"
+            "Scale: heap/tiered/calendar schedulers (bit-for-bit identical) and \
+             doorbell-8 batching vs client count (window {window}, YCSB-A, 256 B, \
+             1-channel shared ingress; *_ms = host wall clock and *_evps_k = host \
+             events/sec in thousands, both informational)"
         ),
         header: vec![
             "clients".into(),
@@ -815,6 +848,10 @@ pub fn scale(client_counts: &[usize], fid: Fidelity) -> Rendered {
             "sched_pops_k".into(),
             "heap_ms".into(),
             "tiered_ms".into(),
+            "calendar_ms".into(),
+            "heap_evps_k".into(),
+            "tiered_evps_k".into(),
+            "calendar_evps_k".into(),
         ],
         rows,
     }
@@ -986,17 +1023,25 @@ mod tests {
 
     #[test]
     fn quick_scale_sweep_pins_equivalence_and_batching() {
-        // The bit-for-bit heap-vs-tiered and doorbell assertions run inside
-        // scale() itself; here we pin the reported shapes.
+        // The bit-for-bit heap/tiered/calendar and doorbell assertions run
+        // inside scale() itself; here we pin the reported shapes.
         let r = scale(&[8], Fidelity::Quick);
         assert_eq!(r.rows.len(), 1);
-        assert_eq!(r.header.len(), 9);
+        assert_eq!(r.header.len(), 13);
         let cell = |col: usize| -> f64 { r.rows[0][col].parse().unwrap() };
         assert!(cell(2) > 0.0, "tiered run must complete");
         assert!(cell(3) > 0.0, "doorbell-8 run must complete");
         assert!(cell(4) > 1.0, "doorbell batches must average > 1 op");
         assert!(cell(5) > 0.0, "doorbell posts must be counted");
         assert!(cell(6) > 0.0, "scheduler pops must be surfaced");
+        // Host-side columns parse and the events/sec rates are positive for
+        // all three scheduler tiers.
+        for col in 7..13 {
+            assert!(cell(col) >= 0.0, "host column {col} must parse");
+        }
+        for col in 10..13 {
+            assert!(cell(col) > 0.0, "events/sec column {col} must be positive");
+        }
     }
 
     #[test]

@@ -35,10 +35,13 @@ fn main() -> Result<()> {
             fail_at,
             read_policy,
             scheduler,
+            lane_key,
             doorbell,
+            mirror_doorbell,
+            migration_doorbell,
         } => smoke(
             scheme, seed, shards, window, arrival, ingress, mirrored, reshard_at, fail_at,
-            read_policy, scheduler, doorbell,
+            read_policy, scheduler, lane_key, doorbell, mirror_doorbell, migration_doorbell,
         ),
         Cmd::Scaling { shards, fidelity, out, json } => {
             let r = figures::scaling(&shards, fidelity);
@@ -167,8 +170,10 @@ fn bench_gate(
 /// promotion (`fail_at`), or (optionally) a mid-run scale-out reshard from
 /// `shards` to `shards + 1` with zero-lost-write checks.
 /// The engine runs under the requested event-queue `scheduler` (results
-/// are bit-for-bit identical across kinds) and, with `doorbell > 1`,
-/// coalesces ready ops into doorbell-batched ingress posts.
+/// are bit-for-bit identical across kinds) with tiered lanes keyed by
+/// `lane_key`, and, with any doorbell width > 1, coalesces ready client
+/// ops (`doorbell`), mirror legs (`mirror_doorbell`) or migrating keys
+/// (`migration_doorbell`) into batched ingress posts.
 /// Deterministic in `seed`.
 #[allow(clippy::too_many_arguments)]
 fn smoke(
@@ -183,7 +188,10 @@ fn smoke(
     fail_at: Option<u64>,
     read_policy: erda::store::ReadPolicy,
     scheduler: erda::sim::SchedulerKind,
+    lane_key: erda::sim::LaneKey,
     doorbell: usize,
+    mirror_doorbell: usize,
+    migration_doorbell: usize,
 ) -> Result<()> {
     use erda::store::{Cluster, Fault, FaultPlan, ReadPolicy, RemoteStore, Request, ReshardPlan};
     use erda::ycsb::{key_of, Workload};
@@ -192,7 +200,9 @@ fn smoke(
         "smoke: scheme = {}, seed = {seed:#x}, shards = {shards}, window = {window}, \
          arrival = {arrival:?}, ingress = {ingress:?}, mirrored = {mirrored}, \
          reshard_at = {reshard_at:?} ms, fail_at = {fail_at:?} ms, \
-         read_policy = {read_policy:?}, scheduler = {scheduler:?}, doorbell = {doorbell}",
+         read_policy = {read_policy:?}, scheduler = {scheduler:?}, \
+         lane_key = {lane_key:?}, doorbell = {doorbell}, \
+         mirror_doorbell = {mirror_doorbell}, migration_doorbell = {migration_doorbell}",
         scheme.label()
     );
 
@@ -271,7 +281,10 @@ fn smoke(
         .value_size(256)
         .seed(seed)
         .scheduler(scheduler)
+        .lane_key(lane_key)
         .doorbell_batch(doorbell)
+        .mirror_doorbell(mirror_doorbell)
+        .migration_doorbell(migration_doorbell)
         .read_policy(read_policy)
         // Measure everything: the full-quota check below needs every op of
         // every spawned client counted (the default 5 ms warmup would drop

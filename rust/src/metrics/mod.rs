@@ -435,6 +435,12 @@ pub struct RunStats {
     pub sched_pushes: u64,
     /// Events popped from the engine's event queue over the whole run.
     pub sched_pops: u64,
+    /// Stale queue-bookkeeping entries the scheduler discarded (lazy
+    /// implementations only — the tiered queue's superseded lane-head
+    /// snapshots). Unlike `sched_pushes`/`sched_pops` this is
+    /// queue-implementation-specific, so it is diagnostics only and
+    /// excluded from every equivalence fingerprint.
+    pub sched_stale_skips: u64,
 }
 
 impl RunStats {
@@ -611,6 +617,7 @@ impl RunStats {
             batched_ops: c.batched_ops,
             sched_pushes: 0,
             sched_pops: 0,
+            sched_stale_skips: 0,
         }
     }
 
@@ -623,9 +630,12 @@ impl RunStats {
 
     /// Fold the engine's event-queue traffic into these stats (engine
     /// accounting like `events`, folded in by the cluster driver).
-    pub fn with_scheduler(mut self, pushes: u64, pops: u64) -> RunStats {
+    /// `stale_skips` is the lazy-queue diagnostic counter — zero for the
+    /// exact heap/calendar kinds.
+    pub fn with_scheduler(mut self, pushes: u64, pops: u64, stale_skips: u64) -> RunStats {
         self.sched_pushes = pushes;
         self.sched_pops = pops;
+        self.sched_stale_skips = stale_skips;
         self
     }
 
@@ -874,12 +884,13 @@ mod tests {
         assert_eq!(c.batched_ops, 12);
 
         let s = RunStats::collect(&c, 0, crate::nvm::WriteStats::default(), 0)
-            .with_scheduler(500, 480);
+            .with_scheduler(500, 480, 17);
         assert_eq!(s.batched_posts, 3);
         assert_eq!(s.batched_ops, 12);
         assert_eq!(s.mean_batch_size(), 4.0);
         assert_eq!(s.sched_pushes, 500);
         assert_eq!(s.sched_pops, 480);
+        assert_eq!(s.sched_stale_skips, 17);
         assert_eq!(RunStats::default().mean_batch_size(), 0.0);
     }
 

@@ -20,7 +20,7 @@
 //! ([`crate::sim::queue`]); both kinds pop the identical `(time, seq)`
 //! order, so the choice never changes a drain sequence.
 
-use super::queue::{EventQueue, HeapQueue, SchedulerKind, TieredQueue};
+use super::queue::{CalendarQueue, EventQueue, HeapQueue, SchedulerKind, TieredQueue};
 use super::Time;
 
 /// Lane count for a tiered-backed set: windows are small (tens of lanes),
@@ -52,6 +52,7 @@ impl CompletionSet {
         let queue: Box<dyn EventQueue> = match kind {
             SchedulerKind::Heap => Box::new(HeapQueue::new()),
             SchedulerKind::Tiered => Box::new(TieredQueue::new(TIERED_LANES)),
+            SchedulerKind::Calendar => Box::new(CalendarQueue::new()),
         };
         CompletionSet { queue, seq: 0 }
     }
@@ -129,7 +130,7 @@ mod tests {
     }
 
     #[test]
-    fn both_backends_drain_identically() {
+    fn all_backends_drain_identically() {
         let drain = |mut c: CompletionSet| -> Vec<usize> {
             for (tok, at) in [(4usize, 70), (0, 10), (2, 70), (7, 30), (1, 10)] {
                 c.arm(tok, at);
@@ -139,7 +140,9 @@ mod tests {
         };
         let heap = drain(CompletionSet::with_kind(SchedulerKind::Heap));
         let tiered = drain(CompletionSet::with_kind(SchedulerKind::Tiered));
+        let calendar = drain(CompletionSet::with_kind(SchedulerKind::Calendar));
         assert_eq!(heap, tiered);
+        assert_eq!(heap, calendar);
         assert_eq!(heap, vec![0, 1, 7, 4, 2]);
     }
 }

@@ -22,9 +22,10 @@
 //! map it anchors — in `docs/ARCHITECTURE.md`.
 //!
 //! The queue behind the engine is pluggable ([`crate::sim::queue`]): the
-//! legacy global `BinaryHeap` or the default tiered per-lane scheduler.
-//! Both pop the exact `(time, seq)` minimum, so the choice never changes
-//! results — only the simulator's own wall-clock cost at scale.
+//! legacy global `BinaryHeap`, the default tiered per-lane scheduler, or
+//! the bucketed calendar queue. All pop the exact `(time, seq)` minimum,
+//! so the choice never changes results — only the simulator's own
+//! wall-clock cost at scale.
 
 use super::queue::{EventQueue, SchedulerKind};
 use super::Time;
@@ -97,9 +98,12 @@ impl<S> Engine<S> {
         self.events
     }
 
-    /// Event-queue traffic so far: `(pushes, pops)`.
-    pub fn sched_stats(&self) -> (u64, u64) {
-        (self.queue.pushes(), self.queue.pops())
+    /// Event-queue traffic so far: `(pushes, pops, stale_skips)`. Pushes
+    /// and pops are identical across queue kinds (the equivalence
+    /// contract); stale skips are implementation-specific diagnostics
+    /// (lazy queues only — zero for exact ones).
+    pub fn sched_stats(&self) -> (u64, u64, u64) {
+        (self.queue.pushes(), self.queue.pops(), self.queue.stale_skips())
     }
 
     /// Run until the queue drains or `deadline` (virtual) is passed.
@@ -285,10 +289,10 @@ mod tests {
     }
 
     #[test]
-    fn heap_and_tiered_queues_replay_identically() {
+    fn all_queue_kinds_replay_identically() {
         // The engine-level restatement of the queue equivalence: the same
         // actor population produces a bit-identical execution log under
-        // both schedulers.
+        // every scheduler.
         let run = |kind: crate::sim::SchedulerKind| -> (Vec<(Time, u32)>, u64, Time) {
             let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
             let mut e = Engine::with_queue(0u64, kind.queue(4));
@@ -305,6 +309,8 @@ mod tests {
         };
         let heap = run(crate::sim::SchedulerKind::Heap);
         let tiered = run(crate::sim::SchedulerKind::Tiered);
+        let calendar = run(crate::sim::SchedulerKind::Calendar);
         assert_eq!(heap, tiered, "schedulers must be bit-for-bit equivalent");
+        assert_eq!(heap, calendar, "calendar queue must replay the heap exactly");
     }
 }

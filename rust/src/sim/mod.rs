@@ -23,7 +23,7 @@ pub mod timing;
 
 pub use completion::CompletionSet;
 pub use engine::{Actor, Engine, Step};
-pub use queue::{Event, EventQueue, HeapQueue, SchedulerKind, TieredQueue};
+pub use queue::{CalendarQueue, Event, EventQueue, HeapQueue, LaneKey, SchedulerKind, TieredQueue};
 pub use resource::CpuPool;
 pub use rng::Rng;
 pub use timing::Timing;

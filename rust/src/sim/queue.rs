@@ -11,11 +11,17 @@
 //! - [`HeapQueue`] is the legacy single `BinaryHeap`: O(log n) in *all*
 //!   pending events across every world.
 //! - [`TieredQueue`] shards events into per-lane sub-heaps (lane =
-//!   `actor_id % lanes`; the cluster driver passes one lane per world)
-//!   merged by a small top heap of lane heads, so the pop path is
-//!   O(log lanes + log per-lane-pending) — at thousands of clients across
-//!   dozens of shards the top heap stays tiny while each sub-heap holds
-//!   only its own world's events.
+//!   `actor_id % lanes`; the cluster driver keys lanes per world or per
+//!   actor, see [`LaneKey`]) merged by a small top heap of lane heads, so
+//!   the pop path is O(log lanes + log per-lane-pending) — at thousands of
+//!   clients across dozens of shards the top heap stays tiny while each
+//!   sub-heap holds only its own world's events.
+//! - [`CalendarQueue`] is a bucketed calendar queue (Brown 1988): events
+//!   file into rotating time buckets of an auto-resized width, a cursor
+//!   sweeps the current "year" bucket by bucket, and events past the
+//!   year's horizon wait in a sorted-overflow heap. Push and pop are O(1)
+//!   amortized when the bucket width tracks the observed inter-event gap
+//!   (the resize policy's job), independent of the pending population.
 //!
 //! The top heap holds *snapshots* of lane heads and is maintained lazily:
 //! a push that becomes its lane's new head also pushes a `(time, seq,
@@ -60,6 +66,12 @@ pub trait EventQueue: std::fmt::Debug {
     fn pushes(&self) -> u64;
     /// Total events ever popped.
     fn pops(&self) -> u64;
+    /// Stale bookkeeping entries discarded so far (lazily-maintained
+    /// implementations only). Diagnostics: unlike `pushes`/`pops` this is
+    /// implementation-specific and NOT part of the equivalence contract.
+    fn stale_skips(&self) -> u64 {
+        0
+    }
 }
 
 /// The legacy implementation: one global min-heap over every pending
@@ -125,7 +137,12 @@ pub struct TieredQueue {
     len: usize,
     pushes: u64,
     pops: u64,
+    stale: u64,
 }
+
+/// Compaction floor for [`TieredQueue`]'s top heap: below this size the
+/// stale fraction cannot cost enough to be worth a rebuild.
+const TOP_COMPACT_FLOOR: usize = 64;
 
 impl TieredQueue {
     /// A queue with `lanes` sub-heaps (clamped to at least one); events
@@ -138,6 +155,7 @@ impl TieredQueue {
             len: 0,
             pushes: 0,
             pops: 0,
+            stale: 0,
         }
     }
 
@@ -149,9 +167,30 @@ impl TieredQueue {
                 Some(&Reverse((_, head_seq, _))) if head_seq == seq => return,
                 _ => {
                     self.top.pop();
+                    self.stale += 1;
                 }
             }
         }
+    }
+
+    /// Rebuild the top heap from the actual lane heads once stale (or
+    /// duplicate) snapshots dominate. At most one snapshot per lane is
+    /// live, so a top heap past twice the lane count is >50 % stale —
+    /// without this bound, heavy same-lane churn (every push undercutting
+    /// its lane head) grows the top heap with every push and the lazy
+    /// discard in `settle` never catches up.
+    fn maybe_compact(&mut self) {
+        if self.top.len() <= (2 * self.lanes.len()).max(TOP_COMPACT_FLOOR) {
+            return;
+        }
+        let before = self.top.len();
+        self.top.clear();
+        for (lane, heap) in self.lanes.iter().enumerate() {
+            if let Some(&Reverse((t, seq, id))) = heap.peek() {
+                self.top.push(Reverse((t, seq, id, lane)));
+            }
+        }
+        self.stale += (before - self.top.len()) as u64;
     }
 }
 
@@ -166,6 +205,7 @@ impl EventQueue for TieredQueue {
         self.lanes[lane].push(Reverse(e));
         if was_head {
             self.top.push(Reverse((t, seq, id, lane)));
+            self.maybe_compact();
         }
         self.len += 1;
         self.pushes += 1;
@@ -199,11 +239,303 @@ impl EventQueue for TieredQueue {
     fn pops(&self) -> u64 {
         self.pops
     }
+
+    fn stale_skips(&self) -> u64 {
+        self.stale
+    }
 }
 
-/// Which [`EventQueue`] implementation a run uses. Both produce identical
-/// results (same `(time, seq)` pop order); the choice only affects the
-/// simulator's own wall-clock cost.
+/// Minimum bucket count of a [`CalendarQueue`] year.
+const CAL_MIN_BUCKETS: usize = 16;
+/// Initial [`CalendarQueue`] bucket width (ns) before any gap is observed.
+const CAL_INIT_WIDTH: Time = 4_096;
+
+/// A bucketed calendar queue (Brown 1988) popping the exact global
+/// `(time, seq)` minimum.
+///
+/// Events below the current horizon file into `buckets[(t / width) %
+/// buckets.len()]`, each bucket kept sorted (descending, so the bucket
+/// minimum is `last()` and removal is O(1)). A cursor sweeps the current
+/// bucket's time window; advancing a window costs O(1) and the bucket
+/// width auto-resizes toward the observed inter-event gap so an average
+/// pop lands within a step or two. Events at or past the horizon — more
+/// than one full bucket rotation ("year") ahead — wait in a sorted
+/// overflow heap that is compared against the calendar head on every pop
+/// and drained into the buckets whenever the calendar side runs dry.
+///
+/// Two invariants carry the exactness proof:
+/// - every bucketed event fires at or after `bucket_start` (pushes into
+///   the past re-anchor the cursor first), and
+/// - the window `[bucket_start, bucket_start + width)` maps exactly onto
+///   the cursor bucket, so a cursor-bucket minimum inside the window IS
+///   the global bucketed minimum.
+///
+/// Non-monotone pushes (the queue imposes no clock; see the fuzz tests)
+/// and a shrinking horizon after a cursor re-anchor can strand events more
+/// than a year ahead of the cursor; the sweep therefore falls back to a
+/// direct min search after one fruitless year, which re-anchors the
+/// cursor. Same-instant events order by the globally-unique `seq`, exactly
+/// like the other two implementations.
+#[derive(Debug)]
+pub struct CalendarQueue {
+    /// One rotation ("year") of buckets, each sorted descending so the
+    /// minimum sits at the tail.
+    buckets: Vec<Vec<Event>>,
+    /// Bucket width in virtual ns (≥ 1).
+    width: Time,
+    /// Cursor bucket; invariant `cur == (bucket_start / width) % len`.
+    cur: usize,
+    /// Start of the cursor bucket's current window; no bucketed event
+    /// fires before this instant.
+    bucket_start: Time,
+    /// Events currently held in `buckets` (the overflow heap is extra).
+    cal_len: usize,
+    /// The sorted-overflow year: events at or past the horizon at the
+    /// time they were filed.
+    overflow: BinaryHeap<Reverse<Event>>,
+    /// Exponential moving average of pop-to-pop time gaps — the bucket
+    /// width estimator used at resize.
+    gap_ema: Time,
+    last_pop: Time,
+    pushes: u64,
+    pops: u64,
+}
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CalendarQueue {
+    /// An empty queue (16 buckets, 4 µs width until gaps are observed).
+    pub fn new() -> Self {
+        CalendarQueue {
+            buckets: (0..CAL_MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            width: CAL_INIT_WIDTH,
+            cur: 0,
+            bucket_start: 0,
+            cal_len: 0,
+            overflow: BinaryHeap::new(),
+            gap_ema: CAL_INIT_WIDTH,
+            last_pop: 0,
+            pushes: 0,
+            pops: 0,
+        }
+    }
+
+    /// One full rotation of virtual time.
+    fn year(&self) -> Time {
+        self.width.saturating_mul(self.buckets.len() as Time)
+    }
+
+    /// First instant past the current year: bucketed events stay below it
+    /// (at filing time); later arrivals go to the overflow heap.
+    fn horizon(&self) -> Time {
+        self.bucket_start.saturating_add(self.year())
+    }
+
+    fn index_of(&self, t: Time) -> usize {
+        ((t / self.width) as usize) % self.buckets.len()
+    }
+
+    /// Point the cursor at the window containing `t`.
+    fn rebase(&mut self, t: Time) {
+        self.bucket_start = (t / self.width) * self.width;
+        self.cur = self.index_of(t);
+    }
+
+    /// File one event into its bucket (sorted position) or the overflow.
+    fn place(&mut self, e: Event) {
+        if e.0 >= self.horizon() {
+            self.overflow.push(Reverse(e));
+        } else {
+            let i = self.index_of(e.0);
+            let b = &mut self.buckets[i];
+            let pos = b.partition_point(|&x| x > e);
+            b.insert(pos, e);
+            self.cal_len += 1;
+        }
+    }
+
+    /// Advance the cursor to the bucket holding the bucketed minimum and
+    /// return that bucket's index (the event is its tail). After one
+    /// fruitless year — possible only when a re-anchor stranded events
+    /// past the horizon — jump straight to the minimum and re-anchor.
+    fn settle_calendar(&mut self) -> Option<usize> {
+        if self.cal_len == 0 {
+            return None;
+        }
+        for _ in 0..self.buckets.len() {
+            let window_end = self.bucket_start + self.width;
+            if let Some(&e) = self.buckets[self.cur].last() {
+                if e.0 < window_end {
+                    return Some(self.cur);
+                }
+            }
+            self.cur = (self.cur + 1) % self.buckets.len();
+            self.bucket_start += self.width;
+        }
+        let (mut best, mut at): (Option<Event>, usize) = (None, 0);
+        for (i, b) in self.buckets.iter().enumerate() {
+            if let Some(&e) = b.last() {
+                match best {
+                    Some(m) if m <= e => {}
+                    _ => {
+                        best = Some(e);
+                        at = i;
+                    }
+                }
+            }
+        }
+        let e = best.expect("cal_len > 0 guarantees a bucketed event");
+        self.rebase(e.0);
+        Some(self.index_of(e.0))
+    }
+
+    /// Pull every overflow event now inside the horizon into the buckets.
+    fn drain_overflow(&mut self) {
+        while let Some(&Reverse(e)) = self.overflow.peek() {
+            if e.0 >= self.horizon() {
+                break;
+            }
+            self.overflow.pop();
+            self.place(e);
+        }
+    }
+
+    /// Track the observed inter-pop gap (EMA, 1/8 weight).
+    fn note_gap(&mut self, t: Time) {
+        let gap = t.saturating_sub(self.last_pop);
+        self.last_pop = t;
+        self.gap_ema = (self.gap_ema.saturating_mul(7).saturating_add(gap)) / 8;
+    }
+
+    /// Rebuild with `nbuckets` buckets sized by the observed gap EMA,
+    /// re-anchored at the bucketed minimum.
+    fn resize(&mut self, nbuckets: usize) {
+        let nbuckets = nbuckets.max(CAL_MIN_BUCKETS);
+        let mut all: Vec<Event> = Vec::with_capacity(self.cal_len);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        self.buckets = (0..nbuckets).map(|_| Vec::new()).collect();
+        self.cal_len = 0;
+        self.width = self.gap_ema.max(1);
+        match all.iter().min() {
+            Some(&(t, _, _)) => self.rebase(t),
+            None => self.rebase(self.last_pop),
+        }
+        for e in all {
+            self.place(e);
+        }
+        self.drain_overflow();
+    }
+}
+
+impl EventQueue for CalendarQueue {
+    fn push(&mut self, e: Event) {
+        if e.0 < self.bucket_start {
+            self.rebase(e.0);
+        }
+        self.place(e);
+        self.pushes += 1;
+        if self.cal_len > 2 * self.buckets.len() {
+            self.resize(self.buckets.len() * 2);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        let cal_at = self.settle_calendar();
+        let cal = cal_at.map(|i| *self.buckets[i].last().expect("settled"));
+        let over = self.overflow.peek().map(|&Reverse(e)| e);
+        let take_overflow = match (cal, over) {
+            (None, None) => return None,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (Some(c), Some(o)) => o < c,
+        };
+        let e = if take_overflow {
+            let Reverse(e) = self.overflow.pop().expect("peeked");
+            if self.cal_len == 0 {
+                // The calendar side ran dry: re-anchor the year at this
+                // instant and pull the next year in from the overflow.
+                self.rebase(e.0);
+                self.drain_overflow();
+            }
+            e
+        } else {
+            let i = cal_at.expect("calendar side chosen");
+            self.cal_len -= 1;
+            self.buckets[i].pop().expect("settled head exists")
+        };
+        self.pops += 1;
+        self.note_gap(e.0);
+        if self.buckets.len() > CAL_MIN_BUCKETS && 4 * self.cal_len < self.buckets.len() {
+            self.resize(self.buckets.len() / 2);
+        }
+        Some(e)
+    }
+
+    fn peek(&mut self) -> Option<Event> {
+        let cal = self
+            .settle_calendar()
+            .map(|i| *self.buckets[i].last().expect("settled"));
+        let over = self.overflow.peek().map(|&Reverse(e)| e);
+        match (cal, over) {
+            (None, None) => None,
+            (Some(c), None) => Some(c),
+            (None, Some(o)) => Some(o),
+            (Some(c), Some(o)) => Some(c.min(o)),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.cal_len + self.overflow.len()
+    }
+
+    fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    fn pops(&self) -> u64 {
+        self.pops
+    }
+}
+
+/// How the cluster driver keys [`TieredQueue`] lanes.
+///
+/// Purely a lane-*count* choice (events land in lane `actor_id % lanes`
+/// either way), so it can never change results — only how well same-instant
+/// activity spreads across sub-heaps. Ignored by the heap and calendar
+/// kinds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LaneKey {
+    /// One lane per shard world (the default — PR 7's keying, bit for
+    /// bit): right when worlds are many and clients per world are few.
+    #[default]
+    World,
+    /// One lane per expected actor (every client, server actor, and
+    /// infrastructure actor gets its own sub-heap): right for very wide
+    /// worlds where thousands of pipelined clients would otherwise funnel
+    /// into one per-world lane.
+    Actor,
+}
+
+impl LaneKey {
+    /// Parse a CLI spelling (`world` | `actor`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "world" => Some(LaneKey::World),
+            "actor" => Some(LaneKey::Actor),
+            _ => None,
+        }
+    }
+}
+
+/// Which [`EventQueue`] implementation a run uses. All kinds produce
+/// identical results (same `(time, seq)` pop order); the choice only
+/// affects the simulator's own wall-clock cost.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SchedulerKind {
     /// The legacy single global `BinaryHeap`.
@@ -211,23 +543,28 @@ pub enum SchedulerKind {
     /// Per-lane sub-heaps merged by a small top heap (the default).
     #[default]
     Tiered,
+    /// Bucketed calendar queue with a sorted-overflow year.
+    Calendar,
 }
 
 impl SchedulerKind {
-    /// Build a queue of this kind; `lanes` sizes the tiered variant
-    /// (callers pass the world count) and is ignored by the heap.
+    /// Build a queue of this kind; `lanes` sizes the tiered variant (the
+    /// cluster driver derives it from [`LaneKey`]) and is ignored by the
+    /// heap and calendar kinds.
     pub fn queue(self, lanes: usize) -> Box<dyn EventQueue> {
         match self {
             SchedulerKind::Heap => Box::new(HeapQueue::new()),
             SchedulerKind::Tiered => Box::new(TieredQueue::new(lanes)),
+            SchedulerKind::Calendar => Box::new(CalendarQueue::new()),
         }
     }
 
-    /// Parse a CLI spelling (`heap` | `tiered`).
+    /// Parse a CLI spelling (`heap` | `tiered` | `calendar`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "heap" => Some(SchedulerKind::Heap),
             "tiered" => Some(SchedulerKind::Tiered),
+            "calendar" => Some(SchedulerKind::Calendar),
             _ => None,
         }
     }
@@ -243,6 +580,7 @@ mod tests {
         for q in [
             &mut HeapQueue::new() as &mut dyn EventQueue,
             &mut TieredQueue::new(4),
+            &mut CalendarQueue::new(),
         ] {
             q.push((30, 0, 2));
             q.push((10, 1, 7));
@@ -303,14 +641,15 @@ mod tests {
     }
 
     /// The load-bearing property: under a random interleaving of pushes
-    /// and pops the tiered queue's pop stream is bit-identical to the
-    /// reference heap's.
+    /// and pops the tiered and calendar pop streams are bit-identical to
+    /// the reference heap's.
     #[test]
     fn fuzz_equivalence_with_heap() {
         let mut rng = Rng::new(0xE2DA_0007);
         for lanes in [1usize, 3, 8, 64] {
             let mut heap = HeapQueue::new();
             let mut tiered = TieredQueue::new(lanes);
+            let mut calendar = CalendarQueue::new();
             let mut seq = 0u64;
             for _ in 0..2_000 {
                 if rng.gen_bool(0.6) || heap.is_empty() {
@@ -320,32 +659,164 @@ mod tests {
                     seq += 1;
                     heap.push(e);
                     tiered.push(e);
+                    calendar.push(e);
                 } else {
                     assert_eq!(tiered.peek(), heap.peek());
-                    assert_eq!(tiered.pop(), heap.pop());
+                    assert_eq!(calendar.peek(), heap.peek());
+                    let want = heap.pop();
+                    assert_eq!(tiered.pop(), want);
+                    assert_eq!(calendar.pop(), want);
                 }
                 assert_eq!(tiered.len(), heap.len());
+                assert_eq!(calendar.len(), heap.len());
             }
             while !heap.is_empty() {
-                assert_eq!(tiered.pop(), heap.pop());
+                let want = heap.pop();
+                assert_eq!(tiered.pop(), want);
+                assert_eq!(calendar.pop(), want);
             }
             assert!(tiered.is_empty());
+            assert!(calendar.is_empty());
             assert_eq!(tiered.pushes(), heap.pushes());
             assert_eq!(tiered.pops(), heap.pops());
+            assert_eq!(calendar.pushes(), heap.pushes());
+            assert_eq!(calendar.pops(), heap.pops());
         }
+    }
+
+    /// Engine-shaped fuzz: mostly-monotone times over a wide range, so
+    /// the calendar actually rotates years, spills into the overflow,
+    /// resizes, and drains back — not just the small-range interleave
+    /// above.
+    #[test]
+    fn fuzz_calendar_under_engine_like_monotone_load() {
+        let mut rng = Rng::new(0xE2DA_0019);
+        let mut heap = HeapQueue::new();
+        let mut calendar = CalendarQueue::new();
+        let mut seq = 0u64;
+        let mut clock: Time = 0;
+        for round in 0..20_000u32 {
+            if rng.gen_bool(0.55) || heap.is_empty() {
+                // Engine pushes: at or after the last popped instant, with
+                // gaps from sub-width to several years out.
+                let gap = match rng.gen_range(10) {
+                    0..=5 => rng.gen_range(5_000),
+                    6..=8 => rng.gen_range(200_000),
+                    _ => rng.gen_range(20_000_000),
+                };
+                let e = (clock + gap, seq, rng.gen_range(400) as usize);
+                seq += 1;
+                heap.push(e);
+                calendar.push(e);
+            } else {
+                let want = heap.pop();
+                assert_eq!(calendar.pop(), want, "round {round}");
+                clock = want.expect("non-empty").0;
+            }
+        }
+        while !heap.is_empty() {
+            assert_eq!(calendar.pop(), heap.pop());
+        }
+        assert!(calendar.is_empty());
+    }
+
+    #[test]
+    fn calendar_rebases_for_past_pushes_and_overflow_years() {
+        let mut q = CalendarQueue::new();
+        // Far beyond the initial 16-bucket × 4 µs year: overflow.
+        q.push((50_000_000, 0, 1));
+        q.push((90_000_000, 1, 2));
+        // Then a push into the (relative) past: the cursor re-anchors.
+        q.push((100, 2, 3));
+        assert_eq!(q.peek(), Some((100, 2, 3)));
+        assert_eq!(q.pop(), Some((100, 2, 3)));
+        // Draining across year boundaries pulls the overflow in.
+        assert_eq!(q.pop(), Some((50_000_000, 0, 1)));
+        // A push between the remaining overflow event and now.
+        q.push((60_000_000, 3, 4));
+        assert_eq!(q.pop(), Some((60_000_000, 3, 4)));
+        assert_eq!(q.pop(), Some((90_000_000, 1, 2)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pushes(), 4);
+        assert_eq!(q.pops(), 4);
+    }
+
+    #[test]
+    fn calendar_resizes_and_keeps_exact_order() {
+        // Push far more events than 2× the initial bucket count so the
+        // year grows, then drain low so it shrinks — the pop stream must
+        // stay the exact sorted order throughout.
+        let mut q = CalendarQueue::new();
+        let mut rng = Rng::new(0xE2DA_0011);
+        let mut events: Vec<Event> = (0..3_000u64)
+            .map(|seq| (rng.gen_range(5_000_000), seq, rng.gen_range(64) as usize))
+            .collect();
+        for &e in &events {
+            q.push(e);
+        }
+        events.sort_unstable();
+        for &want in &events {
+            assert_eq!(q.pop(), Some(want));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn tiered_compacts_stale_snapshots_under_same_lane_churn() {
+        // Every push undercuts the lane head, so every push adds a top
+        // snapshot and immediately strands the previous one. Without
+        // compaction the top heap grows with every push; with it, the
+        // stale mass is bounded and counted.
+        let mut q = TieredQueue::new(1);
+        let n = 10_000u64;
+        for seq in 0..n {
+            q.push((n - seq, seq, 0));
+        }
+        assert!(
+            q.top.len() <= (2 * q.lanes.len()).max(TOP_COMPACT_FLOOR) + 1,
+            "top heap must stay bounded: {} snapshots",
+            q.top.len()
+        );
+        assert!(q.stale_skips() > 0, "compaction surfaces discarded snapshots");
+        // The pop stream is still exact, and pushes/pops are untouched by
+        // compaction (stale skips are diagnostics, not traffic).
+        let times: Vec<Time> = std::iter::from_fn(|| q.pop()).map(|e| e.0).collect();
+        assert_eq!(times, (1..=n).collect::<Vec<Time>>());
+        assert_eq!(q.pushes(), n);
+        assert_eq!(q.pops(), n);
+    }
+
+    #[test]
+    fn stale_skips_default_to_zero_for_exact_queues() {
+        let mut h = HeapQueue::new();
+        h.push((1, 0, 0));
+        h.pop();
+        assert_eq!(h.stale_skips(), 0);
+        let mut c = CalendarQueue::new();
+        c.push((1, 0, 0));
+        c.pop();
+        assert_eq!(c.stale_skips(), 0);
+    }
+
+    #[test]
+    fn lane_key_parses() {
+        assert_eq!(LaneKey::parse("world"), Some(LaneKey::World));
+        assert_eq!(LaneKey::parse("actor"), Some(LaneKey::Actor));
+        assert_eq!(LaneKey::parse("shard"), None);
+        assert_eq!(LaneKey::default(), LaneKey::World);
     }
 
     #[test]
     fn kind_parses_and_builds() {
         assert_eq!(SchedulerKind::parse("heap"), Some(SchedulerKind::Heap));
         assert_eq!(SchedulerKind::parse("tiered"), Some(SchedulerKind::Tiered));
-        assert_eq!(SchedulerKind::parse("calendar"), None);
+        assert_eq!(SchedulerKind::parse("calendar"), Some(SchedulerKind::Calendar));
+        assert_eq!(SchedulerKind::parse("splay"), None);
         assert_eq!(SchedulerKind::default(), SchedulerKind::Tiered);
-        let mut q = SchedulerKind::Heap.queue(4);
-        q.push((1, 0, 0));
-        assert_eq!(q.pop(), Some((1, 0, 0)));
-        let mut q = SchedulerKind::Tiered.queue(4);
-        q.push((1, 0, 0));
-        assert_eq!(q.pop(), Some((1, 0, 0)));
+        for kind in [SchedulerKind::Heap, SchedulerKind::Tiered, SchedulerKind::Calendar] {
+            let mut q = kind.queue(4);
+            q.push((1, 0, 0));
+            assert_eq!(q.pop(), Some((1, 0, 0)));
+        }
     }
 }

@@ -79,7 +79,7 @@ use crate::log::{object, LogConfig};
 use crate::metrics::{Counters, RunStats};
 use crate::nvm::{NvmConfig, WriteStats};
 use crate::rdma::Ingress;
-use crate::sim::{Engine, Time, Timing};
+use crate::sim::{Engine, LaneKey, Time, Timing};
 use crate::workload::DriverConfig;
 use crate::ycsb::{Arrival, ArrivalGen, Generator, Workload};
 
@@ -172,8 +172,8 @@ impl ClusterBuilder {
         self
     }
 
-    /// Apply an engine config group (scheduler/doorbell/ingress) in one
-    /// call ([`crate::workload::EngineConfig`]).
+    /// Apply an engine config group (scheduler/lane key/doorbells/ingress)
+    /// in one call ([`crate::workload::EngineConfig`]).
     pub fn engine(mut self, g: crate::workload::EngineConfig) -> Self {
         self.cfg.set_engine(g);
         self
@@ -224,12 +224,23 @@ impl ClusterBuilder {
     }
 
     /// Which event-queue implementation drives the co-sim engine (and the
-    /// windowed clients' completion sets): the tiered per-world scheduler
-    /// (default) or the legacy global binary heap. Results are bit-for-bit
-    /// identical either way — both pop the exact `(time, seq)` order — so
-    /// this only trades the simulator's own wall-clock cost.
+    /// windowed clients' completion sets): the tiered per-lane scheduler
+    /// (default), the legacy global binary heap, or the bucketed calendar
+    /// queue. Results are bit-for-bit identical across all three — every
+    /// kind pops the exact `(time, seq)` order — so this only trades the
+    /// simulator's own wall-clock cost.
     pub fn scheduler(mut self, kind: crate::sim::SchedulerKind) -> Self {
         self.cfg.scheduler = kind;
+        self
+    }
+
+    /// How a tiered engine queue keys its lanes: one per world (default,
+    /// the PR 7 layout) or one per actor, which keeps each lane shallow
+    /// when clients vastly outnumber worlds (10⁵-client runs). Purely a
+    /// lane-count choice — results are bit-for-bit identical either way —
+    /// and the heap/calendar kinds ignore it.
+    pub fn lane_key(mut self, key: LaneKey) -> Self {
+        self.cfg.lane_key = key;
         self
     }
 
@@ -237,11 +248,31 @@ impl ClusterBuilder {
     /// window into ONE posted ingress batch — one posting floor plus the
     /// summed wire time, all ops sharing the admission instant, the way
     /// real RNICs are driven. 1 (default) = per-op admission, bit-for-bit
-    /// the pre-batching path. Mirror legs stay per-leg admitted (they ring
-    /// as each primary persist lands, not in ready groups).
+    /// the pre-batching path. Mirror legs batch separately — see
+    /// [`Self::mirror_doorbell`].
     pub fn doorbell_batch(mut self, n: usize) -> Self {
         assert!(n >= 1, "a doorbell batch coalesces at least one op");
         self.cfg.doorbell_batch = n;
+        self
+    }
+
+    /// Mirror-leg doorbell batching: coalesce up to `n` mirror legs whose
+    /// primary persists landed at the same instant into ONE posted ingress
+    /// batch per client drain. 1 (default) = per-leg admission, bit-for-bit
+    /// the pre-batching replication path. Ignored unmirrored.
+    pub fn mirror_doorbell(mut self, n: usize) -> Self {
+        assert!(n >= 1, "a mirror doorbell coalesces at least one leg");
+        self.cfg.mirror_doorbell = n;
+        self
+    }
+
+    /// Migration-drain doorbell batching: the migration actor copies up to
+    /// `n` keys per drain step through ONE posted ingress batch. 1
+    /// (default) = per-key drain, bit-for-bit the pre-batching path.
+    /// Ignored without a reshard plan.
+    pub fn migration_doorbell(mut self, n: usize) -> Self {
+        assert!(n >= 1, "a migration doorbell coalesces at least one key");
+        self.cfg.migration_doorbell = n;
         self
     }
 
@@ -712,6 +743,20 @@ impl Cluster {
         cfg.ingress_channels.map(|c| Ingress::new(cfg.timing.clone(), c))
     }
 
+    /// Tiered-queue lane count for this run's engine, by the configured
+    /// [`LaneKey`]: one lane per world (default, the PR 7 layout), or one
+    /// per actor — every client plus headroom for cleaners, appliers, the
+    /// warmup marker, and the migration/fault actors — so a 10⁵-client run
+    /// keeps each lane's sub-heap shallow. The heap and calendar kinds
+    /// ignore the count entirely, and the tiered queue hashes actor ids
+    /// over whatever count it gets, so this can never change results.
+    fn lane_count(cfg: &DriverConfig, worlds: usize) -> usize {
+        match cfg.lane_key {
+            LaneKey::World => worlds,
+            LaneKey::Actor => cfg.clients + 2 * worlds + 4,
+        }
+    }
+
     /// How many primary worlds the run needs: the configured shards plus
     /// any NEW shards a reshard plan migrates slots onto. Scale-out
     /// destinations preload nothing — their keys arrive by migration only.
@@ -731,7 +776,8 @@ impl Cluster {
         if let Some(plan) = &cfg.reshard {
             if !plan.moves.is_empty() {
                 let at = plan.at;
-                engine.spawn(Box::new(MigrationActor::new(plan.clone())), at);
+                let actor = MigrationActor::new(plan.clone()).doorbell(cfg.migration_doorbell);
+                engine.spawn(Box::new(actor), at);
             }
         }
     }
@@ -788,9 +834,12 @@ impl Cluster {
                 + cluster_scripts.len()) as u32;
             worlds.push(w);
         }
-        // One event lane per world: cluster traffic is keyed by actor, and
-        // worlds are the natural sharding of same-instant activity.
-        let lanes = worlds.len();
+        // Tiered lane sizing by the configured key: one lane per world
+        // (default — worlds are the natural sharding of same-instant
+        // activity), or one per actor when clients vastly outnumber worlds
+        // (clients + cleaners/appliers/markers headroom). A pure capacity
+        // choice: the pop order is identical at any lane count.
+        let lanes = Self::lane_count(cfg, worlds.len());
         let mut engine = Engine::with_queue(
             ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), primaries),
             cfg.scheduler.queue(lanes),
@@ -826,6 +875,7 @@ impl Cluster {
                 cfg.mirrored,
             )
             .scheduler(cfg.scheduler)
+            .mirror_doorbell(cfg.mirror_doorbell)
             .read_policy(cfg.read_policy)
             .with_faults(!cfg.faults.is_empty());
             engine.spawn(Box::new(client), s.start);
@@ -843,6 +893,7 @@ impl Cluster {
                 )
                 .scheduler(cfg.scheduler)
                 .doorbell(cfg.doorbell_batch)
+                .mirror_doorbell(cfg.mirror_doorbell)
                 .read_policy(cfg.read_policy)
                 .with_faults(!cfg.faults.is_empty());
                 engine.spawn(Box::new(client), 0);
@@ -894,7 +945,7 @@ impl Cluster {
                 + cluster_scripts.len()) as u32;
             worlds.push(w);
         }
-        let lanes = worlds.len();
+        let lanes = Self::lane_count(cfg, worlds.len());
         let mut engine = Engine::with_queue(
             ClusterState::with_mirrors(worlds, Self::make_ingress(cfg), primaries),
             cfg.scheduler.queue(lanes),
@@ -922,6 +973,7 @@ impl Cluster {
                 cfg.mirrored,
             )
             .scheduler(cfg.scheduler)
+            .mirror_doorbell(cfg.mirror_doorbell)
             .read_policy(cfg.read_policy)
             .with_faults(!cfg.faults.is_empty());
             engine.spawn(Box::new(client), s.start);
@@ -939,6 +991,7 @@ impl Cluster {
                 )
                 .scheduler(cfg.scheduler)
                 .doorbell(cfg.doorbell_batch)
+                .mirror_doorbell(cfg.mirror_doorbell)
                 .read_policy(cfg.read_policy)
                 .with_faults(!cfg.faults.is_empty());
                 engine.spawn(Box::new(client), 0);
@@ -1008,7 +1061,7 @@ impl Cluster {
         let stats = RunStats::collect(&merged, cpu_total, nvm_total, events)
             .with_ingress(ingress_stats)
             .with_mirror_nvm(mirror_nvm)
-            .with_scheduler(sched.0, sched.1);
+            .with_scheduler(sched.0, sched.1, sched.2);
         let mut db = Db::merge_shards(primary_dbs);
         if !mirror_dbs.is_empty() {
             db.attach_mirrors(mirror_dbs);
@@ -1144,13 +1197,14 @@ mod tests {
     }
 
     #[test]
-    fn heap_and_tiered_schedulers_run_bit_for_bit() {
-        // The builder-level face of the tiered-queue refactor: the same
-        // sharded, windowed, ingress-metered run under either scheduler
-        // kind is indistinguishable down to the latency stream and the
-        // settled store. Only the push/pop counters may (and need not)
-        // differ in cost, never in count — both kinds see the same events.
-        let run = |kind: crate::sim::SchedulerKind| {
+    fn all_schedulers_and_lane_keys_run_bit_for_bit() {
+        // The builder-level face of the queue tier: the same sharded,
+        // windowed, ingress-metered run under every scheduler kind — and
+        // under either tiered lane key — is indistinguishable down to the
+        // latency stream and the settled store. Only the stale-skip
+        // diagnostic may differ (it is implementation-specific); pushes
+        // and pops never do — every kind sees the same events.
+        let run = |kind: crate::sim::SchedulerKind, lanes: crate::sim::LaneKey| {
             Cluster::builder()
                 .scheme(Scheme::Erda)
                 .shards(3)
@@ -1162,26 +1216,38 @@ mod tests {
                 .value_size(64)
                 .warmup(0)
                 .scheduler(kind)
+                .lane_key(lanes)
                 .run()
                 .unwrap()
         };
-        let heap = run(crate::sim::SchedulerKind::Heap);
-        let tiered = run(crate::sim::SchedulerKind::Tiered);
-        assert_eq!(heap.stats.ops, tiered.stats.ops);
-        assert_eq!(heap.stats.duration_ns, tiered.stats.duration_ns);
-        assert_eq!(heap.stats.events, tiered.stats.events);
-        assert_eq!(heap.stats.latency.count(), tiered.stats.latency.count());
-        assert_eq!(heap.stats.latency.mean_ns(), tiered.stats.latency.mean_ns());
-        assert_eq!(heap.stats.nvm_programmed_bytes, tiered.stats.nvm_programmed_bytes);
-        assert_eq!(heap.stats.sched_pushes, tiered.stats.sched_pushes);
-        assert_eq!(heap.stats.sched_pops, tiered.stats.sched_pops);
-        assert!(heap.stats.sched_pops > 0, "scheduler counters are surfaced");
+        let heap = run(crate::sim::SchedulerKind::Heap, crate::sim::LaneKey::World);
         let mut hd = heap.db;
-        let mut td = tiered.db;
-        for r in 0..48u64 {
-            let k = key_of(crate::ycsb::zipf::scrambled_id(r, 48));
-            assert_eq!(hd.get(&k).unwrap(), td.get(&k).unwrap(), "key {r} diverged");
+        for (kind, lanes) in [
+            (crate::sim::SchedulerKind::Tiered, crate::sim::LaneKey::World),
+            (crate::sim::SchedulerKind::Tiered, crate::sim::LaneKey::Actor),
+            (crate::sim::SchedulerKind::Calendar, crate::sim::LaneKey::World),
+        ] {
+            let other = run(kind, lanes);
+            assert_eq!(heap.stats.ops, other.stats.ops, "{kind:?}/{lanes:?}");
+            assert_eq!(heap.stats.duration_ns, other.stats.duration_ns, "{kind:?}/{lanes:?}");
+            assert_eq!(heap.stats.events, other.stats.events, "{kind:?}/{lanes:?}");
+            assert_eq!(heap.stats.latency.count(), other.stats.latency.count());
+            assert_eq!(heap.stats.latency.mean_ns(), other.stats.latency.mean_ns());
+            assert_eq!(heap.stats.nvm_programmed_bytes, other.stats.nvm_programmed_bytes);
+            assert_eq!(heap.stats.sched_pushes, other.stats.sched_pushes);
+            assert_eq!(heap.stats.sched_pops, other.stats.sched_pops);
+            let mut od = other.db;
+            for r in 0..48u64 {
+                let k = key_of(crate::ycsb::zipf::scrambled_id(r, 48));
+                assert_eq!(
+                    hd.get(&k).unwrap(),
+                    od.get(&k).unwrap(),
+                    "key {r} diverged under {kind:?}/{lanes:?}"
+                );
+            }
         }
+        assert!(heap.stats.sched_pops > 0, "scheduler counters are surfaced");
+        assert_eq!(heap.stats.sched_stale_skips, 0, "the heap maintains no lazy snapshots");
     }
 
     #[test]

@@ -64,7 +64,11 @@
 //! admits the same payload through the shared ingress again and replays the
 //! scheme's write protocol against the shard's mirror world — the op
 //! completes (and records its latency, on the primary world) only after
-//! both replicas persisted. The lane keeps its `(shard, key)` gate across
+//! both replicas persisted. Replication posting is doorbell-batchable like
+//! client issues: with `mirror_doorbell(n)` up to `n` mirror legs whose
+//! primaries persisted at the same instant coalesce into ONE ingress post
+//! (one posting floor, summed wire time); width 1 is the per-leg path bit
+//! for bit. The lane keeps its `(shard, key)` gate across
 //! both legs, so nothing overtakes a put on its key before the mirror
 //! caught up. Gets route by [`crate::store::ReadPolicy`]: the primary by
 //! default (bit for bit the PR 5 behavior), or the mirror /
@@ -283,6 +287,12 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     /// (bit-for-bit the pre-batching path: each round stages one op and
     /// one-element batches admit identically).
     batch: usize,
+    /// Mirror-leg doorbell batch size: up to this many mirror legs whose
+    /// primary legs persisted at the same instant coalesce into one posted
+    /// ingress batch per completion drain. 1 = per-leg admission
+    /// (bit-for-bit the pre-batching path: the leg flushes the moment it
+    /// is gathered and a one-element batch admits identically).
+    mirror_batch: usize,
     /// Which replica serves this client's gets in a mirrored cluster
     /// (ignored unmirrored; `Primary` = bit-for-bit the PR 5 path).
     read_policy: ReadPolicy,
@@ -319,6 +329,7 @@ impl<D: OpDriver> PipelinedClient<D> {
             routes: (0..window).map(|_| None).collect(),
             due: CompletionSet::new(),
             batch: 1,
+            mirror_batch: 1,
             read_policy: ReadPolicy::Primary,
             rr: 0,
             faulty: false,
@@ -360,6 +371,15 @@ impl<D: OpDriver> PipelinedClient<D> {
     /// per gather round (1 = legacy per-op admission, bit for bit).
     pub fn doorbell(mut self, n: usize) -> Self {
         self.batch = n.max(1);
+        self
+    }
+
+    /// Coalesce up to `n` same-instant ready mirror legs into one
+    /// doorbell-batched ingress post per completion drain (1 = legacy
+    /// per-leg admission, bit for bit). Ignored unmirrored — no op ever
+    /// grows a mirror leg.
+    pub fn mirror_doorbell(mut self, n: usize) -> Self {
+        self.mirror_batch = n.max(1);
         self
     }
 
@@ -625,6 +645,46 @@ impl<D: OpDriver> PipelinedClient<D> {
             }
         }
     }
+
+    /// Ring ONE doorbell for the gathered mirror legs — one posting floor,
+    /// summed wire time, shared admission instant — then replay each leg's
+    /// write protocol against its shard's mirror world. Every leg in the
+    /// batch became ready at the same drain instant `now`, so the shared
+    /// admission reorders nothing. A one-element flush admits identically
+    /// to [`ClusterState::admit`] — the per-leg path, bit for bit. Returns
+    /// false on client crash.
+    fn flush_mirror_legs(
+        &mut self,
+        s: &mut ClusterState<D::World>,
+        legs: &mut Vec<(usize, Request, Time, bool, usize)>,
+        now: Time,
+    ) -> bool {
+        if legs.is_empty() {
+            return true;
+        }
+        let bytes: Vec<usize> = legs.iter().map(|(_, r, _, _, _)| ingress_bytes(r)).collect();
+        let admitted = s.admit_batch(now, &bytes);
+        if legs.len() > 1 {
+            // Batch accounting lives on the first leg's mirror world (legs
+            // are replica traffic; merged cluster-wide like every counter).
+            let mw = crate::store::mirror::mirror_world_index(self.shards, legs[0].4);
+            s.worlds[mw].counters_mut().record_batch(now, legs.len() as u64);
+        }
+        for (i, (lane, req, start, cleaning, shard)) in legs.drain(..).enumerate() {
+            let mw = crate::store::mirror::mirror_world_index(self.shards, shard);
+            match self.driver.begin(&mut s.worlds[mw], req, start, admitted) {
+                OpOutcome::Continue(st, at) => {
+                    self.routes[lane].as_mut().expect("armed lane has a route").mirror_leg =
+                        Some((now, bytes[i], cleaning));
+                    self.lanes[lane] = Some(st);
+                    self.due.arm(lane, at);
+                }
+                OpOutcome::Crashed => return false,
+                OpOutcome::Finished { .. } => unreachable!("every op spans at least one verb"),
+            }
+        }
+        true
+    }
 }
 
 impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
@@ -663,6 +723,9 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
         // advances against the world its lane currently runs on: the op's
         // serve world (primary, or the mirror for policy-routed reads and
         // promoted shards), or (mirror leg in flight) its mirror world.
+        // Mirror legs ready this drain gather here for the mirror doorbell
+        // (width 1 flushes each the moment it is gathered — per-leg path).
+        let mut mirror_legs: Vec<(usize, Request, Time, bool, usize)> = Vec::new();
         while let Some(lane) = self.due.pop_due(now) {
             let st = self.lanes[lane].take().expect("armed lane holds a state");
             let (shard, serve, on_mirror) = {
@@ -723,25 +786,17 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
                         s.router.note_done(r.slot);
                         freed = true;
                     } else if let Some(req) = next_mirror {
-                        // Primary persisted; replicate before ACK: admit the
-                        // mirror payload through the shared NIC and replay
-                        // the write protocol against the mirror world.
-                        let bytes = ingress_bytes(&req);
-                        let admitted = s.admit(now, bytes);
-                        let mw = crate::store::mirror::mirror_world_index(self.shards, shard);
-                        match self.driver.begin(&mut s.worlds[mw], req, start, admitted) {
-                            OpOutcome::Continue(st, at) => {
-                                self.routes[lane]
-                                    .as_mut()
-                                    .expect("armed lane has a route")
-                                    .mirror_leg = Some((now, bytes, cleaning));
-                                self.lanes[lane] = Some(st);
-                                self.due.arm(lane, at);
-                            }
-                            OpOutcome::Crashed => return self.die(s),
-                            OpOutcome::Finished { .. } => {
-                                unreachable!("every op spans at least one verb")
-                            }
+                        // Primary persisted; replicate before ACK: gather
+                        // the leg for the mirror doorbell. At width 1 the
+                        // flush fires immediately — admit the payload
+                        // through the shared NIC and replay the write
+                        // protocol against the mirror world, bit for bit
+                        // the pre-batching path.
+                        mirror_legs.push((lane, req, start, cleaning, shard));
+                        if mirror_legs.len() >= self.mirror_batch
+                            && !self.flush_mirror_legs(s, &mut mirror_legs, now)
+                        {
+                            return self.die(s);
                         }
                     } else {
                         // Latency records on the world that served the op —
@@ -762,6 +817,13 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
                 // client's failure injection).
                 OpOutcome::Crashed => return self.die(s),
             }
+        }
+        // Drain over: flush any gathered (sub-width) mirror-leg batch
+        // before anything inspects lane or completion state — the gathered
+        // lanes re-arm here. (A crash mid-drain drops gathered legs with
+        // every other in-flight op, same as the per-leg path's dead lanes.)
+        if !self.flush_mirror_legs(s, &mut mirror_legs, now) {
+            return self.die(s);
         }
         if self.done() {
             return self.die(s);
@@ -1156,10 +1218,84 @@ mod tests {
         };
         let base = run(|c| c);
         assert_eq!(base, run(|c| c.doorbell(1)));
+        assert_eq!(base, run(|c| c.mirror_doorbell(1)));
+        assert_eq!(base, run(|c| c.mirror_doorbell(8)), "unmirrored: no legs to batch");
         assert_eq!(base, run(|c| c.scheduler(SchedulerKind::Heap)));
         assert_eq!(base, run(|c| c.scheduler(SchedulerKind::Tiered)));
+        assert_eq!(base, run(|c| c.scheduler(SchedulerKind::Calendar)));
         assert_eq!(base.2, base.5, "every op completes");
         assert_eq!(base.4, 0, "doorbell(1) never records a batched post");
+    }
+
+    #[test]
+    fn mirror_doorbell_one_is_the_per_leg_path_bit_for_bit() {
+        // An untouched mirrored client and explicit mirror_doorbell(1) must
+        // replay the exact same run: same makespan, same engine events,
+        // same per-world counters, zero batched posts.
+        let run = |mk: fn(PipelinedClient<ErdaDriver>) -> PipelinedClient<ErdaDriver>| {
+            let ops: Vec<Request> = (0..8).map(put).chain((8..12).map(get)).collect();
+            let client = mk(erda_client_mirrored(ops, 4));
+            let mut e = Engine::new(mirrored_pair());
+            e.spawn(Box::new(client), 0);
+            let end = e.run();
+            let (p, m) = (&e.state.worlds[0].counters, &e.state.worlds[1].counters);
+            (
+                end,
+                e.events(),
+                p.ops_measured,
+                p.latency.mean_ns(),
+                m.mirror_legs,
+                m.mirror_leg_ns,
+                p.batched_posts + m.batched_posts,
+            )
+        };
+        let base = run(|c| c);
+        assert_eq!(base, run(|c| c.mirror_doorbell(1)));
+        assert_eq!(base.2, 12);
+        assert_eq!(base.4, 8, "one leg per put");
+        assert_eq!(base.6, 0, "width 1 never records a batched post");
+    }
+
+    #[test]
+    fn wide_mirror_doorbell_keeps_legs_and_records_batches() {
+        // 8 puts issued under one client doorbell through a 1-channel
+        // ingress, mirrored: one shared admission means the primary legs
+        // persist together, so their mirror legs become ready in ONE drain
+        // and mirror_doorbell(8) coalesces their posting floors — fewer
+        // floors, every replication invariant intact.
+        let run = |width: usize| {
+            let ops: Vec<Request> = (0..8).map(put).collect();
+            let mut primary = erda_world();
+            let mut mirror = erda_world();
+            primary.counters.active_clients = 1;
+            mirror.counters.active_clients = 1;
+            let ingress = Some(Ingress::new(Timing::default(), 1));
+            let state = ClusterState::with_mirrors(vec![primary, mirror], ingress, 1);
+            let mut e = Engine::new(state);
+            let client = erda_client_mirrored(ops, 8).doorbell(8).mirror_doorbell(width);
+            e.spawn(Box::new(client), 0);
+            let end = e.run();
+            let s = e.state.ingress_stats();
+            for w in &mut e.state.worlds {
+                w.settle();
+            }
+            (end, s.admitted, s.wait_ns, e.state.worlds[0].counters.clone(),
+             e.state.worlds[1].counters.clone())
+        };
+        let (t1, admitted1, wait1, p1, m1) = run(1);
+        let (t8, admitted8, wait8, p8, m8) = run(8);
+        assert_eq!(admitted1, 16, "8 client posts + 8 mirror legs");
+        assert_eq!(admitted8, 16, "admitted counts legs at any width");
+        assert_eq!(p8.ops_measured, p1.ops_measured);
+        assert_eq!(m8.mirror_legs, m1.mirror_legs);
+        assert_eq!(m8.mirror_legs, 8);
+        assert_eq!(m8.mirror_bytes, m1.mirror_bytes);
+        assert_eq!(m1.batched_posts, 0, "width 1 legs never batch");
+        assert_eq!(p1.batched_posts, 1, "the client doorbell's own batch");
+        assert!(m8.batched_posts > 0, "wide width must coalesce ready legs");
+        assert_eq!(m8.batched_ops, 8, "all legs ready in one drain");
+        assert!(wait8 < wait1, "one floor per batch must cut queueing: {wait8} vs {wait1}");
+        assert!(t8 <= t1, "batching must not slow the run: {t8} vs {t1}");
     }
 
     #[test]

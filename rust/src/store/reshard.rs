@@ -27,7 +27,10 @@
 //! [`MigrationActor`] runs on the ONE co-sim `(time, seq)` event heap and
 //! admits every copied record through the shared client-NIC
 //! [`crate::rdma::Ingress`], so migration traffic competes with foreground
-//! ops for the same NIC instead of teleporting.
+//! ops for the same NIC instead of teleporting. Drain posting is
+//! doorbell-batchable: with `doorbell(n)` up to `n` key copies per drain
+//! step share ONE ingress post (one posting floor, summed wire time);
+//! width 1 is the per-key drain bit for bit.
 //!
 //! **Fence rule** (the epoch-handoff discipline of one-sided ownership
 //! transfer — cf. the RDMA-agreement line in PAPERS.md): when a slot starts
@@ -262,6 +265,12 @@ pub(crate) trait ReshardWorld {
     fn migrate_ready(&self) -> bool {
         true
     }
+    /// How many more migrated records the world can absorb right now —
+    /// bounds a doorbell-batched drain so no staged write lands on a full
+    /// ring mid-flush. Unbounded for schemes without backpressure.
+    fn migrate_headroom(&self) -> usize {
+        usize::MAX
+    }
     /// Write `key = value` in through the scheme's own write protocol;
     /// returns the wire bytes programmed.
     fn migrate_in(&mut self, key: &[u8], value: &[u8]) -> usize;
@@ -330,6 +339,10 @@ impl ReshardWorld for crate::baselines::BaselineWorld {
         self.server.pending_len() < self.server.ring_cap
     }
 
+    fn migrate_headroom(&self) -> usize {
+        self.server.ring_cap.saturating_sub(self.server.pending_len())
+    }
+
     fn migrate_in(&mut self, key: &[u8], value: &[u8]) -> usize {
         let obj = object::encode_object(key, value);
         match self.server.scheme {
@@ -366,22 +379,35 @@ struct MoveInProgress {
 }
 
 /// The migration actor: executes a [`ReshardPlan`] on the shared co-sim
-/// event heap, one slot at a time, one key per event step.
+/// event heap, one slot at a time, up to a doorbell's width of keys per
+/// event step.
 ///
 /// Per slot: **fence** (epoch bump; new ops on the slot bounce) → **wait**
 /// for the slot's in-flight count to reach zero (old-epoch ops complete
-/// before any key moves) → **drain** each key as an ingress-admitted
-/// one-sided write into the destination world plus an entry eviction at
-/// the source → **flip** the slot table and drop the fence. Never spawned
-/// for an empty plan, so a no-plan run carries zero extra events.
+/// before any key moves) → **drain** the keys as ingress-admitted
+/// one-sided writes into the destination world plus an entry eviction at
+/// the source (one doorbell-batched post per step; width 1 = one key per
+/// step, the legacy drain bit for bit) → **flip** the slot table and drop
+/// the fence. Never spawned for an empty plan, so a no-plan run carries
+/// zero extra events.
 pub(crate) struct MigrationActor {
     moves: VecDeque<SlotMove>,
     current: Option<MoveInProgress>,
+    /// Key copies coalesced into one ingress post per drain step.
+    drain_batch: usize,
 }
 
 impl MigrationActor {
     pub fn new(plan: ReshardPlan) -> Self {
-        MigrationActor { moves: plan.moves.into(), current: None }
+        MigrationActor { moves: plan.moves.into(), current: None, drain_batch: 1 }
+    }
+
+    /// Coalesce up to `n` key copies per drain step into one
+    /// doorbell-batched ingress post (1 = legacy per-key drain, bit for
+    /// bit).
+    pub fn doorbell(mut self, n: usize) -> Self {
+        self.drain_batch = n.max(1);
+        self
     }
 }
 
@@ -423,35 +449,53 @@ impl<W: ClientWorld + ReshardWorld> Actor<ClusterState<W>> for MigrationActor {
             }
         };
 
-        // Phase 2: drain one key per event step.
-        if let Some((src, key)) = keys.pop_front() {
+        // Phase 2: drain up to `drain_batch` keys per event step, their
+        // copies admitted through ONE doorbell-batched ingress post. Width
+        // 1 is the legacy drain bit for bit: one key, one admission (a
+        // one-element batch admits identically), one quantum.
+        if !keys.is_empty() {
             if !s.worlds[cur.to].migrate_ready() {
                 // Destination backpressure (RAW ring full): let its applier
-                // catch up and retry the same key.
-                keys.push_front((src, key));
+                // catch up and retry.
                 return Step::At(now + MIGRATION_QUANTUM);
             }
-            return match s.worlds[src].read_value(&key) {
-                Some(value) => {
-                    // One record = one admission through the shared client
-                    // NIC (migration traffic is priced like any write), one
-                    // staged write at the destination, one 8-byte entry
-                    // eviction at the source.
-                    let wire = object::wire_size(key.len(), value.len());
-                    let admitted = s.admit(now, wire).max(now);
-                    let to = cur.to;
-                    let copied = s.worlds[to].migrate_in(&key, &value);
-                    s.worlds[to].counters_mut().record_migrated_key(admitted, copied);
-                    s.worlds[src].evict(&key);
-                    Step::At(admitted + MIGRATION_QUANTUM)
+            // Bound the batch by destination headroom so no staged write
+            // lands on a full ring mid-flush.
+            let width = self.drain_batch.min(s.worlds[cur.to].migrate_headroom()).max(1);
+            let mut copies: Vec<(usize, Vec<u8>, Vec<u8>)> = Vec::new();
+            while copies.len() < width {
+                let Some((src, key)) = keys.pop_front() else { break };
+                match s.worlds[src].read_value(&key) {
+                    Some(value) => copies.push((src, key, value)),
+                    // Deleted while fenced-off runs drained, or a
+                    // tombstone: nothing to copy, just drop the stale
+                    // entry — and end this step's gather at the gap.
+                    None => {
+                        s.worlds[src].evict(&key);
+                        break;
+                    }
                 }
-                // Deleted while fenced-off runs drained, or a tombstone:
-                // nothing to copy, just drop the stale entry.
-                None => {
-                    s.worlds[src].evict(&key);
-                    Step::At(now + MIGRATION_QUANTUM)
-                }
-            };
+            }
+            if copies.is_empty() {
+                return Step::At(now + MIGRATION_QUANTUM);
+            }
+            // One doorbell for the whole batch through the shared client
+            // NIC (migration traffic is priced like any write); each record
+            // is one staged write at the destination plus one 8-byte entry
+            // eviction at the source.
+            let wires: Vec<usize> =
+                copies.iter().map(|(_, k, v)| object::wire_size(k.len(), v.len())).collect();
+            let admitted = s.admit_batch(now, &wires).max(now);
+            let to = cur.to;
+            if copies.len() > 1 {
+                s.worlds[to].counters_mut().record_batch(now, copies.len() as u64);
+            }
+            for (src, key, value) in copies {
+                let copied = s.worlds[to].migrate_in(&key, &value);
+                s.worlds[to].counters_mut().record_migrated_key(admitted, copied);
+                s.worlds[src].evict(&key);
+            }
+            return Step::At(admitted + MIGRATION_QUANTUM);
         }
 
         // Phase 3: the slot is empty at every source — flip and unfence.
@@ -623,6 +667,49 @@ mod tests {
         let migrated = e.state.worlds[1].counters.migrated_keys;
         assert_eq!(migrated, moved_keys.len() as u64, "every key accounted");
         assert!(e.state.worlds[1].counters.migration_bytes > 0);
+    }
+
+    #[test]
+    fn batched_drain_replays_the_per_key_path_and_coalesces_posts() {
+        use crate::rdma::Ingress;
+        // Same slot move at widths 1 and 8 through a 1-channel metered
+        // ingress: identical key set, identical destination bytes; the
+        // wide drain coalesces posting floors and finishes no later.
+        let (slot, n_keys) = (0..64u64)
+            .map(key_of)
+            .find_map(|k| {
+                if shard_of(&k, 2) != 0 {
+                    return None;
+                }
+                let slot = slot_of(&k);
+                let n = (0..64u64)
+                    .map(key_of)
+                    .filter(|k2| slot_of(k2) == slot && shard_of(k2, 2) == 0)
+                    .count();
+                (n >= 2).then_some((slot, n))
+            })
+            .expect("a slot with at least two keys on shard 0");
+        let run = |width: usize| {
+            let worlds = vec![erda_world(0, 2), erda_world(1, 2)];
+            let ingress = Some(Ingress::new(Timing::default(), 1));
+            let mut e = Engine::new(ClusterState::new(worlds, ingress));
+            let plan = ReshardPlan { at: 100, moves: vec![SlotMove { slot, to: 1 }] };
+            e.spawn(Box::new(MigrationActor::new(plan).doorbell(width)), 100);
+            let end = e.run();
+            let stats = e.state.ingress_stats();
+            e.state.worlds[1].settle();
+            (end, stats.admitted, e.state.worlds[1].counters.clone())
+        };
+        let (t1, a1, c1) = run(1);
+        let (t8, a8, c8) = run(8);
+        assert_eq!(c1.migrated_keys, n_keys as u64, "width 1 copies every key");
+        assert_eq!(c8.migrated_keys, c1.migrated_keys);
+        assert_eq!(c8.migration_bytes, c1.migration_bytes);
+        assert_eq!(a1, n_keys as u64, "one admission per copied record");
+        assert_eq!(a8, a1, "admitted counts records at any width");
+        assert_eq!(c1.batched_posts, 0, "width 1 never batches");
+        assert!(c8.batched_posts > 0, "a wide drain must coalesce copies");
+        assert!(t8 <= t1, "batching must not slow the drain: {t8} vs {t1}");
     }
 
     #[test]

@@ -57,8 +57,16 @@ pub struct ReplicationConfig {
 pub struct EngineConfig {
     /// Which event-queue implementation drives the engine.
     pub scheduler: crate::sim::SchedulerKind,
+    /// How a tiered engine queue keys its lanes (per world or per actor;
+    /// ignored by the heap and calendar kinds — a pure capacity choice
+    /// that can never change results).
+    pub lane_key: crate::sim::LaneKey,
     /// Client-side doorbell batching (1 = per-op admission).
     pub doorbell_batch: usize,
+    /// Mirror-leg doorbell batching (1 = per-leg admission).
+    pub mirror_doorbell: usize,
+    /// Migration-drain doorbell batching (1 = per-key admission).
+    pub migration_doorbell: usize,
     /// Shared client-NIC ingress channels (`None` = unmetered).
     pub ingress_channels: Option<usize>,
 }
@@ -67,7 +75,10 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             scheduler: crate::sim::SchedulerKind::default(),
+            lane_key: crate::sim::LaneKey::default(),
             doorbell_batch: 1,
+            mirror_doorbell: 1,
+            migration_doorbell: 1,
             ingress_channels: None,
         }
     }
@@ -149,6 +160,21 @@ pub struct DriverConfig {
     /// per-op admission, bit-for-bit the pre-batching path. Values > 1
     /// force the pipelined client path.
     pub doorbell_batch: usize,
+    /// How a tiered engine queue keys its lanes: one per world (default)
+    /// or one per actor — wide-client runs keep lanes shallow. Purely a
+    /// lane-count choice; results are bit-for-bit identical either way,
+    /// and the heap/calendar kinds ignore it.
+    pub lane_key: crate::sim::LaneKey,
+    /// Mirror-leg doorbell batching: coalesce up to this many mirror legs
+    /// whose primaries persisted at the same instant into ONE posted
+    /// ingress batch per client drain. 1 (default) = per-leg admission,
+    /// bit-for-bit the pre-batching path. Ignored unmirrored.
+    pub mirror_doorbell: usize,
+    /// Migration-drain doorbell batching: the migration actor copies up
+    /// to this many keys per drain step through ONE posted ingress batch.
+    /// 1 (default) = per-key drain, bit-for-bit the pre-batching path.
+    /// Ignored without a reshard plan.
+    pub migration_doorbell: usize,
 }
 
 impl Default for DriverConfig {
@@ -174,6 +200,9 @@ impl Default for DriverConfig {
             reshard: None,
             scheduler: crate::sim::SchedulerKind::default(),
             doorbell_batch: 1,
+            lane_key: crate::sim::LaneKey::default(),
+            mirror_doorbell: 1,
+            migration_doorbell: 1,
         }
     }
 }
@@ -219,7 +248,10 @@ impl DriverConfig {
     pub fn engine(&self) -> EngineConfig {
         EngineConfig {
             scheduler: self.scheduler,
+            lane_key: self.lane_key,
             doorbell_batch: self.doorbell_batch,
+            mirror_doorbell: self.mirror_doorbell,
+            migration_doorbell: self.migration_doorbell,
             ingress_channels: self.ingress_channels,
         }
     }
@@ -227,7 +259,10 @@ impl DriverConfig {
     /// Install an [`EngineConfig`] group wholesale.
     pub fn set_engine(&mut self, e: EngineConfig) -> &mut Self {
         self.scheduler = e.scheduler;
+        self.lane_key = e.lane_key;
         self.doorbell_batch = e.doorbell_batch;
+        self.mirror_doorbell = e.mirror_doorbell;
+        self.migration_doorbell = e.migration_doorbell;
         self.ingress_channels = e.ingress_channels;
         self
     }
@@ -450,7 +485,10 @@ mod tests {
         };
         let engine = EngineConfig {
             scheduler: crate::sim::SchedulerKind::Heap,
+            lane_key: crate::sim::LaneKey::Actor,
             doorbell_batch: 4,
+            mirror_doorbell: 2,
+            migration_doorbell: 8,
             ingress_channels: Some(2),
         };
         cfg.set_client(client.clone()).set_replication(repl.clone()).set_engine(engine.clone());
@@ -460,6 +498,9 @@ mod tests {
         assert_eq!(cfg.clients, 8);
         assert!(cfg.mirrored);
         assert_eq!(cfg.doorbell_batch, 4);
+        assert_eq!(cfg.lane_key, crate::sim::LaneKey::Actor);
+        assert_eq!(cfg.mirror_doorbell, 2);
+        assert_eq!(cfg.migration_doorbell, 8);
         assert!(!cfg.faults.is_empty());
     }
 

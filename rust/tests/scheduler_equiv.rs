@@ -1,15 +1,20 @@
-//! Scheduler-equivalence suite (PR 7): the tiered event queue is a pure
-//! cost optimization — it must replay the EXACT `(time, seq)` total order
-//! of the legacy binary heap. Every scheme × shard count × cluster flavor
-//! (plain, mirrored, mid-run reshard) is run under both queue kinds and
-//! compared down to the event count, makespan, latency stream, interval
-//! timeline, and the settled store. Likewise `doorbell_batch(1)` IS the
-//! pre-batching admission path, bit for bit, and wider doorbells keep
+//! Scheduler-equivalence suite (PRs 7 and 9): the tiered event queue and
+//! the bucketed calendar queue are pure cost optimizations — each must
+//! replay the EXACT `(time, seq)` total order of the legacy binary heap.
+//! Every scheme × shard count × cluster flavor (plain, mirrored, mid-run
+//! reshard, mid-run fault + failover) is run under all three queue kinds
+//! (plus per-actor tiered lanes) and compared down to the event count,
+//! makespan, latency stream, interval timeline, and the settled store.
+//! Likewise every doorbell at width 1 IS the unbatched path, bit for bit —
+//! client posts (`doorbell_batch`), replication legs (`mirror_doorbell`)
+//! and migration drains (`migration_doorbell`) — and wider doorbells keep
 //! every op-count invariant while recording their coalescing.
 
 use erda::metrics::RunStats;
-use erda::sim::{SchedulerKind, MS};
-use erda::store::{Cluster, ClusterBuilder, ReshardPlan, RemoteStore, RunOutcome, Scheme};
+use erda::sim::{LaneKey, SchedulerKind, MS};
+use erda::store::{
+    Cluster, ClusterBuilder, FaultPlan, ReshardPlan, RemoteStore, RunOutcome, Scheme,
+};
 use erda::ycsb::{key_of, Workload};
 
 const RECORDS: u64 = 64;
@@ -22,6 +27,8 @@ enum Flavor {
     Plain,
     Mirrored,
     Reshard,
+    /// Mirrored run with a mid-run primary kill + mirror promotion.
+    Fault,
 }
 
 fn builder(scheme: Scheme, shards: usize, flavor: Flavor) -> ClusterBuilder {
@@ -40,6 +47,9 @@ fn builder(scheme: Scheme, shards: usize, flavor: Flavor) -> ClusterBuilder {
         Flavor::Mirrored => b = b.mirrored(true),
         Flavor::Reshard => {
             b = b.reshard(ReshardPlan::scale_out(shards, shards + 1, MS));
+        }
+        Flavor::Fault => {
+            b = b.mirrored(true).faults(FaultPlan::fail_at(0, 50_000, 100_000));
         }
     }
     b
@@ -76,30 +86,45 @@ fn settled_values(o: RunOutcome) -> Vec<Option<Vec<u8>>> {
 fn tiered_queue_replays_the_heap_bit_for_bit_everywhere() {
     for scheme in Scheme::ALL {
         for shards in [1usize, 4] {
-            for flavor in [Flavor::Plain, Flavor::Mirrored, Flavor::Reshard] {
-                let run = |kind: SchedulerKind| {
-                    builder(scheme, shards, flavor).scheduler(kind).run().unwrap()
+            for flavor in [Flavor::Plain, Flavor::Mirrored, Flavor::Reshard, Flavor::Fault] {
+                let run = |kind: SchedulerKind, lanes: LaneKey| {
+                    builder(scheme, shards, flavor)
+                        .scheduler(kind)
+                        .lane_key(lanes)
+                        .run()
+                        .unwrap()
                 };
-                let mut heap = run(SchedulerKind::Heap);
-                let mut tiered = run(SchedulerKind::Tiered);
-                let label = format!("{scheme:?}/{shards} shards/{flavor:?}");
-                assert_eq!(fingerprint(&mut heap), fingerprint(&mut tiered), "{label}");
-                assert_eq!(
-                    (heap.stats.sched_pushes, heap.stats.sched_pops),
-                    (tiered.stats.sched_pushes, tiered.stats.sched_pops),
-                    "{label}: both kinds see the same event traffic"
-                );
-                assert!(heap.stats.sched_pops > 0, "{label}: pop counter surfaced");
-                assert_eq!(
-                    heap.per_shard.len(),
-                    tiered.per_shard.len(),
-                    "{label}: same world geometry"
-                );
-                assert_eq!(
-                    settled_values(heap),
-                    settled_values(tiered),
-                    "{label}: settled stores diverged"
-                );
+                let mut heap = run(SchedulerKind::Heap, LaneKey::World);
+                let heap_print = fingerprint(&mut heap);
+                let heap_sched = (heap.stats.sched_pushes, heap.stats.sched_pops);
+                assert!(heap.stats.sched_pops > 0, "pop counter surfaced");
+                let heap_shards = heap.per_shard.len();
+                let heap_settled = settled_values(heap);
+                for (kind, lanes) in [
+                    (SchedulerKind::Tiered, LaneKey::World),
+                    (SchedulerKind::Tiered, LaneKey::Actor),
+                    (SchedulerKind::Calendar, LaneKey::World),
+                ] {
+                    let mut other = run(kind, lanes);
+                    let label =
+                        format!("{scheme:?}/{shards} shards/{flavor:?}/{kind:?}/{lanes:?}");
+                    assert_eq!(heap_print, fingerprint(&mut other), "{label}");
+                    assert_eq!(
+                        heap_sched,
+                        (other.stats.sched_pushes, other.stats.sched_pops),
+                        "{label}: all kinds see the same event traffic"
+                    );
+                    assert_eq!(
+                        heap_shards,
+                        other.per_shard.len(),
+                        "{label}: same world geometry"
+                    );
+                    assert_eq!(
+                        heap_settled,
+                        settled_values(other),
+                        "{label}: settled stores diverged"
+                    );
+                }
             }
         }
     }
@@ -158,9 +183,9 @@ fn wide_doorbells_keep_op_totals_and_record_batches() {
 
 #[test]
 fn doorbell_batching_works_under_mirroring() {
-    // Mirror legs stay per-leg admitted; only client posts coalesce. The
-    // op-count invariant (admitted == ops + mirror legs) must hold at any
-    // batch width.
+    // At the default mirror_doorbell(1), mirror legs stay per-leg
+    // admitted; only client posts coalesce. The op-count invariant
+    // (admitted == ops + mirror legs) must hold at any batch width.
     let s = builder(Scheme::Erda, 2, Flavor::Mirrored)
         .window(8)
         .ingress(2)
@@ -178,8 +203,114 @@ fn doorbell_batching_works_under_mirroring() {
     assert!(s.batched_posts > 0);
 }
 
+#[test]
+fn mirror_doorbell_width_one_is_the_per_leg_path_bit_for_bit() {
+    // The PR 8 replication path admitted every mirror leg on its own
+    // ingress post; mirror_doorbell(1) — the default — must replay it
+    // exactly, through an ingress-metered mirrored run.
+    let run = |explicit: bool| {
+        let mut b = builder(Scheme::Erda, 2, Flavor::Mirrored).window(8).ingress(1);
+        if explicit {
+            b = b.mirror_doorbell(1);
+        }
+        b.run().unwrap()
+    };
+    let mut default = run(false);
+    let mut width1 = run(true);
+    assert_eq!(fingerprint(&mut default), fingerprint(&mut width1));
+    assert_eq!(default.stats.mirror_legs, width1.stats.mirror_legs);
+    assert_eq!(default.stats.mirror_leg_ns, width1.stats.mirror_leg_ns);
+    assert_eq!(default.stats.ingress_admitted, width1.stats.ingress_admitted);
+    assert_eq!(default.stats.ingress_wait_ns, width1.stats.ingress_wait_ns);
+    assert_eq!(default.stats.batched_posts, 0, "no doorbell, no batches");
+    assert_eq!(settled_values(default), settled_values(width1));
+}
+
+#[test]
+fn wide_mirror_doorbells_keep_legs_and_admissions() {
+    // Whatever the mirror doorbell width, every op and every replication
+    // leg admits exactly once, the leg count is untouched, and the settled
+    // store is identical. (That a wide doorbell really coalesces co-instant
+    // legs into one post is pinned at the pipeline unit level, where the
+    // co-instant population is constructed explicitly.)
+    let run = |width: usize| {
+        builder(Scheme::Erda, 2, Flavor::Mirrored)
+            .window(8)
+            .ingress(1)
+            .doorbell_batch(4)
+            .mirror_doorbell(width)
+            .run()
+            .unwrap()
+    };
+    let narrow = run(1);
+    let wide = run(8);
+    for o in [&narrow, &wide] {
+        let s = &o.stats;
+        assert_eq!(s.ops, 4 * 100);
+        assert!(s.mirror_legs > 0, "update-heavy mirrored run records legs");
+        assert_eq!(
+            s.ingress_admitted,
+            s.ops + s.mirror_legs,
+            "every op and every mirror leg admits exactly once"
+        );
+        assert!(s.batched_posts > 0, "the client doorbell batches either way");
+    }
+    assert_eq!(narrow.stats.mirror_legs, wide.stats.mirror_legs);
+    assert_eq!(narrow.stats.mirror_nvm_programmed_bytes, wide.stats.mirror_nvm_programmed_bytes);
+    assert!(
+        wide.stats.batched_posts >= narrow.stats.batched_posts,
+        "a wider mirror doorbell never posts more often"
+    );
+    assert_eq!(settled_values(narrow), settled_values(wide));
+}
+
+#[test]
+fn migration_doorbell_width_one_is_the_per_key_path_bit_for_bit() {
+    // The PR 6 migration drain copied one key per event step;
+    // migration_doorbell(1) — the default — must replay it exactly.
+    let run = |explicit: bool| {
+        let mut b = builder(Scheme::Erda, 2, Flavor::Reshard).ingress(1);
+        if explicit {
+            b = b.migration_doorbell(1);
+        }
+        b.run().unwrap()
+    };
+    let mut default = run(false);
+    let mut width1 = run(true);
+    assert_eq!(fingerprint(&mut default), fingerprint(&mut width1));
+    assert_eq!(default.stats.migrated_keys, width1.stats.migrated_keys);
+    assert!(default.stats.migrated_keys > 0, "the scale-out must move keys");
+    assert_eq!(default.stats.migration_bytes, width1.stats.migration_bytes);
+    assert_eq!(default.stats.ingress_admitted, width1.stats.ingress_admitted);
+    assert_eq!(settled_values(default), settled_values(width1));
+}
+
+#[test]
+fn wide_migration_doorbells_move_the_same_keys() {
+    // A wide drain copies the same key population with the same byte
+    // total and per-key admissions; only the posting cadence changes.
+    let run = |width: usize| {
+        builder(Scheme::Erda, 2, Flavor::Reshard)
+            .ingress(1)
+            .migration_doorbell(width)
+            .run()
+            .unwrap()
+    };
+    let narrow = run(1);
+    let wide = run(8);
+    assert!(narrow.stats.migrated_keys > 0, "the scale-out must move keys");
+    assert_eq!(narrow.stats.migrated_keys, wide.stats.migrated_keys);
+    assert_eq!(narrow.stats.migration_bytes, wide.stats.migration_bytes);
+    assert_eq!(narrow.stats.ops, wide.stats.ops);
+    assert!(
+        wide.stats.batched_posts >= narrow.stats.batched_posts,
+        "a wider migration doorbell never posts more often"
+    );
+    assert_eq!(settled_values(narrow), settled_values(wide));
+}
+
 /// Pure-stats helper equivalence at the workload facade: the same
-/// `DriverConfig` through `workload::run` under both kinds.
+/// `DriverConfig` through `workload::run` under all three queue kinds.
 #[test]
 fn workload_facade_is_scheduler_agnostic() {
     use erda::workload::{run, DriverConfig};
@@ -198,10 +329,12 @@ fn workload_facade_is_scheduler_agnostic() {
         cfg
     };
     let a: RunStats = run(&mk(SchedulerKind::Heap));
-    let b: RunStats = run(&mk(SchedulerKind::Tiered));
-    assert_eq!(a.ops, b.ops);
-    assert_eq!(a.duration_ns, b.duration_ns);
-    assert_eq!(a.events, b.events);
-    assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes);
-    assert_eq!(a.interval_done, b.interval_done);
+    for kind in [SchedulerKind::Tiered, SchedulerKind::Calendar] {
+        let b: RunStats = run(&mk(kind));
+        assert_eq!(a.ops, b.ops, "{kind:?}");
+        assert_eq!(a.duration_ns, b.duration_ns, "{kind:?}");
+        assert_eq!(a.events, b.events, "{kind:?}");
+        assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes, "{kind:?}");
+        assert_eq!(a.interval_done, b.interval_done, "{kind:?}");
+    }
 }
