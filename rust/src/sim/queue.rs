@@ -367,14 +367,14 @@ impl CalendarQueue {
             return None;
         }
         for _ in 0..self.buckets.len() {
-            let window_end = self.bucket_start + self.width;
+            let window_end = self.bucket_start.saturating_add(self.width);
             if let Some(&e) = self.buckets[self.cur].last() {
                 if e.0 < window_end {
                     return Some(self.cur);
                 }
             }
             self.cur = (self.cur + 1) % self.buckets.len();
-            self.bucket_start += self.width;
+            self.bucket_start = self.bucket_start.saturating_add(self.width);
         }
         let (mut best, mut at): (Option<Event>, usize) = (None, 0);
         for (i, b) in self.buckets.iter().enumerate() {
@@ -400,6 +400,15 @@ impl CalendarQueue {
                 break;
             }
             self.overflow.pop();
+            // An overflow event can predate the anchor: the horizon grows
+            // as pop sweeps advance `bucket_start`, so later pushes may
+            // file bucketed above an undrained overflow event, and a
+            // subsequent resize re-anchors at that bucketed minimum.
+            // Mirror push's guard so nothing files behind `bucket_start`
+            // (the heap drains ascending, so one rebase suffices).
+            if e.0 < self.bucket_start {
+                self.rebase(e.0);
+            }
             self.place(e);
         }
     }
@@ -739,6 +748,32 @@ mod tests {
         assert_eq!(q.pop(), None);
         assert_eq!(q.pushes(), 4);
         assert_eq!(q.pops(), 4);
+    }
+
+    #[test]
+    fn calendar_resize_drains_overflow_below_the_anchor_in_order() {
+        // Regression: an overflow event is overtaken by the horizon (pop
+        // sweeps advance `bucket_start`), later pushes file *bucketed*
+        // above it, and the grow-resize re-anchors at that bucketed
+        // minimum. The drained overflow event then predates the anchor
+        // and must still pop first, not a year late.
+        let mut q = CalendarQueue::new();
+        // Past the initial 16 × 4096 ns year: files into the overflow.
+        q.push((70_000, 0, 0));
+        // A bucketed event whose pop sweeps the cursor (and with it the
+        // horizon) past the overflow event without draining it.
+        q.push((60_000, 1, 1));
+        assert_eq!(q.pop(), Some((60_000, 1, 1)));
+        // Enough bucketed events above the overflow event to trigger the
+        // grow-resize, which re-anchors at their minimum (110 000).
+        for i in 0..33u64 {
+            q.push((110_000 + i, 2 + i, 2));
+        }
+        assert_eq!(q.pop(), Some((70_000, 0, 0)), "overflow min pops first");
+        for i in 0..33u64 {
+            assert_eq!(q.pop(), Some((110_000 + i, 2 + i, 2)));
+        }
+        assert!(q.is_empty());
     }
 
     #[test]
