@@ -8,6 +8,7 @@
 //!             [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
 //!             [--scheduler heap|tiered|calendar] [--lane-key world|actor]
 //!             [--doorbell N] [--mirror-doorbell N] [--migration-doorbell N]
+//!             [--persist-mode adr|flush|fence|eadr]
 //!             [--mirrored [--read-policy primary|mirror|rr] [--fail-at MS]
 //!              | --reshard-at MS]               facade end-to-end smoke run
 //! repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
@@ -34,6 +35,10 @@
 //!                                               availability sweep: mid-run
 //!                                               primary kill + mirror failover
 //!                                               per scheme x read policy
+//! repro persistence [--shards 1,2] [--quick] [--out DIR] [--json FILE]
+//!                                               remote-persistence sweep:
+//!                                               ADR / eADR / flush-read /
+//!                                               remote-fence per scheme
 //! repro bench-gate --baseline F --current F [--tolerance 0.10] [--update]
 //!                                               benchmark regression gate
 //! repro recover [--artifacts DIR]               crash-recovery demo via PJRT
@@ -45,6 +50,7 @@ use std::path::PathBuf;
 
 use crate::error::{anyhow, bail, Result};
 use crate::figures::{self, Fidelity};
+use crate::rdma::PersistMode;
 use crate::sim::{LaneKey, SchedulerKind};
 use crate::store::{ReadPolicy, Scheme};
 use crate::ycsb::Arrival;
@@ -92,6 +98,11 @@ pub enum Cmd {
         /// migration event step through one ingress post (1 = per-key
         /// drain, bit for bit the unbatched path).
         migration_doorbell: usize,
+        /// Remote-persistence mode: what a completed one-sided write costs
+        /// before it counts as durable (adr = the default drain model,
+        /// bit for bit; flush = read-after-write; fence = send/recv +
+        /// destination CPU; eadr = persist on arrival).
+        persist_mode: PersistMode,
     },
     /// Scale-out sweep: throughput vs shard count for all three schemes.
     Scaling {
@@ -146,6 +157,16 @@ pub enum Cmd {
     /// and mirror failover, per scheme × read policy (throughput dip,
     /// downtime, p99/p999 stretch, failover bounces).
     Sla {
+        shards: Vec<usize>,
+        fidelity: Fidelity,
+        out: Option<PathBuf>,
+        json: Option<PathBuf>,
+    },
+    /// Remote-persistence sweep: throughput per scheme × persist mode
+    /// (ADR / eADR / flush-read / remote-fence), flush-mode p99 and NVM
+    /// amplification, with the cost ordering and the Erda-vs-Redo NVM
+    /// write-reduction ratio asserted inline.
+    Persistence {
         shards: Vec<usize>,
         fidelity: Fidelity,
         out: Option<PathBuf>,
@@ -258,6 +279,7 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let mut doorbell: usize = 1;
             let mut mirror_doorbell: usize = 1;
             let mut migration_doorbell: usize = 1;
+            let mut persist_mode = PersistMode::default();
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--scheme" => match it.next() {
@@ -363,6 +385,14 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                         }
                         None => bail!("--migration-doorbell needs a batch width"),
                     },
+                    "--persist-mode" => match it.next() {
+                        Some(v) => {
+                            persist_mode = PersistMode::parse(v).ok_or_else(|| {
+                                anyhow!("unknown persist mode {v:?} (adr|flush|fence|eadr)")
+                            })?
+                        }
+                        None => bail!("--persist-mode needs adr|flush|fence|eadr"),
+                    },
                     "--mirrored" => mirrored = true,
                     "--reshard-at" => match it.next() {
                         Some(v) => {
@@ -428,6 +458,7 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
                     doorbell,
                     mirror_doorbell,
                     migration_doorbell,
+                    persist_mode,
                 }),
                 None => bail!("smoke: pass --scheme erda|redo|raw"),
             }
@@ -481,6 +512,16 @@ pub fn parse(args: &[String]) -> Result<Cmd> {
             let (shards, fidelity, out, json) =
                 parse_sweep_flags("sla", "--shards", "counts", &figures::SLA_SWEEP, &mut it)?;
             Ok(Cmd::Sla { shards, fidelity, out, json })
+        }
+        "persistence" | "persist" => {
+            let (shards, fidelity, out, json) = parse_sweep_flags(
+                "persistence",
+                "--shards",
+                "counts",
+                &figures::PERSISTENCE_SWEEP,
+                &mut it,
+            )?;
+            Ok(Cmd::Persistence { shards, fidelity, out, json })
         }
         "bench-gate" => {
             let mut baseline = None;
@@ -536,6 +577,7 @@ USAGE:
               [--window W] [--arrival-rate R | --fixed-rate R] [--ingress C]
               [--scheduler heap|tiered|calendar] [--lane-key world|actor]
               [--doorbell N] [--mirror-doorbell N] [--migration-doorbell N]
+              [--persist-mode adr|flush|fence|eadr]
               [--mirrored [--read-policy primary|mirror|rr] [--fail-at MS]
                | --reshard-at MS]
                                               exercise the store facade end to
@@ -575,7 +617,15 @@ USAGE:
                                               legs per post, and
                                               --migration-doorbell draining
                                               up to N migrating keys per
-                                              post); deterministic in --seed
+                                              post, and --persist-mode picking
+                                              what a completed one-sided write
+                                              costs before it counts as
+                                              durable: adr = the default drain
+                                              model bit for bit, flush = one
+                                              extra read round-trip per write,
+                                              fence = send/recv + destination
+                                              CPU, eadr = persist on arrival);
+                                              deterministic in --seed
   repro scaling [--shards 1,2,4,8] [--quick] [--out DIR] [--json FILE]
                                               scale-out sweep: throughput vs
                                               shard count, all three schemes
@@ -623,6 +673,14 @@ USAGE:
                                               downtime, p99/p999 stretch and
                                               failover bounces, with zero
                                               acked-write loss asserted inline
+  repro persistence [--shards 1,2] [--quick] [--out DIR] [--json FILE]
+                                              remote-persistence sweep: ADR /
+                                              eADR / flush-read / remote-fence
+                                              throughput per scheme, flush p99
+                                              and NVM amplification, with the
+                                              Eadr ≤ Adr < FlushRead ordering
+                                              and the Erda-vs-Redo NVM ratio
+                                              asserted inline
   repro bench-gate --baseline FILE --current FILE [--tolerance 0.10] [--update]
                                               compare a benchmark JSON artifact
                                               against a committed baseline;
@@ -700,6 +758,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
         assert_eq!(
@@ -720,6 +779,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
         assert_eq!(
@@ -740,6 +800,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
     }
@@ -765,6 +826,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
         assert_eq!(
@@ -785,6 +847,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
     }
@@ -809,6 +872,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
     }
@@ -833,6 +897,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
         assert!(p("smoke --scheme erda --reshard-at").is_err());
@@ -866,6 +931,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
         assert_eq!(
@@ -886,6 +952,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
         assert!(p("smoke --scheme erda --fail-at 8").is_err(), "fault needs a mirror");
@@ -898,6 +965,71 @@ mod tests {
             p("smoke --scheme erda --mirrored --fail-at 8 --reshard-at 8").is_err(),
             "faults and slot migration do not compose yet"
         );
+    }
+
+    #[test]
+    fn parses_persist_mode_smoke() {
+        assert_eq!(
+            p("smoke --scheme erda --persist-mode flush --mirrored --shards 2 --window 4")
+                .unwrap(),
+            Cmd::Smoke {
+                scheme: Scheme::Erda,
+                seed: 0xE2DA,
+                shards: 2,
+                window: 4,
+                arrival: Arrival::Closed,
+                ingress: None,
+                mirrored: true,
+                reshard_at: None,
+                fail_at: None,
+                read_policy: ReadPolicy::Primary,
+                scheduler: SchedulerKind::Tiered,
+                lane_key: LaneKey::World,
+                doorbell: 1,
+                mirror_doorbell: 1,
+                migration_doorbell: 1,
+                persist_mode: PersistMode::FlushRead,
+            }
+        );
+        for (flag, mode) in [
+            ("adr", PersistMode::Adr),
+            ("flush", PersistMode::FlushRead),
+            ("fence", PersistMode::RemoteFence),
+            ("eadr", PersistMode::Eadr),
+        ] {
+            match p(&format!("smoke --scheme redo --persist-mode {flag}")).unwrap() {
+                Cmd::Smoke { persist_mode, .. } => assert_eq!(persist_mode, mode, "{flag}"),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(p("smoke --scheme erda --persist-mode ddio").is_err());
+        assert!(p("smoke --scheme erda --persist-mode").is_err());
+    }
+
+    #[test]
+    fn parses_persistence_sweep() {
+        assert_eq!(
+            p("persistence").unwrap(),
+            Cmd::Persistence {
+                shards: figures::PERSISTENCE_SWEEP.to_vec(),
+                fidelity: Fidelity::Full,
+                out: None,
+                json: None,
+            }
+        );
+        assert_eq!(
+            p("persistence --shards 1,2 --quick --json BENCH_persistence.json").unwrap(),
+            Cmd::Persistence {
+                shards: vec![1, 2],
+                fidelity: Fidelity::Quick,
+                out: None,
+                json: Some(PathBuf::from("BENCH_persistence.json")),
+            }
+        );
+        assert!(matches!(p("persist --quick").unwrap(), Cmd::Persistence { .. }));
+        assert!(p("persistence --shards 0,2").is_err());
+        assert!(p("persistence --shards").is_err());
+        assert!(p("persistence --bogus").is_err());
     }
 
     #[test]
@@ -973,6 +1105,7 @@ mod tests {
                 doorbell: 4,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
         assert_eq!(
@@ -993,6 +1126,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
         assert_eq!(
@@ -1015,6 +1149,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 8,
                 migration_doorbell: 1,
+                persist_mode: PersistMode::Adr,
             }
         );
         assert_eq!(
@@ -1035,6 +1170,7 @@ mod tests {
                 doorbell: 1,
                 mirror_doorbell: 1,
                 migration_doorbell: 4,
+                persist_mode: PersistMode::Adr,
             }
         );
     }

@@ -39,9 +39,11 @@ fn main() -> Result<()> {
             doorbell,
             mirror_doorbell,
             migration_doorbell,
+            persist_mode,
         } => smoke(
             scheme, seed, shards, window, arrival, ingress, mirrored, reshard_at, fail_at,
             read_policy, scheduler, lane_key, doorbell, mirror_doorbell, migration_doorbell,
+            persist_mode,
         ),
         Cmd::Scaling { shards, fidelity, out, json } => {
             let r = figures::scaling(&shards, fidelity);
@@ -75,6 +77,11 @@ fn main() -> Result<()> {
         }
         Cmd::Sla { shards, fidelity, out, json } => {
             let r = figures::sla(&shards, fidelity);
+            r.emit(out.as_deref());
+            emit_json(&r, json.as_deref())
+        }
+        Cmd::Persistence { shards, fidelity, out, json } => {
+            let r = figures::persistence(&shards, fidelity);
             r.emit(out.as_deref());
             emit_json(&r, json.as_deref())
         }
@@ -174,6 +181,9 @@ fn bench_gate(
 /// `lane_key`, and, with any doorbell width > 1, coalesces ready client
 /// ops (`doorbell`), mirror legs (`mirror_doorbell`) or migrating keys
 /// (`migration_doorbell`) into batched ingress posts.
+/// `persist_mode` picks the remote-persistence guarantee: `adr` (default
+/// drain model), `flush`/`fence` (an explicit persist leg gates every
+/// write ACK), or `eadr` (persist on arrival, ADR timing).
 /// Deterministic in `seed`.
 #[allow(clippy::too_many_arguments)]
 fn smoke(
@@ -192,6 +202,7 @@ fn smoke(
     doorbell: usize,
     mirror_doorbell: usize,
     migration_doorbell: usize,
+    persist_mode: erda::rdma::PersistMode,
 ) -> Result<()> {
     use erda::store::{Cluster, Fault, FaultPlan, ReadPolicy, RemoteStore, Request, ReshardPlan};
     use erda::ycsb::{key_of, Workload};
@@ -202,8 +213,10 @@ fn smoke(
          reshard_at = {reshard_at:?} ms, fail_at = {fail_at:?} ms, \
          read_policy = {read_policy:?}, scheduler = {scheduler:?}, \
          lane_key = {lane_key:?}, doorbell = {doorbell}, \
-         mirror_doorbell = {mirror_doorbell}, migration_doorbell = {migration_doorbell}",
-        scheme.label()
+         mirror_doorbell = {mirror_doorbell}, migration_doorbell = {migration_doorbell}, \
+         persist_mode = {}",
+        scheme.label(),
+        persist_mode.id()
     );
 
     // 1. Typed KV ops against a synchronous store handle (routing by key).
@@ -286,6 +299,7 @@ fn smoke(
         .mirror_doorbell(mirror_doorbell)
         .migration_doorbell(migration_doorbell)
         .read_policy(read_policy)
+        .persist_mode(persist_mode)
         // Measure everything: the full-quota check below needs every op of
         // every spawned client counted (the default 5 ms warmup would drop
         // the early ones).
@@ -321,8 +335,9 @@ fn smoke(
     );
     if let Some(c) = ingress {
         // Every op issue admits once; every synchronous mirror leg admits
-        // again (replication traffic shares the one NIC).
-        let expected_admissions = expected_ops + s.mirror_legs;
+        // again, and so does every explicit persist flush (replication and
+        // persistence traffic share the one NIC).
+        let expected_admissions = expected_ops + s.mirror_legs + s.persist_flushes;
         erda::ensure!(
             s.ingress_admitted == expected_admissions,
             "shared ingress must meter every issue: {} vs {expected_admissions}",
@@ -352,6 +367,33 @@ fn smoke(
             "  doorbell: {} posts, mean batch {:.2} ops",
             s.batched_posts,
             s.mean_batch_size()
+        );
+    }
+    if persist_mode.needs_leg() {
+        // Update-heavy means the run must have charged real persist legs,
+        // each with a nonzero round-trip.
+        erda::ensure!(
+            s.persist_flushes > 0,
+            "persist mode {} must charge flush legs on an update-heavy run",
+            persist_mode.id()
+        );
+        erda::ensure!(
+            s.persist_extra_bytes > 0,
+            "persist legs must account their wire bytes"
+        );
+        println!(
+            "  persistence: {} flush legs ({} bytes), mean {:.2} µs ({})",
+            s.persist_flushes,
+            s.persist_extra_bytes,
+            s.mean_persist_flush_us(),
+            persist_mode.label()
+        );
+    } else {
+        erda::ensure!(
+            s.persist_flushes == 0,
+            "persist mode {} must not charge flush legs: {} booked",
+            persist_mode.id(),
+            s.persist_flushes
         );
     }
     if shards > 1 && window > 1 {

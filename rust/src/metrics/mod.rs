@@ -175,6 +175,17 @@ pub struct Counters {
     pub batched_posts: u64,
     /// Ops coalesced into those posts (mean batch size = ops / posts).
     pub batched_ops: u64,
+    /// Persist legs (flush reads / remote fences) completed inside the
+    /// measurement window — 0 under `PersistMode::{Adr, Eadr}`, which ACK
+    /// without a leg. Recorded on the counters of the world the leg
+    /// persisted (primary or mirror), like mirror legs.
+    pub persist_flushes: u64,
+    /// Total virtual time write ops spent in their persist leg (write ACK →
+    /// persistence confirmed) — the latency an honest persistence boundary
+    /// adds on top of the RDMA ACK.
+    pub persist_flush_ns: u128,
+    /// Extra wire bytes those persist legs pushed through the client NIC.
+    pub persist_extra_bytes: u64,
     /// Virtual time measurement starts (ops completing before are warmup).
     pub measure_from: Time,
     pub first_completion: Time,
@@ -219,6 +230,9 @@ impl Counters {
         self.failover_bounces += other.failover_bounces;
         self.batched_posts += other.batched_posts;
         self.batched_ops += other.batched_ops;
+        self.persist_flushes += other.persist_flushes;
+        self.persist_flush_ns += other.persist_flush_ns;
+        self.persist_extra_bytes += other.persist_extra_bytes;
         // Like first_completion below, 0 means "unset" (a default-initialized
         // accumulator): adopt the other side's boundary instead of clamping
         // a real warmup down to 0.
@@ -329,6 +343,21 @@ impl Counters {
         self.batched_ops += ops;
     }
 
+    /// Record a completed persist leg (flush read or remote fence): issued
+    /// at `issued` (the instant the write leg's RDMA ACK fired), confirmed
+    /// persisted at `done`, having pushed `bytes` extra wire bytes through
+    /// the client NIC. Call on the counters of the world the leg persisted
+    /// (primary or mirror), like [`Counters::record_mirror_leg`].
+    /// Warmup-era legs are dropped, like ops.
+    pub fn record_persist_flush(&mut self, issued: Time, done: Time, bytes: usize) {
+        if issued < self.measure_from {
+            return;
+        }
+        self.persist_flushes += 1;
+        self.persist_flush_ns += (done - issued) as u128;
+        self.persist_extra_bytes += bytes as u64;
+    }
+
     /// Record an open-loop arrival at `at` that found `queue_depth` ops
     /// already waiting client-side (offered-load + queue-depth accounting;
     /// arrivals inside warmup are not measured, like ops).
@@ -428,6 +457,13 @@ pub struct RunStats {
     pub batched_posts: u64,
     /// Ops coalesced into those posts.
     pub batched_ops: u64,
+    /// Persist legs (flush reads / remote fences) completed — 0 under
+    /// `PersistMode::{Adr, Eadr}`.
+    pub persist_flushes: u64,
+    /// Total virtual time writes spent waiting on their persist leg.
+    pub persist_flush_ns: u128,
+    /// Extra wire bytes the persist legs pushed through the client NIC.
+    pub persist_extra_bytes: u64,
     /// Events pushed into the engine's event queue over the whole run —
     /// scheduler-cost diagnostics (engine-level like `events`, so warmup
     /// is included; identical across queue kinds by the equivalence
@@ -498,6 +534,16 @@ impl RunStats {
             return 0.0;
         }
         self.mirror_leg_ns as f64 / self.mirror_legs as f64 / 1_000.0
+    }
+
+    /// Mean latency of the persist leg, µs (0 under ADR/eADR, where no leg
+    /// is ever charged) — what an honest persistence boundary adds to a
+    /// write on top of its RDMA ACK.
+    pub fn mean_persist_flush_us(&self) -> f64 {
+        if self.persist_flushes == 0 {
+            return 0.0;
+        }
+        self.persist_flush_ns as f64 / self.persist_flushes as f64 / 1_000.0
     }
 
     /// Mean ops per doorbell-batched ingress post (0.0 when per-op
@@ -615,6 +661,9 @@ impl RunStats {
             failover_bounces: c.failover_bounces,
             batched_posts: c.batched_posts,
             batched_ops: c.batched_ops,
+            persist_flushes: c.persist_flushes,
+            persist_flush_ns: c.persist_flush_ns,
+            persist_extra_bytes: c.persist_extra_bytes,
             sched_pushes: 0,
             sched_pops: 0,
             sched_stale_skips: 0,
@@ -892,6 +941,31 @@ mod tests {
         assert_eq!(s.sched_pops, 480);
         assert_eq!(s.sched_stale_skips, 17);
         assert_eq!(RunStats::default().mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn persist_flush_accounting_respects_warmup_and_merges() {
+        let mut c = Counters { measure_from: 100, ..Default::default() };
+        c.record_persist_flush(50, 90, 8); // warmup: dropped
+        c.record_persist_flush(150, 250, 8);
+        c.record_persist_flush(200, 260, 8);
+        assert_eq!(c.persist_flushes, 2);
+        assert_eq!(c.persist_flush_ns, 160);
+        assert_eq!(c.persist_extra_bytes, 16);
+
+        let mut other = Counters::default();
+        other.record_persist_flush(0, 40, 8);
+        c.merge(&other);
+        assert_eq!(c.persist_flushes, 3);
+        assert_eq!(c.persist_flush_ns, 200);
+        assert_eq!(c.persist_extra_bytes, 24);
+
+        let s = RunStats::collect(&c, 0, crate::nvm::WriteStats::default(), 0);
+        assert_eq!(s.persist_flushes, 3);
+        assert_eq!(s.persist_flush_ns, 200);
+        assert_eq!(s.persist_extra_bytes, 24);
+        assert!((s.mean_persist_flush_us() - 200.0 / 3.0 / 1000.0).abs() < 1e-9);
+        assert_eq!(RunStats::default().mean_persist_flush_us(), 0.0);
     }
 
     #[test]

@@ -6,6 +6,95 @@ use std::collections::VecDeque;
 use crate::nvm::{Addr, Nvm};
 use crate::sim::{CpuPool, Time, Timing};
 
+/// Remote-persistence mode: what it takes for a one-sided write ACK to
+/// actually imply durability (Kashyap et al., "Correct, Fast Remote
+/// Persistence" — see PAPERS.md).
+///
+/// The base model treats a drained NIC cache as the persistence boundary
+/// (ADR with DDIO off). Real deployments differ in both directions: an
+/// appliance may need an explicit read-after-write flush or a CPU-involving
+/// remote fence before an ACK is honest, and an eADR platform gets
+/// persistence for free the instant data reaches the NIC. The mode is a
+/// knob on the whole run ([`crate::workload::EngineConfig`]); the *cost*
+/// of flush/fence legs is charged by the pipelined client
+/// ([`crate::store::pipeline`]) through the shared [`Ingress`], while the
+/// *semantics* of eADR live here on [`Fabric`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PersistMode {
+    /// ADR platform, DDIO disabled: today's model bit-for-bit — the NIC
+    /// cache drains to the persistence domain on its own schedule and the
+    /// write ACK needs no extra verb (the default).
+    #[default]
+    Adr,
+    /// Appliance-style read-after-write: every persist point pays one extra
+    /// small RDMA read round-trip through the shared ingress before the op
+    /// (or mirror leg) may ACK.
+    FlushRead,
+    /// Remote fence: a send/recv whose handler occupies the destination
+    /// world's server CPU for a request quantum before the ACK may fire —
+    /// the one mode that drags the remote CPU back into the data path.
+    RemoteFence,
+    /// eADR: the NIC cache itself sits inside the persistence domain, so
+    /// writes persist on arrival and no flush verb is ever charged.
+    Eadr,
+}
+
+/// Wire size of a flush/fence persist leg: an 8-byte read (or fence token),
+/// the smallest verb the ingress will meter.
+pub const PERSIST_LEG_BYTES: usize = 8;
+
+impl PersistMode {
+    /// All four, cheapest persistence guarantee first.
+    pub const ALL: [PersistMode; 4] =
+        [PersistMode::Adr, PersistMode::FlushRead, PersistMode::RemoteFence, PersistMode::Eadr];
+
+    /// Short id for CLI flags and JSON columns.
+    pub fn id(&self) -> &'static str {
+        match self {
+            PersistMode::Adr => "adr",
+            PersistMode::FlushRead => "flush",
+            PersistMode::RemoteFence => "fence",
+            PersistMode::Eadr => "eadr",
+        }
+    }
+
+    /// Human-readable label (figure legends).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PersistMode::Adr => "ADR",
+            PersistMode::FlushRead => "Flush-Read",
+            PersistMode::RemoteFence => "Remote-Fence",
+            PersistMode::Eadr => "eADR",
+        }
+    }
+
+    /// Parse a CLI id (`adr` / `flush` / `fence` / `eadr`).
+    pub fn parse(s: &str) -> Option<PersistMode> {
+        match s {
+            "adr" => Some(PersistMode::Adr),
+            "flush" => Some(PersistMode::FlushRead),
+            "fence" => Some(PersistMode::RemoteFence),
+            "eadr" => Some(PersistMode::Eadr),
+            _ => None,
+        }
+    }
+
+    /// Does a persist point cost an extra leg through the ingress? True for
+    /// the two modes that post a verb; ADR and eADR ACK without one.
+    pub fn needs_leg(&self) -> bool {
+        matches!(self, PersistMode::FlushRead | PersistMode::RemoteFence)
+    }
+
+    /// Extra wire bytes one persist leg adds to the run.
+    pub fn leg_bytes(&self) -> usize {
+        if self.needs_leg() {
+            PERSIST_LEG_BYTES
+        } else {
+            0
+        }
+    }
+}
+
 /// Client-NIC ingress statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct IngressStats {
@@ -111,6 +200,10 @@ pub struct Fabric {
     pub timing: Timing,
     pending: VecDeque<PendingChunk>,
     stats: FabricStats,
+    /// eADR platform: posted chunks persist on arrival (the NIC cache is in
+    /// the persistence domain), so a crash never drops them. Timing is
+    /// untouched — eADR changes what a crash loses, not how long verbs take.
+    eadr: bool,
 }
 
 /// NIC drain granularity: RNICs move cache lines; NVM programs 64 B lines.
@@ -118,7 +211,16 @@ const CHUNK: usize = 64;
 
 impl Fabric {
     pub fn new(timing: Timing) -> Self {
-        Fabric { timing, pending: VecDeque::new(), stats: FabricStats::default() }
+        Fabric { timing, pending: VecDeque::new(), stats: FabricStats::default(), eadr: false }
+    }
+
+    /// Apply a [`PersistMode`]'s crash semantics to this fabric: under
+    /// [`PersistMode::Eadr`] the NIC cache joins the persistence domain
+    /// (chunks persist on arrival, [`Fabric::drop_unpersisted`] drops
+    /// nothing). The other three modes leave the ADR drain model in place —
+    /// their extra cost is charged by the issue path, not here.
+    pub fn set_persist_mode(&mut self, mode: PersistMode) {
+        self.eadr = mode == PersistMode::Eadr;
     }
 
     /// Apply every pending NIC-cache chunk that has reached its persist time.
@@ -195,8 +297,16 @@ impl Fabric {
                 self.stats.chunks_dropped += 1;
                 continue;
             }
+            // eADR: arrival IS persistence — the chunk is durable at `now`,
+            // so any later flush (including a crash's drop_unpersisted)
+            // lands it. ADR: durable only after the NIC drain + NVM lines.
+            let persist_at = if self.eadr {
+                now
+            } else {
+                now + self.timing.nic_flush_delay + (i as Time + 1) * line
+            };
             self.pending.push_back(PendingChunk {
-                persist_at: now + self.timing.nic_flush_delay + (i as Time + 1) * line,
+                persist_at,
                 addr: addr + (i * CHUNK) as Addr,
                 bytes: chunk.to_vec(),
             });
@@ -375,6 +485,38 @@ mod tests {
         }
         assert_eq!(a.stats().admitted, b.stats().admitted);
         assert_eq!(a.stats().wait_ns, b.stats().wait_ns);
+    }
+
+    #[test]
+    fn persist_mode_ids_round_trip_and_legs_are_priced() {
+        for m in PersistMode::ALL {
+            assert_eq!(PersistMode::parse(m.id()), Some(m));
+            assert!(!m.label().is_empty());
+            assert_eq!(m.leg_bytes() > 0, m.needs_leg());
+        }
+        assert_eq!(PersistMode::default(), PersistMode::Adr);
+        assert!(PersistMode::parse("ddio").is_none());
+        assert!(PersistMode::FlushRead.needs_leg() && PersistMode::RemoteFence.needs_leg());
+        assert!(!PersistMode::Adr.needs_leg() && !PersistMode::Eadr.needs_leg());
+        assert_eq!(PersistMode::FlushRead.leg_bytes(), PERSIST_LEG_BYTES);
+    }
+
+    #[test]
+    fn eadr_persists_on_arrival_and_survives_crash() {
+        let (mut f, mut nvm) = setup();
+        f.set_persist_mode(PersistMode::Eadr);
+        let addr = nvm.alloc(1024);
+        let data = vec![0x5Au8; 1024];
+        f.post_write(0, &mut nvm, addr, &data);
+        // Arrival is persistence: visible at t = 0, nothing for a crash to
+        // drop — the inverse of `crash_drops_unpersisted_chunks`.
+        assert_eq!(f.drop_unpersisted(0, &mut nvm), 0);
+        assert_eq!(f.sample(0, &mut nvm, addr, 1024), data);
+        // Flipping back to ADR restores the drain model bit-for-bit.
+        f.set_persist_mode(PersistMode::Adr);
+        let addr2 = nvm.alloc(1024);
+        f.post_write(1_000_000, &mut nvm, addr2, &vec![0xBBu8; 1024]);
+        assert!(f.drop_unpersisted(1_000_000, &mut nvm) > 0);
     }
 
     #[test]

@@ -20,4 +20,4 @@
 
 pub mod fabric;
 
-pub use fabric::{Fabric, FabricStats, Ingress, IngressStats};
+pub use fabric::{Fabric, FabricStats, Ingress, IngressStats, PersistMode, PERSIST_LEG_BYTES};

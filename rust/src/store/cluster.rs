@@ -276,6 +276,18 @@ impl ClusterBuilder {
         self
     }
 
+    /// Remote-persistence mode ([`crate::rdma::PersistMode`]): what a
+    /// completed one-sided write costs before it counts as durable. `Adr`
+    /// (default) is the paper's drain model, bit-for-bit the pre-matrix
+    /// engine; `FlushRead` / `RemoteFence` charge an explicit persist leg
+    /// per write through the shared ingress (forcing the pipelined client
+    /// path, like mirroring does); `Eadr` waives the drain window at ADR's
+    /// exact timing.
+    pub fn persist_mode(mut self, mode: crate::rdma::PersistMode) -> Self {
+        self.cfg.persist_mode = mode;
+        self
+    }
+
     /// YCSB mix for the closed-loop clients.
     pub fn workload(mut self, wl: Workload) -> Self {
         self.cfg.workload.workload = wl;
@@ -505,6 +517,7 @@ impl Cluster {
             cfg.log_cfg,
             cfg.shard_table_cap(),
         );
+        world.fabric.set_persist_mode(cfg.persist_mode);
         world.preload_shard(preload.0, preload.1, shard, shards);
         world.nvm.reset_stats();
         if let Some(th) = cfg.cleaning_threshold {
@@ -532,6 +545,7 @@ impl Cluster {
             cfg.log_cfg.segment_size,
             slot_size,
         );
+        world.fabric.set_persist_mode(cfg.persist_mode);
         world.preload_shard(preload.0, preload.1, shard, shards);
         world.nvm.reset_stats();
         world
@@ -553,6 +567,7 @@ impl Cluster {
             || cfg.doorbell_batch > 1
             || !cfg.faults.is_empty()
             || cfg.read_policy != ReadPolicy::Primary
+            || cfg.persist_mode.needs_leg()
     }
 
     /// The open-loop arrival generator for client `c` (None = closed loop).
@@ -691,7 +706,10 @@ impl Cluster {
         // the cluster-level pipelined path (per-op routing, replication,
         // failover bounce); legacy runs keep the shard-scoped closed-loop
         // spawn bit for bit.
-        let cluster_scripted = cfg.mirrored || cfg.reshard.is_some() || !cfg.faults.is_empty();
+        let cluster_scripted = cfg.mirrored
+            || cfg.reshard.is_some()
+            || !cfg.faults.is_empty()
+            || cfg.persist_mode.needs_leg();
         let (cluster_scripts, shard_scripts) = if cluster_scripted {
             (scripts, (0..shards).map(|_| Vec::new()).collect())
         } else {
@@ -877,6 +895,7 @@ impl Cluster {
             .scheduler(cfg.scheduler)
             .mirror_doorbell(cfg.mirror_doorbell)
             .read_policy(cfg.read_policy)
+            .persist_mode(cfg.persist_mode)
             .with_faults(!cfg.faults.is_empty());
             engine.spawn(Box::new(client), s.start);
         }
@@ -895,6 +914,7 @@ impl Cluster {
                 .doorbell(cfg.doorbell_batch)
                 .mirror_doorbell(cfg.mirror_doorbell)
                 .read_policy(cfg.read_policy)
+                .persist_mode(cfg.persist_mode)
                 .with_faults(!cfg.faults.is_empty());
                 engine.spawn(Box::new(client), 0);
             }
@@ -975,6 +995,7 @@ impl Cluster {
             .scheduler(cfg.scheduler)
             .mirror_doorbell(cfg.mirror_doorbell)
             .read_policy(cfg.read_policy)
+            .persist_mode(cfg.persist_mode)
             .with_faults(!cfg.faults.is_empty());
             engine.spawn(Box::new(client), s.start);
         }
@@ -993,6 +1014,7 @@ impl Cluster {
                 .doorbell(cfg.doorbell_batch)
                 .mirror_doorbell(cfg.mirror_doorbell)
                 .read_policy(cfg.read_policy)
+                .persist_mode(cfg.persist_mode)
                 .with_faults(!cfg.faults.is_empty());
                 engine.spawn(Box::new(client), 0);
             }
@@ -1279,6 +1301,49 @@ mod tests {
         assert!(batched.batched_posts > 0, "width 4 coalesces at least one post");
         assert!(batched.mean_batch_size() > 1.0, "batches carry more than one op");
         assert_eq!(batched.batched_ops, plain.ops, "every measured op rode a doorbell");
+    }
+
+    #[test]
+    fn persist_modes_order_cost_and_keep_totals() {
+        use crate::rdma::PersistMode;
+        let run = |mode: PersistMode| {
+            Cluster::builder()
+                .scheme(Scheme::Erda)
+                .shards(2)
+                .clients(4)
+                // All four runs share the pipelined client model, so the
+                // durations differ only by what the mode itself charges.
+                .window(2)
+                .ops_per_client(60)
+                .records(32)
+                .value_size(64)
+                .warmup(0)
+                .persist_mode(mode)
+                .run()
+                .unwrap()
+                .stats
+        };
+        let adr = run(PersistMode::Adr);
+        let eadr = run(PersistMode::Eadr);
+        let flush = run(PersistMode::FlushRead);
+        let fence = run(PersistMode::RemoteFence);
+        // eADR waives the drain window at ADR's exact timing: bit for bit.
+        assert_eq!(adr.ops, eadr.ops);
+        assert_eq!(adr.duration_ns, eadr.duration_ns);
+        assert_eq!(adr.nvm_programmed_bytes, eadr.nvm_programmed_bytes);
+        assert_eq!(adr.persist_flushes, 0, "ADR books no explicit flushes");
+        assert_eq!(eadr.persist_flushes, 0, "eADR books no explicit flushes");
+        // Explicit flush modes complete the same work, strictly slower,
+        // booking one persist leg per measured write.
+        for (name, s) in [("flush", &flush), ("fence", &fence)] {
+            assert_eq!(s.ops, adr.ops, "{name}: op total unchanged");
+            assert!(s.persist_flushes > 0, "{name}: writes book persist legs");
+            assert!(s.duration_ns > adr.duration_ns, "{name}: persist legs cost time");
+            assert!(s.mean_persist_flush_us() > 0.0, "{name}");
+        }
+        // The remote fence burns destination CPU the flush-read never touches.
+        assert!(fence.server_cpu_busy_ns > flush.server_cpu_busy_ns);
+        assert_eq!(flush.server_cpu_busy_ns, adr.server_cpu_busy_ns);
     }
 
     #[test]

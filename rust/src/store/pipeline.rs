@@ -75,6 +75,19 @@
 //! deterministically alternating replicas — safe because every read is
 //! CRC-gated, and an op records its latency on the world that served it.
 //!
+//! The **persistence boundary** is a run-level knob
+//! ([`crate::rdma::PersistMode`]): under `FlushRead`/`RemoteFence` a
+//! mutating op's write leg — primary and mirror alike — is not acked by
+//! its RDMA completion; the lane gathers a *persist leg* (a small flush
+//! read, or a send/recv that occupies the destination world's server CPU)
+//! that admits through the same shared ingress, doorbell-batched at the
+//! client doorbell width, and the op proceeds only when the leg confirms.
+//! A primary-stage persist leg in flight when a fault kills the primary
+//! bounces like any other leg — the persist leg IS the ACK gate, so
+//! nothing acked is ever lost. `Adr` (default) and `Eadr` never grow a
+//! leg and replay today's runs bit for bit; eADR's difference is crash
+//! semantics, applied on [`crate::rdma::Fabric`] at world construction.
+//!
 //! With `window = 1`, closed-loop arrivals, one shard and no mirroring this
 //! actor reproduces the closed-loop clients' runs bit for bit (same engine
 //! events, same times, same counters) — asserted by
@@ -88,6 +101,7 @@ use crate::baselines::BaselineWorld;
 use crate::erda::{ClientConfig, ErdaWorld};
 use crate::metrics::Counters;
 use crate::nvm::WriteStats;
+use crate::rdma::{PersistMode, PERSIST_LEG_BYTES};
 use crate::sim::{Actor, CompletionSet, SchedulerKind, Step, Time};
 use crate::store::cosim::ClusterState;
 use crate::store::fault::FaultState;
@@ -117,6 +131,37 @@ pub(crate) trait ClientWorld {
     fn nvm_stats(&self) -> WriteStats;
     /// Reset CPU/NVM accounting at the measurement boundary.
     fn reset_measurement(&mut self);
+    /// Completion instant of a persist leg admitted at `admitted` against
+    /// this world: `FlushRead` is one small one-sided read round-trip
+    /// (pure fabric latency — the server CPU stays off the path);
+    /// `RemoteFence` is a send/recv whose handler occupies this world's
+    /// server CPU for a request quantum before the fence ACK returns.
+    /// Never called under `Adr`/`Eadr`, which ACK without a leg.
+    fn persist_leg_done(&mut self, admitted: Time, mode: PersistMode) -> Time;
+}
+
+/// Shared persist-leg pricing (both worlds expose the same fabric + CPU
+/// pool surface, and the modes must cost identically across schemes).
+fn persist_leg_done_on(
+    fabric: &crate::rdma::Fabric,
+    cpu: &mut crate::sim::CpuPool,
+    admitted: Time,
+    mode: PersistMode,
+) -> Time {
+    match mode {
+        // One extra small one-sided read: the flush-read appliance pattern.
+        PersistMode::FlushRead => fabric.read_done(admitted, PERSIST_LEG_BYTES),
+        // Send/recv + remote CPU: the fence handler runs on the destination
+        // world's server cores, queueing behind foreground request service.
+        PersistMode::RemoteFence => {
+            let arrive = fabric.one_way(admitted, PERSIST_LEG_BYTES);
+            let resv = cpu.reserve(arrive, fabric.timing.cpu_request_fixed);
+            resv.end + fabric.timing.two_sided(PERSIST_LEG_BYTES) / 2
+        }
+        PersistMode::Adr | PersistMode::Eadr => {
+            unreachable!("ADR/eADR writes ACK without a persist leg")
+        }
+    }
 }
 
 impl ClientWorld for ErdaWorld {
@@ -136,6 +181,9 @@ impl ClientWorld for ErdaWorld {
         self.cpu.reset_accounting();
         self.nvm.reset_stats();
     }
+    fn persist_leg_done(&mut self, admitted: Time, mode: PersistMode) -> Time {
+        persist_leg_done_on(&self.fabric, &mut self.cpu, admitted, mode)
+    }
 }
 
 impl ClientWorld for BaselineWorld {
@@ -154,6 +202,9 @@ impl ClientWorld for BaselineWorld {
     fn reset_measurement(&mut self) {
         self.cpu.reset_accounting();
         self.nvm.reset_stats();
+    }
+    fn persist_leg_done(&mut self, admitted: Time, mode: PersistMode) -> Time {
+        persist_leg_done_on(&self.fabric, &mut self.cpu, admitted, mode)
     }
 }
 
@@ -256,6 +307,28 @@ struct Route {
     redo: Option<Request>,
 }
 
+/// An in-flight persist leg (flush read / remote fence): the lane's write
+/// leg ACKed at the NIC and now waits for its persistence confirmation
+/// before the op (or its mirror handoff) may proceed. Lives beside the
+/// lane's [`Route`] — the lane has no driver state while it waits.
+struct PersistLeg {
+    /// Issue instant (the write leg's RDMA ACK — the drain that saw it).
+    issued: Time,
+    /// Extra wire bytes the leg pushed through the shared ingress.
+    bytes: usize,
+    /// The world whose persistence the leg confirms (the op's serve world,
+    /// or the shard's mirror world for mirror-stage legs). Accounting and
+    /// pricing both land here.
+    world: usize,
+    /// Mirror-stage leg (confirms the mirror write)? Primary-stage legs
+    /// bounce when a fault kills the serve world mid-leg; mirror-stage
+    /// legs are exempt, like mirror legs — the mirror never dies.
+    on_mirror: bool,
+    /// Data-leg completion context carried across the persist wait.
+    start: Time,
+    cleaning: bool,
+}
+
 /// One windowed cluster-level client actor (see module docs).
 pub(crate) struct PipelinedClient<D: OpDriver> {
     driver: D,
@@ -280,6 +353,10 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     lanes: Vec<Option<D::St>>,
     /// Per-lane in-flight route (None = free lane).
     routes: Vec<Option<Route>>,
+    /// Per-lane in-flight persist leg (None = not persist-waiting). A lane
+    /// with a leg keeps its route (and key gate) but holds no driver state,
+    /// so the free-lane scan must skip it.
+    persist: Vec<Option<PersistLeg>>,
     /// Completion tokens: lane index → due instant.
     due: CompletionSet,
     /// Doorbell batch size: up to this many ready ops coalesce into one
@@ -293,6 +370,11 @@ pub(crate) struct PipelinedClient<D: OpDriver> {
     /// (bit-for-bit the pre-batching path: the leg flushes the moment it
     /// is gathered and a one-element batch admits identically).
     mirror_batch: usize,
+    /// Remote-persistence mode: `FlushRead`/`RemoteFence` follow every
+    /// mutating write leg (primary AND mirror) with a persist leg through
+    /// the shared ingress before it may ACK; `Adr` (default) and `Eadr`
+    /// ACK without one — bit-for-bit today's path.
+    persist_mode: PersistMode,
     /// Which replica serves this client's gets in a mirrored cluster
     /// (ignored unmirrored; `Primary` = bit-for-bit the PR 5 path).
     read_policy: ReadPolicy,
@@ -327,9 +409,11 @@ impl<D: OpDriver> PipelinedClient<D> {
             pending: VecDeque::new(),
             lanes: (0..window).map(|_| None).collect(),
             routes: (0..window).map(|_| None).collect(),
+            persist: (0..window).map(|_| None).collect(),
             due: CompletionSet::new(),
             batch: 1,
             mirror_batch: 1,
+            persist_mode: PersistMode::Adr,
             read_policy: ReadPolicy::Primary,
             rr: 0,
             faulty: false,
@@ -371,6 +455,17 @@ impl<D: OpDriver> PipelinedClient<D> {
     /// per gather round (1 = legacy per-op admission, bit for bit).
     pub fn doorbell(mut self, n: usize) -> Self {
         self.batch = n.max(1);
+        self
+    }
+
+    /// Set the remote-persistence mode: under `FlushRead`/`RemoteFence`
+    /// every mutating op's write leg — primary and mirror alike — is
+    /// followed by a persist leg admitted through the shared ingress (and
+    /// doorbell-batched with the client doorbell width) before it may ACK.
+    /// `Adr` (the default) and `Eadr` never grow a leg, so they replay
+    /// today's runs bit for bit.
+    pub fn persist_mode(mut self, mode: PersistMode) -> Self {
+        self.persist_mode = mode;
         self
     }
 
@@ -439,12 +534,14 @@ impl<D: OpDriver> PipelinedClient<D> {
         self.pending.iter().any(|(r, _, _)| r.key() == key)
     }
 
-    /// First lane that is neither in flight nor claimed by the stage.
+    /// First lane that is neither in flight (driver state OR persist wait)
+    /// nor claimed by the stage.
     fn free_lane(&self, staged: &[(usize, Request, Time)]) -> Option<usize> {
-        self.lanes
-            .iter()
-            .enumerate()
-            .position(|(i, l)| l.is_none() && !staged.iter().any(|&(lane, _, _)| lane == i))
+        self.lanes.iter().enumerate().position(|(i, l)| {
+            l.is_none()
+                && self.persist[i].is_none()
+                && !staged.iter().any(|&(lane, _, _)| lane == i)
+        })
     }
 
     /// Post the first verb of an already-admitted `req` on `lane`: route
@@ -685,6 +782,42 @@ impl<D: OpDriver> PipelinedClient<D> {
         }
         true
     }
+
+    /// Ring ONE doorbell for the gathered persist legs — one posting floor,
+    /// summed wire time, shared admission instant — then price each leg's
+    /// completion against the world it persists (flush read: fabric
+    /// latency; remote fence: the destination's CPU pool). Every leg in the
+    /// batch became ready at the same drain instant `now`, so the shared
+    /// admission reorders nothing; a one-element flush admits identically
+    /// to [`ClusterState::admit`]. Legs re-arm their lane on the one co-sim
+    /// heap — the lane keeps its route (and key gate) but no driver state
+    /// while it waits.
+    fn flush_persist_legs(
+        &mut self,
+        s: &mut ClusterState<D::World>,
+        legs: &mut Vec<(usize, usize, bool, Time, bool)>,
+        now: Time,
+    ) {
+        if legs.is_empty() {
+            return;
+        }
+        debug_assert!(self.persist_mode.needs_leg(), "ADR/eADR never gather persist legs");
+        let leg_bytes = self.persist_mode.leg_bytes();
+        let bytes: Vec<usize> = legs.iter().map(|_| leg_bytes).collect();
+        let admitted = s.admit_batch(now, &bytes);
+        if legs.len() > 1 {
+            // Batch accounting lives on the first leg's world (merged
+            // cluster-wide like every counter).
+            let w = legs[0].1;
+            s.worlds[w].counters_mut().record_batch(now, legs.len() as u64);
+        }
+        for (lane, world, on_mirror, start, cleaning) in legs.drain(..) {
+            let done = s.worlds[world].persist_leg_done(admitted, self.persist_mode);
+            self.persist[lane] =
+                Some(PersistLeg { issued: now, bytes: leg_bytes, world, on_mirror, start, cleaning });
+            self.due.arm(lane, done);
+        }
+    }
 }
 
 impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
@@ -726,7 +859,78 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
         // Mirror legs ready this drain gather here for the mirror doorbell
         // (width 1 flushes each the moment it is gathered — per-leg path).
         let mut mirror_legs: Vec<(usize, Request, Time, bool, usize)> = Vec::new();
+        // Persist legs ready this drain gather here for the persist
+        // doorbell (client doorbell width; width 1 flushes each leg the
+        // moment it is gathered — the per-leg path).
+        let mut persist_legs: Vec<(usize, usize, bool, Time, bool)> = Vec::new();
         while let Some(lane) = self.due.pop_due(now) {
+            // Persist-leg completion first: the lane holds no driver state
+            // while its write leg waits on the flush/fence confirmation.
+            if let Some(leg) = self.persist[lane].take() {
+                let (shard, serve) = {
+                    let r = self.routes[lane].as_ref().expect("persist-waiting lane has a route");
+                    (r.shard, r.serve)
+                };
+                // A primary-stage persist leg in flight when the primary
+                // dies bounces like any other leg: the persist leg IS the
+                // ACK gate, so the write was never acknowledged — re-issue
+                // it against the promoted mirror. Mirror-stage legs are
+                // exempt, like mirror legs: the mirror world never dies.
+                if !leg.on_mirror && s.faults.world_killed(serve) {
+                    let r = self.routes[lane].take().expect("persist-waiting lane has a route");
+                    s.router.note_done(r.slot);
+                    s.worlds[r.shard].counters_mut().record_failover_bounce(now);
+                    let req = r.redo.expect("fault runs retain the request for re-issue");
+                    self.pending.push_front((req, Some(r.start), true));
+                    freed = true;
+                    continue;
+                }
+                s.worlds[leg.world]
+                    .counters_mut()
+                    .record_persist_flush(leg.issued, now, leg.bytes);
+                if leg.on_mirror {
+                    // Mirror write AND its persist confirmed: the op is
+                    // done — account the leg on the mirror world, record
+                    // the whole op (latency spans both persists) on the
+                    // primary's counters.
+                    let (mi, mb, mc) = self.routes[lane]
+                        .as_mut()
+                        .expect("persist-waiting lane has a route")
+                        .mirror_leg
+                        .take()
+                        .expect("mirror-stage persist follows a mirror leg");
+                    let mw = crate::store::mirror::mirror_world_index(self.shards, shard);
+                    s.worlds[mw].counters_mut().record_mirror_leg(mi, now, mb);
+                    s.worlds[shard].counters_mut().record_op(leg.start, now, mc || leg.cleaning);
+                    let r = self.routes[lane].take().expect("persist-waiting lane has a route");
+                    debug_assert!(r.epoch <= s.router.table.epoch(), "routing epochs only advance");
+                    s.router.note_done(r.slot);
+                    freed = true;
+                    continue;
+                }
+                let next_mirror = self.routes[lane]
+                    .as_mut()
+                    .expect("persist-waiting lane has a route")
+                    .mirror
+                    .take();
+                if let Some(req) = next_mirror {
+                    // Primary persisted for real; replicate before ACK —
+                    // gather the mirror leg exactly as the ADR path does.
+                    mirror_legs.push((lane, req, leg.start, leg.cleaning, shard));
+                    if mirror_legs.len() >= self.mirror_batch
+                        && !self.flush_mirror_legs(s, &mut mirror_legs, now)
+                    {
+                        return self.die(s);
+                    }
+                } else {
+                    s.worlds[serve].counters_mut().record_op(leg.start, now, leg.cleaning);
+                    let r = self.routes[lane].take().expect("persist-waiting lane has a route");
+                    debug_assert!(r.epoch <= s.router.table.epoch(), "routing epochs only advance");
+                    s.router.note_done(r.slot);
+                    freed = true;
+                }
+                continue;
+            }
             let st = self.lanes[lane].take().expect("armed lane holds a state");
             let (shard, serve, on_mirror) = {
                 let r = self.routes[lane].as_ref().expect("armed lane has a route");
@@ -763,6 +967,24 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
                     self.due.arm(lane, at);
                 }
                 OpOutcome::Finished { start, cleaning } => {
+                    // Flush/fence: a mutating write leg — primary or mirror
+                    // — is not acked by its RDMA completion alone. Gather a
+                    // persist leg for the persist doorbell instead of
+                    // completing; the completion logic re-runs when the leg
+                    // confirms. Reads ACK as ever — only writes persist.
+                    let write = self.routes[lane].as_ref().expect("armed lane has a route").write;
+                    if self.persist_mode.needs_leg() && write {
+                        let world = if on_mirror {
+                            crate::store::mirror::mirror_world_index(self.shards, shard)
+                        } else {
+                            serve
+                        };
+                        persist_legs.push((lane, world, on_mirror, start, cleaning));
+                        if persist_legs.len() >= self.batch {
+                            self.flush_persist_legs(s, &mut persist_legs, now);
+                        }
+                        continue;
+                    }
                     let route = self.routes[lane].as_mut().expect("armed lane has a route");
                     let finished_mirror = route.mirror_leg.take();
                     let next_mirror =
@@ -818,10 +1040,12 @@ impl<D: OpDriver> Actor<ClusterState<D::World>> for PipelinedClient<D> {
                 OpOutcome::Crashed => return self.die(s),
             }
         }
-        // Drain over: flush any gathered (sub-width) mirror-leg batch
-        // before anything inspects lane or completion state — the gathered
-        // lanes re-arm here. (A crash mid-drain drops gathered legs with
-        // every other in-flight op, same as the per-leg path's dead lanes.)
+        // Drain over: flush any gathered (sub-width) persist- and
+        // mirror-leg batches before anything inspects lane or completion
+        // state — the gathered lanes re-arm here. (A crash mid-drain drops
+        // gathered legs with every other in-flight op, same as the per-leg
+        // path's dead lanes.)
+        self.flush_persist_legs(s, &mut persist_legs, now);
         if !self.flush_mirror_legs(s, &mut mirror_legs, now) {
             return self.die(s);
         }
@@ -1423,6 +1647,201 @@ mod tests {
         assert!(p.counters.failover_bounces > 0, "the blackout must bounce something");
         assert_eq!(p.counters.faults_injected, 1);
         assert_eq!(p.counters.downtime_ns, 50_000);
+        for i in 0..8u64 {
+            assert!(
+                e.state.worlds[1].get(&key_of(i)).is_some(),
+                "key {i} must survive failover on the promoted mirror"
+            );
+        }
+    }
+
+    #[test]
+    fn persist_mode_adr_and_eadr_replay_the_default_bit_for_bit() {
+        // The legless modes are today's path bit for bit: an untouched
+        // client, explicit Adr, and Eadr (whose only difference is crash
+        // semantics on the fabric, not timing) replay the same run.
+        let run = |mk: fn(PipelinedClient<ErdaDriver>) -> PipelinedClient<ErdaDriver>| {
+            let ops = vec![put(0), get(1), put(2), put(0), get(2), put(3)];
+            let mut w = erda_world();
+            w.counters.active_clients = 1;
+            let ingress = Some(Ingress::new(Timing::default(), 1));
+            let mut e = Engine::new(ClusterState::new(vec![w], ingress));
+            e.spawn(Box::new(mk(erda_client(ops, 4))), 0);
+            let end = e.run();
+            let s = e.state.ingress_stats();
+            let c = &e.state.worlds[0].counters;
+            (end, e.events(), c.ops_measured, c.latency.mean_ns(), c.persist_flushes, s.admitted)
+        };
+        let base = run(|c| c);
+        assert_eq!(base, run(|c| c.persist_mode(PersistMode::Adr)));
+        assert_eq!(base, run(|c| c.persist_mode(PersistMode::Eadr)));
+        assert_eq!(base.4, 0, "legless modes never record a persist flush");
+        assert_eq!(base.5, 6, "admitted == ops when no legs grow");
+    }
+
+    #[test]
+    fn flush_read_charges_a_persist_leg_per_write() {
+        // 4 puts + 2 gets through a metered ingress: FlushRead follows each
+        // put's write ACK with one extra 8-byte read leg — reads never grow
+        // one — so admissions count ops + persist legs and the makespan
+        // stretches past the ADR run.
+        let run = |mode: PersistMode| {
+            let ops = vec![put(0), put(1), get(4), put(2), put(3), get(5)];
+            let mut w = erda_world();
+            w.counters.active_clients = 1;
+            let ingress = Some(Ingress::new(Timing::default(), 1));
+            let mut e = Engine::new(ClusterState::new(vec![w], ingress));
+            e.spawn(Box::new(erda_client(ops, 4).persist_mode(mode)), 0);
+            let end = e.run();
+            let s = e.state.ingress_stats();
+            (end, s.admitted, e.state.worlds[0].counters.clone())
+        };
+        let (t_adr, adm_adr, c_adr) = run(PersistMode::Adr);
+        let (t_flush, adm_flush, c_flush) = run(PersistMode::FlushRead);
+        assert_eq!(c_adr.ops_measured, 6);
+        assert_eq!(c_flush.ops_measured, 6, "every op still completes");
+        assert_eq!(adm_adr, 6);
+        assert_eq!(adm_flush, 6 + 4, "admitted == ops + persist_flushes");
+        assert_eq!(c_flush.persist_flushes, 4, "one leg per put, none per get");
+        assert_eq!(c_flush.persist_extra_bytes, 4 * crate::rdma::PERSIST_LEG_BYTES as u64);
+        assert!(c_flush.persist_flush_ns > 0, "the leg takes virtual time");
+        assert_eq!(c_adr.persist_flushes, 0);
+        assert!(t_flush > t_adr, "the flush read must stretch acks: {t_flush} vs {t_adr}");
+        assert!(
+            c_flush.latency.mean_ns() > c_adr.latency.mean_ns(),
+            "persist waits must land in op latency"
+        );
+    }
+
+    #[test]
+    fn remote_fence_burns_destination_cpu() {
+        // RemoteFence drags the server CPU back into the data path: same
+        // ops, strictly more CPU busy time than FlushRead (whose leg is
+        // pure fabric latency), with every op still completing.
+        let run = |mode: PersistMode| {
+            let ops: Vec<Request> = (0..6).map(put).collect();
+            let mut w = erda_world();
+            w.counters.active_clients = 1;
+            let mut e = Engine::new(ClusterState::new(vec![w], None));
+            e.spawn(Box::new(erda_client(ops, 4).persist_mode(mode)), 0);
+            let end = e.run();
+            let w = &e.state.worlds[0];
+            (end, w.counters.ops_measured, w.counters.persist_flushes, w.cpu.busy_ns())
+        };
+        let (t_adr, n_adr, legs_adr, cpu_adr) = run(PersistMode::Adr);
+        let (_, n_flush, legs_flush, cpu_flush) = run(PersistMode::FlushRead);
+        let (t_fence, n_fence, legs_fence, cpu_fence) = run(PersistMode::RemoteFence);
+        assert_eq!((n_adr, n_flush, n_fence), (6, 6, 6));
+        assert_eq!((legs_adr, legs_flush, legs_fence), (0, 6, 6));
+        assert_eq!(cpu_flush, cpu_adr, "flush reads never touch the server CPU");
+        assert!(
+            cpu_fence > cpu_flush,
+            "the fence handler must reserve server CPU: {cpu_fence} vs {cpu_flush}"
+        );
+        assert!(t_fence > t_adr, "fences are not free: {t_fence} vs {t_adr}");
+    }
+
+    #[test]
+    fn persist_legs_cover_mirror_legs_too() {
+        // Mirrored + FlushRead: BOTH persist points flush — the primary
+        // write and the mirror replay each grow a leg, accounted on the
+        // world each leg persisted, and the ingress op-count invariant
+        // holds: admitted == ops + mirror_legs + persist_flushes.
+        let ops: Vec<Request> = (0..4).map(put).collect();
+        let mut primary = erda_world();
+        let mut mirror = erda_world();
+        primary.counters.active_clients = 1;
+        mirror.counters.active_clients = 1;
+        let ingress = Some(Ingress::new(Timing::default(), 1));
+        let state = ClusterState::with_mirrors(vec![primary, mirror], ingress, 1);
+        let mut e = Engine::new(state);
+        let client = erda_client_mirrored(ops, 4).persist_mode(PersistMode::FlushRead);
+        e.spawn(Box::new(client), 0);
+        e.run();
+        let s = e.state.ingress_stats();
+        for w in &mut e.state.worlds {
+            w.settle();
+        }
+        let (p, m) = (&e.state.worlds[0].counters, &e.state.worlds[1].counters);
+        assert_eq!(p.ops_measured, 4);
+        assert_eq!(m.mirror_legs, 4);
+        assert_eq!(p.persist_flushes, 4, "primary-stage legs account on the primary");
+        assert_eq!(m.persist_flushes, 4, "mirror-stage legs account on the mirror");
+        assert_eq!(
+            s.admitted,
+            4 + 4 + 8,
+            "admitted == ops + mirror_legs + persist_flushes"
+        );
+        for i in 0..4u64 {
+            assert_eq!(
+                e.state.worlds[1].get(&key_of(i)),
+                e.state.worlds[0].get(&key_of(i)),
+                "mirror still holds the primary's bytes for key {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn wide_doorbell_batches_persist_legs() {
+        // 8 puts under one client doorbell through a 1-channel ingress:
+        // their primary legs ACK at the same drain, so doorbell(8) rings
+        // ONE persist doorbell for all 8 legs — fewer posting floors, same
+        // leg count, shorter queueing.
+        let run = |batch: usize| {
+            let ops: Vec<Request> = (0..8).map(put).collect();
+            let mut w = erda_world();
+            w.counters.active_clients = 1;
+            let ingress = Some(Ingress::new(Timing::default(), 1));
+            let mut e = Engine::new(ClusterState::new(vec![w], ingress));
+            let client = erda_client(ops, 8).doorbell(batch).persist_mode(PersistMode::FlushRead);
+            e.spawn(Box::new(client), 0);
+            let end = e.run();
+            let s = e.state.ingress_stats();
+            (end, s.admitted, s.wait_ns, e.state.worlds[0].counters.clone())
+        };
+        let (t1, adm1, wait1, c1) = run(1);
+        let (t8, adm8, wait8, c8) = run(8);
+        assert_eq!(adm1, 16, "8 ops + 8 persist legs");
+        assert_eq!(adm8, 16, "admitted counts legs at any width");
+        assert_eq!(c1.persist_flushes, 8);
+        assert_eq!(c8.persist_flushes, 8);
+        assert_eq!(c1.batched_posts, 0, "width 1 never records a batched post");
+        assert!(c8.batched_posts >= 2, "op doorbell + persist doorbell both batch");
+        assert!(wait8 < wait1, "one floor per batch must cut queueing: {wait8} vs {wait1}");
+        assert!(t8 <= t1, "batching must not slow the run: {t8} vs {t1}");
+    }
+
+    #[test]
+    fn persist_leg_in_flight_bounces_on_primary_kill() {
+        // FlushRead + a mid-window primary kill: lanes waiting on their
+        // flush-read leg bounce like any other leg (the leg IS the ACK
+        // gate), re-issue against the promoted mirror, and no write —
+        // acked or pending — is lost.
+        use crate::store::fault::{FaultActor, FaultPlan};
+        let ops: Vec<Request> = (0..8).map(put).chain((0..8).map(get)).collect();
+        let n = ops.len() as u64;
+        let client = erda_client_mirrored(ops, 4)
+            .with_faults(true)
+            .persist_mode(PersistMode::FlushRead);
+        let mut e = Engine::new(mirrored_pair());
+        e.spawn(Box::new(client), 0);
+        e.spawn(Box::new(FaultActor::new(FaultPlan::fail_at(0, 3_000, 50_000))), 3_000);
+        e.run();
+        for w in &mut e.state.worlds {
+            w.settle();
+        }
+        let (p, m) = (&e.state.worlds[0], &e.state.worlds[1]);
+        assert_eq!(
+            p.counters.ops_measured + m.counters.ops_measured,
+            n,
+            "every op completes despite the kill"
+        );
+        assert_eq!(p.counters.read_misses + m.counters.read_misses, 0);
+        assert!(p.counters.failover_bounces > 0, "the blackout must bounce something");
+        assert!(
+            p.counters.persist_flushes + m.counters.persist_flushes > 0,
+            "surviving writes still flushed"
+        );
         for i in 0..8u64 {
             assert!(
                 e.state.worlds[1].get(&key_of(i)).is_some(),

@@ -69,6 +69,10 @@ pub struct EngineConfig {
     pub migration_doorbell: usize,
     /// Shared client-NIC ingress channels (`None` = unmetered).
     pub ingress_channels: Option<usize>,
+    /// What a completed one-sided write means for durability
+    /// ([`crate::rdma::PersistMode`]): ADR drain (default), an explicit
+    /// read-after-write flush, a CPU-involving remote fence, or eADR.
+    pub persist_mode: crate::rdma::PersistMode,
 }
 
 impl Default for EngineConfig {
@@ -80,6 +84,7 @@ impl Default for EngineConfig {
             mirror_doorbell: 1,
             migration_doorbell: 1,
             ingress_channels: None,
+            persist_mode: crate::rdma::PersistMode::default(),
         }
     }
 }
@@ -175,6 +180,14 @@ pub struct DriverConfig {
     /// 1 (default) = per-key drain, bit-for-bit the pre-batching path.
     /// Ignored without a reshard plan.
     pub migration_doorbell: usize,
+    /// Remote-persistence mode ([`crate::rdma::PersistMode`]): what it
+    /// costs before a completed one-sided write counts as durable. `Adr`
+    /// (default) is the paper's drain model, bit-for-bit the pre-matrix
+    /// path; `FlushRead`/`RemoteFence` charge an explicit persist leg per
+    /// write through the shared ingress (forcing the pipelined client
+    /// path); `Eadr` waives the drain window entirely (persist on
+    /// arrival) at ADR's exact timing.
+    pub persist_mode: crate::rdma::PersistMode,
 }
 
 impl Default for DriverConfig {
@@ -203,6 +216,7 @@ impl Default for DriverConfig {
             lane_key: crate::sim::LaneKey::default(),
             mirror_doorbell: 1,
             migration_doorbell: 1,
+            persist_mode: crate::rdma::PersistMode::default(),
         }
     }
 }
@@ -253,6 +267,7 @@ impl DriverConfig {
             mirror_doorbell: self.mirror_doorbell,
             migration_doorbell: self.migration_doorbell,
             ingress_channels: self.ingress_channels,
+            persist_mode: self.persist_mode,
         }
     }
 
@@ -264,6 +279,7 @@ impl DriverConfig {
         self.mirror_doorbell = e.mirror_doorbell;
         self.migration_doorbell = e.migration_doorbell;
         self.ingress_channels = e.ingress_channels;
+        self.persist_mode = e.persist_mode;
         self
     }
 
@@ -490,6 +506,7 @@ mod tests {
             mirror_doorbell: 2,
             migration_doorbell: 8,
             ingress_channels: Some(2),
+            persist_mode: crate::rdma::PersistMode::FlushRead,
         };
         cfg.set_client(client.clone()).set_replication(repl.clone()).set_engine(engine.clone());
         assert_eq!(cfg.client(), client);
@@ -501,6 +518,7 @@ mod tests {
         assert_eq!(cfg.lane_key, crate::sim::LaneKey::Actor);
         assert_eq!(cfg.mirror_doorbell, 2);
         assert_eq!(cfg.migration_doorbell, 8);
+        assert_eq!(cfg.persist_mode, crate::rdma::PersistMode::FlushRead);
         assert!(!cfg.faults.is_empty());
     }
 

@@ -1,0 +1,219 @@
+//! Remote-persistence property suite: Remote Data Atomicity (RDA) under
+//! the explicit persist modes.
+//!
+//! The [`PersistMode`] knob changes *when* a write may ACK — never *what*
+//! a crash can leave behind. This suite pins that claim three ways:
+//!
+//! * **Tear sweep** — a writer dies after every possible 64-byte chunk
+//!   boundary of an update (a seeded sweep over keys and fill patterns).
+//!   At every mode and scheme the store serves either the old value or the
+//!   new value, complete — never garbage, never a half-written object.
+//! * **Crash + recovery** — for Erda, the same torn entries followed by a
+//!   full volatile-state crash and the §4.2 log-scan recovery: the torn
+//!   entry rolls back, bystander keys are untouched, at every mode.
+//! * **Mid-run kill** — a `FaultPlan` kills a primary while flush/fence
+//!   persist legs are in flight. The legs ARE the ACK gate, so a bounced
+//!   leg re-issues with its op and the full client quota still completes:
+//!   zero acked writes lost, every key readable and whole afterwards.
+//!
+//! Everything is seeded; a final pin replays flush and fence runs and
+//! demands bit-for-bit identical books per seed.
+
+use erda::rdma::PersistMode;
+use erda::sim::{Rng, MS};
+use erda::store::{Cluster, Db, FaultPlan, Scheme};
+use erda::ycsb::{key_of, Workload};
+
+const VALUE: usize = 128;
+
+fn open(scheme: Scheme, shards: usize, mode: PersistMode) -> Db {
+    Cluster::builder()
+        .scheme(scheme)
+        .shards(shards)
+        .records(16)
+        .value_size(VALUE)
+        .preload(16, VALUE)
+        .persist_mode(mode)
+        .build_db()
+}
+
+/// Chunks needed to land a whole wire record for one of our keys.
+fn whole_chunks(key: &[u8]) -> usize {
+    erda::log::object::wire_size(key.len(), VALUE).div_ceil(64)
+}
+
+/// RDA at every stage boundary: for every prefix length a dying writer can
+/// leave in the NIC cache — 0 chunks up to and including the whole record
+/// — the readable value is exactly the old version or exactly the new one.
+/// Seeded sweep over target keys and fill bytes; every scheme, every mode.
+#[test]
+fn tear_at_every_stage_boundary_is_never_visible() {
+    let mut rng = Rng::new(0x9E51_57E4);
+    for mode in PersistMode::ALL {
+        for scheme in Scheme::ALL {
+            let key = key_of(rng.gen_range(16) as u64);
+            let whole = whole_chunks(&key);
+            assert!(whole >= 2, "the sweep needs at least one strictly-torn prefix");
+            for chunks in 0..=whole {
+                let fill = 1 + rng.gen_range(0xFE) as u8;
+                let old = vec![0xA5u8; VALUE]; // the preloaded pattern
+                let new = vec![fill; VALUE];
+                let mut db = open(scheme, 2, mode);
+                db.crash_during_put(&key, &new, chunks).unwrap();
+                let got = db.get(&key).unwrap();
+                assert!(
+                    got == Some(old.clone()) || got == Some(new.clone()),
+                    "{scheme:?}/{mode:?}/chunks {chunks}: a reader saw a state that is \
+                     neither the old nor the new value"
+                );
+                if chunks < whole {
+                    // A strict prefix can never count as the new version
+                    // unless old and new happen to collide on the pattern.
+                    if fill != 0xA5 {
+                        assert_eq!(
+                            got,
+                            Some(old),
+                            "{scheme:?}/{mode:?}/chunks {chunks}: acked-but-unpersisted \
+                             bytes must stay invisible"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The same torn entries, then a real crash (volatile bookkeeping wiped)
+/// and log-scan recovery — Erda's §4.2 path. The torn entry rolls back to
+/// the old version and bystanders keep theirs, at every persist mode.
+#[test]
+fn erda_recovery_rolls_back_torn_entries_at_every_mode() {
+    for mode in PersistMode::ALL {
+        let probe = key_of(5);
+        let whole = whole_chunks(&probe);
+        for chunks in 1..whole {
+            let mut db = open(Scheme::Erda, 2, mode);
+            let shard = db.shard_of_key(&probe);
+            db.crash_during_put(&probe, &vec![0xEEu8; VALUE], chunks).unwrap();
+            db.crash_shard(shard).unwrap();
+            let report = db.recover_shard(shard).unwrap();
+            assert_eq!(
+                report.entries_rolled_back, 1,
+                "{mode:?}/chunks {chunks}: {report:?}"
+            );
+            assert_eq!(
+                db.get(&probe).unwrap(),
+                Some(vec![0xA5u8; VALUE]),
+                "{mode:?}/chunks {chunks}: recovery must restore the old version"
+            );
+            for i in 0..16u64 {
+                let k = key_of(i);
+                if k != probe {
+                    assert_eq!(
+                        db.get(&k).unwrap(),
+                        Some(vec![0xA5u8; VALUE]),
+                        "{mode:?}/chunks {chunks}: bystander {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Mid-run primary kill with persist legs in flight: flush/fence legs gate
+/// the ACK, a kill bounces any primary-stage leg back with its op, and the
+/// engine re-issues after failover — so the full quota completes and no
+/// acked write is lost. Checked for every scheme at both leg-charging
+/// modes, and the settled store serves every key whole.
+#[test]
+fn mid_run_kill_with_persist_legs_in_flight_loses_no_acked_write() {
+    for mode in [PersistMode::FlushRead, PersistMode::RemoteFence] {
+        for scheme in Scheme::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .shards(2)
+                .mirrored(true)
+                .clients(4)
+                .window(2)
+                .workload(Workload::UpdateHeavy)
+                .records(64)
+                .value_size(VALUE)
+                .ops_per_client(150)
+                .seed(0xFA17)
+                .warmup(0)
+                .persist_mode(mode)
+                .faults(FaultPlan::fail_at(0, MS, 2 * MS))
+                .run()
+                .unwrap();
+            let s = &outcome.stats;
+            let tag = format!("{scheme:?}/{mode:?}");
+            assert_eq!(s.ops, 4 * 150, "{tag}: every client finishes its quota");
+            assert_eq!(s.read_misses, 0, "{tag}: no acked write went missing");
+            assert!(s.persist_flushes > 0, "{tag}: legs must have been in flight");
+            assert_eq!(s.faults_injected, 1, "{tag}");
+            assert!(s.downtime_ns > 0, "{tag}: the kill must book blackout time");
+            let mut db = outcome.db;
+            for i in 0..64u64 {
+                let v = db.get(&key_of(i)).unwrap();
+                match v {
+                    Some(bytes) => assert_eq!(
+                        bytes.len(),
+                        VALUE,
+                        "{tag}: key {i} must read back whole, never torn"
+                    ),
+                    None => panic!("{tag}: key {i} lost across the failover"),
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic replay, pinned per seed: the flush and fence paths add
+/// events to the one co-sim heap, and those events must land identically
+/// on every replay — ops, makespan, event count, persist books, NVM/CPU
+/// and the whole latency stream.
+#[test]
+fn flush_and_fence_runs_replay_bit_for_bit_per_seed() {
+    for mode in [PersistMode::FlushRead, PersistMode::RemoteFence] {
+        for scheme in Scheme::ALL {
+            for seed in [0x0BEEFu64, 0x5EED5] {
+                let run = || {
+                    Cluster::builder()
+                        .scheme(scheme)
+                        .shards(2)
+                        .mirrored(true)
+                        .ingress(2)
+                        .clients(3)
+                        .window(2)
+                        .doorbell_batch(2)
+                        .workload(Workload::UpdateHeavy)
+                        .records(64)
+                        .value_size(64)
+                        .ops_per_client(100)
+                        .seed(seed)
+                        .warmup(0)
+                        .persist_mode(mode)
+                        .run()
+                        .unwrap()
+                        .stats
+                };
+                let mut a = run();
+                let mut b = run();
+                let tag = format!("{scheme:?}/{mode:?}/seed {seed:#x}");
+                assert_eq!(a.ops, b.ops, "{tag}");
+                assert_eq!(a.duration_ns, b.duration_ns, "{tag}");
+                assert_eq!(a.events, b.events, "{tag}");
+                assert_eq!(a.persist_flushes, b.persist_flushes, "{tag}");
+                assert_eq!(a.persist_flush_ns, b.persist_flush_ns, "{tag}");
+                assert_eq!(a.persist_extra_bytes, b.persist_extra_bytes, "{tag}");
+                assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes, "{tag}");
+                assert_eq!(a.server_cpu_busy_ns, b.server_cpu_busy_ns, "{tag}");
+                assert_eq!(a.ingress_admitted, b.ingress_admitted, "{tag}");
+                assert_eq!(a.latency.count(), b.latency.count(), "{tag}");
+                for p in [0.0, 0.5, 0.99, 1.0] {
+                    assert_eq!(a.latency.percentile_ns(p), b.latency.percentile_ns(p), "{tag}");
+                }
+            }
+        }
+    }
+}

@@ -222,6 +222,104 @@ fn prop_crc_order_sensitivity() {
     }
 }
 
+/// Differential fuzz over the three event-queue implementations (promoted
+/// from a review-time reference model into the suite): random push/pop/
+/// hold schedules — bursty same-instant pushes (FIFO ties), horizon-
+/// jumping gaps that exercise the calendar's overflow heap, and bursts
+/// wide enough to trigger both resize directions — must pop identical
+/// `(time, seq)` streams from [`HeapQueue`], [`TieredQueue`] and
+/// [`CalendarQueue`], with peeks agreeing along the way.
+#[test]
+fn prop_event_queues_pop_identical_streams() {
+    use erda::sim::{CalendarQueue, EventQueue, HeapQueue, TieredQueue};
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(0xE2DA));
+        let mut heap = HeapQueue::new();
+        let mut tiered = TieredQueue::new(1 + rng.gen_range(7) as usize);
+        let mut cal = CalendarQueue::new();
+        let mut seq = 0u64;
+        let mut now = 0u64; // engine clock: pushes never schedule the past
+        let mut pending = 0usize;
+        for _ in 0..600 {
+            match rng.gen_range(100) {
+                // 55 %: push a burst. Gap 0 makes same-instant FIFO ties;
+                // the large gap tiers land past the calendar year.
+                0..=54 => {
+                    for _ in 0..1 + rng.gen_range(40) {
+                        let gap = match rng.gen_range(4) {
+                            0 => 0,
+                            1 => rng.gen_range(4_096),
+                            2 => rng.gen_range(120_000),
+                            _ => rng.gen_range(2_000_000),
+                        };
+                        let e = (now + gap, seq, rng.gen_range(64) as usize);
+                        seq += 1;
+                        heap.push(e);
+                        tiered.push(e);
+                        cal.push(e);
+                        pending += 1;
+                    }
+                }
+                // 40 %: drain a few — every implementation must agree
+                // exactly, peek included.
+                55..=94 if pending > 0 => {
+                    for _ in 0..(1 + rng.gen_range(8) as usize).min(pending) {
+                        let want = heap.pop();
+                        assert_eq!(tiered.peek(), want, "seed {seed}: tiered peek");
+                        assert_eq!(tiered.pop(), want, "seed {seed}: tiered pop");
+                        assert_eq!(cal.peek(), want, "seed {seed}: calendar peek");
+                        assert_eq!(cal.pop(), want, "seed {seed}: calendar pop");
+                        now = want.unwrap().0.max(now);
+                        pending -= 1;
+                    }
+                }
+                // 5 % (and pops on an empty queue): hold — an idle tick.
+                _ => {}
+            }
+        }
+        // The tails agree too, and so do the traffic counters.
+        while let Some(want) = heap.pop() {
+            assert_eq!(tiered.pop(), Some(want), "seed {seed}: tail");
+            assert_eq!(cal.pop(), Some(want), "seed {seed}: tail");
+        }
+        assert!(tiered.is_empty() && cal.is_empty(), "seed {seed}");
+        assert_eq!(heap.pushes(), tiered.pushes(), "seed {seed}");
+        assert_eq!(heap.pushes(), cal.pushes(), "seed {seed}");
+        assert_eq!(heap.pops(), cal.pops(), "seed {seed}");
+    }
+}
+
+/// The calendar-queue regression scenario, replayed differentially: an
+/// overflow event is overtaken by the horizon, later bucketed pushes
+/// re-anchor the grow-resize above it, and the pre-anchor event must
+/// still pop first — on every implementation, identically.
+#[test]
+fn prop_queues_agree_on_resize_drains_overflow_below_anchor() {
+    use erda::sim::{CalendarQueue, EventQueue, HeapQueue, TieredQueue};
+    let mut qs: Vec<Box<dyn EventQueue>> = vec![
+        Box::new(HeapQueue::new()),
+        Box::new(TieredQueue::new(4)),
+        Box::new(CalendarQueue::new()),
+    ];
+    for q in qs.iter_mut() {
+        q.push((70_000, 0, 0)); // past the initial year: calendar overflow
+        q.push((60_000, 1, 1));
+        // Popping 60 000 sweeps the calendar horizon past the 70 000
+        // overflow event without draining it.
+        assert_eq!(q.pop(), Some((60_000, 1, 1)));
+        // Enough bucketed events above it to trigger the grow-resize,
+        // which re-anchors at their minimum.
+        for i in 0..33u64 {
+            q.push((110_000 + i, 2 + i, 2));
+        }
+        assert_eq!(q.pop(), Some((70_000, 0, 0)), "pre-anchor event pops first");
+        for i in 0..33u64 {
+            assert_eq!(q.pop(), Some((110_000 + i, 2 + i, 2)));
+        }
+        assert!(q.is_empty());
+    }
+}
+
 /// End-to-end determinism across schemes: same DriverConfig twice → byte-
 /// identical stats (the whole stack is seeded).
 #[test]

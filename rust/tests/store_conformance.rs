@@ -11,8 +11,12 @@
 //! * a scripted [`Cluster`] run (same ops through the DES engine, real
 //!   fabric timing, NIC-cache truncation for the torn write).
 
+use erda::rdma::PersistMode;
 use erda::sim::MS;
-use erda::store::{shard_of, Cluster, Db, RemoteStore, Request, Response, Scheme, StoreError};
+use erda::store::{
+    shard_of, Cluster, Db, FaultPlan, RemoteStore, Request, Response, ReshardPlan, Scheme,
+    StoreError,
+};
 use erda::ycsb::{key_of, Workload};
 
 const VALUE: usize = 128;
@@ -364,6 +368,191 @@ fn per_shard_crash_recovery_survives_a_cosim_run() {
         let k = key_of(i);
         if k != torn_key {
             assert_eq!(db.get(&k).unwrap(), Some(vec![0xA5u8; VALUE]), "bystander {i}");
+        }
+    }
+}
+
+/// The persistence boundary must not bend the store contract: the full
+/// conformance scenario — reads, updates, deletes, misses, the torn write
+/// and its detector-side accounting — holds verbatim under every
+/// [`PersistMode`], for every scheme, at 1 and 4 shards.
+#[test]
+fn conformance_holds_at_every_persist_mode() {
+    for mode in PersistMode::ALL {
+        for shards in SHARD_COUNTS {
+            for scheme in Scheme::ALL {
+                let mut db = Cluster::builder()
+                    .scheme(scheme)
+                    .shards(shards)
+                    .records(16)
+                    .value_size(VALUE)
+                    .preload(16, VALUE)
+                    .persist_mode(mode)
+                    .build_db();
+                scenario(&mut db);
+                let s = db.op_stats();
+                assert_eq!(s.puts, 3, "{scheme:?}/{shards}/{mode:?} puts {s:?}");
+                assert_eq!(s.deletes, 2, "{scheme:?}/{shards}/{mode:?} deletes {s:?}");
+            }
+        }
+    }
+}
+
+/// The same scripted engine run as [`engine_conformance_all_schemes_at_1_and_4_shards`],
+/// but swept over every persist mode: the settled values, the miss count
+/// and RDA's old-version guarantee are mode-invariant — the modes change
+/// *when* a write may ACK, never *what* it leaves behind.
+#[test]
+fn engine_conformance_holds_at_every_persist_mode() {
+    for mode in PersistMode::ALL {
+        for scheme in Scheme::ALL {
+            let outcome = Cluster::builder()
+                .scheme(scheme)
+                .shards(2)
+                .records(16)
+                .value_size(VALUE)
+                .preload(16, VALUE)
+                .clients(0)
+                .warmup(0)
+                .persist_mode(mode)
+                .script(vec![
+                    Request::Put { key: key_of(0), value: vec![0x44u8; VALUE] },
+                    Request::Get { key: key_of(0) },
+                    Request::Delete { key: key_of(1) },
+                    Request::Get { key: key_of(1) }, // the only expected miss
+                ])
+                .script(vec![Request::CrashDuringPut {
+                    key: key_of(2),
+                    value: vec![0xEEu8; VALUE],
+                    chunks: 1,
+                }])
+                .script_at(2 * MS, vec![Request::Get { key: key_of(2) }])
+                .run().unwrap();
+
+            assert_eq!(outcome.stats.read_misses, 1, "{scheme:?}/{mode:?}");
+            let mut db = outcome.db;
+            assert_eq!(db.get(&key_of(0)).unwrap(), Some(vec![0x44u8; VALUE]), "{scheme:?}/{mode:?}");
+            assert_eq!(db.get(&key_of(1)).unwrap(), None, "{scheme:?}/{mode:?}");
+            assert_eq!(
+                db.get(&key_of(2)).unwrap(),
+                Some(vec![0xA5u8; VALUE]),
+                "{scheme:?}/{mode:?}: RDA must hold at every persist mode"
+            );
+        }
+    }
+}
+
+/// `--persist-mode adr` is the default spelled out: a run with the knob set
+/// explicitly must replay the default run **bit for bit** — same ops, same
+/// makespan, same event count, same latency stream, same NVM and CPU books
+/// — across schemes × shards {1, 4} × plain/mirrored/reshard/fault. This
+/// pins the whole persist-mode plumb as a zero-cost default.
+#[test]
+fn adr_pin_replays_the_default_run_bit_for_bit() {
+    #[derive(Clone, Copy, Debug)]
+    enum Variant {
+        Plain,
+        Mirrored,
+        Reshard,
+        Fault,
+    }
+    let build = |scheme: Scheme, shards: usize, v: Variant, pin: bool| {
+        let mut b = Cluster::builder()
+            .scheme(scheme)
+            .shards(shards)
+            .clients(3)
+            .window(2)
+            .workload(Workload::UpdateHeavy)
+            .records(64)
+            .value_size(64)
+            .ops_per_client(80)
+            .seed(0xADA9)
+            .warmup(0);
+        match v {
+            Variant::Plain => {}
+            Variant::Mirrored => b = b.mirrored(true),
+            Variant::Reshard => {
+                b = b.reshard(ReshardPlan::scale_out(shards, shards + 1, MS));
+            }
+            Variant::Fault => {
+                b = b.mirrored(true).faults(FaultPlan::fail_at(0, MS, 2 * MS));
+            }
+        }
+        if pin {
+            b = b.persist_mode(PersistMode::Adr);
+        }
+        b.run().unwrap().stats
+    };
+    for scheme in Scheme::ALL {
+        for shards in SHARD_COUNTS {
+            for v in [Variant::Plain, Variant::Mirrored, Variant::Reshard, Variant::Fault] {
+                let mut a = build(scheme, shards, v, false);
+                let mut b = build(scheme, shards, v, true);
+                let tag = format!("{scheme:?}/{shards}/{v:?}");
+                assert_eq!(a.ops, b.ops, "{tag} ops");
+                assert_eq!(a.duration_ns, b.duration_ns, "{tag} makespan");
+                assert_eq!(a.events, b.events, "{tag} events");
+                assert_eq!(a.nvm_programmed_bytes, b.nvm_programmed_bytes, "{tag} nvm");
+                assert_eq!(a.server_cpu_busy_ns, b.server_cpu_busy_ns, "{tag} cpu");
+                assert_eq!(a.mirror_legs, b.mirror_legs, "{tag} mirror legs");
+                assert_eq!(a.persist_flushes, 0, "{tag}: ADR charges no flush legs");
+                assert_eq!(b.persist_flushes, 0, "{tag}: ADR charges no flush legs");
+                // The latency *stream*, not just its mean: same sample
+                // count, bit-identical mean, identical order statistics.
+                assert_eq!(a.latency.count(), b.latency.count(), "{tag} latency count");
+                assert_eq!(a.latency.mean_ns(), b.latency.mean_ns(), "{tag} latency mean");
+                for p in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                    assert_eq!(
+                        a.latency.percentile_ns(p),
+                        b.latency.percentile_ns(p),
+                        "{tag} latency p{p}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The one-NIC invariant at every mode and doorbell width: the shared
+/// ingress admits exactly `ops + mirror_legs + persist_flushes` — op
+/// issues, replication legs and persist flushes all meter through the same
+/// front door, batched or not.
+#[test]
+fn ingress_meters_ops_mirror_legs_and_persist_flushes_at_every_mode() {
+    for mode in PersistMode::ALL {
+        for doorbell in [1usize, 4] {
+            for scheme in Scheme::ALL {
+                let s = Cluster::builder()
+                    .scheme(scheme)
+                    .shards(2)
+                    .mirrored(true)
+                    .ingress(2)
+                    .clients(4)
+                    .window(2)
+                    .doorbell_batch(doorbell)
+                    .workload(Workload::UpdateHeavy)
+                    .records(64)
+                    .value_size(64)
+                    .ops_per_client(60)
+                    .seed(0x1A9E55)
+                    .warmup(0)
+                    .persist_mode(mode)
+                    .run()
+                    .unwrap()
+                    .stats;
+                let tag = format!("{scheme:?}/{mode:?}/d{doorbell}");
+                assert_eq!(s.ops, 4 * 60, "{tag}");
+                if mode.needs_leg() {
+                    assert!(s.persist_flushes > 0, "{tag}: update-heavy must flush");
+                } else {
+                    assert_eq!(s.persist_flushes, 0, "{tag}: no legs outside flush/fence");
+                }
+                assert_eq!(
+                    s.ingress_admitted,
+                    s.ops + s.mirror_legs + s.persist_flushes,
+                    "{tag}: every issue, mirror leg and persist flush admits once"
+                );
+            }
         }
     }
 }
